@@ -1,0 +1,24 @@
+//! Table II arithmetic kernels, interactive scale.
+//!
+//! Reproduces the paper's §III benchmark at a configurable element count:
+//! RBF and LJG over the implementation matrix (1-thread expanded,
+//! 1-thread powf "naive C", N-thread, device artifact), with mean ±σ rows
+//! like Table II and the powf-pathology ratio from §III-B.
+//!
+//! Run: `cargo run --release --example arithmetic [n] [threads]`
+
+use accelkern::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1 << 21);
+    let threads: usize = args
+        .get(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(accelkern::backend::threaded::default_threads);
+    let rt = Runtime::open_default().ok();
+    if rt.is_none() {
+        eprintln!("(no artifacts; device rows skipped — run `make artifacts`)");
+    }
+    accelkern::coordinator::campaign::table2(n, threads, &rt, false)
+}

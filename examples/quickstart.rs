@@ -1,0 +1,78 @@
+//! Quickstart: the AcceleratedKernels algorithm suite on every backend.
+//!
+//! Mirrors the paper's §II usage story: the *same* API call dispatches to
+//! single-thread, multithreaded and transpiled-device implementations.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use accelkern::algorithms as ak;
+use accelkern::backend::Backend;
+use accelkern::runtime::{Registry, Runtime};
+use accelkern::util::Prng;
+use accelkern::workload::{generate, points_f32, Distribution};
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Prng::new(42);
+    let xs: Vec<i32> = generate(&mut rng, Distribution::Uniform, 200_000);
+
+    // Pick backends: host ones always work; the device backend needs
+    // `make artifacts` (falls back gracefully if missing).
+    let mut backends = vec![Backend::Native, Backend::Threaded(4)];
+    match Runtime::open_default() {
+        Ok(rt) => {
+            println!("device platform: {}", rt.platform());
+            backends.push(Backend::device(Registry::new(rt)));
+        }
+        Err(e) => println!("(no device artifacts: {e}; host backends only)"),
+    }
+
+    for backend in &backends {
+        println!("\n== backend: {} ==", backend.name());
+
+        // merge_sort
+        let mut v = xs.clone();
+        ak::sort(backend, &mut v)?;
+        println!("sort:             first={} last={}", v[0], v[v.len() - 1]);
+
+        // sortperm — index permutation that sorts xs
+        let perm = ak::sortperm(backend, &xs)?;
+        println!("sortperm:         xs[perm[0]]={} (global min)", xs[perm[0] as usize]);
+
+        // reduce / mapreduce
+        let total = ak::reduce(backend, &xs, ak::ReduceKind::Add, 4096)?;
+        let maxsq = ak::mapreduce(backend, &xs, |x: i32| x.wrapping_mul(x), ak::ReduceKind::Max)?;
+        println!("reduce add:       {total}");
+        println!("mapreduce max x²: {maxsq}");
+
+        // accumulate (prefix scan)
+        let scans = ak::accumulate(backend, &xs[..8], true)?;
+        println!("accumulate[..8]:  {scans:?}");
+
+        // searchsorted
+        let needles = [v[0], v[v.len() / 2], v[v.len() - 1]];
+        let idx = ak::searchsorted_first(backend, &v, &needles)?;
+        println!("searchsorted:     {idx:?}");
+
+        // any / all with early exit
+        let fs: Vec<f32> = (0..100_000).map(|i| i as f32 / 1e5).collect();
+        println!(
+            "any > 0.9999: {}   all > -1: {}",
+            ak::any_gt(backend, &fs, 0.9999)?,
+            ak::all_gt(backend, &fs, -1.0)?
+        );
+
+        // foreachindex — the paper's Algorithm 3 copy kernel
+        let src: Vec<i32> = (0..1000).collect();
+        let mut dst = vec![0i32; 1000];
+        ak::foreach::foreach_mut(backend, &mut dst, |i, d| *d = src[i]);
+        assert_eq!(dst, src);
+        println!("foreachindex:     copy kernel OK");
+
+        // Table II arithmetic kernels
+        let pts = points_f32(&mut Prng::new(7), 10_000);
+        let r = ak::rbf(backend, &pts)?;
+        println!("rbf[0..3]:        {:?}", &r[..3]);
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,11 @@
+"""Build-time compile package (L1 Pallas kernels + L2 JAX graphs + AOT).
+
+64-bit dtypes MUST be enabled before any jax import side effects: without
+`jax_enable_x64`, jnp.int64/float64 silently degrade to 32-bit and every
+i64/f64 artifact would be lowered with 4-byte parameters (the Rust runtime
+would then reject the buffers at execute time).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,257 @@
+"""AOT lowering: L2 JAX graphs -> artifacts/*.hlo.txt + manifest.json.
+
+This is the "transpile once" half of the architecture: every
+(op, dtype, size-class) variant is lowered to HLO **text** which the Rust
+runtime (rust/src/runtime/) loads with `HloModuleProto::from_text_file`,
+compiles on the PJRT CPU client, and executes from the L3 hot path.
+Python never runs at request time.
+
+Why text, not `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids; the xla crate's xla_extension 0.5.1 rejects them
+(`proto.id() <= INT_MAX`). The HLO text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--only REGEX] [--list]
+                          [--force]
+
+Incremental: an artifact is re-lowered only if its file is missing or
+`--force` is given; the manifest is always rewritten to match reality.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+TILE = 1024
+
+# Per-op tile overrides (the §Perf L1 pass, EXPERIMENTS.md): interpret-mode
+# grid steps carry heavy per-step overhead on XLA-CPU, so ops whose VMEM
+# working set allows it use far larger tiles than the 1024-lane default.
+# Real-TPU budgets still hold: the largest working set is LJG at
+# 2 x (3, 131072) f32 in + (131072,) out ~= 3.5 MiB << 16 MiB VMEM.
+SORT_TILE = 4096        # full sort: 15 ms at 2^17 vs 168 ms at tile=1024
+SCAN_TILE = 65536
+REDUCE_TILE = 65536
+ELEM_TILE = 131072      # rbf/ljg: 0.23 ms at 2^17 vs 31 ms at tile=1024
+
+DTYPES = {
+    "i16": jnp.int16,
+    "i32": jnp.int32,
+    "i64": jnp.int64,
+    "f32": jnp.float32,
+    "f64": jnp.float64,
+}
+
+SORT_DTYPES = ("i16", "i32", "i64", "f32", "f64")
+NUM_DTYPES = ("i32", "i64", "f32", "f64")
+FLOAT_DTYPES = ("f32", "f64")
+
+SORT_CLASSES = (10, 14, 17)          # log2(n) size classes
+PAIRS_CLASSES = (10, 14, 17)
+SCAN_CLASSES = (14, 17, 20)
+REDUCE_CLASSES = (14, 17, 20)
+SEARCH_CLASSES = (10, 14, 17, 20)    # haystack sizes; needle block = TILE
+ELEMWISE_CLASSES = (17, 20)
+PRED_CLASSES = (14, 17)
+
+
+def _spec(n2, dt):
+    return jax.ShapeDtypeStruct((1 << n2,), DTYPES[dt])
+
+
+def _io(shape, dt):
+    return {"shape": list(shape), "dtype": dt}
+
+
+def build_catalog():
+    """The full artifact catalog: name -> (fn, arg_specs, inputs, outputs).
+
+    Names are `{op}_{dtype}_n{log2n}` and are the contract with the Rust
+    `runtime::registry` (see rust/src/runtime/registry.rs).
+    """
+    cat = {}
+
+    def add(name, fn, specs, inputs, outputs, meta):
+        assert name not in cat, name
+        cat[name] = dict(fn=fn, specs=specs, inputs=inputs,
+                         outputs=outputs, meta=meta)
+
+    for dt in SORT_DTYPES:
+        for n2 in SORT_CLASSES:
+            n = 1 << n2
+            add(f"sort_{dt}_n{n2}",
+                functools.partial(model.merge_sort, tile=SORT_TILE),
+                [_spec(n2, dt)],
+                [_io((n,), dt)], [_io((n,), dt)],
+                {"op": "sort", "dtype": dt, "n": n})
+        for n2 in PAIRS_CLASSES:
+            n = 1 << n2
+            add(f"sort_pairs_{dt}_n{n2}",
+                functools.partial(model.merge_sort_pairs, tile=SORT_TILE),
+                [_spec(n2, dt), _spec(n2, "i32")],
+                [_io((n,), dt), _io((n,), "i32")],
+                [_io((n,), dt), _io((n,), "i32")],
+                {"op": "sort_pairs", "dtype": dt, "n": n})
+
+    for dt in NUM_DTYPES:
+        for n2 in SCAN_CLASSES:
+            n = 1 << n2
+            add(f"scan_add_incl_{dt}_n{n2}",
+                functools.partial(model.accumulate, op="add", inclusive=True, tile=SCAN_TILE),
+                [_spec(n2, dt)], [_io((n,), dt)], [_io((n,), dt)],
+                {"op": "scan_add_incl", "dtype": dt, "n": n})
+            add(f"scan_add_excl_{dt}_n{n2}",
+                functools.partial(model.accumulate, op="add", inclusive=False, tile=SCAN_TILE),
+                [_spec(n2, dt)], [_io((n,), dt)], [_io((n,), dt)],
+                {"op": "scan_add_excl", "dtype": dt, "n": n})
+        for n2 in REDUCE_CLASSES:
+            n = 1 << n2
+            for op in ("add", "min", "max"):
+                add(f"reduce_{op}_{dt}_n{n2}",
+                    functools.partial(model.reduce, op=op, tile=REDUCE_TILE),
+                    [_spec(n2, dt)], [_io((n,), dt)], [_io((), dt)],
+                    {"op": f"reduce_{op}", "dtype": dt, "n": n})
+        for n2 in (17, 20):
+            n = 1 << n2
+            add(f"reduce_partials_add_{dt}_n{n2}",
+                functools.partial(model.reduce_partials, op="add", tile=REDUCE_TILE),
+                [_spec(n2, dt)], [_io((n,), dt)],
+                [_io((max(n // REDUCE_TILE, 1),), dt)],
+                {"op": "reduce_partials_add", "dtype": dt, "n": n})
+
+    for dt in FLOAT_DTYPES:
+        n2 = 17
+        n = 1 << n2
+        add(f"mapreduce_sumsq_{dt}_n{n2}",
+            functools.partial(model.reduce, op="add", map_name="square", tile=REDUCE_TILE),
+            [_spec(n2, dt)], [_io((n,), dt)], [_io((), dt)],
+            {"op": "mapreduce_sumsq", "dtype": dt, "n": n})
+
+    for dt in SORT_DTYPES:
+        for n2 in SEARCH_CLASSES:
+            n = 1 << n2
+            m = TILE
+            for side in ("first", "last"):
+                fn = (model.searchsorted_first if side == "first"
+                      else model.searchsorted_last)
+                add(f"searchsorted_{side}_{dt}_n{n2}", fn,
+                    [_spec(n2, dt),
+                     jax.ShapeDtypeStruct((m,), DTYPES[dt])],
+                    [_io((n,), dt), _io((m,), dt)],
+                    [_io((m,), "i32")],
+                    {"op": f"searchsorted_{side}", "dtype": dt, "n": n,
+                     "needles": m})
+
+    for dt in FLOAT_DTYPES:
+        for n2 in ELEMWISE_CLASSES:
+            n = 1 << n2
+            add(f"rbf_{dt}_n{n2}", functools.partial(model.rbf, tile=ELEM_TILE),
+                [jax.ShapeDtypeStruct((3, n), DTYPES[dt])],
+                [_io((3, n), dt)], [_io((n,), dt)],
+                {"op": "rbf", "dtype": dt, "n": n})
+            add(f"ljg_{dt}_n{n2}", functools.partial(model.ljg, tile=ELEM_TILE),
+                [jax.ShapeDtypeStruct((3, n), DTYPES[dt]),
+                 jax.ShapeDtypeStruct((3, n), DTYPES[dt]),
+                 jax.ShapeDtypeStruct((4,), DTYPES[dt])],
+                [_io((3, n), dt), _io((3, n), dt), _io((4,), dt)],
+                [_io((n,), dt)],
+                {"op": "ljg", "dtype": dt, "n": n})
+
+    for dt in ("i32", "f32"):
+        for n2 in PRED_CLASSES:
+            n = 1 << n2
+            add(f"any_gt_{dt}_n{n2}", functools.partial(model.any_gt, tile=REDUCE_TILE),
+                [_spec(n2, dt), jax.ShapeDtypeStruct((), DTYPES[dt])],
+                [_io((n,), dt), _io((), dt)], [_io((), "i32")],
+                {"op": "any_gt", "dtype": dt, "n": n})
+            add(f"all_gt_{dt}_n{n2}", functools.partial(model.all_gt, tile=REDUCE_TILE),
+                [_spec(n2, dt), jax.ShapeDtypeStruct((), DTYPES[dt])],
+                [_io((n,), dt), _io((), dt)], [_io((), "i32")],
+                {"op": "all_gt", "dtype": dt, "n": n})
+
+    return cat
+
+
+def to_hlo_text(fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    p.add_argument("--only", default=None,
+                   help="regex filter over artifact names")
+    p.add_argument("--list", action="store_true")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args(argv)
+
+    cat = build_catalog()
+    names = sorted(cat)
+    if args.only:
+        rx = re.compile(args.only)
+        names = [n for n in names if rx.search(n)]
+    if args.list:
+        for n in names:
+            print(n)
+        return 0
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "tile": TILE, "artifacts": []}
+    t_start = time.time()
+    n_lowered = 0
+    for i, name in enumerate(names):
+        ent = cat[name]
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        if args.force or not os.path.exists(path):
+            t0 = time.time()
+            text = to_hlo_text(ent["fn"], ent["specs"])
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(text)
+            os.replace(tmp, path)
+            n_lowered += 1
+            print(f"[{i + 1}/{len(names)}] {name}: {len(text) / 1e3:.0f} kB "
+                  f"in {time.time() - t0:.1f}s", flush=True)
+        with open(path, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()[:16]
+        manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "sha256_16": digest,
+            "inputs": ent["inputs"],
+            "outputs": ent["outputs"],
+            **ent["meta"],
+        })
+
+    man_path = os.path.join(out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts "
+          f"({n_lowered} lowered) in {time.time() - t_start:.1f}s "
+          f"-> {man_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

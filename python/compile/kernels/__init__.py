@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the AcceleratedKernels reproduction.
+
+Each module exposes a `pallas_call`-based kernel plus a thin functional
+wrapper used by the L2 graphs in `compile.model`. All kernels run with
+`interpret=True` so they lower to plain HLO ops executable on the CPU PJRT
+client (real-TPU Mosaic lowering is compile-only in this environment — see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import rbf, ljg, sort_tile, scan, reduce, searchsorted, ref  # noqa: F401

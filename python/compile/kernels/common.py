@@ -1,0 +1,181 @@
+"""Shared helpers for the L1 Pallas kernels.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the paper's
+CUDA-style kernels use thread blocks + __shared__ tiles; here each Pallas
+grid step owns a `(TILE,)` block resident in VMEM via `BlockSpec`, and the
+per-thread logic is re-expressed as vectorised ops over the whole tile
+(VPU lanes). `interpret=True` everywhere: the CPU PJRT client cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO.
+"""
+
+import functools
+
+import jax.numpy as jnp
+
+# Default VMEM tile: 1024 elements is the paper's merge-sort block size and
+# keeps (tile + bitonic scratch) far below the 16 MiB VMEM budget even for
+# f64 key+value tiles (1024 * 8 B * 4 buffers = 32 KiB).
+DEFAULT_TILE = 1024
+
+# Interpret mode is mandatory on CPU PJRT (Mosaic custom-calls cannot run).
+INTERPRET = True
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@functools.lru_cache(maxsize=None)
+def _log2(n: int) -> int:
+    assert n & (n - 1) == 0 and n > 0, f"{n} is not a power of two"
+    return n.bit_length() - 1
+
+
+def sort_sentinel(dtype):
+    """Order-preserving padding value: the maximum of the dtype, so padded
+    lanes sink to the tail of an ascending sort and can be truncated."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def bitonic_stages(n: int):
+    """Yield the (k, j) compare-exchange stages of a full bitonic sort
+    network over n (power-of-two) lanes, in execution order."""
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            yield k, j
+            j //= 2
+        k *= 2
+
+
+def bitonic_merge_stages(n: int, start_k: int):
+    """Stages with k >= start_k only — the *global* merge phases run at L2
+    on tile-sorted data (tiles of size start_k are already sorted)."""
+    k = start_k * 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            yield k, j
+            j //= 2
+        k *= 2
+
+
+def compare_exchange(v, k: int, j: int, idx=None, dir_idx=None):
+    """One vectorised bitonic compare-exchange stage over lanes of `v`.
+
+    For each lane i with partner p = i ^ j: ascending iff (i & k) == 0
+    (note (p & k) == (i & k) since j < k), the lower lane keeps the min of
+    an ascending pair. Branch-free: a single where over min/max.
+
+    `idx` indexes lanes *within this buffer* (partner gather); `dir_idx`
+    supplies the direction bit and defaults to `idx`. They differ inside a
+    tile kernel running the sub-network of a larger distributed sort: the
+    partner is local but the alternating sort direction is a property of
+    the *global* lane index (even tiles ascend, odd tiles descend) so the
+    tile outputs seed the global merge stages correctly.
+    """
+    n = v.shape[0]
+    if idx is None:
+        idx = jnp.arange(n, dtype=jnp.int32)
+    if dir_idx is None:
+        dir_idx = idx
+    partner = idx ^ j
+    pv = v[partner]
+    ascending = (dir_idx & k) == 0
+    lower = idx < partner
+    keep_min = lower == ascending
+    return jnp.where(keep_min, jnp.minimum(v, pv), jnp.maximum(v, pv))
+
+
+def compare_exchange_reshape(v, k: int, j: int):
+    """Gather-free global compare-exchange stage (L2 optimisation).
+
+    The xor-partner formulation lowers to a gather per stage — XLA-CPU
+    executes those serially and the log²(n) stages dominated the whole
+    sort. Reshaping to (n/2k, 2, k/2j, 2, j) exposes the partner as a
+    *slice*: axis 1 is the direction bit (i & k), axis 3 separates the
+    (i, i^j) pair. Everything lowers to copies + elementwise select,
+    which XLA fuses; measured ~20x faster than the gather form at 2^17
+    (EXPERIMENTS.md §Perf L2).
+    """
+    n = v.shape[0]
+    assert j < k <= n
+    if k == n:
+        # Final merge stages: every lane ascends ((i & n) == 0 for i < n).
+        v5 = v.reshape(1, 1, n // (2 * j), 2, j)
+        lo = v5[:, :, :, 0, :]
+        hi = v5[:, :, :, 1, :]
+        mn = jnp.minimum(lo, hi)
+        mx = jnp.maximum(lo, hi)
+        return jnp.stack([mn, mx], axis=3).reshape(n)
+    v5 = v.reshape(n // (2 * k), 2, k // (2 * j), 2, j)
+    lo = v5[:, :, :, 0, :]
+    hi = v5[:, :, :, 1, :]
+    mn = jnp.minimum(lo, hi)
+    mx = jnp.maximum(lo, hi)
+    asc = jnp.stack([mn, mx], axis=3)
+    desc = jnp.stack([mx, mn], axis=3)
+    sel = (jnp.arange(2) == 0).reshape(1, 2, 1, 1, 1)
+    return jnp.where(sel, asc, desc).reshape(n)
+
+
+def compare_exchange_pairs_reshape(keys, vals, k: int, j: int):
+    """Key-value variant of the reshape stage, with the same payload-index
+    tie-break as `compare_exchange_pairs`."""
+    n = keys.shape[0]
+    assert j < k <= n
+    shape = (1, 1, n // (2 * j), 2, j) if k == n else (n // (2 * k), 2, k // (2 * j), 2, j)
+    k5 = keys.reshape(shape)
+    v5 = vals.reshape(shape)
+    ka, kb = k5[:, :, :, 0, :], k5[:, :, :, 1, :]
+    va, vb = v5[:, :, :, 0, :], v5[:, :, :, 1, :]
+    # Lexicographic (key, payload) order decides the swap.
+    b_first = (kb < ka) | ((kb == ka) & (vb < va))
+    mn_k = jnp.where(b_first, kb, ka)
+    mx_k = jnp.where(b_first, ka, kb)
+    mn_v = jnp.where(b_first, vb, va)
+    mx_v = jnp.where(b_first, va, vb)
+    if k == n:
+        out_k = jnp.stack([mn_k, mx_k], axis=3).reshape(n)
+        out_v = jnp.stack([mn_v, mx_v], axis=3).reshape(n)
+        return out_k, out_v
+    sel = (jnp.arange(2) == 0).reshape(1, 2, 1, 1, 1)
+    out_k = jnp.where(sel, jnp.stack([mn_k, mx_k], axis=3), jnp.stack([mx_k, mn_k], axis=3))
+    out_v = jnp.where(sel, jnp.stack([mn_v, mx_v], axis=3), jnp.stack([mx_v, mn_v], axis=3))
+    return out_k.reshape(n), out_v.reshape(n)
+
+
+def compare_exchange_pairs(keys, vals, k: int, j: int, idx=None, dir_idx=None):
+    """Key-value variant: lanes swap keys and payloads together."""
+    n = keys.shape[0]
+    if idx is None:
+        idx = jnp.arange(n, dtype=jnp.int32)
+    if dir_idx is None:
+        dir_idx = idx
+    partner = idx ^ j
+    pk = keys[partner]
+    pv = vals[partner]
+    ascending = (dir_idx & k) == 0
+    lower = idx < partner
+    keep_min = lower == ascending
+    # Tie-break on the payload index so the pair sort is deterministic even
+    # with duplicate keys (needed for sortperm reproducibility).
+    take_self = jnp.where(
+        keys == pk,
+        (vals <= pv) == keep_min,
+        (keys < pk) == keep_min,
+    )
+    nk = jnp.where(take_self, keys, pk)
+    nv = jnp.where(take_self, vals, pv)
+    return nk, nv

@@ -1,0 +1,67 @@
+"""Lennard-Jones-Gauss potential kernel (paper §III-B, Algorithm 5).
+
+Pairwise LJG potential between two position arrays with a cutoff branch —
+the paper's "difficult to predict branching if" that serialises GPU warps.
+On TPU/Pallas the branch is expressed as a predicated `jnp.where` over the
+whole VMEM tile (both sides computed, lanes select), which is exactly how
+a warp-divergent branch executes on SIMT hardware anyway.
+
+Constants (epsilon, sigma, r0, cutoff) enter as runtime scalar operands —
+mirroring the paper, which passes them at runtime "so that constant
+propagation cannot optimise them out". They ride in SMEM as a (4,) vector.
+
+Integer powers are expanded to multiplications (pow3 = x*x*x;
+pow6 = pow3*pow3; pow12 = pow6*pow6) — the transformation the paper found
+Julia performs but `powf`-calling C compilers miss, costing C 5.7x on ARM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_TILE, INTERPRET, ceil_div
+
+
+def ljg_kernel(p1_ref, p2_ref, consts_ref, out_ref):
+    eps = consts_ref[0]
+    sigma = consts_ref[1]
+    r0 = consts_ref[2]
+    cutoff = consts_ref[3]
+
+    dx = p1_ref[0, :] - p2_ref[0, :]
+    dy = p1_ref[1, :] - p2_ref[1, :]
+    dz = p1_ref[2, :] - p2_ref[2, :]
+    r2 = dx * dx + dy * dy + dz * dz
+    r = jnp.sqrt(r2)
+
+    sr = sigma / r
+    sr3 = sr * sr * sr
+    sr6 = sr3 * sr3
+    sr12 = sr6 * sr6
+    lj = 4.0 * eps * (sr12 - sr6)
+    gauss = eps * jnp.exp(-((r - r0) * (r - r0)) / (2.0 * sigma * sigma))
+    u = lj - gauss
+    out_ref[...] = jnp.where(r < cutoff, u, jnp.zeros_like(u))
+
+
+def ljg(p1, p2, consts, *, tile: int = DEFAULT_TILE):
+    """LJG potential between `(3, n)` arrays `p1`, `p2`.
+
+    `consts` is a `(4,)` array [epsilon, sigma, r0, cutoff] of the same
+    dtype. Returns `(n,)`; n % tile == 0 (L2 pads).
+    """
+    n = p1.shape[1]
+    assert p1.shape == p2.shape and n % tile == 0
+    grid = (ceil_div(n, tile),)
+    return pl.pallas_call(
+        ljg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3, tile), lambda i: (0, i)),
+            pl.BlockSpec((3, tile), lambda i: (0, i)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), p1.dtype),
+        interpret=INTERPRET,
+    )(p1, p2, consts)

@@ -1,0 +1,65 @@
+"""Reduction / mapreduce Pallas kernels.
+
+The paper's `reduce` uses warp-shuffle trees inside blocks plus a global
+pass; its `switch_below` argument finishes tiny tails on the host. TPU
+adaptation: a per-tile vectorised partial reduce in VMEM (phase 1, here),
+then the (n/TILE,) partials are folded at L2 — and the *rust* side of
+`switch_below` (algorithms::reduce) can instead pull the partials back and
+finish on the host when n is small, exactly the paper's device-sync
+masking argument.
+
+`mapreduce` fuses a named unary map into phase 1 so the mapped collection
+is never materialised (paper §II-B). The map set is fixed at AOT time —
+the transpiled-artifact analog of passing an arbitrary Julia lambda.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_TILE, INTERPRET
+
+OPS = ("add", "max", "min")
+
+# Named unary maps available to `mapreduce` artifacts.
+MAPS = {
+    "identity": lambda v: v,
+    "square": lambda v: v * v,
+    "abs": lambda v: jnp.abs(v),
+    "negate": lambda v: -v,
+}
+
+
+def _reduce_tile_kernel(op, map_name):
+    f = MAPS[map_name]
+
+    def kernel(x_ref, out_ref):
+        v = f(x_ref[...])
+        if op == "add":
+            # dtype pinned: jnp.sum would upcast i16/i32 to i64 under x64.
+            out_ref[0] = jnp.sum(v, dtype=v.dtype)
+        elif op == "max":
+            out_ref[0] = jnp.max(v)
+        elif op == "min":
+            out_ref[0] = jnp.min(v)
+        else:  # pragma: no cover
+            raise ValueError(op)
+
+    return kernel
+
+
+def reduce_tiles(x, op: str = "add", map_name: str = "identity",
+                 *, tile: int = DEFAULT_TILE):
+    """Phase 1: per-tile partial reduction. Returns (n/tile,) partials."""
+    assert op in OPS and map_name in MAPS
+    n = x.shape[0]
+    assert n % tile == 0
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _reduce_tile_kernel(op, map_name),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // tile,), x.dtype),
+        interpret=INTERPRET,
+    )(x)

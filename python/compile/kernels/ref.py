@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness references: pytest (and hypothesis sweeps)
+assert that each Pallas kernel matches its oracle to float tolerance
+(bit-exact for integer ops). They deliberately use only `jax.numpy`
+primitives — no Pallas — so a bug in the kernel machinery cannot hide in
+the oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def rbf(points):
+    """Radial Basis Function kernel (paper Algorithm 4).
+
+    points: (3, n) array; returns (n,) with
+    ``exp(-1 / (1 - sqrt(x^2 + y^2 + z^2)))``.
+    """
+    r = jnp.sqrt(points[0] ** 2 + points[1] ** 2 + points[2] ** 2)
+    return jnp.exp(-1.0 / (1.0 - r))
+
+
+def ljg(p1, p2, epsilon, sigma, r0, cutoff):
+    """Lennard-Jones-Gauss potential (paper Algorithm 5).
+
+    p1, p2: (3, n) atom position arrays. Pairwise potential between
+    p1[:, i] and p2[:, i] with a cutoff branch:
+
+        r  <  cutoff:  4*eps*((sigma/r)^12 - (sigma/r)^6)
+                       - eps * exp(-(r - r0)^2 / (2*sigma^2))
+        r  >= cutoff:  0
+
+    Integer powers are expanded to multiplications (the optimisation the
+    paper found GCC/Clang miss via ``powf`` but Julia performs).
+    """
+    dx = p1[0] - p2[0]
+    dy = p1[1] - p2[1]
+    dz = p1[2] - p2[2]
+    r2 = dx * dx + dy * dy + dz * dz
+    r = jnp.sqrt(r2)
+    sr = sigma / r
+    sr3 = sr * sr * sr
+    sr6 = sr3 * sr3
+    sr12 = sr6 * sr6
+    lj = 4.0 * epsilon * (sr12 - sr6)
+    gauss = epsilon * jnp.exp(-((r - r0) * (r - r0)) / (2.0 * sigma * sigma))
+    u = lj - gauss
+    return jnp.where(r < cutoff, u, jnp.zeros_like(u))
+
+
+def sort(x):
+    """Full-array ascending sort."""
+    return jnp.sort(x)
+
+
+def sort_pairs(keys, vals):
+    """Key-value sort (stable on keys)."""
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]
+
+
+def argsort(x):
+    """Index permutation that sorts x (``sortperm``)."""
+    return jnp.argsort(x, stable=True)
+
+
+def cumsum_inclusive(x):
+    return jnp.cumsum(x)
+
+
+def cumsum_exclusive(x):
+    return jnp.concatenate([jnp.zeros((1,), x.dtype), jnp.cumsum(x)[:-1]])
+
+
+def reduce_sum(x):
+    return jnp.sum(x)
+
+
+def reduce_min(x):
+    return jnp.min(x)
+
+
+def reduce_max(x):
+    return jnp.max(x)
+
+
+def searchsorted_first(haystack, needles):
+    """Leftmost insertion index (std::lower_bound / searchsortedfirst)."""
+    return jnp.searchsorted(haystack, needles, side="left")
+
+
+def searchsorted_last(haystack, needles):
+    """Rightmost insertion index (std::upper_bound / searchsortedlast)."""
+    return jnp.searchsorted(haystack, needles, side="right")

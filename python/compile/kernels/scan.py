@@ -1,0 +1,98 @@
+"""Prefix-scan (accumulate) Pallas kernels.
+
+The paper implements `accumulate` with Merrill & Garland's decoupled
+look-back. Look-back's core trick — blocks spin on their predecessors'
+published partial aggregates — needs forward-progress guarantees between
+concurrently-resident blocks, which neither TPU's sequential grid nor
+interpret mode provides. TPU adaptation (DESIGN.md §Hardware-Adaptation):
+the classic three-phase block scan with the same O(n) work:
+
+  phase 1 (L1, this file): per-tile inclusive scan in VMEM + tile sums;
+  phase 2 (L2): exclusive scan of the (n/TILE,) tile sums — tiny;
+  phase 3 (L1, this file): add each tile's carry to its lanes.
+
+Supported ops: add (the SIHSort hot path), max, min.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_TILE, INTERPRET
+
+OPS = ("add", "max", "min")
+
+
+def _scan_tile_kernel(op):
+    def kernel(x_ref, scan_ref, sums_ref):
+        v = x_ref[...]
+        if op == "add":
+            # dtype pinned: jnp.cumsum upcasts small ints under x64.
+            s = jnp.cumsum(v, dtype=v.dtype)
+        elif op == "max":
+            s = jax.lax.cummax(v, axis=0)
+        elif op == "min":
+            s = jax.lax.cummin(v, axis=0)
+        else:  # pragma: no cover - guarded by OPS
+            raise ValueError(op)
+        scan_ref[...] = s
+        sums_ref[0] = s[-1]
+
+    return kernel
+
+
+def _carry_kernel(op):
+    def kernel(scan_ref, carry_ref, out_ref):
+        c = carry_ref[0]
+        v = scan_ref[...]
+        if op == "add":
+            out_ref[...] = v + c
+        elif op == "max":
+            out_ref[...] = jnp.maximum(v, c)
+        elif op == "min":
+            out_ref[...] = jnp.minimum(v, c)
+        else:  # pragma: no cover
+            raise ValueError(op)
+
+    return kernel
+
+
+def scan_tiles(x, op: str = "add", *, tile: int = DEFAULT_TILE):
+    """Phase 1: per-tile inclusive scan. Returns (tile_scans, tile_sums)."""
+    assert op in OPS
+    n = x.shape[0]
+    assert n % tile == 0
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _scan_tile_kernel(op),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((n // tile,), x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x)
+
+
+def add_carries(tile_scans, carries, op: str = "add", *, tile: int = DEFAULT_TILE):
+    """Phase 3: combine each tile's exclusive carry into its lanes."""
+    assert op in OPS
+    n = tile_scans.shape[0]
+    assert n % tile == 0 and carries.shape[0] == n // tile
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _carry_kernel(op),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), tile_scans.dtype),
+        interpret=INTERPRET,
+    )(tile_scans, carries)

@@ -1,0 +1,75 @@
+"""Binary-search Pallas kernel: searchsortedfirst / searchsortedlast.
+
+The paper singles these out (std::lower_bound / upper_bound) as the
+primitives missing from Kokkos/RAJA yet required by MPISort's splitter
+partitioning. CUDA formulation: one thread per needle. TPU adaptation: a
+`(TILE,)` needle block per grid step, the whole sorted haystack resident
+in VMEM (haystack size-classes are chosen so this holds), and a
+*branch-free* binary search: exactly ceil(log2(n)) where-steps vectorised
+over the needle tile — no data-dependent trip counts, so the network is
+identical for every lane (the GPU-friendly formulation the paper uses).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_TILE, INTERPRET
+
+
+def _searchsorted_kernel(side, steps):
+    assert side in ("first", "last")
+
+    def kernel(hay_ref, needles_ref, out_ref):
+        hay = hay_ref[...]
+        needles = needles_ref[...]
+        m = needles.shape[0]
+        lo = jnp.zeros((m,), jnp.int32)
+        hi = jnp.full((m,), hay.shape[0], jnp.int32)
+        # Branch-free: fixed `steps` iterations, each lane halves [lo, hi).
+        # Lanes whose interval is already empty (lo == hi) must hold
+        # position: without the `active` mask the clamped out-of-bounds
+        # gather would keep pushing `lo` past n.
+        for _ in range(steps):
+            active = lo < hi
+            mid = jnp.minimum((lo + hi) // 2, hay.shape[0] - 1)
+            hv = hay[mid]
+            if side == "first":
+                go_right = active & (hv < needles)
+            else:
+                go_right = active & (hv <= needles)
+            lo = jnp.where(go_right, mid + 1, lo)
+            hi = jnp.where(active & ~go_right, mid, hi)
+        out_ref[...] = lo
+
+    return kernel
+
+
+def searchsorted(haystack, needles, side: str = "first",
+                 *, tile: int = DEFAULT_TILE):
+    """Insertion indices of `needles` into sorted `haystack`.
+
+    side="first" -> leftmost (lower_bound); side="last" -> rightmost
+    (upper_bound). len(needles) % tile == 0 (L2 pads needles; haystack is
+    a size-class array padded with the sort sentinel, which is fine: the
+    sentinel is the dtype max, and real needles insert before it).
+    """
+    n = haystack.shape[0]
+    m = needles.shape[0]
+    assert m % tile == 0
+    # Worst-case interval shrink per step is floor(size/2), so emptying a
+    # width-n interval takes n.bit_length() steps (NOT ceil(log2 n): that
+    # is one short and leaves a 1-wide interval unexamined).
+    steps = max(1, n.bit_length())
+    grid = (m // tile,)
+    return pl.pallas_call(
+        _searchsorted_kernel(side, steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=INTERPRET,
+    )(haystack, needles)

@@ -1,0 +1,97 @@
+"""Bitonic tile-sort Pallas kernels (L1 of the merge-sort pipeline).
+
+The paper's `merge_sort` starts with each CUDA thread block sorting a tile
+in shared memory. TPU adaptation: one Pallas grid step owns a `(TILE,)`
+block in VMEM and runs the full bitonic network *vectorised over the whole
+tile* — every compare-exchange stage is a branch-free where(min, max) over
+all lanes, so there is no per-thread control flow at all. The global merge
+stages (k > TILE, which need cross-tile communication) run at L2 — see
+`compile.model.merge_sort` — mirroring the paper's split between
+block-local sorting and global merging.
+
+Two kernels: key-only (`sort_tiles`) and key-value (`sort_pairs_tiles`,
+used by `sortperm` / `merge_sort_by_key`).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (
+    DEFAULT_TILE,
+    INTERPRET,
+    bitonic_stages,
+    compare_exchange_pairs_reshape,
+    compare_exchange_reshape,
+)
+
+
+def _tile_sort_kernel(x_ref, o_ref):
+    v = x_ref[...]
+    n = v.shape[0]
+    # Gather-free reshape network (see common.compare_exchange_reshape):
+    # sorts the tile ascending. Odd tiles are then *reversed* so tiles
+    # alternate direction by global parity — the contract the L2 global
+    # bitonic merge stages require (a reverse is a cheap strided copy;
+    # per-lane xor gathers were ~20x slower under XLA-CPU interpret).
+    for k, j in bitonic_stages(n):
+        v = compare_exchange_reshape(v, k, j)
+    pid = pl.program_id(0)
+    o_ref[...] = jnp.where(pid % 2 == 0, v, v[::-1])
+
+
+def _tile_sort_pairs_kernel(k_ref, v_ref, ko_ref, vo_ref):
+    keys = k_ref[...]
+    vals = v_ref[...]
+    n = keys.shape[0]
+    for k, j in bitonic_stages(n):
+        keys, vals = compare_exchange_pairs_reshape(keys, vals, k, j)
+    pid = pl.program_id(0)
+    even = pid % 2 == 0
+    ko_ref[...] = jnp.where(even, keys, keys[::-1])
+    vo_ref[...] = jnp.where(even, vals, vals[::-1])
+
+
+def sort_tiles(x, *, tile: int = DEFAULT_TILE):
+    """Sort each `tile`-sized block of `x` ascending (blocks independent).
+
+    `len(x)` must be a multiple of `tile` and `tile` a power of two; the
+    L2 wrapper pads with the dtype's sort sentinel.
+    """
+    n = x.shape[0]
+    assert n % tile == 0 and tile & (tile - 1) == 0
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _tile_sort_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+def sort_pairs_tiles(keys, vals, *, tile: int = DEFAULT_TILE):
+    """Key-value variant: sorts each block of `keys` carrying `vals` along,
+    with deterministic (payload-index) tie-breaking on duplicate keys."""
+    n = keys.shape[0]
+    assert n % tile == 0 and tile & (tile - 1) == 0
+    assert vals.shape == keys.shape
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _tile_sort_pairs_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), keys.dtype),
+            jax.ShapeDtypeStruct((n,), vals.dtype),
+        ],
+        interpret=INTERPRET,
+    )(keys, vals)

@@ -1,0 +1,183 @@
+"""L2: the JAX compute graphs, composing the L1 Pallas kernels.
+
+Each public function here becomes one (or more) AOT artifacts: `aot.py`
+lowers `jax.jit(fn)` for every (dtype, size-class) variant to HLO text
+which the Rust runtime loads via PJRT. Shapes are static — the Rust side
+pads inputs to the next size class with order-preserving sentinels (sort)
+or op identities (scan/reduce) and truncates outputs.
+
+Design rule: one fused HLO module per operation — the L3 hot path performs
+exactly one `execute` per primitive call (no per-stage dispatch), which is
+the transpiled-artifact analog of the paper's single fused GPU kernel
+launch sequence.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import reduce as kreduce
+from .kernels import scan as kscan
+from .kernels import searchsorted as ksearch
+from .kernels import sort_tile as ksort
+from .kernels.common import (DEFAULT_TILE, bitonic_merge_stages,
+                             compare_exchange_pairs_reshape,
+                             compare_exchange_reshape)
+from .kernels.ljg import ljg as ljg_kernel
+from .kernels.rbf import rbf as rbf_kernel
+
+# ---------------------------------------------------------------------------
+# Sorting
+
+
+def merge_sort(x, *, tile: int = DEFAULT_TILE):
+    """Full ascending sort of a power-of-two length array.
+
+    Phase 1 (L1): bitonic tile sort — each VMEM tile sorted independently.
+    Phase 2 (L2): global bitonic merge stages (k > tile) — cross-tile
+    compare-exchange sweeps, each lowering to one fused gather/select HLO.
+    This mirrors the paper's merge_sort: block-local sort then global
+    merging, with the block size set by shared-memory (here VMEM) capacity.
+    """
+    n = x.shape[0]
+    assert n & (n - 1) == 0, "size classes are powers of two"
+    t = min(tile, n)
+    v = ksort.sort_tiles(x, tile=t)
+    for k, j in bitonic_merge_stages(n, t):
+        v = compare_exchange_reshape(v, k, j)
+    return v
+
+
+def merge_sort_pairs(keys, vals, *, tile: int = DEFAULT_TILE):
+    """Key-value sort; payload lanes travel with their keys. Deterministic
+    under duplicate keys (payload-index tie-break), so it doubles as a
+    stable sort when vals = iota."""
+    n = keys.shape[0]
+    assert n & (n - 1) == 0
+    t = min(tile, n)
+    keys, vals = ksort.sort_pairs_tiles(keys, vals, tile=t)
+    for k, j in bitonic_merge_stages(n, t):
+        keys, vals = compare_exchange_pairs_reshape(keys, vals, k, j)
+    return keys, vals
+
+
+def sortperm(x, *, tile: int = DEFAULT_TILE):
+    """Index permutation sorting x (paper's sortperm): key-value sort with
+    vals = iota; returns (sorted_keys, permutation)."""
+    n = x.shape[0]
+    perm = jnp.arange(n, dtype=jnp.int32)
+    return merge_sort_pairs(x, perm, tile=tile)
+
+
+# ---------------------------------------------------------------------------
+# Reduction / accumulation
+
+
+def reduce(x, op: str = "add", map_name: str = "identity",
+           *, tile: int = DEFAULT_TILE):
+    """Scalar reduction: L1 per-tile partials + L2 fold. Returns ()."""
+    parts = kreduce.reduce_tiles(x, op, map_name, tile=min(tile, x.shape[0]))
+    if op == "add":
+        return jnp.sum(parts, dtype=x.dtype)
+    if op == "max":
+        return jnp.max(parts)
+    if op == "min":
+        return jnp.min(parts)
+    raise ValueError(op)
+
+
+def reduce_partials(x, op: str = "add", map_name: str = "identity",
+                    *, tile: int = DEFAULT_TILE):
+    """`switch_below` variant: returns the (n/tile,) per-tile partials so
+    the host can finish the fold — the paper's device-sync-masking
+    optimisation, exercised by `algorithms::reduce` on the Rust side."""
+    return kreduce.reduce_tiles(x, op, map_name, tile=min(tile, x.shape[0]))
+
+
+def accumulate(x, op: str = "add", inclusive: bool = True,
+               *, tile: int = DEFAULT_TILE):
+    """Prefix scan (paper's accumulate): three-phase block scan.
+
+    Tile scans and carry application are L1 Pallas kernels; the tiny
+    (n/tile,) carry scan runs as plain HLO in between. Exclusive scans
+    shift the inclusive result right by one lane with the op identity.
+    """
+    n = x.shape[0]
+    t = min(tile, n)
+    tile_scans, tile_sums = kscan.scan_tiles(x, op, tile=t)
+    if op == "add":
+        carries = jnp.concatenate(
+            [jnp.zeros((1,), x.dtype), jnp.cumsum(tile_sums, dtype=x.dtype)[:-1]])
+    elif op == "max":
+        run = jax.lax.cummax(tile_sums, axis=0)
+        lowest = _op_identity(x.dtype, "max")
+        carries = jnp.concatenate([jnp.full((1,), lowest, x.dtype), run[:-1]])
+    elif op == "min":
+        run = jax.lax.cummin(tile_sums, axis=0)
+        highest = _op_identity(x.dtype, "min")
+        carries = jnp.concatenate([jnp.full((1,), highest, x.dtype), run[:-1]])
+    else:
+        raise ValueError(op)
+    out = kscan.add_carries(tile_scans, carries, op, tile=t)
+    if inclusive:
+        return out
+    ident = _op_identity(x.dtype, op)
+    return jnp.concatenate([jnp.full((1,), ident, x.dtype), out[:-1]])
+
+
+def _op_identity(dtype, op):
+    dtype = jnp.dtype(dtype)
+    if op == "add":
+        return jnp.array(0, dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf if op == "max" else jnp.inf, dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.array(info.min if op == "max" else info.max, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Binary search & predicates
+
+
+def searchsorted_first(haystack, needles, *, tile: int = DEFAULT_TILE):
+    return ksearch.searchsorted(haystack, needles, "first",
+                                tile=min(tile, needles.shape[0]))
+
+
+def searchsorted_last(haystack, needles, *, tile: int = DEFAULT_TILE):
+    return ksearch.searchsorted(haystack, needles, "last",
+                                tile=min(tile, needles.shape[0]))
+
+
+def any_gt(x, threshold, *, tile: int = DEFAULT_TILE):
+    """True iff any element exceeds `threshold` (runtime scalar).
+
+    The paper ships two `any` algorithms: a concurrent-write one and a
+    conservative mapreduce one. One fused HLO cannot early-exit, so the
+    artifact is the conservative chunk-predicate; the Rust layer supplies
+    the early exit by scanning chunk by chunk (algorithms::predicates).
+    Returns an i32 scalar (0/1) — PRED round-trips awkwardly through PJRT.
+    """
+    mask = (x > threshold).astype(jnp.int32)
+    parts = kreduce.reduce_tiles(mask, "max", tile=min(tile, x.shape[0]))
+    return jnp.max(parts)
+
+
+def all_gt(x, threshold, *, tile: int = DEFAULT_TILE):
+    mask = (x > threshold).astype(jnp.int32)
+    parts = kreduce.reduce_tiles(mask, "min", tile=min(tile, x.shape[0]))
+    return jnp.min(parts)
+
+
+# ---------------------------------------------------------------------------
+# Arithmetic benchmark kernels (Table II)
+
+
+def rbf(points, *, tile: int = DEFAULT_TILE):
+    """Radial Basis Function over (3, n) points -> (n,)."""
+    return rbf_kernel(points, tile=min(tile, points.shape[1]))
+
+
+def ljg(p1, p2, consts, *, tile: int = DEFAULT_TILE):
+    """Lennard-Jones-Gauss potential over two (3, n) position arrays with
+    runtime constants (4,) [eps, sigma, r0, cutoff] -> (n,)."""
+    return ljg_kernel(p1, p2, consts, tile=min(tile, p1.shape[1]))

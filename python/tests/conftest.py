@@ -1,0 +1,25 @@
+"""Shared pytest fixtures/utilities for the L1/L2 test suite.
+
+x64 is enabled by `compile/__init__.py` (imported below) — the same config
+the AOT path uses, so tests exercise exactly what ships to Rust.
+"""
+
+import numpy as np
+import pytest
+
+import compile  # noqa: F401  (side effect: jax_enable_x64)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xAC)
+
+
+def assert_allclose_dtype(got, want, dtype):
+    got = np.asarray(got)
+    want = np.asarray(want)
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        np.testing.assert_array_equal(got, want)
+    else:
+        rtol = 1e-6 if np.dtype(dtype) == np.float64 else 1e-4
+        np.testing.assert_allclose(got, want, rtol=rtol, atol=1e-30)

@@ -1,0 +1,72 @@
+"""AOT pipeline tests: catalog integrity, HLO text validity, 64-bit
+parameter widths (the jax_enable_x64 regression), manifest consistency."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot
+
+ART_DIR = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+)
+
+
+def test_catalog_names_unique_and_wellformed():
+    cat = aot.build_catalog()
+    assert len(cat) > 100
+    for name, ent in cat.items():
+        assert re.fullmatch(r"[a-z0-9_]+", name), name
+        assert ent["meta"]["n"] & (ent["meta"]["n"] - 1) == 0, f"{name}: n not pow2"
+        assert ent["inputs"] and ent["outputs"], name
+
+
+def test_lowering_emits_64bit_params():
+    # Regression: without jax_enable_x64 the i64 sort lowers with s32
+    # parameters and the Rust runtime rejects the buffers.
+    cat = aot.build_catalog()
+    ent = cat["sort_i64_n10"]
+    text = aot.to_hlo_text(ent["fn"], ent["specs"])
+    assert "s64[1024]" in text, "i64 artifact lost its 64-bit width"
+    ent = cat["reduce_add_f64_n14"]
+    text = aot.to_hlo_text(ent["fn"], ent["specs"])
+    assert "f64[16384]" in text
+
+
+def test_hlo_text_is_parseable_entry_computation():
+    cat = aot.build_catalog()
+    ent = cat["reduce_add_f32_n14"]
+    text = aot.to_hlo_text(ent["fn"], ent["specs"])
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_matches_disk():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    names = [a["name"] for a in man["artifacts"]]
+    assert len(names) == len(set(names))
+    for a in man["artifacts"]:
+        path = os.path.join(ART_DIR, a["file"])
+        assert os.path.exists(path), a["name"]
+        # dtype consistency: artifact dtype appears in its input specs.
+        assert any(i["dtype"] == a["dtype"] for i in a["inputs"]), a["name"]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_covers_catalog():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    disk = {a["name"] for a in man["artifacts"]}
+    cat = set(aot.build_catalog())
+    assert cat == disk

@@ -1,0 +1,113 @@
+"""Scan + reduce kernels vs oracle."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import reduce as kreduce
+
+DTYPES = [jnp.int32, jnp.int64, jnp.float32, jnp.float64]
+
+
+def make_array(seed, n, dtype):
+    rng = np.random.default_rng(seed)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.array(rng.integers(-10_000, 10_000, n), dtype)
+    return jnp.array(rng.random(n) - 0.5, dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    log2n=st.integers(4, 13),
+    dti=st.integers(0, 3),
+    inclusive=st.booleans(),
+)
+def test_accumulate_add(seed, log2n, dti, inclusive):
+    dtype = DTYPES[dti]
+    x = make_array(seed, 1 << log2n, dtype)
+    got = np.asarray(
+        jax.jit(functools.partial(model.accumulate, op="add", inclusive=inclusive))(x)
+    )
+    xa = np.asarray(x)
+    if jnp.issubdtype(dtype, jnp.integer):
+        want = np.cumsum(xa, dtype=xa.dtype)
+        if not inclusive:
+            want = np.concatenate([[xa.dtype.type(0)], want[:-1]])
+        np.testing.assert_array_equal(got, want)
+    else:
+        # Prefix sums cancel: error scales with sum(|x|), not the running
+        # total, so compare against a float64 reference with a
+        # summation-aware absolute tolerance.
+        want = np.cumsum(xa.astype(np.float64))
+        if not inclusive:
+            want = np.concatenate([[0.0], want[:-1]])
+        eps = 1e-7 if xa.dtype == np.float32 else 1e-15
+        atol = eps * np.abs(xa).sum() * np.log2(max(len(xa), 2))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=atol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31), log2n=st.integers(4, 13), op_i=st.integers(0, 2))
+def test_accumulate_min_max(seed, log2n, op_i):
+    if op_i == 0:
+        return  # add covered above
+    op = ["add", "max", "min"][op_i]
+    x = make_array(seed, 1 << log2n, jnp.int32)
+    got = np.asarray(jax.jit(functools.partial(model.accumulate, op=op))(x))
+    fn = np.maximum if op == "max" else np.minimum
+    want = fn.accumulate(np.asarray(x))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    log2n=st.integers(4, 13),
+    dti=st.integers(0, 3),
+    op_i=st.integers(0, 2),
+)
+def test_reduce_ops(seed, log2n, dti, op_i):
+    op = ["add", "min", "max"][op_i]
+    dtype = DTYPES[dti]
+    x = make_array(seed, 1 << log2n, dtype)
+    got = jax.jit(functools.partial(model.reduce, op=op))(x)
+    xa = np.asarray(x)
+    want = {"add": xa.sum(), "min": xa.min(), "max": xa.max()}[op]
+    if jnp.issubdtype(dtype, jnp.integer):
+        assert int(got) == int(want)
+    else:
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+def test_reduce_partials_shape_and_sum():
+    x = jnp.arange(1 << 14, dtype=jnp.int64)
+    parts = np.asarray(jax.jit(model.reduce_partials)(x))
+    assert parts.shape == ((1 << 14) // 1024,)
+    assert parts.sum() == np.asarray(x).sum()
+
+
+def test_mapreduce_maps():
+    for name, f in kreduce.MAPS.items():
+        x = jnp.array([-2.0, 3.0, -4.0], jnp.float32)
+        parts = kreduce.reduce_tiles(
+            jnp.resize(x, 1024), "add", name, tile=1024
+        )
+        expected = float(jnp.sum(f(jnp.resize(x, 1024))))
+        np.testing.assert_allclose(float(parts[0]), expected, rtol=1e-5)
+
+
+def test_output_dtypes_match_inputs():
+    # Regression: under jax_enable_x64, jnp.sum/cumsum upcast i16/i32 to
+    # i64 — artifact outputs must keep the input dtype or the Rust
+    # runtime's typed literal reads fail.
+    for dtype in DTYPES:
+        x = make_array(0, 1 << 12, dtype)
+        assert jax.jit(functools.partial(model.reduce, op="add"))(x).dtype == dtype
+        assert jax.jit(functools.partial(model.accumulate, op="add"))(x).dtype == dtype
+        assert jax.jit(model.reduce_partials)(x).dtype == dtype
+        assert jax.jit(model.merge_sort)(x).dtype == dtype

@@ -1,0 +1,91 @@
+"""Binary search + arithmetic (RBF/LJG) kernels vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+DTYPES = [jnp.int16, jnp.int32, jnp.int64, jnp.float32, jnp.float64]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    log2n=st.integers(4, 13),
+    dti=st.integers(0, len(DTYPES) - 1),
+    side=st.sampled_from(["first", "last"]),
+)
+def test_searchsorted_matches_numpy(seed, log2n, dti, side):
+    dtype = DTYPES[dti]
+    rng = np.random.default_rng(seed)
+    n = 1 << log2n
+    if jnp.issubdtype(dtype, jnp.integer):
+        hay = jnp.sort(jnp.array(rng.integers(-50, 50, n), dtype))
+        needles = jnp.array(rng.integers(-60, 60, 1024), dtype)
+    else:
+        hay = jnp.sort(jnp.array(rng.random(n) * 100, dtype))
+        needles = jnp.array(rng.random(1024) * 120 - 10, dtype)
+    fn = model.searchsorted_first if side == "first" else model.searchsorted_last
+    got = np.asarray(jax.jit(fn)(hay, needles))
+    want = np.searchsorted(
+        np.asarray(hay), np.asarray(needles), "left" if side == "first" else "right"
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_searchsorted_duplicate_blocks():
+    hay = jnp.array([1, 3, 3, 3, 7] + [9] * 1019, jnp.int32)
+    needles = jnp.resize(jnp.array([3, 0, 9, 10], jnp.int32), 1024)
+    first = np.asarray(jax.jit(model.searchsorted_first)(hay, needles))
+    last = np.asarray(jax.jit(model.searchsorted_last)(hay, needles))
+    assert first[0] == 1 and last[0] == 4
+    assert first[1] == 0 and last[1] == 0
+    assert first[2] == 5 and last[2] == 1024
+    assert first[3] == 1024
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31), log2n=st.integers(10, 14), f64=st.booleans())
+def test_rbf_matches_oracle(seed, log2n, f64):
+    dtype = jnp.float64 if f64 else jnp.float32
+    rng = np.random.default_rng(seed)
+    n = 1 << log2n
+    pts = jnp.array((rng.random((3, n)) - 0.5), dtype)  # r < 0.87
+    got = np.asarray(jax.jit(model.rbf)(pts))
+    want = np.asarray(ref.rbf(pts))
+    np.testing.assert_allclose(got, want, rtol=1e-5 if f64 else 1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31), log2n=st.integers(10, 14), f64=st.booleans())
+def test_ljg_matches_oracle(seed, log2n, f64):
+    dtype = jnp.float64 if f64 else jnp.float32
+    rng = np.random.default_rng(seed)
+    n = 1 << log2n
+    p1 = jnp.array(rng.random((3, n)) * 4, dtype)
+    p2 = jnp.array(rng.random((3, n)) * 4, dtype)
+    consts = jnp.array([1.0, 1.0, 1.5, 3.0], dtype)
+    got = np.asarray(jax.jit(model.ljg)(p1, p2, consts))
+    want = np.asarray(ref.ljg(p1, p2, 1.0, 1.0, 1.5, 3.0))
+    np.testing.assert_allclose(got, want, rtol=1e-5 if f64 else 2e-3, atol=1e-6)
+
+
+def test_ljg_cutoff_branch_exact_zero():
+    # Atoms beyond the cutoff contribute exactly 0 (branch, not decay).
+    n = 1024
+    p1 = jnp.zeros((3, n), jnp.float32)
+    p2 = jnp.ones((3, n), jnp.float32) * 10.0
+    consts = jnp.array([1.0, 1.0, 1.5, 3.0], jnp.float32)
+    got = np.asarray(model.ljg(p1, p2, consts))
+    assert (got == 0.0).all()
+
+
+def test_predicates_any_all():
+    x = jnp.linspace(0, 1, 1 << 14, dtype=jnp.float32)
+    assert int(jax.jit(model.any_gt)(x, jnp.float32(0.999))) == 1
+    assert int(jax.jit(model.any_gt)(x, jnp.float32(2.0))) == 0
+    assert int(jax.jit(model.all_gt)(x, jnp.float32(-0.1))) == 1
+    assert int(jax.jit(model.all_gt)(x, jnp.float32(0.5))) == 0

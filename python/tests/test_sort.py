@@ -1,0 +1,85 @@
+"""L1/L2 sorting kernels vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, sort_tile
+
+DTYPES = [jnp.int16, jnp.int32, jnp.int64, jnp.float32, jnp.float64]
+
+
+def make_array(rng_seed, n, dtype):
+    rng = np.random.default_rng(rng_seed)
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return jnp.array(
+            rng.integers(int(info.min), int(info.max), n, endpoint=True), dtype
+        )
+    return jnp.array((rng.random(n) - 0.5) * 2e6, dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    log2n=st.integers(4, 12),
+    dti=st.integers(0, len(DTYPES) - 1),
+)
+def test_merge_sort_matches_oracle(seed, log2n, dti):
+    x = make_array(seed, 1 << log2n, DTYPES[dti])
+    got = jax.jit(model.merge_sort)(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.sort(x)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), log2n=st.integers(4, 11))
+def test_sortperm_is_stable_permutation(seed, log2n):
+    n = 1 << log2n
+    rng = np.random.default_rng(seed)
+    # Duplicate-heavy keys stress the stability tie-break.
+    x = jnp.array(rng.integers(-8, 8, n), jnp.int32)
+    keys, perm = jax.jit(model.sortperm)(x)
+    xa = np.asarray(x)
+    pa = np.asarray(perm)
+    assert sorted(pa.tolist()) == list(range(n)), "not a permutation"
+    np.testing.assert_array_equal(xa[pa], np.sort(xa, kind="stable"))
+    np.testing.assert_array_equal(np.asarray(keys), np.sort(xa))
+    # Stability: equal keys keep ascending original indices.
+    ka = np.asarray(keys)
+    for i in range(n - 1):
+        if ka[i] == ka[i + 1]:
+            assert pa[i] < pa[i + 1]
+
+
+def test_tile_sort_produces_alternating_runs():
+    # The tile kernel must emit even tiles ascending, odd tiles
+    # descending: that is its contract with the global merge stages.
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.integers(-1000, 1000, 4096), jnp.int32)
+    out = np.asarray(sort_tile.sort_tiles(x, tile=1024))
+    for t in range(4):
+        run = out[1024 * t : 1024 * (t + 1)]
+        if t % 2 == 0:
+            assert (np.diff(run) >= 0).all(), f"tile {t} not ascending"
+        else:
+            assert (np.diff(run) <= 0).all(), f"tile {t} not descending"
+
+
+def test_merge_sort_with_infinities_and_duplicates():
+    x = jnp.array(
+        [np.inf, -np.inf, 0.0, -0.0, 1.5, 1.5, -2.25, np.inf] * 128, jnp.float32
+    )
+    got = np.asarray(jax.jit(model.merge_sort)(x))
+    np.testing.assert_array_equal(got, np.sort(np.asarray(x)))
+
+
+def test_sort_pairs_carries_payloads():
+    rng = np.random.default_rng(4)
+    keys = jnp.array(rng.integers(-100, 100, 2048), jnp.int64)
+    vals = jnp.arange(2048, dtype=jnp.int32)
+    km, vm = jax.jit(model.merge_sort_pairs)(keys, vals)
+    ka, va = np.asarray(km), np.asarray(vm)
+    assert (np.diff(ka) >= 0).all()
+    np.testing.assert_array_equal(np.asarray(keys)[va], ka)

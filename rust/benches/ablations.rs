@@ -1,0 +1,11 @@
+//! Bench: design-choice ablations (DESIGN.md §6) — SIHSort final phase,
+//! radix digit width, sampling density, refinement budget.
+
+use accelkern::cfg::RunConfig;
+use accelkern::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let base = RunConfig::default();
+    let rt = Runtime::open_default().ok();
+    accelkern::coordinator::campaign::ablations(&base, &rt, false)
+}

@@ -1,0 +1,24 @@
+//! Bench: paper Fig 1 — weak scaling at small per-rank sizes (0.1 MB and
+//! 10 MB per rank in the paper; scaled by default, override with env
+//! AK_FIG1_SMALL / AK_FIG1_LARGE element counts).
+
+use accelkern::cfg::RunConfig;
+use accelkern::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let base = RunConfig::default();
+    let rt = Runtime::open_default().ok();
+    if rt.is_none() {
+        eprintln!("warn: no artifacts; AK rows use the host fallback");
+    }
+    // Paper panel (a): 0.1 MB/rank = 25k Int32; panel (b): 10 MB/rank = 2.5M.
+    let small = env_usize("AK_FIG1_SMALL", 25_000);
+    let large = env_usize("AK_FIG1_LARGE", 500_000); // scaled from 2.5M
+    let ranks = [1usize, 2, 4, 8, 16];
+    accelkern::coordinator::campaign::fig1(&base, &ranks, small, large, &rt)?;
+    Ok(())
+}
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|s| s.parse().ok()).unwrap_or(d)
+}

@@ -1,0 +1,19 @@
+//! Bench: paper Fig 2 — weak scaling at fixed bytes/rank across all six
+//! dtypes and the GPU sorter×transfer grid (1 GB/rank in the paper;
+//! default 2 MB/rank here, override AK_FIG2_BYTES_PER_RANK).
+
+use accelkern::cfg::RunConfig;
+use accelkern::dtype::ElemType;
+use accelkern::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let base = RunConfig::default();
+    let rt = Runtime::open_default().ok();
+    let bytes = std::env::var("AK_FIG2_BYTES_PER_RANK")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2 << 20);
+    let ranks = [4usize, 8, 16, 32, 64];
+    accelkern::coordinator::campaign::fig2(&base, &ranks, bytes, &ElemType::ALL, &rt)?;
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Bench: paper Fig 3 — strong scaling: fixed total divided over ranks
+//! (16 GB in the paper; default 64 MB here, override AK_FIG3_TOTAL_BYTES).
+
+use accelkern::cfg::RunConfig;
+use accelkern::dtype::ElemType;
+use accelkern::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let base = RunConfig::default();
+    let rt = Runtime::open_default().ok();
+    let total = std::env::var("AK_FIG3_TOTAL_BYTES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64 << 20);
+    let ranks = [4usize, 8, 16, 32, 64];
+    accelkern::coordinator::campaign::fig3(
+        &base,
+        &ranks,
+        total,
+        &[ElemType::I32, ElemType::I64, ElemType::F32],
+        &rt,
+    )?;
+    Ok(())
+}

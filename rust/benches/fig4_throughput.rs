@@ -1,0 +1,35 @@
+//! Bench: paper Fig 4 — maximum sorting throughput per algorithm with the
+//! argmax (dtype, size/rank), plus the paper's two summary ratios:
+//! slowest-GPU vs CPU and mean GG vs GC speedup.
+
+use accelkern::cfg::RunConfig;
+use accelkern::dtype::ElemType;
+use accelkern::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let base = RunConfig::default();
+    let rt = Runtime::open_default().ok();
+    let ranks = std::env::var("AK_FIG4_RANKS").ok().and_then(|s| s.parse().ok()).unwrap_or(16);
+    let sizes = [1usize << 20, 4 << 20];
+    let rows = accelkern::coordinator::campaign::fig4(&base, ranks, &sizes, &ElemType::ALL, &rt)?;
+
+    // Paper summary stats.
+    let cpu = rows.iter().find(|(l, _, _)| l.starts_with("CC")).map(|r| r.1).unwrap_or(0.0);
+    let slowest_gpu = rows
+        .iter()
+        .filter(|(l, _, _)| !l.starts_with("CC"))
+        .map(|r| r.1)
+        .fold(f64::INFINITY, f64::min);
+    let gg: Vec<f64> =
+        rows.iter().filter(|(l, _, _)| l.starts_with("GG")).map(|r| r.1).collect();
+    let gc: Vec<f64> =
+        rows.iter().filter(|(l, _, _)| l.starts_with("GC")).map(|r| r.1).collect();
+    if cpu > 0.0 {
+        println!("\nslowest GPU / CPU throughput ratio: {:.2}x (paper: 7.48x)", slowest_gpu / cpu);
+    }
+    if !gg.is_empty() && !gc.is_empty() {
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        println!("mean GG / GC speedup: {:.2}x (paper: 4.93x)", mean(&gg) / mean(&gc));
+    }
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Bench: paper Fig 5 — sorting times normalised by the ×22 combined
+//! capital/running/environmental GPU cost factor; prints the economic
+//! crossover points (paper: GPUs only viable with GPUDirect, above ~1e6
+//! elements).
+
+use accelkern::cfg::RunConfig;
+use accelkern::cost::crossover_n;
+use accelkern::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let base = RunConfig::default();
+    let rt = Runtime::open_default().ok();
+    let ranks = 4;
+    let counts = [1_000usize, 10_000, 100_000, 1_000_000, 4_000_000];
+    let series = accelkern::coordinator::campaign::fig5(&base, ranks, &counts, &rt)?;
+
+    // Crossover: normalised GG-AK vs CC-JB per dtype.
+    for dt in ["Float32", "Int64"] {
+        let cpu = series.iter().find(|s| s.name.starts_with("CC-JB") && s.name.contains(dt));
+        let gg = series.iter().find(|s| s.name.starts_with("GG-AK") && s.name.contains(dt));
+        let gc = series.iter().find(|s| s.name.starts_with("GC-AK") && s.name.contains(dt));
+        if let (Some(cpu), Some(gg), Some(gc)) = (cpu, gg, gc) {
+            // Series already normalised; compare directly (ratio 1.0).
+            let x_gg = crossover_n(&cpu.points, &gg.points, 1.0);
+            let x_gc = crossover_n(&cpu.points, &gc.points, 1.0);
+            println!(
+                "{dt}: GG-AK economically viable from n = {:?}; GC-AK from n = {:?} (paper: GG only, ~1e6)",
+                x_gg, x_gc
+            );
+        }
+    }
+    Ok(())
+}

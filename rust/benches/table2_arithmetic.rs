@@ -1,0 +1,21 @@
+//! Bench: paper Table II — RBF + LJG arithmetic kernels across the
+//! implementation/device matrix. `cargo bench --bench table2_arithmetic`
+//! (env: AK_BENCH_N, AK_BENCH_THREADS, AK_BENCH_SCALE).
+
+use accelkern::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::var("AK_BENCH_N").ok().and_then(|s| s.parse().ok()).unwrap_or(1 << 21);
+    let threads: usize = std::env::var("AK_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(accelkern::backend::threaded::default_threads);
+    let rt = match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("warn: no artifacts ({e}); device rows skipped");
+            None
+        }
+    };
+    accelkern::coordinator::campaign::table2(n, threads, &rt, false)
+}

@@ -1,0 +1,213 @@
+//! Table II arithmetic kernels: Radial Basis Function (§III-A) and
+//! Lennard-Jones-Gauss potential (§III-B).
+//!
+//! Host variants mirror the paper's implementation matrix:
+//! * [`rbf`] / [`ljg`] — integer powers expanded to multiplications (what
+//!   Julia emits; the "Julia Base" and "C (hand-written powf)" rows).
+//! * [`ljg_powf`] — calls `powf` like naive portable C; the paper found
+//!   GCC/Clang emit 10 `powf` calls here, costing up to 5.7× on ARM. The
+//!   Table II bench reproduces that C-vs-Julia consistency story.
+//! * Threaded versions ("C OpenMP" / AK-CPU rows) via `Backend::Threaded`.
+//! * Device versions run the Pallas artifacts (`DeviceOps::{rbf,ljg}_f32`).
+
+use crate::backend::Backend;
+
+/// Runtime LJG constants (passed at runtime so constant propagation can't
+/// fold them — paper §III-B).
+#[derive(Clone, Copy, Debug)]
+pub struct LjgConsts {
+    pub epsilon: f32,
+    pub sigma: f32,
+    pub r0: f32,
+    pub cutoff: f32,
+}
+
+impl Default for LjgConsts {
+    fn default() -> Self {
+        // The paper's constants: epsilon=1, sigma=1, r0=1.5, cutoff=3.
+        Self { epsilon: 1.0, sigma: 1.0, r0: 1.5, cutoff: 3.0 }
+    }
+}
+
+/// RBF over packed `(3, n)` coordinates `[x.., y.., z..]` → `(n,)`:
+/// `rbf[i] = exp(-1 / (1 - sqrt(x² + y² + z²)))` (paper Algorithm 4).
+pub fn rbf(backend: &Backend, pts: &[f32]) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(pts.len() % 3 == 0, "(3, n) packed layout required");
+    let n = pts.len() / 3;
+    match backend {
+        Backend::Native => {
+            let mut out = vec![0.0f32; n];
+            rbf_range(pts, n, &mut out, 0..n);
+            Ok(out)
+        }
+        Backend::Threaded(t) => {
+            let mut out = vec![0.0f32; n];
+            let ranges = crate::backend::threaded::split_ranges(n, *t);
+            crate::backend::parallel_chunks(&mut out, *t, |ci, chunk| {
+                let r = ranges[ci].clone();
+                rbf_range(pts, n, chunk, r);
+            });
+            Ok(out)
+        }
+        Backend::Device(dev) => dev.rbf_f32(pts),
+    }
+}
+
+#[inline]
+fn rbf_range(pts: &[f32], n: usize, out: &mut [f32], r: std::ops::Range<usize>) {
+    let (xs, ys, zs) = (&pts[..n], &pts[n..2 * n], &pts[2 * n..]);
+    for (o, i) in out.iter_mut().zip(r) {
+        // x*x not powf: the transformation every compiler managed for ^2.
+        let rad = (xs[i] * xs[i] + ys[i] * ys[i] + zs[i] * zs[i]).sqrt();
+        *o = (-1.0 / (1.0 - rad)).exp();
+    }
+}
+
+/// LJG potential over packed `(3, n)` position arrays (Algorithm 5),
+/// integer powers expanded to multiplications.
+pub fn ljg(
+    backend: &Backend,
+    p1: &[f32],
+    p2: &[f32],
+    c: LjgConsts,
+) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(p1.len() == p2.len() && p1.len() % 3 == 0);
+    let n = p1.len() / 3;
+    match backend {
+        Backend::Native => {
+            let mut out = vec![0.0f32; n];
+            ljg_range(p1, p2, n, c, &mut out, 0..n);
+            Ok(out)
+        }
+        Backend::Threaded(t) => {
+            let mut out = vec![0.0f32; n];
+            let ranges = crate::backend::threaded::split_ranges(n, *t);
+            crate::backend::parallel_chunks(&mut out, *t, |ci, chunk| {
+                ljg_range(p1, p2, n, c, chunk, ranges[ci].clone());
+            });
+            Ok(out)
+        }
+        Backend::Device(dev) => dev.ljg_f32(p1, p2, [c.epsilon, c.sigma, c.r0, c.cutoff]),
+    }
+}
+
+#[inline]
+fn ljg_range(
+    p1: &[f32],
+    p2: &[f32],
+    n: usize,
+    c: LjgConsts,
+    out: &mut [f32],
+    r: std::ops::Range<usize>,
+) {
+    for (o, i) in out.iter_mut().zip(r) {
+        let dx = p1[i] - p2[i];
+        let dy = p1[n + i] - p2[n + i];
+        let dz = p1[2 * n + i] - p2[2 * n + i];
+        let rad = (dx * dx + dy * dy + dz * dz).sqrt();
+        *o = if rad < c.cutoff {
+            let sr = c.sigma / rad;
+            let sr3 = sr * sr * sr;
+            let sr6 = sr3 * sr3;
+            let sr12 = sr6 * sr6;
+            let gauss =
+                c.epsilon * (-((rad - c.r0) * (rad - c.r0)) / (2.0 * c.sigma * c.sigma)).exp();
+            4.0 * c.epsilon * (sr12 - sr6) - gauss
+        } else {
+            0.0
+        };
+    }
+}
+
+/// The naive-C variant: `powf(sigma/r, 6)` etc. — iterative libm powers,
+/// the pathology the paper measured (Table II "C" row, §III-B analysis).
+/// Host-only (no artifact is built for it; the AOT path always expands).
+pub fn ljg_powf(backend: &Backend, p1: &[f32], p2: &[f32], c: LjgConsts) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(p1.len() == p2.len() && p1.len() % 3 == 0);
+    let n = p1.len() / 3;
+    let body = |out: &mut [f32], r: std::ops::Range<usize>| {
+        for (o, i) in out.iter_mut().zip(r) {
+            let dx = p1[i] - p2[i];
+            let dy = p1[n + i] - p2[n + i];
+            let dz = p1[2 * n + i] - p2[2 * n + i];
+            let rad = (dx * dx + dy * dy + dz * dz).sqrt();
+            *o = if rad < c.cutoff {
+                let sr6 = (c.sigma / rad).powf(6.0);
+                let sr12 = (c.sigma / rad).powf(12.0);
+                let gauss = c.epsilon
+                    * (-(rad - c.r0).powf(2.0) / (2.0 * c.sigma.powf(2.0))).exp();
+                4.0 * c.epsilon * (sr12 - sr6) - gauss
+            } else {
+                0.0
+            };
+        }
+    };
+    let mut out = vec![0.0f32; n];
+    match backend {
+        Backend::Native | Backend::Device(_) => body(&mut out, 0..n),
+        Backend::Threaded(t) => {
+            let ranges = crate::backend::threaded::split_ranges(n, *t);
+            crate::backend::parallel_chunks(&mut out, *t, |ci, chunk| {
+                body(chunk, ranges[ci].clone());
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+    use crate::workload::{points_f32, positions_f32};
+
+    #[test]
+    fn rbf_native_vs_threaded() {
+        let pts = points_f32(&mut Prng::new(1), 10_000);
+        let a = rbf(&Backend::Native, &pts).unwrap();
+        let b = rbf(&Backend::Threaded(4), &pts).unwrap();
+        assert_eq!(a.len(), 10_000);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+        // Spot-check one value.
+        let r = (pts[0] * pts[0] + pts[10_000] * pts[10_000] + pts[20_000] * pts[20_000]).sqrt();
+        assert!((a[0] - (-1.0 / (1.0 - r)).exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ljg_powf_matches_expanded() {
+        let p1 = positions_f32(&mut Prng::new(2), 5000, 4.0);
+        let p2 = positions_f32(&mut Prng::new(3), 5000, 4.0);
+        let c = LjgConsts::default();
+        let a = ljg(&Backend::Native, &p1, &p2, c).unwrap();
+        let b = ljg_powf(&Backend::Native, &p1, &p2, c).unwrap();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!((x - y).abs() <= 2e-3 * x.abs().max(1.0), "i={i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn ljg_cutoff_zeroes() {
+        // Two atoms farther apart than cutoff must contribute 0.
+        let p1 = vec![0.0f32, 0.0, 0.0]; // one atom at origin (3,1) layout
+        let p2 = vec![10.0f32, 0.0, 0.0];
+        let out = ljg(&Backend::Native, &p1, &p2, LjgConsts::default()).unwrap();
+        assert_eq!(out, vec![0.0]);
+    }
+
+    #[test]
+    fn ljg_branch_sides_differ() {
+        let c = LjgConsts::default();
+        let p1 = vec![0.0f32, 0.0, 0.0];
+        let p2 = vec![1.2f32, 0.0, 0.0]; // inside cutoff
+        let out = ljg(&Backend::Native, &p1, &p2, c).unwrap();
+        assert!(out[0] != 0.0);
+    }
+
+    #[test]
+    fn rejects_ragged_layouts() {
+        assert!(rbf(&Backend::Native, &[1.0, 2.0]).is_err());
+        assert!(ljg(&Backend::Native, &[1.0; 3], &[1.0; 6], LjgConsts::default()).is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! `foreachindex` (paper §II-B, Algorithms 2–3): the general parallel
+//! loop. Host closures run per index on Native/Threaded backends; the
+//! Device backend's "foreachindex bodies" are the AOT-compiled named
+//! kernels (rbf/ljg in `arith`), since arbitrary closures cannot cross
+//! the transpile-once boundary — our `make artifacts` is the analog of
+//! Julia's kernel compilation at first use.
+
+use crate::backend::Backend;
+
+/// Run `f(i)` for every `i in 0..len`, statically partitioned over the
+/// backend's threads (one thread per chunk, matching the paper's CPU
+/// scheduling; GPUs run one iteration per thread which we emulate by
+/// vectorised artifacts instead).
+pub fn foreachindex<F>(backend: &Backend, len: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    match backend {
+        Backend::Native | Backend::Device(_) => {
+            for i in 0..len {
+                f(i);
+            }
+        }
+        Backend::Threaded(t) => {
+            crate::backend::parallel_for_each_chunk(len, *t, |r| {
+                for i in r {
+                    f(i);
+                }
+            });
+        }
+    }
+}
+
+/// Mutating variant over a slice: `f(i, &mut xs[i])` with disjoint chunks
+/// (the dst/src copy-kernel pattern of paper Algorithm 3).
+pub fn foreach_mut<T: Send, F>(backend: &Backend, xs: &mut [T], f: F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
+    match backend {
+        Backend::Native | Backend::Device(_) => {
+            for (i, x) in xs.iter_mut().enumerate() {
+                f(i, x);
+            }
+        }
+        Backend::Threaded(t) => {
+            let ranges = crate::backend::threaded::split_ranges(xs.len(), *t);
+            crate::backend::parallel_chunks(xs, *t, |ci, chunk| {
+                let base = ranges[ci].start;
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    f(base + j, x);
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn visits_every_index_once() {
+        for b in [Backend::Native, Backend::Threaded(4)] {
+            let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+            foreachindex(&b, 1000, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "{b:?}");
+        }
+    }
+
+    #[test]
+    fn copy_kernel_algorithm3() {
+        // The paper's copy_parallel!: dst[i] = src[i].
+        let src: Vec<i32> = (0..5000).collect();
+        for b in [Backend::Native, Backend::Threaded(3)] {
+            let mut dst = vec![0i32; 5000];
+            foreach_mut(&b, &mut dst, |i, d| *d = src[i]);
+            assert_eq!(dst, src, "{b:?}");
+        }
+    }
+
+    #[test]
+    fn zero_len() {
+        foreachindex(&Backend::Threaded(4), 0, |_| panic!("must not run"));
+    }
+}

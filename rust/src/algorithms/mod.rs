@@ -1,0 +1,39 @@
+//! The AcceleratedKernels algorithm suite (paper §II-B), backend-generic.
+//!
+//! One function family per paper primitive, each dispatching over
+//! [`crate::backend::Backend`]:
+//!
+//! | paper                        | here                                   |
+//! |------------------------------|----------------------------------------|
+//! | `foreachindex`               | [`foreach::foreachindex`]              |
+//! | `merge_sort`                 | [`sort::sort`]                         |
+//! | `merge_sort_by_key`          | [`sort::sort_by_key`]                  |
+//! | `sortperm` / `_lowmem`       | [`sortperm::sortperm`] / `_lowmem`     |
+//! | `reduce`                     | [`reduce::reduce`] (+ `switch_below`)  |
+//! | `mapreduce`                  | [`reduce::mapreduce`]                  |
+//! | `accumulate`                 | [`scan::accumulate`]                   |
+//! | `searchsortedfirst/last`     | [`search::searchsorted_first/last`]    |
+//! | `any` / `all`                | [`predicates::any_gt/all_gt`] etc.     |
+//! | Table II arithmetic kernels  | [`arith::rbf`] / [`arith::ljg`]        |
+//!
+//! Temporary buffers are exposed or internally reused, and every
+//! algorithm's extra memory is a predictable function of the input size
+//! (paper §II-B's closing requirement).
+
+pub mod arith;
+pub mod foreach;
+pub mod predicates;
+pub mod reduce;
+pub mod scan;
+pub mod search;
+pub mod sort;
+pub mod sortperm;
+
+pub use arith::{ljg, ljg_powf, rbf, LjgConsts};
+pub use foreach::foreachindex;
+pub use predicates::{all_gt, any_gt};
+pub use reduce::{mapreduce, reduce, ReduceKind};
+pub use scan::accumulate;
+pub use search::{searchsorted_first, searchsorted_last};
+pub use sort::{sort, sort_by_key};
+pub use sortperm::{sortperm, sortperm_lowmem};

@@ -1,0 +1,110 @@
+//! `any` / `all` predicates (paper §II-B) with early exit.
+//!
+//! The paper ships two algorithms: a concurrent-write one (all threads
+//! race to set a flag — well-defined on modern GPUs) and a conservative
+//! mapreduce for older hardware. Host backends here use the racing-flag
+//! formulation (AtomicBool, relaxed — any thread may publish `true`);
+//! the device path evaluates chunk predicates with host-side early exit
+//! (see `DeviceOps::any_gt_f32`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::backend::Backend;
+
+/// `any(x > threshold)` over f32 (the artifact-covered predicate).
+pub fn any_gt(backend: &Backend, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
+    match backend {
+        Backend::Native => Ok(xs.iter().any(|&x| x > threshold)),
+        Backend::Threaded(t) => Ok(host_any(xs, *t, |x| x > threshold)),
+        Backend::Device(dev) => dev.any_gt_f32(xs, threshold),
+    }
+}
+
+/// `all(x > threshold)` over f32.
+pub fn all_gt(backend: &Backend, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
+    match backend {
+        Backend::Native => Ok(xs.iter().all(|&x| x > threshold)),
+        Backend::Threaded(t) => Ok(!host_any(xs, *t, |x| x <= threshold)),
+        Backend::Device(dev) => dev.all_gt_f32(xs, threshold),
+    }
+}
+
+/// Generic host `any` with an arbitrary predicate (the paper's `any(f, itr)`).
+pub fn any_by<T: Sync + Copy, P: Fn(&T) -> bool + Sync>(
+    backend: &Backend,
+    xs: &[T],
+    pred: P,
+) -> bool {
+    match backend {
+        Backend::Native | Backend::Device(_) => xs.iter().any(|x| pred(x)),
+        Backend::Threaded(t) => host_any(xs, *t, |x| pred(&x)),
+    }
+}
+
+/// Generic host `all`.
+pub fn all_by<T: Sync + Copy, P: Fn(&T) -> bool + Sync>(
+    backend: &Backend,
+    xs: &[T],
+    pred: P,
+) -> bool {
+    !any_by(backend, xs, |x| !pred(x))
+}
+
+/// Racing-flag parallel any: every worker checks the shared flag
+/// periodically and stops early once someone published `true` — the
+/// concurrent-write algorithm of the paper, with the benign-race made
+/// explicit through an atomic.
+fn host_any<T: Sync + Copy>(xs: &[T], threads: usize, pred: impl Fn(T) -> bool + Sync) -> bool {
+    if threads <= 1 || xs.len() < 4096 {
+        return xs.iter().any(|&x| pred(x));
+    }
+    let found = AtomicBool::new(false);
+    crate::backend::parallel_for_each_chunk(xs.len(), threads, |r| {
+        for (k, &x) in xs[r].iter().enumerate() {
+            // Check the flag every 1024 elements: cheap early exit
+            // without per-element synchronisation traffic.
+            if k % 1024 == 0 && found.load(Ordering::Relaxed) {
+                return;
+            }
+            if pred(x) {
+                found.store(true, Ordering::Relaxed);
+                return;
+            }
+        }
+    });
+    found.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn any_all_basic() {
+        let xs: Vec<f32> = (0..10_000).map(|i| i as f32 / 10_000.0).collect();
+        for b in [Backend::Native, Backend::Threaded(4)] {
+            assert!(any_gt(&b, &xs, 0.9995).unwrap());
+            assert!(!any_gt(&b, &xs, 2.0).unwrap());
+            assert!(all_gt(&b, &xs, -0.1).unwrap());
+            assert!(!all_gt(&b, &xs, 0.5).unwrap());
+        }
+    }
+
+    #[test]
+    fn generic_predicates() {
+        let xs: Vec<i64> = (0..5000).collect();
+        for b in [Backend::Native, Backend::Threaded(4)] {
+            assert!(any_by(&b, &xs, |&x| x == 4999));
+            assert!(!any_by(&b, &xs, |&x| x < 0));
+            assert!(all_by(&b, &xs, |&x| x >= 0));
+            assert!(!all_by(&b, &xs, |&x| x % 2 == 0));
+        }
+    }
+
+    #[test]
+    fn empty_semantics() {
+        let e: Vec<f32> = vec![];
+        assert!(!any_gt(&Backend::Native, &e, 0.0).unwrap());
+        assert!(all_gt(&Backend::Native, &e, 0.0).unwrap()); // vacuous truth
+    }
+}

@@ -1,0 +1,225 @@
+//! `reduce` / `mapreduce` (paper §II-B).
+//!
+//! The device path reduces per-tile on the accelerator; the
+//! `switch_below` argument (paper's device-sync-masking optimisation)
+//! routes small inputs through the partials artifact and finishes the
+//! fold on the host, skipping the device-side tree pass.
+
+use crate::backend::{Backend, DeviceKey};
+
+/// Supported reduction operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceKind {
+    Add,
+    Min,
+    Max,
+}
+
+impl ReduceKind {
+    fn op_name(self) -> &'static str {
+        match self {
+            ReduceKind::Add => "add",
+            ReduceKind::Min => "min",
+            ReduceKind::Max => "max",
+        }
+    }
+}
+
+/// Numeric glue for reductions (identity + fold per operator).
+pub trait Reducible: DeviceKey {
+    fn identity(kind: ReduceKind) -> Self;
+    fn fold(kind: ReduceKind, a: Self, b: Self) -> Self;
+}
+
+macro_rules! reducible_int {
+    ($ty:ty) => {
+        impl Reducible for $ty {
+            fn identity(kind: ReduceKind) -> Self {
+                match kind {
+                    ReduceKind::Add => 0,
+                    ReduceKind::Min => <$ty>::MAX,
+                    ReduceKind::Max => <$ty>::MIN,
+                }
+            }
+            fn fold(kind: ReduceKind, a: Self, b: Self) -> Self {
+                match kind {
+                    ReduceKind::Add => a.wrapping_add(b),
+                    ReduceKind::Min => a.min(b),
+                    ReduceKind::Max => a.max(b),
+                }
+            }
+        }
+    };
+}
+
+macro_rules! reducible_float {
+    ($ty:ty) => {
+        impl Reducible for $ty {
+            fn identity(kind: ReduceKind) -> Self {
+                match kind {
+                    ReduceKind::Add => 0.0,
+                    ReduceKind::Min => <$ty>::INFINITY,
+                    ReduceKind::Max => <$ty>::NEG_INFINITY,
+                }
+            }
+            fn fold(kind: ReduceKind, a: Self, b: Self) -> Self {
+                match kind {
+                    ReduceKind::Add => a + b,
+                    ReduceKind::Min => a.min(b),
+                    ReduceKind::Max => a.max(b),
+                }
+            }
+        }
+    };
+}
+
+reducible_int!(i16);
+reducible_int!(i32);
+reducible_int!(i64);
+reducible_int!(i128);
+reducible_float!(f32);
+reducible_float!(f64);
+
+/// Reduce `xs` with `kind`. `switch_below`: inputs with at most this many
+/// elements finish the fold on the host (device partials only).
+pub fn reduce<K: Reducible>(
+    backend: &Backend,
+    xs: &[K],
+    kind: ReduceKind,
+    switch_below: usize,
+) -> anyhow::Result<K> {
+    match backend {
+        Backend::Native => Ok(host_reduce(xs, kind)),
+        Backend::Threaded(t) => {
+            let partials =
+                crate::backend::parallel_for_each_chunk(xs.len(), *t, |r| host_reduce(&xs[r], kind));
+            Ok(partials.into_iter().fold(K::identity(kind), |a, b| K::fold(kind, a, b)))
+        }
+        Backend::Device(dev) => {
+            if !K::XLA {
+                return Ok(host_reduce(xs, kind));
+            }
+            if kind == ReduceKind::Add && xs.len() <= switch_below {
+                // switch_below: device emits per-tile partials, host folds.
+                return dev.reduce_partials_add_shim(xs);
+            }
+            dev.reduce(xs, kind.op_name(), K::identity(kind), |a, b| K::fold(kind, a, b))
+        }
+    }
+}
+
+/// `mapreduce(f, op, xs)`: host closures on host backends; the device
+/// path exposes the AOT-compiled named maps (paper: arbitrary lambdas are
+/// inlined at transpile time — our transpile time is `make artifacts`).
+pub fn mapreduce<K: Reducible, M>(
+    backend: &Backend,
+    xs: &[K],
+    map: M,
+    kind: ReduceKind,
+) -> anyhow::Result<K>
+where
+    M: Fn(K) -> K + Sync,
+{
+    match backend {
+        Backend::Native => Ok(host_mapreduce(xs, &map, kind)),
+        Backend::Threaded(t) => {
+            let partials = crate::backend::parallel_for_each_chunk(xs.len(), *t, |r| {
+                host_mapreduce(&xs[r], &map, kind)
+            });
+            Ok(partials.into_iter().fold(K::identity(kind), |a, b| K::fold(kind, a, b)))
+        }
+        // Arbitrary host closures cannot cross the AOT boundary; the
+        // device variant is the named-map artifact (`mapreduce_sumsq`
+        // etc., see `DeviceOps`). Host-execute here.
+        Backend::Device(_) => Ok(host_mapreduce(xs, &map, kind)),
+    }
+}
+
+fn host_reduce<K: Reducible>(xs: &[K], kind: ReduceKind) -> K {
+    xs.iter().copied().fold(K::identity(kind), |a, b| K::fold(kind, a, b))
+}
+
+fn host_mapreduce<K: Reducible, M: Fn(K) -> K>(xs: &[K], map: &M, kind: ReduceKind) -> K {
+    xs.iter().copied().map(map).fold(K::identity(kind), |a, b| K::fold(kind, a, b))
+}
+
+// Small shim so `reduce` can call the partials path without naming the
+// Add/Default bounds at the call site.
+impl crate::backend::DeviceOps {
+    fn reduce_partials_add_shim<K: Reducible>(&self, xs: &[K]) -> anyhow::Result<K> {
+        // Only Add reaches here; identity(Add) is the additive zero.
+        let mut acc = K::identity(ReduceKind::Add);
+        // Reuse the generic reduce with op add on partials artifacts when
+        // available; otherwise a plain host fold (semantically identical).
+        match self.reduce_partials_add_raw(xs) {
+            Ok(parts) => {
+                for p in parts {
+                    acc = K::fold(ReduceKind::Add, acc, p);
+                }
+                Ok(acc)
+            }
+            Err(_) => Ok(host_reduce(xs, ReduceKind::Add)),
+        }
+    }
+
+    fn reduce_partials_add_raw<K: Reducible>(&self, xs: &[K]) -> anyhow::Result<Vec<K>> {
+        use crate::backend::device::artifact_name;
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let plan = self.registry().plan("reduce_partials_add", K::ELEM, xs.len())?;
+        let cap = plan.chunk_capacity();
+        let mut out = Vec::new();
+        for chunk in xs.chunks(cap) {
+            let mut padded = chunk.to_vec();
+            padded.resize(cap, K::identity(ReduceKind::Add));
+            let res = self.registry().runtime().execute(
+                &artifact_name("reduce_partials_add", K::ELEM, cap),
+                &[K::to_literal(&padded)?],
+            )?;
+            out.extend(K::from_literal(&res[0])?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution};
+
+    #[test]
+    fn host_reduce_matches_iter() {
+        let xs: Vec<i64> = generate(&mut Prng::new(1), Distribution::Uniform, 10_000);
+        for b in [Backend::Native, Backend::Threaded(4)] {
+            let sum = reduce(&b, &xs, ReduceKind::Add, 0).unwrap();
+            let want: i64 = xs.iter().fold(0i64, |a, &b| a.wrapping_add(b));
+            assert_eq!(sum, want, "{b:?}");
+            assert_eq!(reduce(&b, &xs, ReduceKind::Min, 0).unwrap(), *xs.iter().min().unwrap());
+            assert_eq!(reduce(&b, &xs, ReduceKind::Max, 0).unwrap(), *xs.iter().max().unwrap());
+        }
+    }
+
+    #[test]
+    fn empty_input_identity() {
+        let e: Vec<f32> = vec![];
+        assert_eq!(reduce(&Backend::Native, &e, ReduceKind::Add, 0).unwrap(), 0.0);
+        assert_eq!(reduce(&Backend::Native, &e, ReduceKind::Min, 0).unwrap(), f32::INFINITY);
+    }
+
+    #[test]
+    fn mapreduce_square_sum() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let got = mapreduce(&Backend::Threaded(3), &xs, |x| x * x, ReduceKind::Add).unwrap();
+        let want: f64 = xs.iter().map(|x| x * x).sum();
+        assert!((got - want).abs() < 1e-9 * want);
+    }
+
+    #[test]
+    fn i128_host_everywhere() {
+        let xs: Vec<i128> = generate(&mut Prng::new(2), Distribution::Uniform, 1000);
+        let want: i128 = xs.iter().fold(0i128, |a, &b| a.wrapping_add(b));
+        assert_eq!(reduce(&Backend::Native, &xs, ReduceKind::Add, 0).unwrap(), want);
+    }
+}

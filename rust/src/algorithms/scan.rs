@@ -1,0 +1,175 @@
+//! `accumulate` — inclusive/exclusive prefix scan (paper §II-B).
+//!
+//! Host paths implement the same three-phase block scan the device
+//! artifact uses (per-chunk scan, carry scan, carry application), so the
+//! threaded variant parallelises exactly like the paper's GPU algorithm.
+
+use crate::backend::{Backend, DeviceKey};
+
+/// Additive scan glue (the artifact family covers op=add; host min/max
+/// scans are available through the generic `accumulate_by`).
+pub trait ScanAdd: DeviceKey + Default {
+    fn add(a: Self, b: Self) -> Self;
+}
+
+macro_rules! scan_int {
+    ($ty:ty) => {
+        impl ScanAdd for $ty {
+            fn add(a: Self, b: Self) -> Self {
+                a.wrapping_add(b)
+            }
+        }
+    };
+}
+scan_int!(i16);
+scan_int!(i32);
+scan_int!(i64);
+scan_int!(i128);
+impl ScanAdd for f32 {
+    fn add(a: Self, b: Self) -> Self {
+        a + b
+    }
+}
+impl ScanAdd for f64 {
+    fn add(a: Self, b: Self) -> Self {
+        a + b
+    }
+}
+
+/// Prefix-sum of `xs`; `inclusive` selects the scan flavour.
+pub fn accumulate<K: ScanAdd + std::ops::Add<Output = K>>(
+    backend: &Backend,
+    xs: &[K],
+    inclusive: bool,
+) -> anyhow::Result<Vec<K>> {
+    match backend {
+        Backend::Native => Ok(host_scan(xs, inclusive)),
+        Backend::Threaded(t) => Ok(threaded_scan(xs, inclusive, *t)),
+        Backend::Device(dev) => {
+            if K::XLA {
+                dev.scan_add(xs, inclusive)
+            } else {
+                Ok(host_scan(xs, inclusive))
+            }
+        }
+    }
+}
+
+/// Generic-operator host scan (`accumulate(op, ...)` in the paper; the
+/// device families cover add, so min/max run on host backends).
+pub fn accumulate_by<K: Copy, F: Fn(K, K) -> K>(
+    xs: &[K],
+    identity: K,
+    op: F,
+    inclusive: bool,
+) -> Vec<K> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = identity;
+    for &x in xs {
+        if inclusive {
+            acc = op(acc, x);
+            out.push(acc);
+        } else {
+            out.push(acc);
+            acc = op(acc, x);
+        }
+    }
+    out
+}
+
+fn host_scan<K: ScanAdd>(xs: &[K], inclusive: bool) -> Vec<K> {
+    accumulate_by(xs, K::default(), K::add, inclusive)
+}
+
+fn threaded_scan<K: ScanAdd>(xs: &[K], inclusive: bool, threads: usize) -> Vec<K> {
+    let n = xs.len();
+    if threads <= 1 || n < 4096 {
+        return host_scan(xs, inclusive);
+    }
+    let ranges = crate::backend::threaded::split_ranges(n, threads);
+    // Phase 1: per-chunk inclusive scans (parallel).
+    let chunks: Vec<Vec<K>> = crate::backend::parallel_for_each_chunk(n, threads, |r| {
+        accumulate_by(&xs[r], K::default(), K::add, true)
+    });
+    // Phase 2: carries = exclusive scan of chunk totals.
+    let mut carries = Vec::with_capacity(ranges.len());
+    let mut acc = K::default();
+    for c in &chunks {
+        carries.push(acc);
+        if let Some(&last) = c.last() {
+            acc = K::add(acc, last);
+        }
+    }
+    // Phase 3: apply carries (+ exclusivity shift on emit).
+    let mut out = Vec::with_capacity(n);
+    for (ci, c) in chunks.iter().enumerate() {
+        let carry = carries[ci];
+        if inclusive {
+            out.extend(c.iter().map(|&v| K::add(v, carry)));
+        } else {
+            for (i, _) in c.iter().enumerate() {
+                if i == 0 {
+                    out.push(carry);
+                } else {
+                    out.push(K::add(c[i - 1], carry));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution};
+
+    #[test]
+    fn inclusive_matches_reference() {
+        let xs: Vec<i64> = generate(&mut Prng::new(1), Distribution::Uniform, 9001);
+        for b in [Backend::Native, Backend::Threaded(4)] {
+            let got = accumulate(&b, &xs, true).unwrap();
+            let mut acc = 0i64;
+            for (i, &x) in xs.iter().enumerate() {
+                acc = acc.wrapping_add(x);
+                assert_eq!(got[i], acc, "{b:?} at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn exclusive_shifts() {
+        let xs = vec![1i32, 2, 3, 4];
+        let got = accumulate(&Backend::Native, &xs, false).unwrap();
+        assert_eq!(got, vec![0, 1, 3, 6]);
+        let got_t = accumulate(&Backend::Threaded(2), &xs, false).unwrap();
+        assert_eq!(got_t, got);
+    }
+
+    #[test]
+    fn threaded_equals_native_large() {
+        let xs: Vec<f64> = generate(&mut Prng::new(2), Distribution::Gaussian, 50_000)
+            .into_iter()
+            .map(|x: f64| x % 1000.0)
+            .collect();
+        let a = accumulate(&Backend::Native, &xs, true).unwrap();
+        let b = accumulate(&Backend::Threaded(8), &xs, true).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-6 * x.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn generic_operator_max_scan() {
+        let xs = vec![3i32, 1, 4, 1, 5];
+        let got = accumulate_by(&xs, i32::MIN, |a, b| a.max(b), true);
+        assert_eq!(got, vec![3, 3, 4, 4, 5]);
+    }
+
+    #[test]
+    fn empty() {
+        let e: Vec<i32> = vec![];
+        assert!(accumulate(&Backend::Native, &e, true).unwrap().is_empty());
+    }
+}

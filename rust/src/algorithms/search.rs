@@ -1,0 +1,125 @@
+//! `searchsortedfirst` / `searchsortedlast` (paper §II-B) — the
+//! lower/upper-bound primitives SIHSort's partition step runs on, and the
+//! ones the paper calls out as missing from Kokkos/RAJA.
+
+use crate::backend::{Backend, DeviceKey};
+use crate::dtype::SortKey;
+
+/// Leftmost insertion indices of `needles` into ascending `haystack`.
+pub fn searchsorted_first<K: DeviceKey>(
+    backend: &Backend,
+    haystack: &[K],
+    needles: &[K],
+) -> anyhow::Result<Vec<u32>> {
+    dispatch(backend, haystack, needles, "first")
+}
+
+/// Rightmost insertion indices (`upper_bound`).
+pub fn searchsorted_last<K: DeviceKey>(
+    backend: &Backend,
+    haystack: &[K],
+    needles: &[K],
+) -> anyhow::Result<Vec<u32>> {
+    dispatch(backend, haystack, needles, "last")
+}
+
+fn dispatch<K: DeviceKey>(
+    backend: &Backend,
+    haystack: &[K],
+    needles: &[K],
+    side: &str,
+) -> anyhow::Result<Vec<u32>> {
+    debug_assert!(crate::dtype::is_sorted_total(haystack), "haystack must be sorted");
+    match backend {
+        Backend::Native => Ok(host_search(haystack, needles, side, 1)),
+        Backend::Threaded(t) => Ok(host_search(haystack, needles, side, *t)),
+        Backend::Device(dev) => {
+            if K::XLA && dev.registry().supports(&format!("searchsorted_{side}"), K::ELEM) {
+                // Device artifacts cap the haystack class; oversize falls back.
+                if let Ok(plan) =
+                    dev.registry().plan(&format!("searchsorted_{side}"), K::ELEM, haystack.len())
+                {
+                    if plan.chunks == 1 {
+                        return dev.searchsorted(haystack, needles, side);
+                    }
+                }
+            }
+            Ok(host_search(haystack, needles, side, 1))
+        }
+    }
+}
+
+fn host_search<K: SortKey>(haystack: &[K], needles: &[K], side: &str, threads: usize) -> Vec<u32> {
+    let one = |nd: &K| -> u32 {
+        let nb = nd.to_bits();
+        let idx = if side == "first" {
+            haystack.partition_point(|h| h.to_bits() < nb)
+        } else {
+            haystack.partition_point(|h| h.to_bits() <= nb)
+        };
+        idx as u32
+    };
+    if threads <= 1 || needles.len() < 4096 {
+        needles.iter().map(one).collect()
+    } else {
+        crate::backend::parallel_for_each_chunk(needles.len(), threads, |r| {
+            needles[r].iter().map(one).collect::<Vec<u32>>()
+        })
+        .concat()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution};
+
+    fn sorted_hay(seed: u64, n: usize) -> Vec<i32> {
+        let mut h: Vec<i32> = generate(&mut Prng::new(seed), Distribution::DupHeavy, n);
+        h.sort_unstable();
+        h
+    }
+
+    #[test]
+    fn first_last_bracket_duplicates() {
+        let hay = vec![1i32, 3, 3, 3, 7];
+        assert_eq!(searchsorted_first(&Backend::Native, &hay, &[3]).unwrap(), vec![1]);
+        assert_eq!(searchsorted_last(&Backend::Native, &hay, &[3]).unwrap(), vec![4]);
+        assert_eq!(searchsorted_first(&Backend::Native, &hay, &[0]).unwrap(), vec![0]);
+        assert_eq!(searchsorted_last(&Backend::Native, &hay, &[9]).unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn matches_std_partition_point() {
+        let hay = sorted_hay(1, 5000);
+        let needles: Vec<i32> = generate(&mut Prng::new(2), Distribution::Uniform, 1000);
+        for b in [Backend::Native, Backend::Threaded(4)] {
+            let f = searchsorted_first(&b, &hay, &needles).unwrap();
+            let l = searchsorted_last(&b, &hay, &needles).unwrap();
+            for (i, nd) in needles.iter().enumerate() {
+                assert_eq!(f[i] as usize, hay.partition_point(|&h| h < *nd));
+                assert_eq!(l[i] as usize, hay.partition_point(|&h| h <= *nd));
+            }
+        }
+    }
+
+    #[test]
+    fn float_total_order_on_infinities() {
+        let hay = vec![f32::NEG_INFINITY, -1.0, 0.0, 1.0, f32::INFINITY];
+        let f = searchsorted_first(&Backend::Native, &hay, &[f32::INFINITY]).unwrap();
+        assert_eq!(f, vec![4]);
+        let l = searchsorted_last(&Backend::Native, &hay, &[f32::NEG_INFINITY]).unwrap();
+        assert_eq!(l, vec![1]);
+    }
+
+    #[test]
+    fn partition_counts_sum_to_n() {
+        // The SIHSort property: splitter ranks partition the shard.
+        let hay = sorted_hay(3, 4096);
+        let splitters = vec![-500_000i32, 0, 500_000];
+        let cuts = searchsorted_last(&Backend::Native, &hay, &splitters).unwrap();
+        assert!(cuts.windows(2).all(|w| w[0] <= w[1]));
+        assert!(*cuts.last().unwrap() as usize <= hay.len());
+    }
+}

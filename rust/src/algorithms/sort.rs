@@ -1,0 +1,153 @@
+//! `merge_sort` / `merge_sort_by_key` (paper §II-B).
+//!
+//! * Native: stable std sort on the total-order key image.
+//! * Threaded: per-chunk sort + k-way merge (the paper's CPU path is
+//!   statically-partitioned threads).
+//! * Device: the AOT bitonic merge-sort artifact via PJRT; i128 falls
+//!   back to the threaded path (no s128 in XLA — DESIGN.md §2).
+
+use crate::backend::{Backend, DeviceKey};
+use crate::baselines::kmerge;
+use crate::dtype::SortKey;
+
+/// Sort `xs` ascending (total order; NaN-safe for floats).
+pub fn sort<K: DeviceKey>(backend: &Backend, xs: &mut [K]) -> anyhow::Result<()> {
+    match backend {
+        Backend::Native => {
+            xs.sort_by(|a, b| a.cmp_total(b));
+            Ok(())
+        }
+        Backend::Threaded(t) => {
+            threaded_sort(xs, *t);
+            Ok(())
+        }
+        Backend::Device(dev) => {
+            if K::XLA {
+                dev.sort(xs)
+            } else {
+                // Device fallback for i128: host merge path (the "AK" code
+                // still owns the shard; only the engine differs).
+                threaded_sort(xs, 1);
+                Ok(())
+            }
+        }
+    }
+}
+
+fn threaded_sort<K: SortKey>(xs: &mut [K], threads: usize) {
+    let t = threads.max(1);
+    if t == 1 || xs.len() < 4096 {
+        xs.sort_by(|a, b| a.cmp_total(b));
+        return;
+    }
+    crate::backend::parallel_chunks(xs, t, |_, chunk| {
+        chunk.sort_by(|a, b| a.cmp_total(b));
+    });
+    // Merge the t sorted chunks (one scratch copy, then k-way merge).
+    let ranges = crate::backend::threaded::split_ranges(xs.len(), t);
+    let snapshot: Vec<K> = xs.to_vec();
+    let refs: Vec<&[K]> = ranges.iter().map(|r| &snapshot[r.clone()]).collect();
+    let merged = kmerge(&refs);
+    xs.copy_from_slice(&merged);
+}
+
+/// Sort `keys` ascending carrying `vals` along (payload sort).
+/// Stable: equal keys keep their input order.
+pub fn sort_by_key<K: DeviceKey, V: Copy + Send + Sync>(
+    backend: &Backend,
+    keys: &mut [K],
+    vals: &mut [V],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(keys.len() == vals.len(), "key/val length mismatch");
+    let n = keys.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    // Device path only exists for i32 payloads within one size class;
+    // general payloads go through an index permutation (native work is
+    // O(n) scatter either way).
+    let perm = super::sortperm::sortperm(backend, keys)?;
+    apply_permutation(keys, &perm);
+    apply_permutation(vals, &perm);
+    Ok(())
+}
+
+/// Apply `perm` (out-of-place gather) to `xs`.
+pub fn apply_permutation<T: Copy>(xs: &mut [T], perm: &[u32]) {
+    debug_assert_eq!(xs.len(), perm.len());
+    let src = xs.to_vec();
+    for (dst, &p) in xs.iter_mut().zip(perm.iter()) {
+        *dst = src[p as usize];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::is_sorted_total;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution, KeyGen};
+
+    fn hosts() -> Vec<Backend> {
+        vec![Backend::Native, Backend::Threaded(4)]
+    }
+
+    fn check_host<K: KeyGen + PartialEq + DeviceKey>(seed: u64, n: usize) {
+        for b in hosts() {
+            for dist in [Distribution::Uniform, Distribution::Reverse, Distribution::DupHeavy] {
+                let orig: Vec<K> = generate(&mut Prng::new(seed), dist, n);
+                let mut xs = orig.clone();
+                sort(&b, &mut xs).unwrap();
+                let mut want = orig.clone();
+                want.sort_by(|a, b| a.cmp_total(b));
+                assert!(xs == want, "{b:?} {dist:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn host_backends_i32() {
+        check_host::<i32>(1, 10_000);
+    }
+
+    #[test]
+    fn host_backends_i128() {
+        check_host::<i128>(2, 5000);
+    }
+
+    #[test]
+    fn host_backends_f64() {
+        check_host::<f64>(3, 8000);
+    }
+
+    #[test]
+    fn sort_by_key_carries_payloads() {
+        let keys_orig: Vec<i32> = generate(&mut Prng::new(4), Distribution::Uniform, 3000);
+        for b in hosts() {
+            let mut keys = keys_orig.clone();
+            let mut vals: Vec<usize> = (0..keys.len()).collect();
+            sort_by_key(&b, &mut keys, &mut vals).unwrap();
+            assert!(is_sorted_total(&keys));
+            for (k, v) in keys.iter().zip(&vals) {
+                assert_eq!(*k, keys_orig[*v]);
+            }
+        }
+    }
+
+    #[test]
+    fn stability_of_by_key() {
+        let keys_orig = vec![3i32, 1, 3, 1, 3];
+        let mut keys = keys_orig.clone();
+        let mut vals: Vec<usize> = (0..5).collect();
+        sort_by_key(&Backend::Native, &mut keys, &mut vals).unwrap();
+        assert_eq!(keys, vec![1, 1, 3, 3, 3]);
+        assert_eq!(vals, vec![1, 3, 0, 2, 4]); // equal keys keep input order
+    }
+
+    #[test]
+    fn permutation_application() {
+        let mut xs = vec![10, 20, 30];
+        apply_permutation(&mut xs, &[2, 0, 1]);
+        assert_eq!(xs, vec![30, 10, 20]);
+    }
+}

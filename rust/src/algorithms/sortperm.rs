@@ -1,0 +1,107 @@
+//! `sortperm` / `sortperm_lowmem` (paper §II-B): the index permutation
+//! that sorts a collection — the primitive the paper notes is *absent*
+//! from Kokkos/RAJA without extra copies.
+//!
+//! * `sortperm`: key-value sort of (keys, iota) — faster, but materialises
+//!   a key copy (the paper's "50% more memory" variant).
+//! * `sortperm_lowmem`: argsort by sorting indices with a key-indexed
+//!   comparator — no key copy, slightly slower (more indirection).
+//!
+//! Device path uses the `sort_pairs` artifact when the dtype and size
+//! class allow; otherwise falls back to the host algorithm.
+
+use crate::backend::{Backend, DeviceKey};
+use crate::dtype::SortKey;
+
+/// Permutation `p` such that `xs[p[0]] <= xs[p[1]] <= ...` (stable).
+pub fn sortperm<K: DeviceKey>(backend: &Backend, xs: &[K]) -> anyhow::Result<Vec<u32>> {
+    anyhow::ensure!(xs.len() <= u32::MAX as usize, "sortperm index space is u32");
+    match backend {
+        Backend::Native => Ok(host_sortperm(xs, 1)),
+        Backend::Threaded(t) => Ok(host_sortperm(xs, *t)),
+        Backend::Device(dev) => {
+            if K::XLA {
+                if let Ok(plan) = dev.registry().plan("sort_pairs", K::ELEM, xs.len()) {
+                    if plan.chunks == 1 {
+                        let vals: Vec<i32> = (0..xs.len() as i32).collect();
+                        let (_, perm) = dev.sort_pairs(xs, &vals)?;
+                        return Ok(perm.into_iter().map(|v| v as u32).collect());
+                    }
+                }
+            }
+            Ok(host_sortperm(xs, 1))
+        }
+    }
+}
+
+/// Lower-memory variant: sorts the index array in place with an indexed
+/// comparator (no (key, index) pair buffer).
+pub fn sortperm_lowmem<K: SortKey>(_backend: &Backend, xs: &[K]) -> anyhow::Result<Vec<u32>> {
+    anyhow::ensure!(xs.len() <= u32::MAX as usize, "sortperm index space is u32");
+    let mut idx: Vec<u32> = (0..xs.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        xs[a as usize]
+            .cmp_total(&xs[b as usize])
+            .then(a.cmp(&b)) // stability tie-break
+    });
+    Ok(idx)
+}
+
+fn host_sortperm<K: SortKey>(xs: &[K], threads: usize) -> Vec<u32> {
+    // (key, index) pairs — the paper's faster/more-memory variant.
+    let mut pairs: Vec<(u128, u32)> =
+        xs.iter().enumerate().map(|(i, k)| (k.to_bits(), i as u32)).collect();
+    if threads > 1 && pairs.len() >= 4096 {
+        crate::backend::parallel_chunks(&mut pairs, threads, |_, chunk| {
+            chunk.sort_unstable();
+        });
+        // Merge chunk runs (pairs are unique via the index component).
+        pairs.sort(); // final pass; already mostly sorted, std sort exploits runs
+    } else {
+        pairs.sort_unstable();
+    }
+    pairs.into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution};
+
+    #[test]
+    fn perm_sorts_input() {
+        let xs: Vec<i32> = generate(&mut Prng::new(1), Distribution::Uniform, 5000);
+        for b in [Backend::Native, Backend::Threaded(4)] {
+            let p = sortperm(&b, &xs).unwrap();
+            let sorted: Vec<i32> = p.iter().map(|&i| xs[i as usize]).collect();
+            assert!(crate::dtype::is_sorted_total(&sorted), "{b:?}");
+            // p is a permutation.
+            let mut q = p.clone();
+            q.sort_unstable();
+            assert!(q.iter().enumerate().all(|(i, &v)| v == i as u32));
+        }
+    }
+
+    #[test]
+    fn lowmem_matches_fast_path() {
+        let xs: Vec<f64> = generate(&mut Prng::new(2), Distribution::DupHeavy, 3000);
+        let a = sortperm(&Backend::Native, &xs).unwrap();
+        let b = sortperm_lowmem(&Backend::Native, &xs).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stable_on_duplicates() {
+        let xs = vec![5i32, 1, 5, 1];
+        let p = sortperm(&Backend::Native, &xs).unwrap();
+        assert_eq!(p, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e: Vec<i32> = vec![];
+        assert!(sortperm(&Backend::Native, &e).unwrap().is_empty());
+        assert_eq!(sortperm(&Backend::Native, &[7i32]).unwrap(), vec![0]);
+    }
+}

@@ -1,0 +1,399 @@
+//! Device operations: typed wrappers over the AOT artifact catalog.
+//!
+//! `DeviceKey` is the per-dtype bridge between `SortKey` and the XLA
+//! literal machinery; i128 reports `XLA = false` and every device call on
+//! it falls back to the caller's native path (DESIGN.md §2: XLA-CPU has
+//! no s128 — the vendor-special-casing effect the paper measures in
+//! Fig 2, here in its most extreme form).
+//!
+//! All entry points handle size-class padding internally: sorts pad with
+//! the dtype maximum, scans/reduces with the op identity, and requests
+//! beyond the largest class are chunked and recombined on the host
+//! (k-way merge for sorts, fold for reduces, carry propagation for
+//! scans) — the standard out-of-core pattern for bounded device memory.
+
+use xla::Literal;
+
+use crate::baselines::kmerge;
+use crate::dtype::SortKey;
+use crate::runtime::{lit_from_slice, lit_to_vec, Registry};
+
+/// Per-dtype device capability + literal conversions.
+pub trait DeviceKey: SortKey {
+    /// Does an XLA artifact family exist for this dtype?
+    const XLA: bool;
+    fn to_literal(xs: &[Self]) -> anyhow::Result<Literal>;
+    fn from_literal(lit: &Literal) -> anyhow::Result<Vec<Self>>;
+}
+
+macro_rules! device_key {
+    ($ty:ty) => {
+        impl DeviceKey for $ty {
+            const XLA: bool = true;
+            fn to_literal(xs: &[Self]) -> anyhow::Result<Literal> {
+                lit_from_slice(xs)
+            }
+            fn from_literal(lit: &Literal) -> anyhow::Result<Vec<Self>> {
+                lit_to_vec(lit)
+            }
+        }
+    };
+}
+
+device_key!(i16);
+device_key!(i32);
+device_key!(i64);
+device_key!(f32);
+device_key!(f64);
+
+impl DeviceKey for i128 {
+    const XLA: bool = false;
+    fn to_literal(_: &[Self]) -> anyhow::Result<Literal> {
+        anyhow::bail!("i128 has no XLA artifact family (s128 unsupported by XLA-CPU)")
+    }
+    fn from_literal(_: &Literal) -> anyhow::Result<Vec<Self>> {
+        anyhow::bail!("i128 has no XLA artifact family")
+    }
+}
+
+/// Typed device operations bound to an artifact [`Registry`].
+#[derive(Clone)]
+pub struct DeviceOps {
+    reg: Registry,
+}
+
+impl DeviceOps {
+    pub fn new(reg: Registry) -> Self {
+        Self { reg }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.reg
+    }
+
+    /// Sort ascending on the device. Pads to the selected size class with
+    /// the dtype max; shards larger than the largest class are sorted in
+    /// chunks and k-way merged on the host.
+    pub fn sort<K: DeviceKey>(&self, xs: &mut [K]) -> anyhow::Result<()> {
+        anyhow::ensure!(K::XLA, "dtype {} not device-supported", K::ELEM);
+        let n = xs.len();
+        if n <= 1 {
+            return Ok(());
+        }
+        let plan = self.reg.plan("sort", K::ELEM, n)?;
+        let cap = plan.chunk_capacity();
+        if plan.chunks == 1 {
+            let sorted = self.sort_chunk(&xs[..], cap)?;
+            xs.copy_from_slice(&sorted[..n]);
+            return Ok(());
+        }
+        // Out-of-core: sort class-sized chunks, merge on host.
+        let mut runs: Vec<Vec<K>> = Vec::with_capacity(plan.chunks);
+        for chunk in xs.chunks(cap) {
+            let mut sorted = self.sort_chunk(chunk, cap)?;
+            sorted.truncate(chunk.len());
+            runs.push(sorted);
+        }
+        let refs: Vec<&[K]> = runs.iter().map(|r| r.as_slice()).collect();
+        let merged = kmerge(&refs);
+        xs.copy_from_slice(&merged);
+        Ok(())
+    }
+
+    fn sort_chunk<K: DeviceKey>(&self, xs: &[K], cap: usize) -> anyhow::Result<Vec<K>> {
+        let name = artifact_name("sort", K::ELEM, cap);
+        let mut padded = xs.to_vec();
+        padded.resize(cap, K::max_key());
+        let out = self.reg.runtime().execute(&name, &[K::to_literal(&padded)?])?;
+        K::from_literal(&out[0])
+    }
+
+    /// Key-value sort (payloads i32). Returns sorted (keys, vals).
+    /// Single-class only: callers chunk at a higher level if needed.
+    pub fn sort_pairs<K: DeviceKey>(
+        &self,
+        keys: &[K],
+        vals: &[i32],
+    ) -> anyhow::Result<(Vec<K>, Vec<i32>)> {
+        anyhow::ensure!(K::XLA, "dtype {} not device-supported", K::ELEM);
+        anyhow::ensure!(keys.len() == vals.len());
+        let n = keys.len();
+        let plan = self.reg.plan("sort_pairs", K::ELEM, n)?;
+        anyhow::ensure!(
+            plan.chunks == 1,
+            "sort_pairs request {n} exceeds largest class {}",
+            plan.chunk_capacity()
+        );
+        let cap = plan.chunk_capacity();
+        let mut pk = keys.to_vec();
+        pk.resize(cap, K::max_key());
+        let mut pv = vals.to_vec();
+        pv.resize(cap, i32::MAX);
+        let out = self.reg.runtime().execute(
+            &artifact_name("sort_pairs", K::ELEM, cap),
+            &[K::to_literal(&pk)?, lit_from_slice(&pv)?],
+        )?;
+        let mut k = K::from_literal(&out[0])?;
+        let mut v = lit_to_vec::<i32>(&out[1])?;
+        k.truncate(n);
+        v.truncate(n);
+        Ok((k, v))
+    }
+
+    /// Inclusive or exclusive prefix-sum on the device (chunked with host
+    /// carry propagation beyond the largest class).
+    pub fn scan_add<K: DeviceKey + std::ops::Add<Output = K> + Default>(
+        &self,
+        xs: &[K],
+        inclusive: bool,
+    ) -> anyhow::Result<Vec<K>> {
+        anyhow::ensure!(K::XLA, "dtype {} not device-supported", K::ELEM);
+        let n = xs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let op = if inclusive { "scan_add_incl" } else { "scan_add_excl" };
+        let plan = self.reg.plan(op, K::ELEM, n)?;
+        let cap = plan.chunk_capacity();
+        let mut out: Vec<K> = Vec::with_capacity(n);
+        let mut carry = K::default();
+        for chunk in xs.chunks(cap) {
+            // Always compute the inclusive scan per chunk; exclusivity is
+            // applied when emitting (shift by one with the carry).
+            let mut padded = chunk.to_vec();
+            padded.resize(cap, K::default());
+            let res = self.reg.runtime().execute(
+                &artifact_name("scan_add_incl", K::ELEM, cap),
+                &[K::to_literal(&padded)?],
+            )?;
+            let scanned = K::from_literal(&res[0])?;
+            if inclusive {
+                out.extend(scanned[..chunk.len()].iter().map(|&v| v + carry));
+            } else {
+                out.push(carry);
+                out.extend(scanned[..chunk.len() - 1].iter().map(|&v| v + carry));
+            }
+            carry = carry + scanned[chunk.len() - 1];
+        }
+        Ok(out)
+    }
+
+    /// Scalar reduction on the device. `op` in {add, min, max}; pads with
+    /// the op identity; chunks fold on the host.
+    pub fn reduce<K: DeviceKey>(
+        &self,
+        xs: &[K],
+        op: &str,
+        identity: K,
+        fold: impl Fn(K, K) -> K,
+    ) -> anyhow::Result<K> {
+        anyhow::ensure!(K::XLA, "dtype {} not device-supported", K::ELEM);
+        if xs.is_empty() {
+            return Ok(identity);
+        }
+        let family = format!("reduce_{op}");
+        let plan = self.reg.plan(&family, K::ELEM, xs.len())?;
+        let cap = plan.chunk_capacity();
+        let mut acc = identity;
+        for chunk in xs.chunks(cap) {
+            let mut padded = chunk.to_vec();
+            padded.resize(cap, identity);
+            let res = self
+                .reg
+                .runtime()
+                .execute(&artifact_name(&family, K::ELEM, cap), &[K::to_literal(&padded)?])?;
+            let v = K::from_literal(&res[0])?;
+            acc = fold(acc, v[0]);
+        }
+        Ok(acc)
+    }
+
+    /// `switch_below` variant: device computes per-tile partials, the host
+    /// finishes the fold (paper §II-B: skips a device-side tree pass +
+    /// sync when n is small enough that launch overhead dominates).
+    pub fn reduce_partials_add<K: DeviceKey + std::ops::Add<Output = K> + Default>(
+        &self,
+        xs: &[K],
+    ) -> anyhow::Result<K> {
+        anyhow::ensure!(K::XLA, "dtype {} not device-supported", K::ELEM);
+        if xs.is_empty() {
+            return Ok(K::default());
+        }
+        let plan = self.reg.plan("reduce_partials_add", K::ELEM, xs.len())?;
+        let cap = plan.chunk_capacity();
+        let mut acc = K::default();
+        for chunk in xs.chunks(cap) {
+            let mut padded = chunk.to_vec();
+            padded.resize(cap, K::default());
+            let res = self.reg.runtime().execute(
+                &artifact_name("reduce_partials_add", K::ELEM, cap),
+                &[K::to_literal(&padded)?],
+            )?;
+            let parts = K::from_literal(&res[0])?;
+            acc = parts.into_iter().fold(acc, |a, b| a + b);
+        }
+        Ok(acc)
+    }
+
+    /// Insertion indices of `needles` into sorted `haystack` on device.
+    /// side: "first" (lower_bound) or "last" (upper_bound).
+    pub fn searchsorted<K: DeviceKey>(
+        &self,
+        haystack: &[K],
+        needles: &[K],
+        side: &str,
+    ) -> anyhow::Result<Vec<u32>> {
+        anyhow::ensure!(K::XLA, "dtype {} not device-supported", K::ELEM);
+        anyhow::ensure!(side == "first" || side == "last");
+        let family = format!("searchsorted_{side}");
+        let plan = self.reg.plan(&family, K::ELEM, haystack.len())?;
+        anyhow::ensure!(
+            plan.chunks == 1,
+            "haystack {} exceeds largest searchsorted class {}",
+            haystack.len(),
+            plan.chunk_capacity()
+        );
+        let cap = plan.chunk_capacity();
+        let info = &plan.artifact;
+        let needle_cap = info.needles.unwrap_or(1024);
+        let mut hay = haystack.to_vec();
+        hay.resize(cap, K::max_key());
+        let hay_lit = K::to_literal(&hay)?;
+        let exe = self.reg.runtime().get(&info.name)?;
+
+        let mut out = Vec::with_capacity(needles.len());
+        for chunk in needles.chunks(needle_cap) {
+            let mut nd = chunk.to_vec();
+            nd.resize(needle_cap, K::max_key());
+            let res = self
+                .reg
+                .runtime()
+                .execute_compiled(&exe, &[hay_lit.clone(), K::to_literal(&nd)?])?;
+            let idx = lit_to_vec::<i32>(&res[0])?;
+            // Clamp: padded sentinel lanes in the haystack tail must not
+            // be counted as real insertion slots.
+            out.extend(idx[..chunk.len()].iter().map(|&i| (i as usize).min(haystack.len()) as u32));
+        }
+        Ok(out)
+    }
+
+    /// Radial Basis Function kernel over `(3, n)` packed coordinates.
+    pub fn rbf_f32(&self, pts: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.elemwise_3n("rbf", pts, None)
+    }
+
+    /// LJG potential over two `(3, n)` position arrays + runtime consts.
+    pub fn ljg_f32(&self, p1: &[f32], p2: &[f32], consts: [f32; 4]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(p1.len() == p2.len());
+        self.elemwise_3n("ljg", p1, Some((p2, consts)))
+    }
+
+    fn elemwise_3n(
+        &self,
+        op: &str,
+        p1: &[f32],
+        extra: Option<(&[f32], [f32; 4])>,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(p1.len() % 3 == 0, "(3, n) layout required");
+        let n = p1.len() / 3;
+        let plan = self.reg.plan(op, crate::dtype::ElemType::F32, n)?;
+        let cap = plan.chunk_capacity();
+        let exe = self.reg.runtime().get(&plan.artifact.name)?;
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0usize;
+        while start < n {
+            let len = cap.min(n - start);
+            // Repack [x.., y.., z..] rows for this window, padded to cap.
+            let mut buf = vec![0.0f32; 3 * cap];
+            for row in 0..3 {
+                buf[row * cap..row * cap + len]
+                    .copy_from_slice(&p1[row * n + start..row * n + start + len]);
+            }
+            let mut inputs =
+                vec![crate::runtime::lit_from_slice_2d(&buf, 3, cap)?];
+            if let Some((p2, consts)) = extra {
+                let mut buf2 = vec![0.0f32; 3 * cap];
+                for row in 0..3 {
+                    buf2[row * cap..row * cap + len]
+                        .copy_from_slice(&p2[row * n + start..row * n + start + len]);
+                }
+                // Padded lanes: p1 == p2 == 0 -> r = 0 -> sigma/r = inf; keep
+                // them finite by separating the pads (x offset on p2).
+                for pad in len..cap {
+                    buf2[pad] = 1.0;
+                }
+                inputs.push(crate::runtime::lit_from_slice_2d(&buf2, 3, cap)?);
+                inputs.push(lit_from_slice(&consts)?);
+            }
+            let res = self.reg.runtime().execute_compiled(&exe, &inputs)?;
+            let v = lit_to_vec::<f32>(&res[0])?;
+            out.extend_from_slice(&v[..len]);
+            start += len;
+        }
+        Ok(out)
+    }
+
+    /// Chunked early-exit `any(x > t)` — the paper's two-algorithm design:
+    /// the device evaluates a conservative chunk predicate, the host stops
+    /// at the first hit.
+    pub fn any_gt_f32(&self, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
+        let plan = self.reg.plan("any_gt", crate::dtype::ElemType::F32, xs.len())?;
+        let cap = plan.chunk_capacity();
+        let exe = self.reg.runtime().get(&plan.artifact.name)?;
+        for chunk in xs.chunks(cap) {
+            let mut padded = chunk.to_vec();
+            padded.resize(cap, f32::NEG_INFINITY);
+            let res = self.reg.runtime().execute_compiled(
+                &exe,
+                &[lit_from_slice(&padded)?, crate::runtime::lit_scalar(threshold)?],
+            )?;
+            if lit_to_vec::<i32>(&res[0])?[0] != 0 {
+                return Ok(true); // early exit: remaining chunks never run
+            }
+        }
+        Ok(false)
+    }
+
+    /// Chunked early-exit `all(x > t)`.
+    pub fn all_gt_f32(&self, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
+        let plan = self.reg.plan("all_gt", crate::dtype::ElemType::F32, xs.len())?;
+        let cap = plan.chunk_capacity();
+        let exe = self.reg.runtime().get(&plan.artifact.name)?;
+        for chunk in xs.chunks(cap) {
+            let mut padded = chunk.to_vec();
+            padded.resize(cap, f32::INFINITY);
+            let res = self.reg.runtime().execute_compiled(
+                &exe,
+                &[lit_from_slice(&padded)?, crate::runtime::lit_scalar(threshold)?],
+            )?;
+            if lit_to_vec::<i32>(&res[0])?[0] == 0 {
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    }
+}
+
+/// `{op}_{dtype}_n{log2 n}` — must match `python/compile/aot.py`.
+pub fn artifact_name(op: &str, dtype: crate::dtype::ElemType, n: usize) -> String {
+    debug_assert!(n.is_power_of_two());
+    format!("{op}_{}_n{}", dtype.name(), n.trailing_zeros())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_match_catalog_convention() {
+        use crate::dtype::ElemType;
+        assert_eq!(artifact_name("sort", ElemType::I32, 1024), "sort_i32_n10");
+        assert_eq!(artifact_name("scan_add_incl", ElemType::F64, 1 << 17), "scan_add_incl_f64_n17");
+    }
+
+    #[test]
+    fn i128_reports_unsupported() {
+        assert!(!<i128 as DeviceKey>::XLA);
+        assert!(i128::to_literal(&[1i128]).is_err());
+    }
+}

@@ -1,0 +1,60 @@
+//! Execution backends for the algorithm suite.
+//!
+//! The paper dispatches on array type: CPU arrays hit Julia Base /
+//! threaded code, GPU arrays hit the transpiled kernels. Here the same
+//! API dispatches on [`Backend`]:
+//!
+//! * `Native` — single thread, idiomatic Rust ("Julia Base" / "C" rows of
+//!   Table II).
+//! * `Threaded(n)` — std-thread data parallelism ("C OpenMP" / AK-CPU
+//!   rows).
+//! * `Device` — the AOT Pallas/XLA artifacts through PJRT (the "AK GPU"
+//!   rows); per-dtype support is static via [`device::DeviceKey`], with
+//!   i128 falling back to native paths under the device model
+//!   (DESIGN.md §2).
+
+pub mod device;
+pub mod threaded;
+
+pub use device::{DeviceKey, DeviceOps};
+pub use threaded::{parallel_chunks, parallel_for_each_chunk};
+
+use crate::runtime::Registry;
+
+/// Which engine executes an algorithm call.
+#[derive(Clone)]
+pub enum Backend {
+    /// Single-thread host execution.
+    Native,
+    /// Host execution over `n` std threads.
+    Threaded(usize),
+    /// AOT artifact execution through PJRT.
+    Device(DeviceOps),
+}
+
+impl Backend {
+    pub fn device(reg: Registry) -> Backend {
+        Backend::Device(DeviceOps::new(reg))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Backend::Native => "native".to_string(),
+            Backend::Threaded(n) => format!("threaded({n})"),
+            Backend::Device(_) => "device".to_string(),
+        }
+    }
+
+    pub fn registry(&self) -> Option<&Registry> {
+        match self {
+            Backend::Device(d) => Some(d.registry()),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}

@@ -1,0 +1,119 @@
+//! Scoped std-thread data parallelism (rayon is unavailable offline).
+//!
+//! Mirrors the paper's `foreachindex` CPU path: static partitioning of
+//! the index space over a fixed thread count (the paper uses 10 threads;
+//! here the count is a parameter and the default adapts to the host).
+
+/// Default thread count (paper uses 10; capped by available parallelism).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 10)
+}
+
+/// Split `len` into `parts` contiguous ranges of near-equal size.
+pub fn split_ranges(len: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1).min(len.max(1));
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let sz = base + usize::from(i < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    out
+}
+
+/// Run `f(chunk_index, &mut chunk)` over disjoint chunks of `xs` on
+/// `threads` scoped threads.
+pub fn parallel_chunks<T: Send, F>(xs: &mut [T], threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = xs.len();
+    if threads <= 1 || len < 2 {
+        f(0, xs);
+        return;
+    }
+    let ranges = split_ranges(len, threads);
+    std::thread::scope(|s| {
+        let mut rest = xs;
+        let mut offset = 0usize;
+        for (i, r) in ranges.iter().enumerate() {
+            let (head, tail) = rest.split_at_mut(r.len());
+            rest = tail;
+            offset += r.len();
+            let _ = offset;
+            let f = &f;
+            s.spawn(move || f(i, head));
+        }
+    });
+}
+
+/// Run `f(range)` for each partition of `0..len` on scoped threads and
+/// collect the per-chunk results in order.
+pub fn parallel_for_each_chunk<R: Send, F>(len: usize, threads: usize, f: F) -> Vec<R>
+where
+    F: Fn(std::ops::Range<usize>) -> R + Sync,
+{
+    let ranges = split_ranges(len, threads);
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..ranges.len()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (slot, r) in out.iter_mut().zip(ranges.into_iter()) {
+            let f = &f;
+            s.spawn(move || *slot = Some(f(r)));
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_exactly() {
+        for (len, parts) in [(10usize, 3usize), (7, 7), (5, 10), (0, 4), (100, 1)] {
+            let rs = split_ranges(len, parts);
+            let total: usize = rs.iter().map(|r| r.len()).sum();
+            assert_eq!(total, len, "len={len} parts={parts}");
+            for w in rs.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_see_disjoint_data() {
+        let mut xs = vec![0u32; 1000];
+        parallel_chunks(&mut xs, 4, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v = i as u32 + 1;
+            }
+        });
+        assert!(xs.iter().all(|&v| (1..=4).contains(&v)));
+        // First and last chunks touched.
+        assert_eq!(xs[0], 1);
+        assert_eq!(*xs.last().unwrap(), 4);
+    }
+
+    #[test]
+    fn for_each_chunk_ordered_results() {
+        let sums = parallel_for_each_chunk(100, 3, |r| r.sum::<usize>());
+        let total: usize = sums.iter().sum();
+        assert_eq!(total, (0..100).sum::<usize>());
+        assert_eq!(sums.len(), 3);
+    }
+
+    #[test]
+    fn degenerate_thread_counts() {
+        let mut xs = vec![1i32; 8];
+        parallel_chunks(&mut xs, 0, |_, c| c.iter_mut().for_each(|v| *v += 1));
+        assert!(xs.iter().all(|&v| v == 2));
+        let r = parallel_for_each_chunk(0, 4, |r| r.len());
+        assert_eq!(r.iter().sum::<usize>(), 0);
+    }
+}

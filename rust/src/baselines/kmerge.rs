@@ -1,0 +1,189 @@
+//! K-way merge of sorted runs (loser-tree tournament).
+//!
+//! Used by (a) the device backend when a shard exceeds the largest sort
+//! artifact size class — sorted chunks are merged on the host — and
+//! (b) SIHSort's final phase, merging the sorted runs received from every
+//! peer rank (cheaper than the paper's full second local sort; both are
+//! implemented and ablated, see `mpisort`).
+
+use crate::dtype::SortKey;
+
+/// Merge ascending-sorted `runs` into one ascending vector.
+pub fn kmerge<K: SortKey>(runs: &[&[K]]) -> Vec<K> {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    kmerge_into(runs, &mut out);
+    out
+}
+
+/// Merge into a caller-provided buffer (cleared first). Allocation-free on
+/// the element path when `out` has capacity.
+pub fn kmerge_into<K: SortKey>(runs: &[&[K]], out: &mut Vec<K>) {
+    out.clear();
+    let live: Vec<&[K]> = runs.iter().copied().filter(|r| !r.is_empty()).collect();
+    match live.len() {
+        0 => return,
+        1 => {
+            out.extend_from_slice(live[0]);
+            return;
+        }
+        2 => {
+            merge2_into(live[0], live[1], out);
+            return;
+        }
+        _ => {}
+    }
+
+    // Loser tree over k runs: internal nodes hold the *loser* of each
+    // match; the winner bubbles to the root. Pop/replace is O(log k) with
+    // no branching on heap shape.
+    let k = live.len();
+    let mut idx = vec![0usize; k]; // next unconsumed element per run
+    let tree_size = k.next_power_of_two();
+    // leaders[i]: the run currently winning at leaf slot i (usize::MAX = exhausted).
+    const EXHAUSTED: u128 = u128::MAX;
+    let key_of = |run: usize, idx: &[usize]| -> u128 {
+        if run >= k || idx[run] >= live[run].len() {
+            EXHAUSTED
+        } else {
+            live[run][idx[run]].to_bits()
+        }
+    };
+
+    // Internal nodes: losers[1..tree_size]; winner propagated from leaves.
+    let mut losers = vec![usize::MAX; tree_size]; // run ids
+    // Build: play leaves pairwise up the tree.
+    let mut winner_at = vec![usize::MAX; 2 * tree_size];
+    for leaf in 0..tree_size {
+        winner_at[tree_size + leaf] = if leaf < k { leaf } else { usize::MAX };
+    }
+    for node in (1..tree_size).rev() {
+        let a = winner_at[2 * node];
+        let b = winner_at[2 * node + 1];
+        let (win, lose) = if key_of_or(a, &idx, &live, k) <= key_of_or(b, &idx, &live, k) {
+            (a, b)
+        } else {
+            (b, a)
+        };
+        winner_at[node] = win;
+        losers[node] = lose;
+    }
+    let mut winner = winner_at[1];
+
+    while winner != usize::MAX && key_of(winner, &idx) != EXHAUSTED {
+        out.push(live[winner][idx[winner]]);
+        idx[winner] += 1;
+        // Replay from the winner's leaf up to the root.
+        let mut node = (tree_size + winner) / 2;
+        let mut cur = winner;
+        while node >= 1 {
+            let opp = losers[node];
+            if key_of_or(opp, &idx, &live, k) < key_of_or(cur, &idx, &live, k) {
+                losers[node] = cur;
+                cur = opp;
+            }
+            if node == 1 {
+                break;
+            }
+            node /= 2;
+        }
+        winner = cur;
+    }
+}
+
+#[inline]
+fn key_of_or<K: SortKey>(run: usize, idx: &[usize], live: &[&[K]], k: usize) -> u128 {
+    if run == usize::MAX || run >= k || idx[run] >= live[run].len() {
+        u128::MAX
+    } else {
+        live[run][idx[run]].to_bits()
+    }
+}
+
+#[inline]
+fn merge2_into<K: SortKey>(a: &[K], b: &[K], out: &mut Vec<K>) {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i].to_bits() <= b[j].to_bits() {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::is_sorted_total;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution, KeyGen};
+
+    fn split_sorted<K: KeyGen>(seed: u64, n: usize, k: usize) -> (Vec<Vec<K>>, Vec<K>) {
+        let xs: Vec<K> = generate(&mut Prng::new(seed), Distribution::Uniform, n);
+        let mut want = xs.clone();
+        want.sort_unstable_by(|a, b| a.cmp_total(b));
+        let mut rng = Prng::new(seed + 1);
+        let mut runs: Vec<Vec<K>> = (0..k).map(|_| Vec::new()).collect();
+        for x in xs {
+            let r = rng.below(k as u64) as usize;
+            runs[r].push(x);
+        }
+        for r in &mut runs {
+            r.sort_unstable_by(|a, b| a.cmp_total(b));
+        }
+        (runs, want)
+    }
+
+    #[test]
+    fn merges_various_k() {
+        for k in [1usize, 2, 3, 4, 5, 7, 8, 13, 16, 33] {
+            let (runs, want) = split_sorted::<i32>(100 + k as u64, 5000, k);
+            let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+            let got = kmerge(&refs);
+            assert_eq!(got, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_runs() {
+        let a = vec![1i32, 5, 9];
+        let b: Vec<i32> = vec![];
+        let c = vec![2i32, 3];
+        let got = kmerge(&[&a, &b, &c]);
+        assert_eq!(got, vec![1, 2, 3, 5, 9]);
+        let empty: Vec<&[i32]> = vec![];
+        assert!(kmerge(&empty).is_empty());
+    }
+
+    #[test]
+    fn floats_total_order() {
+        let (runs, want) = split_sorted::<f64>(7, 3000, 5);
+        let refs: Vec<&[f64]> = runs.iter().map(|r| r.as_slice()).collect();
+        let got = kmerge(&refs);
+        assert!(is_sorted_total(&got));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn i128_wide_keys() {
+        let (runs, want) = split_sorted::<i128>(8, 2000, 9);
+        let refs: Vec<&[i128]> = runs.iter().map(|r| r.as_slice()).collect();
+        assert_eq!(kmerge(&refs), want);
+    }
+
+    #[test]
+    fn into_buffer_reuse() {
+        let (runs, want) = split_sorted::<i32>(9, 1000, 4);
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        let mut buf = Vec::new();
+        kmerge_into(&refs, &mut buf);
+        assert_eq!(buf, want);
+        kmerge_into(&refs, &mut buf); // reused
+        assert_eq!(buf, want);
+    }
+}

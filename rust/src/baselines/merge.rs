@@ -1,0 +1,147 @@
+//! Bottom-up merge sort — the "Thrust merge" (TM) baseline.
+//!
+//! Iterative (no recursion), one scratch buffer, ping-pong between runs.
+//! Insertion sort below a small cutoff seeds the initial runs, mirroring
+//! how production merge sorts (incl. Thrust's) seed with an in-block sort.
+
+use crate::dtype::SortKey;
+
+const RUN: usize = 32;
+
+/// Sort in place, ascending under the total order. Stable.
+pub fn merge_sort<K: SortKey>(xs: &mut [K]) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    // Seed runs with insertion sort.
+    let mut start = 0;
+    while start < n {
+        let end = (start + RUN).min(n);
+        insertion_sort(&mut xs[start..end]);
+        start = end;
+    }
+    if n <= RUN {
+        return;
+    }
+
+    let mut buf: Vec<K> = xs.to_vec();
+    merge_rounds(xs, &mut buf, RUN);
+}
+
+fn merge_rounds<K: SortKey>(xs: &mut [K], buf: &mut [K], seed: usize) {
+    let n = xs.len();
+    let mut width = seed;
+    let mut in_xs = true;
+    while width < n {
+        {
+            let (src, dst): (&mut [K], &mut [K]) =
+                if in_xs { (&mut *xs, &mut *buf) } else { (&mut *buf, &mut *xs) };
+            let mut lo = 0;
+            while lo < n {
+                let mid = (lo + width).min(n);
+                let hi = (lo + 2 * width).min(n);
+                merge_into(&src[lo..mid], &src[mid..hi], &mut dst[lo..hi]);
+                lo = hi;
+            }
+        }
+        in_xs = !in_xs;
+        width *= 2;
+    }
+    if !in_xs {
+        xs.copy_from_slice(buf);
+    }
+}
+
+#[inline]
+fn merge_into<K: SortKey>(a: &[K], b: &[K], out: &mut [K]) {
+    debug_assert_eq!(a.len() + b.len(), out.len());
+    // Hot loop: both runs non-empty — one comparison, no tail checks
+    // (§Perf L3: the original per-slot dual-bounds form ran at 34 MB/s;
+    // this + bulk tail copies reaches ~3x that on i32).
+    let (mut i, mut j, mut o) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        let av = a[i];
+        let bv = b[j];
+        // Branchless select: the comparison outcome is ~random on real
+        // merges, so a cmov beats a 50%-mispredicted branch (§Perf L3).
+        // `<=` keeps stability (equal keys take the left run first).
+        let take_a = av.to_bits() <= bv.to_bits();
+        out[o] = if take_a { av } else { bv };
+        i += take_a as usize;
+        j += !take_a as usize;
+        o += 1;
+    }
+    out[o..o + (a.len() - i)].copy_from_slice(&a[i..]);
+    let o2 = o + (a.len() - i);
+    out[o2..o2 + (b.len() - j)].copy_from_slice(&b[j..]);
+}
+
+#[inline]
+fn insertion_sort<K: SortKey>(xs: &mut [K]) {
+    for i in 1..xs.len() {
+        let v = xs[i];
+        let vb = v.to_bits();
+        let mut j = i;
+        while j > 0 && xs[j - 1].to_bits() > vb {
+            xs[j] = xs[j - 1];
+            j -= 1;
+        }
+        xs[j] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::is_sorted_total;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution, KeyGen};
+
+    fn check<K: KeyGen + PartialEq>(seed: u64, n: usize) {
+        for dist in Distribution::ALL {
+            let xs: Vec<K> = generate(&mut Prng::new(seed), dist, n);
+            let mut got = xs.clone();
+            merge_sort(&mut got);
+            let mut want = xs.clone();
+            want.sort_unstable_by(|a, b| a.cmp_total(b));
+            assert!(is_sorted_total(&got), "{dist:?}");
+            assert!(got == want, "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn i32_all_dists() {
+        check::<i32>(11, 3000);
+    }
+
+    #[test]
+    fn i128_all_dists() {
+        check::<i128>(12, 1000);
+    }
+
+    #[test]
+    fn f64_all_dists() {
+        check::<f64>(13, 2500);
+    }
+
+    #[test]
+    fn boundary_sizes() {
+        for n in [0usize, 1, 2, 31, 32, 33, 63, 64, 65, 127, 1000] {
+            let xs: Vec<i32> = generate(&mut Prng::new(n as u64), Distribution::Uniform, n);
+            let mut got = xs.clone();
+            merge_sort(&mut got);
+            assert!(is_sorted_total(&got), "n={n}");
+        }
+    }
+
+    #[test]
+    fn agrees_with_radix() {
+        let xs: Vec<i64> = generate(&mut Prng::new(14), Distribution::Uniform, 4096);
+        let mut a = xs.clone();
+        let mut b = xs;
+        merge_sort(&mut a);
+        super::super::radix::radix_sort(&mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,17 @@
+//! Vendor-primitive baselines: the role NVIDIA Thrust plays in the paper.
+//!
+//! The paper exposes Thrust's merge sort ("TM") and radix sort ("TR") via
+//! C FFI and benchmarks them against the AcceleratedKernels merge sort.
+//! Here the same slot is filled by hand-optimised native Rust sorts:
+//! an LSD radix sort (special-cased per key width, exactly the property
+//! that makes Thrust win on small integer types in Fig 2) and a bottom-up
+//! merge sort. `kmerge` is the shared k-way merge used by chunked device
+//! sorting and SIHSort's final phase.
+
+pub mod kmerge;
+pub mod merge;
+pub mod radix;
+
+pub use kmerge::kmerge;
+pub use merge::merge_sort;
+pub use radix::radix_sort;

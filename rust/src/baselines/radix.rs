@@ -1,0 +1,195 @@
+//! LSD radix sort over the `SortKey` bit image — the "Thrust radix" (TR)
+//! baseline.
+//!
+//! 8-bit digits, one counting pass per key byte, ping-pong buffers.
+//! Works for every paper dtype including i128 and (via the sign-flip bit
+//! image) floats with IEEE total order. Like Thrust, cost scales with the
+//! key *width*: i16 takes 2 passes, i128 takes 16 — which is exactly the
+//! Fig 2 effect where radix dominates on small types and loses its edge
+//! on big ones.
+//!
+//! `radix_sort_by_digit_bits` exposes the digit width for the ablation
+//! bench (8 vs 11 vs 16 bits).
+
+use crate::dtype::SortKey;
+
+/// Sort in place, ascending under the total order.
+pub fn radix_sort<K: SortKey>(xs: &mut [K]) {
+    radix_sort_by_digit_bits(xs, 8);
+}
+
+/// Radix sort with a configurable digit width in {1..16} bits.
+pub fn radix_sort_by_digit_bits<K: SortKey>(xs: &mut [K], digit_bits: u32) {
+    assert!((1..=16).contains(&digit_bits), "digit width {digit_bits}");
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    // Small inputs: comparison sort beats counting-pass overheads.
+    if n < 64 {
+        xs.sort_unstable_by(|a, b| a.cmp_total(b));
+        return;
+    }
+
+    // §Perf L3: keys up to 8 bytes run the passes on a u64 bit image —
+    // the u128 shifts/masks of the generic path cost ~35% throughput on
+    // i32 (EXPERIMENTS.md §Perf).
+    if K::KEY_BYTES <= 8 {
+        radix_passes::<K, u64>(xs, digit_bits, |k| k.to_bits() as u64);
+    } else {
+        radix_passes::<K, u128>(xs, digit_bits, |k| k.to_bits());
+    }
+}
+
+/// Unsigned image abstraction for the pass loop.
+trait RadixImage: Copy {
+    fn digit(self, shift: u32, mask: u64) -> usize;
+}
+
+impl RadixImage for u64 {
+    #[inline(always)]
+    fn digit(self, shift: u32, mask: u64) -> usize {
+        ((self >> shift) & mask) as usize
+    }
+}
+
+impl RadixImage for u128 {
+    #[inline(always)]
+    fn digit(self, shift: u32, mask: u64) -> usize {
+        ((self >> shift) as u64 & mask) as usize
+    }
+}
+
+fn radix_passes<K: SortKey, U: RadixImage>(
+    xs: &mut [K],
+    digit_bits: u32,
+    image: impl Fn(K) -> U,
+) {
+    let n = xs.len();
+    let key_bits = (K::KEY_BYTES * 8) as u32;
+    let passes = key_bits.div_ceil(digit_bits);
+    let radix = 1usize << digit_bits;
+    let mask = (radix - 1) as u64;
+
+    // Keys stay in place (materialising (image, key) pairs was tried and
+    // *lost* ~3x to the extra memory traffic — §Perf L3 iteration log);
+    // the image is recomputed per access, which for integers is one xor.
+    let mut src: Vec<K> = xs.to_vec();
+    let mut dst: Vec<K> = Vec::with_capacity(n);
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        dst.set_len(n);
+    }
+
+    let mut counts = vec![0usize; radix];
+    for pass in 0..passes {
+        let shift = pass * digit_bits;
+        // Skip passes whose digit is constant across the input (common for
+        // narrow-range data — a standard radix optimisation).
+        counts.iter_mut().for_each(|c| *c = 0);
+        for x in &src {
+            counts[image(*x).digit(shift, mask)] += 1;
+        }
+        if counts.iter().any(|&c| c == n) {
+            continue;
+        }
+        // Exclusive prefix -> bucket offsets.
+        let mut sum = 0usize;
+        for c in counts.iter_mut() {
+            let t = *c;
+            *c = sum;
+            sum += t;
+        }
+        for &x in src.iter() {
+            let slot = &mut counts[image(x).digit(shift, mask)];
+            dst[*slot] = x;
+            *slot += 1;
+        }
+        std::mem::swap(&mut src, &mut dst);
+    }
+    xs.copy_from_slice(&src);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::is_sorted_total;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution, KeyGen};
+
+    fn check<K: KeyGen + PartialEq>(seed: u64, n: usize) {
+        for dist in Distribution::ALL {
+            let xs: Vec<K> = generate(&mut Prng::new(seed), dist, n);
+            let mut got = xs.clone();
+            radix_sort(&mut got);
+            let mut want = xs.clone();
+            want.sort_unstable_by(|a, b| a.cmp_total(b));
+            assert!(is_sorted_total(&got), "{dist:?}");
+            assert!(got == want, "{dist:?}");
+        }
+    }
+
+    #[test]
+    fn i16_all_dists() {
+        check::<i16>(1, 3000);
+    }
+
+    #[test]
+    fn i32_all_dists() {
+        check::<i32>(2, 3000);
+    }
+
+    #[test]
+    fn i64_all_dists() {
+        check::<i64>(3, 2000);
+    }
+
+    #[test]
+    fn i128_all_dists() {
+        check::<i128>(4, 1500);
+    }
+
+    #[test]
+    fn f32_all_dists() {
+        check::<f32>(5, 3000);
+    }
+
+    #[test]
+    fn f64_all_dists() {
+        check::<f64>(6, 2000);
+    }
+
+    #[test]
+    fn negative_and_special_floats() {
+        let mut xs = vec![3.5f32, -0.0, 0.0, f32::INFINITY, -2.5, f32::NEG_INFINITY, 1e-40];
+        radix_sort(&mut xs);
+        assert_eq!(xs[0], f32::NEG_INFINITY);
+        assert_eq!(*xs.last().unwrap(), f32::INFINITY);
+        assert!(is_sorted_total(&xs));
+    }
+
+    #[test]
+    fn digit_widths_agree() {
+        let xs: Vec<i64> = generate(&mut Prng::new(7), Distribution::Uniform, 5000);
+        let mut a = xs.clone();
+        let mut b = xs.clone();
+        let mut c = xs;
+        radix_sort_by_digit_bits(&mut a, 8);
+        radix_sort_by_digit_bits(&mut b, 11);
+        radix_sort_by_digit_bits(&mut c, 16);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        let mut e: Vec<i32> = vec![];
+        radix_sort(&mut e);
+        let mut one = vec![5i32];
+        radix_sort(&mut one);
+        assert_eq!(one, vec![5]);
+        let mut two = vec![7i32, -7];
+        radix_sort(&mut two);
+        assert_eq!(two, vec![-7, 7]);
+    }
+}

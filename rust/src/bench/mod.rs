@@ -1,0 +1,12 @@
+//! In-repo micro-benchmark harness (criterion is unavailable offline —
+//! DESIGN.md §9).
+//!
+//! Criterion-like protocol: warm-up phase, then adaptive sampling until
+//! either `max_samples` measurements or the time budget is reached; each
+//! sample may batch several iterations when the routine is fast. Results
+//! carry mean ± σ (the paper's Table II format) and optional processed
+//! bytes for GB/s reporting.
+
+pub mod runner;
+
+pub use runner::{benchmark, benchmark_with_setup, BenchOpts, BenchResult, Bencher};

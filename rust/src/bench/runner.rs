@@ -1,0 +1,261 @@
+//! The measurement engine.
+
+use std::time::{Duration, Instant};
+
+use crate::util::{fmt_duration, fmt_throughput, Summary};
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    /// Warm-up budget before any sample is recorded.
+    pub warmup: Duration,
+    /// Total sampling budget.
+    pub budget: Duration,
+    /// Minimum / maximum number of recorded samples.
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(3),
+            min_samples: 5,
+            max_samples: 50,
+        }
+    }
+}
+
+impl BenchOpts {
+    /// A faster profile for CI / smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(700),
+            min_samples: 3,
+            max_samples: 15,
+        }
+    }
+
+    /// Scale budgets by the `AK_BENCH_SCALE` env var (e.g. 0.2 for smoke).
+    pub fn scaled_from_env(mut self) -> Self {
+        if let Ok(s) = std::env::var("AK_BENCH_SCALE") {
+            if let Ok(f) = s.parse::<f64>() {
+                let f = f.clamp(0.01, 100.0);
+                self.warmup = Duration::from_secs_f64(self.warmup.as_secs_f64() * f);
+                self.budget = Duration::from_secs_f64(self.budget.as_secs_f64() * f);
+            }
+        }
+        self
+    }
+}
+
+/// One benchmark's outcome.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time statistics (seconds).
+    pub time: Summary,
+    /// Bytes processed per iteration, if meaningful (enables GB/s).
+    pub bytes: Option<f64>,
+    pub iterations: u64,
+}
+
+impl BenchResult {
+    pub fn throughput_bps(&self) -> Option<f64> {
+        self.bytes.filter(|_| self.time.mean > 0.0).map(|b| b / self.time.mean)
+    }
+
+    /// One human-readable row: `name  mean ±σ  [GB/s]`.
+    pub fn row(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>12} ±{:>10}  (n={})",
+            self.name,
+            fmt_duration(self.time.mean),
+            fmt_duration(self.time.std),
+            self.time.n
+        );
+        if let Some(bps) = self.throughput_bps() {
+            s.push_str(&format!("  {}", fmt_throughput(bps)));
+        }
+        s
+    }
+}
+
+/// Measure `routine` (no per-iteration setup). Batches iterations when the
+/// routine is faster than ~50 µs so timer overhead stays negligible.
+pub fn benchmark<F: FnMut()>(name: &str, opts: &BenchOpts, mut routine: F) -> BenchResult {
+    // Warm-up and batch-size estimation.
+    let w0 = Instant::now();
+    let mut once = Duration::ZERO;
+    let mut warm_iters: u64 = 0;
+    while w0.elapsed() < opts.warmup || warm_iters == 0 {
+        let t = Instant::now();
+        routine();
+        once = t.elapsed();
+        warm_iters += 1;
+    }
+    let batch = if once < Duration::from_micros(50) {
+        (Duration::from_micros(200).as_nanos() / once.as_nanos().max(1)).max(1) as u64
+    } else {
+        1
+    };
+
+    let mut samples = Vec::new();
+    let mut iterations = warm_iters;
+    let s0 = Instant::now();
+    while (samples.len() < opts.min_samples)
+        || (samples.len() < opts.max_samples && s0.elapsed() < opts.budget)
+    {
+        let t = Instant::now();
+        for _ in 0..batch {
+            routine();
+        }
+        let dt = t.elapsed().as_secs_f64() / batch as f64;
+        samples.push(dt);
+        iterations += batch;
+    }
+    BenchResult { name: name.to_string(), time: Summary::of(&samples), bytes: None, iterations }
+}
+
+/// Measure with fresh per-iteration state: `setup` is excluded from the
+/// timing (needed for in-place sorts, which consume their input).
+pub fn benchmark_with_setup<S, T, F>(
+    name: &str,
+    opts: &BenchOpts,
+    mut setup: S,
+    mut routine: F,
+) -> BenchResult
+where
+    S: FnMut() -> T,
+    F: FnMut(T),
+{
+    // Warm-up.
+    let w0 = Instant::now();
+    let mut warm_iters = 0u64;
+    loop {
+        let input = setup();
+        let t = Instant::now();
+        routine(input);
+        let _ = t.elapsed();
+        warm_iters += 1;
+        if w0.elapsed() >= opts.warmup && warm_iters > 0 {
+            break;
+        }
+    }
+
+    let mut samples = Vec::new();
+    let s0 = Instant::now();
+    while (samples.len() < opts.min_samples)
+        || (samples.len() < opts.max_samples && s0.elapsed() < opts.budget)
+    {
+        let input = setup();
+        let t = Instant::now();
+        routine(input);
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        time: Summary::of(&samples),
+        bytes: None,
+        iterations: warm_iters + samples.len() as u64,
+    }
+}
+
+/// Collects results and renders a table (one per paper table/figure).
+#[derive(Default)]
+pub struct Bencher {
+    pub opts: BenchOpts,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(opts: BenchOpts) -> Self {
+        Self { opts, results: Vec::new() }
+    }
+
+    /// Run and record; `bytes` enables GB/s in the printed row.
+    pub fn run<F: FnMut()>(&mut self, name: &str, bytes: Option<f64>, routine: F) -> &BenchResult {
+        let mut r = benchmark(name, &self.opts, routine);
+        r.bytes = bytes;
+        eprintln!("  {}", r.row());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Run with per-iteration setup.
+    pub fn run_with_setup<S, T, F>(
+        &mut self,
+        name: &str,
+        bytes: Option<f64>,
+        setup: S,
+        routine: F,
+    ) -> &BenchResult
+    where
+        S: FnMut() -> T,
+        F: FnMut(T),
+    {
+        let mut r = benchmark_with_setup(name, &self.opts, setup, routine);
+        r.bytes = bytes;
+        eprintln!("  {}", r.row());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Find a recorded result by exact name.
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> BenchOpts {
+        BenchOpts {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(30),
+            min_samples: 3,
+            max_samples: 8,
+        }
+    }
+
+    #[test]
+    fn measures_sleepy_routine() {
+        let r = benchmark("sleep", &tiny(), || std::thread::sleep(Duration::from_micros(300)));
+        assert!(r.time.mean >= 250e-6, "mean {}", r.time.mean);
+        assert!(r.time.n >= 3);
+    }
+
+    #[test]
+    fn batches_fast_routines() {
+        let mut x = 0u64;
+        let r = benchmark("fast", &tiny(), || x = x.wrapping_add(1));
+        assert!(r.iterations > 100, "iterations {}", r.iterations);
+    }
+
+    #[test]
+    fn setup_excluded_from_timing() {
+        // Generous margins: sleep() on a loaded 1-core box overshoots.
+        let r = benchmark_with_setup(
+            "setup-heavy",
+            &tiny(),
+            || std::thread::sleep(Duration::from_millis(8)),
+            |_| std::thread::sleep(Duration::from_micros(100)),
+        );
+        // Routine is ~0.1 ms; if setup leaked into timing mean would be >8 ms.
+        assert!(r.time.mean < 5e-3, "mean {}", r.time.mean);
+    }
+
+    #[test]
+    fn throughput_row() {
+        let mut b = Bencher::new(tiny());
+        b.run("with-bytes", Some(1e6), || std::thread::sleep(Duration::from_micros(200)));
+        let r = b.get("with-bytes").unwrap();
+        let gbps = r.throughput_bps().unwrap();
+        assert!(gbps > 1e8 && gbps < 1e11, "{gbps}");
+        assert!(r.row().contains("GB/s"));
+    }
+}

@@ -1,0 +1,385 @@
+//! Configuration system: run presets + a TOML-subset parser.
+//!
+//! Every benchmark and the `akbench` CLI are driven by a [`RunConfig`]
+//! that can be loaded from a config file (`--config path.toml`) and/or
+//! overridden by CLI flags. The parser covers the TOML subset the configs
+//! use: `[section]` headers, `key = value` with strings, integers,
+//! floats, booleans and flat arrays, plus `#` comments (serde/toml are
+//! unavailable offline — DESIGN.md §9).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+use crate::cluster::topology::ClusterSpec;
+use crate::dtype::ElemType;
+use crate::workload::Distribution;
+
+/// A parsed flat-TOML document: section -> key -> raw value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Toml {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+/// TOML scalar / flat array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> anyhow::Result<Toml> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        doc.sections.entry(section.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value '{}'", lineno + 1, v.trim()))?;
+            doc.sections
+                .get_mut(&section)
+                .unwrap()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|m| m.get(key))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> anyhow::Result<TomlValue> {
+    if let Some(inner) = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_top_level(inner)?
+            .into_iter()
+            .map(|s| parse_value(s.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    let clean = v.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("unparseable value")
+}
+
+fn split_top_level(s: &str) -> anyhow::Result<Vec<&str>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.checked_sub(1).context("unbalanced ]")?,
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+
+/// Which local sorter a rank uses (the paper's Fig 1–5 legend).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Sorter {
+    /// "CC-JB": single-thread CPU comparison sort (Julia Base analog).
+    JuliaBase,
+    /// "AK": the AcceleratedKernels merge sort — our Pallas/XLA artifact.
+    Ak,
+    /// "TM": vendor merge sort (Thrust analog, native optimised).
+    ThrustMerge,
+    /// "TR": vendor radix sort (Thrust analog, native optimised).
+    ThrustRadix,
+}
+
+impl Sorter {
+    pub const ALL: [Sorter; 4] =
+        [Sorter::JuliaBase, Sorter::Ak, Sorter::ThrustMerge, Sorter::ThrustRadix];
+
+    /// Paper legend code ("JB", "AK", "TM", "TR").
+    pub fn code(self) -> &'static str {
+        match self {
+            Sorter::JuliaBase => "JB",
+            Sorter::Ak => "AK",
+            Sorter::ThrustMerge => "TM",
+            Sorter::ThrustRadix => "TR",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Sorter> {
+        match s.to_ascii_uppercase().as_str() {
+            "JB" | "JULIABASE" | "BASE" => Some(Sorter::JuliaBase),
+            "AK" => Some(Sorter::Ak),
+            "TM" | "THRUSTMERGE" => Some(Sorter::ThrustMerge),
+            "TR" | "THRUSTRADIX" => Some(Sorter::ThrustRadix),
+            _ => None,
+        }
+    }
+
+    /// GPU-class sorter? (JB runs on a CPU rank.)
+    pub fn is_device(self) -> bool {
+        !matches!(self, Sorter::JuliaBase)
+    }
+}
+
+/// MPI transfer mode (the paper's "GC-" vs "GG-" prefixes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TransferMode {
+    /// Communication staged through host RAM (device-to-host copy first).
+    CpuStaged,
+    /// GPUDirect over NVLink/IB: device buffers move without host staging.
+    GpuDirect,
+}
+
+impl TransferMode {
+    pub const ALL: [TransferMode; 2] = [TransferMode::CpuStaged, TransferMode::GpuDirect];
+
+    /// Paper legend prefix ("GC" / "GG"), or "CC" for CPU sorters.
+    pub fn prefix(self, sorter: Sorter) -> &'static str {
+        if !sorter.is_device() {
+            return "CC";
+        }
+        match self {
+            TransferMode::CpuStaged => "GC",
+            TransferMode::GpuDirect => "GG",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TransferMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "staged" | "cpu" | "gc" => Some(TransferMode::CpuStaged),
+            "direct" | "nvlink" | "gpudirect" | "gg" => Some(TransferMode::GpuDirect),
+            _ => None,
+        }
+    }
+}
+
+/// Final-phase strategy for SIHSort (ablated; the paper re-sorts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FinalPhase {
+    /// K-way merge the received sorted runs (our default).
+    Merge,
+    /// Full second local sort (the paper's description).
+    Sort,
+}
+
+/// Top-level run configuration (CLI + config file).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub cluster: ClusterSpec,
+    pub ranks: usize,
+    pub dtype: ElemType,
+    pub dist: Distribution,
+    pub sorter: Sorter,
+    pub transfer: TransferMode,
+    pub final_phase: FinalPhase,
+    /// Elements per rank (weak scaling) — converted from --mb-per-rank.
+    pub elems_per_rank: usize,
+    pub seed: u64,
+    /// Oversampling factor for splitter sampling (paper's sample sort p).
+    pub samples_per_rank: usize,
+    /// Max splitter-refinement rounds (interpolated histograms).
+    pub refine_rounds: usize,
+    /// Bucket balance tolerance (fraction of ideal bucket size).
+    pub balance_tol: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterSpec::baskerville(),
+            ranks: 8,
+            dtype: ElemType::I32,
+            dist: Distribution::Uniform,
+            sorter: Sorter::Ak,
+            transfer: TransferMode::GpuDirect,
+            final_phase: FinalPhase::Merge,
+            elems_per_rank: 1 << 20,
+            seed: 42,
+            samples_per_rank: 64,
+            refine_rounds: 4,
+            balance_tol: 0.10,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply `[run]` and `[cluster]` sections of a config file.
+    pub fn apply_toml(&mut self, doc: &Toml) -> anyhow::Result<()> {
+        if let Some(v) = doc.get("run", "ranks").and_then(|v| v.as_i64()) {
+            self.ranks = v as usize;
+        }
+        if let Some(v) = doc.get("run", "dtype").and_then(|v| v.as_str()) {
+            self.dtype = ElemType::parse(v).with_context(|| format!("bad dtype {v}"))?;
+        }
+        if let Some(v) = doc.get("run", "dist").and_then(|v| v.as_str()) {
+            self.dist = Distribution::parse(v).with_context(|| format!("bad dist {v}"))?;
+        }
+        if let Some(v) = doc.get("run", "sorter").and_then(|v| v.as_str()) {
+            self.sorter = Sorter::parse(v).with_context(|| format!("bad sorter {v}"))?;
+        }
+        if let Some(v) = doc.get("run", "transfer").and_then(|v| v.as_str()) {
+            self.transfer = TransferMode::parse(v).with_context(|| format!("bad transfer {v}"))?;
+        }
+        if let Some(v) = doc.get("run", "elems_per_rank").and_then(|v| v.as_i64()) {
+            self.elems_per_rank = v as usize;
+        }
+        if let Some(v) = doc.get("run", "seed").and_then(|v| v.as_i64()) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = doc.get("run", "samples_per_rank").and_then(|v| v.as_i64()) {
+            self.samples_per_rank = v as usize;
+        }
+        if let Some(v) = doc.get("run", "refine_rounds").and_then(|v| v.as_i64()) {
+            self.refine_rounds = v as usize;
+        }
+        if let Some(v) = doc.get("run", "balance_tol").and_then(|v| v.as_f64()) {
+            self.balance_tol = v;
+        }
+        self.cluster.apply_toml(doc)?;
+        Ok(())
+    }
+
+    /// Total bytes sorted in this configuration.
+    pub fn total_bytes(&self) -> usize {
+        self.ranks * self.elems_per_rank * self.dtype.size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let doc = Toml::parse(
+            r#"
+            # comment
+            top = 1
+            [run]
+            ranks = 16          # trailing comment
+            dtype = "i64"
+            balance_tol = 0.05
+            flags = [1, 2, 3]
+            name = "weak # not a comment"
+            ok = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_i64(), Some(1));
+        assert_eq!(doc.get("run", "ranks").unwrap().as_i64(), Some(16));
+        assert_eq!(doc.get("run", "dtype").unwrap().as_str(), Some("i64"));
+        assert_eq!(doc.get("run", "balance_tol").unwrap().as_f64(), Some(0.05));
+        assert_eq!(
+            doc.get("run", "flags").unwrap(),
+            &TomlValue::Arr(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+        assert_eq!(doc.get("run", "name").unwrap().as_str(), Some("weak # not a comment"));
+        assert_eq!(doc.get("run", "ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn config_apply() {
+        let doc = Toml::parse("[run]\nranks = 32\ndtype = \"f64\"\nsorter = \"TR\"\ntransfer = \"staged\"\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.ranks, 32);
+        assert_eq!(cfg.dtype, ElemType::F64);
+        assert_eq!(cfg.sorter, Sorter::ThrustRadix);
+        assert_eq!(cfg.transfer, TransferMode::CpuStaged);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Toml::parse("novalue").is_err());
+        assert!(Toml::parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn sorter_codes() {
+        assert_eq!(Sorter::parse("tr"), Some(Sorter::ThrustRadix));
+        assert_eq!(TransferMode::GpuDirect.prefix(Sorter::Ak), "GG");
+        assert_eq!(TransferMode::CpuStaged.prefix(Sorter::Ak), "GC");
+        assert_eq!(TransferMode::GpuDirect.prefix(Sorter::JuliaBase), "CC");
+    }
+}

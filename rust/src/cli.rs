@@ -1,0 +1,206 @@
+//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §9).
+//!
+//! `akbench <subcommand> [flags]`; every figure/table is a subcommand so
+//! `cargo bench` targets and interactive runs share one code path
+//! (`coordinator::campaign`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+use crate::cfg::{RunConfig, Sorter, Toml, TransferMode};
+use crate::dtype::ElemType;
+use crate::workload::Distribution;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+pub const USAGE: &str = "\
+akbench — AcceleratedKernels reproduction driver
+
+USAGE: akbench <command> [--flag value]...
+
+COMMANDS
+  info                 artifact catalog + runtime platform summary
+  sort                 one distributed sort run (prints the full record)
+  table2               Table II arithmetic kernel benchmark
+  fig1 .. fig5         regenerate the paper's figures (text + CSV)
+  ablate               design-choice ablations (final phase, digit width,
+                       samples/rank, refinement rounds)
+  selftest             quick end-to-end health check
+
+COMMON FLAGS
+  --config PATH        TOML config ([run] + [cluster] sections)
+  --ranks N            number of simulated ranks        (default 8)
+  --dtype T            i16|i32|i64|i128|f32|f64         (default i32)
+  --dist D             uniform|sorted|reverse|nearly-sorted|dup-heavy|zipf|gaussian
+  --sorter S           JB|AK|TM|TR                      (default AK)
+  --transfer M         direct|staged                    (default direct)
+  --elems-per-rank N   elements per rank                (default 1Mi)
+  --mb-per-rank X      per-rank size in MB (overrides elems)
+  --seed N             workload seed                    (default 42)
+  --gpu-speedup X      device model calibration         (default 50)
+  --final P            merge|sort (SIHSort final phase)
+  --quick              smaller grids / shorter sampling
+  --no-device          skip artifact loading (host paths only)
+  --n N                element count for table2/examples
+  --threads N          host thread count for table2
+";
+
+impl Cli {
+    /// Parse `std::env::args()`-style input (program name included).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Cli> {
+        let mut it = args.into_iter().skip(1);
+        let mut cli = Cli::default();
+        let Some(cmd) = it.next() else {
+            bail!("missing command\n\n{USAGE}");
+        };
+        if cmd == "--help" || cmd == "-h" || cmd == "help" {
+            cli.command = "help".into();
+            return Ok(cli);
+        }
+        cli.command = cmd;
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // Boolean flags take no value; detect by peeking semantics:
+                // known boolean names are listed here.
+                if matches!(name, "quick" | "no-device" | "help" | "verify") {
+                    cli.flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("flag --{name} expects a value\n\n{USAGE}"))?;
+                    cli.flags.insert(name.to_string(), v);
+                }
+            } else {
+                cli.positional.push(a);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.replace('_', "").parse::<usize>().with_context(|| format!("--{name}: bad integer '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{name}: bad number '{v}'")))
+            .transpose()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.get(name).is_some()
+    }
+
+    /// Build the RunConfig: defaults ← config file ← CLI flags.
+    pub fn run_config(&self) -> anyhow::Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(path) = self.get("config") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            let doc = Toml::parse(&text).with_context(|| format!("parsing config {path}"))?;
+            cfg.apply_toml(&doc)?;
+        }
+        if let Some(v) = self.get_usize("ranks")? {
+            cfg.ranks = v;
+        }
+        if let Some(v) = self.get("dtype") {
+            cfg.dtype = ElemType::parse(v).with_context(|| format!("--dtype: unknown '{v}'"))?;
+        }
+        if let Some(v) = self.get("dist") {
+            cfg.dist =
+                Distribution::parse(v).with_context(|| format!("--dist: unknown '{v}'"))?;
+        }
+        if let Some(v) = self.get("sorter") {
+            cfg.sorter = Sorter::parse(v).with_context(|| format!("--sorter: unknown '{v}'"))?;
+        }
+        if let Some(v) = self.get("transfer") {
+            cfg.transfer =
+                TransferMode::parse(v).with_context(|| format!("--transfer: unknown '{v}'"))?;
+        }
+        if let Some(v) = self.get_usize("elems-per-rank")? {
+            cfg.elems_per_rank = v;
+        }
+        if let Some(v) = self.get_f64("mb-per-rank")? {
+            cfg.elems_per_rank = ((v * 1e6) as usize / cfg.dtype.size_bytes()).max(1);
+        }
+        if let Some(v) = self.get_usize("seed")? {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = self.get_f64("gpu-speedup")? {
+            cfg.cluster.gpu_speedup = v;
+        }
+        if let Some(v) = self.get("final") {
+            cfg.final_phase = match v {
+                "merge" => crate::cfg::FinalPhase::Merge,
+                "sort" => crate::cfg::FinalPhase::Sort,
+                _ => bail!("--final: expected merge|sort"),
+            };
+        }
+        if let Some(v) = self.get_usize("samples-per-rank")? {
+            cfg.samples_per_rank = v;
+        }
+        if let Some(v) = self.get_usize("refine-rounds")? {
+            cfg.refine_rounds = v;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        std::iter::once("akbench".to_string())
+            .chain(s.split_whitespace().map(String::from))
+            .collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let c = Cli::parse(args("sort --ranks 16 --dtype f64 extra")).unwrap();
+        assert_eq!(c.command, "sort");
+        assert_eq!(c.get("ranks"), Some("16"));
+        assert_eq!(c.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn bool_flags_take_no_value() {
+        let c = Cli::parse(args("fig2 --quick --ranks 4")).unwrap();
+        assert!(c.has("quick"));
+        assert_eq!(c.get_usize("ranks").unwrap(), Some(4));
+    }
+
+    #[test]
+    fn config_precedence() {
+        let c = Cli::parse(args("sort --dtype i64 --mb-per-rank 2")).unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.dtype, ElemType::I64);
+        assert_eq!(cfg.elems_per_rank, 2_000_000 / 8);
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(Cli::parse(args("sort --ranks")).is_err());
+        assert!(Cli::parse(vec!["akbench".to_string()]).is_err());
+    }
+
+    #[test]
+    fn bad_enum_values_error() {
+        let c = Cli::parse(args("sort --dtype nope")).unwrap();
+        assert!(c.run_config().is_err());
+    }
+}

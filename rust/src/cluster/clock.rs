@@ -1,0 +1,94 @@
+//! Per-rank logical clocks for the discrete-event cluster simulation.
+//!
+//! Each rank thread advances its own clock for compute (measured wall
+//! time through the device model) and communication (link cost model).
+//! Cross-rank synchronisation uses monotone max-merges: receiving a
+//! message pulls the receiver's clock up to the message's arrival time,
+//! and a barrier pulls everyone up to the global max — the standard
+//! conservative PDES rule, which makes simulated times deterministic
+//! given deterministic per-rank sequences.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared array of per-rank simulated clocks (seconds, stored as f64 bits).
+#[derive(Debug)]
+pub struct SimClocks {
+    times: Vec<AtomicU64>,
+}
+
+impl SimClocks {
+    pub fn new(ranks: usize) -> Self {
+        Self { times: (0..ranks).map(|_| AtomicU64::new(0f64.to_bits())).collect() }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.times.len()
+    }
+
+    /// Current simulated time of a rank.
+    pub fn get(&self, rank: usize) -> f64 {
+        f64::from_bits(self.times[rank].load(Ordering::SeqCst))
+    }
+
+    /// Advance a rank's clock by `dt` seconds (dt >= 0).
+    pub fn advance(&self, rank: usize, dt: f64) -> f64 {
+        debug_assert!(dt >= 0.0, "negative advance {dt}");
+        let new = self.get(rank) + dt;
+        self.times[rank].store(new.to_bits(), Ordering::SeqCst);
+        new
+    }
+
+    /// Monotone max-merge: lift `rank`'s clock to at least `t`.
+    pub fn merge_at_least(&self, rank: usize, t: f64) -> f64 {
+        let cur = self.get(rank);
+        let new = cur.max(t);
+        self.times[rank].store(new.to_bits(), Ordering::SeqCst);
+        new
+    }
+
+    /// Global maximum across all ranks (barrier time).
+    pub fn global_max(&self) -> f64 {
+        (0..self.times.len()).map(|r| self.get(r)).fold(0.0, f64::max)
+    }
+
+    /// Set every rank's clock to the global max (barrier semantics).
+    /// Caller must ensure all rank threads are actually parked at the
+    /// barrier (comm::Endpoint::barrier does).
+    pub fn barrier_sync(&self) -> f64 {
+        let t = self.global_max();
+        for c in &self.times {
+            c.store(t.to_bits(), Ordering::SeqCst);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_and_merge() {
+        let c = SimClocks::new(3);
+        assert_eq!(c.get(0), 0.0);
+        c.advance(0, 1.5);
+        c.advance(1, 0.5);
+        assert_eq!(c.get(0), 1.5);
+        c.merge_at_least(1, 1.0);
+        assert_eq!(c.get(1), 1.0);
+        c.merge_at_least(1, 0.2); // no regression
+        assert_eq!(c.get(1), 1.0);
+        assert_eq!(c.global_max(), 1.5);
+    }
+
+    #[test]
+    fn barrier_lifts_everyone() {
+        let c = SimClocks::new(4);
+        c.advance(2, 7.0);
+        let t = c.barrier_sync();
+        assert_eq!(t, 7.0);
+        for r in 0..4 {
+            assert_eq!(c.get(r), 7.0);
+        }
+    }
+}

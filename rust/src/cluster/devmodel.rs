@@ -1,0 +1,76 @@
+//! Device model: converts *measured* host compute time into *simulated*
+//! accelerator time.
+//!
+//! We do not have A100s; we have XLA-CPU and native Rust on one core. The
+//! model applies a single calibration factor `gpu_speedup` to device-rank
+//! compute (CPU ranks are reported 1:1). Crucially the factor is shared
+//! by all device sorters (AK / TM / TR), so *relative* results — who wins
+//! on which dtype, merge vs radix crossovers, NVLink vs staged — come
+//! from real measured work, not from the model. Only the absolute scale
+//! is synthetic, and it is reported as such in EXPERIMENTS.md.
+//!
+//! Default calibration: an A100-40 sorts ~30 GB/s locally (CUB/Thrust
+//! radix on 32-bit keys, literature figure); this reference core's radix
+//! manages ~0.17 GB/s — ratio ≈ 200 (ClusterSpec::baskerville carries the
+//! authoritative value; this Default mirrors it).
+
+/// Compute-time scaling for simulated device ranks.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceModel {
+    /// measured host seconds are divided by this for device ranks.
+    pub gpu_speedup: f64,
+}
+
+impl DeviceModel {
+    pub fn new(gpu_speedup: f64) -> Self {
+        assert!(gpu_speedup > 0.0);
+        Self { gpu_speedup }
+    }
+
+    /// Simulated compute seconds for a rank.
+    pub fn compute_time(&self, measured_secs: f64, is_device: bool) -> f64 {
+        if is_device {
+            measured_secs / self.gpu_speedup
+        } else {
+            measured_secs
+        }
+    }
+
+    /// Roofline estimate used in DESIGN.md §7: given bytes touched and a
+    /// device HBM bandwidth, the bandwidth-bound floor for an elementwise
+    /// kernel (all L1 kernels here are VPU/bandwidth bound — no matmul).
+    pub fn roofline_floor_secs(bytes: f64, hbm_gbps: f64) -> f64 {
+        bytes / (hbm_gbps * 1e9)
+    }
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        Self { gpu_speedup: 200.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_device_only() {
+        let m = DeviceModel::new(50.0);
+        assert_eq!(m.compute_time(1.0, true), 0.02);
+        assert_eq!(m.compute_time(1.0, false), 1.0);
+    }
+
+    #[test]
+    fn roofline() {
+        // 32 GB at 1555 GB/s (A100-40 HBM) ≈ 20.6 ms
+        let t = DeviceModel::roofline_floor_secs(32e9, 1555.0);
+        assert!((t - 0.02058).abs() < 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive() {
+        DeviceModel::new(0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Simulated HPC cluster — the substitution for the Baskerville testbed
+//! (DESIGN.md §2).
+//!
+//! Ranks are OS threads carrying *logical clocks*: real data is really
+//! processed and really exchanged between threads, but reported times are
+//! simulated — compute from measured wall time through a calibrated
+//! device model, communication from an α-β (latency + bytes/bandwidth)
+//! link model with Baskerville-like parameters. This is what makes
+//! 200-rank scaling curves measurable on a 1-core box without faking the
+//! algorithm: message counts, byte volumes and the sort itself are real.
+
+pub mod clock;
+pub mod devmodel;
+pub mod topology;
+
+pub use clock::SimClocks;
+pub use devmodel::DeviceModel;
+pub use topology::{ClusterSpec, LinkKind};

@@ -1,0 +1,235 @@
+//! Cluster topology + link cost model.
+//!
+//! Baskerville (paper §IV-B): 52 SD650-N V2 trays × (2× Xeon 8360Y,
+//! 512 GB RAM, 4× A100-40 on an HGX planar with an NVLink mesh), nodes
+//! connected by Mellanox InfiniBand. The paper's two communication modes:
+//! "NVLink Transfer" = direct GPU↔GPU (GPUDirect, intra-node NVLink or
+//! inter-node GPUDirect-RDMA over IB) vs "CPU Transfer" = staged through
+//! host RAM with a device↔host copy on each side.
+
+use anyhow::Context;
+
+use crate::cfg::{Toml, TransferMode};
+
+/// Physical link classes in the simulated fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Intra-node GPU↔GPU NVLink mesh.
+    NvLink,
+    /// Inter-node InfiniBand (GPUDirect-RDMA capable).
+    Infiniband,
+    /// PCIe device↔host copy.
+    PcieD2H,
+    /// Host-RAM to host-RAM (intra-node staging / CPU ranks).
+    HostMem,
+}
+
+/// Cluster shape + link parameters (all bandwidths in GB/s = 1e9 B/s,
+/// latencies in seconds).
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub gpus_per_node: usize,
+    /// NVLink per-GPU-pair effective bandwidth.
+    pub nvlink_gbps: f64,
+    pub nvlink_lat: f64,
+    /// Inter-node InfiniBand per-rank effective bandwidth.
+    pub ib_gbps: f64,
+    pub ib_lat: f64,
+    /// PCIe device<->host copy bandwidth.
+    pub pcie_gbps: f64,
+    pub pcie_lat: f64,
+    /// Host memcpy bandwidth (staging buffer hop).
+    pub hostmem_gbps: f64,
+    pub hostmem_lat: f64,
+    /// Device-model calibration: how much faster the simulated accelerator
+    /// runs compute than this host CPU core (see `devmodel`).
+    pub gpu_speedup: f64,
+    /// GPU-to-CPU combined capital/running/environmental cost ratio
+    /// (paper Fig 5 uses 22, validated by the Birmingham ARC team).
+    pub cost_ratio: f64,
+}
+
+impl ClusterSpec {
+    /// Baskerville-like defaults. Bandwidths are effective (not peak):
+    /// NVLink3 ~300 GB/s per pair, HDR-200 IB ~25 GB/s, PCIe4 x16
+    /// ~25 GB/s, host memcpy ~50 GB/s. `gpu_speedup = 200` calibrates the
+    /// device model so the simulated vendor radix sorts i32 at A100-class
+    /// ~30 GB/s (measured host radix: ~170 MB/s on the reference core) —
+    /// see EXPERIMENTS.md §Calibration.
+    pub fn baskerville() -> Self {
+        Self {
+            name: "baskerville-sim".to_string(),
+            gpus_per_node: 4,
+            nvlink_gbps: 300.0,
+            nvlink_lat: 2.0e-6,
+            ib_gbps: 25.0,
+            ib_lat: 5.0e-6,
+            pcie_gbps: 25.0,
+            pcie_lat: 10.0e-6,
+            hostmem_gbps: 50.0,
+            hostmem_lat: 1.0e-6,
+            gpu_speedup: 200.0,
+            cost_ratio: 22.0,
+        }
+    }
+
+    /// Apply the `[cluster]` section of a config file.
+    pub fn apply_toml(&mut self, doc: &Toml) -> anyhow::Result<()> {
+        let sec = "cluster";
+        let set_f = |key: &str, slot: &mut f64| -> anyhow::Result<()> {
+            if let Some(v) = doc.get(sec, key) {
+                *slot = v.as_f64().with_context(|| format!("cluster.{key}: expected number"))?;
+            }
+            Ok(())
+        };
+        set_f("nvlink_gbps", &mut self.nvlink_gbps)?;
+        set_f("nvlink_lat", &mut self.nvlink_lat)?;
+        set_f("ib_gbps", &mut self.ib_gbps)?;
+        set_f("ib_lat", &mut self.ib_lat)?;
+        set_f("pcie_gbps", &mut self.pcie_gbps)?;
+        set_f("pcie_lat", &mut self.pcie_lat)?;
+        set_f("hostmem_gbps", &mut self.hostmem_gbps)?;
+        set_f("hostmem_lat", &mut self.hostmem_lat)?;
+        set_f("gpu_speedup", &mut self.gpu_speedup)?;
+        set_f("cost_ratio", &mut self.cost_ratio)?;
+        if let Some(v) = doc.get(sec, "gpus_per_node") {
+            self.gpus_per_node =
+                v.as_i64().context("cluster.gpus_per_node: expected int")? as usize;
+        }
+        Ok(())
+    }
+
+    /// Node index hosting a rank (4 GPUs per tray on Baskerville).
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    fn link(&self, kind: LinkKind) -> (f64, f64) {
+        match kind {
+            LinkKind::NvLink => (self.nvlink_gbps, self.nvlink_lat),
+            LinkKind::Infiniband => (self.ib_gbps, self.ib_lat),
+            LinkKind::PcieD2H => (self.pcie_gbps, self.pcie_lat),
+            LinkKind::HostMem => (self.hostmem_gbps, self.hostmem_lat),
+        }
+    }
+
+    /// α-β time of one hop.
+    pub fn hop_time(&self, kind: LinkKind, bytes: usize) -> f64 {
+        let (gbps, lat) = self.link(kind);
+        lat + bytes as f64 / (gbps * 1e9)
+    }
+
+    /// The hop sequence of one point-to-point message, rank `src` → `dst`.
+    ///
+    /// * device ranks + `GpuDirect`: NVLink (same node) or GPUDirect-RDMA
+    ///   over IB (cross node) — one hop, no host staging.
+    /// * device ranks + `CpuStaged`: PCIe d2h, host/IB hop, PCIe h2d —
+    ///   the paper's "CPU Transfer" with its device-to-host copies.
+    /// * CPU ranks (is_device = false): host path only.
+    pub fn hops(
+        &self,
+        src: usize,
+        dst: usize,
+        mode: TransferMode,
+        is_device: bool,
+    ) -> Vec<LinkKind> {
+        let same = self.same_node(src, dst);
+        if !is_device {
+            return if same {
+                vec![LinkKind::HostMem]
+            } else {
+                vec![LinkKind::Infiniband]
+            };
+        }
+        match mode {
+            TransferMode::GpuDirect => {
+                if same {
+                    vec![LinkKind::NvLink]
+                } else {
+                    vec![LinkKind::Infiniband]
+                }
+            }
+            TransferMode::CpuStaged => {
+                let mid = if same { LinkKind::HostMem } else { LinkKind::Infiniband };
+                vec![LinkKind::PcieD2H, mid, LinkKind::PcieD2H]
+            }
+        }
+    }
+
+    /// Total simulated transfer time of one message.
+    pub fn transfer_time(
+        &self,
+        src: usize,
+        dst: usize,
+        bytes: usize,
+        mode: TransferMode,
+        is_device: bool,
+    ) -> f64 {
+        self.hops(src, dst, mode, is_device)
+            .into_iter()
+            .map(|k| self.hop_time(k, bytes))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_placement() {
+        let s = ClusterSpec::baskerville();
+        assert_eq!(s.node_of(0), 0);
+        assert_eq!(s.node_of(3), 0);
+        assert_eq!(s.node_of(4), 1);
+        assert!(s.same_node(0, 3));
+        assert!(!s.same_node(3, 4));
+    }
+
+    #[test]
+    fn nvlink_beats_staged_intra_node() {
+        let s = ClusterSpec::baskerville();
+        let direct = s.transfer_time(0, 1, 100 << 20, TransferMode::GpuDirect, true);
+        let staged = s.transfer_time(0, 1, 100 << 20, TransferMode::CpuStaged, true);
+        assert!(staged > 3.0 * direct, "staged {staged} direct {direct}");
+    }
+
+    #[test]
+    fn cross_node_gap_narrows() {
+        // Across nodes both modes pay IB; staged still adds 2 PCIe hops.
+        let s = ClusterSpec::baskerville();
+        let direct = s.transfer_time(0, 4, 100 << 20, TransferMode::GpuDirect, true);
+        let staged = s.transfer_time(0, 4, 100 << 20, TransferMode::CpuStaged, true);
+        assert!(staged > direct);
+        assert!(staged < 4.0 * direct, "staged {staged} direct {direct}");
+    }
+
+    #[test]
+    fn cpu_ranks_ignore_mode() {
+        let s = ClusterSpec::baskerville();
+        let a = s.transfer_time(0, 4, 1 << 20, TransferMode::GpuDirect, false);
+        let b = s.transfer_time(0, 4, 1 << 20, TransferMode::CpuStaged, false);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn alpha_beta_monotone() {
+        let s = ClusterSpec::baskerville();
+        assert!(s.hop_time(LinkKind::NvLink, 0) > 0.0); // latency floor
+        assert!(s.hop_time(LinkKind::NvLink, 1 << 30) > s.hop_time(LinkKind::NvLink, 1 << 20));
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = Toml::parse("[cluster]\nnvlink_gbps = 600\ngpus_per_node = 8\n").unwrap();
+        let mut s = ClusterSpec::baskerville();
+        s.apply_toml(&doc).unwrap();
+        assert_eq!(s.nvlink_gbps, 600.0);
+        assert_eq!(s.gpus_per_node, 8);
+    }
+}

@@ -1,0 +1,355 @@
+//! The message fabric: rank endpoints, point-to-point send/recv, logical
+//! clock accounting, and communication statistics.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+use crate::cfg::TransferMode;
+use crate::cluster::{ClusterSpec, LinkKind, SimClocks};
+use crate::dtype::SortKey;
+
+use super::wire::{bytes_to_vec, vec_to_bytes};
+
+/// One in-flight message.
+struct Msg {
+    src: usize,
+    tag: u64,
+    bytes: Vec<u8>,
+    /// Simulated arrival time at the destination.
+    arrive: f64,
+}
+
+/// Cumulative fabric statistics (shared across ranks).
+#[derive(Debug, Default)]
+pub struct CommStats {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+    pub nvlink_bytes: AtomicU64,
+    pub ib_bytes: AtomicU64,
+    pub pcie_bytes: AtomicU64,
+    pub hostmem_bytes: AtomicU64,
+}
+
+impl CommStats {
+    fn record(&self, hops: &[LinkKind], bytes: usize) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        for h in hops {
+            let slot = match h {
+                LinkKind::NvLink => &self.nvlink_bytes,
+                LinkKind::Infiniband => &self.ib_bytes,
+                LinkKind::PcieD2H => &self.pcie_bytes,
+                LinkKind::HostMem => &self.hostmem_bytes,
+            };
+            slot.fetch_add(bytes as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> (u64, u64) {
+        (self.messages.load(Ordering::Relaxed), self.bytes.load(Ordering::Relaxed))
+    }
+}
+
+struct Shared {
+    spec: ClusterSpec,
+    mode: TransferMode,
+    clocks: SimClocks,
+    stats: CommStats,
+    /// Per-rank: does this rank host a device (GPU) or is it a CPU rank?
+    device: Vec<bool>,
+    barrier: Barrier,
+    /// Compute token: measured-compute sections run one at a time so the
+    /// wall time a rank observes is its own work, not oversubscription
+    /// noise from the other rank threads sharing this host's cores.
+    /// Logical clocks make the serialisation invisible in simulated time.
+    compute: std::sync::Mutex<()>,
+}
+
+/// Builder for a set of connected [`Endpoint`]s.
+pub struct Fabric;
+
+impl Fabric {
+    /// Create `ranks` endpoints. `device[r]` marks device ranks (affects
+    /// link selection and the device model); pass all-true for GPU runs,
+    /// all-false for the "CC-JB" CPU algorithm, or a mix for co-sorting.
+    pub fn new(
+        spec: ClusterSpec,
+        mode: TransferMode,
+        device: Vec<bool>,
+    ) -> Vec<Endpoint> {
+        let ranks = device.len();
+        assert!(ranks > 0);
+        let shared = Arc::new(Shared {
+            spec,
+            mode,
+            clocks: SimClocks::new(ranks),
+            stats: CommStats::default(),
+            device,
+            barrier: Barrier::new(ranks),
+            compute: std::sync::Mutex::new(()),
+        });
+        let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(ranks);
+        let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(ranks);
+        for _ in 0..ranks {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, rx)| Endpoint {
+                rank,
+                shared: shared.clone(),
+                senders: senders.clone(),
+                rx,
+                pending: HashMap::new(),
+                coll_seq: 0,
+            })
+            .collect()
+    }
+}
+
+/// A rank's handle on the fabric. Not `Clone`: exactly one per rank.
+pub struct Endpoint {
+    rank: usize,
+    shared: Arc<Shared>,
+    senders: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    /// Out-of-order stash: messages received before they were asked for.
+    pending: HashMap<(usize, u64), VecDeque<Msg>>,
+    /// Collective sequence number (advances identically on all ranks).
+    pub(super) coll_seq: u64,
+}
+
+impl Endpoint {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn is_device(&self) -> bool {
+        self.shared.device[self.rank]
+    }
+
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.shared.spec
+    }
+
+    pub fn mode(&self) -> TransferMode {
+        self.shared.mode
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.shared.stats
+    }
+
+    /// Current simulated time of this rank.
+    pub fn now(&self) -> f64 {
+        self.shared.clocks.get(self.rank)
+    }
+
+    /// Advance this rank's simulated clock (compute accounting; callers
+    /// convert measured time through `cluster::DeviceModel` first).
+    pub fn advance(&self, dt: f64) {
+        self.shared.clocks.advance(self.rank, dt);
+    }
+
+    /// Run a measured-compute section under the fabric's compute token:
+    /// returns (result, accurate wall seconds). MUST NOT communicate
+    /// inside `f` (the token would serialise against other ranks' compute
+    /// and deadlock a collective).
+    pub fn measured<R>(&self, f: impl FnOnce() -> R) -> (R, f64) {
+        let _token = self.shared.compute.lock().unwrap();
+        let t0 = std::time::Instant::now();
+        let r = f();
+        (r, t0.elapsed().as_secs_f64())
+    }
+
+    /// Point-to-point send. The sender's clock advances by the transfer
+    /// time (its link is busy); the message carries its arrival time.
+    /// Self-sends are free (stay in device memory).
+    pub fn send_bytes(&self, dst: usize, tag: u64, bytes: Vec<u8>) {
+        let t_send = self.now();
+        let arrive = if dst == self.rank {
+            t_send
+        } else {
+            let is_dev = self.is_device() && self.shared.device[dst];
+            let hops = self.shared.spec.hops(self.rank, dst, self.shared.mode, is_dev);
+            let dt: f64 =
+                hops.iter().map(|&k| self.shared.spec.hop_time(k, bytes.len())).sum();
+            self.shared.stats.record(&hops, bytes.len());
+            self.shared.clocks.advance(self.rank, dt);
+            t_send + dt
+        };
+        self.senders[dst]
+            .send(Msg { src: self.rank, tag, bytes, arrive })
+            .expect("fabric endpoint dropped");
+    }
+
+    /// Blocking receive of the next message from `src` with `tag`.
+    /// Merges the arrival time into this rank's clock.
+    pub fn recv_bytes(&mut self, src: usize, tag: u64) -> Vec<u8> {
+        let key = (src, tag);
+        let msg = loop {
+            if let Some(q) = self.pending.get_mut(&key) {
+                if let Some(m) = q.pop_front() {
+                    break m;
+                }
+            }
+            let m = self.rx.recv().expect("fabric senders dropped");
+            if (m.src, m.tag) == key {
+                break m;
+            }
+            self.pending.entry((m.src, m.tag)).or_default().push_back(m);
+        };
+        self.shared.clocks.merge_at_least(self.rank, msg.arrive);
+        msg.bytes
+    }
+
+    /// Typed point-to-point send of a key slice.
+    pub fn send<K: SortKey>(&self, dst: usize, tag: u64, xs: &[K]) {
+        self.send_bytes(dst, tag, vec_to_bytes(xs));
+    }
+
+    /// Typed point-to-point receive.
+    pub fn recv<K: SortKey>(&mut self, src: usize, tag: u64) -> Vec<K> {
+        bytes_to_vec(&self.recv_bytes(src, tag))
+    }
+
+    /// Synchronise all ranks (thread barrier + clock max-merge).
+    pub fn barrier(&mut self) {
+        self.coll_seq += 1;
+        let res = self.shared.barrier.wait();
+        if res.is_leader() {
+            self.shared.clocks.barrier_sync();
+        }
+        // Second phase: nobody proceeds until clocks are merged.
+        self.shared.barrier.wait();
+    }
+
+    pub(super) fn next_coll_tag(&mut self) -> u64 {
+        self.coll_seq += 1;
+        // Collective tags live in the top half of the tag space.
+        (1 << 63) | self.coll_seq
+    }
+
+    /// Simulated times snapshot (rank -> seconds); for metrics.
+    pub fn sim_time_of(&self, rank: usize) -> f64 {
+        self.shared.clocks.get(rank)
+    }
+
+    /// Global simulated makespan.
+    pub fn sim_makespan(&self) -> f64 {
+        self.shared.clocks.global_max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize) -> Vec<Endpoint> {
+        Fabric::new(ClusterSpec::baskerville(), TransferMode::GpuDirect, vec![true; n])
+    }
+
+    #[test]
+    fn p2p_roundtrip() {
+        let mut eps = mk(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || e1.recv::<i32>(0, 7));
+        e0.send::<i32>(1, 7, &[1, 2, 3]);
+        assert_eq!(h.join().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_on_transfer() {
+        let mut eps = mk(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let payload = vec![0u8; 30 << 20]; // 30 MB over NVLink ≈ 100 µs
+        let h = std::thread::spawn(move || {
+            let b = e1.recv_bytes(0, 1);
+            (b.len(), e1.now())
+        });
+        e0.send_bytes(1, 1, payload);
+        assert!(e0.now() > 50e-6, "sender time {}", e0.now());
+        let (len, t1) = h.join().unwrap();
+        assert_eq!(len, 30 << 20);
+        assert!(t1 >= e0.now() * 0.99, "receiver {} sender {}", t1, e0.now());
+    }
+
+    #[test]
+    fn out_of_order_tags() {
+        let mut eps = mk(2);
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            // Ask for tag 2 first even though tag 1 arrives first.
+            let b = e1.recv::<i32>(0, 2);
+            let a = e1.recv::<i32>(0, 1);
+            (a, b)
+        });
+        e0.send::<i32>(1, 1, &[10]);
+        e0.send::<i32>(1, 2, &[20]);
+        let (a, b) = h.join().unwrap();
+        assert_eq!(a, vec![10]);
+        assert_eq!(b, vec![20]);
+    }
+
+    #[test]
+    fn self_send_is_free() {
+        let mut eps = mk(1);
+        let mut e0 = eps.pop().unwrap();
+        e0.send::<i64>(0, 3, &[5, 6]);
+        let t_before = e0.now();
+        assert_eq!(e0.recv::<i64>(0, 3), vec![5, 6]);
+        assert_eq!(e0.now(), t_before);
+        assert_eq!(e0.stats().snapshot().0, 0); // not counted as traffic
+    }
+
+    #[test]
+    fn stats_count_hops() {
+        let mut eps = Fabric::new(
+            ClusterSpec::baskerville(),
+            TransferMode::CpuStaged,
+            vec![true; 2],
+        );
+        let mut e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || e1.recv::<i32>(0, 1));
+        e0.send::<i32>(1, 1, &[1; 256]);
+        h.join().unwrap();
+        let stats = e0.stats();
+        assert_eq!(stats.messages.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.bytes.load(Ordering::Relaxed), 1024);
+        // Staged intra-node: 2 PCIe hops + hostmem hop.
+        assert_eq!(stats.pcie_bytes.load(Ordering::Relaxed), 2048);
+        assert_eq!(stats.hostmem_bytes.load(Ordering::Relaxed), 1024);
+        assert_eq!(stats.nvlink_bytes.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn barrier_merges_clocks() {
+        let eps = mk(3);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut e| {
+                std::thread::spawn(move || {
+                    e.advance(e.rank() as f64); // ranks at t=0,1,2
+                    e.barrier();
+                    e.now()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 2.0);
+        }
+    }
+}

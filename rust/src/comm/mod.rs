@@ -1,0 +1,21 @@
+//! MPI-like communication layer over the simulated fabric.
+//!
+//! The paper's MPISort uses MPI point-to-point + collectives through
+//! MPI.jl, transparently picking GPUDirect ("NVLink Transfer") or
+//! host-staged ("CPU Transfer") paths. This module reproduces that
+//! surface: typed send/recv, barrier, bcast, gather, allgather,
+//! alltoallv and allreduce over rank threads, with every message really
+//! moving bytes between threads and the link model charging simulated
+//! time per hop (cluster::topology).
+//!
+//! Byte/message counters are recorded per link kind — the paper claims
+//! SIHSort uses "the least amount of MPI communication" of non-IO sorts,
+//! and `mpisort` tests assert our implementation's message complexity.
+
+pub mod collectives;
+pub mod fabric;
+pub mod wire;
+
+pub use collectives::ReduceOp;
+pub use fabric::{CommStats, Endpoint, Fabric};
+pub use wire::{bytes_to_vec, vec_to_bytes};

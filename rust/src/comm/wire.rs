@@ -1,0 +1,65 @@
+//! Byte-level (de)serialisation of key vectors — "what goes on the wire".
+//!
+//! MPI moves untyped buffers; so do we. Keys are `Copy` + `'static` plain
+//! data, so the conversion is a memcpy (native endianness: both ends are
+//! the same process, as in shared-fabric MPI).
+
+use crate::dtype::SortKey;
+
+/// Serialize a key slice to bytes (memcpy).
+pub fn vec_to_bytes<K: SortKey>(xs: &[K]) -> Vec<u8> {
+    let bytes = std::mem::size_of_val(xs);
+    let mut out = vec![0u8; bytes];
+    // SAFETY: K is Copy plain-old-data; sizes match by construction.
+    unsafe {
+        std::ptr::copy_nonoverlapping(xs.as_ptr() as *const u8, out.as_mut_ptr(), bytes);
+    }
+    out
+}
+
+/// Deserialize bytes back into keys. Length must be a whole multiple of
+/// the key size.
+pub fn bytes_to_vec<K: SortKey>(bytes: &[u8]) -> Vec<K> {
+    let k = std::mem::size_of::<K>();
+    assert_eq!(bytes.len() % k, 0, "wire length {} not multiple of {k}", bytes.len());
+    let n = bytes.len() / k;
+    let mut out = Vec::with_capacity(n);
+    // SAFETY: K is Copy plain-old-data; we copy exactly n*k bytes into
+    // freshly reserved capacity then set the length.
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, n * k);
+        out.set_len(n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let a: Vec<i16> = vec![-1, 0, i16::MAX];
+        assert_eq!(bytes_to_vec::<i16>(&vec_to_bytes(&a)), a);
+        let b: Vec<i128> = vec![i128::MIN, 7, i128::MAX];
+        assert_eq!(bytes_to_vec::<i128>(&vec_to_bytes(&b)), b);
+        let c: Vec<f64> = vec![-0.0, 1.5, f64::INFINITY];
+        let rt = bytes_to_vec::<f64>(&vec_to_bytes(&c));
+        assert_eq!(rt.len(), 3);
+        assert_eq!(rt[1], 1.5);
+        assert!(rt[2].is_infinite());
+    }
+
+    #[test]
+    fn empty() {
+        let e: Vec<i32> = vec![];
+        assert!(vec_to_bytes(&e).is_empty());
+        assert!(bytes_to_vec::<i32>(&[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged() {
+        bytes_to_vec::<i32>(&[1, 2, 3]);
+    }
+}

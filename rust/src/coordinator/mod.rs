@@ -1,0 +1,46 @@
+//! Campaign orchestration: builds the simulated cluster from a
+//! [`crate::cfg::RunConfig`], runs distributed sorts across rank threads,
+//! verifies the results, and sweeps the parameter grids behind every
+//! paper figure.
+
+pub mod campaign;
+pub mod driver;
+
+pub use driver::{run_distributed_sort, run_distributed_sort_mixed, DistSortOutput};
+
+/// Dispatch a generic function over the runtime dtype tag.
+///
+/// ```ignore
+/// let rec = dispatch_dtype!(cfg.dtype, K => run::<K>(&cfg));
+/// ```
+#[macro_export]
+macro_rules! dispatch_dtype {
+    ($dtype:expr, $K:ident => $body:expr) => {
+        match $dtype {
+            $crate::dtype::ElemType::I16 => {
+                type $K = i16;
+                $body
+            }
+            $crate::dtype::ElemType::I32 => {
+                type $K = i32;
+                $body
+            }
+            $crate::dtype::ElemType::I64 => {
+                type $K = i64;
+                $body
+            }
+            $crate::dtype::ElemType::I128 => {
+                type $K = i128;
+                $body
+            }
+            $crate::dtype::ElemType::F32 => {
+                type $K = f32;
+                $body
+            }
+            $crate::dtype::ElemType::F64 => {
+                type $K = f64;
+                $body
+            }
+        }
+    };
+}

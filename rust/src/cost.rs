@@ -1,0 +1,65 @@
+//! Cost-normalised comparison (paper Fig 5).
+//!
+//! GPUs cost more to buy, power and cool: the paper folds capital,
+//! running and environmental costs into a single ×22 GPU:CPU ratio
+//! (validated by the Birmingham ARC team for BlueBEAR vs Baskerville) and
+//! multiplies GPU sorting times by it. A GPU algorithm is *economically
+//! viable* only where its normalised time still beats the CPU algorithm.
+
+use crate::cfg::Sorter;
+
+/// Fig 5 normalisation: multiply device-rank times by the cost ratio.
+pub fn normalised_time(sim_secs: f64, sorter: Sorter, cost_ratio: f64) -> f64 {
+    if sorter.is_device() {
+        sim_secs * cost_ratio
+    } else {
+        sim_secs
+    }
+}
+
+/// Crossover analysis: given (n, cpu_time) and (n, gpu_time) curves,
+/// return the smallest n where the *normalised* GPU time beats CPU, if
+/// any (the paper's "economically justifiable above ~1e6 elements" for
+/// GG variants).
+pub fn crossover_n(
+    cpu: &[(f64, f64)],
+    gpu: &[(f64, f64)],
+    cost_ratio: f64,
+) -> Option<f64> {
+    for (n, g) in gpu {
+        if let Some((_, c)) = cpu.iter().find(|(cn, _)| cn == n) {
+            if g * cost_ratio < *c {
+                return Some(*n);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_times_scaled() {
+        assert_eq!(normalised_time(1.0, Sorter::Ak, 22.0), 22.0);
+        assert_eq!(normalised_time(1.0, Sorter::ThrustRadix, 22.0), 22.0);
+        assert_eq!(normalised_time(1.0, Sorter::JuliaBase, 22.0), 1.0);
+    }
+
+    #[test]
+    fn crossover_found() {
+        // GPU 30x faster above n=1e6, 2x faster below: with ratio 22 only
+        // the former is viable.
+        let cpu = vec![(1e5, 1.0), (1e6, 10.0), (1e7, 100.0)];
+        let gpu = vec![(1e5, 0.5), (1e6, 0.33), (1e7, 3.3)];
+        assert_eq!(crossover_n(&cpu, &gpu, 22.0), Some(1e6));
+    }
+
+    #[test]
+    fn crossover_absent() {
+        let cpu = vec![(1e5, 1.0)];
+        let gpu = vec![(1e5, 0.5)]; // 2x faster — not enough at ×22
+        assert_eq!(crossover_n(&cpu, &gpu, 22.0), None);
+    }
+}

@@ -1,0 +1,381 @@
+//! Element types and sortable-key abstractions.
+//!
+//! The paper benchmarks sorting over Int16/Int32/Int64/Int128/Float32/
+//! Float64 (Figs 2–4). [`ElemType`] is the runtime tag used by configs,
+//! the artifact registry and the metrics tables; [`SortKey`] is the
+//! static-dispatch trait the algorithms and SIHSort are generic over.
+//!
+//! Int128 note: XLA-CPU has no s128, so `i128` routes to the native
+//! backends only (DESIGN.md §2) — exactly the situation the paper
+//! describes where vendor libraries special-case small types and lose
+//! their edge on big ones.
+
+use std::fmt;
+
+/// Runtime element-type tag (the paper's benchmarked dtypes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ElemType {
+    I16,
+    I32,
+    I64,
+    I128,
+    F32,
+    F64,
+}
+
+impl ElemType {
+    /// All dtypes from the paper's Figures 2–4.
+    pub const ALL: [ElemType; 6] = [
+        ElemType::I16,
+        ElemType::I32,
+        ElemType::I64,
+        ElemType::I128,
+        ElemType::F32,
+        ElemType::F64,
+    ];
+
+    /// Size in bytes of one element.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ElemType::I16 => 2,
+            ElemType::I32 | ElemType::F32 => 4,
+            ElemType::I64 | ElemType::F64 => 8,
+            ElemType::I128 => 16,
+        }
+    }
+
+    /// Manifest / CLI name (`i32`, `f64`, ...).
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemType::I16 => "i16",
+            ElemType::I32 => "i32",
+            ElemType::I64 => "i64",
+            ElemType::I128 => "i128",
+            ElemType::F32 => "f32",
+            ElemType::F64 => "f64",
+        }
+    }
+
+    /// Paper-style display name (`Int32`, `Float64`, ...).
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            ElemType::I16 => "Int16",
+            ElemType::I32 => "Int32",
+            ElemType::I64 => "Int64",
+            ElemType::I128 => "Int128",
+            ElemType::F32 => "Float32",
+            ElemType::F64 => "Float64",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ElemType> {
+        match s.to_ascii_lowercase().as_str() {
+            "i16" | "int16" => Some(ElemType::I16),
+            "i32" | "int32" => Some(ElemType::I32),
+            "i64" | "int64" => Some(ElemType::I64),
+            "i128" | "int128" => Some(ElemType::I128),
+            "f32" | "float32" => Some(ElemType::F32),
+            "f64" | "float64" => Some(ElemType::F64),
+            _ => None,
+        }
+    }
+
+    /// Whether an XLA artifact family exists for this dtype (i128 is
+    /// native-only; see module docs).
+    pub fn xla_supported(self) -> bool {
+        !matches!(self, ElemType::I128)
+    }
+}
+
+impl fmt::Display for ElemType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A totally-ordered, radix-decomposable sort key. Implemented for the
+/// six paper dtypes; everything generic in `algorithms`, `baselines` and
+/// `mpisort` dispatches statically through this trait.
+pub trait SortKey: Copy + Send + Sync + PartialOrd + fmt::Debug + 'static {
+    /// Runtime tag for this type.
+    const ELEM: ElemType;
+
+    /// Unsigned image of the key: `a <= b  <=>  to_bits(a) <= to_bits(b)`.
+    /// (For floats this is the standard sign-flip total-order transform,
+    /// i.e. IEEE-754 totalOrder on non-NaN values.) Radix sort and the
+    /// histogram splitter interpolation both run on this image.
+    fn to_bits(self) -> u128;
+
+    /// Inverse of [`SortKey::to_bits`].
+    fn from_bits(bits: u128) -> Self;
+
+    /// Number of significant bytes in the bit image.
+    const KEY_BYTES: usize;
+
+    /// Total-order comparison (floats: NaN-safe via the bit image).
+    #[inline]
+    fn cmp_total(&self, other: &Self) -> std::cmp::Ordering {
+        self.to_bits().cmp(&other.to_bits())
+    }
+
+    /// Maximum key (ascending-sort padding sentinel — matches the Python
+    /// AOT side's `sort_sentinel`).
+    fn max_key() -> Self;
+
+    /// Minimum key.
+    fn min_key() -> Self;
+}
+
+impl SortKey for i16 {
+    const ELEM: ElemType = ElemType::I16;
+    const KEY_BYTES: usize = 2;
+    #[inline]
+    fn to_bits(self) -> u128 {
+        (self as u16 ^ 0x8000) as u128
+    }
+    #[inline]
+    fn from_bits(bits: u128) -> Self {
+        (bits as u16 ^ 0x8000) as i16
+    }
+    fn max_key() -> Self {
+        i16::MAX
+    }
+    fn min_key() -> Self {
+        i16::MIN
+    }
+}
+
+impl SortKey for i32 {
+    const ELEM: ElemType = ElemType::I32;
+    const KEY_BYTES: usize = 4;
+    #[inline]
+    fn to_bits(self) -> u128 {
+        (self as u32 ^ 0x8000_0000) as u128
+    }
+    #[inline]
+    fn from_bits(bits: u128) -> Self {
+        (bits as u32 ^ 0x8000_0000) as i32
+    }
+    fn max_key() -> Self {
+        i32::MAX
+    }
+    fn min_key() -> Self {
+        i32::MIN
+    }
+}
+
+impl SortKey for i64 {
+    const ELEM: ElemType = ElemType::I64;
+    const KEY_BYTES: usize = 8;
+    #[inline]
+    fn to_bits(self) -> u128 {
+        (self as u64 ^ 0x8000_0000_0000_0000) as u128
+    }
+    #[inline]
+    fn from_bits(bits: u128) -> Self {
+        (bits as u64 ^ 0x8000_0000_0000_0000) as i64
+    }
+    fn max_key() -> Self {
+        i64::MAX
+    }
+    fn min_key() -> Self {
+        i64::MIN
+    }
+}
+
+impl SortKey for i128 {
+    const ELEM: ElemType = ElemType::I128;
+    const KEY_BYTES: usize = 16;
+    #[inline]
+    fn to_bits(self) -> u128 {
+        self as u128 ^ (1u128 << 127)
+    }
+    #[inline]
+    fn from_bits(bits: u128) -> Self {
+        (bits ^ (1u128 << 127)) as i128
+    }
+    fn max_key() -> Self {
+        i128::MAX
+    }
+    fn min_key() -> Self {
+        i128::MIN
+    }
+}
+
+impl SortKey for f32 {
+    const ELEM: ElemType = ElemType::F32;
+    const KEY_BYTES: usize = 4;
+    #[inline]
+    fn to_bits(self) -> u128 {
+        let b = self.to_bits();
+        // Sign-flip transform: negative floats reverse, positives offset.
+        let k = if b & 0x8000_0000 != 0 { !b } else { b | 0x8000_0000 };
+        k as u128
+    }
+    #[inline]
+    fn from_bits(bits: u128) -> Self {
+        let b = bits as u32;
+        let r = if b & 0x8000_0000 != 0 { b & 0x7FFF_FFFF } else { !b };
+        f32::from_bits(r)
+    }
+    fn max_key() -> Self {
+        f32::INFINITY
+    }
+    fn min_key() -> Self {
+        f32::NEG_INFINITY
+    }
+}
+
+impl SortKey for f64 {
+    const ELEM: ElemType = ElemType::F64;
+    const KEY_BYTES: usize = 8;
+    #[inline]
+    fn to_bits(self) -> u128 {
+        let b = self.to_bits();
+        let k = if b & 0x8000_0000_0000_0000 != 0 {
+            !b
+        } else {
+            b | 0x8000_0000_0000_0000
+        };
+        k as u128
+    }
+    #[inline]
+    fn from_bits(bits: u128) -> Self {
+        let b = bits as u64;
+        let r = if b & 0x8000_0000_0000_0000 != 0 {
+            b & 0x7FFF_FFFF_FFFF_FFFF
+        } else {
+            !b
+        };
+        f64::from_bits(r)
+    }
+    fn max_key() -> Self {
+        f64::INFINITY
+    }
+    fn min_key() -> Self {
+        f64::NEG_INFINITY
+    }
+}
+
+/// Sort a slice by the total order of [`SortKey`] (used by tests and the
+/// "Julia Base" single-thread baseline).
+pub fn sort_total<K: SortKey>(xs: &mut [K]) {
+    xs.sort_unstable_by(|a, b| a.cmp_total(b));
+}
+
+/// Is the slice ascending under the total order?
+pub fn is_sorted_total<K: SortKey>(xs: &[K]) -> bool {
+    xs.windows(2).all(|w| w[0].cmp_total(&w[1]) != std::cmp::Ordering::Greater)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<K: SortKey + PartialEq>(xs: &[K]) {
+        for &x in xs {
+            assert!(K::from_bits(x.to_bits()) == x, "{x:?}");
+        }
+    }
+
+    fn order_preserved<K: SortKey>(xs: &[K]) {
+        for &a in xs {
+            for &b in xs {
+                let lhs = a.to_bits().cmp(&b.to_bits());
+                let rhs = a.partial_cmp(&b).unwrap();
+                assert_eq!(lhs, rhs, "{a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn i16_bits() {
+        let xs = [i16::MIN, -2, -1, 0, 1, 2, i16::MAX];
+        roundtrip(&xs);
+        order_preserved(&xs);
+    }
+
+    #[test]
+    fn i32_bits() {
+        let xs = [i32::MIN, -100, 0, 7, i32::MAX];
+        roundtrip(&xs);
+        order_preserved(&xs);
+    }
+
+    #[test]
+    fn i64_bits() {
+        let xs = [i64::MIN, -1, 0, 1, i64::MAX];
+        roundtrip(&xs);
+        order_preserved(&xs);
+    }
+
+    #[test]
+    fn i128_bits() {
+        let xs = [i128::MIN, -(1i128 << 100), -1, 0, 1, 1i128 << 100, i128::MAX];
+        roundtrip(&xs);
+        order_preserved(&xs);
+    }
+
+    #[test]
+    fn f32_bits() {
+        let xs = [
+            f32::NEG_INFINITY,
+            -1.0e30,
+            -1.0,
+            -0.0,
+            0.0,
+            1.0e-30,
+            1.0,
+            f32::INFINITY,
+        ];
+        // -0.0 and 0.0 differ in bit image but not in partial_cmp; check
+        // monotonicity on strictly increasing values only.
+        let strict: Vec<f32> = xs.iter().copied().filter(|x| *x != 0.0 || x.is_sign_positive()).collect();
+        roundtrip(&xs);
+        order_preserved(&strict);
+        // -0.0 sorts before +0.0 in the total order (IEEE totalOrder).
+        assert!((-0.0f32).to_bits_key() < 0.0f32.to_bits_key());
+    }
+
+    trait BitsKey {
+        fn to_bits_key(self) -> u128;
+    }
+    impl BitsKey for f32 {
+        fn to_bits_key(self) -> u128 {
+            SortKey::to_bits(self)
+        }
+    }
+
+    #[test]
+    fn f64_bits() {
+        let xs = [f64::NEG_INFINITY, -2.5, 0.0, 3.14, f64::INFINITY];
+        roundtrip(&xs);
+        order_preserved(&xs);
+    }
+
+    #[test]
+    fn sentinels_are_extremes() {
+        // NB: qualified calls — f64 has an *inherent* `to_bits` (raw IEEE
+        // bits) that would otherwise shadow the total-order bit image.
+        assert!(SortKey::to_bits(i32::max_key()) >= SortKey::to_bits(12345i32));
+        assert!(SortKey::to_bits(f64::min_key()) <= SortKey::to_bits(-1e300f64));
+    }
+
+    #[test]
+    fn elem_type_parse_names() {
+        for e in ElemType::ALL {
+            assert_eq!(ElemType::parse(e.name()), Some(e));
+            assert_eq!(ElemType::parse(e.paper_name()), Some(e));
+        }
+        assert_eq!(ElemType::parse("bogus"), None);
+    }
+
+    #[test]
+    fn sort_total_handles_floats() {
+        let mut xs = vec![3.0f32, -1.0, f32::INFINITY, 0.5, f32::NEG_INFINITY];
+        sort_total(&mut xs);
+        assert!(is_sorted_total(&xs));
+        assert_eq!(xs[0], f32::NEG_INFINITY);
+        assert_eq!(xs[4], f32::INFINITY);
+    }
+}

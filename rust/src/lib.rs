@@ -1,0 +1,51 @@
+//! # accelkern — cross-architecture parallel algorithms, AOT-transpiled
+//!
+//! A Rust + JAX + Pallas reproduction of *"AcceleratedKernels.jl:
+//! Cross-Architecture Parallel Algorithms from a Unified, Transpiled
+//! Codebase"* (CS.DC 2025). See `DESIGN.md` for the full system inventory
+//! and the paper→module map.
+//!
+//! Three layers:
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): bitonic tile
+//!   sort, block scan/reduce, branch-free binary search, RBF & LJG
+//!   arithmetic kernels.
+//! * **L2** — JAX graphs (`python/compile/model.py`) composing the
+//!   kernels, AOT-lowered once to HLO text (`artifacts/`).
+//! * **L3** — this crate: the [`runtime`] loads the artifacts via PJRT,
+//!   the [`algorithms`] suite exposes the paper's API over pluggable
+//!   [`backend`]s, and [`mpisort`] implements the SIHSort multi-node
+//!   sorting coordinator over a simulated HPC [`cluster`] with an
+//!   MPI-like [`comm`] layer.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+
+pub mod algorithms;
+pub mod backend;
+pub mod baselines;
+pub mod bench;
+pub mod cfg;
+pub mod cli;
+pub mod cluster;
+pub mod comm;
+pub mod coordinator;
+pub mod cost;
+pub mod dtype;
+pub mod metrics;
+pub mod mpisort;
+pub mod prop;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the `artifacts/` directory: `$ACCELKERN_ARTIFACTS` if set, else
+/// `<repo root>/artifacts` resolved relative to the crate manifest.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("ACCELKERN_ARTIFACTS") {
+        return dir.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,167 @@
+//! `akbench` — the leader entrypoint / CLI of the AcceleratedKernels
+//! reproduction. See `akbench help` (cli::USAGE) and DESIGN.md §5 for the
+//! figure-to-subcommand map.
+
+use std::sync::Arc;
+
+use accelkern::cfg::RunConfig;
+use accelkern::cli::{Cli, USAGE};
+use accelkern::coordinator::campaign;
+use accelkern::coordinator::driver::run_for_config;
+use accelkern::dtype::ElemType;
+use accelkern::runtime::Runtime;
+
+fn main() {
+    let cli = match Cli::parse(std::env::args()) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(2);
+        }
+    };
+    if cli.command == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&cli) {
+        eprintln!("akbench {}: error: {e:#}", cli.command);
+        std::process::exit(1);
+    }
+}
+
+fn open_runtime(cli: &Cli) -> Option<Arc<Runtime>> {
+    if cli.has("no-device") {
+        return None;
+    }
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("warn: no device runtime ({e}); continuing host-only");
+            None
+        }
+    }
+}
+
+fn run(cli: &Cli) -> anyhow::Result<()> {
+    let quick = cli.has("quick");
+    match cli.command.as_str() {
+        "info" => {
+            let rt = Runtime::open_default()?;
+            println!("platform: {}", rt.platform());
+            let m = rt.manifest();
+            println!("artifact dir: {}", m.dir.display());
+            println!("tile: {}", m.tile);
+            println!("artifacts: {}", m.artifacts.len());
+            let mut ops: Vec<&str> = m.artifacts.iter().map(|a| a.op.as_str()).collect();
+            ops.sort();
+            ops.dedup();
+            for op in ops {
+                let n = m.artifacts.iter().filter(|a| a.op == op).count();
+                println!("  {op:<24} {n} variants");
+            }
+            Ok(())
+        }
+        "sort" => {
+            let cfg = cli.run_config()?;
+            let rt = open_runtime(cli);
+            let out = run_for_config(&cfg, rt)?;
+            println!("{}", out.record.row());
+            println!(
+                "bucket sizes: min {} max {} (ideal {}), refinement rounds {}",
+                out.out_sizes.iter().min().unwrap(),
+                out.out_sizes.iter().max().unwrap(),
+                cfg.elems_per_rank,
+                out.rounds_used
+            );
+            Ok(())
+        }
+        "table2" => {
+            let n = cli.get_usize("n")?.unwrap_or(if quick { 1 << 20 } else { 1 << 22 });
+            let threads = cli.get_usize("threads")?.unwrap_or(
+                accelkern::backend::threaded::default_threads(),
+            );
+            let rt = open_runtime(cli);
+            accelkern::coordinator::campaign::table2(n, threads, &rt, quick)
+        }
+        "fig1" => {
+            let cfg = base_cfg(cli)?;
+            let rt = open_runtime(cli);
+            let ranks: Vec<usize> =
+                if quick { vec![2, 4] } else { vec![1, 2, 4, 8, 16] };
+            campaign::fig1(&cfg, &ranks, 25_000 / 4, 2_500_000 / 4, &rt)?;
+            Ok(())
+        }
+        "fig2" => {
+            let cfg = base_cfg(cli)?;
+            let rt = open_runtime(cli);
+            let ranks: Vec<usize> = if quick { vec![4, 8] } else { vec![4, 8, 16, 32, 64] };
+            let bytes = cli
+                .get_f64("mb-per-rank")?
+                .map(|m| (m * 1e6) as usize)
+                .unwrap_or(if quick { 1 << 20 } else { 4 << 20 });
+            campaign::fig2(&cfg, &ranks, bytes, &ElemType::ALL, &rt)?;
+            Ok(())
+        }
+        "fig3" => {
+            let cfg = base_cfg(cli)?;
+            let rt = open_runtime(cli);
+            let ranks: Vec<usize> = if quick { vec![4, 8] } else { vec![4, 8, 16, 32, 64] };
+            let total = cli
+                .get_f64("total-mb")?
+                .map(|m| (m * 1e6) as usize)
+                .unwrap_or(if quick { 8 << 20 } else { 64 << 20 });
+            campaign::fig3(&cfg, &ranks, total, &[ElemType::I32, ElemType::I64], &rt)?;
+            Ok(())
+        }
+        "fig4" => {
+            let cfg = base_cfg(cli)?;
+            let rt = open_runtime(cli);
+            let ranks = cli.get_usize("ranks")?.unwrap_or(if quick { 4 } else { 16 });
+            let sizes: Vec<usize> =
+                if quick { vec![1 << 20] } else { vec![1 << 20, 4 << 20] };
+            campaign::fig4(&cfg, ranks, &sizes, &ElemType::ALL, &rt)?;
+            Ok(())
+        }
+        "fig5" => {
+            let cfg = base_cfg(cli)?;
+            let rt = open_runtime(cli);
+            let ranks = cli.get_usize("ranks")?.unwrap_or(4);
+            let counts: Vec<usize> = if quick {
+                vec![10_000, 1_000_000]
+            } else {
+                vec![1_000, 10_000, 100_000, 1_000_000, 10_000_000]
+            };
+            campaign::fig5(&cfg, ranks, &counts, &rt)?;
+            Ok(())
+        }
+        "ablate" => {
+            let cfg = base_cfg(cli)?;
+            let rt = open_runtime(cli);
+            campaign::ablations(&cfg, &rt, quick)
+        }
+        "selftest" => {
+            let mut cfg = RunConfig::default();
+            cfg.ranks = 4;
+            cfg.elems_per_rank = 10_000;
+            let rt = open_runtime(cli);
+            for dt in ElemType::ALL {
+                cfg.dtype = dt;
+                let out = run_for_config(&cfg, rt.clone())?;
+                println!("selftest {}: OK ({} msgs)", dt, out.record.messages);
+            }
+            println!("selftest: all dtypes OK");
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown command '{other}'\n\n{USAGE}")
+        }
+    }
+}
+
+fn base_cfg(cli: &Cli) -> anyhow::Result<RunConfig> {
+    let mut cfg = cli.run_config()?;
+    if cli.has("quick") {
+        cfg.refine_rounds = cfg.refine_rounds.min(3);
+    }
+    Ok(cfg)
+}

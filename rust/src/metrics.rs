@@ -1,0 +1,187 @@
+//! Run records + paper-style table/series rendering.
+//!
+//! Each distributed-sort run produces a [`SortRunRecord`] with the phase
+//! breakdown and fabric statistics; the figure benches collect them into
+//! [`Series`] and print the same rows/curves the paper plots (weak/strong
+//! scaling, max-throughput bars, cost-normalised times). CSV dumps land in
+//! `target/bench-results/` for external plotting.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+
+use crate::cfg::{RunConfig, Sorter, TransferMode};
+use crate::util::{fmt_bytes, fmt_duration, fmt_throughput};
+
+/// Outcome of one distributed sort run (simulated times — see
+/// `cluster::devmodel` for the calibration story).
+#[derive(Clone, Debug)]
+pub struct SortRunRecord {
+    pub label: String,
+    pub ranks: usize,
+    pub total_bytes: usize,
+    /// Simulated end-to-end makespan (seconds).
+    pub sim_total: f64,
+    /// Phase breakdown (simulated seconds, max over ranks).
+    pub sim_local_sort: f64,
+    pub sim_splitters: f64,
+    pub sim_exchange: f64,
+    pub sim_final: f64,
+    /// Fabric statistics.
+    pub messages: u64,
+    pub wire_bytes: u64,
+    /// Wall-clock the host actually spent (for the §Perf log).
+    pub wall_secs: f64,
+}
+
+impl SortRunRecord {
+    /// Sorting throughput in the paper's unit (GB sorted / simulated s).
+    pub fn throughput_bps(&self) -> f64 {
+        if self.sim_total <= 0.0 {
+            return 0.0;
+        }
+        self.total_bytes as f64 / self.sim_total
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<22} ranks={:<4} {:>10}  t={:>10}  [sort {} | split {} | xchg {} | final {}]  {:>14}  msgs={} wire={}",
+            self.label,
+            self.ranks,
+            fmt_bytes(self.total_bytes as f64),
+            fmt_duration(self.sim_total),
+            fmt_duration(self.sim_local_sort),
+            fmt_duration(self.sim_splitters),
+            fmt_duration(self.sim_exchange),
+            fmt_duration(self.sim_final),
+            fmt_throughput(self.throughput_bps()),
+            self.messages,
+            fmt_bytes(self.wire_bytes as f64),
+        )
+    }
+}
+
+/// Paper-legend label for a configuration: `GG-AK`, `GC-TR`, `CC-JB`, ...
+pub fn legend(sorter: Sorter, transfer: TransferMode) -> String {
+    format!("{}-{}", transfer.prefix(sorter), sorter.code())
+}
+
+/// Label including dtype, e.g. `GG-AK/Int32`.
+pub fn legend_dtype(cfg: &RunConfig) -> String {
+    format!("{}/{}", legend(cfg.sorter, cfg.transfer), cfg.dtype.paper_name())
+}
+
+/// A named (x, y) curve, e.g. ranks → GB/s.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Render aligned series as a text table: one row per x, one column per
+/// series (the paper's figures as text).
+pub fn render_series_table(title: &str, x_label: &str, y_label: &str, series: &[Series]) -> String {
+    let mut xs: Vec<f64> = series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs.dedup();
+    let mut out = String::new();
+    let _ = writeln!(out, "\n== {title} ==  ({y_label} by {x_label})");
+    let _ = write!(out, "{:>12}", x_label);
+    for s in series {
+        let _ = write!(out, " {:>16}", s.name);
+    }
+    let _ = writeln!(out);
+    for x in xs {
+        let _ = write!(out, "{x:>12.4}");
+        for s in series {
+            match s.points.iter().find(|p| p.0 == x) {
+                Some((_, y)) => {
+                    let _ = write!(out, " {y:>16.6}");
+                }
+                None => {
+                    let _ = write!(out, " {:>16}", "-");
+                }
+            }
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// Write series to `target/bench-results/<file>.csv` (long format:
+/// series,x,y) for external plotting. Errors are reported, not fatal.
+pub fn dump_csv(file: &str, series: &[Series]) {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target/bench-results");
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        eprintln!("warn: cannot create {}: {e}", dir.display());
+        return;
+    }
+    let path = dir.join(format!("{file}.csv"));
+    let mut body = String::from("series,x,y\n");
+    for s in series {
+        for (x, y) in &s.points {
+            let _ = writeln!(body, "{},{x},{y}", s.name);
+        }
+    }
+    match std::fs::File::create(&path).and_then(|mut f| f.write_all(body.as_bytes())) {
+        Ok(()) => eprintln!("  wrote {}", path.display()),
+        Err(e) => eprintln!("warn: writing {}: {e}", path.display()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::ElemType;
+
+    #[test]
+    fn legend_codes() {
+        assert_eq!(legend(Sorter::Ak, TransferMode::GpuDirect), "GG-AK");
+        assert_eq!(legend(Sorter::ThrustRadix, TransferMode::CpuStaged), "GC-TR");
+        assert_eq!(legend(Sorter::JuliaBase, TransferMode::CpuStaged), "CC-JB");
+        let mut cfg = RunConfig::default();
+        cfg.dtype = ElemType::I64;
+        assert!(legend_dtype(&cfg).ends_with("/Int64"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let rec = SortRunRecord {
+            label: "x".into(),
+            ranks: 4,
+            total_bytes: 8_000_000_000,
+            sim_total: 2.0,
+            sim_local_sort: 1.0,
+            sim_splitters: 0.1,
+            sim_exchange: 0.7,
+            sim_final: 0.2,
+            messages: 10,
+            wire_bytes: 100,
+            wall_secs: 30.0,
+        };
+        assert_eq!(rec.throughput_bps(), 4e9);
+        assert!(rec.row().contains("GB/s"));
+    }
+
+    #[test]
+    fn series_table_aligns() {
+        let mut a = Series::new("A");
+        a.push(1.0, 10.0);
+        a.push(2.0, 20.0);
+        let mut b = Series::new("B");
+        b.push(2.0, 200.0);
+        let t = render_series_table("T", "x", "y", &[a, b]);
+        assert!(t.contains("T"));
+        assert!(t.contains('-')); // missing point marker
+        assert!(t.lines().count() >= 4);
+    }
+}

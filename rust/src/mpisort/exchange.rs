@@ -1,0 +1,82 @@
+//! Partition + data exchange (SIHSort steps 4–5).
+//!
+//! Partitioning a *sorted* shard at the splitters is P-1 binary searches
+//! (zero element copies — we slice). The exchange is exactly one
+//! `alltoallv`: bucket j of every rank lands on rank j.
+
+use crate::dtype::SortKey;
+
+/// Cut points of a sorted shard at the splitters (bit image): bucket `j`
+/// is `sorted[cuts[j]..cuts[j+1]]` with implicit cuts[0]=0,
+/// cuts[P-1]=len. Elements equal to splitter j go to bucket j (<=, i.e.
+/// `searchsortedlast` semantics, matching `splitters::local_ranks`).
+pub fn partition_points<K: SortKey>(sorted: &[K], splitters_bits: &[u128]) -> Vec<usize> {
+    let mut cuts = Vec::with_capacity(splitters_bits.len());
+    let mut floor = 0usize;
+    for &s in splitters_bits {
+        // Running max guards against (already-prevented) non-monotone
+        // splitters ever producing invalid slice bounds.
+        floor = floor.max(sorted.partition_point(|x| x.to_bits() <= s));
+        cuts.push(floor);
+    }
+    cuts
+}
+
+/// Split a sorted shard into P bucket slices by the cut points.
+pub fn buckets<'a, K: SortKey>(sorted: &'a [K], cuts: &[usize]) -> Vec<&'a [K]> {
+    let p = cuts.len() + 1;
+    let mut out = Vec::with_capacity(p);
+    let mut lo = 0usize;
+    for &c in cuts {
+        out.push(&sorted[lo..c]);
+        lo = c;
+    }
+    out.push(&sorted[lo..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution};
+
+    #[test]
+    fn buckets_cover_and_order() {
+        let mut xs: Vec<i32> = generate(&mut Prng::new(1), Distribution::Uniform, 5000);
+        xs.sort_unstable();
+        let splitters: Vec<u128> =
+            vec![(-500_000i32).to_bits(), 0i32.to_bits(), 500_000i32.to_bits()];
+        let cuts = partition_points(&xs, &splitters);
+        let bs = buckets(&xs, &cuts);
+        assert_eq!(bs.len(), 4);
+        assert_eq!(bs.iter().map(|b| b.len()).sum::<usize>(), xs.len());
+        // Every element in bucket j is <= splitter j; > splitter j-1.
+        for (j, b) in bs.iter().enumerate() {
+            for x in *b {
+                if j < splitters.len() {
+                    assert!(x.to_bits() <= splitters[j]);
+                }
+                if j > 0 {
+                    assert!(x.to_bits() > splitters[j - 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duplicates_at_splitter_go_left() {
+        let xs = vec![1i32, 2, 2, 2, 3];
+        let cuts = partition_points(&xs, &[2i32.to_bits()]);
+        assert_eq!(cuts, vec![4]); // all 2s included left
+    }
+
+    #[test]
+    fn empty_shard() {
+        let xs: Vec<i64> = vec![];
+        let cuts = partition_points(&xs, &[0i64.to_bits()]);
+        assert_eq!(cuts, vec![0]);
+        let bs = buckets(&xs, &cuts);
+        assert!(bs.iter().all(|b| b.is_empty()));
+    }
+}

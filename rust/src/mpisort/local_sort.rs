@@ -1,0 +1,103 @@
+//! Pluggable rank-local sorters: the paper's CC-JB / AK / TM / TR legend.
+//!
+//! * `JuliaBase` — single-thread comparison sort on a CPU rank.
+//! * `Ak` — the AcceleratedKernels merge sort: our Pallas/XLA artifact
+//!   through PJRT (i128: host merge fallback, DESIGN.md §2).
+//! * `ThrustMerge` / `ThrustRadix` — the vendor-primitive analogs
+//!   (`baselines`).
+//!
+//! Each sorter measures its own wall time; the caller converts it to
+//! simulated device time through `cluster::DeviceModel`.
+
+use std::time::Instant;
+
+use crate::backend::{Backend, DeviceKey};
+use crate::baselines;
+use crate::cfg::Sorter;
+
+/// A rank's local sorting engine.
+#[derive(Clone)]
+pub enum LocalSorter {
+    JuliaBase,
+    Ak(Backend),
+    ThrustMerge,
+    ThrustRadix,
+}
+
+impl LocalSorter {
+    /// Build from config; `Ak` needs the device backend handle.
+    pub fn from_cfg(sorter: Sorter, device_backend: Option<Backend>) -> anyhow::Result<Self> {
+        Ok(match sorter {
+            Sorter::JuliaBase => LocalSorter::JuliaBase,
+            Sorter::Ak => LocalSorter::Ak(
+                device_backend
+                    .ok_or_else(|| anyhow::anyhow!("AK sorter requires the device backend"))?,
+            ),
+            Sorter::ThrustMerge => LocalSorter::ThrustMerge,
+            Sorter::ThrustRadix => LocalSorter::ThrustRadix,
+        })
+    }
+
+    pub fn code(&self) -> &'static str {
+        match self {
+            LocalSorter::JuliaBase => "JB",
+            LocalSorter::Ak(_) => "AK",
+            LocalSorter::ThrustMerge => "TM",
+            LocalSorter::ThrustRadix => "TR",
+        }
+    }
+
+    /// Runs on a device (GPU-class) rank?
+    pub fn is_device(&self) -> bool {
+        !matches!(self, LocalSorter::JuliaBase)
+    }
+
+    /// Sort in place; returns measured host wall seconds.
+    pub fn sort<K: DeviceKey>(&self, xs: &mut [K]) -> anyhow::Result<f64> {
+        let t0 = Instant::now();
+        match self {
+            LocalSorter::JuliaBase => xs.sort_by(|a, b| a.cmp_total(b)),
+            LocalSorter::Ak(backend) => crate::algorithms::sort(backend, xs)?,
+            LocalSorter::ThrustMerge => baselines::merge_sort(xs),
+            LocalSorter::ThrustRadix => baselines::radix_sort(xs),
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::is_sorted_total;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution};
+
+    #[test]
+    fn host_sorters_agree() {
+        let xs: Vec<i64> = generate(&mut Prng::new(1), Distribution::Uniform, 4000);
+        let mut want = xs.clone();
+        want.sort_unstable();
+        for s in [LocalSorter::JuliaBase, LocalSorter::ThrustMerge, LocalSorter::ThrustRadix] {
+            let mut got = xs.clone();
+            let secs = s.sort(&mut got).unwrap();
+            assert!(got == want, "{}", s.code());
+            assert!(secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn i128_works_on_host_sorters() {
+        let xs: Vec<i128> = generate(&mut Prng::new(2), Distribution::Uniform, 1000);
+        for s in [LocalSorter::JuliaBase, LocalSorter::ThrustMerge, LocalSorter::ThrustRadix] {
+            let mut got = xs.clone();
+            s.sort(&mut got).unwrap();
+            assert!(is_sorted_total(&got));
+        }
+    }
+
+    #[test]
+    fn ak_requires_backend() {
+        assert!(LocalSorter::from_cfg(Sorter::Ak, None).is_err());
+        assert!(LocalSorter::from_cfg(Sorter::JuliaBase, None).is_ok());
+    }
+}

@@ -1,0 +1,33 @@
+//! SIHSort — "Sampling with Interpolated Histograms Sort" (paper §IV-A),
+//! the MPISort.jl reproduction and this repo's L3 coordination
+//! contribution.
+//!
+//! Sample-sort derivative over P ranks:
+//! 1. local sort of each rank's shard (pluggable sorter: CC-JB / AK /
+//!    TM / TR — `local_sort`),
+//! 2. regular sampling of each sorted shard,
+//! 3. splitter selection by *interpolated histograms*: the leader builds
+//!    a global sample histogram, interpolates candidate splitters, and
+//!    refines them over a bounded number of rounds against exact local
+//!    ranks (computed with `searchsortedlast`) until buckets balance
+//!    (`splitters`),
+//! 4. partition: each rank cuts its sorted shard at the splitters —
+//!    binary search, zero element copies (`exchange`),
+//! 5. one `alltoallv` moves bucket j to rank j (`exchange`),
+//! 6. final phase: k-way merge of the received sorted runs, or the
+//!    paper's full re-sort (`FinalPhase`, ablated in the benches).
+//!
+//! The paper's low-communication claims hold by construction: one
+//! allgather of samples, `refine_rounds` × (bcast + gather) of counters
+//! — with the counters appended to the splitter payload, the paper's
+//! "counters hidden at the end of integer arrays" trick — and exactly
+//! one all-to-all data exchange. The proptests assert global order,
+//! permutation preservation and bucket balance.
+
+pub mod exchange;
+pub mod local_sort;
+pub mod sihsort;
+pub mod splitters;
+
+pub use local_sort::LocalSorter;
+pub use sihsort::{sihsort_rank, RankOutcome, SihConfig};

@@ -1,0 +1,293 @@
+//! The per-rank SIHSort algorithm (see module docs in `mod.rs`).
+
+use std::time::Instant;
+
+use crate::backend::DeviceKey;
+use crate::baselines::kmerge;
+use crate::cfg::FinalPhase;
+use crate::cluster::DeviceModel;
+use crate::comm::Endpoint;
+use crate::dtype::SortKey;
+
+use super::exchange::{buckets, partition_points};
+use super::local_sort::LocalSorter;
+use super::splitters::{
+    initial_brackets, initial_candidates, local_ranks, pack_candidates, refine, regular_samples,
+    unpack_candidates, RefineState,
+};
+
+/// SIHSort tuning parameters.
+#[derive(Clone, Debug)]
+pub struct SihConfig {
+    pub samples_per_rank: usize,
+    pub refine_rounds: usize,
+    pub balance_tol: f64,
+    pub final_phase: FinalPhase,
+    pub devmodel: DeviceModel,
+}
+
+impl Default for SihConfig {
+    fn default() -> Self {
+        Self {
+            samples_per_rank: 64,
+            refine_rounds: 4,
+            balance_tol: 0.10,
+            final_phase: FinalPhase::Merge,
+            devmodel: DeviceModel::default(),
+        }
+    }
+}
+
+/// Per-rank result: the globally-sorted shard + phase breakdown
+/// (simulated seconds for this rank).
+#[derive(Clone, Debug)]
+pub struct RankOutcome<K> {
+    pub data: Vec<K>,
+    pub sim_local_sort: f64,
+    pub sim_splitters: f64,
+    pub sim_exchange: f64,
+    pub sim_final: f64,
+    /// Host wall-clock this rank actually consumed.
+    pub wall_secs: f64,
+    /// Splitter refinement rounds actually used (leader-reported).
+    pub rounds_used: usize,
+}
+
+const LEADER: usize = 0;
+
+/// Run SIHSort on this rank's shard. Every rank of the fabric must call
+/// this collectively (same config). Returns the rank's final shard:
+/// ascending locally, and globally `outcome[r].data <= outcome[r+1].data`.
+pub fn sihsort_rank<K: DeviceKey>(
+    ep: &mut Endpoint,
+    shard: Vec<K>,
+    sorter: &LocalSorter,
+    cfg: &SihConfig,
+) -> anyhow::Result<RankOutcome<K>> {
+    let wall0 = Instant::now();
+    let p = ep.nranks();
+    let is_dev = sorter.is_device();
+    let charge = |ep: &Endpoint, measured: f64| {
+        ep.advance(cfg.devmodel.compute_time(measured, is_dev));
+    };
+
+    // ---- Phase 1: local sort ------------------------------------------------
+    let t_phase = ep.now();
+    // Measured under the fabric's compute token: wall time reflects this
+    // rank's work alone, not host-core oversubscription (fabric docs).
+    let ((sorted, sort_res), secs) = ep.measured(move || {
+        let mut s = shard;
+        let r = sorter.sort(&mut s);
+        (s, r)
+    });
+    sort_res?;
+    charge(ep, secs);
+    ep.barrier();
+    let sim_local_sort = ep.now() - t_phase;
+
+    // ---- Phase 2+3: sampling + interpolated-histogram refinement -----------
+    let t_phase = ep.now();
+    let (splitters, rounds_used) = select_splitters(ep, &sorted, cfg, is_dev)?;
+    let sim_splitters = ep.now() - t_phase;
+
+    // ---- Phase 4+5: partition + single alltoallv ----------------------------
+    let t_phase = ep.now();
+    let (parts, secs) = ep.measured(|| {
+        let cuts = partition_points(&sorted, &splitters);
+        buckets(&sorted, &cuts).into_iter().map(|b| b.to_vec()).collect::<Vec<Vec<K>>>()
+    });
+    debug_assert_eq!(parts.len(), p);
+    charge(ep, secs);
+    let received = ep.alltoallv(parts);
+    drop(sorted);
+    let sim_exchange = ep.now() - t_phase;
+
+    // ---- Phase 6: final combine ---------------------------------------------
+    let t_phase = ep.now();
+    let (data, secs) = ep.measured(|| -> anyhow::Result<Vec<K>> {
+        match cfg.final_phase {
+            FinalPhase::Merge => {
+                // Received runs are each sorted: k-way merge.
+                let refs: Vec<&[K]> = received.iter().map(|r| r.as_slice()).collect();
+                Ok(kmerge(&refs))
+            }
+            FinalPhase::Sort => {
+                // The paper's described variant: concatenate + full re-sort.
+                let mut all: Vec<K> = received.iter().flatten().copied().collect();
+                sorter.sort(&mut all)?;
+                Ok(all)
+            }
+        }
+    });
+    let data = data?;
+    charge(ep, secs);
+    ep.barrier();
+    let sim_final = ep.now() - t_phase;
+
+    Ok(RankOutcome {
+        data,
+        sim_local_sort,
+        sim_splitters,
+        sim_exchange,
+        sim_final,
+        wall_secs: wall0.elapsed().as_secs_f64(),
+        rounds_used,
+    })
+}
+
+/// Collective splitter selection; returns P-1 splitters in bit-image
+/// space and the number of refinement rounds used.
+fn select_splitters<K: SortKey>(
+    ep: &mut Endpoint,
+    sorted: &[K],
+    cfg: &SihConfig,
+    is_dev: bool,
+) -> anyhow::Result<(Vec<u128>, usize)> {
+    let p = ep.nranks();
+    if p == 1 {
+        return Ok((Vec::new(), 0));
+    }
+    let charge = |ep: &Endpoint, measured: f64| {
+        ep.advance(cfg.devmodel.compute_time(measured, is_dev));
+    };
+
+    // Sampling: gather p regular samples (as bit images) at the leader.
+    let (samples, secs) = ep.measured(|| {
+        regular_samples(sorted, cfg.samples_per_rank)
+            .into_iter()
+            .map(|x| x.to_bits())
+            .collect::<Vec<u128>>()
+    });
+    charge(ep, secs);
+    let sample_bytes = u128s_to_bytes(&samples);
+    let gathered = ep.gather_bytes(LEADER, sample_bytes);
+
+    // Global element count rides an allreduce (one u64).
+    let total = ep.allreduce_u64(sorted.len() as u64, crate::comm::collectives::ReduceOp::Sum);
+
+    let mut leader_state: Option<RefineState> = if ep.rank() == LEADER {
+        let pooled: Vec<u128> =
+            gathered.unwrap().iter().flat_map(|b| bytes_to_u128s(b)).collect();
+        let candidates = initial_candidates(pooled, p);
+        let brackets = initial_brackets(&candidates, total);
+        Some(RefineState { candidates, brackets })
+    } else {
+        None
+    };
+
+    // Refinement rounds (lockstep on every rank).
+    let mut done_next = false;
+    let mut rounds_used = 0usize;
+    for round in 0..=cfg.refine_rounds {
+        let is_last = round == cfg.refine_rounds || done_next;
+        // Leader broadcasts candidates (+ done flag hidden at the tail).
+        let payload = if ep.rank() == LEADER {
+            pack_candidates(&leader_state.as_ref().unwrap().candidates, is_last)
+        } else {
+            Vec::new()
+        };
+        let (candidates, done) = unpack_candidates(&ep.bcast_bytes(LEADER, payload));
+        if done {
+            return Ok((candidates, rounds_used));
+        }
+        rounds_used = round + 1;
+
+        // Every rank measures exact local ranks (searchsortedlast).
+        let (lranks, secs) = ep.measured(|| local_ranks(sorted, &candidates));
+        charge(ep, secs);
+        let gathered = ep.gather_bytes(LEADER, u64s_to_bytes(&lranks));
+
+        if ep.rank() == LEADER {
+            let per_rank: Vec<Vec<u64>> =
+                gathered.unwrap().iter().map(|b| bytes_to_u64s(b)).collect();
+            let mut global = vec![0u64; candidates.len()];
+            for pr in &per_rank {
+                for (g, v) in global.iter_mut().zip(pr.iter()) {
+                    *g += v;
+                }
+            }
+            let state = leader_state.as_mut().unwrap();
+            // Measurements correspond to the *broadcast* candidates.
+            state.candidates = candidates;
+            let (next, worst) = refine(state, &global, total, p, cfg.balance_tol);
+            if worst <= cfg.balance_tol {
+                // Measured candidates are balanced: finalise them next round.
+                done_next = true;
+            } else {
+                *state = next;
+            }
+        }
+        // Non-leaders learn about termination from the next bcast's flag.
+    }
+    unreachable!("refinement loop always terminates via the done broadcast")
+}
+
+// -- byte helpers (wire format for counters/samples) -------------------------
+
+pub(super) fn u128s_to_bytes(xs: &[u128]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 * xs.len());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub(super) fn bytes_to_u128s(b: &[u8]) -> Vec<u128> {
+    assert_eq!(b.len() % 16, 0);
+    b.chunks_exact(16)
+        .map(|c| {
+            let mut a = [0u8; 16];
+            a.copy_from_slice(c);
+            u128::from_le_bytes(a)
+        })
+        .collect()
+}
+
+pub(super) fn u64s_to_bytes(xs: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 * xs.len());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub(super) fn bytes_to_u64s(b: &[u8]) -> Vec<u64> {
+    assert_eq!(b.len() % 8, 0);
+    b.chunks_exact(8)
+        .map(|c| {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(c);
+            u64::from_le_bytes(a)
+        })
+        .collect()
+}
+
+/// Input/output conservation checksum: (count, wrapping sum of bit
+/// images). Equal checksums + equal counts make "output is a permutation
+/// of input" overwhelmingly likely; tests on small inputs compare
+/// multisets exactly.
+pub fn checksum<K: SortKey>(xs: &[K]) -> (u64, u128) {
+    (xs.len() as u64, xs.iter().fold(0u128, |a, x| a.wrapping_add(x.to_bits())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_helpers_roundtrip() {
+        let a = vec![0u128, 1, u128::MAX];
+        assert_eq!(bytes_to_u128s(&u128s_to_bytes(&a)), a);
+        let b = vec![0u64, 42, u64::MAX];
+        assert_eq!(bytes_to_u64s(&u64s_to_bytes(&b)), b);
+    }
+
+    #[test]
+    fn checksum_permutation_invariant() {
+        let xs = vec![3i32, -1, 7, 3];
+        let ys = vec![7i32, 3, 3, -1];
+        assert_eq!(checksum(&xs), checksum(&ys));
+        let zs = vec![7i32, 3, 3, -2];
+        assert_ne!(checksum(&xs), checksum(&zs));
+    }
+}

@@ -1,0 +1,234 @@
+//! Splitter selection by sampling + interpolated-histogram refinement
+//! (the "SIH" in SIHSort).
+//!
+//! Round 0: every rank contributes `p` regular samples of its sorted
+//! shard; the leader sorts the P·p samples and takes initial splitter
+//! candidates at the bucket quantiles. Refinement rounds then measure the
+//! *exact* global rank of each candidate (sum over ranks of
+//! `searchsortedlast(shard, candidate)` — one u64 counter per candidate,
+//! appended to the splitter broadcast payload: the paper's
+//! counters-hidden-in-the-array trick) and move each candidate by
+//! interpolating within its bracketing histogram bin until every bucket
+//! is within `balance_tol` of ideal or the round budget is exhausted.
+//!
+//! Everything runs on the key *bit image* (u128): one code path for all
+//! six dtypes, floats included (monotone transform).
+
+use crate::dtype::SortKey;
+
+/// Leader-side state for one refinement round.
+#[derive(Clone, Debug)]
+pub struct RefineState {
+    /// Candidate splitters (bit-image space), length P-1.
+    pub candidates: Vec<u128>,
+    /// Bracketing intervals per candidate: (lo_bits, hi_bits, lo_rank, hi_rank).
+    pub brackets: Vec<(u128, u128, u64, u64)>,
+}
+
+/// Take `p` regular samples of an ascending-sorted shard.
+pub fn regular_samples<K: SortKey>(sorted: &[K], p: usize) -> Vec<K> {
+    let n = sorted.len();
+    if n == 0 || p == 0 {
+        return Vec::new();
+    }
+    (0..p)
+        .map(|i| {
+            // Sample at (i + 1) / (p + 1) quantiles — interior points.
+            let idx = ((i + 1) * n) / (p + 1);
+            sorted[idx.min(n - 1)]
+        })
+        .collect()
+}
+
+/// Initial candidates from the pooled samples: quantile cuts for P buckets.
+pub fn initial_candidates(mut pooled_bits: Vec<u128>, ranks: usize) -> Vec<u128> {
+    pooled_bits.sort_unstable();
+    let m = pooled_bits.len();
+    if ranks <= 1 {
+        return Vec::new();
+    }
+    (1..ranks)
+        .map(|b| {
+            if m == 0 {
+                // Degenerate: no samples (all shards empty) — spread over
+                // the full key space.
+                (u128::MAX / ranks as u128) * b as u128
+            } else {
+                let idx = (b * m) / ranks;
+                pooled_bits[idx.min(m - 1)]
+            }
+        })
+        .collect()
+}
+
+/// Exact local rank of each candidate within a sorted shard:
+/// `searchsortedlast` (elements <= candidate), run on the bit image.
+pub fn local_ranks<K: SortKey>(sorted: &[K], candidates: &[u128]) -> Vec<u64> {
+    candidates
+        .iter()
+        .map(|&c| sorted.partition_point(|x| x.to_bits() <= c) as u64)
+        .collect()
+}
+
+/// One leader-side refinement step: move candidates whose global rank is
+/// outside tolerance by linear interpolation inside their bracket.
+/// Returns (new state, worst relative imbalance).
+pub fn refine(
+    state: &RefineState,
+    global_ranks: &[u64],
+    total: u64,
+    ranks: usize,
+    _tol: f64,
+) -> (RefineState, f64) {
+    let ideal = total as f64 / ranks as f64;
+    let mut worst = 0.0f64;
+    let mut next = state.clone();
+    for (i, (&cand, &got)) in state.candidates.iter().zip(global_ranks.iter()).enumerate() {
+        let want = (ideal * (i + 1) as f64).round() as i128;
+        let err = (got as i128 - want).unsigned_abs() as f64 / ideal.max(1.0);
+        worst = worst.max(err);
+        let (mut lo, mut hi, mut lo_rank, mut hi_rank) = next.brackets[i];
+        // Tighten the bracket with the measurement.
+        if (got as i128) < want {
+            lo = cand;
+            lo_rank = got;
+        } else {
+            hi = cand;
+            hi_rank = got;
+        }
+        // Interpolate the next candidate position within the bracket
+        // (assume locally-uniform rank density — the "interpolated
+        // histogram" step; falls back to bisection on degenerate spans).
+        let new_cand = if hi_rank > lo_rank && hi > lo {
+            let frac = (want as f64 - lo_rank as f64) / (hi_rank as f64 - lo_rank as f64);
+            let frac = frac.clamp(0.0, 1.0);
+            let span = hi - lo;
+            lo + (span as f64 * frac) as u128
+        } else {
+            lo / 2 + hi / 2 + (lo & hi & 1)
+        };
+        next.candidates[i] = new_cand.clamp(lo, hi);
+        next.brackets[i] = (lo, hi, lo_rank, hi_rank);
+    }
+    // Candidates refine independently and can cross on skewed data;
+    // buckets require non-decreasing splitters (running max, cheap and
+    // deterministic — every rank would apply the same fix).
+    for i in 1..next.candidates.len() {
+        if next.candidates[i] < next.candidates[i - 1] {
+            next.candidates[i] = next.candidates[i - 1];
+        }
+    }
+    (next, worst)
+}
+
+/// Initial brackets: full key space with rank bounds [0, total].
+pub fn initial_brackets(candidates: &[u128], total: u64) -> Vec<(u128, u128, u64, u64)> {
+    candidates.iter().map(|_| (0u128, u128::MAX, 0u64, total)).collect()
+}
+
+/// Pack candidates + a round-continuation flag into one broadcast payload
+/// (u128 LE words; the flag rides as the last word — the paper's hidden
+/// counter).
+pub fn pack_candidates(candidates: &[u128], done: bool) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 * (candidates.len() + 1));
+    for c in candidates {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    out.extend_from_slice(&(done as u128).to_le_bytes());
+    out
+}
+
+/// Inverse of [`pack_candidates`].
+pub fn unpack_candidates(bytes: &[u8]) -> (Vec<u128>, bool) {
+    assert!(bytes.len() % 16 == 0 && !bytes.is_empty());
+    let words = bytes.len() / 16;
+    let mut cands = Vec::with_capacity(words - 1);
+    for w in 0..words - 1 {
+        let mut b = [0u8; 16];
+        b.copy_from_slice(&bytes[16 * w..16 * (w + 1)]);
+        cands.push(u128::from_le_bytes(b));
+    }
+    let mut b = [0u8; 16];
+    b.copy_from_slice(&bytes[16 * (words - 1)..]);
+    (cands, u128::from_le_bytes(b) != 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution};
+
+    #[test]
+    fn regular_samples_are_interior_and_sorted() {
+        let mut xs: Vec<i32> = generate(&mut Prng::new(1), Distribution::Uniform, 1000);
+        xs.sort_unstable();
+        let s = regular_samples(&xs, 16);
+        assert_eq!(s.len(), 16);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]));
+        assert!(s[0] >= xs[0] && *s.last().unwrap() <= *xs.last().unwrap());
+    }
+
+    #[test]
+    fn initial_candidates_quantiles() {
+        let bits: Vec<u128> = (0..100u128).collect();
+        let c = initial_candidates(bits, 4);
+        assert_eq!(c.len(), 3);
+        assert!(c[0] < c[1] && c[1] < c[2]);
+        assert!((20..30).contains(&(c[0] as i32)));
+    }
+
+    #[test]
+    fn local_ranks_match_partition_point() {
+        let mut xs: Vec<i32> = generate(&mut Prng::new(2), Distribution::DupHeavy, 500);
+        xs.sort_unstable();
+        let cands: Vec<u128> = xs.iter().step_by(100).map(|x| x.to_bits()).collect();
+        let ranks = local_ranks(&xs, &cands);
+        for (c, r) in cands.iter().zip(&ranks) {
+            assert_eq!(*r as usize, xs.iter().filter(|x| x.to_bits() <= *c).count());
+        }
+    }
+
+    #[test]
+    fn refine_converges_on_uniform() {
+        // Synthetic single-shard refinement: global rank == local rank.
+        let mut xs: Vec<i64> = generate(&mut Prng::new(3), Distribution::Uniform, 10_000);
+        xs.sort_unstable();
+        let ranks = 8;
+        let samples: Vec<u128> = regular_samples(&xs, 32).iter().map(|x| x.to_bits()).collect();
+        let cands = initial_candidates(samples, ranks);
+        let mut state = RefineState {
+            brackets: initial_brackets(&cands, xs.len() as u64),
+            candidates: cands,
+        };
+        let mut worst = f64::INFINITY;
+        for _ in 0..6 {
+            let gr = local_ranks(&xs, &state.candidates);
+            let (next, w) = refine(&state, &gr, xs.len() as u64, ranks, 0.01);
+            state = next;
+            worst = w;
+            if worst < 0.01 {
+                break;
+            }
+        }
+        assert!(worst < 0.05, "imbalance {worst}");
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let cands = vec![1u128, u128::MAX / 2, u128::MAX];
+        let (got, done) = unpack_candidates(&pack_candidates(&cands, true));
+        assert_eq!(got, cands);
+        assert!(done);
+        let (got2, done2) = unpack_candidates(&pack_candidates(&[], false));
+        assert!(got2.is_empty());
+        assert!(!done2);
+    }
+
+    #[test]
+    fn degenerate_empty_samples() {
+        let c = initial_candidates(vec![], 4);
+        assert_eq!(c.len(), 3);
+        assert!(c[0] < c[1] && c[1] < c[2]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Minimal property-testing framework (proptest is unavailable offline —
+//! DESIGN.md §9).
+//!
+//! Deterministic seed-driven case generation with greedy shrinking:
+//! on failure the input is shrunk (halving lengths / simplifying values)
+//! until a locally-minimal counterexample remains, which is printed with
+//! the seed for replay. Used by `rust/tests/proptests.rs` for the
+//! coordinator invariants (DESIGN.md §6).
+
+use crate::util::Prng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Override case count with AK_PROP_CASES for deeper local runs.
+        let cases = std::env::var("AK_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(32);
+        Self { cases, seed: 0xACCE55, max_shrink_steps: 200 }
+    }
+}
+
+/// A generator produces a case from randomness; a shrinker yields smaller
+/// candidate cases.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Prng) -> Self::Value;
+    /// Candidate simplifications, most aggressive first.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value>;
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with a shrunk
+/// counterexample on failure.
+pub fn check<G: Gen, P: Fn(&G::Value) -> Result<(), String>>(name: &str, cfg: &PropConfig, gen: &G, prop: P) {
+    let mut rng = Prng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng_case = rng.fork(case as u64);
+        let value = gen.generate(&mut rng_case);
+        if let Err(msg) = prop(&value) {
+            // Shrink.
+            let mut best = value;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in gen.shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {}):\n  input: {best:?}\n  error: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Generator: `Vec<T>` with length in [0, max_len], elements from `f`.
+pub struct VecGen<T, F: Fn(&mut Prng) -> T> {
+    pub max_len: usize,
+    pub make: F,
+    pub _t: std::marker::PhantomData<T>,
+}
+
+impl<T, F: Fn(&mut Prng) -> T> VecGen<T, F> {
+    pub fn new(max_len: usize, make: F) -> Self {
+        Self { max_len, make, _t: std::marker::PhantomData }
+    }
+}
+
+impl<T: Clone + std::fmt::Debug, F: Fn(&mut Prng) -> T> Gen for VecGen<T, F> {
+    type Value = Vec<T>;
+
+    fn generate(&self, rng: &mut Prng) -> Vec<T> {
+        let len = rng.below(self.max_len as u64 + 1) as usize;
+        (0..len).map(|_| (self.make)(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        let n = v.len();
+        if n == 0 {
+            return out;
+        }
+        // Halves first (aggressive), then drop-one (fine-grained).
+        out.push(v[..n / 2].to_vec());
+        out.push(v[n / 2..].to_vec());
+        if n <= 8 {
+            for i in 0..n {
+                let mut w = v.clone();
+                w.remove(i);
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Generator: a pair of independent values.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Prng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let gen = VecGen::new(100, |r| r.range_i64(-50, 50) as i32);
+        check("sorted-after-sort", &PropConfig::default(), &gen, |xs| {
+            let mut v = xs.clone();
+            v.sort_unstable();
+            if v.windows(2).all(|w| w[0] <= w[1]) {
+                Ok(())
+            } else {
+                Err("not sorted".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let gen = VecGen::new(64, |r| r.range_i64(0, 1000) as i32);
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "no-big-values",
+                &PropConfig { cases: 50, seed: 7, max_shrink_steps: 500 },
+                &gen,
+                |xs| {
+                    if xs.iter().any(|&x| x > 500) {
+                        Err("contains big value".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("no-big-values"), "{msg}");
+        // Shrinking should reduce to a very small witness.
+        let input_line = msg.lines().find(|l| l.contains("input")).unwrap().to_string();
+        let commas = input_line.matches(',').count();
+        assert!(commas <= 2, "not shrunk enough: {input_line}");
+    }
+
+    #[test]
+    fn pair_gen_composes() {
+        let gen = PairGen(
+            VecGen::new(10, |r| r.next_u32() as i32),
+            VecGen::new(10, |r| r.uniform_f32()),
+        );
+        check("pair-smoke", &PropConfig { cases: 10, ..Default::default() }, &gen, |(a, b)| {
+            if a.len() <= 10 && b.len() <= 10 {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,168 @@
+//! PJRT client + executable cache.
+//!
+//! `Runtime` owns one CPU PJRT client and a lazily-populated cache of
+//! compiled executables, one per artifact. Execution is serialised by a
+//! device lock: the simulated cluster's ranks all time their own compute
+//! with logical clocks (cluster::SimClock), so device-level serialisation
+//! does not distort the reported numbers — it models a shared accelerator
+//! work queue on this 1-core testbed.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Context;
+use xla::Literal;
+
+use super::manifest::{ArtifactInfo, Manifest};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Manifest entry this executable was compiled from.
+    pub info: ArtifactInfo,
+    /// XLA compile time (first-use cost; reported by `akbench info`).
+    pub compile_secs: f64,
+}
+
+/// Cumulative runtime counters (picked up by `metrics`).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: AtomicU64,
+    pub executes: AtomicU64,
+    pub exec_nanos: AtomicU64,
+}
+
+/// The PJRT runtime. Create once (per process) with [`Runtime::open`];
+/// cheap to share via `Arc`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    /// Device work-queue lock (see module docs).
+    exec_lock: Mutex<()>,
+    pub stats: RuntimeStats,
+}
+
+// SAFETY: the PJRT C API is documented thread-safe; the `xla` crate only
+// omits the markers because it wraps raw pointers. All mutation of the
+// cache map is behind a Mutex, and `execute` is serialised by `exec_lock`.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open the artifact directory (manifest + PJRT CPU client).
+    pub fn open(dir: &Path) -> anyhow::Result<Arc<Runtime>> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(anyhow::Error::from)
+            .context("creating PJRT CPU client")?;
+        Ok(Arc::new(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            exec_lock: Mutex::new(()),
+            stats: RuntimeStats::default(),
+        }))
+    }
+
+    /// Open `artifacts/` at the default location (see [`crate::artifacts_dir`]).
+    pub fn open_default() -> anyhow::Result<Arc<Runtime>> {
+        Self::open(&crate::artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable for an artifact name.
+    pub fn get(&self, name: &str) -> anyhow::Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}' (re-run `make artifacts`?)"))?
+            .clone();
+        let path = self.manifest.path_of(&info);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(anyhow::Error::from)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(anyhow::Error::from)
+            .with_context(|| format!("XLA-compiling artifact '{name}'"))?;
+        let compiled = Arc::new(Executable { exe, info, compile_secs: t0.elapsed().as_secs_f64() });
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        let mut cache = self.cache.lock().unwrap();
+        Ok(cache.entry(name.to_string()).or_insert(compiled).clone())
+    }
+
+    /// Execute an artifact by name. Inputs must match the manifest specs
+    /// (padding is the caller's job — see `runtime::registry` and
+    /// `algorithms`). Returns the flattened output literals (the AOT side
+    /// lowers with `return_tuple=True`; the tuple is decomposed here).
+    pub fn execute(&self, name: &str, inputs: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        let exe = self.get(name)?;
+        self.execute_compiled(&exe, inputs)
+    }
+
+    /// Execute an already-resolved executable (hot path: no name lookup).
+    pub fn execute_compiled(
+        &self,
+        exe: &Executable,
+        inputs: &[Literal],
+    ) -> anyhow::Result<Vec<Literal>> {
+        anyhow::ensure!(
+            inputs.len() == exe.info.inputs.len(),
+            "artifact '{}' expects {} inputs, got {}",
+            exe.info.name,
+            exe.info.inputs.len(),
+            inputs.len()
+        );
+        let _guard = self.exec_lock.lock().unwrap();
+        let t0 = Instant::now();
+        let result = exe
+            .exe
+            .execute::<Literal>(inputs)
+            .map_err(anyhow::Error::from)
+            .with_context(|| format!("executing artifact '{}'", exe.info.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(anyhow::Error::from)
+            .context("fetching result literal")?;
+        let outs = tuple
+            .decompose_tuple()
+            .map_err(anyhow::Error::from)
+            .context("decomposing result tuple")?;
+        self.stats.executes.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .exec_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        anyhow::ensure!(
+            outs.len() == exe.info.outputs.len(),
+            "artifact '{}' returned {} outputs, expected {}",
+            exe.info.name,
+            outs.len(),
+            exe.info.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Names of all artifacts currently compiled into the cache.
+    pub fn cached_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.cache.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}

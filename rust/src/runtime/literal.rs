@@ -1,0 +1,72 @@
+//! Typed helpers around `xla::Literal` for host<->device data movement.
+//!
+//! The xla crate's `NativeType` covers only {i32,i64,u32,u64,f32,f64};
+//! `create_from_shape_and_untyped_data` + `ArrayElement` covers every
+//! dtype we need (notably i16), so all constructors here go through the
+//! untyped-bytes path.
+
+use anyhow::Context;
+use xla::{ArrayElement, Literal};
+
+/// Build a rank-1 literal from a typed slice.
+pub fn lit_from_slice<T: ArrayElement>(xs: &[T]) -> anyhow::Result<Literal> {
+    lit_from_bytes::<T>(xs, &[xs.len()])
+}
+
+/// Build a rank-2 literal (row-major `dims = [d0, d1]`).
+pub fn lit_from_slice_2d<T: ArrayElement>(xs: &[T], d0: usize, d1: usize) -> anyhow::Result<Literal> {
+    anyhow::ensure!(xs.len() == d0 * d1, "shape mismatch: {} != {d0}x{d1}", xs.len());
+    lit_from_bytes::<T>(xs, &[d0, d1])
+}
+
+/// Build a rank-0 (scalar) literal.
+pub fn lit_scalar<T: ArrayElement>(x: T) -> anyhow::Result<Literal> {
+    lit_from_bytes::<T>(std::slice::from_ref(&x), &[])
+}
+
+fn lit_from_bytes<T: ArrayElement>(xs: &[T], dims: &[usize]) -> anyhow::Result<Literal> {
+    let bytes = unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
+    };
+    Literal::create_from_shape_and_untyped_data(T::TY, dims, bytes)
+        .map_err(anyhow::Error::from)
+        .context("creating literal")
+}
+
+/// Copy a literal's data out as a typed vector.
+pub fn lit_to_vec<T: ArrayElement>(lit: &Literal) -> anyhow::Result<Vec<T>> {
+    lit.to_vec::<T>().map_err(anyhow::Error::from).context("reading literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_i16() {
+        let xs: Vec<i16> = vec![-3, 0, 7, i16::MAX, i16::MIN];
+        let lit = lit_from_slice(&xs).unwrap();
+        assert_eq!(lit_to_vec::<i16>(&lit).unwrap(), xs);
+    }
+
+    #[test]
+    fn roundtrip_f64() {
+        let xs: Vec<f64> = vec![1.5, -2.25, 0.0];
+        let lit = lit_from_slice(&xs).unwrap();
+        assert_eq!(lit_to_vec::<f64>(&lit).unwrap(), xs);
+    }
+
+    #[test]
+    fn scalar() {
+        let lit = lit_scalar(42i32).unwrap();
+        assert_eq!(lit_to_vec::<i32>(&lit).unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn rank2() {
+        let xs: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let lit = lit_from_slice_2d(&xs, 2, 3).unwrap();
+        assert_eq!(lit_to_vec::<f32>(&lit).unwrap(), xs);
+        assert!(lit_from_slice_2d(&xs, 2, 2).is_err());
+    }
+}

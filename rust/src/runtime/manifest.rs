@@ -1,0 +1,210 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/manifest.json` with the in-repo
+//! JSON parser.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::dtype::ElemType;
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: ElemType,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    /// Unique name, `{op}_{dtype}_n{log2n}`.
+    pub name: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// Operation family (`sort`, `scan_add_incl`, `searchsorted_first`, ...).
+    pub op: String,
+    /// Primary element dtype.
+    pub dtype: ElemType,
+    /// Size class: the static primary-input length this module was lowered
+    /// for (callers pad up to it).
+    pub n: usize,
+    /// Needle-block length for `searchsorted_*` artifacts.
+    pub needles: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// Pallas tile length the artifacts were built with.
+    pub tile: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated from IO for tests).
+    pub fn parse(dir: &Path, text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let version = j.get("version").as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let tile = j.get("tile").as_usize().context("manifest: missing tile")?;
+        let mut artifacts = Vec::new();
+        let mut by_name = HashMap::new();
+        for (idx, a) in j
+            .get("artifacts")
+            .as_arr()
+            .context("manifest: missing artifacts")?
+            .iter()
+            .enumerate()
+        {
+            let name = a
+                .get("name")
+                .as_str()
+                .with_context(|| format!("artifact #{idx}: missing name"))?
+                .to_string();
+            let dtype_s = a.get("dtype").as_str().unwrap_or("");
+            let dtype = ElemType::parse(dtype_s)
+                .with_context(|| format!("artifact {name}: bad dtype '{dtype_s}'"))?;
+            let info = ArtifactInfo {
+                file: a
+                    .get("file")
+                    .as_str()
+                    .with_context(|| format!("artifact {name}: missing file"))?
+                    .to_string(),
+                op: a
+                    .get("op")
+                    .as_str()
+                    .with_context(|| format!("artifact {name}: missing op"))?
+                    .to_string(),
+                dtype,
+                n: a.get("n").as_usize().with_context(|| format!("artifact {name}: missing n"))?,
+                needles: a.get("needles").as_usize(),
+                inputs: parse_specs(a.get("inputs")).with_context(|| format!("artifact {name}: inputs"))?,
+                outputs: parse_specs(a.get("outputs")).with_context(|| format!("artifact {name}: outputs"))?,
+                name: name.clone(),
+            };
+            if by_name.insert(name.clone(), artifacts.len()).is_some() {
+                bail!("duplicate artifact name {name}");
+            }
+            artifacts.push(info);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), tile, artifacts, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.by_name.get(name).map(|&i| &self.artifacts[i])
+    }
+
+    /// All artifacts of one op family, sorted by ascending size class.
+    pub fn family(&self, op: &str, dtype: ElemType) -> Vec<&ArtifactInfo> {
+        let mut v: Vec<&ArtifactInfo> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.op == op && a.dtype == dtype)
+            .collect();
+        v.sort_by_key(|a| a.n);
+        v
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn path_of(&self, info: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&info.file)
+    }
+}
+
+fn parse_specs(j: &Json) -> anyhow::Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().context("expected array of tensor specs")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for s in arr {
+        let shape = s
+            .get("shape")
+            .as_arr()
+            .context("tensor spec: missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("tensor spec: bad dim"))
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        let dt = s.get("dtype").as_str().context("tensor spec: missing dtype")?;
+        let dtype = ElemType::parse(dt).with_context(|| format!("tensor spec: bad dtype '{dt}'"))?;
+        out.push(TensorSpec { shape, dtype });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "tile": 1024,
+      "artifacts": [
+        {"name": "sort_i32_n10", "file": "sort_i32_n10.hlo.txt",
+         "op": "sort", "dtype": "i32", "n": 1024,
+         "inputs": [{"shape": [1024], "dtype": "i32"}],
+         "outputs": [{"shape": [1024], "dtype": "i32"}]},
+        {"name": "sort_i32_n14", "file": "sort_i32_n14.hlo.txt",
+         "op": "sort", "dtype": "i32", "n": 16384,
+         "inputs": [{"shape": [16384], "dtype": "i32"}],
+         "outputs": [{"shape": [16384], "dtype": "i32"}]},
+        {"name": "searchsorted_first_i32_n10",
+         "file": "s.hlo.txt", "op": "searchsorted_first", "dtype": "i32",
+         "n": 1024, "needles": 1024,
+         "inputs": [{"shape": [1024], "dtype": "i32"},
+                    {"shape": [1024], "dtype": "i32"}],
+         "outputs": [{"shape": [1024], "dtype": "i32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.tile, 1024);
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.get("sort_i32_n10").unwrap();
+        assert_eq!(a.n, 1024);
+        assert_eq!(a.dtype, ElemType::I32);
+        assert_eq!(a.inputs[0].element_count(), 1024);
+        assert_eq!(m.get("searchsorted_first_i32_n10").unwrap().needles, Some(1024));
+    }
+
+    #[test]
+    fn family_sorted_by_size() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let fam = m.family("sort", ElemType::I32);
+        assert_eq!(fam.len(), 2);
+        assert!(fam[0].n < fam[1].n);
+        assert!(m.family("sort", ElemType::I64).is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(Path::new("/t"), r#"{"version": 9, "tile": 1, "artifacts": []}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let dup = SAMPLE.replace("sort_i32_n14", "sort_i32_n10");
+        assert!(Manifest::parse(Path::new("/t"), &dup).is_err());
+    }
+}

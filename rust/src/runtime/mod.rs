@@ -1,0 +1,17 @@
+//! The PJRT runtime: loads AOT artifacts (HLO text lowered by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//!
+//! This is the "runs native after transpilation" half of the paper's
+//! architecture: the Julia→PTX/AIR pipeline becomes JAX/Pallas→HLO→PJRT,
+//! with Rust owning the request path. One compiled executable per
+//! (op, dtype, size-class) artifact, compiled on first use and cached.
+
+pub mod client;
+pub mod literal;
+pub mod manifest;
+pub mod registry;
+
+pub use client::{Executable, Runtime};
+pub use literal::{lit_from_slice, lit_from_slice_2d, lit_scalar, lit_to_vec};
+pub use manifest::{ArtifactInfo, Manifest, TensorSpec};
+pub use registry::Registry;

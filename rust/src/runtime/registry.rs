@@ -1,0 +1,117 @@
+//! Size-class selection: map a dynamic problem size onto the fixed-shape
+//! artifact catalog.
+//!
+//! XLA executables have static shapes, so the AOT catalog is lowered at
+//! power-of-two size classes and callers pad up: ascending sorts pad with
+//! the dtype maximum (sentinels sink to the tail and are truncated),
+//! scans/reduces pad with the op identity. When a request exceeds the
+//! largest class the caller chunks and combines natively (e.g.
+//! `algorithms::sort` k-way-merges sorted chunks) — the same strategy a
+//! real deployment uses to bound device memory.
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use super::client::Runtime;
+use super::manifest::ArtifactInfo;
+use crate::dtype::ElemType;
+
+/// Artifact lookup helper bound to a [`Runtime`].
+#[derive(Clone)]
+pub struct Registry {
+    rt: Arc<Runtime>,
+}
+
+impl Registry {
+    pub fn new(rt: Arc<Runtime>) -> Self {
+        Self { rt }
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    /// Smallest size class of `op`/`dtype` with capacity >= n, if any.
+    pub fn class_for(&self, op: &str, dtype: ElemType, n: usize) -> Option<ArtifactInfo> {
+        self.rt
+            .manifest()
+            .family(op, dtype)
+            .into_iter()
+            .find(|a| a.n >= n)
+            .cloned()
+    }
+
+    /// Largest available size class of `op`/`dtype` (chunking granule).
+    pub fn largest_class(&self, op: &str, dtype: ElemType) -> Option<ArtifactInfo> {
+        self.rt.manifest().family(op, dtype).into_iter().last().cloned()
+    }
+
+    /// Resolve `op`/`dtype`/`n` to (artifact, chunking plan): if `n` fits a
+    /// class, one chunk of that class; otherwise ceil(n / largest) chunks
+    /// of the largest class.
+    pub fn plan(&self, op: &str, dtype: ElemType, n: usize) -> anyhow::Result<ExecPlan> {
+        if let Some(a) = self.class_for(op, dtype, n) {
+            return Ok(ExecPlan { artifact: a, chunks: 1 });
+        }
+        let a = self
+            .largest_class(op, dtype)
+            .with_context(|| format!("no '{op}' artifacts for dtype {dtype} (is i128? see DESIGN.md §2)"))?;
+        let chunks = n.div_ceil(a.n);
+        Ok(ExecPlan { artifact: a, chunks })
+    }
+
+    /// Whether any artifact family exists for this op/dtype at all.
+    pub fn supports(&self, op: &str, dtype: ElemType) -> bool {
+        !self.rt.manifest().family(op, dtype).is_empty()
+    }
+}
+
+/// Result of [`Registry::plan`].
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    pub artifact: ArtifactInfo,
+    /// Number of artifact invocations needed to cover the request.
+    pub chunks: usize,
+}
+
+impl ExecPlan {
+    /// Per-chunk capacity in elements.
+    pub fn chunk_capacity(&self) -> usize {
+        self.artifact.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::Path;
+
+    // Registry logic is pure over the manifest; test selection against a
+    // synthetic manifest without touching PJRT.
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            Path::new("/tmp/x"),
+            r#"{
+              "version": 1, "tile": 1024,
+              "artifacts": [
+                {"name": "sort_i32_n10", "file": "a", "op": "sort", "dtype": "i32", "n": 1024,
+                 "inputs": [{"shape": [1024], "dtype": "i32"}], "outputs": [{"shape": [1024], "dtype": "i32"}]},
+                {"name": "sort_i32_n14", "file": "b", "op": "sort", "dtype": "i32", "n": 16384,
+                 "inputs": [{"shape": [16384], "dtype": "i32"}], "outputs": [{"shape": [16384], "dtype": "i32"}]}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn selects_smallest_fitting_class() {
+        let m = manifest();
+        let fam = m.family("sort", ElemType::I32);
+        assert_eq!(fam.iter().find(|a| a.n >= 500).unwrap().n, 1024);
+        assert_eq!(fam.iter().find(|a| a.n >= 1025).unwrap().n, 16384);
+        assert!(fam.iter().find(|a| a.n >= 20000).is_none());
+    }
+}

@@ -1,0 +1,64 @@
+//! Human-readable formatting for benchmark tables.
+
+/// Format a byte count: `1.5 KB`, `2.0 GB`, ... (decimal units, matching
+/// the paper's GB/s throughput convention).
+pub fn fmt_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v.abs() >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds with an adaptive unit: `12.3 µs`, `4.56 ms`, `1.23 s`.
+pub fn fmt_duration(secs: f64) -> String {
+    let a = secs.abs();
+    if a == 0.0 {
+        "0 s".to_string()
+    } else if a < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if a < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if a < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+/// Format a throughput in GB/s (the paper's headline unit).
+pub fn fmt_throughput(bytes_per_sec: f64) -> String {
+    format!("{:.3} GB/s", bytes_per_sec / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(1500.0), "1.50 KB");
+        assert_eq!(fmt_bytes(2.0e9), "2.00 GB");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(fmt_duration(0.0), "0 s");
+        assert_eq!(fmt_duration(2.5e-5), "25.00 µs");
+        assert_eq!(fmt_duration(0.0042), "4.20 ms");
+        assert_eq!(fmt_duration(1.5), "1.500 s");
+    }
+
+    #[test]
+    fn throughput() {
+        assert_eq!(fmt_throughput(855e9), "855.000 GB/s");
+    }
+}

@@ -1,0 +1,13 @@
+//! Foundation utilities: PRNG, statistics, JSON parsing, formatting.
+//!
+//! These replace crates that are unavailable in the offline build
+//! environment (rand, serde_json, humansize) — see DESIGN.md §9.
+
+pub mod fmt;
+pub mod json;
+pub mod prng;
+pub mod stats;
+
+pub use fmt::{fmt_bytes, fmt_duration, fmt_throughput};
+pub use prng::Prng;
+pub use stats::Summary;

@@ -1,0 +1,280 @@
+//! Workload generators for the paper's benchmarks.
+//!
+//! Figures 1–5 sort uniform random integers/floats of six dtypes; Table II
+//! runs arithmetic kernels over uniform 3-D points. Beyond `Uniform` we
+//! include the standard adversarial sorting distributions (sorted,
+//! reverse, nearly-sorted, duplicate-heavy, Zipfian, Gaussian) used by the
+//! ablation benches — real sorter rankings are distribution-sensitive and
+//! the paper's "who wins where" claims should be checked off-uniform too.
+
+use crate::dtype::SortKey;
+use crate::util::Prng;
+
+/// Input distribution for sorting workloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Distribution {
+    /// Uniform over the full key range (the paper's benchmark input).
+    Uniform,
+    /// Already ascending.
+    Sorted,
+    /// Descending.
+    Reverse,
+    /// Ascending with ~1% random swaps.
+    NearlySorted,
+    /// Only `sqrt(n)` distinct values.
+    DupHeavy,
+    /// Zipf(s=1.1) ranks mapped over the key space.
+    Zipf,
+    /// Gaussian around the middle of the key space.
+    Gaussian,
+}
+
+impl Distribution {
+    pub const ALL: [Distribution; 7] = [
+        Distribution::Uniform,
+        Distribution::Sorted,
+        Distribution::Reverse,
+        Distribution::NearlySorted,
+        Distribution::DupHeavy,
+        Distribution::Zipf,
+        Distribution::Gaussian,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Distribution::Uniform => "uniform",
+            Distribution::Sorted => "sorted",
+            Distribution::Reverse => "reverse",
+            Distribution::NearlySorted => "nearly-sorted",
+            Distribution::DupHeavy => "dup-heavy",
+            Distribution::Zipf => "zipf",
+            Distribution::Gaussian => "gaussian",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Distribution> {
+        Self::ALL.into_iter().find(|d| d.name() == s)
+    }
+}
+
+/// Per-dtype uniform draw (floats draw from a wide finite real range: raw
+/// uniform bit images would be mostly NaN/Inf payloads).
+pub trait KeyGen: SortKey {
+    fn uniform(rng: &mut Prng) -> Self;
+}
+
+impl KeyGen for i16 {
+    fn uniform(rng: &mut Prng) -> Self {
+        rng.next_u64() as i16
+    }
+}
+impl KeyGen for i32 {
+    fn uniform(rng: &mut Prng) -> Self {
+        rng.next_u64() as i32
+    }
+}
+impl KeyGen for i64 {
+    fn uniform(rng: &mut Prng) -> Self {
+        rng.next_u64() as i64
+    }
+}
+impl KeyGen for i128 {
+    fn uniform(rng: &mut Prng) -> Self {
+        rng.next_i128()
+    }
+}
+impl KeyGen for f32 {
+    fn uniform(rng: &mut Prng) -> Self {
+        (rng.uniform_f32() - 0.5) * 2.0e6
+    }
+}
+impl KeyGen for f64 {
+    fn uniform(rng: &mut Prng) -> Self {
+        (rng.uniform_f64() - 0.5) * 2.0e12
+    }
+}
+
+/// Generate `n` keys of type `K` from `dist`, deterministically from `rng`.
+pub fn generate<K: KeyGen>(rng: &mut Prng, dist: Distribution, n: usize) -> Vec<K> {
+    let mut xs: Vec<K> = match dist {
+        Distribution::Uniform => (0..n).map(|_| K::uniform(rng)).collect(),
+        Distribution::Sorted | Distribution::Reverse | Distribution::NearlySorted => {
+            let mut v: Vec<K> = (0..n).map(|_| K::uniform(rng)).collect();
+            v.sort_unstable_by(|a, b| a.cmp_total(b));
+            v
+        }
+        Distribution::DupHeavy => {
+            let k = (n as f64).sqrt().ceil() as usize;
+            let pool: Vec<K> = (0..k.max(1)).map(|_| K::uniform(rng)).collect();
+            (0..n).map(|_| pool[rng.below(pool.len() as u64) as usize]).collect()
+        }
+        Distribution::Zipf => {
+            // Zipf(s=1.1) over a pool of distinct uniform keys via
+            // inverse-CDF on a harmonic prefix table (<= 10k ranks).
+            let ranks = n.clamp(1, 10_000);
+            let mut cdf = Vec::with_capacity(ranks);
+            let mut acc = 0.0f64;
+            for r in 1..=ranks {
+                acc += 1.0 / (r as f64).powf(1.1);
+                cdf.push(acc);
+            }
+            let total = acc;
+            let pool: Vec<K> = (0..ranks).map(|_| K::uniform(rng)).collect();
+            (0..n)
+                .map(|_| {
+                    let u = rng.uniform_f64() * total;
+                    let idx = cdf.partition_point(|&c| c < u).min(ranks - 1);
+                    pool[idx]
+                })
+                .collect()
+        }
+        Distribution::Gaussian => {
+            // Sort a uniform pool and pick indices ~ N(n/2, n/8): produces
+            // a value distribution concentrated mid-range for every dtype
+            // without assuming anything about the bit image.
+            let mut pool: Vec<K> = (0..n.max(2)).map(|_| K::uniform(rng)).collect();
+            pool.sort_unstable_by(|a, b| a.cmp_total(b));
+            let m = pool.len() as f64;
+            (0..n)
+                .map(|_| {
+                    let z = rng.normal_f64().clamp(-4.0, 4.0);
+                    let idx = (m / 2.0 + z * m / 8.0).clamp(0.0, m - 1.0) as usize;
+                    pool[idx]
+                })
+                .collect()
+        }
+    };
+    match dist {
+        Distribution::Reverse => xs.reverse(),
+        Distribution::NearlySorted => {
+            let swaps = (n / 100).max(1);
+            for _ in 0..swaps {
+                if n >= 2 {
+                    let i = rng.below(n as u64) as usize;
+                    let j = rng.below(n as u64) as usize;
+                    xs.swap(i, j);
+                }
+            }
+        }
+        _ => {}
+    }
+    xs
+}
+
+/// 3-D point cloud for the Table II arithmetic kernels: coordinates laid
+/// out as `[x0..xn, y0..yn, z0..zn]` ("stored inline", matching the
+/// paper's layout in both Julia and C). Each coordinate is in
+/// [-0.5, 0.5), so r < sqrt(0.75) ≈ 0.87 and the RBF denominator `1 - r`
+/// stays away from 0.
+pub fn points_f32(rng: &mut Prng, n: usize) -> Vec<f32> {
+    (0..3 * n).map(|_| rng.uniform_f32() - 0.5).collect()
+}
+
+/// f64 variant of [`points_f32`].
+pub fn points_f64(rng: &mut Prng, n: usize) -> Vec<f64> {
+    (0..3 * n).map(|_| rng.uniform_f64() - 0.5).collect()
+}
+
+/// Atom positions for the LJG kernel: coords uniform in [0, box_len).
+pub fn positions_f32(rng: &mut Prng, n: usize, box_len: f32) -> Vec<f32> {
+    (0..3 * n).map(|_| rng.uniform_f32() * box_len).collect()
+}
+
+/// f64 variant of [`positions_f32`].
+pub fn positions_f64(rng: &mut Prng, n: usize, box_len: f64) -> Vec<f64> {
+    (0..3 * n).map(|_| rng.uniform_f64() * box_len).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::is_sorted_total;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<i32> = generate(&mut Prng::new(1), Distribution::Uniform, 100);
+        let b: Vec<i32> = generate(&mut Prng::new(1), Distribution::Uniform, 100);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sorted_is_sorted() {
+        let xs: Vec<i64> = generate(&mut Prng::new(2), Distribution::Sorted, 500);
+        assert!(is_sorted_total(&xs));
+    }
+
+    #[test]
+    fn reverse_is_descending() {
+        let xs: Vec<i32> = generate(&mut Prng::new(3), Distribution::Reverse, 500);
+        let mut asc = xs.clone();
+        asc.reverse();
+        assert!(is_sorted_total(&asc));
+    }
+
+    #[test]
+    fn dup_heavy_has_few_distinct() {
+        let xs: Vec<i32> = generate(&mut Prng::new(4), Distribution::DupHeavy, 10_000);
+        let mut d = xs.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert!(d.len() <= 110, "distinct = {}", d.len());
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let xs: Vec<i32> = generate(&mut Prng::new(5), Distribution::Zipf, 10_000);
+        let mut counts = std::collections::HashMap::new();
+        for x in &xs {
+            *counts.entry(*x).or_insert(0usize) += 1;
+        }
+        let max = counts.values().max().unwrap();
+        assert!(*max > 10_000 / counts.len() * 5, "top count {max} of {} distinct", counts.len());
+    }
+
+    #[test]
+    fn floats_are_finite() {
+        let xs: Vec<f64> = generate(&mut Prng::new(6), Distribution::Uniform, 1000);
+        assert!(xs.iter().all(|x| x.is_finite()));
+        let ys: Vec<f32> = generate(&mut Prng::new(7), Distribution::Gaussian, 1000);
+        assert!(ys.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn all_dists_all_dtypes_smoke() {
+        for d in Distribution::ALL {
+            let _: Vec<i16> = generate(&mut Prng::new(8), d, 64);
+            let _: Vec<i128> = generate(&mut Prng::new(8), d, 64);
+            let _: Vec<f32> = generate(&mut Prng::new(8), d, 64);
+        }
+    }
+
+    #[test]
+    fn points_radius_bounded() {
+        let pts = points_f32(&mut Prng::new(9), 1000);
+        for i in 0..1000 {
+            let (x, y, z) = (pts[i], pts[1000 + i], pts[2000 + i]);
+            let r = (x * x + y * y + z * z).sqrt();
+            assert!(r < 0.87, "r = {r}");
+        }
+    }
+
+    #[test]
+    fn distribution_parse() {
+        for d in Distribution::ALL {
+            assert_eq!(Distribution::parse(d.name()), Some(d));
+        }
+        assert_eq!(Distribution::parse("nope"), None);
+    }
+
+    #[test]
+    fn gaussian_concentrated() {
+        let xs: Vec<i32> = generate(&mut Prng::new(10), Distribution::Gaussian, 4000);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        let lo = sorted[sorted.len() / 4];
+        let hi = sorted[3 * sorted.len() / 4];
+        let span = (sorted[sorted.len() - 1] as i64 - sorted[0] as i64).unsigned_abs();
+        let mid_span = (hi as i64 - lo as i64).unsigned_abs();
+        assert!(mid_span < span / 3, "mid {mid_span} vs full {span}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Property-based tests of the coordinator invariants (DESIGN.md §6),
+//! using the in-repo `prop` framework.
+
+use accelkern::cfg::{FinalPhase, RunConfig, Sorter, TransferMode};
+use accelkern::coordinator::driver::run_distributed_sort_mixed;
+use accelkern::dtype::{is_sorted_total, SortKey};
+use accelkern::mpisort::splitters::{initial_candidates, local_ranks, regular_samples};
+use accelkern::prop::{check, Gen, PropConfig, VecGen};
+use accelkern::util::Prng;
+
+/// Generator for distributed-sort scenarios: (ranks, elems, dist_id,
+/// sorter mix, transfer, final phase) — all drawn small but irregular.
+#[derive(Clone, Debug)]
+struct Scenario {
+    ranks: usize,
+    elems_per_rank: usize,
+    dist_id: usize,
+    sorter_ids: Vec<usize>,
+    staged: bool,
+    resort: bool,
+    seed: u64,
+}
+
+struct ScenarioGen;
+
+impl Gen for ScenarioGen {
+    type Value = Scenario;
+
+    fn generate(&self, rng: &mut Prng) -> Scenario {
+        let ranks = 1 + rng.below(7) as usize;
+        Scenario {
+            ranks,
+            elems_per_rank: rng.below(3000) as usize, // includes 0 and tiny shards
+            dist_id: rng.below(7) as usize,
+            sorter_ids: (0..ranks).map(|_| rng.below(3) as usize).collect(),
+            staged: rng.below(2) == 0,
+            resort: rng.below(2) == 0,
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self, v: &Scenario) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        if v.ranks > 1 {
+            let mut w = v.clone();
+            w.ranks /= 2;
+            w.sorter_ids.truncate(w.ranks);
+            out.push(w);
+        }
+        if v.elems_per_rank > 0 {
+            let mut w = v.clone();
+            w.elems_per_rank /= 2;
+            out.push(w);
+        }
+        if v.dist_id != 0 {
+            let mut w = v.clone();
+            w.dist_id = 0;
+            out.push(w);
+        }
+        out
+    }
+}
+
+fn run_scenario(sc: &Scenario) -> Result<(), String> {
+    use accelkern::workload::Distribution;
+    let sorters: Vec<Sorter> = sc
+        .sorter_ids
+        .iter()
+        .map(|i| [Sorter::JuliaBase, Sorter::ThrustMerge, Sorter::ThrustRadix][*i])
+        .collect();
+    let mut cfg = RunConfig::default();
+    cfg.ranks = sc.ranks;
+    cfg.elems_per_rank = sc.elems_per_rank;
+    cfg.dist = Distribution::ALL[sc.dist_id];
+    cfg.transfer = if sc.staged { TransferMode::CpuStaged } else { TransferMode::GpuDirect };
+    cfg.final_phase = if sc.resort { FinalPhase::Sort } else { FinalPhase::Merge };
+    cfg.seed = sc.seed;
+    cfg.refine_rounds = 3;
+    // The driver itself verifies: global order, local order, conservation.
+    let out = run_distributed_sort_mixed::<i32>(&cfg, &sorters, None)
+        .map_err(|e| format!("{e:#}"))?;
+    let total: usize = out.out_sizes.iter().sum();
+    if total != sc.ranks * sc.elems_per_rank {
+        return Err(format!("lost elements: {total}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_distributed_sort_invariants() {
+    // The driver's internal verifier (order + permutation) is the oracle;
+    // this property fuzzes the scenario space including empty shards,
+    // mixed engines, both transfers, both final phases, all distributions.
+    check("sihsort-invariants", &PropConfig::default(), &ScenarioGen, run_scenario);
+}
+
+#[test]
+fn prop_splitter_monotonicity() {
+    // Splitters from any sample pool are non-decreasing; local ranks are
+    // monotone in the candidate.
+    let gen = VecGen::new(2000, |r| r.range_i64(i64::MIN / 2, i64::MAX / 2));
+    check("splitter-monotone", &PropConfig::default(), &gen, |xs| {
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        let samples: Vec<u128> =
+            regular_samples(&sorted, 16).iter().map(|x| x.to_bits()).collect();
+        for p in [2usize, 3, 5, 8] {
+            let cands = initial_candidates(samples.clone(), p);
+            if cands.windows(2).any(|w| w[0] > w[1]) {
+                return Err(format!("candidates not monotone for p={p}"));
+            }
+            let ranks = local_ranks(&sorted, &cands);
+            if ranks.windows(2).any(|w| w[0] > w[1]) {
+                return Err(format!("ranks not monotone for p={p}"));
+            }
+            if let Some(&last) = ranks.last() {
+                if last as usize > sorted.len() {
+                    return Err("rank beyond shard".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_baseline_sorts_agree() {
+    // Radix, merge and std sort agree on every input, f64 included
+    // (total order, ±0.0, infinities).
+    let gen = VecGen::new(3000, |r| {
+        // Mix of regular values and specials.
+        match r.below(12) {
+            0 => f64::INFINITY,
+            1 => f64::NEG_INFINITY,
+            2 => 0.0,
+            3 => -0.0,
+            _ => (r.uniform_f64() - 0.5) * 1e9,
+        }
+    });
+    check("baselines-agree", &PropConfig::default(), &gen, |xs| {
+        let mut a = xs.clone();
+        accelkern::baselines::radix_sort(&mut a);
+        let mut b = xs.clone();
+        accelkern::baselines::merge_sort(&mut b);
+        let mut c = xs.clone();
+        c.sort_unstable_by(|x, y| x.cmp_total(y));
+        let bits = |v: &Vec<f64>| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        if bits(&a) != bits(&c) {
+            return Err("radix != std".into());
+        }
+        if bits(&b) != bits(&c) {
+            return Err("merge != std".into());
+        }
+        if !is_sorted_total(&a) {
+            return Err("not sorted".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kmerge_is_merge() {
+    // Splitting any vector into k sorted runs and k-merging returns the
+    // fully sorted vector.
+    let gen = VecGen::new(4000, |r| r.next_u64() as i64);
+    check("kmerge", &PropConfig::default(), &gen, |xs| {
+        let mut rng = Prng::new(xs.len() as u64);
+        let k = 1 + rng.below(9) as usize;
+        let mut runs: Vec<Vec<i64>> = (0..k).map(|_| Vec::new()).collect();
+        for &x in xs {
+            runs[rng.below(k as u64) as usize].push(x);
+        }
+        for r in &mut runs {
+            r.sort_unstable();
+        }
+        let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+        let got = accelkern::baselines::kmerge(&refs);
+        let mut want = xs.clone();
+        want.sort_unstable();
+        if got != want {
+            return Err(format!("kmerge mismatch (k={k})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scan_matches_reference() {
+    use accelkern::algorithms::accumulate;
+    use accelkern::backend::Backend;
+    let gen = VecGen::new(5000, |r| r.range_i64(-1_000_000, 1_000_000));
+    check("scan-threaded", &PropConfig::default(), &gen, |xs| {
+        for inclusive in [true, false] {
+            let native = accumulate(&Backend::Native, xs, inclusive).unwrap();
+            let threaded = accumulate(&Backend::Threaded(4), xs, inclusive).unwrap();
+            if native != threaded {
+                return Err(format!("threaded scan mismatch inclusive={inclusive}"));
+            }
+        }
+        Ok(())
+    });
+}

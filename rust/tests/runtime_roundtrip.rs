@@ -1,0 +1,197 @@
+//! End-to-end runtime tests: load real AOT artifacts, compile on the PJRT
+//! CPU client, execute, and check numerics against host references.
+//!
+//! Requires `make artifacts` (skips gracefully when the needed artifact is
+//! absent so `cargo test` stays runnable mid-bootstrap).
+
+use accelkern::dtype::ElemType;
+use accelkern::runtime::{lit_from_slice, lit_from_slice_2d, lit_scalar, lit_to_vec, Runtime};
+use accelkern::util::Prng;
+
+fn runtime_or_skip(names: &[&str]) -> Option<std::sync::Arc<Runtime>> {
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e:#}");
+            return None;
+        }
+    };
+    for n in names {
+        if rt.manifest().get(n).is_none() {
+            eprintln!("SKIP (artifact {n} missing — run `make artifacts`)");
+            return None;
+        }
+    }
+    Some(rt)
+}
+
+#[test]
+fn sort_i32_n10_roundtrip() {
+    let Some(rt) = runtime_or_skip(&["sort_i32_n10"]) else { return };
+    let mut rng = Prng::new(42);
+    let xs: Vec<i32> = (0..1024).map(|_| rng.range_i64(-1_000_000, 1_000_000) as i32).collect();
+    let out = rt.execute("sort_i32_n10", &[lit_from_slice(&xs).unwrap()]).unwrap();
+    let got = lit_to_vec::<i32>(&out[0]).unwrap();
+    let mut want = xs.clone();
+    want.sort_unstable();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn sort_padding_sentinels_sink() {
+    let Some(rt) = runtime_or_skip(&["sort_i32_n10"]) else { return };
+    // 1000 real values + 24 max-sentinels: the real prefix must come back
+    // sorted in the first 1000 lanes.
+    let mut rng = Prng::new(7);
+    let mut xs: Vec<i32> = (0..1000).map(|_| rng.range_i64(-500, 500) as i32).collect();
+    let real = xs.clone();
+    xs.resize(1024, i32::MAX);
+    let out = rt.execute("sort_i32_n10", &[lit_from_slice(&xs).unwrap()]).unwrap();
+    let got = lit_to_vec::<i32>(&out[0]).unwrap();
+    let mut want = real;
+    want.sort_unstable();
+    assert_eq!(&got[..1000], &want[..]);
+    assert!(got[1000..].iter().all(|&v| v == i32::MAX));
+}
+
+#[test]
+fn sort_pairs_permutation() {
+    let Some(rt) = runtime_or_skip(&["sort_pairs_i32_n10"]) else { return };
+    let mut rng = Prng::new(3);
+    let keys: Vec<i32> = (0..1024).map(|_| rng.range_i64(-100, 100) as i32).collect();
+    let vals: Vec<i32> = (0..1024).collect();
+    let out = rt
+        .execute(
+            "sort_pairs_i32_n10",
+            &[lit_from_slice(&keys).unwrap(), lit_from_slice(&vals).unwrap()],
+        )
+        .unwrap();
+    let gk = lit_to_vec::<i32>(&out[0]).unwrap();
+    let gv = lit_to_vec::<i32>(&out[1]).unwrap();
+    // keys sorted, and vals is the permutation that sorts the input keys.
+    assert!(gk.windows(2).all(|w| w[0] <= w[1]));
+    for (k, v) in gk.iter().zip(&gv) {
+        assert_eq!(*k, keys[*v as usize]);
+    }
+    // stability: duplicate keys keep ascending payload indices.
+    for w in gk.windows(2).zip(gv.windows(2)) {
+        if w.0[0] == w.0[1] {
+            assert!(w.1[0] < w.1[1], "unstable at key {}", w.0[0]);
+        }
+    }
+}
+
+#[test]
+fn reduce_add_f32() {
+    let Some(rt) = runtime_or_skip(&["reduce_add_f32_n14"]) else { return };
+    let mut rng = Prng::new(5);
+    let xs: Vec<f32> = (0..16384).map(|_| rng.uniform_f32()).collect();
+    let out = rt.execute("reduce_add_f32_n14", &[lit_from_slice(&xs).unwrap()]).unwrap();
+    let got = lit_to_vec::<f32>(&out[0]).unwrap()[0];
+    let want: f64 = xs.iter().map(|&v| v as f64).sum();
+    assert!((got as f64 - want).abs() / want < 1e-4, "got {got} want {want}");
+}
+
+#[test]
+fn searchsorted_first_i32() {
+    let Some(rt) = runtime_or_skip(&["searchsorted_first_i32_n14"]) else { return };
+    let mut rng = Prng::new(11);
+    let mut hay: Vec<i32> = (0..16384).map(|_| rng.range_i64(-10_000, 10_000) as i32).collect();
+    hay.sort_unstable();
+    let needles: Vec<i32> = (0..1024).map(|_| rng.range_i64(-12_000, 12_000) as i32).collect();
+    let out = rt
+        .execute(
+            "searchsorted_first_i32_n14",
+            &[lit_from_slice(&hay).unwrap(), lit_from_slice(&needles).unwrap()],
+        )
+        .unwrap();
+    let got = lit_to_vec::<i32>(&out[0]).unwrap();
+    for (i, &nd) in needles.iter().enumerate() {
+        let want = hay.partition_point(|&h| h < nd) as i32;
+        assert_eq!(got[i], want, "needle {nd}");
+    }
+}
+
+#[test]
+fn rbf_f32_matches_host() {
+    let Some(rt) = runtime_or_skip(&["rbf_f32_n17"]) else { return };
+    let n = 1 << 17;
+    let mut rng = Prng::new(13);
+    let pts: Vec<f32> = (0..3 * n).map(|_| rng.uniform_f32() * 0.5).collect();
+    let out = rt
+        .execute("rbf_f32_n17", &[lit_from_slice_2d(&pts, 3, n).unwrap()])
+        .unwrap();
+    let got = lit_to_vec::<f32>(&out[0]).unwrap();
+    for i in (0..n).step_by(4097) {
+        let (x, y, z) = (pts[i], pts[n + i], pts[2 * n + i]);
+        let r = (x * x + y * y + z * z).sqrt();
+        let want = (-1.0 / (1.0 - r)).exp();
+        assert!((got[i] - want).abs() <= 1e-5 * want.abs().max(1.0), "i={i} got {} want {want}", got[i]);
+    }
+}
+
+#[test]
+fn ljg_f32_matches_host() {
+    let Some(rt) = runtime_or_skip(&["ljg_f32_n17"]) else { return };
+    let n = 1 << 17;
+    let mut rng = Prng::new(17);
+    let p1: Vec<f32> = (0..3 * n).map(|_| rng.uniform_f32() * 4.0).collect();
+    let p2: Vec<f32> = (0..3 * n).map(|_| rng.uniform_f32() * 4.0).collect();
+    let consts: Vec<f32> = vec![1.0, 1.0, 1.5, 3.0];
+    let out = rt
+        .execute(
+            "ljg_f32_n17",
+            &[
+                lit_from_slice_2d(&p1, 3, n).unwrap(),
+                lit_from_slice_2d(&p2, 3, n).unwrap(),
+                lit_from_slice(&consts).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = lit_to_vec::<f32>(&out[0]).unwrap();
+    let (eps, sigma, r0, cutoff) = (1.0f32, 1.0f32, 1.5f32, 3.0f32);
+    for i in (0..n).step_by(2053) {
+        let dx = p1[i] - p2[i];
+        let dy = p1[n + i] - p2[n + i];
+        let dz = p1[2 * n + i] - p2[2 * n + i];
+        let r = (dx * dx + dy * dy + dz * dz).sqrt();
+        let want = if r < cutoff {
+            let sr = sigma / r;
+            let sr3 = sr * sr * sr;
+            let sr6 = sr3 * sr3;
+            let sr12 = sr6 * sr6;
+            4.0 * eps * (sr12 - sr6) - eps * (-((r - r0) * (r - r0)) / (2.0 * sigma * sigma)).exp()
+        } else {
+            0.0
+        };
+        assert!(
+            (got[i] - want).abs() <= 1e-3 * want.abs().max(1.0),
+            "i={i} got {} want {want}",
+            got[i]
+        );
+    }
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(rt) = runtime_or_skip(&["sort_i32_n10"]) else { return };
+    let a = rt.get("sort_i32_n10").unwrap();
+    let b = rt.get("sort_i32_n10").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert!(rt.cached_names().contains(&"sort_i32_n10".to_string()));
+}
+
+#[test]
+fn manifest_exposes_families() {
+    let Some(rt) = runtime_or_skip(&[]) else { return };
+    // Whatever subset is built, families must be internally consistent.
+    for a in &rt.manifest().artifacts {
+        assert!(!a.inputs.is_empty());
+        assert!(!a.outputs.is_empty());
+        assert!(a.n.is_power_of_two(), "{} n={}", a.name, a.n);
+        assert!(a.dtype.xla_supported());
+        assert_ne!(a.dtype, ElemType::I128);
+    }
+    // Scalar-input artifact shape check (threshold input is rank-0).
+    let _ = lit_scalar(0i32).unwrap();
+}
