@@ -1,0 +1,20 @@
+# Top-level convenience targets (see README.md).
+
+.PHONY: artifacts build test bench-smoke clean-artifacts
+
+# AOT-lower the L1/L2 Pallas/JAX catalog to artifacts/ (requires jax).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# One quick Criterion-style smoke bench (the in-repo harness).
+bench-smoke:
+	AK_FIG6_QUICK=1 cargo bench -p accelkern --bench fig6_cosort
+
+clean-artifacts:
+	rm -rf artifacts

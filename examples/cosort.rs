@@ -1,43 +1,102 @@
-//! CPU–GPU co-sorting (the paper's §IV-A composability highlight):
-//! CPU ranks running the Julia-Base-analog sorter participate in the
-//! *same* collective SIHSort as device ranks running the AK artifact and
-//! the vendor-primitive analogs — no special-casing in either library,
-//! exactly the MPISort.jl + AK + Thrust story.
+//! CPU–GPU co-sorting (the paper's §IV-A composability highlight), on
+//! two levels of the stack:
+//!
+//! 1. **Inside one rank** — `hybrid::co_sort` splits a single shard
+//!    between the host thread pool and the device engine using a
+//!    calibrated, cost-model-driven `HybridPlan`, sorts both halves
+//!    concurrently and k-way merges (DESIGN.md §10).
+//! 2. **Across ranks** — heterogeneous SIHSort: CPU ranks, vendor-analog
+//!    device ranks and HY hybrid ranks all participate in the *same*
+//!    collective sort — no special-casing in either library, exactly the
+//!    MPISort.jl + AK + Thrust story.
 //!
 //! Run: `cargo run --release --example cosort`
 
+use std::time::Instant;
+
+use accelkern::backend::Backend;
 use accelkern::cfg::{RunConfig, Sorter};
+use accelkern::cluster::DeviceModel;
 use accelkern::coordinator::driver::run_distributed_sort_mixed;
-use accelkern::runtime::Runtime;
-use accelkern::util::fmt_throughput;
+use accelkern::hybrid::{calibrate_sort, co_sort, HybridEngine, HybridPlan};
+use accelkern::runtime::{Registry, Runtime};
+use accelkern::util::{fmt_throughput, Prng};
+use accelkern::workload::{generate, Distribution};
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::open_default().ok();
     if rt.is_none() {
-        println!("(no artifacts: AK ranks degrade to host path)");
+        println!("(no artifacts: device engines degrade to their host stand-ins)");
+    }
+    let device_backend = rt.clone().map(|rt| Backend::device(Registry::new(rt)));
+    let host_threads = accelkern::backend::threaded::default_threads();
+
+    // ---- Level 1: one shard, two engines at once ---------------------------
+    let dev_ops = device_backend.as_ref().and_then(|b| b.device_ops());
+    let cal = calibrate_sort::<i64>(1 << 17, host_threads, dev_ops)?;
+    let dm = DeviceModel::default();
+    // Split real work for the engines as they actually execute; the
+    // device-model projection is reported alongside for context.
+    let plan = cal.plan_measured(1.0);
+    println!(
+        "calibration: host {:.2} Melem/s, executing device engine {:.2} Melem/s \
+         -> {:.1}% host split (model-projected: {:.1}%, cost-aware x22: {:.1}%)",
+        cal.host_elems_per_sec / 1e6,
+        cal.executing_device_throughput() / 1e6,
+        plan.host_fraction * 100.0,
+        cal.plan(&dm, 1.0).host_fraction * 100.0,
+        cal.plan(&dm, 22.0).host_fraction * 100.0,
+    );
+
+    let n = 1 << 21;
+    let xs: Vec<i64> = generate(&mut Prng::new(42), Distribution::Uniform, n);
+    for (label, eng) in [
+        ("host-only      ", HybridEngine::new(HybridPlan::host_only(), host_threads, None)),
+        (
+            "hybrid (calib.)",
+            HybridEngine::from_backends(plan, host_threads, device_backend.clone()),
+        ),
+        (
+            "hybrid (50/50) ",
+            HybridEngine::from_backends(HybridPlan::new(0.5), host_threads, device_backend.clone()),
+        ),
+    ] {
+        let mut buf = xs.clone();
+        let t0 = Instant::now();
+        co_sort(&eng, &mut buf)?;
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "  {label}  {n} i64 in {:.1} ms  ({})",
+            secs * 1e3,
+            fmt_throughput(8.0 * n as f64 / secs)
+        );
+        assert!(accelkern::dtype::is_sorted_total(&buf));
     }
 
+    // ---- Level 2: heterogeneous collective sort ----------------------------
     let mut cfg = RunConfig::default();
     cfg.ranks = 8;
     cfg.elems_per_rank = 250_000;
     cfg.dtype = accelkern::dtype::ElemType::I64;
 
-    // Two CPU ranks, six device ranks with three different local sorters —
-    // one heterogeneous collective sort.
+    // Two CPU ranks, four device ranks, two hybrid co-sorting ranks — one
+    // heterogeneous collective sort.
     let sorters = vec![
         Sorter::JuliaBase,
         Sorter::Ak,
         Sorter::ThrustMerge,
         Sorter::ThrustRadix,
-        Sorter::JuliaBase,
+        Sorter::Hybrid,
         Sorter::Ak,
-        Sorter::ThrustMerge,
         Sorter::ThrustRadix,
+        Sorter::Hybrid,
     ];
-    println!("co-sorting with per-rank engines: {:?}", sorters.iter().map(|s| s.code()).collect::<Vec<_>>());
-
+    println!(
+        "\nco-sorting with per-rank engines: {:?}",
+        sorters.iter().map(|s| s.code()).collect::<Vec<_>>()
+    );
     let out = run_distributed_sort_mixed::<i64>(&cfg, &sorters, rt.clone())?;
-    println!("\nmixed-engine run:\n  {}", out.record.row());
+    println!("mixed-engine run:\n  {}", out.record.row());
 
     // Same workload, homogeneous AK, for comparison: results must agree
     // in sizes (identical splitters modulo sampling noise is not
@@ -51,6 +110,6 @@ fn main() -> anyhow::Result<()> {
         fmt_throughput(out.record.throughput_bps()),
         fmt_throughput(homo.record.throughput_bps()),
     );
-    println!("co-sort OK: CPU and device ranks composed in one collective sort");
+    println!("co-sort OK: CPU, device and hybrid ranks composed in one collective sort");
     Ok(())
 }

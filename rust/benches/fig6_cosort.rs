@@ -1,0 +1,109 @@
+//! Bench: Fig 6 (this repo's extension) — hybrid CPU–GPU co-sort.
+//!
+//! Panel (a): single-shard co-sort throughput vs the host-only engine at
+//! growing n, for the calibrated split and a fixed 50/50 split.
+//! Panel (b): weak scaling of distributed SIHSort with HY (hybrid
+//! co-sorting) ranks against homogeneous vendor-radix ranks.
+//!
+//! Env: `AK_FIG6_QUICK=1` shrinks both grids for CI smoke runs.
+
+use std::time::Instant;
+
+use accelkern::backend::Backend;
+use accelkern::cfg::{RunConfig, Sorter};
+use accelkern::cluster::DeviceModel;
+use accelkern::coordinator::driver::run_distributed_sort;
+use accelkern::hybrid::{calibrate_sort, co_sort, HybridEngine, HybridPlan};
+use accelkern::metrics::{dump_csv, render_series_table, Series};
+use accelkern::runtime::{Registry, Runtime};
+use accelkern::util::Prng;
+use accelkern::workload::{generate, Distribution};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("AK_FIG6_QUICK").is_ok();
+    let host_threads = accelkern::backend::threaded::default_threads();
+    let rt = Runtime::open_default().ok();
+    if rt.is_none() {
+        eprintln!("warn: no artifacts; the device engine runs its host stand-in");
+    }
+    let device_backend = rt.clone().map(|rt| Backend::device(Registry::new(rt)));
+
+    // Calibrate once; every plan derives from the same measurement.
+    let dev_ops = device_backend.as_ref().and_then(|b| b.device_ops());
+    let cal = calibrate_sort::<i64>(1 << 16, host_threads, dev_ops)?;
+    let dm = DeviceModel::default();
+    // Split for the engines as they actually execute (panel (a) measures
+    // wall clock); the model projection is informational.
+    let plan = cal.plan_measured(1.0);
+    eprintln!(
+        "calibrated split: {:.1}% host (host {:.2} Melem/s, model-projected device:host {:.1}x)",
+        plan.host_fraction * 100.0,
+        cal.host_elems_per_sec / 1e6,
+        cal.ratio(&dm)
+    );
+
+    // ---- Panel (a): single-shard co-sort throughput ------------------------
+    let sizes: Vec<usize> =
+        if quick { vec![1 << 15, 1 << 17] } else { vec![1 << 15, 1 << 17, 1 << 19, 1 << 21] };
+    let reps = if quick { 2 } else { 3 };
+    let engines: Vec<(&str, HybridEngine)> = vec![
+        ("host-only", HybridEngine::new(HybridPlan::host_only(), host_threads, None)),
+        (
+            "hybrid-calibrated",
+            HybridEngine::from_backends(plan, host_threads, device_backend.clone()),
+        ),
+        (
+            "hybrid-50/50",
+            HybridEngine::from_backends(HybridPlan::new(0.5), host_threads, device_backend.clone()),
+        ),
+    ];
+    let mut shard_series: Vec<Series> =
+        engines.iter().map(|(name, _)| Series::new(*name)).collect();
+    for &n in &sizes {
+        let xs: Vec<i64> = generate(&mut Prng::new(42), Distribution::Uniform, n);
+        for (si, (_, eng)) in engines.iter().enumerate() {
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let mut buf = xs.clone();
+                let t0 = Instant::now();
+                co_sort(eng, &mut buf)?;
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            shard_series[si].push(n as f64, n as f64 / best);
+        }
+    }
+    println!(
+        "{}",
+        render_series_table("Fig 6a — co-sort single-shard throughput", "n", "elems/s", &shard_series)
+    );
+    dump_csv("fig6_cosort_shard", &shard_series);
+
+    // ---- Panel (b): weak scaling with hybrid ranks -------------------------
+    let rank_grid: Vec<usize> = if quick { vec![2, 4] } else { vec![4, 8, 16] };
+    let elems_per_rank = if quick { 20_000 } else { 100_000 };
+    let mut weak = vec![Series::new("GG-HY"), Series::new("GG-TR")];
+    for &ranks in &rank_grid {
+        let mut cfg = RunConfig::default();
+        cfg.ranks = ranks;
+        cfg.elems_per_rank = elems_per_rank;
+        cfg.hybrid_host_fraction = Some(plan.host_fraction); // reuse the calibration
+        for (si, sorter) in [Sorter::Hybrid, Sorter::ThrustRadix].into_iter().enumerate() {
+            cfg.sorter = sorter;
+            // Pass the runtime through so HY ranks use the same engine
+            // the calibration measured (artifacts when present).
+            let out = run_distributed_sort::<i32>(&cfg, rt.clone())?;
+            weak[si].push(ranks as f64, out.record.throughput_bps());
+        }
+    }
+    println!(
+        "{}",
+        render_series_table(
+            "Fig 6b — weak scaling, hybrid vs vendor-radix ranks",
+            "ranks",
+            "GB/s (simulated)",
+            &weak
+        )
+    );
+    dump_csv("fig6_cosort_weak", &weak);
+    Ok(())
+}

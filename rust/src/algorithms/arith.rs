@@ -16,9 +16,13 @@ use crate::backend::Backend;
 /// fold them — paper §III-B).
 #[derive(Clone, Copy, Debug)]
 pub struct LjgConsts {
+    /// Well depth ε.
     pub epsilon: f32,
+    /// Length scale σ.
     pub sigma: f32,
+    /// Gaussian centre r₀.
     pub r0: f32,
+    /// Interaction cutoff radius.
     pub cutoff: f32,
 }
 
@@ -40,17 +44,24 @@ pub fn rbf(backend: &Backend, pts: &[f32]) -> anyhow::Result<Vec<f32>> {
             rbf_range(pts, n, &mut out, 0..n);
             Ok(out)
         }
-        Backend::Threaded(t) => {
-            let mut out = vec![0.0f32; n];
-            let ranges = crate::backend::threaded::split_ranges(n, *t);
-            crate::backend::parallel_chunks(&mut out, *t, |ci, chunk| {
-                let r = ranges[ci].clone();
-                rbf_range(pts, n, chunk, r);
-            });
-            Ok(out)
-        }
+        Backend::Threaded(t) => Ok(rbf_threaded(pts, n, *t)),
         Backend::Device(dev) => dev.rbf_f32(pts),
+        // The (3, n) packed rows cannot split contiguously between two
+        // engines without a repack; the hybrid path runs on the host pool
+        // (co-processing covers the index-splittable primitives —
+        // DESIGN.md §10).
+        Backend::Hybrid(h) => Ok(rbf_threaded(pts, n, h.host_threads.max(1))),
     }
+}
+
+fn rbf_threaded(pts: &[f32], n: usize, threads: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    let ranges = crate::backend::threaded::split_ranges(n, threads);
+    crate::backend::parallel_chunks(&mut out, threads, |ci, chunk| {
+        let r = ranges[ci].clone();
+        rbf_range(pts, n, chunk, r);
+    });
+    out
 }
 
 #[inline]
@@ -79,16 +90,20 @@ pub fn ljg(
             ljg_range(p1, p2, n, c, &mut out, 0..n);
             Ok(out)
         }
-        Backend::Threaded(t) => {
-            let mut out = vec![0.0f32; n];
-            let ranges = crate::backend::threaded::split_ranges(n, *t);
-            crate::backend::parallel_chunks(&mut out, *t, |ci, chunk| {
-                ljg_range(p1, p2, n, c, chunk, ranges[ci].clone());
-            });
-            Ok(out)
-        }
+        Backend::Threaded(t) => Ok(ljg_threaded(p1, p2, n, c, *t)),
         Backend::Device(dev) => dev.ljg_f32(p1, p2, [c.epsilon, c.sigma, c.r0, c.cutoff]),
+        // Same packed-layout rule as `rbf`: hybrid runs on the host pool.
+        Backend::Hybrid(h) => Ok(ljg_threaded(p1, p2, n, c, h.host_threads.max(1))),
     }
+}
+
+fn ljg_threaded(p1: &[f32], p2: &[f32], n: usize, c: LjgConsts, threads: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    let ranges = crate::backend::threaded::split_ranges(n, threads);
+    crate::backend::parallel_chunks(&mut out, threads, |ci, chunk| {
+        ljg_range(p1, p2, n, c, chunk, ranges[ci].clone());
+    });
+    out
 }
 
 #[inline]
@@ -143,14 +158,16 @@ pub fn ljg_powf(backend: &Backend, p1: &[f32], p2: &[f32], c: LjgConsts) -> anyh
         }
     };
     let mut out = vec![0.0f32; n];
+    let threaded = |out: &mut Vec<f32>, t: usize| {
+        let ranges = crate::backend::threaded::split_ranges(n, t);
+        crate::backend::parallel_chunks(out, t, |ci, chunk| {
+            body(chunk, ranges[ci].clone());
+        });
+    };
     match backend {
         Backend::Native | Backend::Device(_) => body(&mut out, 0..n),
-        Backend::Threaded(t) => {
-            let ranges = crate::backend::threaded::split_ranges(n, *t);
-            crate::backend::parallel_chunks(&mut out, *t, |ci, chunk| {
-                body(chunk, ranges[ci].clone());
-            });
-        }
+        Backend::Threaded(t) => threaded(&mut out, *t),
+        Backend::Hybrid(h) => threaded(&mut out, h.host_threads.max(1)),
     }
     Ok(out)
 }

@@ -28,6 +28,9 @@ where
                 }
             });
         }
+        // Co-processing: host thread pool and device-engine emulation walk
+        // disjoint index shards concurrently (DESIGN.md §10).
+        Backend::Hybrid(h) => crate::hybrid::co_foreachindex(h, len, f),
     }
 }
 
@@ -52,6 +55,7 @@ where
                 }
             });
         }
+        Backend::Hybrid(h) => crate::hybrid::co_foreach_mut(h, xs, f),
     }
 }
 

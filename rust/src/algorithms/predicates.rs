@@ -17,6 +17,7 @@ pub fn any_gt(backend: &Backend, xs: &[f32], threshold: f32) -> anyhow::Result<b
         Backend::Native => Ok(xs.iter().any(|&x| x > threshold)),
         Backend::Threaded(t) => Ok(host_any(xs, *t, |x| x > threshold)),
         Backend::Device(dev) => dev.any_gt_f32(xs, threshold),
+        Backend::Hybrid(h) => crate::hybrid::co_any_gt(h, xs, threshold),
     }
 }
 
@@ -26,6 +27,7 @@ pub fn all_gt(backend: &Backend, xs: &[f32], threshold: f32) -> anyhow::Result<b
         Backend::Native => Ok(xs.iter().all(|&x| x > threshold)),
         Backend::Threaded(t) => Ok(!host_any(xs, *t, |x| x <= threshold)),
         Backend::Device(dev) => dev.all_gt_f32(xs, threshold),
+        Backend::Hybrid(h) => crate::hybrid::co_all_gt(h, xs, threshold),
     }
 }
 
@@ -38,6 +40,9 @@ pub fn any_by<T: Sync + Copy, P: Fn(&T) -> bool + Sync>(
     match backend {
         Backend::Native | Backend::Device(_) => xs.iter().any(|x| pred(x)),
         Backend::Threaded(t) => host_any(xs, *t, |x| pred(&x)),
+        // Arbitrary predicates cannot cross the AOT boundary; the hybrid
+        // generic path runs on the host pool (DESIGN.md §10).
+        Backend::Hybrid(h) => host_any(xs, h.host_threads.max(1), |x| pred(&x)),
     }
 }
 

@@ -10,8 +10,11 @@ use crate::backend::{Backend, DeviceKey};
 /// Supported reduction operators.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReduceKind {
+    /// Sum (wrapping for integers).
     Add,
+    /// Minimum.
     Min,
+    /// Maximum.
     Max,
 }
 
@@ -27,7 +30,9 @@ impl ReduceKind {
 
 /// Numeric glue for reductions (identity + fold per operator).
 pub trait Reducible: DeviceKey {
+    /// The operator's identity element (0, MAX, MIN respectively).
     fn identity(kind: ReduceKind) -> Self;
+    /// Apply the operator to two values.
     fn fold(kind: ReduceKind, a: Self, b: Self) -> Self;
 }
 
@@ -82,6 +87,15 @@ reducible_float!(f64);
 
 /// Reduce `xs` with `kind`. `switch_below`: inputs with at most this many
 /// elements finish the fold on the host (device partials only).
+///
+/// ```
+/// use accelkern::algorithms::{reduce, ReduceKind};
+/// use accelkern::backend::Backend;
+/// let xs = vec![3i64, -1, 4, 1, 5];
+/// assert_eq!(reduce(&Backend::Native, &xs, ReduceKind::Add, 0).unwrap(), 12);
+/// assert_eq!(reduce(&Backend::Threaded(2), &xs, ReduceKind::Min, 0).unwrap(), -1);
+/// assert_eq!(reduce(&Backend::Native, &xs, ReduceKind::Max, 0).unwrap(), 5);
+/// ```
 pub fn reduce<K: Reducible>(
     backend: &Backend,
     xs: &[K],
@@ -95,6 +109,9 @@ pub fn reduce<K: Reducible>(
                 crate::backend::parallel_for_each_chunk(xs.len(), *t, |r| host_reduce(&xs[r], kind));
             Ok(partials.into_iter().fold(K::identity(kind), |a, b| K::fold(kind, a, b)))
         }
+        // Co-processing: both engines reduce disjoint shards concurrently,
+        // partials fold on the host (DESIGN.md §10).
+        Backend::Hybrid(h) => crate::hybrid::co_reduce(h, xs, kind, switch_below),
         Backend::Device(dev) => {
             if !K::XLA {
                 return Ok(host_reduce(xs, kind));
@@ -132,6 +149,14 @@ where
         // device variant is the named-map artifact (`mapreduce_sumsq`
         // etc., see `DeviceOps`). Host-execute here.
         Backend::Device(_) => Ok(host_mapreduce(xs, &map, kind)),
+        // Same AOT-boundary rule: hybrid mapreduce runs on the host pool.
+        Backend::Hybrid(h) => {
+            let t = h.host_threads.max(1);
+            let partials = crate::backend::parallel_for_each_chunk(xs.len(), t, |r| {
+                host_mapreduce(&xs[r], &map, kind)
+            });
+            Ok(partials.into_iter().fold(K::identity(kind), |a, b| K::fold(kind, a, b)))
+        }
     }
 }
 

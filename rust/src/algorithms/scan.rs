@@ -9,6 +9,7 @@ use crate::backend::{Backend, DeviceKey};
 /// Additive scan glue (the artifact family covers op=add; host min/max
 /// scans are available through the generic `accumulate_by`).
 pub trait ScanAdd: DeviceKey + Default {
+    /// Associative addition (wrapping for integers).
     fn add(a: Self, b: Self) -> Self;
 }
 
@@ -52,6 +53,10 @@ pub fn accumulate<K: ScanAdd + std::ops::Add<Output = K>>(
                 Ok(host_scan(xs, inclusive))
             }
         }
+        // Carries serialise the chunk recombination, so co-processing buys
+        // nothing here: the hybrid scan runs on the host pool
+        // (DESIGN.md §10).
+        Backend::Hybrid(h) => Ok(threaded_scan(xs, inclusive, h.host_threads.max(1))),
     }
 }
 

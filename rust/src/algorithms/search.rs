@@ -46,6 +46,34 @@ fn dispatch<K: DeviceKey>(
             }
             Ok(host_search(haystack, needles, side, 1))
         }
+        // Co-processing: the needle block splits between engines (both
+        // search the same haystack), results concatenate in order
+        // (DESIGN.md §10).
+        Backend::Hybrid(h) => {
+            let split = match h.route(needles.len()) {
+                crate::hybrid::CoRoute::Host => {
+                    return dispatch(&h.host_backend(), haystack, needles, side)
+                }
+                crate::hybrid::CoRoute::Device => {
+                    return dispatch(&h.device_backend(), haystack, needles, side)
+                }
+                crate::hybrid::CoRoute::Split(split) => split,
+            };
+            let host_backend = h.host_backend();
+            let dev_backend = h.device_backend();
+            let (host_needles, dev_needles) = needles.split_at(split);
+            let (host_res, dev_res) = std::thread::scope(|s| {
+                let hj = s.spawn(move || dispatch(&host_backend, haystack, host_needles, side));
+                let dj = s.spawn(move || dispatch(&dev_backend, haystack, dev_needles, side));
+                (hj.join(), dj.join())
+            });
+            let mut out = host_res
+                .map_err(|_| anyhow::anyhow!("host co-search worker panicked"))??;
+            out.extend(
+                dev_res.map_err(|_| anyhow::anyhow!("device co-search worker panicked"))??,
+            );
+            Ok(out)
+        }
     }
 }
 

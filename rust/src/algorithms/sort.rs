@@ -11,6 +11,19 @@ use crate::baselines::kmerge;
 use crate::dtype::SortKey;
 
 /// Sort `xs` ascending (total order; NaN-safe for floats).
+///
+/// ```
+/// use accelkern::backend::Backend;
+/// let mut v = vec![3i32, -1, 2, 0];
+/// accelkern::algorithms::sort(&Backend::Native, &mut v).unwrap();
+/// assert_eq!(v, vec![-1, 0, 2, 3]);
+///
+/// // Floats sort in the IEEE total order: NaN sinks past +inf.
+/// let mut f = vec![1.0f64, f64::NAN, f64::NEG_INFINITY, -0.0];
+/// accelkern::algorithms::sort(&Backend::Threaded(2), &mut f).unwrap();
+/// assert_eq!(f[0], f64::NEG_INFINITY);
+/// assert!(f[3].is_nan());
+/// ```
 pub fn sort<K: DeviceKey>(backend: &Backend, xs: &mut [K]) -> anyhow::Result<()> {
     match backend {
         Backend::Native => {
@@ -31,6 +44,9 @@ pub fn sort<K: DeviceKey>(backend: &Backend, xs: &mut [K]) -> anyhow::Result<()>
                 Ok(())
             }
         }
+        // Co-processing: both engines sort disjoint shards concurrently,
+        // then a 2-way merge recombines (DESIGN.md §10).
+        Backend::Hybrid(h) => crate::hybrid::co_sort(h, xs),
     }
 }
 

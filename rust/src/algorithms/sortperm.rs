@@ -31,6 +31,10 @@ pub fn sortperm<K: DeviceKey>(backend: &Backend, xs: &[K]) -> anyhow::Result<Vec
             }
             Ok(host_sortperm(xs, 1))
         }
+        // The pair buffer cannot straddle two engines without an extra
+        // gather; the hybrid sortperm runs on the host pool
+        // (DESIGN.md §10).
+        Backend::Hybrid(h) => Ok(host_sortperm(xs, h.host_threads.max(1))),
     }
 }
 

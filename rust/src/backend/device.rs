@@ -22,7 +22,9 @@ use crate::runtime::{lit_from_slice, lit_to_vec, Registry};
 pub trait DeviceKey: SortKey {
     /// Does an XLA artifact family exist for this dtype?
     const XLA: bool;
+    /// Pack a slice into a rank-1 XLA literal.
     fn to_literal(xs: &[Self]) -> anyhow::Result<Literal>;
+    /// Unpack a rank-1 XLA literal back into a vector.
     fn from_literal(lit: &Literal) -> anyhow::Result<Vec<Self>>;
 }
 

@@ -12,6 +12,9 @@
 //!   rows); per-dtype support is static via [`device::DeviceKey`], with
 //!   i128 falling back to native paths under the device model
 //!   (DESIGN.md §2).
+//! * `Hybrid` — cost-model-driven CPU–GPU co-processing: host thread
+//!   pool and device engine execute disjoint shards of one call
+//!   concurrently (`crate::hybrid`, DESIGN.md §10).
 
 pub mod device;
 pub mod threaded;
@@ -19,6 +22,7 @@ pub mod threaded;
 pub use device::{DeviceKey, DeviceOps};
 pub use threaded::{parallel_chunks, parallel_for_each_chunk};
 
+use crate::hybrid::HybridEngine;
 use crate::runtime::Registry;
 
 /// Which engine executes an algorithm call.
@@ -30,26 +34,46 @@ pub enum Backend {
     Threaded(usize),
     /// AOT artifact execution through PJRT.
     Device(DeviceOps),
+    /// CPU–GPU co-processing: both engines at once, split by a
+    /// [`crate::hybrid::HybridPlan`] (DESIGN.md §10).
+    Hybrid(HybridEngine),
 }
 
 impl Backend {
+    /// Device backend over an artifact registry.
     pub fn device(reg: Registry) -> Backend {
         Backend::Device(DeviceOps::new(reg))
     }
 
+    /// Hybrid backend over a prepared engine (see
+    /// [`crate::hybrid::HybridEngine`]).
+    pub fn hybrid(engine: HybridEngine) -> Backend {
+        Backend::Hybrid(engine)
+    }
+
+    /// Short human-readable engine name.
     pub fn name(&self) -> String {
         match self {
             Backend::Native => "native".to_string(),
             Backend::Threaded(n) => format!("threaded({n})"),
             Backend::Device(_) => "device".to_string(),
+            Backend::Hybrid(h) => h.describe(),
         }
     }
 
-    pub fn registry(&self) -> Option<&Registry> {
+    /// The device engine handle, when one is attached (directly or
+    /// inside a hybrid engine).
+    pub fn device_ops(&self) -> Option<&DeviceOps> {
         match self {
-            Backend::Device(d) => Some(d.registry()),
+            Backend::Device(d) => Some(d),
+            Backend::Hybrid(h) => h.device.as_ref(),
             _ => None,
         }
+    }
+
+    /// The artifact registry, when a device engine is attached.
+    pub fn registry(&self) -> Option<&Registry> {
+        self.device_ops().map(|d| d.registry())
     }
 }
 

@@ -159,7 +159,8 @@ fn split_top_level(s: &str) -> anyhow::Result<Vec<&str>> {
 
 // ---------------------------------------------------------------------------
 
-/// Which local sorter a rank uses (the paper's Fig 1–5 legend).
+/// Which local sorter a rank uses (the paper's Fig 1–5 legend, plus the
+/// hybrid co-sorter of DESIGN.md §10).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Sorter {
     /// "CC-JB": single-thread CPU comparison sort (Julia Base analog).
@@ -170,35 +171,98 @@ pub enum Sorter {
     ThrustMerge,
     /// "TR": vendor radix sort (Thrust analog, native optimised).
     ThrustRadix,
+    /// "HY": hybrid CPU–GPU co-sort — the rank's host threads and its
+    /// device engine sort disjoint sub-shards concurrently and merge
+    /// (`crate::hybrid`, DESIGN.md §10).
+    Hybrid,
 }
 
 impl Sorter {
+    /// The paper's Fig 1–5 legend (the hybrid co-sorter is this repo's
+    /// extension and is listed separately as Fig 6).
     pub const ALL: [Sorter; 4] =
         [Sorter::JuliaBase, Sorter::Ak, Sorter::ThrustMerge, Sorter::ThrustRadix];
 
-    /// Paper legend code ("JB", "AK", "TM", "TR").
+    /// Paper legend code ("JB", "AK", "TM", "TR", "HY").
     pub fn code(self) -> &'static str {
         match self {
             Sorter::JuliaBase => "JB",
             Sorter::Ak => "AK",
             Sorter::ThrustMerge => "TM",
             Sorter::ThrustRadix => "TR",
+            Sorter::Hybrid => "HY",
         }
     }
 
+    /// Parse a legend code or long name (case-insensitive).
     pub fn parse(s: &str) -> Option<Sorter> {
         match s.to_ascii_uppercase().as_str() {
             "JB" | "JULIABASE" | "BASE" => Some(Sorter::JuliaBase),
             "AK" => Some(Sorter::Ak),
             "TM" | "THRUSTMERGE" => Some(Sorter::ThrustMerge),
             "TR" | "THRUSTRADIX" => Some(Sorter::ThrustRadix),
+            "HY" | "HYBRID" => Some(Sorter::Hybrid),
             _ => None,
         }
     }
 
-    /// GPU-class sorter? (JB runs on a CPU rank.)
+    /// GPU-class sorter? (JB runs on a CPU rank; a hybrid rank owns a
+    /// device, so it is device-class for link selection and Fig 5
+    /// normalisation.)
     pub fn is_device(self) -> bool {
         !matches!(self, Sorter::JuliaBase)
+    }
+}
+
+/// Execution backend selector for the algorithm suite (`--backend`,
+/// `[run] backend` in config files).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Single-thread host execution.
+    Native,
+    /// Host thread pool.
+    Threaded,
+    /// AOT artifacts through PJRT.
+    Device,
+    /// CPU–GPU co-processing (DESIGN.md §10).
+    Hybrid,
+}
+
+impl BackendKind {
+    /// Every selectable backend.
+    pub const ALL: [BackendKind; 4] =
+        [BackendKind::Native, BackendKind::Threaded, BackendKind::Device, BackendKind::Hybrid];
+
+    /// CLI / config-file name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Threaded => "threaded",
+            BackendKind::Device => "device",
+            BackendKind::Hybrid => "hybrid",
+        }
+    }
+
+    /// Parse a CLI / config-file name (case-insensitive).
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(BackendKind::Native),
+            "threaded" | "cpu" => Some(BackendKind::Threaded),
+            "device" | "gpu" => Some(BackendKind::Device),
+            "hybrid" => Some(BackendKind::Hybrid),
+            _ => None,
+        }
+    }
+
+    /// The rank-local sorter this backend implies for distributed runs:
+    /// host backends sort like a CPU rank, `device` like an AK rank,
+    /// `hybrid` co-sorts.
+    pub fn sorter(self) -> Sorter {
+        match self {
+            BackendKind::Native | BackendKind::Threaded => Sorter::JuliaBase,
+            BackendKind::Device => Sorter::Ak,
+            BackendKind::Hybrid => Sorter::Hybrid,
+        }
     }
 }
 
@@ -246,15 +310,23 @@ pub enum FinalPhase {
 /// Top-level run configuration (CLI + config file).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// Simulated cluster shape + link parameters.
     pub cluster: ClusterSpec,
+    /// Number of simulated ranks.
     pub ranks: usize,
+    /// Element type of the sorted keys.
     pub dtype: ElemType,
+    /// Workload distribution.
     pub dist: Distribution,
+    /// Rank-local sorting engine.
     pub sorter: Sorter,
+    /// MPI transfer mode (GPUDirect vs host-staged).
     pub transfer: TransferMode,
+    /// SIHSort final-phase strategy.
     pub final_phase: FinalPhase,
     /// Elements per rank (weak scaling) — converted from --mb-per-rank.
     pub elems_per_rank: usize,
+    /// Workload seed.
     pub seed: u64,
     /// Oversampling factor for splitter sampling (paper's sample sort p).
     pub samples_per_rank: usize,
@@ -262,6 +334,15 @@ pub struct RunConfig {
     pub refine_rounds: usize,
     /// Bucket balance tolerance (fraction of ideal bucket size).
     pub balance_tol: f64,
+    /// Backend selected via `--backend` / `[run] backend`, if any. Its
+    /// only effect is to imply the rank-local sorter at parse time
+    /// ([`BackendKind::sorter`]); no command reads the field itself.
+    pub backend: Option<BackendKind>,
+    /// Host thread-pool width for hybrid ranks (DESIGN.md §10).
+    pub host_threads: usize,
+    /// Fixed hybrid host fraction (`--host-fraction`); `None` means the
+    /// driver calibrates the split (`hybrid::calibrate`).
+    pub hybrid_host_fraction: Option<f64>,
 }
 
 impl Default for RunConfig {
@@ -279,6 +360,9 @@ impl Default for RunConfig {
             samples_per_rank: 64,
             refine_rounds: 4,
             balance_tol: 0.10,
+            backend: None,
+            host_threads: crate::backend::threaded::default_threads(),
+            hybrid_host_fraction: None,
         }
     }
 }
@@ -294,6 +378,13 @@ impl RunConfig {
         }
         if let Some(v) = doc.get("run", "dist").and_then(|v| v.as_str()) {
             self.dist = Distribution::parse(v).with_context(|| format!("bad dist {v}"))?;
+        }
+        // `backend` implies a sorter, but an explicit `sorter` key wins —
+        // the same precedence the CLI gives --backend vs --sorter.
+        if let Some(v) = doc.get("run", "backend").and_then(|v| v.as_str()) {
+            let kind = BackendKind::parse(v).with_context(|| format!("bad backend {v}"))?;
+            self.backend = Some(kind);
+            self.sorter = kind.sorter();
         }
         if let Some(v) = doc.get("run", "sorter").and_then(|v| v.as_str()) {
             self.sorter = Sorter::parse(v).with_context(|| format!("bad sorter {v}"))?;
@@ -315,6 +406,13 @@ impl RunConfig {
         }
         if let Some(v) = doc.get("run", "balance_tol").and_then(|v| v.as_f64()) {
             self.balance_tol = v;
+        }
+        if let Some(v) = doc.get("run", "host_threads").and_then(|v| v.as_i64()) {
+            self.host_threads = (v as usize).max(1);
+        }
+        if let Some(v) = doc.get("run", "host_fraction").and_then(|v| v.as_f64()) {
+            anyhow::ensure!((0.0..=1.0).contains(&v), "host_fraction {v} outside [0, 1]");
+            self.hybrid_host_fraction = Some(v);
         }
         self.cluster.apply_toml(doc)?;
         Ok(())
@@ -378,8 +476,52 @@ mod tests {
     #[test]
     fn sorter_codes() {
         assert_eq!(Sorter::parse("tr"), Some(Sorter::ThrustRadix));
+        assert_eq!(Sorter::parse("hybrid"), Some(Sorter::Hybrid));
+        assert_eq!(Sorter::Hybrid.code(), "HY");
+        assert!(Sorter::Hybrid.is_device());
         assert_eq!(TransferMode::GpuDirect.prefix(Sorter::Ak), "GG");
         assert_eq!(TransferMode::CpuStaged.prefix(Sorter::Ak), "GC");
         assert_eq!(TransferMode::GpuDirect.prefix(Sorter::JuliaBase), "CC");
+        assert_eq!(TransferMode::GpuDirect.prefix(Sorter::Hybrid), "GG");
+    }
+
+    #[test]
+    fn backend_kinds_parse_and_imply_sorters() {
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("GPU"), Some(BackendKind::Device));
+        assert_eq!(BackendKind::parse("nope"), None);
+        assert_eq!(BackendKind::Hybrid.sorter(), Sorter::Hybrid);
+        assert_eq!(BackendKind::Device.sorter(), Sorter::Ak);
+        assert_eq!(BackendKind::Native.sorter(), Sorter::JuliaBase);
+    }
+
+    #[test]
+    fn hybrid_config_via_toml() {
+        let doc = Toml::parse(
+            "[run]\nbackend = \"hybrid\"\nhost_threads = 6\nhost_fraction = 0.25\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.backend, Some(BackendKind::Hybrid));
+        assert_eq!(cfg.sorter, Sorter::Hybrid);
+        assert_eq!(cfg.host_threads, 6);
+        assert_eq!(cfg.hybrid_host_fraction, Some(0.25));
+
+        let bad = Toml::parse("[run]\nhost_fraction = 1.5\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn toml_sorter_wins_over_backend_like_cli() {
+        // Same precedence as `--backend hybrid --sorter TR`.
+        let doc =
+            Toml::parse("[run]\nsorter = \"TR\"\nbackend = \"hybrid\"\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.backend, Some(BackendKind::Hybrid));
+        assert_eq!(cfg.sorter, Sorter::ThrustRadix);
     }
 }

@@ -8,18 +8,22 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context};
 
-use crate::cfg::{RunConfig, Sorter, Toml, TransferMode};
+use crate::cfg::{BackendKind, RunConfig, Sorter, Toml, TransferMode};
 use crate::dtype::ElemType;
 use crate::workload::Distribution;
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Cli {
+    /// The subcommand (first argument).
     pub command: String,
+    /// `--flag value` pairs (boolean flags map to `"true"`).
     pub flags: BTreeMap<String, String>,
+    /// Non-flag arguments, in order.
     pub positional: Vec<String>,
 }
 
+/// `akbench help` text: the command + flag reference.
 pub const USAGE: &str = "\
 akbench — AcceleratedKernels reproduction driver
 
@@ -30,6 +34,8 @@ COMMANDS
   sort                 one distributed sort run (prints the full record)
   table2               Table II arithmetic kernel benchmark
   fig1 .. fig5         regenerate the paper's figures (text + CSV)
+  calibrate            measure host:device sort throughput and print the
+                       hybrid co-processing split (DESIGN.md §10)
   ablate               design-choice ablations (final phase, digit width,
                        samples/rank, refinement rounds)
   selftest             quick end-to-end health check
@@ -39,7 +45,10 @@ COMMON FLAGS
   --ranks N            number of simulated ranks        (default 8)
   --dtype T            i16|i32|i64|i128|f32|f64         (default i32)
   --dist D             uniform|sorted|reverse|nearly-sorted|dup-heavy|zipf|gaussian
-  --sorter S           JB|AK|TM|TR                      (default AK)
+  --sorter S           JB|AK|TM|TR|HY                   (default AK)
+  --backend B          native|threaded|device|hybrid (implies the sorter:
+                       hybrid ranks co-sort on CPU+GPU at once)
+  --host-fraction X    hybrid: fixed host share in [0,1] (default: calibrated)
   --transfer M         direct|staged                    (default direct)
   --elems-per-rank N   elements per rank                (default 1Mi)
   --mb-per-rank X      per-rank size in MB (overrides elems)
@@ -48,8 +57,9 @@ COMMON FLAGS
   --final P            merge|sort (SIHSort final phase)
   --quick              smaller grids / shorter sampling
   --no-device          skip artifact loading (host paths only)
-  --n N                element count for table2/examples
-  --threads N          host thread count for table2
+  --n N                element count for table2/calibrate/examples
+  --threads N          host thread count: table2 rows and the hybrid
+                       rank pool (sort/calibrate/figs)
 ";
 
 impl Cli {
@@ -84,22 +94,26 @@ impl Cli {
         Ok(cli)
     }
 
+    /// Raw value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// Integer value of `--name` (`_` separators allowed), if present.
     pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
         self.get(name)
             .map(|v| v.replace('_', "").parse::<usize>().with_context(|| format!("--{name}: bad integer '{v}'")))
             .transpose()
     }
 
+    /// Float value of `--name`, if present.
     pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
         self.get(name)
             .map(|v| v.parse::<f64>().with_context(|| format!("--{name}: bad number '{v}'")))
             .transpose()
     }
 
+    /// Was `--name` passed (boolean flags included)?
     pub fn has(&self, name: &str) -> bool {
         self.get(name).is_some()
     }
@@ -123,8 +137,24 @@ impl Cli {
             cfg.dist =
                 Distribution::parse(v).with_context(|| format!("--dist: unknown '{v}'"))?;
         }
+        if let Some(v) = self.get("backend") {
+            let kind =
+                BackendKind::parse(v).with_context(|| format!("--backend: unknown '{v}'"))?;
+            cfg.backend = Some(kind);
+            cfg.sorter = kind.sorter();
+        }
         if let Some(v) = self.get("sorter") {
             cfg.sorter = Sorter::parse(v).with_context(|| format!("--sorter: unknown '{v}'"))?;
+        }
+        if let Some(v) = self.get_f64("host-fraction")? {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&v),
+                "--host-fraction: expected a value in [0, 1], got {v}"
+            );
+            cfg.hybrid_host_fraction = Some(v);
+        }
+        if let Some(v) = self.get_usize("threads")? {
+            cfg.host_threads = v.max(1);
         }
         if let Some(v) = self.get("transfer") {
             cfg.transfer =
@@ -201,6 +231,22 @@ mod tests {
     #[test]
     fn bad_enum_values_error() {
         let c = Cli::parse(args("sort --dtype nope")).unwrap();
+        assert!(c.run_config().is_err());
+    }
+
+    #[test]
+    fn backend_hybrid_selects_hybrid_sorter() {
+        let c = Cli::parse(args("sort --backend hybrid --host-fraction 0.3 --threads 6")).unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.backend, Some(crate::cfg::BackendKind::Hybrid));
+        assert_eq!(cfg.sorter, Sorter::Hybrid);
+        assert_eq!(cfg.hybrid_host_fraction, Some(0.3));
+        assert_eq!(cfg.host_threads, 6);
+        // An explicit --sorter still wins over the implied one.
+        let c = Cli::parse(args("sort --backend hybrid --sorter TR")).unwrap();
+        assert_eq!(c.run_config().unwrap().sorter, Sorter::ThrustRadix);
+        // Out-of-range fractions are rejected.
+        let c = Cli::parse(args("sort --host-fraction 1.5")).unwrap();
         assert!(c.run_config().is_err());
     }
 }

@@ -36,6 +36,14 @@ impl DeviceModel {
         }
     }
 
+    /// Throughput the modelled accelerator reaches on work this host
+    /// executes at `host_throughput` (same unit out as in). The hybrid
+    /// planner feeds this to `cost::hybrid_host_fraction` when no real
+    /// device measurement is available (DESIGN.md §10).
+    pub fn device_throughput(&self, host_throughput: f64) -> f64 {
+        host_throughput * self.gpu_speedup
+    }
+
     /// Roofline estimate used in DESIGN.md §7: given bytes touched and a
     /// device HBM bandwidth, the bandwidth-bound floor for an elementwise
     /// kernel (all L1 kernels here are VPU/bandwidth bound — no matmul).
@@ -72,5 +80,11 @@ mod tests {
     #[should_panic]
     fn rejects_nonpositive() {
         DeviceModel::new(0.0);
+    }
+
+    #[test]
+    fn device_throughput_scales_with_speedup() {
+        assert_eq!(DeviceModel::new(50.0).device_throughput(2.0), 100.0);
+        assert_eq!(DeviceModel::new(1.0).device_throughput(2.0), 2.0);
     }
 }

@@ -12,6 +12,7 @@ use crate::cfg::{RunConfig, Sorter};
 use crate::cluster::DeviceModel;
 use crate::comm::Fabric;
 use crate::dtype::SortKey;
+use crate::hybrid::{calibrate_sort, HybridEngine, HybridPlan};
 use crate::metrics::{legend_dtype, SortRunRecord};
 use crate::mpisort::sihsort::checksum;
 use crate::mpisort::{sihsort_rank, LocalSorter, RankOutcome, SihConfig};
@@ -21,6 +22,7 @@ use crate::workload::{generate, KeyGen};
 
 /// Full output of one distributed sort (record + verification data).
 pub struct DistSortOutput {
+    /// The paper-style run record (phase breakdown + fabric stats).
     pub record: SortRunRecord,
     /// Per-rank output sizes (bucket balance check).
     pub out_sizes: Vec<usize>,
@@ -54,7 +56,7 @@ pub fn run_distributed_sort_mixed<K: DeviceKey + KeyGen>(
         K::ELEM,
         cfg.dtype
     );
-    let needs_ak = sorters.iter().any(|s| *s == Sorter::Ak);
+    let needs_ak = sorters.iter().any(|s| matches!(s, Sorter::Ak | Sorter::Hybrid));
     let device_backend: Option<Backend> = if needs_ak {
         match (&runtime, K::XLA) {
             (Some(rt), true) => {
@@ -73,6 +75,29 @@ pub fn run_distributed_sort_mixed<K: DeviceKey + KeyGen>(
             // real runtime.
             _ => Some(Backend::Threaded(1)),
         }
+    } else {
+        None
+    };
+
+    // Hybrid ranks share one engine, calibrated once per run (or pinned
+    // by --host-fraction): measuring inside each rank's sort section
+    // would pollute the simulated times (DESIGN.md §10).
+    let hybrid_engine: Option<HybridEngine> = if sorters.iter().any(|s| *s == Sorter::Hybrid) {
+        let plan = match cfg.hybrid_host_fraction {
+            Some(f) => HybridPlan::new(f),
+            None => {
+                let device_ops = device_backend.as_ref().and_then(|b| b.device_ops());
+                let cal = calibrate_sort::<K>(32 * 1024, cfg.host_threads, device_ops)?;
+                // Split for the engines as they actually execute (real
+                // artifacts or the 1-thread stand-in): the rank's
+                // simulated time scales its *measured* wall clock, so
+                // minimising the wall clock minimises simulated time too.
+                // Model projections and the cost-normalised variant are
+                // exposed via `akbench calibrate` and the plan API.
+                cal.plan_measured(1.0)
+            }
+        };
+        Some(HybridEngine::from_backends(plan, cfg.host_threads, device_backend.clone()))
     } else {
         None
     };
@@ -111,10 +136,11 @@ pub fn run_distributed_sort_mixed<K: DeviceKey + KeyGen>(
             let sih = sih.clone();
             let results = &results;
             let device_backend = device_backend.clone();
+            let hybrid_engine = hybrid_engine.clone();
             s.spawn(move || {
                 let rank = ep.rank();
                 let run = (|| {
-                    let sorter = LocalSorter::from_cfg(sorter_kind, device_backend)?;
+                    let sorter = LocalSorter::from_cfg(sorter_kind, device_backend, hybrid_engine)?;
                     let outcome = sihsort_rank(&mut ep, shard, &sorter, &sih)?;
                     let (msgs, wire) = ep.stats().snapshot();
                     Ok((outcome, ep.sim_makespan(), msgs, wire))
@@ -282,6 +308,36 @@ mod tests {
         ];
         let out = run_distributed_sort_mixed::<i32>(&cfg, &sorters, None).unwrap();
         assert_eq!(out.out_sizes.iter().sum::<usize>(), 6 * 5000);
+    }
+
+    #[test]
+    fn hybrid_ranks_cosort_in_collective() {
+        // HY ranks co-sort their shards inside the same collective as CPU
+        // and vendor ranks (DESIGN.md §10); the driver's verifier is the
+        // oracle for order + conservation.
+        let mut cfg = small_cfg();
+        cfg.elems_per_rank = 20_000;
+        let sorters = vec![
+            Sorter::Hybrid,
+            Sorter::JuliaBase,
+            Sorter::Hybrid,
+            Sorter::ThrustRadix,
+            Sorter::Hybrid,
+            Sorter::ThrustMerge,
+        ];
+        let out = run_distributed_sort_mixed::<i32>(&cfg, &sorters, None).unwrap();
+        assert_eq!(out.out_sizes.iter().sum::<usize>(), 6 * 20_000);
+    }
+
+    #[test]
+    fn homogeneous_hybrid_with_fixed_fraction() {
+        let mut cfg = small_cfg();
+        cfg.sorter = Sorter::Hybrid;
+        cfg.hybrid_host_fraction = Some(0.5); // skip calibration in tests
+        cfg.dtype = ElemType::F64;
+        let out = run_distributed_sort::<f64>(&cfg, None).unwrap();
+        assert_eq!(out.out_sizes.iter().sum::<usize>(), 6 * 5000);
+        assert!(out.record.sim_total > 0.0);
     }
 
     #[test]

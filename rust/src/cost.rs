@@ -1,10 +1,14 @@
-//! Cost-normalised comparison (paper Fig 5).
+//! Cost-normalised comparison (paper Fig 5) and cost-aware split
+//! planning for the hybrid subsystem (DESIGN.md §10).
 //!
 //! GPUs cost more to buy, power and cool: the paper folds capital,
 //! running and environmental costs into a single ×22 GPU:CPU ratio
 //! (validated by the Birmingham ARC team for BlueBEAR vs Baskerville) and
 //! multiplies GPU sorting times by it. A GPU algorithm is *economically
 //! viable* only where its normalised time still beats the CPU algorithm.
+//! The same ratio, inverted, tells the hybrid planner how much of a shard
+//! a device engine should own when optimising cost rather than makespan
+//! ([`hybrid_host_fraction`]).
 
 use crate::cfg::Sorter;
 
@@ -36,6 +40,28 @@ pub fn crossover_n(
     None
 }
 
+/// Split planning for `hybrid` (DESIGN.md §10): the host-side work
+/// fraction that equalises *cost-normalised* completion time between a
+/// host engine of throughput `host_tput` and a device engine of
+/// `device_tput` (any consistent unit — elements/s, bytes/s).
+///
+/// The device throughput is first deflated by `cost_ratio` (Fig 5's ×22
+/// for economic planning; pass `1.0` to optimise pure makespan), then the
+/// work splits proportionally to effective throughput:
+/// `f_host = T_h / (T_h + T_d / cost_ratio)`. A higher cost ratio or a
+/// slower device model therefore shifts work back onto the host — the
+/// invariant the hybrid plan tests assert.
+pub fn hybrid_host_fraction(host_tput: f64, device_tput: f64, cost_ratio: f64) -> f64 {
+    assert!(host_tput >= 0.0 && host_tput.is_finite(), "bad host throughput {host_tput}");
+    assert!(device_tput >= 0.0 && device_tput.is_finite(), "bad device throughput {device_tput}");
+    assert!(cost_ratio > 0.0 && cost_ratio.is_finite(), "bad cost ratio {cost_ratio}");
+    let effective_dev = device_tput / cost_ratio;
+    if host_tput + effective_dev <= 0.0 {
+        return 0.5; // no information: split evenly
+    }
+    host_tput / (host_tput + effective_dev)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,5 +87,34 @@ mod tests {
         let cpu = vec![(1e5, 1.0)];
         let gpu = vec![(1e5, 0.5)]; // 2x faster — not enough at ×22
         assert_eq!(crossover_n(&cpu, &gpu, 22.0), None);
+    }
+
+    #[test]
+    fn host_fraction_proportional_to_throughput() {
+        // Equal engines at unit cost split evenly.
+        assert!((hybrid_host_fraction(1.0, 1.0, 1.0) - 0.5).abs() < 1e-12);
+        // A 3x device takes 3/4 of the work.
+        assert!((hybrid_host_fraction(1.0, 3.0, 1.0) - 0.25).abs() < 1e-12);
+        // Degenerate engines.
+        assert_eq!(hybrid_host_fraction(0.0, 1.0, 1.0), 0.0);
+        assert_eq!(hybrid_host_fraction(1.0, 0.0, 1.0), 1.0);
+        assert_eq!(hybrid_host_fraction(0.0, 0.0, 22.0), 0.5);
+    }
+
+    #[test]
+    fn host_fraction_monotone_in_cost_ratio() {
+        // The paper's ×22 pushes work back onto the CPU: with a 22x-faster
+        // device, cost-normalised planning splits evenly.
+        let makespan = hybrid_host_fraction(1.0, 22.0, 1.0);
+        let economic = hybrid_host_fraction(1.0, 22.0, 22.0);
+        assert!(makespan < economic, "{makespan} !< {economic}");
+        assert!((economic - 0.5).abs() < 1e-12);
+        // Strictly monotone across a ratio sweep.
+        let mut prev = 0.0;
+        for ratio in [1.0, 2.0, 5.0, 22.0, 100.0] {
+            let f = hybrid_host_fraction(1.0, 22.0, ratio);
+            assert!(f > prev, "fraction not increasing at ratio {ratio}");
+            prev = f;
+        }
     }
 }

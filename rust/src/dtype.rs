@@ -15,11 +15,17 @@ use std::fmt;
 /// Runtime element-type tag (the paper's benchmarked dtypes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ElemType {
+    /// 16-bit signed integer.
     I16,
+    /// 32-bit signed integer.
     I32,
+    /// 64-bit signed integer.
     I64,
+    /// 128-bit signed integer (native-only: no XLA `s128`, DESIGN.md §2).
     I128,
+    /// 32-bit float.
     F32,
+    /// 64-bit float.
     F64,
 }
 

@@ -1,0 +1,192 @@
+//! Calibration: measure the actual host:device throughput ratio on this
+//! machine and turn it into a [`HybridPlan`].
+//!
+//! One measurement run produces a [`SortCalibration`]; plans for any
+//! device model / cost ratio derive from it *without* re-measuring, so
+//! the plan-shift invariants (faster device model ⇒ smaller host share,
+//! higher cost ratio ⇒ larger host share) hold deterministically even
+//! though the underlying timings are noisy.
+
+use std::time::Instant;
+
+use crate::backend::{Backend, DeviceKey, DeviceOps};
+use crate::cluster::DeviceModel;
+use crate::util::Prng;
+use crate::workload::{generate, Distribution, KeyGen};
+
+use super::plan::HybridPlan;
+
+/// Outcome of one sort-throughput calibration run.
+#[derive(Clone, Copy, Debug)]
+pub struct SortCalibration {
+    /// Elements in the measured shard.
+    pub elems: usize,
+    /// Host (threaded) engine throughput, elements per second.
+    pub host_elems_per_sec: f64,
+    /// Measured single-thread seconds for the same shard — the baseline
+    /// the device model scales (`cluster/devmodel.rs`).
+    pub single_thread_secs: f64,
+    /// Real device throughput (elements/s) when a device engine with
+    /// artifacts was measured; `None` means plans use the device model.
+    pub device_elems_per_sec: Option<f64>,
+}
+
+impl SortCalibration {
+    /// Device-engine throughput under `devmodel`: the real measurement if
+    /// one exists, otherwise the single-thread baseline scaled by the
+    /// model's `gpu_speedup`.
+    pub fn device_throughput(&self, devmodel: &DeviceModel) -> f64 {
+        if let Some(real) = self.device_elems_per_sec {
+            return real;
+        }
+        let sim_secs = devmodel.compute_time(self.single_thread_secs, true).max(1e-12);
+        self.elems as f64 / sim_secs
+    }
+
+    /// Device:host throughput ratio under `devmodel` (>1 means the device
+    /// engine is faster).
+    pub fn ratio(&self, devmodel: &DeviceModel) -> f64 {
+        self.device_throughput(devmodel) / self.host_elems_per_sec.max(1e-12)
+    }
+
+    /// The model-projected calibrated split: plans as if the device shard
+    /// ran on the simulated accelerator (`gpu_speedup`). Right for
+    /// *simulated-time* reasoning and what-if projections; for splitting
+    /// real work use [`SortCalibration::plan_measured`].
+    /// `cost_ratio = 1.0` optimises makespan; the paper's `cost.rs` ×22
+    /// optimises cost-normalised time.
+    pub fn plan(&self, devmodel: &DeviceModel, cost_ratio: f64) -> HybridPlan {
+        HybridPlan::cost_aware(
+            self.host_elems_per_sec,
+            self.device_throughput(devmodel),
+            cost_ratio,
+        )
+    }
+
+    /// Throughput of the engine that will *actually execute* the device
+    /// shard: the measured artifact engine when one exists, else the
+    /// single-host-thread stand-in (DESIGN.md §2) measured by this run.
+    pub fn executing_device_throughput(&self) -> f64 {
+        self.device_elems_per_sec
+            .unwrap_or(self.elems as f64 / self.single_thread_secs.max(1e-12))
+    }
+
+    /// Wall-clock-optimal split for the engines as they will actually
+    /// execute. This is the plan to drive real work with — under the
+    /// no-artifact stand-in the model-projected [`SortCalibration::plan`]
+    /// would hand ~all work to a single host thread and run far slower
+    /// than host-only.
+    pub fn plan_measured(&self, cost_ratio: f64) -> HybridPlan {
+        HybridPlan::cost_aware(
+            self.host_elems_per_sec,
+            self.executing_device_throughput(),
+            cost_ratio,
+        )
+    }
+}
+
+/// Measure sort throughput of the host engine (`host_threads` std
+/// threads) and the device engine (real artifacts when `device` is given
+/// and the dtype has an XLA family; the single-thread device-model
+/// baseline otherwise) on an `n`-element uniform shard.
+pub fn calibrate_sort<K: DeviceKey + KeyGen>(
+    n: usize,
+    host_threads: usize,
+    device: Option<&DeviceOps>,
+) -> anyhow::Result<SortCalibration> {
+    let n = n.max(1024);
+    let xs: Vec<K> = generate(&mut Prng::new(0xCA11B8), Distribution::Uniform, n);
+    let host = Backend::Threaded(host_threads.max(1));
+
+    // Warm-up (thread spawn paths, branch predictors), then measure.
+    let mut buf = xs.clone();
+    crate::algorithms::sort(&host, &mut buf)?;
+    let mut buf = xs.clone();
+    let t0 = Instant::now();
+    crate::algorithms::sort(&host, &mut buf)?;
+    let host_secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Single-thread baseline for the device model.
+    let mut buf = xs.clone();
+    let t0 = Instant::now();
+    crate::algorithms::sort(&Backend::Native, &mut buf)?;
+    let single_thread_secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let device_elems_per_sec = match device {
+        Some(ops) if K::XLA => {
+            // Warm up like the host engine: the first call pays one-time
+            // lazy XLA compilation, which is a build cost, not throughput.
+            let mut buf = xs.clone();
+            ops.sort(&mut buf)?;
+            let mut buf = xs.clone();
+            let t0 = Instant::now();
+            ops.sort(&mut buf)?;
+            Some(n as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+        }
+        _ => None,
+    };
+
+    Ok(SortCalibration {
+        elems: n,
+        host_elems_per_sec: n as f64 / host_secs,
+        single_thread_secs,
+        device_elems_per_sec,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_produces_sane_numbers() {
+        let cal = calibrate_sort::<i32>(16 * 1024, 2, None).unwrap();
+        assert_eq!(cal.elems, 16 * 1024);
+        assert!(cal.host_elems_per_sec > 0.0);
+        assert!(cal.single_thread_secs > 0.0);
+        assert!(cal.device_elems_per_sec.is_none());
+    }
+
+    #[test]
+    fn plans_shift_with_model_without_remeasuring() {
+        // One measurement, two device models: the plan ordering is exact.
+        let cal = calibrate_sort::<i64>(8 * 1024, 2, None).unwrap();
+        let slow = cal.plan(&DeviceModel::new(1.0), 1.0);
+        let fast = cal.plan(&DeviceModel::new(10_000.0), 1.0);
+        assert!(
+            fast.host_fraction < slow.host_fraction,
+            "fast {} !< slow {}",
+            fast.host_fraction,
+            slow.host_fraction
+        );
+        // A 10000x device model should claim nearly everything.
+        assert!(fast.host_fraction < 0.05, "host fraction {}", fast.host_fraction);
+
+        // Cost normalisation moves work back onto the host.
+        let dm = DeviceModel::new(200.0);
+        let makespan = cal.plan(&dm, 1.0);
+        let economic = cal.plan(&dm, 22.0);
+        assert!(makespan.host_fraction < economic.host_fraction);
+
+        // The ratio is consistent with the derived plan inputs.
+        assert!(cal.ratio(&DeviceModel::new(10_000.0)) > cal.ratio(&DeviceModel::new(1.0)));
+    }
+
+    #[test]
+    fn measured_plan_reflects_the_stand_in_not_the_model() {
+        let cal = calibrate_sort::<i32>(8 * 1024, 4, None).unwrap();
+        // Without artifacts the executing device engine is one host
+        // thread, so the measured plan must keep a substantial host share
+        // — never the ~0% the 200x model projection would pick.
+        let measured = cal.plan_measured(1.0);
+        assert!(
+            measured.host_fraction >= 0.2,
+            "measured host fraction {} too small for a 1-thread stand-in",
+            measured.host_fraction
+        );
+        assert!(cal.executing_device_throughput() > 0.0);
+        // The model projection is a different, device-heavier question.
+        let projected = cal.plan(&DeviceModel::new(10_000.0), 1.0);
+        assert!(projected.host_fraction < measured.host_fraction);
+    }
+}

@@ -1,0 +1,432 @@
+//! Co-processing entry points: one logical call, two engines running
+//! disjoint shards *concurrently* — the paper's CPU–GPU co-sorting
+//! composability story executed inside a single rank (DESIGN.md §10).
+//!
+//! Each entry point splits its input at the [`HybridPlan`]'s fraction,
+//! runs the host shard on a std-thread pool while the device shard runs
+//! on the AOT artifact engine (or its documented host stand-in), and
+//! recombines: k-way merge for sorts, operator fold for reductions,
+//! nothing for index loops. Outputs are bit-identical to the single
+//! engine paths — asserted by the proptests.
+
+use crate::algorithms::reduce::{ReduceKind, Reducible};
+use crate::backend::{Backend, DeviceKey, DeviceOps};
+use crate::baselines::kmerge;
+
+use super::plan::HybridPlan;
+
+/// Minimum input length for engine splitting: below this, thread-spawn
+/// and merge overhead beats any overlap win, so the whole call runs on
+/// one engine.
+pub const MIN_COSPLIT: usize = 8192;
+
+/// The hybrid execution engine: a host thread pool plus a device engine.
+#[derive(Clone)]
+pub struct HybridEngine {
+    /// How work splits between the engines.
+    pub plan: HybridPlan,
+    /// Host engine width (std threads).
+    pub host_threads: usize,
+    /// Device engine. `None` degrades the device shard to a single host
+    /// thread — the same engine-substitution rule the AK sorter applies
+    /// before `make artifacts` (DESIGN.md §2).
+    pub device: Option<DeviceOps>,
+}
+
+impl HybridEngine {
+    /// Build an engine from a plan, a host thread count and an optional
+    /// device handle.
+    pub fn new(plan: HybridPlan, host_threads: usize, device: Option<DeviceOps>) -> HybridEngine {
+        HybridEngine { plan, host_threads: host_threads.max(1), device }
+    }
+
+    /// Build from an optional [`Backend`] handle: `Backend::Device` wires
+    /// the real device engine, anything else (or `None`) selects the
+    /// host stand-in.
+    pub fn from_backends(
+        plan: HybridPlan,
+        host_threads: usize,
+        device: Option<Backend>,
+    ) -> HybridEngine {
+        let device = match device {
+            Some(Backend::Device(d)) => Some(d),
+            _ => None,
+        };
+        HybridEngine::new(plan, host_threads, device)
+    }
+
+    /// The host-side engine as a dispatchable backend.
+    pub fn host_backend(&self) -> Backend {
+        Backend::Threaded(self.host_threads.max(1))
+    }
+
+    /// The device-side engine as a dispatchable backend (single host
+    /// thread when no device is attached — see [`HybridEngine::device`]).
+    pub fn device_backend(&self) -> Backend {
+        match &self.device {
+            Some(d) => Backend::Device(d.clone()),
+            None => Backend::Threaded(1),
+        }
+    }
+
+    /// Human-readable engine summary (used by `Backend::name`).
+    pub fn describe(&self) -> String {
+        format!(
+            "hybrid({:.0}% host, {} threads, {})",
+            self.plan.host_fraction * 100.0,
+            self.host_threads,
+            if self.device.is_some() { "device" } else { "host-sim device" }
+        )
+    }
+
+    /// Route a call over `n` elements: one engine for small inputs and
+    /// degenerate splits, otherwise a concurrent two-engine split. Every
+    /// co-processing entry point (and `algorithms::search`) shares this
+    /// rule, so device-only plans consistently reach the device engine.
+    pub fn route(&self, n: usize) -> CoRoute {
+        let split = self.plan.split_index(n);
+        if n < MIN_COSPLIT || split == n {
+            // Tiny inputs always take the host pool — cheaper than a
+            // spawn, regardless of the plan.
+            CoRoute::Host
+        } else if split == 0 {
+            CoRoute::Device
+        } else {
+            CoRoute::Split(split)
+        }
+    }
+}
+
+/// How a hybrid call routes (see [`HybridEngine::route`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoRoute {
+    /// Whole call on the host pool.
+    Host,
+    /// Whole call on the device engine.
+    Device,
+    /// Concurrent split: `[0, i)` host, `[i, n)` device.
+    Split(usize),
+}
+
+impl std::fmt::Debug for HybridEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.describe())
+    }
+}
+
+fn join_flat<T>(res: std::thread::Result<anyhow::Result<T>>, who: &str) -> anyhow::Result<T> {
+    match res {
+        Ok(inner) => inner,
+        Err(_) => Err(anyhow::anyhow!("{who} co-processing worker panicked")),
+    }
+}
+
+/// Hybrid co-sort — the flagship: split at the plan, sort both shards
+/// concurrently (host thread pool ∥ device engine), k-way merge the two
+/// sorted runs. Output equals `sort_by(cmp_total)` for every dtype and
+/// split ratio (total order; NaN-safe for floats).
+///
+/// ```
+/// use accelkern::hybrid::{co_sort, HybridEngine, HybridPlan};
+/// let eng = HybridEngine::new(HybridPlan::new(0.5), 2, None);
+/// let mut v = vec![5i32, -3, 7, 0, 2, 9, -8, 4];
+/// co_sort(&eng, &mut v).unwrap();
+/// assert_eq!(v, vec![-8, -3, 0, 2, 4, 5, 7, 9]);
+/// ```
+pub fn co_sort<K: DeviceKey>(eng: &HybridEngine, xs: &mut [K]) -> anyhow::Result<()> {
+    let split = match eng.route(xs.len()) {
+        CoRoute::Host => return crate::algorithms::sort(&eng.host_backend(), xs),
+        CoRoute::Device => return crate::algorithms::sort(&eng.device_backend(), xs),
+        CoRoute::Split(split) => split,
+    };
+    let host_backend = eng.host_backend();
+    let dev_backend = eng.device_backend();
+    let (host_half, dev_half) = xs.split_at_mut(split);
+    let (host_res, dev_res) = std::thread::scope(|s| {
+        let h = s.spawn(move || crate::algorithms::sort(&host_backend, host_half));
+        let d = s.spawn(move || crate::algorithms::sort(&dev_backend, dev_half));
+        (h.join(), d.join())
+    });
+    join_flat(host_res, "host")?;
+    join_flat(dev_res, "device")?;
+    let merged = kmerge(&[&xs[..split], &xs[split..]]);
+    xs.copy_from_slice(&merged);
+    Ok(())
+}
+
+/// Hybrid co-reduce: both engines reduce their shard concurrently, the
+/// partials fold on the host. `switch_below` is forwarded to the device
+/// shard (paper §II-B's device-sync-masking rule).
+pub fn co_reduce<K: Reducible>(
+    eng: &HybridEngine,
+    xs: &[K],
+    kind: ReduceKind,
+    switch_below: usize,
+) -> anyhow::Result<K> {
+    let split = match eng.route(xs.len()) {
+        CoRoute::Host => {
+            return crate::algorithms::reduce(&eng.host_backend(), xs, kind, switch_below)
+        }
+        CoRoute::Device => {
+            return crate::algorithms::reduce(&eng.device_backend(), xs, kind, switch_below)
+        }
+        CoRoute::Split(split) => split,
+    };
+    let host_backend = eng.host_backend();
+    let dev_backend = eng.device_backend();
+    let (host_half, dev_half) = xs.split_at(split);
+    let (host_res, dev_res) = std::thread::scope(|s| {
+        let h =
+            s.spawn(move || crate::algorithms::reduce(&host_backend, host_half, kind, switch_below));
+        let d =
+            s.spawn(move || crate::algorithms::reduce(&dev_backend, dev_half, kind, switch_below));
+        (h.join(), d.join())
+    });
+    let a = join_flat(host_res, "host")?;
+    let b = join_flat(dev_res, "device")?;
+    Ok(K::fold(kind, a, b))
+}
+
+/// Hybrid co-foreach: the host shard of the index space runs on the
+/// thread pool while the device shard runs on the device engine's
+/// `foreachindex` emulation (named-kernel semantics: sequential walk —
+/// arbitrary closures cannot cross the AOT boundary, see
+/// `algorithms::foreach`). Both shards execute concurrently.
+pub fn co_foreachindex<F>(eng: &HybridEngine, len: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = eng.host_threads.max(1);
+    // The foreach "device engine" is always a sequential walk (arbitrary
+    // closures cannot cross the AOT boundary), so cap its shard at one
+    // worker's share no matter how device-heavy the sort-calibrated plan
+    // is — otherwise a device-heavy plan collapses the loop to
+    // single-thread throughput.
+    let split = eng.plan.split_index(len).max(len.saturating_sub(len / (threads + 1)));
+    if len < MIN_COSPLIT || split == len {
+        crate::algorithms::foreachindex(&eng.host_backend(), len, f);
+        return;
+    }
+    let fr = &f;
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            crate::backend::parallel_for_each_chunk(split, threads, |r| {
+                for i in r {
+                    fr(i);
+                }
+            });
+        });
+        s.spawn(move || {
+            for i in split..len {
+                fr(i);
+            }
+        });
+    });
+}
+
+/// Mutating hybrid co-foreach over a slice: disjoint halves, host pool ∥
+/// device-engine emulation, indices preserved.
+pub fn co_foreach_mut<T: Send, F>(eng: &HybridEngine, xs: &mut [T], f: F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = xs.len();
+    let threads = eng.host_threads.max(1);
+    // Same sequential-walk cap as `co_foreachindex`.
+    let split = eng.plan.split_index(n).max(n.saturating_sub(n / (threads + 1)));
+    if n < MIN_COSPLIT || split == n {
+        crate::algorithms::foreach::foreach_mut(&eng.host_backend(), xs, f);
+        return;
+    }
+    let (host_half, dev_half) = xs.split_at_mut(split);
+    let fr = &f;
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let ranges = crate::backend::threaded::split_ranges(host_half.len(), threads);
+            crate::backend::parallel_chunks(host_half, threads, |ci, chunk| {
+                let base = ranges[ci].start;
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    fr(base + j, x);
+                }
+            });
+        });
+        s.spawn(move || {
+            for (j, x) in dev_half.iter_mut().enumerate() {
+                fr(split + j, x);
+            }
+        });
+    });
+}
+
+/// Hybrid `any(x > t)`: both engines scan their shard concurrently with
+/// their own early exit; the results OR.
+pub fn co_any_gt(eng: &HybridEngine, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
+    let split = match eng.route(xs.len()) {
+        CoRoute::Host => return crate::algorithms::any_gt(&eng.host_backend(), xs, threshold),
+        CoRoute::Device => {
+            return crate::algorithms::any_gt(&eng.device_backend(), xs, threshold)
+        }
+        CoRoute::Split(split) => split,
+    };
+    let host_backend = eng.host_backend();
+    let dev_backend = eng.device_backend();
+    let (a, b) = xs.split_at(split);
+    let (host_res, dev_res) = std::thread::scope(|s| {
+        let h = s.spawn(move || crate::algorithms::any_gt(&host_backend, a, threshold));
+        let d = s.spawn(move || crate::algorithms::any_gt(&dev_backend, b, threshold));
+        (h.join(), d.join())
+    });
+    Ok(join_flat(host_res, "host")? || join_flat(dev_res, "device")?)
+}
+
+/// Hybrid `all(x > t)`: both engines scan concurrently; the results AND.
+pub fn co_all_gt(eng: &HybridEngine, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
+    let split = match eng.route(xs.len()) {
+        CoRoute::Host => return crate::algorithms::all_gt(&eng.host_backend(), xs, threshold),
+        CoRoute::Device => {
+            return crate::algorithms::all_gt(&eng.device_backend(), xs, threshold)
+        }
+        CoRoute::Split(split) => split,
+    };
+    let host_backend = eng.host_backend();
+    let dev_backend = eng.device_backend();
+    let (a, b) = xs.split_at(split);
+    let (host_res, dev_res) = std::thread::scope(|s| {
+        let h = s.spawn(move || crate::algorithms::all_gt(&host_backend, a, threshold));
+        let d = s.spawn(move || crate::algorithms::all_gt(&dev_backend, b, threshold));
+        (h.join(), d.join())
+    });
+    Ok(join_flat(host_res, "host")? && join_flat(dev_res, "device")?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::{is_sorted_total, SortKey};
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution, KeyGen};
+
+    fn engine(frac: f64) -> HybridEngine {
+        HybridEngine::new(HybridPlan::new(frac), 3, None)
+    }
+
+    fn check_cosort<K: KeyGen + PartialEq + DeviceKey>(seed: u64, n: usize) {
+        for dist in [
+            Distribution::Uniform,
+            Distribution::Sorted,
+            Distribution::Reverse,
+            Distribution::DupHeavy,
+        ] {
+            let orig: Vec<K> = generate(&mut Prng::new(seed), dist, n);
+            let mut want = orig.clone();
+            want.sort_by(|a, b| a.cmp_total(b));
+            for frac in [0.0, 0.3, 0.5, 0.9, 1.0] {
+                let mut got = orig.clone();
+                co_sort(&engine(frac), &mut got).unwrap();
+                assert!(got == want, "{dist:?} frac={frac} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn cosort_matches_total_sort_all_dtypes() {
+        check_cosort::<i16>(1, 20_000);
+        check_cosort::<i32>(2, 20_000);
+        check_cosort::<i64>(3, 20_000);
+        check_cosort::<i128>(4, 20_000);
+        check_cosort::<f32>(5, 20_000);
+        check_cosort::<f64>(6, 20_000);
+    }
+
+    #[test]
+    fn cosort_tiny_and_empty_inputs() {
+        for n in [0usize, 1, 2, 5, 100] {
+            check_cosort::<i32>(7, n);
+        }
+    }
+
+    #[test]
+    fn cosort_handles_float_specials() {
+        let mut xs: Vec<f64> =
+            generate(&mut Prng::new(8), Distribution::Uniform, MIN_COSPLIT * 2);
+        xs[17] = f64::NAN;
+        xs[1234] = f64::INFINITY;
+        xs[8888] = f64::NEG_INFINITY;
+        xs[9999] = -0.0;
+        let mut want = xs.clone();
+        want.sort_by(|a, b| a.cmp_total(b));
+        let mut got = xs;
+        co_sort(&engine(0.4), &mut got).unwrap();
+        assert!(is_sorted_total(&got));
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&got), bits(&want));
+    }
+
+    #[test]
+    fn coreduce_matches_host() {
+        let xs: Vec<i64> = generate(&mut Prng::new(9), Distribution::Uniform, 30_000);
+        let want: i64 = xs.iter().fold(0i64, |a, &b| a.wrapping_add(b));
+        for frac in [0.0, 0.5, 1.0] {
+            let got = co_reduce(&engine(frac), &xs, ReduceKind::Add, 0).unwrap();
+            assert_eq!(got, want, "frac {frac}");
+            let mn = co_reduce(&engine(frac), &xs, ReduceKind::Min, 0).unwrap();
+            assert_eq!(mn, *xs.iter().min().unwrap());
+        }
+    }
+
+    #[test]
+    fn coforeach_visits_every_index_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let n = MIN_COSPLIT + 1000;
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        co_foreachindex(&engine(0.6), n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn coforeach_mut_copy_kernel() {
+        let n = MIN_COSPLIT + 321;
+        let src: Vec<u64> = (0..n as u64).collect();
+        let mut dst = vec![0u64; n];
+        co_foreach_mut(&engine(0.5), &mut dst, |i, d| *d = src[i]);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn copredicates_or_and_across_shards() {
+        let n = MIN_COSPLIT * 2;
+        let mut xs = vec![0.0f32; n];
+        // Hit only in the device shard at frac 0.5.
+        xs[n - 7] = 5.0;
+        let eng = engine(0.5);
+        assert!(co_any_gt(&eng, &xs, 1.0).unwrap());
+        assert!(!co_any_gt(&eng, &xs, 10.0).unwrap());
+        assert!(co_all_gt(&eng, &xs, -1.0).unwrap());
+        assert!(!co_all_gt(&eng, &xs, 0.5).unwrap());
+        // Hit only in the host shard.
+        let mut ys = vec![0.0f32; n];
+        ys[3] = 5.0;
+        assert!(co_any_gt(&eng, &ys, 1.0).unwrap());
+    }
+
+    #[test]
+    fn engine_describe_mentions_plan() {
+        let eng = engine(0.25);
+        assert!(eng.describe().contains("25%"));
+        assert!(eng.describe().contains("host-sim"));
+    }
+
+    #[test]
+    fn route_rule_is_shared_and_consistent() {
+        // Tiny inputs take the host pool regardless of the plan.
+        assert_eq!(engine(0.0).route(100), CoRoute::Host);
+        assert_eq!(engine(1.0).route(100), CoRoute::Host);
+        // Degenerate fractions route the whole call to the owning engine.
+        assert_eq!(engine(0.0).route(MIN_COSPLIT), CoRoute::Device);
+        assert_eq!(engine(1.0).route(MIN_COSPLIT), CoRoute::Host);
+        // Proper fractions split.
+        assert_eq!(engine(0.5).route(MIN_COSPLIT * 2), CoRoute::Split(MIN_COSPLIT));
+    }
+}

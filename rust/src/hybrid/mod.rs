@@ -1,0 +1,32 @@
+//! Hybrid CPU–GPU co-processing (DESIGN.md §10) — the paper's headline
+//! composability result ("such as CPU-GPU co-sorting") inside one rank.
+//!
+//! Every other backend runs a call on exactly one engine. The hybrid
+//! subsystem splits one call across **two engines at once**:
+//!
+//! 1. a [`plan::HybridPlan`] partitions the input using throughput
+//!    estimates — measured by [`calibrate`], projected by
+//!    [`crate::cluster::DeviceModel`], and optionally deflated by the
+//!    paper's ×22 GPU:CPU cost ratio ([`crate::cost`]);
+//! 2. [`cosort`] runs the host shard on a std-thread pool while the
+//!    device shard runs on the AOT artifact engine, concurrently;
+//! 3. results recombine: k-way merge ([`crate::baselines::kmerge`]) for
+//!    co-sort, operator fold for co-reduce, nothing for co-foreach.
+//!
+//! Wired through the stack as [`crate::backend::Backend::Hybrid`]
+//! (algorithm suite), [`crate::cfg::Sorter::Hybrid`] /
+//! `--backend hybrid` (CLI), and `mpisort::LocalSorter::Hybrid` (SIHSort
+//! ranks co-sort their shards). `rust/benches/fig6_cosort.rs` measures
+//! the weak-scaling behaviour; `examples/cosort.rs` demonstrates both
+//! the single-shard and the distributed composition.
+
+pub mod calibrate;
+pub mod cosort;
+pub mod plan;
+
+pub use calibrate::{calibrate_sort, SortCalibration};
+pub use cosort::{
+    co_all_gt, co_any_gt, co_foreach_mut, co_foreachindex, co_reduce, co_sort, CoRoute,
+    HybridEngine, MIN_COSPLIT,
+};
+pub use plan::HybridPlan;

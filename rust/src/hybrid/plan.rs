@@ -1,0 +1,128 @@
+//! Split planning: how a hybrid call divides one input between the host
+//! and device engines.
+//!
+//! The plan is a single host-side work fraction derived from throughput
+//! estimates: measured engine throughputs (see [`super::calibrate`]), the
+//! [`crate::cluster::DeviceModel`] projection when no real device exists,
+//! and optionally the paper's ×22 GPU:CPU cost ratio
+//! ([`crate::cost::hybrid_host_fraction`]) for economically-normalised
+//! splits. Because the fraction is pure data, the same plan drives
+//! co-sort, co-reduce and co-foreach identically, and tests can assert
+//! how it shifts when the device model or cost ratio changes.
+
+use crate::cluster::DeviceModel;
+use crate::cost;
+
+/// How a hybrid call splits one input: `[0, split)` goes to the host
+/// engine, `[split, n)` to the device engine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HybridPlan {
+    /// Fraction of elements the host engine owns, clamped to `[0, 1]`.
+    pub host_fraction: f64,
+}
+
+impl HybridPlan {
+    /// Plan with an explicit host fraction (clamped to `[0, 1]`).
+    ///
+    /// # Panics
+    /// On a non-finite fraction.
+    pub fn new(host_fraction: f64) -> HybridPlan {
+        assert!(host_fraction.is_finite(), "host fraction must be finite, got {host_fraction}");
+        HybridPlan { host_fraction: host_fraction.clamp(0.0, 1.0) }
+    }
+
+    /// Degenerate plan: everything on the host engine.
+    pub fn host_only() -> HybridPlan {
+        HybridPlan { host_fraction: 1.0 }
+    }
+
+    /// Degenerate plan: everything on the device engine.
+    pub fn device_only() -> HybridPlan {
+        HybridPlan { host_fraction: 0.0 }
+    }
+
+    /// Makespan-optimal split from measured engine throughputs: work
+    /// proportional to speed, so both engines finish together.
+    pub fn balanced(host_tput: f64, device_tput: f64) -> HybridPlan {
+        HybridPlan::new(cost::hybrid_host_fraction(host_tput, device_tput, 1.0))
+    }
+
+    /// Cost-normalised split: the device throughput is deflated by the
+    /// paper's GPU:CPU cost ratio before balancing (Fig 5 inverted into a
+    /// planning rule — DESIGN.md §10).
+    pub fn cost_aware(host_tput: f64, device_tput: f64, cost_ratio: f64) -> HybridPlan {
+        HybridPlan::new(cost::hybrid_host_fraction(host_tput, device_tput, cost_ratio))
+    }
+
+    /// Split from the simulated device model: the device runs the same
+    /// work `devmodel.gpu_speedup` times faster than the measured host
+    /// throughput (`cluster/devmodel.rs`), deflated by `cost_ratio`.
+    pub fn calibrated(devmodel: &DeviceModel, host_tput: f64, cost_ratio: f64) -> HybridPlan {
+        HybridPlan::cost_aware(host_tput, devmodel.device_throughput(host_tput), cost_ratio)
+    }
+
+    /// The host shard length for an `n`-element input: `[0, split)` is
+    /// host work, `[split, n)` device work.
+    pub fn split_index(&self, n: usize) -> usize {
+        ((n as f64 * self.host_fraction).round() as usize).min(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fraction_clamped() {
+        assert_eq!(HybridPlan::new(1.7).host_fraction, 1.0);
+        assert_eq!(HybridPlan::new(-0.3).host_fraction, 0.0);
+        assert_eq!(HybridPlan::new(0.25).host_fraction, 0.25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan() {
+        HybridPlan::new(f64::NAN);
+    }
+
+    #[test]
+    fn split_edges() {
+        assert_eq!(HybridPlan::host_only().split_index(100), 100);
+        assert_eq!(HybridPlan::device_only().split_index(100), 0);
+        assert_eq!(HybridPlan::new(0.5).split_index(100), 50);
+        assert_eq!(HybridPlan::new(0.5).split_index(0), 0);
+        assert_eq!(HybridPlan::new(0.5).split_index(1), 1); // rounds up
+    }
+
+    #[test]
+    fn calibrated_shifts_with_devmodel_throughput() {
+        // Acceptance invariant: a faster modelled device takes more work.
+        let slow = HybridPlan::calibrated(&DeviceModel::new(2.0), 1e8, 1.0);
+        let fast = HybridPlan::calibrated(&DeviceModel::new(200.0), 1e8, 1.0);
+        assert!(
+            fast.host_fraction < slow.host_fraction,
+            "fast-device host fraction {} !< slow-device {}",
+            fast.host_fraction,
+            slow.host_fraction
+        );
+        // And the fractions are exactly the throughput-proportional ones.
+        assert!((slow.host_fraction - 1.0 / 3.0).abs() < 1e-12);
+        assert!((fast.host_fraction - 1.0 / 201.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibrated_shifts_with_cost_ratio() {
+        // Acceptance invariant: raising cost.rs's ratio moves work back to
+        // the host (×22 on a 22x device = even split).
+        let dm = DeviceModel::new(22.0);
+        let makespan = HybridPlan::calibrated(&dm, 1e8, 1.0);
+        let economic = HybridPlan::calibrated(&dm, 1e8, 22.0);
+        assert!(makespan.host_fraction < economic.host_fraction);
+        assert!((economic.host_fraction - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balanced_is_cost_aware_at_unit_ratio() {
+        assert_eq!(HybridPlan::balanced(3.0, 9.0), HybridPlan::cost_aware(3.0, 9.0, 1.0));
+    }
+}

@@ -13,12 +13,14 @@
 //!   kernels, AOT-lowered once to HLO text (`artifacts/`).
 //! * **L3** — this crate: the [`runtime`] loads the artifacts via PJRT,
 //!   the [`algorithms`] suite exposes the paper's API over pluggable
-//!   [`backend`]s, and [`mpisort`] implements the SIHSort multi-node
-//!   sorting coordinator over a simulated HPC [`cluster`] with an
-//!   MPI-like [`comm`] layer.
+//!   [`backend`]s, [`hybrid`] composes host and device engines into one
+//!   CPU–GPU co-processing call (DESIGN.md §10), and [`mpisort`]
+//!   implements the SIHSort multi-node sorting coordinator over a
+//!   simulated HPC [`cluster`] with an MPI-like [`comm`] layer.
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
+#![warn(missing_docs)]
 
 pub mod algorithms;
 pub mod backend;
@@ -31,6 +33,7 @@ pub mod comm;
 pub mod coordinator;
 pub mod cost;
 pub mod dtype;
+pub mod hybrid;
 pub mod metrics;
 pub mod mpisort;
 pub mod prop;
@@ -42,10 +45,12 @@ pub mod workload;
 pub type Result<T> = anyhow::Result<T>;
 
 /// Locate the `artifacts/` directory: `$ACCELKERN_ARTIFACTS` if set, else
-/// `<repo root>/artifacts` resolved relative to the crate manifest.
+/// `<repo root>/artifacts` — the default output of
+/// `python -m compile.aot` (`make artifacts`) — resolved relative to the
+/// crate manifest.
 pub fn artifacts_dir() -> std::path::PathBuf {
     if let Ok(dir) = std::env::var("ACCELKERN_ARTIFACTS") {
         return dir.into();
     }
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
 }

@@ -134,6 +134,48 @@ fn run(cli: &Cli) -> anyhow::Result<()> {
             campaign::fig5(&cfg, ranks, &counts, &rt)?;
             Ok(())
         }
+        "calibrate" => {
+            // Measure the host:device sort throughput ratio and print the
+            // hybrid co-processing split it implies (DESIGN.md §10).
+            let cfg = cli.run_config()?;
+            let n = cli.get_usize("n")?.unwrap_or(1 << 18);
+            let rt = open_runtime(cli);
+            let dev_backend = rt
+                .map(|rt| accelkern::backend::Backend::device(accelkern::runtime::Registry::new(rt)));
+            let dm = accelkern::cluster::DeviceModel::new(cfg.cluster.gpu_speedup);
+            accelkern::dispatch_dtype!(cfg.dtype, K => {
+                let dev_ops = dev_backend.as_ref().and_then(|b| b.device_ops());
+                let cal = accelkern::hybrid::calibrate_sort::<K>(n, cfg.host_threads, dev_ops)?;
+                println!(
+                    "dtype {} over {} elements: host {:.2} Melem/s ({} threads); device {:.2} Melem/s ({})",
+                    cfg.dtype,
+                    cal.elems,
+                    cal.host_elems_per_sec / 1e6,
+                    cfg.host_threads,
+                    cal.device_throughput(&dm) / 1e6,
+                    if cal.device_elems_per_sec.is_some() {
+                        "measured artifacts"
+                    } else {
+                        "device model"
+                    },
+                );
+                println!("  model device:host ratio       {:.2}x", cal.ratio(&dm));
+                println!(
+                    "  executing-engine split        {:.1}% host (drives real work)",
+                    cal.plan_measured(1.0).host_fraction * 100.0
+                );
+                println!(
+                    "  model-projected split         {:.1}% host",
+                    cal.plan(&dm, 1.0).host_fraction * 100.0
+                );
+                println!(
+                    "  cost-aware projection (x{:.0})   {:.1}% host",
+                    cfg.cluster.cost_ratio,
+                    cal.plan(&dm, cfg.cluster.cost_ratio).host_fraction * 100.0
+                );
+            });
+            Ok(())
+        }
         "ablate" => {
             let cfg = base_cfg(cli)?;
             let rt = open_runtime(cli);

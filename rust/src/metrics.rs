@@ -16,8 +16,11 @@ use crate::util::{fmt_bytes, fmt_duration, fmt_throughput};
 /// `cluster::devmodel` for the calibration story).
 #[derive(Clone, Debug)]
 pub struct SortRunRecord {
+    /// Paper-legend label, e.g. `GG-AK/Int32`.
     pub label: String,
+    /// Number of simulated ranks.
     pub ranks: usize,
+    /// Total bytes sorted across all ranks.
     pub total_bytes: usize,
     /// Simulated end-to-end makespan (seconds).
     pub sim_total: f64,
@@ -73,15 +76,19 @@ pub fn legend_dtype(cfg: &RunConfig) -> String {
 /// A named (x, y) curve, e.g. ranks → GB/s.
 #[derive(Clone, Debug, Default)]
 pub struct Series {
+    /// Legend name of the curve.
     pub name: String,
+    /// The (x, y) points, in insertion order.
     pub points: Vec<(f64, f64)>,
 }
 
 impl Series {
+    /// New empty series with a legend name.
     pub fn new(name: impl Into<String>) -> Self {
         Self { name: name.into(), points: Vec::new() }
     }
 
+    /// Append one (x, y) point.
     pub fn push(&mut self, x: f64, y: f64) {
         self.points.push((x, y));
     }

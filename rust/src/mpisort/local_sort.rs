@@ -1,10 +1,14 @@
-//! Pluggable rank-local sorters: the paper's CC-JB / AK / TM / TR legend.
+//! Pluggable rank-local sorters: the paper's CC-JB / AK / TM / TR legend
+//! plus this repo's HY hybrid co-sorter (DESIGN.md §10).
 //!
 //! * `JuliaBase` — single-thread comparison sort on a CPU rank.
 //! * `Ak` — the AcceleratedKernels merge sort: our Pallas/XLA artifact
 //!   through PJRT (i128: host merge fallback, DESIGN.md §2).
 //! * `ThrustMerge` / `ThrustRadix` — the vendor-primitive analogs
 //!   (`baselines`).
+//! * `Hybrid` — the rank's host thread pool and its device engine sort
+//!   disjoint sub-shards concurrently and k-way merge
+//!   (`crate::hybrid::co_sort`): SIHSort ranks co-sort their shards.
 //!
 //! Each sorter measures its own wall time; the caller converts it to
 //! simulated device time through `cluster::DeviceModel`.
@@ -14,19 +18,31 @@ use std::time::Instant;
 use crate::backend::{Backend, DeviceKey};
 use crate::baselines;
 use crate::cfg::Sorter;
+use crate::hybrid::HybridEngine;
 
 /// A rank's local sorting engine.
 #[derive(Clone)]
 pub enum LocalSorter {
+    /// Single-thread comparison sort ("CC-JB").
     JuliaBase,
+    /// AcceleratedKernels merge sort over the given backend ("AK").
     Ak(Backend),
+    /// Vendor merge-sort analog ("TM").
     ThrustMerge,
+    /// Vendor radix-sort analog ("TR").
     ThrustRadix,
+    /// Hybrid CPU–GPU co-sort ("HY", DESIGN.md §10).
+    Hybrid(HybridEngine),
 }
 
 impl LocalSorter {
-    /// Build from config; `Ak` needs the device backend handle.
-    pub fn from_cfg(sorter: Sorter, device_backend: Option<Backend>) -> anyhow::Result<Self> {
+    /// Build from config; `Ak` needs the device backend handle, `Hybrid`
+    /// a prepared engine (the driver calibrates it once per run).
+    pub fn from_cfg(
+        sorter: Sorter,
+        device_backend: Option<Backend>,
+        hybrid: Option<HybridEngine>,
+    ) -> anyhow::Result<Self> {
         Ok(match sorter {
             Sorter::JuliaBase => LocalSorter::JuliaBase,
             Sorter::Ak => LocalSorter::Ak(
@@ -35,19 +51,25 @@ impl LocalSorter {
             ),
             Sorter::ThrustMerge => LocalSorter::ThrustMerge,
             Sorter::ThrustRadix => LocalSorter::ThrustRadix,
+            Sorter::Hybrid => LocalSorter::Hybrid(hybrid.ok_or_else(|| {
+                anyhow::anyhow!("hybrid sorter requires a prepared HybridEngine")
+            })?),
         })
     }
 
+    /// Legend code of this engine.
     pub fn code(&self) -> &'static str {
         match self {
             LocalSorter::JuliaBase => "JB",
             LocalSorter::Ak(_) => "AK",
             LocalSorter::ThrustMerge => "TM",
             LocalSorter::ThrustRadix => "TR",
+            LocalSorter::Hybrid(_) => "HY",
         }
     }
 
-    /// Runs on a device (GPU-class) rank?
+    /// Runs on a device (GPU-class) rank? Hybrid ranks own a device, so
+    /// they are device-class for link selection and the device model.
     pub fn is_device(&self) -> bool {
         !matches!(self, LocalSorter::JuliaBase)
     }
@@ -60,6 +82,7 @@ impl LocalSorter {
             LocalSorter::Ak(backend) => crate::algorithms::sort(backend, xs)?,
             LocalSorter::ThrustMerge => baselines::merge_sort(xs),
             LocalSorter::ThrustRadix => baselines::radix_sort(xs),
+            LocalSorter::Hybrid(engine) => crate::hybrid::co_sort(engine, xs)?,
         }
         Ok(t0.elapsed().as_secs_f64())
     }
@@ -69,15 +92,25 @@ impl LocalSorter {
 mod tests {
     use super::*;
     use crate::dtype::is_sorted_total;
+    use crate::hybrid::HybridPlan;
     use crate::util::Prng;
     use crate::workload::{generate, Distribution};
+
+    fn hybrid_sorter(frac: f64) -> LocalSorter {
+        LocalSorter::Hybrid(HybridEngine::new(HybridPlan::new(frac), 2, None))
+    }
 
     #[test]
     fn host_sorters_agree() {
         let xs: Vec<i64> = generate(&mut Prng::new(1), Distribution::Uniform, 4000);
         let mut want = xs.clone();
         want.sort_unstable();
-        for s in [LocalSorter::JuliaBase, LocalSorter::ThrustMerge, LocalSorter::ThrustRadix] {
+        for s in [
+            LocalSorter::JuliaBase,
+            LocalSorter::ThrustMerge,
+            LocalSorter::ThrustRadix,
+            hybrid_sorter(0.5),
+        ] {
             let mut got = xs.clone();
             let secs = s.sort(&mut got).unwrap();
             assert!(got == want, "{}", s.code());
@@ -88,7 +121,12 @@ mod tests {
     #[test]
     fn i128_works_on_host_sorters() {
         let xs: Vec<i128> = generate(&mut Prng::new(2), Distribution::Uniform, 1000);
-        for s in [LocalSorter::JuliaBase, LocalSorter::ThrustMerge, LocalSorter::ThrustRadix] {
+        for s in [
+            LocalSorter::JuliaBase,
+            LocalSorter::ThrustMerge,
+            LocalSorter::ThrustRadix,
+            hybrid_sorter(0.4),
+        ] {
             let mut got = xs.clone();
             s.sort(&mut got).unwrap();
             assert!(is_sorted_total(&got));
@@ -97,7 +135,16 @@ mod tests {
 
     #[test]
     fn ak_requires_backend() {
-        assert!(LocalSorter::from_cfg(Sorter::Ak, None).is_err());
-        assert!(LocalSorter::from_cfg(Sorter::JuliaBase, None).is_ok());
+        assert!(LocalSorter::from_cfg(Sorter::Ak, None, None).is_err());
+        assert!(LocalSorter::from_cfg(Sorter::JuliaBase, None, None).is_ok());
+    }
+
+    #[test]
+    fn hybrid_requires_engine() {
+        assert!(LocalSorter::from_cfg(Sorter::Hybrid, None, None).is_err());
+        let eng = HybridEngine::new(HybridPlan::new(0.5), 2, None);
+        let s = LocalSorter::from_cfg(Sorter::Hybrid, None, Some(eng)).unwrap();
+        assert_eq!(s.code(), "HY");
+        assert!(s.is_device());
     }
 }

@@ -19,10 +19,15 @@ use super::splitters::{
 /// SIHSort tuning parameters.
 #[derive(Clone, Debug)]
 pub struct SihConfig {
+    /// Regular samples each rank contributes per refinement round.
     pub samples_per_rank: usize,
+    /// Maximum splitter-refinement rounds.
     pub refine_rounds: usize,
+    /// Bucket balance tolerance (fraction of ideal bucket size).
     pub balance_tol: f64,
+    /// Final-phase strategy (k-way merge vs full re-sort).
     pub final_phase: FinalPhase,
+    /// Compute-time scaling for device ranks.
     pub devmodel: DeviceModel,
 }
 
@@ -42,10 +47,15 @@ impl Default for SihConfig {
 /// (simulated seconds for this rank).
 #[derive(Clone, Debug)]
 pub struct RankOutcome<K> {
+    /// The rank's globally-positioned, locally-sorted shard.
     pub data: Vec<K>,
+    /// Simulated seconds in the local-sort phase.
     pub sim_local_sort: f64,
+    /// Simulated seconds in sampling + splitter refinement.
     pub sim_splitters: f64,
+    /// Simulated seconds in partition + alltoallv.
     pub sim_exchange: f64,
+    /// Simulated seconds in the final combine.
     pub sim_final: f64,
     /// Host wall-clock this rank actually consumed.
     pub wall_secs: f64,

@@ -60,6 +60,7 @@ impl Distribution {
 /// Per-dtype uniform draw (floats draw from a wide finite real range: raw
 /// uniform bit images would be mostly NaN/Inf payloads).
 pub trait KeyGen: SortKey {
+    /// Draw one key uniformly from the type's benchmark range.
     fn uniform(rng: &mut Prng) -> Self;
 }
 

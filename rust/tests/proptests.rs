@@ -4,6 +4,7 @@
 use accelkern::cfg::{FinalPhase, RunConfig, Sorter, TransferMode};
 use accelkern::coordinator::driver::run_distributed_sort_mixed;
 use accelkern::dtype::{is_sorted_total, SortKey};
+use accelkern::hybrid::{co_sort, HybridEngine, HybridPlan};
 use accelkern::mpisort::splitters::{initial_candidates, local_ranks, regular_samples};
 use accelkern::prop::{check, Gen, PropConfig, VecGen};
 use accelkern::util::Prng;
@@ -32,7 +33,7 @@ impl Gen for ScenarioGen {
             ranks,
             elems_per_rank: rng.below(3000) as usize, // includes 0 and tiny shards
             dist_id: rng.below(7) as usize,
-            sorter_ids: (0..ranks).map(|_| rng.below(3) as usize).collect(),
+            sorter_ids: (0..ranks).map(|_| rng.below(4) as usize).collect(),
             staged: rng.below(2) == 0,
             resort: rng.below(2) == 0,
             seed: rng.next_u64(),
@@ -66,7 +67,7 @@ fn run_scenario(sc: &Scenario) -> Result<(), String> {
     let sorters: Vec<Sorter> = sc
         .sorter_ids
         .iter()
-        .map(|i| [Sorter::JuliaBase, Sorter::ThrustMerge, Sorter::ThrustRadix][*i])
+        .map(|i| [Sorter::JuliaBase, Sorter::ThrustMerge, Sorter::ThrustRadix, Sorter::Hybrid][*i])
         .collect();
     let mut cfg = RunConfig::default();
     cfg.ranks = sc.ranks;
@@ -76,6 +77,9 @@ fn run_scenario(sc: &Scenario) -> Result<(), String> {
     cfg.final_phase = if sc.resort { FinalPhase::Sort } else { FinalPhase::Merge };
     cfg.seed = sc.seed;
     cfg.refine_rounds = 3;
+    // Pin the hybrid split: calibrating on every fuzz case would only add
+    // noise, and correctness must hold at any fraction anyway.
+    cfg.hybrid_host_fraction = Some(0.5);
     // The driver itself verifies: global order, local order, conservation.
     let out = run_distributed_sort_mixed::<i32>(&cfg, &sorters, None)
         .map_err(|e| format!("{e:#}"))?;
@@ -179,6 +183,72 @@ fn prop_kmerge_is_merge() {
         want.sort_unstable();
         if got != want {
             return Err(format!("kmerge mismatch (k={k})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hybrid_cosort_equals_total_sort_f64() {
+    // The tentpole acceptance property: hybrid co-sort output is
+    // bit-identical to sort_by(cmp_total) at every split ratio —
+    // degenerate (0.0 / 1.0), even (0.5), and a calibrated-style odd
+    // fraction — on adversarial inputs: NaNs (both signs), infinities,
+    // signed zeros, duplicates, already-sorted runs, tiny arrays. Lengths
+    // range past MIN_COSPLIT so the real two-engine split is exercised,
+    // not just the single-engine route.
+    let gen = VecGen::new(3 * accelkern::hybrid::MIN_COSPLIT, |r| match r.below(16) {
+        0 => f64::NAN,
+        1 => -f64::NAN,
+        2 => f64::INFINITY,
+        3 => f64::NEG_INFINITY,
+        4 => 0.0,
+        5 => -0.0,
+        6 => 1.0, // duplicate magnet
+        _ => (r.uniform_f64() - 0.5) * 1e12,
+    });
+    check("hybrid-cosort-f64", &PropConfig::default(), &gen, |xs| {
+        let mut want = xs.clone();
+        want.sort_by(|a, b| a.cmp_total(b));
+        let want_bits: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
+        for frac in [0.0, 0.37, 0.5, 1.0] {
+            let eng = HybridEngine::new(HybridPlan::new(frac), 3, None);
+            let mut got = xs.clone();
+            co_sort(&eng, &mut got).map_err(|e| format!("{e:#}"))?;
+            let got_bits: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+            if got_bits != want_bits {
+                return Err(format!("co-sort mismatch at host fraction {frac}"));
+            }
+        }
+        // Already-sorted input stays identical.
+        let eng = HybridEngine::new(HybridPlan::new(0.5), 3, None);
+        let mut again = want.clone();
+        co_sort(&eng, &mut again).map_err(|e| format!("{e:#}"))?;
+        if again.iter().map(|x| x.to_bits()).collect::<Vec<u64>>() != want_bits {
+            return Err("co-sort disturbed a sorted input".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hybrid_cosort_equals_total_sort_ints() {
+    // Same property over an integer dtype with duplicate-heavy values,
+    // plus the calibrated-plan fraction for this machine's device model.
+    let calibrated = accelkern::hybrid::calibrate_sort::<i64>(8 * 1024, 2, None)
+        .map(|c| c.plan_measured(1.0).host_fraction)
+        .unwrap_or(0.25);
+    let gen = VecGen::new(2 * accelkern::hybrid::MIN_COSPLIT, |r| r.range_i64(-50, 50));
+    check("hybrid-cosort-i64", &PropConfig::default(), &gen, move |xs| {
+        let mut want = xs.clone();
+        want.sort_unstable();
+        for frac in [0.0, 0.5, 1.0, calibrated] {
+            let eng = HybridEngine::new(HybridPlan::new(frac), 2, None);
+            let mut got = xs.clone();
+            co_sort(&eng, &mut got).map_err(|e| format!("{e:#}"))?;
+            if got != want {
+                return Err(format!("co-sort mismatch at host fraction {frac}"));
+            }
         }
         Ok(())
     });

@@ -1,0 +1,290 @@
+//! Offline stub of the `xla-rs` API surface used by `accelkern`.
+//!
+//! The image this repo builds in has no PJRT plugin and no network
+//! access, so this crate stands in for `xla-rs` (DESIGN.md §9). The
+//! contract:
+//!
+//! * [`Literal`] is **fully functional** host-side: typed construction
+//!   from untyped bytes, typed readback, tuple decomposition. The
+//!   `accelkern::runtime::literal` unit tests run against it.
+//! * [`PjRtClient::cpu`] returns an error, so `Runtime::open` fails
+//!   cleanly and every caller takes its documented host fallback — the
+//!   same degradation path as a checkout where `make artifacts` has not
+//!   run yet.
+//!
+//! Replace the `xla = { path = "../vendor/xla" }` dependency with the
+//! real `xla-rs` crate to enable device execution; the types and method
+//! signatures here are a subset of that crate's API.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (implements `std::error::Error`, so it converts into
+/// `anyhow::Error` at call sites).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching xla-rs.
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "PJRT unavailable: offline stub `xla` crate (vendor/xla); \
+     swap in the real xla-rs crate to enable device execution";
+
+/// XLA element types (the subset the artifact catalog uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PrimitiveType {
+    /// 16-bit signed integer.
+    S16,
+    /// 32-bit signed integer.
+    S32,
+    /// 64-bit signed integer.
+    S64,
+    /// 32-bit unsigned integer.
+    U32,
+    /// 64-bit unsigned integer.
+    U64,
+    /// 32-bit float.
+    F32,
+    /// 64-bit float.
+    F64,
+    /// Tuple of literals (execution results).
+    Tuple,
+}
+
+impl PrimitiveType {
+    fn elem_bytes(self) -> Option<usize> {
+        match self {
+            PrimitiveType::S16 => Some(2),
+            PrimitiveType::S32 | PrimitiveType::U32 | PrimitiveType::F32 => Some(4),
+            PrimitiveType::S64 | PrimitiveType::U64 | PrimitiveType::F64 => Some(8),
+            PrimitiveType::Tuple => None,
+        }
+    }
+}
+
+/// Types that can live in a [`Literal`] (xla-rs `ArrayElement`).
+pub trait ArrayElement: Copy + 'static {
+    /// The XLA element type tag for this Rust type.
+    const TY: PrimitiveType;
+}
+
+macro_rules! array_element {
+    ($ty:ty, $tag:ident) => {
+        impl ArrayElement for $ty {
+            const TY: PrimitiveType = PrimitiveType::$tag;
+        }
+    };
+}
+
+array_element!(i16, S16);
+array_element!(i32, S32);
+array_element!(i64, S64);
+array_element!(u32, U32);
+array_element!(u64, U64);
+array_element!(f32, F32);
+array_element!(f64, F64);
+
+/// A host-side typed tensor: element type + dims + raw bytes, or a tuple
+/// of literals (the shape execution results come back in).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: PrimitiveType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+    tuple: Vec<Literal>,
+}
+
+impl Literal {
+    /// Build a literal from an element type, dims and raw (little-endian,
+    /// host-layout) bytes. Errors when the byte count disagrees with the
+    /// shape.
+    pub fn create_from_shape_and_untyped_data(
+        ty: PrimitiveType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let Some(esize) = ty.elem_bytes() else {
+            return Err(Error::new("cannot build a tuple literal from untyped data"));
+        };
+        let elems: usize = dims.iter().product();
+        if data.len() != elems * esize {
+            return Err(Error::new(format!(
+                "byte count {} does not match shape {:?} of {:?} ({} expected)",
+                data.len(),
+                dims,
+                ty,
+                elems * esize
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec(), tuple: Vec::new() })
+    }
+
+    /// Wrap literals into a tuple literal (what executions return).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { ty: PrimitiveType::Tuple, dims: Vec::new(), data: Vec::new(), tuple: elems }
+    }
+
+    /// Element type of this literal.
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+
+    /// Dimensions of this literal.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Copy the data out as a typed vector. Errors on a type mismatch.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error::new(format!(
+                "literal holds {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let esize = std::mem::size_of::<T>();
+        debug_assert_eq!(Some(esize), self.ty.elem_bytes());
+        let n = self.data.len() / esize;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            // Unaligned read: the byte buffer has no alignment guarantee.
+            let v = unsafe { (self.data.as_ptr().add(i * esize) as *const T).read_unaligned() };
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Split a tuple literal into its components. Errors on non-tuples.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        if self.ty != PrimitiveType::Tuple {
+            return Err(Error::new("decompose_tuple on a non-tuple literal"));
+        }
+        Ok(std::mem::take(&mut self.tuple))
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the real XLA toolchain).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always errors in the stub.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(Error::new(format!(
+            "cannot parse HLO text {}: {STUB_MSG}",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A PJRT device buffer holding one execution output.
+#[derive(Debug)]
+pub struct PjRtBuffer(Literal);
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.0.clone())
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals. Unreachable in the stub
+    /// (no executable can be compiled), kept for API compatibility.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// A PJRT client bound to one platform.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create the CPU PJRT client. Always errors in the stub, which makes
+    /// `Runtime::open` fail cleanly and callers take their host fallback.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::new(STUB_MSG))
+    }
+
+    /// Platform name of this client.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation. Unreachable in the stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_typed() {
+        let xs: Vec<i16> = vec![-3, 0, 7, i16::MAX, i16::MIN];
+        let bytes: Vec<u8> = xs.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(PrimitiveType::S16, &[5], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<i16>().unwrap(), xs);
+        assert_eq!(lit.dims(), &[5]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(PrimitiveType::F32, &[3], &[0u8; 8])
+            .is_err());
+    }
+
+    #[test]
+    fn tuple_decomposition() {
+        let a = Literal::create_from_shape_and_untyped_data(PrimitiveType::S32, &[1], &[1, 0, 0, 0])
+            .unwrap();
+        let mut t = Literal::tuple(vec![a.clone(), a]);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        let mut scalar = parts[0].clone();
+        assert!(scalar.decompose_tuple().is_err());
+    }
+
+    #[test]
+    fn client_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT unavailable"));
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo.txt").is_err());
+    }
+}
