@@ -1,6 +1,6 @@
 # Top-level convenience targets (see README.md).
 
-.PHONY: artifacts build test bench-smoke clean-artifacts
+.PHONY: artifacts build test bench-smoke bench-sort clean-artifacts
 
 # AOT-lower the L1/L2 Pallas/JAX catalog to artifacts/ (requires jax).
 artifacts:
@@ -15,6 +15,12 @@ test:
 # One quick Criterion-style smoke bench (the in-repo harness).
 bench-smoke:
 	AK_FIG6_QUICK=1 cargo bench -p accelkern --bench fig6_cosort
+
+# Host sort engine throughput sweep -> BENCH_sort.json (DESIGN.md §11).
+# The run is also a correctness gate: any cross-engine divergence exits
+# non-zero. Drop --quick for the full dtype grid at n = 2^22.
+bench-sort: build
+	cargo run --release --bin akbench -- bench-sort --quick
 
 clean-artifacts:
 	rm -rf artifacts

@@ -1,16 +1,24 @@
 //! `merge_sort` / `merge_sort_by_key` (paper §II-B).
 //!
-//! * Native: stable std sort on the total-order key image.
-//! * Threaded: per-chunk sort + k-way merge (the paper's CPU path is
-//!   statically-partitioned threads).
+//! * Native: unstable std sort on the total-order key image.
+//! * Threaded: per-chunk sort + merge-path partitioned parallel k-way
+//!   merge (the paper's CPU path is statically-partitioned threads;
+//!   the recombine engine is DESIGN.md §11).
 //! * Device: the AOT bitonic merge-sort artifact via PJRT; i128 falls
 //!   back to the threaded path (no s128 in XLA — DESIGN.md §2).
+//!
+//! **Stability contract:** [`sort`] is *not* stable — its keys are plain
+//! scalars, so equal keys are indistinguishable and the unstable std
+//! sort's lower memory traffic is free throughput. Stability is part of
+//! the contract of [`super::sortperm::sortperm`] and [`sort_by_key`]
+//! only, where equal keys carry distinguishable payloads/indices.
 
 use crate::backend::{Backend, DeviceKey};
-use crate::baselines::kmerge;
+use crate::baselines::merge_path;
 use crate::dtype::SortKey;
 
-/// Sort `xs` ascending (total order; NaN-safe for floats).
+/// Sort `xs` ascending (total order; NaN-safe for floats). Not stable —
+/// see the module docs for the stability contract split.
 ///
 /// ```
 /// use accelkern::backend::Backend;
@@ -27,7 +35,7 @@ use crate::dtype::SortKey;
 pub fn sort<K: DeviceKey>(backend: &Backend, xs: &mut [K]) -> anyhow::Result<()> {
     match backend {
         Backend::Native => {
-            xs.sort_by(|a, b| a.cmp_total(b));
+            xs.sort_unstable_by(|a, b| a.cmp_total(b));
             Ok(())
         }
         Backend::Threaded(t) => {
@@ -53,18 +61,19 @@ pub fn sort<K: DeviceKey>(backend: &Backend, xs: &mut [K]) -> anyhow::Result<()>
 fn threaded_sort<K: SortKey>(xs: &mut [K], threads: usize) {
     let t = threads.max(1);
     if t == 1 || xs.len() < 4096 {
-        xs.sort_by(|a, b| a.cmp_total(b));
+        xs.sort_unstable_by(|a, b| a.cmp_total(b));
         return;
     }
     crate::backend::parallel_chunks(xs, t, |_, chunk| {
-        chunk.sort_by(|a, b| a.cmp_total(b));
+        chunk.sort_unstable_by(|a, b| a.cmp_total(b));
     });
-    // Merge the t sorted chunks (one scratch copy, then k-way merge).
+    // Recombine the t sorted chunks with the merge-path partitioned
+    // parallel merge (DESIGN.md §11): merge into scratch on all t
+    // workers, then copy back in parallel. The whole sort stays parallel
+    // end to end instead of funnelling through one sequential k-merge.
     let ranges = crate::backend::threaded::split_ranges(xs.len(), t);
-    let snapshot: Vec<K> = xs.to_vec();
-    let refs: Vec<&[K]> = ranges.iter().map(|r| &snapshot[r.clone()]).collect();
-    let merged = kmerge(&refs);
-    xs.copy_from_slice(&merged);
+    let bounds: Vec<usize> = ranges.iter().skip(1).map(|r| r.start).collect();
+    merge_path::merge_runs_in_place(xs, &bounds, t);
 }
 
 /// Sort `keys` ascending carrying `vals` along (payload sort).

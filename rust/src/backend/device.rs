@@ -14,7 +14,6 @@
 
 use xla::Literal;
 
-use crate::baselines::kmerge;
 use crate::dtype::SortKey;
 use crate::runtime::{lit_from_slice, lit_to_vec, Registry};
 
@@ -97,7 +96,14 @@ impl DeviceOps {
             runs.push(sorted);
         }
         let refs: Vec<&[K]> = runs.iter().map(|r| r.as_slice()).collect();
-        let merged = kmerge(&refs);
+        // Sequential recombine on purpose: this runs in *device* context,
+        // which may execute concurrently with the host pool (hybrid
+        // co-sort) — fanning out to the default host width here would
+        // steal the cores the host shard owns and skew calibration's
+        // host:device ratio (DESIGN.md §10/§11).
+        let mut merged = Vec::new();
+        crate::dtype::resize_for_overwrite(&mut merged, n);
+        crate::baselines::kmerge::kmerge_into_slice(&refs, &mut merged);
         xs.copy_from_slice(&merged);
         Ok(())
     }

@@ -20,7 +20,7 @@ pub mod device;
 pub mod threaded;
 
 pub use device::{DeviceKey, DeviceOps};
-pub use threaded::{parallel_chunks, parallel_for_each_chunk};
+pub use threaded::{parallel_chunks, parallel_chunks_with_scratch, parallel_for_each_chunk};
 
 use crate::hybrid::HybridEngine;
 use crate::runtime::Registry;

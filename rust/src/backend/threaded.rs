@@ -38,14 +38,46 @@ where
     let ranges = split_ranges(len, threads);
     std::thread::scope(|s| {
         let mut rest = xs;
-        let mut offset = 0usize;
         for (i, r) in ranges.iter().enumerate() {
             let (head, tail) = rest.split_at_mut(r.len());
             rest = tail;
-            offset += r.len();
-            let _ = offset;
             let f = &f;
             s.spawn(move || f(i, head));
+        }
+    });
+}
+
+/// Run `f(chunk_index, &mut chunk, &mut scratch_chunk)` over disjoint
+/// chunks of `xs` and the *same-ranged* chunks of `scratch` on scoped
+/// threads. Both slices must have equal length; chunk `i` of `xs` and
+/// chunk `i` of `scratch` cover identical index ranges, so a worker can
+/// move data between its pair without synchronisation (the merge engine's
+/// parallel copy-back uses exactly this — `baselines::merge_path`).
+pub fn parallel_chunks_with_scratch<T: Send, U: Send, F>(
+    xs: &mut [T],
+    scratch: &mut [U],
+    threads: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [T], &mut [U]) + Sync,
+{
+    assert_eq!(xs.len(), scratch.len(), "xs/scratch length mismatch");
+    let len = xs.len();
+    if threads <= 1 || len < 2 {
+        f(0, xs, scratch);
+        return;
+    }
+    let ranges = split_ranges(len, threads);
+    std::thread::scope(|s| {
+        let mut rest = xs;
+        let mut rest_s = scratch;
+        for (i, r) in ranges.iter().enumerate() {
+            let (head, tail) = rest.split_at_mut(r.len());
+            rest = tail;
+            let (head_s, tail_s) = rest_s.split_at_mut(r.len());
+            rest_s = tail_s;
+            let f = &f;
+            s.spawn(move || f(i, head, head_s));
         }
     });
 }
@@ -106,6 +138,25 @@ mod tests {
         let total: usize = sums.iter().sum();
         assert_eq!(total, (0..100).sum::<usize>());
         assert_eq!(sums.len(), 3);
+    }
+
+    #[test]
+    fn chunks_with_scratch_pair_same_ranges() {
+        let mut xs: Vec<u64> = (0..1000).collect();
+        let mut scratch = vec![0u64; 1000];
+        // Workers copy their xs chunk into the paired scratch chunk.
+        parallel_chunks_with_scratch(&mut xs, &mut scratch, 4, |_, src, dst| {
+            dst.copy_from_slice(src);
+        });
+        assert_eq!(scratch, (0..1000).collect::<Vec<u64>>());
+        // Single-thread and empty degenerate paths.
+        let mut a = vec![1u8; 3];
+        let mut b = vec![0u8; 3];
+        parallel_chunks_with_scratch(&mut a, &mut b, 1, |_, src, dst| dst.copy_from_slice(src));
+        assert_eq!(b, vec![1u8; 3]);
+        let mut e1: Vec<u8> = vec![];
+        let mut e2: Vec<u8> = vec![];
+        parallel_chunks_with_scratch(&mut e1, &mut e2, 4, |_, _, _| {});
     }
 
     #[test]

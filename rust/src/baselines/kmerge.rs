@@ -5,6 +5,13 @@
 //! (b) SIHSort's final phase, merging the sorted runs received from every
 //! peer rank (cheaper than the paper's full second local sort; both are
 //! implemented and ablated, see `mpisort`).
+//!
+//! Inputs at or above [`super::merge_path::PAR_MERGE_MIN`] elements are
+//! delegated to the merge-path partitioned parallel engine
+//! (`baselines::merge_path`, DESIGN.md §11); below it the sequential
+//! loser tree runs. Keys of ≤ 8 bytes play their matches on a `u64` bit
+//! image instead of the generic `u128` — the same §Perf L3 trick as
+//! `radix.rs` (the wide shifts/compares cost ~35% throughput on i32).
 
 use crate::dtype::SortKey;
 
@@ -17,42 +24,95 @@ pub fn kmerge<K: SortKey>(runs: &[&[K]]) -> Vec<K> {
 }
 
 /// Merge into a caller-provided buffer (cleared first). Allocation-free on
-/// the element path when `out` has capacity.
+/// the element path when `out` has capacity. Threshold-gated: large
+/// merges run the merge-path partitioned parallel engine over the default
+/// host thread count (DESIGN.md §11); callers that know their pool width
+/// use `merge_path::kmerge_parallel_into_slice` directly.
 pub fn kmerge_into<K: SortKey>(runs: &[&[K]], out: &mut Vec<K>) {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
     out.clear();
-    let live: Vec<&[K]> = runs.iter().copied().filter(|r| !r.is_empty()).collect();
-    match live.len() {
-        0 => return,
-        1 => {
-            out.extend_from_slice(live[0]);
-            return;
-        }
-        2 => {
-            merge2_into(live[0], live[1], out);
-            return;
-        }
-        _ => {}
+    if total == 0 {
+        return;
     }
+    // Both merge engines overwrite every slot (`dtype::resize_for_overwrite`).
+    crate::dtype::resize_for_overwrite(out, total);
+    let threads = crate::backend::threaded::default_threads();
+    if total >= super::merge_path::PAR_MERGE_MIN && threads > 1 {
+        super::merge_path::kmerge_parallel_into_slice(runs, &mut out[..], threads);
+    } else {
+        kmerge_into_slice(runs, &mut out[..]);
+    }
+}
 
-    // Loser tree over k runs: internal nodes hold the *loser* of each
-    // match; the winner bubbles to the root. Pop/replace is O(log k) with
-    // no branching on heap shape.
+/// Sequential k-way merge into an exactly-sized output slice (every slot
+/// is overwritten). This is the per-segment engine the merge-path
+/// partitioner fans out over.
+pub fn kmerge_into_slice<K: SortKey>(runs: &[&[K]], out: &mut [K]) {
+    let live: Vec<&[K]> = runs.iter().copied().filter(|r| !r.is_empty()).collect();
+    debug_assert_eq!(live.iter().map(|r| r.len()).sum::<usize>(), out.len());
+    match live.len() {
+        0 => (),
+        1 => out.copy_from_slice(live[0]),
+        2 => merge2_into_slice(live[0], live[1], out),
+        _ => {
+            // §Perf L3: ≤8-byte keys run the tournament on u64 images.
+            if K::KEY_BYTES <= 8 {
+                loser_tree_merge::<K, u64>(&live, out);
+            } else {
+                loser_tree_merge::<K, u128>(&live, out);
+            }
+        }
+    }
+}
+
+/// Unsigned comparison image for the loser tree (u64 for keys up to
+/// 8 bytes, u128 beyond). `MAX` is only a tie-break floor for exhausted
+/// runs — exhaustion itself is a separate flag, so a *real* key whose
+/// image equals `MAX` (e.g. `i64::MAX`, `i128::MAX`) still merges
+/// correctly (a sentinel-in-band scheme would drop it).
+pub(super) trait MergeImage: Copy + Ord {
+    /// Largest image value (exhausted-run placeholder).
+    const MAX: Self;
+    /// The key's image.
+    fn of<K: SortKey>(k: K) -> Self;
+}
+
+impl MergeImage for u64 {
+    const MAX: Self = u64::MAX;
+    #[inline(always)]
+    fn of<K: SortKey>(k: K) -> Self {
+        // KEY_BYTES <= 8 ⇒ the image fits the low 64 bits; truncation
+        // preserves order.
+        k.to_bits() as u64
+    }
+}
+
+impl MergeImage for u128 {
+    const MAX: Self = u128::MAX;
+    #[inline(always)]
+    fn of<K: SortKey>(k: K) -> Self {
+        k.to_bits()
+    }
+}
+
+/// Loser tree over k ≥ 3 non-empty runs: internal nodes hold the *loser*
+/// of each match; the winner bubbles to the root. Pop/replace is O(log k)
+/// with no branching on heap shape. Matches compare `(image, exhausted)`
+/// pairs so a live run always beats an exhausted one, even at image MAX.
+fn loser_tree_merge<K: SortKey, U: MergeImage>(live: &[&[K]], out: &mut [K]) {
     let k = live.len();
-    let mut idx = vec![0usize; k]; // next unconsumed element per run
     let tree_size = k.next_power_of_two();
-    // leaders[i]: the run currently winning at leaf slot i (usize::MAX = exhausted).
-    const EXHAUSTED: u128 = u128::MAX;
-    let key_of = |run: usize, idx: &[usize]| -> u128 {
+    let mut idx = vec![0usize; k]; // next unconsumed element per run
+    let key = |run: usize, idx: &[usize]| -> (U, bool) {
         if run >= k || idx[run] >= live[run].len() {
-            EXHAUSTED
+            (U::MAX, true)
         } else {
-            live[run][idx[run]].to_bits()
+            (U::of(live[run][idx[run]]), false)
         }
     };
 
     // Internal nodes: losers[1..tree_size]; winner propagated from leaves.
     let mut losers = vec![usize::MAX; tree_size]; // run ids
-    // Build: play leaves pairwise up the tree.
     let mut winner_at = vec![usize::MAX; 2 * tree_size];
     for leaf in 0..tree_size {
         winner_at[tree_size + leaf] = if leaf < k { leaf } else { usize::MAX };
@@ -60,25 +120,23 @@ pub fn kmerge_into<K: SortKey>(runs: &[&[K]], out: &mut Vec<K>) {
     for node in (1..tree_size).rev() {
         let a = winner_at[2 * node];
         let b = winner_at[2 * node + 1];
-        let (win, lose) = if key_of_or(a, &idx, &live, k) <= key_of_or(b, &idx, &live, k) {
-            (a, b)
-        } else {
-            (b, a)
-        };
+        let (win, lose) = if key(a, &idx) <= key(b, &idx) { (a, b) } else { (b, a) };
         winner_at[node] = win;
         losers[node] = lose;
     }
     let mut winner = winner_at[1];
 
-    while winner != usize::MAX && key_of(winner, &idx) != EXHAUSTED {
-        out.push(live[winner][idx[winner]]);
+    // Exactly out.len() elements remain, and a live run always wins over
+    // an exhausted one, so `winner` is live at every iteration.
+    for slot in out.iter_mut() {
+        *slot = live[winner][idx[winner]];
         idx[winner] += 1;
         // Replay from the winner's leaf up to the root.
         let mut node = (tree_size + winner) / 2;
         let mut cur = winner;
         while node >= 1 {
             let opp = losers[node];
-            if key_of_or(opp, &idx, &live, k) < key_of_or(cur, &idx, &live, k) {
+            if key(opp, &idx) < key(cur, &idx) {
                 losers[node] = cur;
                 cur = opp;
             }
@@ -91,29 +149,25 @@ pub fn kmerge_into<K: SortKey>(runs: &[&[K]], out: &mut Vec<K>) {
     }
 }
 
+/// 2-way merge into an exactly-sized output slice.
 #[inline]
-fn key_of_or<K: SortKey>(run: usize, idx: &[usize], live: &[&[K]], k: usize) -> u128 {
-    if run == usize::MAX || run >= k || idx[run] >= live[run].len() {
-        u128::MAX
-    } else {
-        live[run][idx[run]].to_bits()
-    }
-}
-
-#[inline]
-fn merge2_into<K: SortKey>(a: &[K], b: &[K], out: &mut Vec<K>) {
-    let (mut i, mut j) = (0, 0);
+pub(super) fn merge2_into_slice<K: SortKey>(a: &[K], b: &[K], out: &mut [K]) {
+    debug_assert_eq!(a.len() + b.len(), out.len());
+    let (mut i, mut j, mut o) = (0, 0, 0);
     while i < a.len() && j < b.len() {
-        if a[i].to_bits() <= b[j].to_bits() {
-            out.push(a[i]);
-            i += 1;
-        } else {
-            out.push(b[j]);
-            j += 1;
-        }
+        let av = a[i];
+        let bv = b[j];
+        // Branchless select (§Perf L3, same shape as `merge.rs`); `<=`
+        // keeps ties taking from the left run first.
+        let take_a = av.to_bits() <= bv.to_bits();
+        out[o] = if take_a { av } else { bv };
+        i += take_a as usize;
+        j += !take_a as usize;
+        o += 1;
     }
-    out.extend_from_slice(&a[i..]);
-    out.extend_from_slice(&b[j..]);
+    out[o..o + (a.len() - i)].copy_from_slice(&a[i..]);
+    let o2 = o + (a.len() - i);
+    out[o2..o2 + (b.len() - j)].copy_from_slice(&b[j..]);
 }
 
 #[cfg(test)]
@@ -177,6 +231,24 @@ mod tests {
     }
 
     #[test]
+    fn max_keys_are_not_sentinels() {
+        // Regression: i128::MAX / i64::MAX have all-ones bit images that
+        // collided with the old in-band EXHAUSTED sentinel and were
+        // silently dropped mid-merge.
+        let a = vec![1i128, i128::MAX, i128::MAX];
+        let b = vec![0i128, 2, i128::MAX];
+        let c = vec![i128::MAX];
+        let got = kmerge(&[&a, &b, &c]);
+        assert_eq!(got, vec![0, 1, 2, i128::MAX, i128::MAX, i128::MAX, i128::MAX]);
+
+        let a = vec![-5i64, i64::MAX];
+        let b = vec![i64::MAX, i64::MAX];
+        let c = vec![7i64];
+        let got = kmerge(&[&a, &b, &c]);
+        assert_eq!(got, vec![-5, 7, i64::MAX, i64::MAX, i64::MAX]);
+    }
+
+    #[test]
     fn into_buffer_reuse() {
         let (runs, want) = split_sorted::<i32>(9, 1000, 4);
         let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
@@ -185,5 +257,15 @@ mod tests {
         assert_eq!(buf, want);
         kmerge_into(&refs, &mut buf); // reused
         assert_eq!(buf, want);
+    }
+
+    #[test]
+    fn large_merge_crosses_parallel_threshold() {
+        // Above PAR_MERGE_MIN the auto path fans out; output must be
+        // identical to a plain total-order sort.
+        let n = super::super::merge_path::PAR_MERGE_MIN + 4321;
+        let (runs, want) = split_sorted::<i32>(10, n, 6);
+        let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+        assert_eq!(kmerge(&refs), want);
     }
 }

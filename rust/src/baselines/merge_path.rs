@@ -1,0 +1,392 @@
+//! Merge-path partitioned parallel merges — the parallel host recombine
+//! engine (DESIGN.md §11).
+//!
+//! Every host-side recombine in this repo used to funnel through one
+//! sequential k-way merge, capping `threaded_sort`, hybrid `co_sort` and
+//! SIHSort's final phase at a single core's memory bandwidth. This module
+//! splits a merge's *output* into `p` equal contiguous segments and lets
+//! each worker produce its segment independently:
+//!
+//! * 2-way merges use the classic **merge-path / diagonal co-rank**
+//!   binary search ([`co_rank`]): output position `m` corresponds to the
+//!   unique `(i, j)` with `i + j = m` on the merge matrix's diagonal, so
+//!   each boundary costs `O(log min(|a|, |b|))` comparisons.
+//! * k-way merges cut by **value rank** ([`kway_cuts`]): a binary search
+//!   over the shared `to_bits` image space finds the key at global rank
+//!   `m`, per-run `partition_point`s place the cut inside every run, and
+//!   ties distribute greedily in run order. Because `to_bits` is
+//!   injective, equal images are equal *values*, so any tie split yields
+//!   the byte-identical output sequence.
+//!
+//! Each segment is then merged sequentially (branchless 2-way /
+//! loser tree from `kmerge`) straight into its slice of the output — no
+//! locks, no atomics, no inter-worker traffic after partitioning.
+
+use crate::backend::threaded::split_ranges;
+use crate::dtype::SortKey;
+
+use super::kmerge::{kmerge_into_slice, merge2_into_slice};
+
+/// Minimum total elements before the partitioned parallel merge engages.
+/// Below this, thread-spawn latency (~10s of µs per worker) exceeds the
+/// single-core merge time, so `kmerge_into` and the explicit `*_parallel`
+/// entry points all fall back to the sequential engines.
+pub const PAR_MERGE_MIN: usize = 1 << 14;
+
+/// Diagonal co-rank: for output position `diag` of the stable 2-way merge
+/// of sorted runs `a` and `b` (ties take from `a` first), return the
+/// unique `(i, j)` with `i + j = diag` such that the first `diag` merged
+/// elements are exactly `merge(a[..i], b[..j])`.
+pub fn co_rank<K: SortKey>(diag: usize, a: &[K], b: &[K]) -> (usize, usize) {
+    debug_assert!(diag <= a.len() + b.len());
+    let mut lo = diag.saturating_sub(b.len());
+    let mut hi = diag.min(a.len());
+    // Invariant: the answer i* lies in [lo, hi]. For any probe i in
+    // [lo, hi), both a[i] and b[diag - i - 1] exist.
+    while lo < hi {
+        let i = lo + (hi - lo) / 2;
+        let j = diag - i;
+        if b[j - 1].to_bits() >= a[i].to_bits() {
+            // b[j-1] may not precede a[i] (ties take a first): the cut
+            // needs more elements from `a`.
+            lo = i + 1;
+        } else {
+            hi = i;
+        }
+    }
+    (lo, diag - lo)
+}
+
+/// Per-run cut positions for global output rank `m` of the k-way merge of
+/// `runs`: returns `cuts` with `sum(cuts) == m` such that the merged
+/// prefix of length `m` is exactly the multiset `∪ runs[r][..cuts[r]]`.
+pub fn kway_cuts<K: SortKey>(runs: &[&[K]], m: usize) -> Vec<usize> {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    debug_assert!(m <= total);
+    if m == 0 {
+        return vec![0; runs.len()];
+    }
+    if m == total {
+        return runs.iter().map(|r| r.len()).collect();
+    }
+    // Binary search the bit-image space for the key at rank m: the
+    // smallest image t with |{x : to_bits(x) <= t}| >= m. ~128 probes of
+    // k `partition_point`s — negligible against the merge itself.
+    let mut lo: u128 = 0;
+    let mut hi: u128 = u128::MAX;
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        let le: usize = runs.iter().map(|r| r.partition_point(|x| x.to_bits() <= mid)).sum();
+        if le >= m {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let t = lo;
+    // Take every element strictly below t, then distribute the elements
+    // equal to t greedily in run order (equal image ⇒ equal value, so the
+    // output sequence is independent of which run supplies them).
+    let mut cuts: Vec<usize> =
+        runs.iter().map(|r| r.partition_point(|x| x.to_bits() < t)).collect();
+    let mut need = m - cuts.iter().sum::<usize>();
+    for (cut, run) in cuts.iter_mut().zip(runs.iter()) {
+        if need == 0 {
+            break;
+        }
+        let equal = run.partition_point(|x| x.to_bits() <= t) - *cut;
+        let take = equal.min(need);
+        *cut += take;
+        need -= take;
+    }
+    debug_assert_eq!(need, 0, "rank {m} not reachable at image threshold");
+    cuts
+}
+
+/// Merge two ascending runs into `out` (`out.len() == a.len() + b.len()`,
+/// every slot overwritten) using up to `threads` workers, each producing
+/// one contiguous output segment located by [`co_rank`]. Falls back to
+/// the sequential branchless merge below [`PAR_MERGE_MIN`].
+pub fn merge2_parallel_into<K: SortKey>(a: &[K], b: &[K], out: &mut [K], threads: usize) {
+    assert_eq!(a.len() + b.len(), out.len(), "output length mismatch");
+    let total = out.len();
+    let t = threads.max(1);
+    if t == 1 || total < PAR_MERGE_MIN {
+        merge2_into_slice(a, b, out);
+        return;
+    }
+    // Segment boundaries on the output, co-ranked back onto (a, b).
+    let ranges = split_ranges(total, t);
+    let mut cuts: Vec<(usize, usize)> =
+        ranges.iter().map(|r| co_rank(r.start, a, b)).collect();
+    cuts.push((a.len(), b.len()));
+    crate::backend::threaded::parallel_chunks(out, t, |s, seg| {
+        let (a0, b0) = cuts[s];
+        let (a1, b1) = cuts[s + 1];
+        merge2_into_slice(&a[a0..a1], &b[b0..b1], seg);
+    });
+}
+
+/// Merge two ascending runs into a fresh vector with up to `threads`
+/// workers (see [`merge2_parallel_into`]).
+pub fn merge2_parallel<K: SortKey>(a: &[K], b: &[K], threads: usize) -> Vec<K> {
+    let mut out = alloc_out::<K>(a.len() + b.len());
+    merge2_parallel_into(a, b, &mut out, threads);
+    out
+}
+
+/// K-way merge of ascending `runs` into `out` (`out.len()` = total run
+/// length, every slot overwritten) using up to `threads` workers: the
+/// output is cut into equal segments by [`kway_cuts`] and each worker
+/// runs the sequential loser tree over its sub-runs. Falls back to the
+/// sequential engine below [`PAR_MERGE_MIN`].
+pub fn kmerge_parallel_into_slice<K: SortKey>(runs: &[&[K]], out: &mut [K], threads: usize) {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    assert_eq!(total, out.len(), "output length mismatch");
+    let t = threads.max(1);
+    if t == 1 || total < PAR_MERGE_MIN {
+        kmerge_into_slice(runs, out);
+        return;
+    }
+    if runs.iter().filter(|r| !r.is_empty()).count() == 2 {
+        // Prefer diagonal co-ranking for the 2-run case: boundary cost is
+        // O(log n) instead of the 128-probe image search.
+        let live: Vec<&[K]> = runs.iter().copied().filter(|r| !r.is_empty()).collect();
+        merge2_parallel_into(live[0], live[1], out, t);
+        return;
+    }
+    let ranges = split_ranges(total, t);
+    let mut cuts: Vec<Vec<usize>> = ranges.iter().map(|r| kway_cuts(runs, r.start)).collect();
+    cuts.push(runs.iter().map(|r| r.len()).collect());
+    crate::backend::threaded::parallel_chunks(out, t, |s, seg| {
+        let subs: Vec<&[K]> = runs
+            .iter()
+            .enumerate()
+            .map(|(r, run)| &run[cuts[s][r]..cuts[s + 1][r]])
+            .collect();
+        kmerge_into_slice(&subs, seg);
+    });
+}
+
+/// K-way merge into a fresh vector with up to `threads` workers (see
+/// [`kmerge_parallel_into_slice`]).
+pub fn kmerge_parallel<K: SortKey>(runs: &[&[K]], threads: usize) -> Vec<K> {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let mut out = alloc_out::<K>(total);
+    kmerge_parallel_into_slice(runs, &mut out, threads);
+    out
+}
+
+/// Merge the consecutive sorted runs of `xs` *in place*: run `r` spans
+/// `bounds[r-1]..bounds[r]` (with implicit `0` and `xs.len()`
+/// endpoints; `bounds` must be ascending). Partitioned parallel merge
+/// into a scratch buffer followed by a parallel copy-back, so no sweep
+/// of the recombine runs at single-core bandwidth. This is the one
+/// scratch-dance shared by `threaded_sort`'s and `co_sort`'s recombine.
+pub fn merge_runs_in_place<K: SortKey>(xs: &mut [K], bounds: &[usize], threads: usize) {
+    debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "bounds must be ascending");
+    let t = threads.max(1);
+    let mut scratch: Vec<K> = Vec::new();
+    crate::dtype::resize_for_overwrite(&mut scratch, xs.len());
+    {
+        let mut cuts: Vec<usize> = Vec::with_capacity(bounds.len() + 2);
+        cuts.push(0);
+        cuts.extend(bounds.iter().copied().filter(|&b| b > 0 && b < xs.len()));
+        cuts.push(xs.len());
+        let refs: Vec<&[K]> = cuts.windows(2).map(|w| &xs[w[0]..w[1]]).collect();
+        kmerge_parallel_into_slice(&refs, &mut scratch, t);
+    }
+    crate::backend::threaded::parallel_chunks_with_scratch(xs, &mut scratch, t, |_, dst, src| {
+        dst.copy_from_slice(src);
+    });
+}
+
+/// Uninitialised output vector of `len` keys; every caller overwrites
+/// every slot before the vector escapes (`dtype::resize_for_overwrite`).
+fn alloc_out<K: SortKey>(len: usize) -> Vec<K> {
+    let mut out: Vec<K> = Vec::new();
+    crate::dtype::resize_for_overwrite(&mut out, len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::is_sorted_total;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution, KeyGen};
+
+    fn sorted_pair<K: KeyGen>(seed: u64, na: usize, nb: usize) -> (Vec<K>, Vec<K>) {
+        let mut a: Vec<K> = generate(&mut Prng::new(seed), Distribution::Uniform, na);
+        let mut b: Vec<K> = generate(&mut Prng::new(seed + 1), Distribution::DupHeavy, nb);
+        a.sort_unstable_by(|x, y| x.cmp_total(y));
+        b.sort_unstable_by(|x, y| x.cmp_total(y));
+        (a, b)
+    }
+
+    #[test]
+    fn co_rank_prefixes_are_exact() {
+        let (a, b) = sorted_pair::<i32>(1, 300, 200);
+        let mut want = [a.clone(), b.clone()].concat();
+        want.sort_unstable_by(|x, y| x.cmp_total(y));
+        for diag in 0..=a.len() + b.len() {
+            let (i, j) = co_rank(diag, &a, &b);
+            assert_eq!(i + j, diag);
+            let mut prefix = [a[..i].to_vec(), b[..j].to_vec()].concat();
+            prefix.sort_unstable_by(|x, y| x.cmp_total(y));
+            assert_eq!(prefix, want[..diag].to_vec(), "diag {diag}");
+        }
+    }
+
+    #[test]
+    fn co_rank_degenerate_runs() {
+        let a = vec![1i32, 2, 3];
+        let empty: Vec<i32> = vec![];
+        assert_eq!(co_rank(2, &a, &empty), (2, 0));
+        assert_eq!(co_rank(2, &empty, &a), (0, 2));
+        assert_eq!(co_rank(0, &a, &a), (0, 0));
+        // All-duplicates: any valid (i, j) yields the same output; the
+        // search must still terminate with i + j = diag.
+        let d = vec![5i32; 40];
+        let (i, j) = co_rank(33, &d, &d);
+        assert_eq!(i + j, 33);
+    }
+
+    #[test]
+    fn kway_cuts_rank_exact() {
+        let (runs, _) = split_runs::<i64>(2, 4000, 5);
+        let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+        let mut all: Vec<i64> = runs.iter().flatten().copied().collect();
+        all.sort_unstable_by(|x, y| x.cmp_total(y));
+        for m in [0usize, 1, 17, 1999, 2000, 3999, 4000] {
+            let cuts = kway_cuts(&refs, m);
+            assert_eq!(cuts.iter().sum::<usize>(), m);
+            let mut prefix: Vec<i64> = refs
+                .iter()
+                .zip(cuts.iter())
+                .flat_map(|(r, &c)| r[..c].iter().copied())
+                .collect();
+            prefix.sort_unstable_by(|x, y| x.cmp_total(y));
+            assert_eq!(prefix, all[..m].to_vec(), "m={m}");
+        }
+    }
+
+    fn split_runs<K: KeyGen>(seed: u64, n: usize, k: usize) -> (Vec<Vec<K>>, Vec<K>) {
+        let xs: Vec<K> = generate(&mut Prng::new(seed), Distribution::Uniform, n);
+        let mut want = xs.clone();
+        want.sort_unstable_by(|a, b| a.cmp_total(b));
+        let mut rng = Prng::new(seed + 99);
+        let mut runs: Vec<Vec<K>> = (0..k).map(|_| Vec::new()).collect();
+        for x in xs {
+            let r = rng.below(k as u64) as usize;
+            runs[r].push(x);
+        }
+        for r in &mut runs {
+            r.sort_unstable_by(|a, b| a.cmp_total(b));
+        }
+        (runs, want)
+    }
+
+    #[test]
+    fn merge2_parallel_matches_sequential() {
+        // Big enough to clear PAR_MERGE_MIN so workers actually fan out.
+        let (a, b) = sorted_pair::<i64>(3, PAR_MERGE_MIN, PAR_MERGE_MIN / 2);
+        let want = {
+            let mut w = [a.clone(), b.clone()].concat();
+            w.sort_unstable_by(|x, y| x.cmp_total(y));
+            w
+        };
+        for threads in [1usize, 2, 3, 7] {
+            let got = merge2_parallel(&a, &b, threads);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn kmerge_parallel_matches_sequential() {
+        for k in [1usize, 3, 5, 16] {
+            let (runs, want) = split_runs::<i32>(4 + k as u64, PAR_MERGE_MIN * 2, k);
+            let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+            for threads in [1usize, 2, 3, 7] {
+                let got = kmerge_parallel(&refs, threads);
+                assert_eq!(got, want, "k={k} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_handles_empty_and_tiny() {
+        let empty: Vec<&[i32]> = vec![];
+        assert!(kmerge_parallel(&empty, 4).is_empty());
+        let a = vec![3i32, 9];
+        let b: Vec<i32> = vec![];
+        let c = vec![1i32];
+        assert_eq!(kmerge_parallel(&[&a, &b, &c], 7), vec![1, 3, 9]);
+        assert_eq!(merge2_parallel(&a, &c, 7), vec![1, 3, 9]);
+    }
+
+    #[test]
+    fn parallel_float_specials() {
+        let n = PAR_MERGE_MIN;
+        let mut a: Vec<f64> = generate(&mut Prng::new(5), Distribution::Uniform, n);
+        let mut b: Vec<f64> = generate(&mut Prng::new(6), Distribution::Uniform, n);
+        a[0] = f64::NAN;
+        a[1] = -0.0;
+        b[0] = f64::INFINITY;
+        b[1] = f64::NEG_INFINITY;
+        a.sort_unstable_by(|x, y| x.cmp_total(y));
+        b.sort_unstable_by(|x, y| x.cmp_total(y));
+        let got = merge2_parallel(&a, &b, 4);
+        assert!(is_sorted_total(&got));
+        let mut want = [a, b].concat();
+        want.sort_unstable_by(|x, y| x.cmp_total(y));
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&got), bits(&want));
+    }
+
+    #[test]
+    fn merge_runs_in_place_matches_sort() {
+        let n = PAR_MERGE_MIN + 999;
+        for k in [2usize, 3, 7] {
+            let mut xs: Vec<i32> = generate(&mut Prng::new(40 + k as u64), Distribution::Uniform, n);
+            let mut want = xs.clone();
+            want.sort_unstable_by(|a, b| a.cmp_total(b));
+            // Sort k consecutive chunks, then merge them in place.
+            let bounds: Vec<usize> = (1..k).map(|i| i * n / k).collect();
+            let mut cuts = vec![0];
+            cuts.extend(bounds.iter().copied());
+            cuts.push(n);
+            for w in cuts.windows(2) {
+                xs[w[0]..w[1]].sort_unstable_by(|a, b| a.cmp_total(b));
+            }
+            merge_runs_in_place(&mut xs, &bounds, 3);
+            assert_eq!(xs, want, "k={k}");
+        }
+        // Degenerate bounds (0, len, empty list) are tolerated.
+        let mut xs = vec![3i32, 1, 2];
+        xs.sort_unstable();
+        merge_runs_in_place(&mut xs, &[0, 3], 4);
+        assert_eq!(xs, vec![1, 2, 3]);
+        let mut e: Vec<i32> = vec![];
+        merge_runs_in_place(&mut e, &[], 4);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn kway_cuts_handle_image_max_keys() {
+        // i64::MAX sits at the very top of the image space; the rank
+        // search must not overflow or mis-place it.
+        let a = vec![0i64, i64::MAX, i64::MAX];
+        let b = vec![i64::MIN, i64::MAX];
+        let c = vec![1i64];
+        let refs: Vec<&[i64]> = vec![&a, &b, &c];
+        for m in 0..=6 {
+            let cuts = kway_cuts(&refs, m);
+            assert_eq!(cuts.iter().sum::<usize>(), m, "m={m}");
+        }
+        assert_eq!(
+            kmerge_parallel(&refs, 3),
+            vec![i64::MIN, 0, 1, i64::MAX, i64::MAX, i64::MAX]
+        );
+    }
+}

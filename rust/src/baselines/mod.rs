@@ -6,12 +6,18 @@
 //! an LSD radix sort (special-cased per key width, exactly the property
 //! that makes Thrust win on small integer types in Fig 2) and a bottom-up
 //! merge sort. `kmerge` is the shared k-way merge used by chunked device
-//! sorting and SIHSort's final phase.
+//! sorting and SIHSort's final phase; `merge_path` is its partitioned
+//! parallel engine (diagonal co-rank / value-rank output splitting,
+//! DESIGN.md §11), and `radix::radix_sort_threaded` the multi-threaded
+//! LSD variant — together the parallel host sort engine that keeps the
+//! recombine phases off the single-core memory-bandwidth ceiling.
 
 pub mod kmerge;
 pub mod merge;
+pub mod merge_path;
 pub mod radix;
 
 pub use kmerge::kmerge;
 pub use merge::merge_sort;
-pub use radix::radix_sort;
+pub use merge_path::{kmerge_parallel, merge2_parallel};
+pub use radix::{radix_sort, radix_sort_auto, radix_sort_threaded};

@@ -9,13 +9,57 @@
 //! on big ones.
 //!
 //! `radix_sort_by_digit_bits` exposes the digit width for the ablation
-//! bench (8 vs 11 vs 16 bits).
+//! bench (8 vs 11 vs 16 bits). [`radix_sort_threaded`] is the
+//! multi-threaded LSD variant (per-thread digit histograms over static
+//! chunks, an exclusive scan over the thread × digit count matrix, and a
+//! parallel stable scatter with per-thread bucket cursors — DESIGN.md
+//! §11); [`radix_sort_auto`] picks between the two by input size and is
+//! what `mpisort::LocalSorter::ThrustRadix` runs, so calibration and the
+//! cost model see the faster engine.
 
+use crate::backend::threaded::{
+    default_threads, parallel_chunks_with_scratch, parallel_for_each_chunk, split_ranges,
+};
 use crate::dtype::SortKey;
 
-/// Sort in place, ascending under the total order.
+/// Minimum input length before [`radix_sort_auto`] fans out to the
+/// threaded engine: below this, per-pass thread spawns and the cursor
+/// matrix scan cost more than they save.
+pub const RADIX_PAR_MIN: usize = 1 << 15;
+
+/// Sort in place, ascending under the total order (single-threaded).
 pub fn radix_sort<K: SortKey>(xs: &mut [K]) {
     radix_sort_by_digit_bits(xs, 8);
+}
+
+/// The TR engine as dispatched by `LocalSorter`: threaded LSD radix for
+/// inputs at or above [`RADIX_PAR_MIN`] (over the default host thread
+/// count), the sequential passes below it.
+pub fn radix_sort_auto<K: SortKey>(xs: &mut [K]) {
+    radix_sort_threaded(xs, default_threads());
+}
+
+/// Multi-threaded LSD radix sort (8-bit digits) over up to `threads`
+/// workers. Per pass: (1) each worker histograms its static chunk of the
+/// input; (2) one exclusive scan over the (digit-major, thread-minor)
+/// count matrix turns the histograms into per-worker bucket cursors —
+/// digit-major order keeps the scatter stable, since within one digit an
+/// earlier chunk's elements land before a later chunk's; (3) workers
+/// scatter their chunk in input order through their private cursors, so
+/// no two writes alias. Falls back to the sequential engine below
+/// [`RADIX_PAR_MIN`] or at one thread.
+pub fn radix_sort_threaded<K: SortKey>(xs: &mut [K], threads: usize) {
+    let t = threads.max(1).min(xs.len().max(1));
+    if t == 1 || xs.len() < RADIX_PAR_MIN {
+        radix_sort(xs);
+        return;
+    }
+    // §Perf L3: same u64-image fast path as the sequential engine.
+    if K::KEY_BYTES <= 8 {
+        radix_passes_parallel::<K, u64>(xs, t, |k| k.to_bits() as u64);
+    } else {
+        radix_passes_parallel::<K, u128>(xs, t, |k| k.to_bits());
+    }
 }
 
 /// Radix sort with a configurable digit width in {1..16} bits.
@@ -75,11 +119,8 @@ fn radix_passes<K: SortKey, U: RadixImage>(
     // *lost* ~3x to the extra memory traffic — §Perf L3 iteration log);
     // the image is recomputed per access, which for integers is one xor.
     let mut src: Vec<K> = xs.to_vec();
-    let mut dst: Vec<K> = Vec::with_capacity(n);
-    #[allow(clippy::uninit_vec)]
-    unsafe {
-        dst.set_len(n);
-    }
+    let mut dst: Vec<K> = Vec::new();
+    crate::dtype::resize_for_overwrite(&mut dst, n);
 
     let mut counts = vec![0usize; radix];
     for pass in 0..passes {
@@ -108,6 +149,97 @@ fn radix_passes<K: SortKey, U: RadixImage>(
         std::mem::swap(&mut src, &mut dst);
     }
     xs.copy_from_slice(&src);
+}
+
+/// Shared-destination pointer for the parallel scatter. SAFETY contract:
+/// every worker writes only slots inside its own (thread, digit) bucket
+/// ranges, which partition `0..n` by construction of the exclusive scan.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+fn radix_passes_parallel<K: SortKey, U: RadixImage>(
+    xs: &mut [K],
+    threads: usize,
+    image: impl Fn(K) -> U + Sync,
+) {
+    const DIGIT_BITS: u32 = 8;
+    const RADIX: usize = 1 << DIGIT_BITS;
+    const MASK: u64 = (RADIX - 1) as u64;
+    let n = xs.len();
+    let key_bits = (K::KEY_BYTES * 8) as u32;
+    let passes = key_bits.div_ceil(DIGIT_BITS);
+
+    let mut src: Vec<K> = xs.to_vec();
+    // Every pass's scatter overwrites every dst slot (scan sums to n).
+    let mut dst: Vec<K> = Vec::new();
+    crate::dtype::resize_for_overwrite(&mut dst, n);
+    // Static chunking shared by the histogram and scatter phases
+    // (identical to `parallel_for_each_chunk`'s internal split).
+    let ranges = split_ranges(n, threads);
+
+    for pass in 0..passes {
+        let shift = pass * DIGIT_BITS;
+        // Phase 1: per-worker digit histograms over static chunks.
+        let histos: Vec<Vec<usize>> = {
+            let src_ref = &src;
+            let image_ref = &image;
+            parallel_for_each_chunk(n, threads, move |r| {
+                let mut h = vec![0usize; RADIX];
+                for x in &src_ref[r] {
+                    h[image_ref(*x).digit(shift, MASK)] += 1;
+                }
+                h
+            })
+        };
+        debug_assert_eq!(histos.len(), ranges.len());
+        // Skip passes whose digit is constant across the input (the same
+        // narrow-range optimisation as the sequential engine).
+        if (0..RADIX).any(|d| histos.iter().map(|h| h[d]).sum::<usize>() == n) {
+            continue;
+        }
+        // Phase 2: exclusive scan over the (digit-major, thread-minor)
+        // count matrix -> per-worker bucket cursors.
+        let mut cursors: Vec<Vec<usize>> = vec![vec![0usize; RADIX]; histos.len()];
+        let mut sum = 0usize;
+        for d in 0..RADIX {
+            for (w, h) in histos.iter().enumerate() {
+                cursors[w][d] = sum;
+                sum += h[d];
+            }
+        }
+        debug_assert_eq!(sum, n);
+        // Phase 3: parallel stable scatter through private cursors.
+        let dst_ptr = SendPtr(dst.as_mut_ptr());
+        std::thread::scope(|s| {
+            let src_ref = &src;
+            let image_ref = &image;
+            for (r, mut cur) in ranges.iter().cloned().zip(cursors.into_iter()) {
+                s.spawn(move || {
+                    // Rebind the whole wrapper so edition-2021 disjoint
+                    // capture doesn't grab the bare (non-Send) `*mut K`
+                    // field instead of the Send/Sync `SendPtr`.
+                    let out = dst_ptr;
+                    for &x in &src_ref[r] {
+                        let d = image_ref(x).digit(shift, MASK);
+                        // SAFETY: cur[d] walks this worker's disjoint
+                        // bucket range (see SendPtr contract).
+                        unsafe {
+                            *out.0.add(cur[d]) = x;
+                        }
+                        cur[d] += 1;
+                    }
+                });
+            }
+        });
+        std::mem::swap(&mut src, &mut dst);
+    }
+    // Parallel copy-back: with only 2–16 full-array sweeps per sort, a
+    // sequential final copy would run a whole sweep on one core.
+    parallel_chunks_with_scratch(xs, &mut src, threads, |_, out, from| {
+        out.copy_from_slice(from);
+    });
 }
 
 #[cfg(test)]
@@ -179,6 +311,50 @@ mod tests {
         radix_sort_by_digit_bits(&mut c, 16);
         assert_eq!(a, b);
         assert_eq!(b, c);
+    }
+
+    #[test]
+    fn threaded_matches_sequential_above_threshold() {
+        // Above RADIX_PAR_MIN the parallel histogram/scan/scatter engine
+        // engages; outputs must be byte-identical to the sequential one.
+        let n = RADIX_PAR_MIN + 1777;
+        for threads in [1usize, 2, 3, 7] {
+            let xs: Vec<i32> = generate(&mut Prng::new(20), Distribution::Uniform, n);
+            let mut par = xs.clone();
+            let mut seq = xs;
+            radix_sort_threaded(&mut par, threads);
+            radix_sort(&mut seq);
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn threaded_f64_specials_and_dups() {
+        let n = RADIX_PAR_MIN + 512;
+        let mut xs: Vec<f64> = generate(&mut Prng::new(21), Distribution::DupHeavy, n);
+        xs[7] = f64::NAN;
+        xs[1000] = -0.0;
+        xs[2000] = 0.0;
+        xs[3000] = f64::NEG_INFINITY;
+        let mut want = xs.clone();
+        want.sort_unstable_by(|a, b| a.cmp_total(b));
+        radix_sort_threaded(&mut xs, 4);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&xs), bits(&want));
+    }
+
+    #[test]
+    fn auto_path_small_inputs_fall_back() {
+        // Below RADIX_PAR_MIN the auto engine is exactly the sequential
+        // one (including empty/tiny inputs).
+        for n in [0usize, 1, 2, 63, 64, 1000] {
+            let xs: Vec<i64> = generate(&mut Prng::new(22), Distribution::Uniform, n);
+            let mut a = xs.clone();
+            let mut b = xs;
+            radix_sort_auto(&mut a);
+            radix_sort(&mut b);
+            assert_eq!(a, b, "n={n}");
+        }
     }
 
     #[test]

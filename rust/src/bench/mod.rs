@@ -8,5 +8,7 @@
 //! bytes for GB/s reporting.
 
 pub mod runner;
+pub mod sort_bench;
 
 pub use runner::{benchmark, benchmark_with_setup, BenchOpts, BenchResult, Bencher};
+pub use sort_bench::{run_sort_bench, SortBenchRecord, SortBenchReport};

@@ -1,0 +1,289 @@
+//! `akbench bench-sort` — the host sort engine throughput tracker.
+//!
+//! Measures GB/s for every host sort engine (sequential and parallel
+//! counterparts side by side) per dtype × threads and emits
+//! `BENCH_sort.json`, so the perf trajectory of the parallel host engine
+//! (DESIGN.md §11) is tracked from commit to commit. The run doubles as
+//! a cross-engine correctness gate: every engine's output is compared
+//! against the std reference sort and any divergence is a hard error —
+//! CI fails on it.
+//!
+//! Engine legend (sequential counterpart → parallel engine):
+//! * `sort-native`    → `sort-threaded`   (per-chunk sort + merge-path
+//!   partitioned k-way recombine, `algorithms::sort`)
+//! * `radix-seq[TR]`  → `radix-par[TR]`   (threaded LSD radix,
+//!   `baselines::radix`)
+//! * `kmerge-seq`     → `kmerge-par`      (recombine phase alone, over
+//!   pre-sorted runs — isolates the merge-path speedup)
+//! * `merge-seq[TM]`  — the bottom-up vendor-merge baseline, for scale.
+
+use std::path::Path;
+
+use crate::backend::threaded::split_ranges;
+use crate::backend::{Backend, DeviceKey};
+use crate::baselines::{kmerge, merge_path, merge_sort, radix};
+use crate::bench::{BenchOpts, Bencher};
+use crate::dtype::{bits_eq, ElemType, SortKey};
+use crate::util::Prng;
+use crate::workload::{generate, Distribution, KeyGen};
+
+/// One measured engine row of the sort bench.
+#[derive(Clone, Debug)]
+pub struct SortBenchRecord {
+    /// Engine name (see the module docs legend).
+    pub engine: String,
+    /// Element type sorted.
+    pub dtype: ElemType,
+    /// Elements per iteration.
+    pub n: usize,
+    /// Worker threads the engine ran with (1 for sequential engines).
+    pub threads: usize,
+    /// Mean seconds per iteration.
+    pub secs_mean: f64,
+    /// Standard deviation of the per-iteration seconds.
+    pub secs_std: f64,
+    /// Throughput in bytes/second (n × key bytes / mean seconds).
+    pub bytes_per_sec: f64,
+    /// Recorded samples.
+    pub samples: usize,
+}
+
+/// The full bench outcome: every record plus the grid it ran over.
+#[derive(Clone, Debug, Default)]
+pub struct SortBenchReport {
+    /// Elements per iteration.
+    pub n: usize,
+    /// Parallel-engine thread count.
+    pub threads: usize,
+    /// All measured rows.
+    pub records: Vec<SortBenchRecord>,
+}
+
+impl SortBenchReport {
+    /// Find a record by engine name and dtype.
+    pub fn get(&self, engine: &str, dtype: ElemType) -> Option<&SortBenchRecord> {
+        self.records.iter().find(|r| r.engine == engine && r.dtype == dtype)
+    }
+
+    /// Serialise as JSON (`BENCH_sort.json` schema, version 1).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"version\": 1,\n");
+        s.push_str(&format!("  \"n\": {},\n  \"threads\": {},\n", self.n, self.threads));
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"engine\": \"{}\", \"dtype\": \"{}\", \"n\": {}, \"threads\": {}, \
+                 \"secs_mean\": {:.9}, \"secs_std\": {:.9}, \"gbps\": {:.6}, \"samples\": {}}}{}\n",
+                r.engine,
+                r.dtype.name(),
+                r.n,
+                r.threads,
+                r.secs_mean,
+                r.secs_std,
+                r.bytes_per_sec / 1e9,
+                r.samples,
+                if i + 1 == self.records.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+/// An in-place sort engine under measurement: `(buffer, threads)`.
+type SortFn<K> = Box<dyn Fn(&mut Vec<K>, usize)>;
+
+/// Measure every engine for one dtype and append the rows to `report`.
+/// Errors if any engine's output diverges from the std reference sort.
+fn bench_dtype<K: KeyGen + DeviceKey>(
+    n: usize,
+    threads: usize,
+    opts: &BenchOpts,
+    report: &mut SortBenchReport,
+) -> anyhow::Result<()> {
+    let dtype = K::ELEM;
+    let bytes = (n * K::KEY_BYTES) as f64;
+    let xs: Vec<K> = generate(&mut Prng::new(0xBE7C4 + n as u64), Distribution::Uniform, n);
+    let mut want = xs.clone();
+    want.sort_unstable_by(|a, b| a.cmp_total(b));
+    eprintln!("-- bench-sort {dtype} n={n} threads={threads}");
+
+    // In-place sort engines: (name, threads, routine). Each consumes a
+    // fresh clone per iteration (setup excluded from timing).
+    let engines: Vec<(&str, usize, SortFn<K>)> = vec![
+        ("sort-native", 1, Box::new(|v, _| {
+            crate::algorithms::sort(&Backend::Native, v).expect("native sort");
+        })),
+        ("sort-threaded", threads, Box::new(|v, t| {
+            crate::algorithms::sort(&Backend::Threaded(t), v).expect("threaded sort");
+        })),
+        ("merge-seq[TM]", 1, Box::new(|v, _| merge_sort(v))),
+        ("radix-seq[TR]", 1, Box::new(|v, _| radix::radix_sort(v))),
+        ("radix-par[TR]", threads, Box::new(|v, t| radix::radix_sort_threaded(v, t))),
+    ];
+    let mut bencher = Bencher::new(opts.clone());
+    for (name, t, routine) in &engines {
+        let label = format!("{name}/{dtype}");
+        bencher.run_with_setup(&label, Some(bytes), || xs.clone(), |mut v| routine(&mut v, *t));
+        // Correctness gate: one fresh run against the reference, compared
+        // on bit images so total-order violations can't slip through.
+        let mut check = xs.clone();
+        routine(&mut check, *t);
+        anyhow::ensure!(
+            bits_eq(&check, &want),
+            "engine {name} diverged from the reference sort on {dtype} (n={n}, threads={t})"
+        );
+        push_record(report, &bencher, &label, name, dtype, n, *t);
+    }
+
+    // Recombine-phase engines over pre-sorted runs: isolates the
+    // merge-path speedup from the chunk-sort phase.
+    let runs: Vec<Vec<K>> = {
+        let mut sorted_chunks: Vec<Vec<K>> = split_ranges(n, threads.max(2))
+            .into_iter()
+            .map(|r| xs[r].to_vec())
+            .collect();
+        for c in &mut sorted_chunks {
+            c.sort_unstable_by(|a, b| a.cmp_total(b));
+        }
+        sorted_chunks
+    };
+    let refs: Vec<&[K]> = runs.iter().map(|r| r.as_slice()).collect();
+    let run_merge = |out: &mut [K], t: usize| {
+        if t == 1 {
+            kmerge::kmerge_into_slice(&refs, out);
+        } else {
+            merge_path::kmerge_parallel_into_slice(&refs, out, t);
+        }
+    };
+    let mut out: Vec<K> = vec![K::min_key(); n];
+    for (name, t) in [("kmerge-seq", 1usize), ("kmerge-par", threads)] {
+        let label = format!("{name}/{dtype}");
+        bencher.run(&label, Some(bytes), || run_merge(&mut out[..], t));
+        // Correctness gate on a poisoned buffer: a silently no-op'ing
+        // engine cannot pass by leaving stale (correct) output behind.
+        out.iter_mut().for_each(|x| *x = K::min_key());
+        run_merge(&mut out[..], t);
+        anyhow::ensure!(
+            bits_eq(&out, &want),
+            "engine {name} diverged from the reference merge on {dtype} (n={n}, threads={t})"
+        );
+        push_record(report, &bencher, &label, name, dtype, n, t);
+    }
+    Ok(())
+}
+
+fn push_record(
+    report: &mut SortBenchReport,
+    bencher: &Bencher,
+    label: &str,
+    name: &str,
+    dtype: ElemType,
+    n: usize,
+    threads: usize,
+) {
+    let r = bencher.get(label).expect("bench result recorded");
+    report.records.push(SortBenchRecord {
+        engine: name.to_string(),
+        dtype,
+        n,
+        threads,
+        secs_mean: r.time.mean,
+        secs_std: r.time.std,
+        bytes_per_sec: r.throughput_bps().unwrap_or(0.0),
+        samples: r.time.n,
+    });
+}
+
+/// Run the sort bench over `dtypes` and return the report.
+pub fn run_sort_bench(
+    n: usize,
+    threads: usize,
+    dtypes: &[ElemType],
+    opts: &BenchOpts,
+) -> anyhow::Result<SortBenchReport> {
+    let mut report = SortBenchReport { n, threads: threads.max(1), records: Vec::new() };
+    for &dt in dtypes {
+        crate::dispatch_dtype!(dt, K => bench_dtype::<K>(n, report.threads, opts, &mut report)?);
+    }
+    Ok(report)
+}
+
+/// CLI entry point: run the grid (`--quick` trims dtypes and sampling),
+/// print a summary, and emit the JSON report to `out`.
+pub fn run_and_emit(n: usize, threads: usize, quick: bool, out: &Path) -> anyhow::Result<()> {
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::default() }.scaled_from_env();
+    let dtypes: &[ElemType] =
+        if quick { &[ElemType::I32, ElemType::F64] } else { &ElemType::ALL };
+    let report = run_sort_bench(n, threads, dtypes, &opts)?;
+    report.write_json(out)?;
+    println!(
+        "bench-sort: {} rows (n={}, threads={}) -> {}",
+        report.records.len(),
+        report.n,
+        report.threads,
+        out.display()
+    );
+    // Headline ratios for the log: parallel engine vs its sequential
+    // counterpart, per dtype.
+    let pairs = [
+        ("sort-threaded", "sort-native"),
+        ("radix-par[TR]", "radix-seq[TR]"),
+        ("kmerge-par", "kmerge-seq"),
+    ];
+    for &dt in dtypes {
+        for (par, seq) in pairs {
+            if let (Some(p), Some(s)) = (report.get(par, dt), report.get(seq, dt)) {
+                if s.secs_mean > 0.0 && p.secs_mean > 0.0 {
+                    println!(
+                        "  {dt:<5} {par:<14} vs {seq:<14} speedup {:.2}x ({:.2} vs {:.2} GB/s)",
+                        s.secs_mean / p.secs_mean,
+                        p.bytes_per_sec / 1e9,
+                        s.bytes_per_sec / 1e9,
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> BenchOpts {
+        BenchOpts {
+            warmup: std::time::Duration::from_millis(2),
+            budget: std::time::Duration::from_millis(20),
+            min_samples: 2,
+            max_samples: 3,
+        }
+    }
+
+    #[test]
+    fn report_covers_engines_and_json_parses() {
+        let report =
+            run_sort_bench(20_000, 2, &[ElemType::I32], &tiny_opts()).unwrap();
+        // 5 in-place engines + 2 recombine engines.
+        assert_eq!(report.records.len(), 7);
+        assert!(report.get("sort-threaded", ElemType::I32).is_some());
+        assert!(report.get("kmerge-par", ElemType::I32).is_some());
+        assert!(report.records.iter().all(|r| r.bytes_per_sec > 0.0));
+        // The emitted JSON round-trips through the in-repo parser.
+        let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
+        assert_eq!(j.get("version").as_usize(), Some(1));
+        assert_eq!(j.get("results").as_arr().unwrap().len(), 7);
+        assert_eq!(
+            j.get("results").as_arr().unwrap()[0].get("engine").as_str(),
+            Some("sort-native")
+        );
+    }
+}

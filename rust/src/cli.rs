@@ -36,6 +36,9 @@ COMMANDS
   fig1 .. fig5         regenerate the paper's figures (text + CSV)
   calibrate            measure host:device sort throughput and print the
                        hybrid co-processing split (DESIGN.md §10)
+  bench-sort           host sort engine throughput sweep (sequential vs
+                       parallel merge-path / threaded radix, DESIGN.md
+                       §11) -> BENCH_sort.json; --out overrides the path
   ablate               design-choice ablations (final phase, digit width,
                        samples/rank, refinement rounds)
   selftest             quick end-to-end health check

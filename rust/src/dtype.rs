@@ -269,9 +269,35 @@ pub fn sort_total<K: SortKey>(xs: &mut [K]) {
     xs.sort_unstable_by(|a, b| a.cmp_total(b));
 }
 
+/// Resize `out` to exactly `len` slots without initialising them — the
+/// one audited home of the scratch-buffer `set_len` idiom the sort
+/// engines share (sequential/parallel radix ping-pong buffers, merge
+/// scratch, `kmerge_into`'s output). Reuses existing capacity.
+///
+/// SAFETY rationale: every [`SortKey`] is a plain `Copy` scalar for
+/// which any bit pattern is a valid value, and every caller overwrites
+/// every slot before the buffer is read (zero-initialising instead
+/// costs a measurable extra pass on the hot sort paths).
+pub(crate) fn resize_for_overwrite<K: SortKey>(out: &mut Vec<K>, len: usize) {
+    out.clear();
+    out.reserve(len);
+    #[allow(clippy::uninit_vec)]
+    unsafe {
+        out.set_len(len);
+    }
+}
+
 /// Is the slice ascending under the total order?
 pub fn is_sorted_total<K: SortKey>(xs: &[K]) -> bool {
     xs.windows(2).all(|w| w[0].cmp_total(&w[1]) != std::cmp::Ordering::Greater)
+}
+
+/// Bit-image equality of two key slices — stricter than `PartialEq`: it
+/// distinguishes NaN payloads and −0.0 from +0.0. This is the one
+/// comparison rule behind every cross-engine correctness gate (the
+/// `bench-sort` divergence check and the parallel-engine test suite).
+pub fn bits_eq<K: SortKey>(a: &[K], b: &[K]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 #[cfg(test)]

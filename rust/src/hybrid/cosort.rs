@@ -5,13 +5,14 @@
 //! Each entry point splits its input at the [`HybridPlan`]'s fraction,
 //! runs the host shard on a std-thread pool while the device shard runs
 //! on the AOT artifact engine (or its documented host stand-in), and
-//! recombines: k-way merge for sorts, operator fold for reductions,
-//! nothing for index loops. Outputs are bit-identical to the single
-//! engine paths — asserted by the proptests.
+//! recombines: merge-path partitioned parallel 2-way merge for sorts
+//! (DESIGN.md §11), operator fold for reductions, nothing for index
+//! loops. Outputs are bit-identical to the single engine paths —
+//! asserted by the proptests.
 
 use crate::algorithms::reduce::{ReduceKind, Reducible};
 use crate::backend::{Backend, DeviceKey, DeviceOps};
-use crate::baselines::kmerge;
+use crate::baselines::merge_path;
 
 use super::plan::HybridPlan;
 
@@ -122,9 +123,10 @@ fn join_flat<T>(res: std::thread::Result<anyhow::Result<T>>, who: &str) -> anyho
 }
 
 /// Hybrid co-sort — the flagship: split at the plan, sort both shards
-/// concurrently (host thread pool ∥ device engine), k-way merge the two
-/// sorted runs. Output equals `sort_by(cmp_total)` for every dtype and
-/// split ratio (total order; NaN-safe for floats).
+/// concurrently (host thread pool ∥ device engine), then recombine with
+/// the merge-path partitioned parallel merge on the host pool. Output
+/// equals `sort_by(cmp_total)` for every dtype and split ratio (total
+/// order; NaN-safe for floats).
 ///
 /// ```
 /// use accelkern::hybrid::{co_sort, HybridEngine, HybridPlan};
@@ -149,8 +151,11 @@ pub fn co_sort<K: DeviceKey>(eng: &HybridEngine, xs: &mut [K]) -> anyhow::Result
     });
     join_flat(host_res, "host")?;
     join_flat(dev_res, "device")?;
-    let merged = kmerge(&[&xs[..split], &xs[split..]]);
-    xs.copy_from_slice(&merged);
+    // Recombine on the host pool: merge-path partitioned 2-way merge
+    // (DESIGN.md §11) — each of the host threads produces one contiguous
+    // segment of the merged output, then the copy-back runs on the same
+    // pool, so no recombine sweep caps at one core's bandwidth.
+    merge_path::merge_runs_in_place(xs, &[split], eng.host_threads.max(1));
     Ok(())
 }
 

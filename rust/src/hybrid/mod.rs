@@ -10,8 +10,9 @@
 //!    paper's ×22 GPU:CPU cost ratio ([`crate::cost`]);
 //! 2. [`cosort`] runs the host shard on a std-thread pool while the
 //!    device shard runs on the AOT artifact engine, concurrently;
-//! 3. results recombine: k-way merge ([`crate::baselines::kmerge`]) for
-//!    co-sort, operator fold for co-reduce, nothing for co-foreach.
+//! 3. results recombine: merge-path partitioned parallel merge
+//!    ([`crate::baselines::merge_path`], DESIGN.md §11) for co-sort,
+//!    operator fold for co-reduce, nothing for co-foreach.
 //!
 //! Wired through the stack as [`crate::backend::Backend::Hybrid`]
 //! (algorithm suite), [`crate::cfg::Sorter::Hybrid`] /

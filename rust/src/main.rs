@@ -134,6 +134,22 @@ fn run(cli: &Cli) -> anyhow::Result<()> {
             campaign::fig5(&cfg, ranks, &counts, &rt)?;
             Ok(())
         }
+        "bench-sort" => {
+            // Host sort engine throughput sweep -> BENCH_sort.json
+            // (DESIGN.md §11). Also a correctness gate: cross-engine
+            // divergence is a hard error, which is what CI relies on.
+            let n = cli.get_usize("n")?.unwrap_or(if quick { 1 << 20 } else { 1 << 22 });
+            let threads = cli
+                .get_usize("threads")?
+                .unwrap_or_else(accelkern::backend::threaded::default_threads);
+            let out = cli.get("out").unwrap_or("BENCH_sort.json").to_string();
+            accelkern::bench::sort_bench::run_and_emit(
+                n,
+                threads,
+                quick,
+                std::path::Path::new(&out),
+            )
+        }
         "calibrate" => {
             // Measure the host:device sort throughput ratio and print the
             // hybrid co-processing split it implies (DESIGN.md §10).

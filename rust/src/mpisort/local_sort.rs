@@ -81,7 +81,11 @@ impl LocalSorter {
             LocalSorter::JuliaBase => xs.sort_by(|a, b| a.cmp_total(b)),
             LocalSorter::Ak(backend) => crate::algorithms::sort(backend, xs)?,
             LocalSorter::ThrustMerge => baselines::merge_sort(xs),
-            LocalSorter::ThrustRadix => baselines::radix_sort(xs),
+            // TR dispatches by size: the threaded LSD radix above
+            // `RADIX_PAR_MIN` (DESIGN.md §11), sequential passes below —
+            // so calibration and the cost model see the engine that will
+            // actually run.
+            LocalSorter::ThrustRadix => baselines::radix_sort_auto(xs),
             LocalSorter::Hybrid(engine) => crate::hybrid::co_sort(engine, xs)?,
         }
         Ok(t0.elapsed().as_secs_f64())

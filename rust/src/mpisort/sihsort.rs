@@ -3,7 +3,7 @@
 use std::time::Instant;
 
 use crate::backend::DeviceKey;
-use crate::baselines::kmerge;
+use crate::baselines::merge_path;
 use crate::cfg::FinalPhase;
 use crate::cluster::DeviceModel;
 use crate::comm::Endpoint;
@@ -117,9 +117,18 @@ pub fn sihsort_rank<K: DeviceKey>(
     let (data, secs) = ep.measured(|| -> anyhow::Result<Vec<K>> {
         match cfg.final_phase {
             FinalPhase::Merge => {
-                // Received runs are each sorted: k-way merge.
+                // Received runs are each sorted: merge-path partitioned
+                // k-way merge (DESIGN.md §11) over the full host pool.
+                // Safe to fan out here: this closure runs under the
+                // fabric's compute token (one rank's measured section at
+                // a time), so the workers never contend with other rank
+                // threads and the measured seconds model a rank owning
+                // its node's cores.
                 let refs: Vec<&[K]> = received.iter().map(|r| r.as_slice()).collect();
-                Ok(kmerge(&refs))
+                Ok(merge_path::kmerge_parallel(
+                    &refs,
+                    crate::backend::threaded::default_threads(),
+                ))
             }
             FinalPhase::Sort => {
                 // The paper's described variant: concatenate + full re-sort.

@@ -1,0 +1,246 @@
+//! Cross-engine equivalence tests for the parallel host sort engine
+//! (DESIGN.md §11): the merge-path partitioned merges and the threaded
+//! LSD radix must produce byte-identical output to their sequential
+//! counterparts across thread counts {1, 2, 3, 7}, every workload
+//! distribution, all six paper dtypes, float specials (NaN, −0.0,
+//! infinities), duplicate-heavy inputs, and empty/tiny runs.
+
+use accelkern::backend::Backend;
+use accelkern::baselines::kmerge::kmerge_into_slice;
+use accelkern::baselines::merge_path::{self, PAR_MERGE_MIN};
+use accelkern::baselines::radix::{radix_sort, radix_sort_threaded, RADIX_PAR_MIN};
+use accelkern::dtype::{bits_eq, SortKey};
+use accelkern::util::Prng;
+use accelkern::workload::{generate, Distribution, KeyGen};
+
+const THREADS: [usize; 4] = [1, 2, 3, 7];
+
+/// Inject float specials into a generated buffer (no-op when the buffer
+/// is too small). Works on the bit image for every dtype, so the integer
+/// checks exercise extreme keys (image MAX collides with the old
+/// exhausted-run sentinel) and the float checks get NaN/−0.0/±inf.
+fn inject_specials<K: SortKey>(xs: &mut [K]) {
+    let n = xs.len();
+    if n < 8 {
+        return;
+    }
+    xs[0] = K::max_key();
+    xs[n / 2] = K::min_key();
+    xs[n / 3] = K::max_key();
+}
+
+fn inject_float_specials_f64(xs: &mut [f64]) {
+    let n = xs.len();
+    if n < 8 {
+        return;
+    }
+    xs[1] = f64::NAN;
+    xs[2] = -0.0;
+    xs[3] = 0.0;
+    xs[n - 2] = f64::INFINITY;
+    xs[n - 3] = f64::NEG_INFINITY;
+}
+
+fn split_into_runs<K: SortKey + Clone>(xs: &[K], k: usize, seed: u64) -> Vec<Vec<K>> {
+    let mut rng = Prng::new(seed);
+    let mut runs: Vec<Vec<K>> = (0..k).map(|_| Vec::new()).collect();
+    for x in xs {
+        runs[rng.below(k as u64) as usize].push(*x);
+    }
+    for r in &mut runs {
+        r.sort_unstable_by(|a, b| a.cmp_total(b));
+    }
+    runs
+}
+
+/// Merge-path k-way + 2-way vs the sequential engine, all distributions
+/// and thread counts for one dtype.
+fn check_merge_engine<K: KeyGen>(seed: u64) {
+    let n = PAR_MERGE_MIN + 1234;
+    for dist in Distribution::ALL {
+        let mut xs: Vec<K> = generate(&mut Prng::new(seed), dist, n);
+        inject_specials(&mut xs);
+        let runs = split_into_runs(&xs, 5, seed + 1);
+        let refs: Vec<&[K]> = runs.iter().map(|r| r.as_slice()).collect();
+        let mut want = vec![K::min_key(); n];
+        kmerge_into_slice(&refs, &mut want);
+        for t in THREADS {
+            let got = merge_path::kmerge_parallel(&refs, t);
+            assert!(bits_eq(&got, &want), "kmerge {dist:?} t={t} {}", K::ELEM);
+        }
+        // 2-way co-rank path on an uneven split.
+        let two = split_into_runs(&xs, 2, seed + 2);
+        let mut want2 = vec![K::min_key(); n];
+        kmerge_into_slice(&[&two[0], &two[1]], &mut want2);
+        for t in THREADS {
+            let got = merge_path::merge2_parallel(&two[0], &two[1], t);
+            assert!(bits_eq(&got, &want2), "merge2 {dist:?} t={t} {}", K::ELEM);
+        }
+    }
+}
+
+/// Threaded radix vs the sequential passes, all distributions and thread
+/// counts for one dtype.
+fn check_radix_engine<K: KeyGen>(seed: u64) {
+    let n = RADIX_PAR_MIN + 77;
+    for dist in Distribution::ALL {
+        let mut xs: Vec<K> = generate(&mut Prng::new(seed), dist, n);
+        inject_specials(&mut xs);
+        let mut want = xs.clone();
+        radix_sort(&mut want);
+        for t in THREADS {
+            let mut got = xs.clone();
+            radix_sort_threaded(&mut got, t);
+            assert!(bits_eq(&got, &want), "radix {dist:?} t={t} {}", K::ELEM);
+        }
+    }
+}
+
+#[test]
+fn merge_engine_i16() {
+    check_merge_engine::<i16>(101);
+}
+
+#[test]
+fn merge_engine_i32() {
+    check_merge_engine::<i32>(102);
+}
+
+#[test]
+fn merge_engine_i64() {
+    check_merge_engine::<i64>(103);
+}
+
+#[test]
+fn merge_engine_i128() {
+    check_merge_engine::<i128>(104);
+}
+
+#[test]
+fn merge_engine_f32() {
+    check_merge_engine::<f32>(105);
+}
+
+#[test]
+fn merge_engine_f64() {
+    check_merge_engine::<f64>(106);
+}
+
+#[test]
+fn radix_engine_i16() {
+    check_radix_engine::<i16>(201);
+}
+
+#[test]
+fn radix_engine_i32() {
+    check_radix_engine::<i32>(202);
+}
+
+#[test]
+fn radix_engine_i64() {
+    check_radix_engine::<i64>(203);
+}
+
+#[test]
+fn radix_engine_i128() {
+    check_radix_engine::<i128>(204);
+}
+
+#[test]
+fn radix_engine_f32() {
+    check_radix_engine::<f32>(205);
+}
+
+#[test]
+fn radix_engine_f64() {
+    check_radix_engine::<f64>(206);
+}
+
+#[test]
+fn radix_threaded_handles_nan_and_signed_zero() {
+    let n = RADIX_PAR_MIN + 500;
+    let mut xs: Vec<f64> = generate(&mut Prng::new(301), Distribution::DupHeavy, n);
+    inject_float_specials_f64(&mut xs);
+    let mut want = xs.clone();
+    want.sort_unstable_by(|a, b| a.cmp_total(b));
+    for t in THREADS {
+        let mut got = xs.clone();
+        radix_sort_threaded(&mut got, t);
+        assert!(bits_eq(&got, &want), "t={t}");
+    }
+}
+
+#[test]
+fn merge_path_handles_nan_and_signed_zero() {
+    let n = PAR_MERGE_MIN + 500;
+    let mut xs: Vec<f64> = generate(&mut Prng::new(302), Distribution::Uniform, n);
+    inject_float_specials_f64(&mut xs);
+    let runs = split_into_runs(&xs, 3, 303);
+    let refs: Vec<&[f64]> = runs.iter().map(|r| r.as_slice()).collect();
+    let mut want = xs.clone();
+    want.sort_unstable_by(|a, b| a.cmp_total(b));
+    for t in THREADS {
+        let got = merge_path::kmerge_parallel(&refs, t);
+        assert!(bits_eq(&got, &want), "t={t}");
+    }
+}
+
+#[test]
+fn empty_and_tiny_runs_every_engine() {
+    // Merge engines: empty run lists, all-empty runs, single elements.
+    let empty: Vec<&[i32]> = vec![];
+    assert!(merge_path::kmerge_parallel(&empty, 7).is_empty());
+    let e1: Vec<i32> = vec![];
+    let e2: Vec<i32> = vec![];
+    assert!(merge_path::kmerge_parallel(&[&e1, &e2], 3).is_empty());
+    assert!(merge_path::merge2_parallel(&e1, &e2, 3).is_empty());
+    let one = vec![42i32];
+    assert_eq!(merge_path::merge2_parallel(&one, &e1, 7), vec![42]);
+    assert_eq!(merge_path::kmerge_parallel(&[&one, &e1, &one], 7), vec![42, 42]);
+    // Radix: empty / single / pair for every thread count.
+    for t in THREADS {
+        let mut v: Vec<i64> = vec![];
+        radix_sort_threaded(&mut v, t);
+        assert!(v.is_empty());
+        let mut v = vec![5i64];
+        radix_sort_threaded(&mut v, t);
+        assert_eq!(v, vec![5]);
+        let mut v = vec![9i64, -9];
+        radix_sort_threaded(&mut v, t);
+        assert_eq!(v, vec![-9, 9]);
+    }
+}
+
+#[test]
+fn threaded_sort_matches_native_across_threads() {
+    // End-to-end: the Threaded backend (chunk sort + merge-path
+    // recombine) equals the Native engine for every thread count.
+    let n = PAR_MERGE_MIN + 4096;
+    for dist in [Distribution::Uniform, Distribution::Reverse, Distribution::DupHeavy] {
+        let mut xs: Vec<f32> = generate(&mut Prng::new(400), dist, n);
+        inject_specials(&mut xs);
+        xs[5] = f32::NAN;
+        xs[6] = -0.0;
+        let mut want = xs.clone();
+        accelkern::algorithms::sort(&Backend::Native, &mut want).unwrap();
+        for t in THREADS {
+            let mut got = xs.clone();
+            accelkern::algorithms::sort(&Backend::Threaded(t), &mut got).unwrap();
+            assert!(bits_eq(&got, &want), "{dist:?} t={t}");
+        }
+    }
+}
+
+#[test]
+fn local_sorter_tr_uses_consistent_engine() {
+    // The TR local sorter auto-dispatches to the threaded radix above
+    // RADIX_PAR_MIN; its output must stay identical to JB's.
+    use accelkern::mpisort::LocalSorter;
+    let n = RADIX_PAR_MIN + 1000;
+    let xs: Vec<i32> = generate(&mut Prng::new(500), Distribution::Uniform, n);
+    let mut want = xs.clone();
+    LocalSorter::JuliaBase.sort(&mut want).unwrap();
+    let mut got = xs;
+    LocalSorter::ThrustRadix.sort(&mut got).unwrap();
+    assert_eq!(got, want);
+}
