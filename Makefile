@@ -1,6 +1,6 @@
 # Top-level convenience targets (see README.md).
 
-.PHONY: artifacts build test bench-smoke bench-sort clean-artifacts
+.PHONY: artifacts build test doc bench-smoke bench-sort clean-artifacts
 
 # AOT-lower the L1/L2 Pallas/JAX catalog to artifacts/ (requires jax).
 artifacts:
@@ -11,6 +11,11 @@ build:
 
 test:
 	cargo test -q
+
+# Docs with warnings promoted to errors (the CI gate): broken intra-doc
+# links on the Session/Launch surface fail the build.
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --workspace --no-deps
 
 # One quick Criterion-style smoke bench (the in-repo harness).
 bench-smoke:

@@ -18,7 +18,7 @@ use accelkern::backend::Backend;
 use accelkern::cfg::{RunConfig, Sorter};
 use accelkern::cluster::DeviceModel;
 use accelkern::coordinator::driver::run_distributed_sort_mixed;
-use accelkern::hybrid::{calibrate_sort, co_sort, HybridEngine, HybridPlan};
+use accelkern::hybrid::{calibrate_sort, HybridEngine, HybridPlan};
 use accelkern::runtime::{Registry, Runtime};
 use accelkern::util::{fmt_throughput, Prng};
 use accelkern::workload::{generate, Distribution};
@@ -61,9 +61,12 @@ fn main() -> anyhow::Result<()> {
             HybridEngine::from_backends(HybridPlan::new(0.5), host_threads, device_backend.clone()),
         ),
     ] {
+        // One unified call: `Session::hybrid(...).sort` dispatches to
+        // `hybrid::co_sort` — both engines sort concurrently.
+        let session = accelkern::session::Session::hybrid(eng);
         let mut buf = xs.clone();
         let t0 = Instant::now();
-        co_sort(&eng, &mut buf)?;
+        session.sort(&mut buf, None)?;
         let secs = t0.elapsed().as_secs_f64();
         println!(
             "  {label}  {n} i64 in {:.1} ms  ({})",

@@ -1,13 +1,15 @@
-//! Quickstart: the AcceleratedKernels algorithm suite on every backend.
+//! Quickstart: the AcceleratedKernels algorithm suite on every backend
+//! through the unified `Session`/`Launch` API.
 //!
-//! Mirrors the paper's §II usage story: the *same* API call dispatches to
-//! single-thread, multithreaded and transpiled-device implementations.
+//! Mirrors the paper's §II usage story: the *same* method call
+//! dispatches to single-thread, multithreaded and transpiled-device
+//! implementations, and per-call keywords (`block_size`, `max_tasks`,
+//! `min_elems` — paper §III) ride in as a `Launch`.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
-use accelkern::algorithms as ak;
-use accelkern::backend::Backend;
 use accelkern::runtime::{Registry, Runtime};
+use accelkern::session::{Launch, Session};
 use accelkern::util::Prng;
 use accelkern::workload::{generate, points_f32, Distribution};
 
@@ -15,63 +17,86 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Prng::new(42);
     let xs: Vec<i32> = generate(&mut rng, Distribution::Uniform, 200_000);
 
-    // Pick backends: host ones always work; the device backend needs
+    // Pick sessions: host ones always work; the device session needs
     // `make artifacts` (falls back gracefully if missing).
-    let mut backends = vec![Backend::Native, Backend::Threaded(4)];
+    let mut sessions = vec![Session::native(), Session::threaded(4)];
     match Runtime::open_default() {
         Ok(rt) => {
             println!("device platform: {}", rt.platform());
-            backends.push(Backend::device(Registry::new(rt)));
+            sessions.push(Session::device(Registry::new(rt)));
         }
-        Err(e) => println!("(no device artifacts: {e}; host backends only)"),
+        Err(e) => println!("(no device artifacts: {e}; host sessions only)"),
     }
 
-    for backend in &backends {
-        println!("\n== backend: {} ==", backend.name());
+    // Per-call tuning knobs (the paper's keyword arguments): cap the
+    // worker count, keep small inputs sequential, reuse merge scratch.
+    let tuned = Launch::new().max_tasks(4).min_elems_per_task(16 * 1024).reuse_scratch(true);
 
-        // merge_sort
+    for s in &sessions {
+        println!("\n== session: {} ==", s.name());
+
+        // merge_sort — default policy, then with explicit knobs.
         let mut v = xs.clone();
-        ak::sort(backend, &mut v)?;
+        s.sort(&mut v, None)?;
         println!("sort:             first={} last={}", v[0], v[v.len() - 1]);
+        let mut w = xs.clone();
+        s.sort(&mut w, Some(&tuned))?;
+        assert_eq!(v, w); // knobs change scheduling, never results
 
         // sortperm — index permutation that sorts xs
-        let perm = ak::sortperm(backend, &xs)?;
+        let perm = s.sortperm(&xs, None)?;
         println!("sortperm:         xs[perm[0]]={} (global min)", xs[perm[0] as usize]);
 
-        // reduce / mapreduce
-        let total = ak::reduce(backend, &xs, ak::ReduceKind::Add, 4096)?;
-        let maxsq = ak::mapreduce(backend, &xs, |x: i32| x.wrapping_mul(x), ak::ReduceKind::Max)?;
+        // reduce / mapreduce (switch_below is a Launch knob now)
+        let total = s.reduce(&xs, accelkern::algorithms::ReduceKind::Add,
+                             Some(&Launch::new().switch_below(4096)))?;
+        let maxsq = s.mapreduce(
+            &xs,
+            |x: i32| x.wrapping_mul(x),
+            accelkern::algorithms::ReduceKind::Max,
+            None,
+        )?;
         println!("reduce add:       {total}");
         println!("mapreduce max x²: {maxsq}");
 
         // accumulate (prefix scan)
-        let scans = ak::accumulate(backend, &xs[..8], true)?;
+        let scans = s.accumulate(&xs[..8], true, None)?;
         println!("accumulate[..8]:  {scans:?}");
 
         // searchsorted
         let needles = [v[0], v[v.len() / 2], v[v.len() - 1]];
-        let idx = ak::searchsorted_first(backend, &v, &needles)?;
+        let idx = s.searchsorted_first(&v, &needles, None)?;
         println!("searchsorted:     {idx:?}");
 
-        // any / all with early exit
+        // any / all with early exit — generic over dtypes now
         let fs: Vec<f32> = (0..100_000).map(|i| i as f32 / 1e5).collect();
         println!(
-            "any > 0.9999: {}   all > -1: {}",
-            ak::any_gt(backend, &fs, 0.9999)?,
-            ak::all_gt(backend, &fs, -1.0)?
+            "any > 0.9999: {}   all > -1: {}   any i32 > 0: {}",
+            s.any_gt(&fs, 0.9999f32, None)?,
+            s.all_gt(&fs, -1.0f32, None)?,
+            s.any_gt(&xs, 0i32, None)?,
         );
 
         // foreachindex — the paper's Algorithm 3 copy kernel
         let src: Vec<i32> = (0..1000).collect();
         let mut dst = vec![0i32; 1000];
-        ak::foreach::foreach_mut(backend, &mut dst, |i, d| *d = src[i]);
+        s.foreach_mut(&mut dst, |i, d| *d = src[i], None);
         assert_eq!(dst, src);
         println!("foreachindex:     copy kernel OK");
 
         // Table II arithmetic kernels
         let pts = points_f32(&mut Prng::new(7), 10_000);
-        let r = ak::rbf(backend, &pts)?;
+        let r = s.rbf(&pts, None)?;
         println!("rbf[0..3]:        {:?}", &r[..3]);
+
+        // The metrics sink every session carries.
+        println!(
+            "metrics:          {} calls, {} elems, scratch {}h/{}m",
+            s.metrics().calls(),
+            s.metrics().elems(),
+            s.metrics().scratch_hits(),
+            s.metrics().scratch_misses(),
+        );
     }
     println!("\nquickstart OK");
     Ok(())

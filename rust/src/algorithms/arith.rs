@@ -1,19 +1,25 @@
-//! Table II arithmetic kernels: Radial Basis Function (§III-A) and
-//! Lennard-Jones-Gauss potential (§III-B).
+//! Table II arithmetic kernel engines: Radial Basis Function (§III-A)
+//! and Lennard-Jones-Gauss potential (§III-B).
 //!
 //! Host variants mirror the paper's implementation matrix:
-//! * [`rbf`] / [`ljg`] — integer powers expanded to multiplications (what
+//! * `rbf` / `ljg` — integer powers expanded to multiplications (what
 //!   Julia emits; the "Julia Base" and "C (hand-written powf)" rows).
-//! * [`ljg_powf`] — calls `powf` like naive portable C; the paper found
+//! * `ljg_powf` — calls `powf` like naive portable C; the paper found
 //!   GCC/Clang emit 10 `powf` calls here, costing up to 5.7× on ARM. The
 //!   Table II bench reproduces that C-vs-Julia consistency story.
-//! * Threaded versions ("C OpenMP" / AK-CPU rows) via `Backend::Threaded`.
+//! * Threaded versions ("C OpenMP" / AK-CPU rows) via worker-count knobs.
 //! * Device versions run the Pallas artifacts (`DeviceOps::{rbf,ljg}_f32`).
+//!
+//! Dispatch lives on [`crate::session::Session::rbf`] /
+//! [`crate::session::Session::ljg`] /
+//! [`crate::session::Session::ljg_powf`]; this module keeps the host
+//! engines plus `#[deprecated]` free-function shims.
 
 use crate::backend::Backend;
+use crate::session::Session;
 
-/// Runtime LJG constants (passed at runtime so constant propagation can't
-/// fold them — paper §III-B).
+/// Runtime LJG constants (passed at runtime so constant propagation
+/// can't fold them — paper §III-B).
 #[derive(Clone, Copy, Debug)]
 pub struct LjgConsts {
     /// Well depth ε.
@@ -35,29 +41,37 @@ impl Default for LjgConsts {
 
 /// RBF over packed `(3, n)` coordinates `[x.., y.., z..]` → `(n,)`:
 /// `rbf[i] = exp(-1 / (1 - sqrt(x² + y² + z²)))` (paper Algorithm 4).
+#[deprecated(note = "use `Session::rbf` (`accelkern::session`)")]
 pub fn rbf(backend: &Backend, pts: &[f32]) -> anyhow::Result<Vec<f32>> {
-    anyhow::ensure!(pts.len() % 3 == 0, "(3, n) packed layout required");
-    let n = pts.len() / 3;
-    match backend {
-        Backend::Native => {
-            let mut out = vec![0.0f32; n];
-            rbf_range(pts, n, &mut out, 0..n);
-            Ok(out)
-        }
-        Backend::Threaded(t) => Ok(rbf_threaded(pts, n, *t)),
-        Backend::Device(dev) => dev.rbf_f32(pts),
-        // The (3, n) packed rows cannot split contiguously between two
-        // engines without a repack; the hybrid path runs on the host pool
-        // (co-processing covers the index-splittable primitives —
-        // DESIGN.md §10).
-        Backend::Hybrid(h) => Ok(rbf_threaded(pts, n, h.host_threads.max(1))),
-    }
+    Ok(Session::from_backend(backend.clone()).rbf(pts, None)?)
 }
 
-fn rbf_threaded(pts: &[f32], n: usize, threads: usize) -> Vec<f32> {
+/// LJG potential over packed `(3, n)` position arrays (Algorithm 5),
+/// integer powers expanded to multiplications.
+#[deprecated(note = "use `Session::ljg` (`accelkern::session`)")]
+pub fn ljg(backend: &Backend, p1: &[f32], p2: &[f32], c: LjgConsts) -> anyhow::Result<Vec<f32>> {
+    Ok(Session::from_backend(backend.clone()).ljg(p1, p2, c, None)?)
+}
+
+/// The naive-C variant: `powf(sigma/r, 6)` etc. — iterative libm powers,
+/// the pathology the paper measured (Table II "C" row, §III-B analysis).
+/// Host-only (no artifact is built for it; the AOT path always expands).
+#[deprecated(note = "use `Session::ljg_powf` (`accelkern::session`)")]
+pub fn ljg_powf(
+    backend: &Backend,
+    p1: &[f32],
+    p2: &[f32],
+    c: LjgConsts,
+) -> anyhow::Result<Vec<f32>> {
+    Ok(Session::from_backend(backend.clone()).ljg_powf(p1, p2, c, None)?)
+}
+
+/// The RBF host engine over `threads` workers (1 = the paper's
+/// single-thread rows).
+pub(crate) fn rbf_host(pts: &[f32], n: usize, threads: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; n];
-    let ranges = crate::backend::threaded::split_ranges(n, threads);
-    crate::backend::parallel_chunks(&mut out, threads, |ci, chunk| {
+    let ranges = crate::backend::threaded::split_ranges(n, threads.max(1));
+    crate::backend::parallel_chunks(&mut out, threads.max(1), |ci, chunk| {
         let r = ranges[ci].clone();
         rbf_range(pts, n, chunk, r);
     });
@@ -74,33 +88,11 @@ fn rbf_range(pts: &[f32], n: usize, out: &mut [f32], r: std::ops::Range<usize>) 
     }
 }
 
-/// LJG potential over packed `(3, n)` position arrays (Algorithm 5),
-/// integer powers expanded to multiplications.
-pub fn ljg(
-    backend: &Backend,
-    p1: &[f32],
-    p2: &[f32],
-    c: LjgConsts,
-) -> anyhow::Result<Vec<f32>> {
-    anyhow::ensure!(p1.len() == p2.len() && p1.len() % 3 == 0);
-    let n = p1.len() / 3;
-    match backend {
-        Backend::Native => {
-            let mut out = vec![0.0f32; n];
-            ljg_range(p1, p2, n, c, &mut out, 0..n);
-            Ok(out)
-        }
-        Backend::Threaded(t) => Ok(ljg_threaded(p1, p2, n, c, *t)),
-        Backend::Device(dev) => dev.ljg_f32(p1, p2, [c.epsilon, c.sigma, c.r0, c.cutoff]),
-        // Same packed-layout rule as `rbf`: hybrid runs on the host pool.
-        Backend::Hybrid(h) => Ok(ljg_threaded(p1, p2, n, c, h.host_threads.max(1))),
-    }
-}
-
-fn ljg_threaded(p1: &[f32], p2: &[f32], n: usize, c: LjgConsts, threads: usize) -> Vec<f32> {
+/// The expanded-powers LJG host engine over `threads` workers.
+pub(crate) fn ljg_host(p1: &[f32], p2: &[f32], n: usize, c: LjgConsts, threads: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; n];
-    let ranges = crate::backend::threaded::split_ranges(n, threads);
-    crate::backend::parallel_chunks(&mut out, threads, |ci, chunk| {
+    let ranges = crate::backend::threaded::split_ranges(n, threads.max(1));
+    crate::backend::parallel_chunks(&mut out, threads.max(1), |ci, chunk| {
         ljg_range(p1, p2, n, c, chunk, ranges[ci].clone());
     });
     out
@@ -134,12 +126,14 @@ fn ljg_range(
     }
 }
 
-/// The naive-C variant: `powf(sigma/r, 6)` etc. — iterative libm powers,
-/// the pathology the paper measured (Table II "C" row, §III-B analysis).
-/// Host-only (no artifact is built for it; the AOT path always expands).
-pub fn ljg_powf(backend: &Backend, p1: &[f32], p2: &[f32], c: LjgConsts) -> anyhow::Result<Vec<f32>> {
-    anyhow::ensure!(p1.len() == p2.len() && p1.len() % 3 == 0);
-    let n = p1.len() / 3;
+/// The naive-C (`powf`) LJG host engine over `threads` workers.
+pub(crate) fn ljg_powf_host(
+    p1: &[f32],
+    p2: &[f32],
+    n: usize,
+    c: LjgConsts,
+    threads: usize,
+) -> Vec<f32> {
     let body = |out: &mut [f32], r: std::ops::Range<usize>| {
         for (o, i) in out.iter_mut().zip(r) {
             let dx = p1[i] - p2[i];
@@ -149,8 +143,8 @@ pub fn ljg_powf(backend: &Backend, p1: &[f32], p2: &[f32], c: LjgConsts) -> anyh
             *o = if rad < c.cutoff {
                 let sr6 = (c.sigma / rad).powf(6.0);
                 let sr12 = (c.sigma / rad).powf(12.0);
-                let gauss = c.epsilon
-                    * (-(rad - c.r0).powf(2.0) / (2.0 * c.sigma.powf(2.0))).exp();
+                let gauss =
+                    c.epsilon * (-(rad - c.r0).powf(2.0) / (2.0 * c.sigma.powf(2.0))).exp();
                 4.0 * c.epsilon * (sr12 - sr6) - gauss
             } else {
                 0.0
@@ -158,31 +152,25 @@ pub fn ljg_powf(backend: &Backend, p1: &[f32], p2: &[f32], c: LjgConsts) -> anyh
         }
     };
     let mut out = vec![0.0f32; n];
-    let threaded = |out: &mut Vec<f32>, t: usize| {
-        let ranges = crate::backend::threaded::split_ranges(n, t);
-        crate::backend::parallel_chunks(out, t, |ci, chunk| {
-            body(chunk, ranges[ci].clone());
-        });
-    };
-    match backend {
-        Backend::Native | Backend::Device(_) => body(&mut out, 0..n),
-        Backend::Threaded(t) => threaded(&mut out, *t),
-        Backend::Hybrid(h) => threaded(&mut out, h.host_threads.max(1)),
-    }
-    Ok(out)
+    let ranges = crate::backend::threaded::split_ranges(n, threads.max(1));
+    crate::backend::parallel_chunks(&mut out, threads.max(1), |ci, chunk| {
+        body(chunk, ranges[ci].clone());
+    });
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::session::AkError;
     use crate::util::Prng;
     use crate::workload::{points_f32, positions_f32};
 
     #[test]
     fn rbf_native_vs_threaded() {
         let pts = points_f32(&mut Prng::new(1), 10_000);
-        let a = rbf(&Backend::Native, &pts).unwrap();
-        let b = rbf(&Backend::Threaded(4), &pts).unwrap();
+        let a = Session::native().rbf(&pts, None).unwrap();
+        let b = Session::threaded(4).rbf(&pts, None).unwrap();
         assert_eq!(a.len(), 10_000);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x, y);
@@ -197,8 +185,9 @@ mod tests {
         let p1 = positions_f32(&mut Prng::new(2), 5000, 4.0);
         let p2 = positions_f32(&mut Prng::new(3), 5000, 4.0);
         let c = LjgConsts::default();
-        let a = ljg(&Backend::Native, &p1, &p2, c).unwrap();
-        let b = ljg_powf(&Backend::Native, &p1, &p2, c).unwrap();
+        let s = Session::native();
+        let a = s.ljg(&p1, &p2, c, None).unwrap();
+        let b = s.ljg_powf(&p1, &p2, c, None).unwrap();
         for (i, (x, y)) in a.iter().zip(&b).enumerate() {
             assert!((x - y).abs() <= 2e-3 * x.abs().max(1.0), "i={i}: {x} vs {y}");
         }
@@ -209,7 +198,7 @@ mod tests {
         // Two atoms farther apart than cutoff must contribute 0.
         let p1 = vec![0.0f32, 0.0, 0.0]; // one atom at origin (3,1) layout
         let p2 = vec![10.0f32, 0.0, 0.0];
-        let out = ljg(&Backend::Native, &p1, &p2, LjgConsts::default()).unwrap();
+        let out = Session::native().ljg(&p1, &p2, LjgConsts::default(), None).unwrap();
         assert_eq!(out, vec![0.0]);
     }
 
@@ -218,13 +207,17 @@ mod tests {
         let c = LjgConsts::default();
         let p1 = vec![0.0f32, 0.0, 0.0];
         let p2 = vec![1.2f32, 0.0, 0.0]; // inside cutoff
-        let out = ljg(&Backend::Native, &p1, &p2, c).unwrap();
+        let out = Session::native().ljg(&p1, &p2, c, None).unwrap();
         assert!(out[0] != 0.0);
     }
 
     #[test]
-    fn rejects_ragged_layouts() {
-        assert!(rbf(&Backend::Native, &[1.0, 2.0]).is_err());
-        assert!(ljg(&Backend::Native, &[1.0; 3], &[1.0; 6], LjgConsts::default()).is_err());
+    fn rejects_ragged_layouts_with_typed_errors() {
+        let s = Session::native();
+        assert!(matches!(s.rbf(&[1.0, 2.0], None), Err(AkError::ShapeMismatch { .. })));
+        assert!(matches!(
+            s.ljg(&[1.0; 3], &[1.0; 6], LjgConsts::default(), None),
+            Err(AkError::ShapeMismatch { .. })
+        ));
     }
 }

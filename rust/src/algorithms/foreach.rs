@@ -4,90 +4,70 @@
 //! kernels (rbf/ljg in `arith`), since arbitrary closures cannot cross
 //! the transpile-once boundary — our `make artifacts` is the analog of
 //! Julia's kernel compilation at first use.
+//!
+//! Dispatch lives on [`crate::session::Session::foreachindex`] /
+//! [`crate::session::Session::foreach_mut`]; this module keeps the
+//! `#[deprecated]` free-function shims.
 
 use crate::backend::Backend;
+use crate::session::Session;
 
 /// Run `f(i)` for every `i in 0..len`, statically partitioned over the
-/// backend's threads (one thread per chunk, matching the paper's CPU
-/// scheduling; GPUs run one iteration per thread which we emulate by
-/// vectorised artifacts instead).
+/// backend's threads.
+#[deprecated(note = "use `Session::foreachindex` (`accelkern::session`)")]
 pub fn foreachindex<F>(backend: &Backend, len: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
-    match backend {
-        Backend::Native | Backend::Device(_) => {
-            for i in 0..len {
-                f(i);
-            }
-        }
-        Backend::Threaded(t) => {
-            crate::backend::parallel_for_each_chunk(len, *t, |r| {
-                for i in r {
-                    f(i);
-                }
-            });
-        }
-        // Co-processing: host thread pool and device-engine emulation walk
-        // disjoint index shards concurrently (DESIGN.md §10).
-        Backend::Hybrid(h) => crate::hybrid::co_foreachindex(h, len, f),
-    }
+    Session::from_backend(backend.clone()).foreachindex(len, f, None)
 }
 
-/// Mutating variant over a slice: `f(i, &mut xs[i])` with disjoint chunks
-/// (the dst/src copy-kernel pattern of paper Algorithm 3).
+/// Mutating variant over a slice: `f(i, &mut xs[i])` with disjoint
+/// chunks (the dst/src copy-kernel pattern of paper Algorithm 3).
+#[deprecated(note = "use `Session::foreach_mut` (`accelkern::session`)")]
 pub fn foreach_mut<T: Send, F>(backend: &Backend, xs: &mut [T], f: F)
 where
     F: Fn(usize, &mut T) + Sync,
 {
-    match backend {
-        Backend::Native | Backend::Device(_) => {
-            for (i, x) in xs.iter_mut().enumerate() {
-                f(i, x);
-            }
-        }
-        Backend::Threaded(t) => {
-            let ranges = crate::backend::threaded::split_ranges(xs.len(), *t);
-            crate::backend::parallel_chunks(xs, *t, |ci, chunk| {
-                let base = ranges[ci].start;
-                for (j, x) in chunk.iter_mut().enumerate() {
-                    f(base + j, x);
-                }
-            });
-        }
-        Backend::Hybrid(h) => crate::hybrid::co_foreach_mut(h, xs, f),
-    }
+    Session::from_backend(backend.clone()).foreach_mut(xs, f, None)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::session::Launch;
     use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn visits_every_index_once() {
-        for b in [Backend::Native, Backend::Threaded(4)] {
-            let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
-            foreachindex(&b, 1000, |i| {
-                hits[i].fetch_add(1, Ordering::Relaxed);
-            });
-            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "{b:?}");
+        for s in [Session::native(), Session::threaded(4)] {
+            let hits: Vec<AtomicU64> = (0..10_000).map(|_| AtomicU64::new(0)).collect();
+            s.foreachindex(
+                10_000,
+                |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                },
+                None,
+            );
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "{s:?}");
         }
     }
 
     #[test]
     fn copy_kernel_algorithm3() {
-        // The paper's copy_parallel!: dst[i] = src[i].
+        // The paper's copy_parallel!: dst[i] = src[i]. Forced parallel
+        // via the threshold knob so the chunked path is exercised.
         let src: Vec<i32> = (0..5000).collect();
-        for b in [Backend::Native, Backend::Threaded(3)] {
+        let l = Launch::new().prefer_parallel_threshold(64);
+        for s in [Session::native(), Session::threaded(3)] {
             let mut dst = vec![0i32; 5000];
-            foreach_mut(&b, &mut dst, |i, d| *d = src[i]);
-            assert_eq!(dst, src, "{b:?}");
+            s.foreach_mut(&mut dst, |i, d| *d = src[i], Some(&l));
+            assert_eq!(dst, src, "{s:?}");
         }
     }
 
     #[test]
     fn zero_len() {
-        foreachindex(&Backend::Threaded(4), 0, |_| panic!("must not run"));
+        Session::threaded(4).foreachindex(0, |_| panic!("must not run"), None);
     }
 }

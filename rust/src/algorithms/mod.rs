@@ -1,24 +1,31 @@
-//! The AcceleratedKernels algorithm suite (paper §II-B), backend-generic.
+//! The AcceleratedKernels algorithm suite (paper §II-B): host engines,
+//! numeric glue and the *deprecated* free-function surface.
 //!
-//! One function family per paper primitive, each dispatching over
-//! [`crate::backend::Backend`]:
+//! The dispatching API now lives on [`crate::session::Session`] — one
+//! method per paper primitive, each taking an optional
+//! [`crate::session::Launch`] of per-call tuning knobs and returning a
+//! typed [`crate::session::AkError`]:
 //!
-//! | paper                        | here                                   |
-//! |------------------------------|----------------------------------------|
-//! | `foreachindex`               | [`foreach::foreachindex`]              |
-//! | `merge_sort`                 | [`sort::sort`]                         |
-//! | `merge_sort_by_key`          | [`sort::sort_by_key`]                  |
-//! | `sortperm` / `_lowmem`       | [`sortperm::sortperm`] / `_lowmem`     |
-//! | `reduce`                     | [`reduce::reduce`] (+ `switch_below`)  |
-//! | `mapreduce`                  | [`reduce::mapreduce`]                  |
-//! | `accumulate`                 | [`scan::accumulate`]                   |
-//! | `searchsortedfirst/last`     | [`search::searchsorted_first/last`]    |
-//! | `any` / `all`                | [`predicates::any_gt/all_gt`] etc.     |
-//! | Table II arithmetic kernels  | [`arith::rbf`] / [`arith::ljg`]        |
+//! | paper                        | session method                           |
+//! |------------------------------|------------------------------------------|
+//! | `foreachindex`               | `Session::foreachindex` / `foreach_mut`  |
+//! | `merge_sort`                 | `Session::sort`                          |
+//! | `merge_sort_by_key`          | `Session::sort_by_key`                   |
+//! | `sortperm` / `_lowmem`       | `Session::sortperm` / `sortperm_lowmem`  |
+//! | `reduce`                     | `Session::reduce` (+ `switch_below`)     |
+//! | `mapreduce`                  | `Session::mapreduce`                     |
+//! | `accumulate`                 | `Session::accumulate`                    |
+//! | `searchsortedfirst/last`     | `Session::searchsorted_first/last`       |
+//! | `any` / `all`                | `Session::any_gt/all_gt` + `any_by/all_by` |
+//! | Table II arithmetic kernels  | `Session::rbf` / `Session::ljg`          |
 //!
-//! Temporary buffers are exposed or internally reused, and every
-//! algorithm's extra memory is a predictable function of the input size
-//! (paper §II-B's closing requirement).
+//! The pre-session free functions remain here as `#[deprecated]` shims
+//! delegating to a per-call session over the given backend, so external
+//! code migrates at its own pace; in-tree code is shim-free (CI denies
+//! `deprecated`). Temporary buffers are exposed or internally reused
+//! (`Launch::reuse_scratch`), and every algorithm's extra memory is a
+//! predictable function of the input size (paper §II-B's closing
+//! requirement).
 
 pub mod arith;
 pub mod foreach;
@@ -29,11 +36,21 @@ pub mod search;
 pub mod sort;
 pub mod sortperm;
 
-pub use arith::{ljg, ljg_powf, rbf, LjgConsts};
+#[allow(deprecated)]
+pub use arith::{ljg, ljg_powf, rbf};
+pub use arith::LjgConsts;
+#[allow(deprecated)]
 pub use foreach::foreachindex;
+#[allow(deprecated)]
 pub use predicates::{all_gt, any_gt};
-pub use reduce::{mapreduce, reduce, ReduceKind};
+#[allow(deprecated)]
+pub use reduce::{mapreduce, reduce};
+pub use reduce::ReduceKind;
+#[allow(deprecated)]
 pub use scan::accumulate;
+#[allow(deprecated)]
 pub use search::{searchsorted_first, searchsorted_last};
+#[allow(deprecated)]
 pub use sort::{sort, sort_by_key};
+#[allow(deprecated)]
 pub use sortperm::{sortperm, sortperm_lowmem};

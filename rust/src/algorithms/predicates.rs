@@ -1,66 +1,36 @@
-//! `any` / `all` predicates (paper §II-B) with early exit.
+//! `any` / `all` predicate engines (paper §II-B) with early exit.
 //!
 //! The paper ships two algorithms: a concurrent-write one (all threads
 //! race to set a flag — well-defined on modern GPUs) and a conservative
 //! mapreduce for older hardware. Host backends here use the racing-flag
-//! formulation (AtomicBool, relaxed — any thread may publish `true`);
-//! the device path evaluates chunk predicates with host-side early exit
-//! (see `DeviceOps::any_gt_f32`).
+//! formulation through one shared reducer (`host_any`); the device
+//! path evaluates chunk predicates with host-side early exit for every
+//! dtype with an `any_gt`/`all_gt` artifact family (no longer f32-only).
+//!
+//! Dispatch lives on [`crate::session::Session::any_gt`] /
+//! [`crate::session::Session::all_gt`] /
+//! [`crate::session::Session::any_by`] /
+//! [`crate::session::Session::all_by`]; this module keeps the reducer
+//! plus `#[deprecated]` free-function shims (f32-typed, as before).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::backend::Backend;
+use crate::session::Session;
 
-/// `any(x > threshold)` over f32 (the artifact-covered predicate).
-pub fn any_gt(backend: &Backend, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
-    match backend {
-        Backend::Native => Ok(xs.iter().any(|&x| x > threshold)),
-        Backend::Threaded(t) => Ok(host_any(xs, *t, |x| x > threshold)),
-        Backend::Device(dev) => dev.any_gt_f32(xs, threshold),
-        Backend::Hybrid(h) => crate::hybrid::co_any_gt(h, xs, threshold),
-    }
-}
-
-/// `all(x > threshold)` over f32.
-pub fn all_gt(backend: &Backend, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
-    match backend {
-        Backend::Native => Ok(xs.iter().all(|&x| x > threshold)),
-        Backend::Threaded(t) => Ok(!host_any(xs, *t, |x| x <= threshold)),
-        Backend::Device(dev) => dev.all_gt_f32(xs, threshold),
-        Backend::Hybrid(h) => crate::hybrid::co_all_gt(h, xs, threshold),
-    }
-}
-
-/// Generic host `any` with an arbitrary predicate (the paper's `any(f, itr)`).
-pub fn any_by<T: Sync + Copy, P: Fn(&T) -> bool + Sync>(
-    backend: &Backend,
+/// The one short-circuiting reducer behind every host predicate
+/// (`any_gt`, `all_gt`, `any_by`, `all_by`): racing-flag parallel any.
+/// Every worker checks the shared flag periodically and stops early once
+/// someone published `true` — the concurrent-write algorithm of the
+/// paper, with the benign race made explicit through an atomic.
+/// `seq_below` gates the fan-out (a `Launch` knob at the session layer).
+pub(crate) fn host_any<T: Sync + Copy>(
     xs: &[T],
-    pred: P,
+    threads: usize,
+    seq_below: usize,
+    pred: impl Fn(T) -> bool + Sync,
 ) -> bool {
-    match backend {
-        Backend::Native | Backend::Device(_) => xs.iter().any(|x| pred(x)),
-        Backend::Threaded(t) => host_any(xs, *t, |x| pred(&x)),
-        // Arbitrary predicates cannot cross the AOT boundary; the hybrid
-        // generic path runs on the host pool (DESIGN.md §10).
-        Backend::Hybrid(h) => host_any(xs, h.host_threads.max(1), |x| pred(&x)),
-    }
-}
-
-/// Generic host `all`.
-pub fn all_by<T: Sync + Copy, P: Fn(&T) -> bool + Sync>(
-    backend: &Backend,
-    xs: &[T],
-    pred: P,
-) -> bool {
-    !any_by(backend, xs, |x| !pred(x))
-}
-
-/// Racing-flag parallel any: every worker checks the shared flag
-/// periodically and stops early once someone published `true` — the
-/// concurrent-write algorithm of the paper, with the benign-race made
-/// explicit through an atomic.
-fn host_any<T: Sync + Copy>(xs: &[T], threads: usize, pred: impl Fn(T) -> bool + Sync) -> bool {
-    if threads <= 1 || xs.len() < 4096 {
+    if threads <= 1 || xs.len() < seq_below.max(2) {
         return xs.iter().any(|&x| pred(x));
     }
     let found = AtomicBool::new(false);
@@ -80,6 +50,39 @@ fn host_any<T: Sync + Copy>(xs: &[T], threads: usize, pred: impl Fn(T) -> bool +
     found.load(Ordering::Relaxed)
 }
 
+/// `any(x > threshold)` over f32.
+#[deprecated(note = "use `Session::any_gt` (`accelkern::session`) — generic over dtypes")]
+pub fn any_gt(backend: &Backend, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
+    Ok(Session::from_backend(backend.clone()).any_gt(xs, threshold, None)?)
+}
+
+/// `all(x > threshold)` over f32.
+#[deprecated(note = "use `Session::all_gt` (`accelkern::session`) — generic over dtypes")]
+pub fn all_gt(backend: &Backend, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
+    Ok(Session::from_backend(backend.clone()).all_gt(xs, threshold, None)?)
+}
+
+/// Generic host `any` with an arbitrary predicate (the paper's
+/// `any(f, itr)`).
+#[deprecated(note = "use `Session::any_by` (`accelkern::session`)")]
+pub fn any_by<T: Sync + Copy, P: Fn(&T) -> bool + Sync>(
+    backend: &Backend,
+    xs: &[T],
+    pred: P,
+) -> bool {
+    Session::from_backend(backend.clone()).any_by(xs, pred, None)
+}
+
+/// Generic host `all`.
+#[deprecated(note = "use `Session::all_by` (`accelkern::session`)")]
+pub fn all_by<T: Sync + Copy, P: Fn(&T) -> bool + Sync>(
+    backend: &Backend,
+    xs: &[T],
+    pred: P,
+) -> bool {
+    Session::from_backend(backend.clone()).all_by(xs, pred, None)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,29 +90,56 @@ mod tests {
     #[test]
     fn any_all_basic() {
         let xs: Vec<f32> = (0..10_000).map(|i| i as f32 / 10_000.0).collect();
-        for b in [Backend::Native, Backend::Threaded(4)] {
-            assert!(any_gt(&b, &xs, 0.9995).unwrap());
-            assert!(!any_gt(&b, &xs, 2.0).unwrap());
-            assert!(all_gt(&b, &xs, -0.1).unwrap());
-            assert!(!all_gt(&b, &xs, 0.5).unwrap());
+        for s in [Session::native(), Session::threaded(4)] {
+            assert!(s.any_gt(&xs, 0.9995f32, None).unwrap());
+            assert!(!s.any_gt(&xs, 2.0f32, None).unwrap());
+            assert!(s.all_gt(&xs, -0.1f32, None).unwrap());
+            assert!(!s.all_gt(&xs, 0.5f32, None).unwrap());
+        }
+    }
+
+    #[test]
+    fn generic_dtypes_beyond_f32() {
+        // The satellite fix: one generic reducer, every sortable dtype.
+        let xs: Vec<i64> = (0..8192).collect();
+        for s in [Session::native(), Session::threaded(4)] {
+            assert!(s.any_gt(&xs, 8190i64, None).unwrap());
+            assert!(!s.any_gt(&xs, 8191i64, None).unwrap());
+            assert!(s.all_gt(&xs, -1i64, None).unwrap());
+            assert!(!s.all_gt(&xs, 0i64, None).unwrap());
+        }
+        let ys: Vec<i16> = vec![3, 7, -2];
+        assert!(Session::native().any_gt(&ys, 6i16, None).unwrap());
+    }
+
+    #[test]
+    fn nan_fails_all_gt_on_every_engine() {
+        // IEEE semantics: NaN > t is false, so `all` must be false. The
+        // pre-session threaded path disagreed with native here.
+        let mut xs = vec![1.0f64; 10_000];
+        xs[7777] = f64::NAN;
+        for s in [Session::native(), Session::threaded(4)] {
+            assert!(!s.all_gt(&xs, 0.0f64, None).unwrap(), "{s:?}");
+            assert!(!s.any_gt(&xs, 2.0f64, None).unwrap(), "{s:?}");
         }
     }
 
     #[test]
     fn generic_predicates() {
         let xs: Vec<i64> = (0..5000).collect();
-        for b in [Backend::Native, Backend::Threaded(4)] {
-            assert!(any_by(&b, &xs, |&x| x == 4999));
-            assert!(!any_by(&b, &xs, |&x| x < 0));
-            assert!(all_by(&b, &xs, |&x| x >= 0));
-            assert!(!all_by(&b, &xs, |&x| x % 2 == 0));
+        for s in [Session::native(), Session::threaded(4)] {
+            assert!(s.any_by(&xs, |&x| x == 4999, None));
+            assert!(!s.any_by(&xs, |&x| x < 0, None));
+            assert!(s.all_by(&xs, |&x| x >= 0, None));
+            assert!(!s.all_by(&xs, |&x| x % 2 == 0, None));
         }
     }
 
     #[test]
     fn empty_semantics() {
         let e: Vec<f32> = vec![];
-        assert!(!any_gt(&Backend::Native, &e, 0.0).unwrap());
-        assert!(all_gt(&Backend::Native, &e, 0.0).unwrap()); // vacuous truth
+        let s = Session::native();
+        assert!(!s.any_gt(&e, 0.0f32, None).unwrap());
+        assert!(s.all_gt(&e, 0.0f32, None).unwrap()); // vacuous truth
     }
 }

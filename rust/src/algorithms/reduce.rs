@@ -1,11 +1,17 @@
-//! `reduce` / `mapreduce` (paper §II-B).
+//! `reduce` / `mapreduce` engines (paper §II-B).
 //!
 //! The device path reduces per-tile on the accelerator; the
-//! `switch_below` argument (paper's device-sync-masking optimisation)
+//! `switch_below` launch knob (paper's device-sync-masking optimisation)
 //! routes small inputs through the partials artifact and finishes the
 //! fold on the host, skipping the device-side tree pass.
+//!
+//! Dispatch lives on [`crate::session::Session::reduce`] /
+//! [`crate::session::Session::mapreduce`]; this module keeps the
+//! numeric glue ([`Reducible`]), the host folds and `#[deprecated]`
+//! free-function shims.
 
 use crate::backend::{Backend, DeviceKey};
+use crate::session::{Launch, Session};
 
 /// Supported reduction operators.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -19,7 +25,8 @@ pub enum ReduceKind {
 }
 
 impl ReduceKind {
-    fn op_name(self) -> &'static str {
+    /// Artifact-family suffix of the operator (`reduce_{add,min,max}`).
+    pub(crate) fn op_name(self) -> &'static str {
         match self {
             ReduceKind::Add => "add",
             ReduceKind::Min => "min",
@@ -85,49 +92,25 @@ reducible_int!(i128);
 reducible_float!(f32);
 reducible_float!(f64);
 
-/// Reduce `xs` with `kind`. `switch_below`: inputs with at most this many
-/// elements finish the fold on the host (device partials only).
-///
-/// ```
-/// use accelkern::algorithms::{reduce, ReduceKind};
-/// use accelkern::backend::Backend;
-/// let xs = vec![3i64, -1, 4, 1, 5];
-/// assert_eq!(reduce(&Backend::Native, &xs, ReduceKind::Add, 0).unwrap(), 12);
-/// assert_eq!(reduce(&Backend::Threaded(2), &xs, ReduceKind::Min, 0).unwrap(), -1);
-/// assert_eq!(reduce(&Backend::Native, &xs, ReduceKind::Max, 0).unwrap(), 5);
-/// ```
+/// Reduce `xs` with `kind`. `switch_below`: inputs with at most this
+/// many elements finish the fold on the host (device partials only) —
+/// forwarded as the `Launch::switch_below` knob.
+#[deprecated(note = "use `Session::reduce` with `Launch::switch_below` (`accelkern::session`)")]
 pub fn reduce<K: Reducible>(
     backend: &Backend,
     xs: &[K],
     kind: ReduceKind,
     switch_below: usize,
 ) -> anyhow::Result<K> {
-    match backend {
-        Backend::Native => Ok(host_reduce(xs, kind)),
-        Backend::Threaded(t) => {
-            let partials =
-                crate::backend::parallel_for_each_chunk(xs.len(), *t, |r| host_reduce(&xs[r], kind));
-            Ok(partials.into_iter().fold(K::identity(kind), |a, b| K::fold(kind, a, b)))
-        }
-        // Co-processing: both engines reduce disjoint shards concurrently,
-        // partials fold on the host (DESIGN.md §10).
-        Backend::Hybrid(h) => crate::hybrid::co_reduce(h, xs, kind, switch_below),
-        Backend::Device(dev) => {
-            if !K::XLA {
-                return Ok(host_reduce(xs, kind));
-            }
-            if kind == ReduceKind::Add && xs.len() <= switch_below {
-                // switch_below: device emits per-tile partials, host folds.
-                return dev.reduce_partials_add_shim(xs);
-            }
-            dev.reduce(xs, kind.op_name(), K::identity(kind), |a, b| K::fold(kind, a, b))
-        }
-    }
+    let l = Launch::new().switch_below(switch_below);
+    Ok(Session::from_backend(backend.clone()).reduce(xs, kind, Some(&l))?)
 }
 
 /// `mapreduce(f, op, xs)`: host closures on host backends; the device
-/// path exposes the AOT-compiled named maps (paper: arbitrary lambdas are
-/// inlined at transpile time — our transpile time is `make artifacts`).
+/// path exposes the AOT-compiled named maps (paper: arbitrary lambdas
+/// are inlined at transpile time — our transpile time is
+/// `make artifacts`).
+#[deprecated(note = "use `Session::mapreduce` (`accelkern::session`)")]
 pub fn mapreduce<K: Reducible, M>(
     backend: &Backend,
     xs: &[K],
@@ -137,41 +120,23 @@ pub fn mapreduce<K: Reducible, M>(
 where
     M: Fn(K) -> K + Sync,
 {
-    match backend {
-        Backend::Native => Ok(host_mapreduce(xs, &map, kind)),
-        Backend::Threaded(t) => {
-            let partials = crate::backend::parallel_for_each_chunk(xs.len(), *t, |r| {
-                host_mapreduce(&xs[r], &map, kind)
-            });
-            Ok(partials.into_iter().fold(K::identity(kind), |a, b| K::fold(kind, a, b)))
-        }
-        // Arbitrary host closures cannot cross the AOT boundary; the
-        // device variant is the named-map artifact (`mapreduce_sumsq`
-        // etc., see `DeviceOps`). Host-execute here.
-        Backend::Device(_) => Ok(host_mapreduce(xs, &map, kind)),
-        // Same AOT-boundary rule: hybrid mapreduce runs on the host pool.
-        Backend::Hybrid(h) => {
-            let t = h.host_threads.max(1);
-            let partials = crate::backend::parallel_for_each_chunk(xs.len(), t, |r| {
-                host_mapreduce(&xs[r], &map, kind)
-            });
-            Ok(partials.into_iter().fold(K::identity(kind), |a, b| K::fold(kind, a, b)))
-        }
-    }
+    Ok(Session::from_backend(backend.clone()).mapreduce(xs, map, kind, None)?)
 }
 
-fn host_reduce<K: Reducible>(xs: &[K], kind: ReduceKind) -> K {
+/// Sequential fold over the operator (the per-chunk engine).
+pub(crate) fn host_reduce<K: Reducible>(xs: &[K], kind: ReduceKind) -> K {
     xs.iter().copied().fold(K::identity(kind), |a, b| K::fold(kind, a, b))
 }
 
-fn host_mapreduce<K: Reducible, M: Fn(K) -> K>(xs: &[K], map: &M, kind: ReduceKind) -> K {
+/// Sequential map+fold (the per-chunk `mapreduce` engine).
+pub(crate) fn host_mapreduce<K: Reducible, M: Fn(K) -> K>(xs: &[K], map: &M, kind: ReduceKind) -> K {
     xs.iter().copied().map(map).fold(K::identity(kind), |a, b| K::fold(kind, a, b))
 }
 
-// Small shim so `reduce` can call the partials path without naming the
-// Add/Default bounds at the call site.
+// Small shim so the session `reduce` can call the partials path without
+// naming the Add/Default bounds at the call site.
 impl crate::backend::DeviceOps {
-    fn reduce_partials_add_shim<K: Reducible>(&self, xs: &[K]) -> anyhow::Result<K> {
+    pub(crate) fn reduce_partials_add_shim<K: Reducible>(&self, xs: &[K]) -> anyhow::Result<K> {
         // Only Add reaches here; identity(Add) is the additive zero.
         let mut acc = K::identity(ReduceKind::Add);
         // Reuse the generic reduce with op add on partials artifacts when
@@ -217,26 +182,35 @@ mod tests {
     #[test]
     fn host_reduce_matches_iter() {
         let xs: Vec<i64> = generate(&mut Prng::new(1), Distribution::Uniform, 10_000);
-        for b in [Backend::Native, Backend::Threaded(4)] {
-            let sum = reduce(&b, &xs, ReduceKind::Add, 0).unwrap();
+        for s in [Session::native(), Session::threaded(4)] {
+            let sum = s.reduce(&xs, ReduceKind::Add, None).unwrap();
             let want: i64 = xs.iter().fold(0i64, |a, &b| a.wrapping_add(b));
-            assert_eq!(sum, want, "{b:?}");
-            assert_eq!(reduce(&b, &xs, ReduceKind::Min, 0).unwrap(), *xs.iter().min().unwrap());
-            assert_eq!(reduce(&b, &xs, ReduceKind::Max, 0).unwrap(), *xs.iter().max().unwrap());
+            assert_eq!(sum, want, "{s:?}");
+            assert_eq!(
+                s.reduce(&xs, ReduceKind::Min, None).unwrap(),
+                *xs.iter().min().unwrap()
+            );
+            assert_eq!(
+                s.reduce(&xs, ReduceKind::Max, None).unwrap(),
+                *xs.iter().max().unwrap()
+            );
         }
     }
 
     #[test]
     fn empty_input_identity() {
         let e: Vec<f32> = vec![];
-        assert_eq!(reduce(&Backend::Native, &e, ReduceKind::Add, 0).unwrap(), 0.0);
-        assert_eq!(reduce(&Backend::Native, &e, ReduceKind::Min, 0).unwrap(), f32::INFINITY);
+        let s = Session::native();
+        assert_eq!(s.reduce(&e, ReduceKind::Add, None).unwrap(), 0.0);
+        assert_eq!(s.reduce(&e, ReduceKind::Min, None).unwrap(), f32::INFINITY);
     }
 
     #[test]
     fn mapreduce_square_sum() {
         let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        let got = mapreduce(&Backend::Threaded(3), &xs, |x| x * x, ReduceKind::Add).unwrap();
+        let got = Session::threaded(3)
+            .mapreduce(&xs, |x| x * x, ReduceKind::Add, None)
+            .unwrap();
         let want: f64 = xs.iter().map(|x| x * x).sum();
         assert!((got - want).abs() < 1e-9 * want);
     }
@@ -245,6 +219,20 @@ mod tests {
     fn i128_host_everywhere() {
         let xs: Vec<i128> = generate(&mut Prng::new(2), Distribution::Uniform, 1000);
         let want: i128 = xs.iter().fold(0i128, |a, &b| a.wrapping_add(b));
-        assert_eq!(reduce(&Backend::Native, &xs, ReduceKind::Add, 0).unwrap(), want);
+        assert_eq!(Session::native().reduce(&xs, ReduceKind::Add, None).unwrap(), want);
+    }
+
+    #[test]
+    fn reduce_knobs_do_not_change_results() {
+        let xs: Vec<i64> = generate(&mut Prng::new(3), Distribution::Uniform, 50_000);
+        let want = Session::native().reduce(&xs, ReduceKind::Add, None).unwrap();
+        let s = Session::threaded(8);
+        for l in [
+            Launch::new().max_tasks(2),
+            Launch::new().min_elems_per_task(20_000),
+            Launch::new().prefer_parallel_threshold(usize::MAX),
+        ] {
+            assert_eq!(s.reduce(&xs, ReduceKind::Add, Some(&l)).unwrap(), want, "{l:?}");
+        }
     }
 }

@@ -1,10 +1,15 @@
-//! `accumulate` — inclusive/exclusive prefix scan (paper §II-B).
+//! `accumulate` — inclusive/exclusive prefix-scan engines (paper §II-B).
 //!
 //! Host paths implement the same three-phase block scan the device
 //! artifact uses (per-chunk scan, carry scan, carry application), so the
 //! threaded variant parallelises exactly like the paper's GPU algorithm.
+//!
+//! Dispatch lives on [`crate::session::Session::accumulate`]; this
+//! module keeps the scan glue ([`ScanAdd`]), the host engines and a
+//! `#[deprecated]` free-function shim.
 
 use crate::backend::{Backend, DeviceKey};
+use crate::session::Session;
 
 /// Additive scan glue (the artifact family covers op=add; host min/max
 /// scans are available through the generic `accumulate_by`).
@@ -38,26 +43,13 @@ impl ScanAdd for f64 {
 }
 
 /// Prefix-sum of `xs`; `inclusive` selects the scan flavour.
+#[deprecated(note = "use `Session::accumulate` (`accelkern::session`)")]
 pub fn accumulate<K: ScanAdd + std::ops::Add<Output = K>>(
     backend: &Backend,
     xs: &[K],
     inclusive: bool,
 ) -> anyhow::Result<Vec<K>> {
-    match backend {
-        Backend::Native => Ok(host_scan(xs, inclusive)),
-        Backend::Threaded(t) => Ok(threaded_scan(xs, inclusive, *t)),
-        Backend::Device(dev) => {
-            if K::XLA {
-                dev.scan_add(xs, inclusive)
-            } else {
-                Ok(host_scan(xs, inclusive))
-            }
-        }
-        // Carries serialise the chunk recombination, so co-processing buys
-        // nothing here: the hybrid scan runs on the host pool
-        // (DESIGN.md §10).
-        Backend::Hybrid(h) => Ok(threaded_scan(xs, inclusive, h.host_threads.max(1))),
-    }
+    Ok(Session::from_backend(backend.clone()).accumulate(xs, inclusive, None)?)
 }
 
 /// Generic-operator host scan (`accumulate(op, ...)` in the paper; the
@@ -82,13 +74,21 @@ pub fn accumulate_by<K: Copy, F: Fn(K, K) -> K>(
     out
 }
 
-fn host_scan<K: ScanAdd>(xs: &[K], inclusive: bool) -> Vec<K> {
+/// Sequential additive scan (the per-chunk engine).
+pub(crate) fn host_scan<K: ScanAdd>(xs: &[K], inclusive: bool) -> Vec<K> {
     accumulate_by(xs, K::default(), K::add, inclusive)
 }
 
-fn threaded_scan<K: ScanAdd>(xs: &[K], inclusive: bool, threads: usize) -> Vec<K> {
+/// The three-phase threaded block scan. `seq_below` gates the fan-out
+/// (a `Launch` knob at the session layer).
+pub(crate) fn threaded_scan<K: ScanAdd>(
+    xs: &[K],
+    inclusive: bool,
+    threads: usize,
+    seq_below: usize,
+) -> Vec<K> {
     let n = xs.len();
-    if threads <= 1 || n < 4096 {
+    if threads <= 1 || n < seq_below.max(2) {
         return host_scan(xs, inclusive);
     }
     let ranges = crate::backend::threaded::split_ranges(n, threads);
@@ -133,12 +133,12 @@ mod tests {
     #[test]
     fn inclusive_matches_reference() {
         let xs: Vec<i64> = generate(&mut Prng::new(1), Distribution::Uniform, 9001);
-        for b in [Backend::Native, Backend::Threaded(4)] {
-            let got = accumulate(&b, &xs, true).unwrap();
+        for s in [Session::native(), Session::threaded(4)] {
+            let got = s.accumulate(&xs, true, None).unwrap();
             let mut acc = 0i64;
             for (i, &x) in xs.iter().enumerate() {
                 acc = acc.wrapping_add(x);
-                assert_eq!(got[i], acc, "{b:?} at {i}");
+                assert_eq!(got[i], acc, "{s:?} at {i}");
             }
         }
     }
@@ -146,9 +146,9 @@ mod tests {
     #[test]
     fn exclusive_shifts() {
         let xs = vec![1i32, 2, 3, 4];
-        let got = accumulate(&Backend::Native, &xs, false).unwrap();
+        let got = Session::native().accumulate(&xs, false, None).unwrap();
         assert_eq!(got, vec![0, 1, 3, 6]);
-        let got_t = accumulate(&Backend::Threaded(2), &xs, false).unwrap();
+        let got_t = Session::threaded(2).accumulate(&xs, false, None).unwrap();
         assert_eq!(got_t, got);
     }
 
@@ -158,8 +158,8 @@ mod tests {
             .into_iter()
             .map(|x: f64| x % 1000.0)
             .collect();
-        let a = accumulate(&Backend::Native, &xs, true).unwrap();
-        let b = accumulate(&Backend::Threaded(8), &xs, true).unwrap();
+        let a = Session::native().accumulate(&xs, true, None).unwrap();
+        let b = Session::threaded(8).accumulate(&xs, true, None).unwrap();
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() <= 1e-6 * x.abs().max(1.0));
         }
@@ -175,6 +175,6 @@ mod tests {
     #[test]
     fn empty() {
         let e: Vec<i32> = vec![];
-        assert!(accumulate(&Backend::Native, &e, true).unwrap().is_empty());
+        assert!(Session::native().accumulate(&e, true, None).unwrap().is_empty());
     }
 }

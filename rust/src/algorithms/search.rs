@@ -1,83 +1,44 @@
-//! `searchsortedfirst` / `searchsortedlast` (paper §II-B) — the
-//! lower/upper-bound primitives SIHSort's partition step runs on, and the
-//! ones the paper calls out as missing from Kokkos/RAJA.
+//! `searchsortedfirst` / `searchsortedlast` engines (paper §II-B) — the
+//! lower/upper-bound primitives SIHSort's partition step runs on, and
+//! the ones the paper calls out as missing from Kokkos/RAJA.
+//!
+//! Dispatch lives on [`crate::session::Session::searchsorted_first`] /
+//! [`crate::session::Session::searchsorted_last`]; this module keeps the
+//! host engine plus `#[deprecated]` free-function shims.
 
 use crate::backend::{Backend, DeviceKey};
 use crate::dtype::SortKey;
+use crate::session::Session;
 
 /// Leftmost insertion indices of `needles` into ascending `haystack`.
+#[deprecated(note = "use `Session::searchsorted_first` (`accelkern::session`)")]
 pub fn searchsorted_first<K: DeviceKey>(
     backend: &Backend,
     haystack: &[K],
     needles: &[K],
 ) -> anyhow::Result<Vec<u32>> {
-    dispatch(backend, haystack, needles, "first")
+    Ok(Session::from_backend(backend.clone()).searchsorted_first(haystack, needles, None)?)
 }
 
 /// Rightmost insertion indices (`upper_bound`).
+#[deprecated(note = "use `Session::searchsorted_last` (`accelkern::session`)")]
 pub fn searchsorted_last<K: DeviceKey>(
     backend: &Backend,
     haystack: &[K],
     needles: &[K],
 ) -> anyhow::Result<Vec<u32>> {
-    dispatch(backend, haystack, needles, "last")
+    Ok(Session::from_backend(backend.clone()).searchsorted_last(haystack, needles, None)?)
 }
 
-fn dispatch<K: DeviceKey>(
-    backend: &Backend,
+/// Host binary-search engine: per-needle `partition_point` on the bit
+/// image, fanned out over `threads` workers above `seq_below`.
+pub(crate) fn host_search<K: SortKey>(
     haystack: &[K],
     needles: &[K],
     side: &str,
-) -> anyhow::Result<Vec<u32>> {
-    debug_assert!(crate::dtype::is_sorted_total(haystack), "haystack must be sorted");
-    match backend {
-        Backend::Native => Ok(host_search(haystack, needles, side, 1)),
-        Backend::Threaded(t) => Ok(host_search(haystack, needles, side, *t)),
-        Backend::Device(dev) => {
-            if K::XLA && dev.registry().supports(&format!("searchsorted_{side}"), K::ELEM) {
-                // Device artifacts cap the haystack class; oversize falls back.
-                if let Ok(plan) =
-                    dev.registry().plan(&format!("searchsorted_{side}"), K::ELEM, haystack.len())
-                {
-                    if plan.chunks == 1 {
-                        return dev.searchsorted(haystack, needles, side);
-                    }
-                }
-            }
-            Ok(host_search(haystack, needles, side, 1))
-        }
-        // Co-processing: the needle block splits between engines (both
-        // search the same haystack), results concatenate in order
-        // (DESIGN.md §10).
-        Backend::Hybrid(h) => {
-            let split = match h.route(needles.len()) {
-                crate::hybrid::CoRoute::Host => {
-                    return dispatch(&h.host_backend(), haystack, needles, side)
-                }
-                crate::hybrid::CoRoute::Device => {
-                    return dispatch(&h.device_backend(), haystack, needles, side)
-                }
-                crate::hybrid::CoRoute::Split(split) => split,
-            };
-            let host_backend = h.host_backend();
-            let dev_backend = h.device_backend();
-            let (host_needles, dev_needles) = needles.split_at(split);
-            let (host_res, dev_res) = std::thread::scope(|s| {
-                let hj = s.spawn(move || dispatch(&host_backend, haystack, host_needles, side));
-                let dj = s.spawn(move || dispatch(&dev_backend, haystack, dev_needles, side));
-                (hj.join(), dj.join())
-            });
-            let mut out = host_res
-                .map_err(|_| anyhow::anyhow!("host co-search worker panicked"))??;
-            out.extend(
-                dev_res.map_err(|_| anyhow::anyhow!("device co-search worker panicked"))??,
-            );
-            Ok(out)
-        }
-    }
-}
-
-fn host_search<K: SortKey>(haystack: &[K], needles: &[K], side: &str, threads: usize) -> Vec<u32> {
+    threads: usize,
+    seq_below: usize,
+) -> Vec<u32> {
     let one = |nd: &K| -> u32 {
         let nb = nd.to_bits();
         let idx = if side == "first" {
@@ -87,7 +48,7 @@ fn host_search<K: SortKey>(haystack: &[K], needles: &[K], side: &str, threads: u
         };
         idx as u32
     };
-    if threads <= 1 || needles.len() < 4096 {
+    if threads <= 1 || needles.len() < seq_below.max(2) {
         needles.iter().map(one).collect()
     } else {
         crate::backend::parallel_for_each_chunk(needles.len(), threads, |r| {
@@ -112,19 +73,20 @@ mod tests {
     #[test]
     fn first_last_bracket_duplicates() {
         let hay = vec![1i32, 3, 3, 3, 7];
-        assert_eq!(searchsorted_first(&Backend::Native, &hay, &[3]).unwrap(), vec![1]);
-        assert_eq!(searchsorted_last(&Backend::Native, &hay, &[3]).unwrap(), vec![4]);
-        assert_eq!(searchsorted_first(&Backend::Native, &hay, &[0]).unwrap(), vec![0]);
-        assert_eq!(searchsorted_last(&Backend::Native, &hay, &[9]).unwrap(), vec![5]);
+        let s = Session::native();
+        assert_eq!(s.searchsorted_first(&hay, &[3], None).unwrap(), vec![1]);
+        assert_eq!(s.searchsorted_last(&hay, &[3], None).unwrap(), vec![4]);
+        assert_eq!(s.searchsorted_first(&hay, &[0], None).unwrap(), vec![0]);
+        assert_eq!(s.searchsorted_last(&hay, &[9], None).unwrap(), vec![5]);
     }
 
     #[test]
     fn matches_std_partition_point() {
         let hay = sorted_hay(1, 5000);
         let needles: Vec<i32> = generate(&mut Prng::new(2), Distribution::Uniform, 1000);
-        for b in [Backend::Native, Backend::Threaded(4)] {
-            let f = searchsorted_first(&b, &hay, &needles).unwrap();
-            let l = searchsorted_last(&b, &hay, &needles).unwrap();
+        for s in [Session::native(), Session::threaded(4)] {
+            let f = s.searchsorted_first(&hay, &needles, None).unwrap();
+            let l = s.searchsorted_last(&hay, &needles, None).unwrap();
             for (i, nd) in needles.iter().enumerate() {
                 assert_eq!(f[i] as usize, hay.partition_point(|&h| h < *nd));
                 assert_eq!(l[i] as usize, hay.partition_point(|&h| h <= *nd));
@@ -135,9 +97,10 @@ mod tests {
     #[test]
     fn float_total_order_on_infinities() {
         let hay = vec![f32::NEG_INFINITY, -1.0, 0.0, 1.0, f32::INFINITY];
-        let f = searchsorted_first(&Backend::Native, &hay, &[f32::INFINITY]).unwrap();
+        let s = Session::native();
+        let f = s.searchsorted_first(&hay, &[f32::INFINITY], None).unwrap();
         assert_eq!(f, vec![4]);
-        let l = searchsorted_last(&Backend::Native, &hay, &[f32::NEG_INFINITY]).unwrap();
+        let l = s.searchsorted_last(&hay, &[f32::NEG_INFINITY], None).unwrap();
         assert_eq!(l, vec![1]);
     }
 
@@ -146,7 +109,7 @@ mod tests {
         // The SIHSort property: splitter ranks partition the shard.
         let hay = sorted_hay(3, 4096);
         let splitters = vec![-500_000i32, 0, 500_000];
-        let cuts = searchsorted_last(&Backend::Native, &hay, &splitters).unwrap();
+        let cuts = Session::native().searchsorted_last(&hay, &splitters, None).unwrap();
         assert!(cuts.windows(2).all(|w| w[0] <= w[1]));
         assert!(*cuts.last().unwrap() as usize <= hay.len());
     }

@@ -1,66 +1,41 @@
-//! `merge_sort` / `merge_sort_by_key` (paper §II-B).
+//! `merge_sort` / `merge_sort_by_key` engines (paper §II-B).
 //!
 //! * Native: unstable std sort on the total-order key image.
 //! * Threaded: per-chunk sort + merge-path partitioned parallel k-way
 //!   merge (the paper's CPU path is statically-partitioned threads;
 //!   the recombine engine is DESIGN.md §11).
-//! * Device: the AOT bitonic merge-sort artifact via PJRT; i128 falls
-//!   back to the threaded path (no s128 in XLA — DESIGN.md §2).
+//! * Device: the AOT bitonic merge-sort artifact via PJRT; i128 returns
+//!   `AkError::UnsupportedDtype` (no s128 in XLA — DESIGN.md §2).
 //!
-//! **Stability contract:** [`sort`] is *not* stable — its keys are plain
+//! Dispatch lives on [`crate::session::Session::sort`] /
+//! [`crate::session::Session::sort_by_key`]; this module keeps the host
+//! engines plus `#[deprecated]` free-function shims.
+//!
+//! **Stability contract:** `sort` is *not* stable — its keys are plain
 //! scalars, so equal keys are indistinguishable and the unstable std
 //! sort's lower memory traffic is free throughput. Stability is part of
-//! the contract of [`super::sortperm::sortperm`] and [`sort_by_key`]
-//! only, where equal keys carry distinguishable payloads/indices.
+//! the contract of `sortperm` and `sort_by_key` only, where equal keys
+//! carry distinguishable payloads/indices.
 
 use crate::backend::{Backend, DeviceKey};
 use crate::baselines::merge_path;
 use crate::dtype::SortKey;
+use crate::session::Session;
 
-/// Sort `xs` ascending (total order; NaN-safe for floats). Not stable —
-/// see the module docs for the stability contract split.
-///
-/// ```
-/// use accelkern::backend::Backend;
-/// let mut v = vec![3i32, -1, 2, 0];
-/// accelkern::algorithms::sort(&Backend::Native, &mut v).unwrap();
-/// assert_eq!(v, vec![-1, 0, 2, 3]);
-///
-/// // Floats sort in the IEEE total order: NaN sinks past +inf.
-/// let mut f = vec![1.0f64, f64::NAN, f64::NEG_INFINITY, -0.0];
-/// accelkern::algorithms::sort(&Backend::Threaded(2), &mut f).unwrap();
-/// assert_eq!(f[0], f64::NEG_INFINITY);
-/// assert!(f[3].is_nan());
-/// ```
-pub fn sort<K: DeviceKey>(backend: &Backend, xs: &mut [K]) -> anyhow::Result<()> {
-    match backend {
-        Backend::Native => {
-            xs.sort_unstable_by(|a, b| a.cmp_total(b));
-            Ok(())
-        }
-        Backend::Threaded(t) => {
-            threaded_sort(xs, *t);
-            Ok(())
-        }
-        Backend::Device(dev) => {
-            if K::XLA {
-                dev.sort(xs)
-            } else {
-                // Device fallback for i128: host merge path (the "AK" code
-                // still owns the shard; only the engine differs).
-                threaded_sort(xs, 1);
-                Ok(())
-            }
-        }
-        // Co-processing: both engines sort disjoint shards concurrently,
-        // then a 2-way merge recombines (DESIGN.md §10).
-        Backend::Hybrid(h) => crate::hybrid::co_sort(h, xs),
-    }
-}
-
-fn threaded_sort<K: SortKey>(xs: &mut [K], threads: usize) {
+/// The threaded host sort engine: per-chunk unstable sorts over
+/// `threads` workers, recombined by the merge-path partitioned parallel
+/// merge. `seq_below` gates the chunk fan-out, `merge_par_min` the
+/// recombine fan-out (both overridable via `Launch`); `scratch` is the
+/// merge buffer, reusable across calls.
+pub(crate) fn threaded_sort<K: SortKey>(
+    xs: &mut [K],
+    threads: usize,
+    seq_below: usize,
+    merge_par_min: usize,
+    scratch: &mut Vec<K>,
+) {
     let t = threads.max(1);
-    if t == 1 || xs.len() < 4096 {
+    if t == 1 || xs.len() < seq_below.max(2) {
         xs.sort_unstable_by(|a, b| a.cmp_total(b));
         return;
     }
@@ -73,28 +48,23 @@ fn threaded_sort<K: SortKey>(xs: &mut [K], threads: usize) {
     // end to end instead of funnelling through one sequential k-merge.
     let ranges = crate::backend::threaded::split_ranges(xs.len(), t);
     let bounds: Vec<usize> = ranges.iter().skip(1).map(|r| r.start).collect();
-    merge_path::merge_runs_in_place(xs, &bounds, t);
+    merge_path::merge_runs_in_place_with(xs, &bounds, t, merge_par_min, scratch);
 }
 
-/// Sort `keys` ascending carrying `vals` along (payload sort).
-/// Stable: equal keys keep their input order.
+/// Sort `xs` ascending (total order; NaN-safe for floats).
+#[deprecated(note = "use `Session::sort` (`accelkern::session`)")]
+pub fn sort<K: DeviceKey>(backend: &Backend, xs: &mut [K]) -> anyhow::Result<()> {
+    Ok(Session::from_backend(backend.clone()).sort(xs, None)?)
+}
+
+/// Sort `keys` ascending carrying `vals` along (stable payload sort).
+#[deprecated(note = "use `Session::sort_by_key` (`accelkern::session`)")]
 pub fn sort_by_key<K: DeviceKey, V: Copy + Send + Sync>(
     backend: &Backend,
     keys: &mut [K],
     vals: &mut [V],
 ) -> anyhow::Result<()> {
-    anyhow::ensure!(keys.len() == vals.len(), "key/val length mismatch");
-    let n = keys.len();
-    if n <= 1 {
-        return Ok(());
-    }
-    // Device path only exists for i32 payloads within one size class;
-    // general payloads go through an index permutation (native work is
-    // O(n) scatter either way).
-    let perm = super::sortperm::sortperm(backend, keys)?;
-    apply_permutation(keys, &perm);
-    apply_permutation(vals, &perm);
-    Ok(())
+    Ok(Session::from_backend(backend.clone()).sort_by_key(keys, vals, None)?)
 }
 
 /// Apply `perm` (out-of-place gather) to `xs`.
@@ -113,19 +83,19 @@ mod tests {
     use crate::util::Prng;
     use crate::workload::{generate, Distribution, KeyGen};
 
-    fn hosts() -> Vec<Backend> {
-        vec![Backend::Native, Backend::Threaded(4)]
+    fn hosts() -> Vec<Session> {
+        vec![Session::native(), Session::threaded(4)]
     }
 
     fn check_host<K: KeyGen + PartialEq + DeviceKey>(seed: u64, n: usize) {
-        for b in hosts() {
+        for s in hosts() {
             for dist in [Distribution::Uniform, Distribution::Reverse, Distribution::DupHeavy] {
                 let orig: Vec<K> = generate(&mut Prng::new(seed), dist, n);
                 let mut xs = orig.clone();
-                sort(&b, &mut xs).unwrap();
+                s.sort(&mut xs, None).unwrap();
                 let mut want = orig.clone();
                 want.sort_by(|a, b| a.cmp_total(b));
-                assert!(xs == want, "{b:?} {dist:?}");
+                assert!(xs == want, "{s:?} {dist:?}");
             }
         }
     }
@@ -148,10 +118,10 @@ mod tests {
     #[test]
     fn sort_by_key_carries_payloads() {
         let keys_orig: Vec<i32> = generate(&mut Prng::new(4), Distribution::Uniform, 3000);
-        for b in hosts() {
+        for s in hosts() {
             let mut keys = keys_orig.clone();
             let mut vals: Vec<usize> = (0..keys.len()).collect();
-            sort_by_key(&b, &mut keys, &mut vals).unwrap();
+            s.sort_by_key(&mut keys, &mut vals, None).unwrap();
             assert!(is_sorted_total(&keys));
             for (k, v) in keys.iter().zip(&vals) {
                 assert_eq!(*k, keys_orig[*v]);
@@ -164,7 +134,7 @@ mod tests {
         let keys_orig = vec![3i32, 1, 3, 1, 3];
         let mut keys = keys_orig.clone();
         let mut vals: Vec<usize> = (0..5).collect();
-        sort_by_key(&Backend::Native, &mut keys, &mut vals).unwrap();
+        Session::native().sort_by_key(&mut keys, &mut vals, None).unwrap();
         assert_eq!(keys, vec![1, 1, 3, 3, 3]);
         assert_eq!(vals, vec![1, 3, 0, 2, 4]); // equal keys keep input order
     }
@@ -174,5 +144,17 @@ mod tests {
         let mut xs = vec![10, 20, 30];
         apply_permutation(&mut xs, &[2, 0, 1]);
         assert_eq!(xs, vec![30, 10, 20]);
+    }
+
+    // The shim surface stays behaviour-identical while the tree
+    // migrates, except the two documented typed-error fixes (i128 on
+    // the device sort, `sortperm_lowmem` on the device backend —
+    // DESIGN.md §12); session_api.rs asserts the equivalence matrix.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_sort() {
+        let mut xs = vec![4i32, 1, 3, 2];
+        sort(&Backend::Native, &mut xs).unwrap();
+        assert_eq!(xs, vec![1, 2, 3, 4]);
     }
 }

@@ -1,62 +1,37 @@
-//! `sortperm` / `sortperm_lowmem` (paper §II-B): the index permutation
-//! that sorts a collection — the primitive the paper notes is *absent*
-//! from Kokkos/RAJA without extra copies.
+//! `sortperm` / `sortperm_lowmem` engines (paper §II-B): the index
+//! permutation that sorts a collection — the primitive the paper notes
+//! is *absent* from Kokkos/RAJA without extra copies.
 //!
-//! * `sortperm`: key-value sort of (keys, iota) — faster, but materialises
-//!   a key copy (the paper's "50% more memory" variant).
+//! * `sortperm`: key-value sort of (keys, iota) — faster, but
+//!   materialises a key copy (the paper's "50% more memory" variant).
 //! * `sortperm_lowmem`: argsort by sorting indices with a key-indexed
-//!   comparator — no key copy, slightly slower (more indirection).
+//!   comparator — no key copy, slightly slower (more indirection). Host
+//!   engines only: the indexed comparator cannot cross the AOT
+//!   boundary, so the device backend returns
+//!   `AkError::UnsupportedBackend` (it used to *silently* ignore its
+//!   backend argument — typed refusal replaced the silent fallback).
 //!
-//! Device path uses the `sort_pairs` artifact when the dtype and size
-//! class allow; otherwise falls back to the host algorithm.
+//! Dispatch lives on [`crate::session::Session::sortperm`] /
+//! [`crate::session::Session::sortperm_lowmem`]; this module keeps the
+//! host engines plus `#[deprecated]` shims.
 
 use crate::backend::{Backend, DeviceKey};
 use crate::dtype::SortKey;
+use crate::session::Session;
 
-/// Permutation `p` such that `xs[p[0]] <= xs[p[1]] <= ...` (stable).
-pub fn sortperm<K: DeviceKey>(backend: &Backend, xs: &[K]) -> anyhow::Result<Vec<u32>> {
-    anyhow::ensure!(xs.len() <= u32::MAX as usize, "sortperm index space is u32");
-    match backend {
-        Backend::Native => Ok(host_sortperm(xs, 1)),
-        Backend::Threaded(t) => Ok(host_sortperm(xs, *t)),
-        Backend::Device(dev) => {
-            if K::XLA {
-                if let Ok(plan) = dev.registry().plan("sort_pairs", K::ELEM, xs.len()) {
-                    if plan.chunks == 1 {
-                        let vals: Vec<i32> = (0..xs.len() as i32).collect();
-                        let (_, perm) = dev.sort_pairs(xs, &vals)?;
-                        return Ok(perm.into_iter().map(|v| v as u32).collect());
-                    }
-                }
-            }
-            Ok(host_sortperm(xs, 1))
-        }
-        // The pair buffer cannot straddle two engines without an extra
-        // gather; the hybrid sortperm runs on the host pool
-        // (DESIGN.md §10).
-        Backend::Hybrid(h) => Ok(host_sortperm(xs, h.host_threads.max(1))),
-    }
-}
-
-/// Lower-memory variant: sorts the index array in place with an indexed
-/// comparator (no (key, index) pair buffer).
-pub fn sortperm_lowmem<K: SortKey>(_backend: &Backend, xs: &[K]) -> anyhow::Result<Vec<u32>> {
-    anyhow::ensure!(xs.len() <= u32::MAX as usize, "sortperm index space is u32");
-    let mut idx: Vec<u32> = (0..xs.len() as u32).collect();
-    idx.sort_by(|&a, &b| {
-        xs[a as usize]
-            .cmp_total(&xs[b as usize])
-            .then(a.cmp(&b)) // stability tie-break
-    });
-    Ok(idx)
-}
-
-fn host_sortperm<K: SortKey>(xs: &[K], threads: usize) -> Vec<u32> {
-    // (key, index) pairs — the paper's faster/more-memory variant.
-    let mut pairs: Vec<(u128, u32)> =
-        xs.iter().enumerate().map(|(i, k)| (k.to_bits(), i as u32)).collect();
-    if threads > 1 && pairs.len() >= 4096 {
-        crate::backend::parallel_chunks(&mut pairs, threads, |_, chunk| {
+/// The pair-sort host engine: (bit-image, index) pairs — the paper's
+/// faster/more-memory variant. `pairs` is the reusable pair buffer
+/// (scratch pool); `seq_below` gates the parallel chunk sort.
+pub(crate) fn host_sortperm<K: SortKey>(
+    xs: &[K],
+    threads: usize,
+    seq_below: usize,
+    pairs: &mut Vec<(u128, u32)>,
+) -> Vec<u32> {
+    pairs.clear();
+    pairs.extend(xs.iter().enumerate().map(|(i, k)| (k.to_bits(), i as u32)));
+    if threads > 1 && pairs.len() >= seq_below.max(2) {
+        crate::backend::parallel_chunks(pairs, threads, |_, chunk| {
             chunk.sort_unstable();
         });
         // Merge chunk runs (pairs are unique via the index component).
@@ -64,7 +39,47 @@ fn host_sortperm<K: SortKey>(xs: &[K], threads: usize) -> Vec<u32> {
     } else {
         pairs.sort_unstable();
     }
-    pairs.into_iter().map(|(_, i)| i).collect()
+    pairs.iter().map(|&(_, i)| i).collect()
+}
+
+/// The index-sort host engine behind `sortperm_lowmem`: sorts `0..n`
+/// with a key-indexed comparator — parallel chunk sorts plus a
+/// run-exploiting final pass above the gate, one `sort_by` below it.
+pub(crate) fn host_sortperm_lowmem<K: SortKey>(
+    xs: &[K],
+    threads: usize,
+    seq_below: usize,
+) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..xs.len() as u32).collect();
+    let by_key = |a: &u32, b: &u32| {
+        xs[*a as usize]
+            .cmp_total(&xs[*b as usize])
+            .then(a.cmp(b)) // stability tie-break
+    };
+    if threads > 1 && idx.len() >= seq_below.max(2) {
+        crate::backend::parallel_chunks(&mut idx, threads, |_, chunk| {
+            chunk.sort_by(by_key);
+        });
+        idx.sort_by(by_key); // run-exploiting recombine pass
+    } else {
+        idx.sort_by(by_key);
+    }
+    idx
+}
+
+/// Permutation `p` such that `xs[p[0]] <= xs[p[1]] <= ...` (stable).
+#[deprecated(note = "use `Session::sortperm` (`accelkern::session`)")]
+pub fn sortperm<K: DeviceKey>(backend: &Backend, xs: &[K]) -> anyhow::Result<Vec<u32>> {
+    Ok(Session::from_backend(backend.clone()).sortperm(xs, None)?)
+}
+
+/// Lower-memory variant: sorts the index array in place with an indexed
+/// comparator (no (key, index) pair buffer). Unlike the pre-session
+/// version this *dispatches on the backend* (parallel on host pools)
+/// and errors on the device backend instead of silently ignoring it.
+#[deprecated(note = "use `Session::sortperm_lowmem` (`accelkern::session`)")]
+pub fn sortperm_lowmem<K: SortKey>(backend: &Backend, xs: &[K]) -> anyhow::Result<Vec<u32>> {
+    Ok(Session::from_backend(backend.clone()).sortperm_lowmem(xs, None)?)
 }
 
 #[cfg(test)]
@@ -76,10 +91,10 @@ mod tests {
     #[test]
     fn perm_sorts_input() {
         let xs: Vec<i32> = generate(&mut Prng::new(1), Distribution::Uniform, 5000);
-        for b in [Backend::Native, Backend::Threaded(4)] {
-            let p = sortperm(&b, &xs).unwrap();
+        for s in [Session::native(), Session::threaded(4)] {
+            let p = s.sortperm(&xs, None).unwrap();
             let sorted: Vec<i32> = p.iter().map(|&i| xs[i as usize]).collect();
-            assert!(crate::dtype::is_sorted_total(&sorted), "{b:?}");
+            assert!(crate::dtype::is_sorted_total(&sorted), "{s:?}");
             // p is a permutation.
             let mut q = p.clone();
             q.sort_unstable();
@@ -88,24 +103,39 @@ mod tests {
     }
 
     #[test]
-    fn lowmem_matches_fast_path() {
-        let xs: Vec<f64> = generate(&mut Prng::new(2), Distribution::DupHeavy, 3000);
-        let a = sortperm(&Backend::Native, &xs).unwrap();
-        let b = sortperm_lowmem(&Backend::Native, &xs).unwrap();
-        assert_eq!(a, b);
+    fn lowmem_matches_fast_path_on_every_host_engine() {
+        let xs: Vec<f64> = generate(&mut Prng::new(2), Distribution::DupHeavy, 9000);
+        let a = Session::native().sortperm(&xs, None).unwrap();
+        for s in [Session::native(), Session::threaded(4)] {
+            let b = s.sortperm_lowmem(&xs, None).unwrap();
+            assert_eq!(a, b, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn lowmem_threaded_respects_knobs() {
+        let xs: Vec<i64> = generate(&mut Prng::new(7), Distribution::Uniform, 20_000);
+        let want = host_sortperm_lowmem(&xs, 1, usize::MAX);
+        for t in [2usize, 3, 8] {
+            assert_eq!(host_sortperm_lowmem(&xs, t, 64), want, "threads {t}");
+        }
     }
 
     #[test]
     fn stable_on_duplicates() {
         let xs = vec![5i32, 1, 5, 1];
-        let p = sortperm(&Backend::Native, &xs).unwrap();
+        let p = Session::native().sortperm(&xs, None).unwrap();
         assert_eq!(p, vec![1, 3, 0, 2]);
+        let q = Session::threaded(2).sortperm_lowmem(&xs, None).unwrap();
+        assert_eq!(q, p);
     }
 
     #[test]
     fn empty_and_single() {
         let e: Vec<i32> = vec![];
-        assert!(sortperm(&Backend::Native, &e).unwrap().is_empty());
-        assert_eq!(sortperm(&Backend::Native, &[7i32]).unwrap(), vec![0]);
+        let s = Session::native();
+        assert!(s.sortperm(&e, None).unwrap().is_empty());
+        assert_eq!(s.sortperm(&[7i32], None).unwrap(), vec![0]);
+        assert!(s.sortperm_lowmem(&e, None).unwrap().is_empty());
     }
 }

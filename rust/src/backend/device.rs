@@ -15,7 +15,7 @@
 use xla::Literal;
 
 use crate::dtype::SortKey;
-use crate::runtime::{lit_from_slice, lit_to_vec, Registry};
+use crate::runtime::{lit_from_slice, lit_scalar, lit_to_vec, Registry};
 
 /// Per-dtype device capability + literal conversions.
 pub trait DeviceKey: SortKey {
@@ -23,6 +23,9 @@ pub trait DeviceKey: SortKey {
     const XLA: bool;
     /// Pack a slice into a rank-1 XLA literal.
     fn to_literal(xs: &[Self]) -> anyhow::Result<Literal>;
+    /// Pack one value into a rank-0 (scalar) XLA literal — predicate
+    /// thresholds and kernel constants ride in this way.
+    fn to_scalar_literal(x: Self) -> anyhow::Result<Literal>;
     /// Unpack a rank-1 XLA literal back into a vector.
     fn from_literal(lit: &Literal) -> anyhow::Result<Vec<Self>>;
 }
@@ -33,6 +36,9 @@ macro_rules! device_key {
             const XLA: bool = true;
             fn to_literal(xs: &[Self]) -> anyhow::Result<Literal> {
                 lit_from_slice(xs)
+            }
+            fn to_scalar_literal(x: Self) -> anyhow::Result<Literal> {
+                lit_scalar(x)
             }
             fn from_literal(lit: &Literal) -> anyhow::Result<Vec<Self>> {
                 lit_to_vec(lit)
@@ -51,6 +57,9 @@ impl DeviceKey for i128 {
     const XLA: bool = false;
     fn to_literal(_: &[Self]) -> anyhow::Result<Literal> {
         anyhow::bail!("i128 has no XLA artifact family (s128 unsupported by XLA-CPU)")
+    }
+    fn to_scalar_literal(_: Self) -> anyhow::Result<Literal> {
+        anyhow::bail!("i128 has no XLA artifact family")
     }
     fn from_literal(_: &Literal) -> anyhow::Result<Vec<Self>> {
         anyhow::bail!("i128 has no XLA artifact family")
@@ -76,20 +85,35 @@ impl DeviceOps {
     /// the dtype max; shards larger than the largest class are sorted in
     /// chunks and k-way merged on the host.
     pub fn sort<K: DeviceKey>(&self, xs: &mut [K]) -> anyhow::Result<()> {
+        self.sort_blocked(xs, None)
+    }
+
+    /// [`DeviceOps::sort`] with an explicit chunk granule: `block_size`
+    /// (the `Launch` knob) caps the artifact size class one device call
+    /// covers, so a large shard streams through the engine in
+    /// `ceil(n / class(block_size))` calls with a host k-way merge —
+    /// bounding per-call device memory exactly like the out-of-core
+    /// path does beyond the largest class.
+    pub fn sort_blocked<K: DeviceKey>(
+        &self,
+        xs: &mut [K],
+        block_size: Option<usize>,
+    ) -> anyhow::Result<()> {
         anyhow::ensure!(K::XLA, "dtype {} not device-supported", K::ELEM);
         let n = xs.len();
         if n <= 1 {
             return Ok(());
         }
-        let plan = self.reg.plan("sort", K::ELEM, n)?;
+        let plan_n = block_size.map(|b| b.clamp(1, n)).unwrap_or(n);
+        let plan = self.reg.plan("sort", K::ELEM, plan_n)?;
         let cap = plan.chunk_capacity();
-        if plan.chunks == 1 {
+        if n <= cap {
             let sorted = self.sort_chunk(&xs[..], cap)?;
             xs.copy_from_slice(&sorted[..n]);
             return Ok(());
         }
-        // Out-of-core: sort class-sized chunks, merge on host.
-        let mut runs: Vec<Vec<K>> = Vec::with_capacity(plan.chunks);
+        // Out-of-core / blocked: sort class-sized chunks, merge on host.
+        let mut runs: Vec<Vec<K>> = Vec::with_capacity(n.div_ceil(cap));
         for chunk in xs.chunks(cap) {
             let mut sorted = self.sort_chunk(chunk, cap)?;
             sorted.truncate(chunk.len());
@@ -343,17 +367,20 @@ impl DeviceOps {
 
     /// Chunked early-exit `any(x > t)` — the paper's two-algorithm design:
     /// the device evaluates a conservative chunk predicate, the host stops
-    /// at the first hit.
-    pub fn any_gt_f32(&self, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
-        let plan = self.reg.plan("any_gt", crate::dtype::ElemType::F32, xs.len())?;
+    /// at the first hit. Generic over every dtype with an `any_gt`
+    /// artifact family (gate with `registry().supports("any_gt", ...)`);
+    /// padding uses the dtype minimum, which can never satisfy `x > t`.
+    pub fn any_gt<K: DeviceKey>(&self, xs: &[K], threshold: K) -> anyhow::Result<bool> {
+        anyhow::ensure!(K::XLA, "dtype {} not device-supported", K::ELEM);
+        let plan = self.reg.plan("any_gt", K::ELEM, xs.len())?;
         let cap = plan.chunk_capacity();
         let exe = self.reg.runtime().get(&plan.artifact.name)?;
         for chunk in xs.chunks(cap) {
             let mut padded = chunk.to_vec();
-            padded.resize(cap, f32::NEG_INFINITY);
+            padded.resize(cap, K::min_key());
             let res = self.reg.runtime().execute_compiled(
                 &exe,
-                &[lit_from_slice(&padded)?, crate::runtime::lit_scalar(threshold)?],
+                &[K::to_literal(&padded)?, K::to_scalar_literal(threshold)?],
             )?;
             if lit_to_vec::<i32>(&res[0])?[0] != 0 {
                 return Ok(true); // early exit: remaining chunks never run
@@ -362,17 +389,19 @@ impl DeviceOps {
         Ok(false)
     }
 
-    /// Chunked early-exit `all(x > t)`.
-    pub fn all_gt_f32(&self, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
-        let plan = self.reg.plan("all_gt", crate::dtype::ElemType::F32, xs.len())?;
+    /// Chunked early-exit `all(x > t)`; padding uses the dtype maximum,
+    /// which satisfies `x > t` whenever any real element could.
+    pub fn all_gt<K: DeviceKey>(&self, xs: &[K], threshold: K) -> anyhow::Result<bool> {
+        anyhow::ensure!(K::XLA, "dtype {} not device-supported", K::ELEM);
+        let plan = self.reg.plan("all_gt", K::ELEM, xs.len())?;
         let cap = plan.chunk_capacity();
         let exe = self.reg.runtime().get(&plan.artifact.name)?;
         for chunk in xs.chunks(cap) {
             let mut padded = chunk.to_vec();
-            padded.resize(cap, f32::INFINITY);
+            padded.resize(cap, K::max_key());
             let res = self.reg.runtime().execute_compiled(
                 &exe,
-                &[lit_from_slice(&padded)?, crate::runtime::lit_scalar(threshold)?],
+                &[K::to_literal(&padded)?, K::to_scalar_literal(threshold)?],
             )?;
             if lit_to_vec::<i32>(&res[0])?[0] == 0 {
                 return Ok(false);

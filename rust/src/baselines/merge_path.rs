@@ -108,10 +108,22 @@ pub fn kway_cuts<K: SortKey>(runs: &[&[K]], m: usize) -> Vec<usize> {
 /// one contiguous output segment located by [`co_rank`]. Falls back to
 /// the sequential branchless merge below [`PAR_MERGE_MIN`].
 pub fn merge2_parallel_into<K: SortKey>(a: &[K], b: &[K], out: &mut [K], threads: usize) {
+    merge2_parallel_into_with(a, b, out, threads, PAR_MERGE_MIN);
+}
+
+/// [`merge2_parallel_into`] with an explicit sequential-fallback gate
+/// (`Launch::prefer_parallel_threshold` reaches the engine through this).
+pub fn merge2_parallel_into_with<K: SortKey>(
+    a: &[K],
+    b: &[K],
+    out: &mut [K],
+    threads: usize,
+    par_min: usize,
+) {
     assert_eq!(a.len() + b.len(), out.len(), "output length mismatch");
     let total = out.len();
     let t = threads.max(1);
-    if t == 1 || total < PAR_MERGE_MIN {
+    if t == 1 || total < par_min.max(2) {
         merge2_into_slice(a, b, out);
         return;
     }
@@ -141,10 +153,21 @@ pub fn merge2_parallel<K: SortKey>(a: &[K], b: &[K], threads: usize) -> Vec<K> {
 /// runs the sequential loser tree over its sub-runs. Falls back to the
 /// sequential engine below [`PAR_MERGE_MIN`].
 pub fn kmerge_parallel_into_slice<K: SortKey>(runs: &[&[K]], out: &mut [K], threads: usize) {
+    kmerge_parallel_into_slice_with(runs, out, threads, PAR_MERGE_MIN);
+}
+
+/// [`kmerge_parallel_into_slice`] with an explicit sequential-fallback
+/// gate (`Launch::prefer_parallel_threshold` reaches the engine here).
+pub fn kmerge_parallel_into_slice_with<K: SortKey>(
+    runs: &[&[K]],
+    out: &mut [K],
+    threads: usize,
+    par_min: usize,
+) {
     let total: usize = runs.iter().map(|r| r.len()).sum();
     assert_eq!(total, out.len(), "output length mismatch");
     let t = threads.max(1);
-    if t == 1 || total < PAR_MERGE_MIN {
+    if t == 1 || total < par_min.max(2) {
         kmerge_into_slice(runs, out);
         return;
     }
@@ -152,7 +175,7 @@ pub fn kmerge_parallel_into_slice<K: SortKey>(runs: &[&[K]], out: &mut [K], thre
         // Prefer diagonal co-ranking for the 2-run case: boundary cost is
         // O(log n) instead of the 128-probe image search.
         let live: Vec<&[K]> = runs.iter().copied().filter(|r| !r.is_empty()).collect();
-        merge2_parallel_into(live[0], live[1], out, t);
+        merge2_parallel_into_with(live[0], live[1], out, t, par_min);
         return;
     }
     let ranges = split_ranges(total, t);
@@ -171,9 +194,14 @@ pub fn kmerge_parallel_into_slice<K: SortKey>(runs: &[&[K]], out: &mut [K], thre
 /// K-way merge into a fresh vector with up to `threads` workers (see
 /// [`kmerge_parallel_into_slice`]).
 pub fn kmerge_parallel<K: SortKey>(runs: &[&[K]], threads: usize) -> Vec<K> {
+    kmerge_parallel_with(runs, threads, PAR_MERGE_MIN)
+}
+
+/// [`kmerge_parallel`] with an explicit sequential-fallback gate.
+pub fn kmerge_parallel_with<K: SortKey>(runs: &[&[K]], threads: usize, par_min: usize) -> Vec<K> {
     let total: usize = runs.iter().map(|r| r.len()).sum();
     let mut out = alloc_out::<K>(total);
-    kmerge_parallel_into_slice(runs, &mut out, threads);
+    kmerge_parallel_into_slice_with(runs, &mut out, threads, par_min);
     out
 }
 
@@ -184,19 +212,33 @@ pub fn kmerge_parallel<K: SortKey>(runs: &[&[K]], threads: usize) -> Vec<K> {
 /// of the recombine runs at single-core bandwidth. This is the one
 /// scratch-dance shared by `threaded_sort`'s and `co_sort`'s recombine.
 pub fn merge_runs_in_place<K: SortKey>(xs: &mut [K], bounds: &[usize], threads: usize) {
+    let mut scratch: Vec<K> = Vec::new();
+    merge_runs_in_place_with(xs, bounds, threads, PAR_MERGE_MIN, &mut scratch);
+}
+
+/// [`merge_runs_in_place`] with an explicit sequential-fallback gate and
+/// a caller-owned scratch buffer (resized to `xs.len()`, capacity kept
+/// across calls — the `Launch::reuse_scratch` pool hands buffers in
+/// through here).
+pub fn merge_runs_in_place_with<K: SortKey>(
+    xs: &mut [K],
+    bounds: &[usize],
+    threads: usize,
+    par_min: usize,
+    scratch: &mut Vec<K>,
+) {
     debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "bounds must be ascending");
     let t = threads.max(1);
-    let mut scratch: Vec<K> = Vec::new();
-    crate::dtype::resize_for_overwrite(&mut scratch, xs.len());
+    crate::dtype::resize_for_overwrite(scratch, xs.len());
     {
         let mut cuts: Vec<usize> = Vec::with_capacity(bounds.len() + 2);
         cuts.push(0);
         cuts.extend(bounds.iter().copied().filter(|&b| b > 0 && b < xs.len()));
         cuts.push(xs.len());
         let refs: Vec<&[K]> = cuts.windows(2).map(|w| &xs[w[0]..w[1]]).collect();
-        kmerge_parallel_into_slice(&refs, &mut scratch, t);
+        kmerge_parallel_into_slice_with(&refs, scratch, t, par_min);
     }
-    crate::backend::threaded::parallel_chunks_with_scratch(xs, &mut scratch, t, |_, dst, src| {
+    crate::backend::threaded::parallel_chunks_with_scratch(xs, scratch, t, |_, dst, src| {
         dst.copy_from_slice(src);
     });
 }

@@ -20,4 +20,4 @@ pub mod radix;
 pub use kmerge::kmerge;
 pub use merge::merge_sort;
 pub use merge_path::{kmerge_parallel, merge2_parallel};
-pub use radix::{radix_sort, radix_sort_auto, radix_sort_threaded};
+pub use radix::{radix_sort, radix_sort_auto, radix_sort_auto_with, radix_sort_threaded};

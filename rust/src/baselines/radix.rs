@@ -39,6 +39,13 @@ pub fn radix_sort_auto<K: SortKey>(xs: &mut [K]) {
     radix_sort_threaded(xs, default_threads());
 }
 
+/// [`radix_sort_auto`] with explicit worker-count and parallel-gate
+/// knobs (`Launch::max_tasks` / `prefer_parallel_threshold` reach the
+/// TR engine through this).
+pub fn radix_sort_auto_with<K: SortKey>(xs: &mut [K], threads: usize, par_min: usize) {
+    radix_sort_threaded_with(xs, threads, par_min);
+}
+
 /// Multi-threaded LSD radix sort (8-bit digits) over up to `threads`
 /// workers. Per pass: (1) each worker histograms its static chunk of the
 /// input; (2) one exclusive scan over the (digit-major, thread-minor)
@@ -49,8 +56,13 @@ pub fn radix_sort_auto<K: SortKey>(xs: &mut [K]) {
 /// no two writes alias. Falls back to the sequential engine below
 /// [`RADIX_PAR_MIN`] or at one thread.
 pub fn radix_sort_threaded<K: SortKey>(xs: &mut [K], threads: usize) {
+    radix_sort_threaded_with(xs, threads, RADIX_PAR_MIN);
+}
+
+/// [`radix_sort_threaded`] with an explicit sequential-fallback gate.
+pub fn radix_sort_threaded_with<K: SortKey>(xs: &mut [K], threads: usize, par_min: usize) {
     let t = threads.max(1).min(xs.len().max(1));
-    if t == 1 || xs.len() < RADIX_PAR_MIN {
+    if t == 1 || xs.len() < par_min.max(2) {
         radix_sort(xs);
         return;
     }

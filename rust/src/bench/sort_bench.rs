@@ -8,9 +8,13 @@
 //! against the std reference sort and any divergence is a hard error —
 //! CI fails on it.
 //!
+//! Engines run through the [`Session`]/[`Launch`] API; the active
+//! launch knobs are recorded in the JSON metadata so a bench run is
+//! reproducible from its artifact alone.
+//!
 //! Engine legend (sequential counterpart → parallel engine):
 //! * `sort-native`    → `sort-threaded`   (per-chunk sort + merge-path
-//!   partitioned k-way recombine, `algorithms::sort`)
+//!   partitioned k-way recombine, `Session::sort`)
 //! * `radix-seq[TR]`  → `radix-par[TR]`   (threaded LSD radix,
 //!   `baselines::radix`)
 //! * `kmerge-seq`     → `kmerge-par`      (recombine phase alone, over
@@ -20,10 +24,11 @@
 use std::path::Path;
 
 use crate::backend::threaded::split_ranges;
-use crate::backend::{Backend, DeviceKey};
+use crate::backend::DeviceKey;
 use crate::baselines::{kmerge, merge_path, merge_sort, radix};
 use crate::bench::{BenchOpts, Bencher};
 use crate::dtype::{bits_eq, ElemType, SortKey};
+use crate::session::{Launch, Session};
 use crate::util::Prng;
 use crate::workload::{generate, Distribution, KeyGen};
 
@@ -55,8 +60,18 @@ pub struct SortBenchReport {
     pub n: usize,
     /// Parallel-engine thread count.
     pub threads: usize,
+    /// The launch knobs the parallel engines ran with (recorded in the
+    /// JSON metadata for reproducibility).
+    pub launch: Launch,
     /// All measured rows.
     pub records: Vec<SortBenchRecord>,
+}
+
+fn json_opt(v: Option<usize>) -> String {
+    match v {
+        Some(x) => x.to_string(),
+        None => "null".to_string(),
+    }
 }
 
 impl SortBenchReport {
@@ -65,11 +80,22 @@ impl SortBenchReport {
         self.records.iter().find(|r| r.engine == engine && r.dtype == dtype)
     }
 
-    /// Serialise as JSON (`BENCH_sort.json` schema, version 1).
+    /// Serialise as JSON (`BENCH_sort.json` schema, version 2: adds the
+    /// `launch` metadata object).
     pub fn to_json(&self) -> String {
         let mut s = String::new();
-        s.push_str("{\n  \"version\": 1,\n");
+        s.push_str("{\n  \"version\": 2,\n");
         s.push_str(&format!("  \"n\": {},\n  \"threads\": {},\n", self.n, self.threads));
+        s.push_str(&format!(
+            "  \"launch\": {{\"block_size\": {}, \"max_tasks\": {}, \"min_elems_per_task\": {}, \
+             \"par_threshold\": {}, \"switch_below\": {}, \"reuse_scratch\": {}}},\n",
+            json_opt(self.launch.block_size),
+            json_opt(self.launch.max_tasks),
+            json_opt(self.launch.min_elems_per_task),
+            json_opt(self.launch.prefer_parallel_threshold),
+            json_opt(self.launch.switch_below),
+            self.launch.reuse_scratch_on(),
+        ));
         s.push_str("  \"results\": [\n");
         for (i, r) in self.records.iter().enumerate() {
             s.push_str(&format!(
@@ -105,6 +131,7 @@ type SortFn<K> = Box<dyn Fn(&mut Vec<K>, usize)>;
 fn bench_dtype<K: KeyGen + DeviceKey>(
     n: usize,
     threads: usize,
+    launch: &Launch,
     opts: &BenchOpts,
     report: &mut SortBenchReport,
 ) -> anyhow::Result<()> {
@@ -115,18 +142,34 @@ fn bench_dtype<K: KeyGen + DeviceKey>(
     want.sort_unstable_by(|a, b| a.cmp_total(b));
     eprintln!("-- bench-sort {dtype} n={n} threads={threads}");
 
+    let native = Session::native().with_defaults(launch.clone());
+    let threaded = Session::threaded(threads).with_defaults(launch.clone());
+    let radix_par_min = launch.par_threshold_or(radix::RADIX_PAR_MIN);
+    // Effective parallel worker count after the launch knobs: recorded in
+    // the rows and fed to the engines that take an explicit count, so the
+    // JSON metadata really reproduces the run.
+    let par_threads = launch.tasks_for(threads, n);
+
     // In-place sort engines: (name, threads, routine). Each consumes a
     // fresh clone per iteration (setup excluded from timing).
     let engines: Vec<(&str, usize, SortFn<K>)> = vec![
-        ("sort-native", 1, Box::new(|v, _| {
-            crate::algorithms::sort(&Backend::Native, v).expect("native sort");
-        })),
-        ("sort-threaded", threads, Box::new(|v, t| {
-            crate::algorithms::sort(&Backend::Threaded(t), v).expect("threaded sort");
-        })),
+        ("sort-native", 1, {
+            let native = native.clone();
+            Box::new(move |v, _| {
+                native.sort(v, None).expect("native sort");
+            })
+        }),
+        ("sort-threaded", par_threads, {
+            let threaded = threaded.clone();
+            Box::new(move |v, _| {
+                threaded.sort(v, None).expect("threaded sort");
+            })
+        }),
         ("merge-seq[TM]", 1, Box::new(|v, _| merge_sort(v))),
         ("radix-seq[TR]", 1, Box::new(|v, _| radix::radix_sort(v))),
-        ("radix-par[TR]", threads, Box::new(|v, t| radix::radix_sort_threaded(v, t))),
+        ("radix-par[TR]", par_threads, Box::new(move |v, t| {
+            radix::radix_sort_threaded_with(v, t, radix_par_min)
+        })),
     ];
     let mut bencher = Bencher::new(opts.clone());
     for (name, t, routine) in &engines {
@@ -156,15 +199,16 @@ fn bench_dtype<K: KeyGen + DeviceKey>(
         sorted_chunks
     };
     let refs: Vec<&[K]> = runs.iter().map(|r| r.as_slice()).collect();
+    let merge_par_min = launch.par_threshold_or(merge_path::PAR_MERGE_MIN);
     let run_merge = |out: &mut [K], t: usize| {
         if t == 1 {
             kmerge::kmerge_into_slice(&refs, out);
         } else {
-            merge_path::kmerge_parallel_into_slice(&refs, out, t);
+            merge_path::kmerge_parallel_into_slice_with(&refs, out, t, merge_par_min);
         }
     };
     let mut out: Vec<K> = vec![K::min_key(); n];
-    for (name, t) in [("kmerge-seq", 1usize), ("kmerge-par", threads)] {
+    for (name, t) in [("kmerge-seq", 1usize), ("kmerge-par", par_threads)] {
         let label = format!("{name}/{dtype}");
         bencher.run(&label, Some(bytes), || run_merge(&mut out[..], t));
         // Correctness gate on a poisoned buffer: a silently no-op'ing
@@ -202,27 +246,40 @@ fn push_record(
     });
 }
 
-/// Run the sort bench over `dtypes` and return the report.
+/// Run the sort bench over `dtypes` with the given launch knobs and
+/// return the report.
 pub fn run_sort_bench(
     n: usize,
     threads: usize,
     dtypes: &[ElemType],
     opts: &BenchOpts,
+    launch: &Launch,
 ) -> anyhow::Result<SortBenchReport> {
-    let mut report = SortBenchReport { n, threads: threads.max(1), records: Vec::new() };
+    let mut report = SortBenchReport {
+        n,
+        threads: threads.max(1),
+        launch: launch.clone(),
+        records: Vec::new(),
+    };
     for &dt in dtypes {
-        crate::dispatch_dtype!(dt, K => bench_dtype::<K>(n, report.threads, opts, &mut report)?);
+        crate::dispatch_dtype!(dt, K => bench_dtype::<K>(n, report.threads, launch, opts, &mut report)?);
     }
     Ok(report)
 }
 
 /// CLI entry point: run the grid (`--quick` trims dtypes and sampling),
 /// print a summary, and emit the JSON report to `out`.
-pub fn run_and_emit(n: usize, threads: usize, quick: bool, out: &Path) -> anyhow::Result<()> {
+pub fn run_and_emit(
+    n: usize,
+    threads: usize,
+    quick: bool,
+    out: &Path,
+    launch: &Launch,
+) -> anyhow::Result<()> {
     let opts = if quick { BenchOpts::quick() } else { BenchOpts::default() }.scaled_from_env();
     let dtypes: &[ElemType] =
         if quick { &[ElemType::I32, ElemType::F64] } else { &ElemType::ALL };
-    let report = run_sort_bench(n, threads, dtypes, &opts)?;
+    let report = run_sort_bench(n, threads, dtypes, &opts, launch)?;
     report.write_json(out)?;
     println!(
         "bench-sort: {} rows (n={}, threads={}) -> {}",
@@ -270,20 +327,24 @@ mod tests {
 
     #[test]
     fn report_covers_engines_and_json_parses() {
+        let launch = Launch::new().max_tasks(2);
         let report =
-            run_sort_bench(20_000, 2, &[ElemType::I32], &tiny_opts()).unwrap();
+            run_sort_bench(20_000, 2, &[ElemType::I32], &tiny_opts(), &launch).unwrap();
         // 5 in-place engines + 2 recombine engines.
         assert_eq!(report.records.len(), 7);
         assert!(report.get("sort-threaded", ElemType::I32).is_some());
         assert!(report.get("kmerge-par", ElemType::I32).is_some());
         assert!(report.records.iter().all(|r| r.bytes_per_sec > 0.0));
-        // The emitted JSON round-trips through the in-repo parser.
+        // The emitted JSON round-trips through the in-repo parser,
+        // including the launch metadata (reproducibility record).
         let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
-        assert_eq!(j.get("version").as_usize(), Some(1));
+        assert_eq!(j.get("version").as_usize(), Some(2));
         assert_eq!(j.get("results").as_arr().unwrap().len(), 7);
         assert_eq!(
             j.get("results").as_arr().unwrap()[0].get("engine").as_str(),
             Some("sort-native")
         );
+        assert_eq!(j.get("launch").get("max_tasks").as_usize(), Some(2));
+        assert_eq!(j.get("launch").get("block_size"), &crate::util::json::Json::Null);
     }
 }

@@ -343,6 +343,11 @@ pub struct RunConfig {
     /// Fixed hybrid host fraction (`--host-fraction`); `None` means the
     /// driver calibrates the split (`hybrid::calibrate`).
     pub hybrid_host_fraction: Option<f64>,
+    /// Per-call tuning knobs for every rank-local sort and recombine
+    /// (`--block-size` / `--max-tasks` / `--min-elems-per-task` /
+    /// `--par-threshold` / `--reuse-scratch`; `[run]` keys of the same
+    /// names — the `Session`/`Launch` API of DESIGN.md §12).
+    pub launch: crate::session::Launch,
 }
 
 impl Default for RunConfig {
@@ -363,6 +368,7 @@ impl Default for RunConfig {
             backend: None,
             host_threads: crate::backend::threaded::default_threads(),
             hybrid_host_fraction: None,
+            launch: crate::session::Launch::default(),
         }
     }
 }
@@ -413,6 +419,22 @@ impl RunConfig {
         if let Some(v) = doc.get("run", "host_fraction").and_then(|v| v.as_f64()) {
             anyhow::ensure!((0.0..=1.0).contains(&v), "host_fraction {v} outside [0, 1]");
             self.hybrid_host_fraction = Some(v);
+        }
+        // Launch knobs ([run] section, same names as the CLI flags).
+        if let Some(v) = doc.get("run", "block_size").and_then(|v| v.as_i64()) {
+            self.launch.block_size = Some((v.max(1)) as usize);
+        }
+        if let Some(v) = doc.get("run", "max_tasks").and_then(|v| v.as_i64()) {
+            self.launch.max_tasks = Some((v.max(1)) as usize);
+        }
+        if let Some(v) = doc.get("run", "min_elems_per_task").and_then(|v| v.as_i64()) {
+            self.launch.min_elems_per_task = Some((v.max(1)) as usize);
+        }
+        if let Some(v) = doc.get("run", "par_threshold").and_then(|v| v.as_i64()) {
+            self.launch.prefer_parallel_threshold = Some(v.max(0) as usize);
+        }
+        if let Some(v) = doc.get("run", "reuse_scratch").and_then(|v| v.as_bool()) {
+            self.launch.reuse_scratch = Some(v);
         }
         self.cluster.apply_toml(doc)?;
         Ok(())
@@ -512,6 +534,21 @@ mod tests {
 
         let bad = Toml::parse("[run]\nhost_fraction = 1.5\n").unwrap();
         assert!(RunConfig::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn launch_knobs_via_toml() {
+        let doc = Toml::parse(
+            "[run]\nmax_tasks = 3\nmin_elems_per_task = 4096\npar_threshold = 1000\nblock_size = 65536\nreuse_scratch = true\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.launch.max_tasks, Some(3));
+        assert_eq!(cfg.launch.min_elems_per_task, Some(4096));
+        assert_eq!(cfg.launch.prefer_parallel_threshold, Some(1000));
+        assert_eq!(cfg.launch.block_size, Some(65536));
+        assert_eq!(cfg.launch.reuse_scratch, Some(true));
     }
 
     #[test]

@@ -63,6 +63,14 @@ COMMON FLAGS
   --n N                element count for table2/calibrate/examples
   --threads N          host thread count: table2 rows and the hybrid
                        rank pool (sort/calibrate/figs)
+
+LAUNCH KNOBS (per-call tuning, Session/Launch API — DESIGN.md §12)
+  --max-tasks N        cap host worker tasks per call
+  --min-elems-per-task N  spawn no task for fewer elements
+  --par-threshold N    stay sequential below N elements (overrides the
+                       engine gates: chunk / merge-path / radix / co-split)
+  --block-size N       device chunk granule (elements per artifact call)
+  --reuse-scratch      reuse temp buffers across calls (session pool)
 ";
 
 impl Cli {
@@ -82,7 +90,7 @@ impl Cli {
             if let Some(name) = a.strip_prefix("--") {
                 // Boolean flags take no value; detect by peeking semantics:
                 // known boolean names are listed here.
-                if matches!(name, "quick" | "no-device" | "help" | "verify") {
+                if matches!(name, "quick" | "no-device" | "help" | "verify" | "reuse-scratch") {
                     cli.flags.insert(name.to_string(), "true".to_string());
                 } else {
                     let v = it
@@ -188,7 +196,31 @@ impl Cli {
         if let Some(v) = self.get_usize("refine-rounds")? {
             cfg.refine_rounds = v;
         }
+        cfg.launch = self.launch_overrides(cfg.launch.clone())?;
         Ok(cfg)
+    }
+
+    /// Overlay the launch-knob flags onto `base` (config-file values).
+    pub fn launch_overrides(
+        &self,
+        mut base: crate::session::Launch,
+    ) -> anyhow::Result<crate::session::Launch> {
+        if let Some(v) = self.get_usize("max-tasks")? {
+            base.max_tasks = Some(v.max(1));
+        }
+        if let Some(v) = self.get_usize("min-elems-per-task")? {
+            base.min_elems_per_task = Some(v.max(1));
+        }
+        if let Some(v) = self.get_usize("par-threshold")? {
+            base.prefer_parallel_threshold = Some(v);
+        }
+        if let Some(v) = self.get_usize("block-size")? {
+            base.block_size = Some(v.max(1));
+        }
+        if self.has("reuse-scratch") {
+            base.reuse_scratch = Some(true);
+        }
+        Ok(base)
     }
 }
 
@@ -235,6 +267,23 @@ mod tests {
     fn bad_enum_values_error() {
         let c = Cli::parse(args("sort --dtype nope")).unwrap();
         assert!(c.run_config().is_err());
+    }
+
+    #[test]
+    fn launch_flags_flow_into_config() {
+        let c = Cli::parse(args(
+            "sort --max-tasks 3 --min-elems-per-task 2048 --par-threshold 512 --block-size 65536 --reuse-scratch",
+        ))
+        .unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.launch.max_tasks, Some(3));
+        assert_eq!(cfg.launch.min_elems_per_task, Some(2048));
+        assert_eq!(cfg.launch.prefer_parallel_threshold, Some(512));
+        assert_eq!(cfg.launch.block_size, Some(65536));
+        assert_eq!(cfg.launch.reuse_scratch, Some(true));
+        // Bool flag takes no value: the next token stays positional.
+        let c = Cli::parse(args("sort --reuse-scratch extra")).unwrap();
+        assert_eq!(c.positional, vec!["extra"]);
     }
 
     #[test]

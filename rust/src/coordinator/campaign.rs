@@ -222,9 +222,9 @@ pub fn table2(
     rt: &Option<Arc<Runtime>>,
     quick: bool,
 ) -> anyhow::Result<()> {
-    use crate::algorithms::{ljg, ljg_powf, rbf, LjgConsts};
-    use crate::backend::Backend;
+    use crate::algorithms::LjgConsts;
     use crate::bench::{BenchOpts, Bencher};
+    use crate::session::Session;
     use crate::util::Prng;
     use crate::workload::{points_f32, positions_f32};
 
@@ -237,35 +237,37 @@ pub fn table2(
     let p2 = positions_f32(&mut rng, n, 4.0);
     let c = LjgConsts::default();
     let bytes = Some((3 * n * 4) as f64);
+    let native = Session::native();
+    let pool = Session::threaded(threads);
+    let device =
+        rt.as_ref().map(|rt| Session::device(crate::runtime::Registry::new(rt.clone())));
 
     println!("-- Radial Basis Function kernel --");
     b.run("rbf/native-1t        (Julia Base / C row)", bytes, || {
-        let _ = rbf(&Backend::Native, &pts).unwrap();
+        let _ = native.rbf(&pts, None).unwrap();
     });
     b.run(&format!("rbf/threaded-{threads}t       (C OpenMP / AK-CPU row)"), bytes, || {
-        let _ = rbf(&Backend::Threaded(threads), &pts).unwrap();
+        let _ = pool.rbf(&pts, None).unwrap();
     });
-    if let Some(rt) = rt {
-        let dev = Backend::device(crate::runtime::Registry::new(rt.clone()));
+    if let Some(dev) = &device {
         b.run("rbf/device            (AK GPU row, XLA artifact)", bytes, || {
-            let _ = rbf(&dev, &pts).unwrap();
+            let _ = dev.rbf(&pts, None).unwrap();
         });
     }
 
     println!("-- Lennard-Jones-Gauss potential kernel --");
     b.run("ljg/native-1t-mult    (Julia Base row: expanded powers)", bytes, || {
-        let _ = ljg(&Backend::Native, &p1, &p2, c).unwrap();
+        let _ = native.ljg(&p1, &p2, c, None).unwrap();
     });
     b.run("ljg/native-1t-powf    (naive C row: libm powf)", bytes, || {
-        let _ = ljg_powf(&Backend::Native, &p1, &p2, c).unwrap();
+        let _ = native.ljg_powf(&p1, &p2, c, None).unwrap();
     });
     b.run(&format!("ljg/threaded-{threads}t       (C OpenMP / AK-CPU row)"), bytes, || {
-        let _ = ljg(&Backend::Threaded(threads), &p1, &p2, c).unwrap();
+        let _ = pool.ljg(&p1, &p2, c, None).unwrap();
     });
-    if let Some(rt) = rt {
-        let dev = Backend::device(crate::runtime::Registry::new(rt.clone()));
+    if let Some(dev) = &device {
         b.run("ljg/device            (AK GPU row, XLA artifact)", bytes, || {
-            let _ = ljg(&dev, &p1, &p2, c).unwrap();
+            let _ = dev.ljg(&p1, &p2, c, None).unwrap();
         });
     }
 

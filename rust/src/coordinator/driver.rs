@@ -123,6 +123,7 @@ pub fn run_distributed_sort_mixed<K: DeviceKey + KeyGen>(
         balance_tol: cfg.balance_tol,
         final_phase: cfg.final_phase,
         devmodel: DeviceModel::new(cfg.cluster.gpu_speedup),
+        launch: cfg.launch.clone(),
     };
 
     let wall0 = Instant::now();

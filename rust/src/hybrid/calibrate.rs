@@ -9,7 +9,7 @@
 
 use std::time::Instant;
 
-use crate::backend::{Backend, DeviceKey, DeviceOps};
+use crate::backend::{DeviceKey, DeviceOps};
 use crate::cluster::DeviceModel;
 use crate::util::Prng;
 use crate::workload::{generate, Distribution, KeyGen};
@@ -96,20 +96,20 @@ pub fn calibrate_sort<K: DeviceKey + KeyGen>(
 ) -> anyhow::Result<SortCalibration> {
     let n = n.max(1024);
     let xs: Vec<K> = generate(&mut Prng::new(0xCA11B8), Distribution::Uniform, n);
-    let host = Backend::Threaded(host_threads.max(1));
+    let host = crate::session::Session::threaded(host_threads.max(1));
 
     // Warm-up (thread spawn paths, branch predictors), then measure.
     let mut buf = xs.clone();
-    crate::algorithms::sort(&host, &mut buf)?;
+    host.sort(&mut buf, None)?;
     let mut buf = xs.clone();
     let t0 = Instant::now();
-    crate::algorithms::sort(&host, &mut buf)?;
+    host.sort(&mut buf, None)?;
     let host_secs = t0.elapsed().as_secs_f64().max(1e-9);
 
     // Single-thread baseline for the device model.
     let mut buf = xs.clone();
     let t0 = Instant::now();
-    crate::algorithms::sort(&Backend::Native, &mut buf)?;
+    crate::session::Session::native().sort(&mut buf, None)?;
     let single_thread_secs = t0.elapsed().as_secs_f64().max(1e-9);
 
     let device_elems_per_sec = match device {

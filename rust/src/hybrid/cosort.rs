@@ -9,16 +9,27 @@
 //! (DESIGN.md §11), operator fold for reductions, nothing for index
 //! loops. Outputs are bit-identical to the single engine paths —
 //! asserted by the proptests.
+//!
+//! The session layer reaches these through the `*_launch` variants,
+//! which thread the per-call [`Launch`] knobs into the co-split gate
+//! (`prefer_parallel_threshold` overrides [`MIN_COSPLIT`]), the host
+//! pool width (`max_tasks` / `min_elems_per_task`) and the device chunk
+//! granule (`block_size`).
 
-use crate::algorithms::reduce::{ReduceKind, Reducible};
+use crate::algorithms::predicates::host_any;
+use crate::algorithms::reduce::{host_reduce, ReduceKind, Reducible};
+use crate::algorithms::sort::threaded_sort;
 use crate::backend::{Backend, DeviceKey, DeviceOps};
 use crate::baselines::merge_path;
+use crate::dtype::SortKey;
+use crate::session::{AkError, AkResult, Launch, DEFAULT_PAR_THRESHOLD};
 
 use super::plan::HybridPlan;
 
 /// Minimum input length for engine splitting: below this, thread-spawn
 /// and merge overhead beats any overlap win, so the whole call runs on
-/// one engine.
+/// one engine. Overridable per call via
+/// `Launch::prefer_parallel_threshold`.
 pub const MIN_COSPLIT: usize = 8192;
 
 /// The hybrid execution engine: a host thread pool plus a device engine.
@@ -82,11 +93,18 @@ impl HybridEngine {
 
     /// Route a call over `n` elements: one engine for small inputs and
     /// degenerate splits, otherwise a concurrent two-engine split. Every
-    /// co-processing entry point (and `algorithms::search`) shares this
-    /// rule, so device-only plans consistently reach the device engine.
+    /// co-processing entry point (and the session's hybrid search)
+    /// shares this rule, so device-only plans consistently reach the
+    /// device engine.
     pub fn route(&self, n: usize) -> CoRoute {
+        self.route_with(n, MIN_COSPLIT)
+    }
+
+    /// [`HybridEngine::route`] with an explicit co-split gate (the
+    /// `Launch::prefer_parallel_threshold` override).
+    pub fn route_with(&self, n: usize, min_split: usize) -> CoRoute {
         let split = self.plan.split_index(n);
-        if n < MIN_COSPLIT || split == n {
+        if n < min_split.max(2) || split == n {
             // Tiny inputs always take the host pool — cheaper than a
             // spawn, regardless of the plan.
             CoRoute::Host
@@ -115,12 +133,90 @@ impl std::fmt::Debug for HybridEngine {
     }
 }
 
-fn join_flat<T>(res: std::thread::Result<anyhow::Result<T>>, who: &str) -> anyhow::Result<T> {
+fn join_flat<T>(res: std::thread::Result<AkResult<T>>, who: &str, op: &str) -> AkResult<T> {
     match res {
         Ok(inner) => inner,
-        Err(_) => Err(anyhow::anyhow!("{who} co-processing worker panicked")),
+        Err(_) => Err(AkError::panicked(who, op)),
     }
 }
+
+// ---- per-shard engines ------------------------------------------------------
+
+/// Host-shard sort: the threaded chunk-sort + merge-path engine with the
+/// launch's worker/gate knobs. `scratch` is the merge buffer (the
+/// session's pooled buffer on the whole-host route, a shard-local one
+/// inside a concurrent split).
+fn host_shard_sort<K: SortKey>(
+    eng: &HybridEngine,
+    xs: &mut [K],
+    l: &Launch,
+    scratch: &mut Vec<K>,
+) -> AkResult<()> {
+    let t = l.tasks_for(eng.host_threads, xs.len());
+    threaded_sort(
+        xs,
+        t,
+        l.par_threshold_or(DEFAULT_PAR_THRESHOLD),
+        l.par_threshold_or(merge_path::PAR_MERGE_MIN),
+        scratch,
+    );
+    Ok(())
+}
+
+/// Device-shard sort: the artifact engine when one is attached (with
+/// the launch's `block_size` granule), the documented single-thread
+/// host stand-in otherwise — including for dtypes without an XLA
+/// family (i128): the hybrid engine owns a host pool, so the shard
+/// degrades like `device_shard_reduce` does instead of failing the
+/// whole co-sort (the pure `Backend::Device` sort is the strict,
+/// typed-error path — DESIGN.md §12).
+fn device_shard_sort<K: DeviceKey>(eng: &HybridEngine, xs: &mut [K], l: &Launch) -> AkResult<()> {
+    match &eng.device {
+        Some(dev) if K::XLA => {
+            dev.sort_blocked(xs, l.block_size).map_err(|e| AkError::device("co_sort", e))
+        }
+        _ => {
+            xs.sort_unstable_by(|a, b| a.cmp_total(b));
+            Ok(())
+        }
+    }
+}
+
+fn device_shard_reduce<K: Reducible>(
+    eng: &HybridEngine,
+    xs: &[K],
+    kind: ReduceKind,
+    l: &Launch,
+) -> AkResult<K> {
+    match &eng.device {
+        Some(dev) if K::XLA => {
+            if kind == ReduceKind::Add && xs.len() <= l.switch_below_or(0) {
+                return dev.reduce_partials_add_shim(xs).map_err(|e| AkError::device("co_reduce", e));
+            }
+            dev.reduce(xs, kind.op_name(), K::identity(kind), |a, b| K::fold(kind, a, b))
+                .map_err(|e| AkError::device("co_reduce", e))
+        }
+        // i128 or no device: the documented host stand-in.
+        _ => Ok(host_reduce(xs, kind)),
+    }
+}
+
+fn host_shard_reduce<K: Reducible>(
+    eng: &HybridEngine,
+    xs: &[K],
+    kind: ReduceKind,
+    l: &Launch,
+) -> K {
+    let t = l.tasks_for(eng.host_threads, xs.len());
+    if t <= 1 || xs.len() < l.par_threshold_or(DEFAULT_PAR_THRESHOLD) {
+        return host_reduce(xs, kind);
+    }
+    let partials =
+        crate::backend::parallel_for_each_chunk(xs.len(), t, |r| host_reduce(&xs[r], kind));
+    partials.into_iter().fold(K::identity(kind), |a, b| K::fold(kind, a, b))
+}
+
+// ---- co-processing entry points ---------------------------------------------
 
 /// Hybrid co-sort — the flagship: split at the plan, sort both shards
 /// concurrently (host thread pool ∥ device engine), then recombine with
@@ -135,60 +231,96 @@ fn join_flat<T>(res: std::thread::Result<anyhow::Result<T>>, who: &str) -> anyho
 /// co_sort(&eng, &mut v).unwrap();
 /// assert_eq!(v, vec![-8, -3, 0, 2, 4, 5, 7, 9]);
 /// ```
-pub fn co_sort<K: DeviceKey>(eng: &HybridEngine, xs: &mut [K]) -> anyhow::Result<()> {
-    let split = match eng.route(xs.len()) {
-        CoRoute::Host => return crate::algorithms::sort(&eng.host_backend(), xs),
-        CoRoute::Device => return crate::algorithms::sort(&eng.device_backend(), xs),
+pub fn co_sort<K: DeviceKey>(eng: &HybridEngine, xs: &mut [K]) -> AkResult<()> {
+    co_sort_launch(eng, xs, &Launch::default())
+}
+
+/// [`co_sort`] with per-call [`Launch`] knobs (the session's hybrid
+/// sort dispatch).
+pub fn co_sort_launch<K: DeviceKey>(
+    eng: &HybridEngine,
+    xs: &mut [K],
+    l: &Launch,
+) -> AkResult<()> {
+    let mut scratch: Vec<K> = Vec::new();
+    co_sort_scratch(eng, xs, l, &mut scratch)
+}
+
+/// [`co_sort_launch`] with a caller-owned recombine scratch buffer —
+/// how `Launch::reuse_scratch` reaches the hybrid path: the session
+/// hands its pooled n-element buffer in here (the dominant allocation;
+/// the concurrent host shard keeps a shard-local buffer, since it runs
+/// while the pooled one is reserved for the recombine).
+pub(crate) fn co_sort_scratch<K: DeviceKey>(
+    eng: &HybridEngine,
+    xs: &mut [K],
+    l: &Launch,
+    scratch: &mut Vec<K>,
+) -> AkResult<()> {
+    let split = match eng.route_with(xs.len(), l.par_threshold_or(MIN_COSPLIT)) {
+        CoRoute::Host => return host_shard_sort(eng, xs, l, scratch),
+        CoRoute::Device => return device_shard_sort(eng, xs, l),
         CoRoute::Split(split) => split,
     };
-    let host_backend = eng.host_backend();
-    let dev_backend = eng.device_backend();
     let (host_half, dev_half) = xs.split_at_mut(split);
     let (host_res, dev_res) = std::thread::scope(|s| {
-        let h = s.spawn(move || crate::algorithms::sort(&host_backend, host_half));
-        let d = s.spawn(move || crate::algorithms::sort(&dev_backend, dev_half));
+        let h = s.spawn(move || {
+            let mut shard_scratch: Vec<K> = Vec::new();
+            host_shard_sort(eng, host_half, l, &mut shard_scratch)
+        });
+        let d = s.spawn(move || device_shard_sort(eng, dev_half, l));
         (h.join(), d.join())
     });
-    join_flat(host_res, "host")?;
-    join_flat(dev_res, "device")?;
+    join_flat(host_res, "host", "co_sort")?;
+    join_flat(dev_res, "device", "co_sort")?;
     // Recombine on the host pool: merge-path partitioned 2-way merge
     // (DESIGN.md §11) — each of the host threads produces one contiguous
     // segment of the merged output, then the copy-back runs on the same
     // pool, so no recombine sweep caps at one core's bandwidth.
-    merge_path::merge_runs_in_place(xs, &[split], eng.host_threads.max(1));
+    let t = l.tasks_for(eng.host_threads, xs.len());
+    merge_path::merge_runs_in_place_with(
+        xs,
+        &[split],
+        t,
+        l.par_threshold_or(merge_path::PAR_MERGE_MIN),
+        scratch,
+    );
     Ok(())
 }
 
 /// Hybrid co-reduce: both engines reduce their shard concurrently, the
-/// partials fold on the host. `switch_below` is forwarded to the device
-/// shard (paper §II-B's device-sync-masking rule).
+/// partials fold on the host. The `switch_below` launch knob is
+/// forwarded to the device shard (paper §II-B's device-sync-masking
+/// rule).
 pub fn co_reduce<K: Reducible>(
     eng: &HybridEngine,
     xs: &[K],
     kind: ReduceKind,
     switch_below: usize,
-) -> anyhow::Result<K> {
-    let split = match eng.route(xs.len()) {
-        CoRoute::Host => {
-            return crate::algorithms::reduce(&eng.host_backend(), xs, kind, switch_below)
-        }
-        CoRoute::Device => {
-            return crate::algorithms::reduce(&eng.device_backend(), xs, kind, switch_below)
-        }
+) -> AkResult<K> {
+    co_reduce_launch(eng, xs, kind, &Launch::new().switch_below(switch_below))
+}
+
+/// [`co_reduce`] with per-call [`Launch`] knobs.
+pub fn co_reduce_launch<K: Reducible>(
+    eng: &HybridEngine,
+    xs: &[K],
+    kind: ReduceKind,
+    l: &Launch,
+) -> AkResult<K> {
+    let split = match eng.route_with(xs.len(), l.par_threshold_or(MIN_COSPLIT)) {
+        CoRoute::Host => return Ok(host_shard_reduce(eng, xs, kind, l)),
+        CoRoute::Device => return device_shard_reduce(eng, xs, kind, l),
         CoRoute::Split(split) => split,
     };
-    let host_backend = eng.host_backend();
-    let dev_backend = eng.device_backend();
     let (host_half, dev_half) = xs.split_at(split);
     let (host_res, dev_res) = std::thread::scope(|s| {
-        let h =
-            s.spawn(move || crate::algorithms::reduce(&host_backend, host_half, kind, switch_below));
-        let d =
-            s.spawn(move || crate::algorithms::reduce(&dev_backend, dev_half, kind, switch_below));
+        let h = s.spawn(move || Ok(host_shard_reduce(eng, host_half, kind, l)));
+        let d = s.spawn(move || device_shard_reduce(eng, dev_half, kind, l));
         (h.join(), d.join())
     });
-    let a = join_flat(host_res, "host")?;
-    let b = join_flat(dev_res, "device")?;
+    let a = join_flat(host_res, "host", "co_reduce")?;
+    let b = join_flat(dev_res, "device", "co_reduce")?;
     Ok(K::fold(kind, a, b))
 }
 
@@ -201,29 +333,49 @@ pub fn co_foreachindex<F>(eng: &HybridEngine, len: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
-    let threads = eng.host_threads.max(1);
+    co_foreachindex_launch(eng, len, &f, &Launch::default());
+}
+
+/// [`co_foreachindex`] with per-call [`Launch`] knobs.
+pub fn co_foreachindex_launch<F>(eng: &HybridEngine, len: usize, f: &F, l: &Launch)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = l.tasks_for(eng.host_threads, len);
     // The foreach "device engine" is always a sequential walk (arbitrary
     // closures cannot cross the AOT boundary), so cap its shard at one
     // worker's share no matter how device-heavy the sort-calibrated plan
     // is — otherwise a device-heavy plan collapses the loop to
     // single-thread throughput.
     let split = eng.plan.split_index(len).max(len.saturating_sub(len / (threads + 1)));
-    if len < MIN_COSPLIT || split == len {
-        crate::algorithms::foreachindex(&eng.host_backend(), len, f);
+    if len < l.par_threshold_or(MIN_COSPLIT).max(2) || split == len {
+        // Whole call on the host pool — same sequential gate as a
+        // Threaded session, so `prefer_parallel_threshold` forces the
+        // sequential engine here too.
+        if threads <= 1 || len < l.par_threshold_or(DEFAULT_PAR_THRESHOLD) {
+            for i in 0..len {
+                f(i);
+            }
+            return;
+        }
+        crate::backend::parallel_for_each_chunk(len, threads, |r| {
+            for i in r {
+                f(i);
+            }
+        });
         return;
     }
-    let fr = &f;
     std::thread::scope(|s| {
         s.spawn(move || {
             crate::backend::parallel_for_each_chunk(split, threads, |r| {
                 for i in r {
-                    fr(i);
+                    f(i);
                 }
             });
         });
         s.spawn(move || {
             for i in split..len {
-                fr(i);
+                f(i);
             }
         });
     });
@@ -235,73 +387,159 @@ pub fn co_foreach_mut<T: Send, F>(eng: &HybridEngine, xs: &mut [T], f: F)
 where
     F: Fn(usize, &mut T) + Sync,
 {
+    co_foreach_mut_launch(eng, xs, &f, &Launch::default());
+}
+
+/// [`co_foreach_mut`] with per-call [`Launch`] knobs.
+pub fn co_foreach_mut_launch<T: Send, F>(eng: &HybridEngine, xs: &mut [T], f: &F, l: &Launch)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
     let n = xs.len();
-    let threads = eng.host_threads.max(1);
+    let threads = l.tasks_for(eng.host_threads, n);
     // Same sequential-walk cap as `co_foreachindex`.
     let split = eng.plan.split_index(n).max(n.saturating_sub(n / (threads + 1)));
-    if n < MIN_COSPLIT || split == n {
-        crate::algorithms::foreach::foreach_mut(&eng.host_backend(), xs, f);
+    if n < l.par_threshold_or(MIN_COSPLIT).max(2) || split == n {
+        // Same sequential gate as `co_foreachindex_launch`.
+        if threads <= 1 || n < l.par_threshold_or(DEFAULT_PAR_THRESHOLD) {
+            for (i, x) in xs.iter_mut().enumerate() {
+                f(i, x);
+            }
+            return;
+        }
+        let ranges = crate::backend::threaded::split_ranges(n, threads);
+        crate::backend::parallel_chunks(xs, threads, |ci, chunk| {
+            let base = ranges[ci].start;
+            for (j, x) in chunk.iter_mut().enumerate() {
+                f(base + j, x);
+            }
+        });
         return;
     }
     let (host_half, dev_half) = xs.split_at_mut(split);
-    let fr = &f;
     std::thread::scope(|s| {
         s.spawn(move || {
             let ranges = crate::backend::threaded::split_ranges(host_half.len(), threads);
             crate::backend::parallel_chunks(host_half, threads, |ci, chunk| {
                 let base = ranges[ci].start;
                 for (j, x) in chunk.iter_mut().enumerate() {
-                    fr(base + j, x);
+                    f(base + j, x);
                 }
             });
         });
         s.spawn(move || {
             for (j, x) in dev_half.iter_mut().enumerate() {
-                fr(split + j, x);
+                f(split + j, x);
             }
         });
     });
 }
 
-/// Hybrid `any(x > t)`: both engines scan their shard concurrently with
-/// their own early exit; the results OR.
-pub fn co_any_gt(eng: &HybridEngine, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
-    let split = match eng.route(xs.len()) {
-        CoRoute::Host => return crate::algorithms::any_gt(&eng.host_backend(), xs, threshold),
-        CoRoute::Device => {
-            return crate::algorithms::any_gt(&eng.device_backend(), xs, threshold)
+fn device_shard_any<K: DeviceKey>(
+    eng: &HybridEngine,
+    xs: &[K],
+    threshold: K,
+    _l: &Launch,
+) -> AkResult<bool> {
+    match &eng.device {
+        Some(dev) if K::XLA && dev.registry().supports("any_gt", K::ELEM) => {
+            dev.any_gt(xs, threshold).map_err(|e| AkError::device("co_any_gt", e))
         }
+        _ => Ok(xs.iter().any(|&x| x > threshold)),
+    }
+}
+
+fn device_shard_all<K: DeviceKey>(
+    eng: &HybridEngine,
+    xs: &[K],
+    threshold: K,
+    _l: &Launch,
+) -> AkResult<bool> {
+    match &eng.device {
+        Some(dev) if K::XLA && dev.registry().supports("all_gt", K::ELEM) => {
+            dev.all_gt(xs, threshold).map_err(|e| AkError::device("co_all_gt", e))
+        }
+        _ => Ok(xs.iter().all(|&x| x > threshold)),
+    }
+}
+
+fn host_shard_any<K: DeviceKey>(eng: &HybridEngine, xs: &[K], threshold: K, l: &Launch) -> bool {
+    host_any(
+        xs,
+        l.tasks_for(eng.host_threads, xs.len()),
+        l.par_threshold_or(DEFAULT_PAR_THRESHOLD),
+        |x: K| x > threshold,
+    )
+}
+
+/// Hybrid `any(x > t)` for every sortable dtype: both engines scan
+/// their shard concurrently with their own early exit; the results OR.
+pub fn co_any_gt<K: DeviceKey>(eng: &HybridEngine, xs: &[K], threshold: K) -> AkResult<bool> {
+    co_any_gt_launch(eng, xs, threshold, &Launch::default())
+}
+
+/// [`co_any_gt`] with per-call [`Launch`] knobs.
+pub fn co_any_gt_launch<K: DeviceKey>(
+    eng: &HybridEngine,
+    xs: &[K],
+    threshold: K,
+    l: &Launch,
+) -> AkResult<bool> {
+    let split = match eng.route_with(xs.len(), l.par_threshold_or(MIN_COSPLIT)) {
+        CoRoute::Host => return Ok(host_shard_any(eng, xs, threshold, l)),
+        CoRoute::Device => return device_shard_any(eng, xs, threshold, l),
         CoRoute::Split(split) => split,
     };
-    let host_backend = eng.host_backend();
-    let dev_backend = eng.device_backend();
     let (a, b) = xs.split_at(split);
     let (host_res, dev_res) = std::thread::scope(|s| {
-        let h = s.spawn(move || crate::algorithms::any_gt(&host_backend, a, threshold));
-        let d = s.spawn(move || crate::algorithms::any_gt(&dev_backend, b, threshold));
+        let h = s.spawn(move || Ok(host_shard_any(eng, a, threshold, l)));
+        let d = s.spawn(move || device_shard_any(eng, b, threshold, l));
         (h.join(), d.join())
     });
-    Ok(join_flat(host_res, "host")? || join_flat(dev_res, "device")?)
+    Ok(join_flat(host_res, "host", "co_any_gt")? || join_flat(dev_res, "device", "co_any_gt")?)
 }
 
 /// Hybrid `all(x > t)`: both engines scan concurrently; the results AND.
-pub fn co_all_gt(eng: &HybridEngine, xs: &[f32], threshold: f32) -> anyhow::Result<bool> {
-    let split = match eng.route(xs.len()) {
-        CoRoute::Host => return crate::algorithms::all_gt(&eng.host_backend(), xs, threshold),
-        CoRoute::Device => {
-            return crate::algorithms::all_gt(&eng.device_backend(), xs, threshold)
+pub fn co_all_gt<K: DeviceKey>(eng: &HybridEngine, xs: &[K], threshold: K) -> AkResult<bool> {
+    co_all_gt_launch(eng, xs, threshold, &Launch::default())
+}
+
+/// [`co_all_gt`] with per-call [`Launch`] knobs.
+pub fn co_all_gt_launch<K: DeviceKey>(
+    eng: &HybridEngine,
+    xs: &[K],
+    threshold: K,
+    l: &Launch,
+) -> AkResult<bool> {
+    let split = match eng.route_with(xs.len(), l.par_threshold_or(MIN_COSPLIT)) {
+        CoRoute::Host => {
+            // Hunt for a counterexample of `x > t` (IEEE: NaN is one).
+            let counter = host_any(
+                xs,
+                l.tasks_for(eng.host_threads, xs.len()),
+                l.par_threshold_or(DEFAULT_PAR_THRESHOLD),
+                |x: K| !matches!(x.partial_cmp(&threshold), Some(std::cmp::Ordering::Greater)),
+            );
+            return Ok(!counter);
         }
+        CoRoute::Device => return device_shard_all(eng, xs, threshold, l),
         CoRoute::Split(split) => split,
     };
-    let host_backend = eng.host_backend();
-    let dev_backend = eng.device_backend();
     let (a, b) = xs.split_at(split);
     let (host_res, dev_res) = std::thread::scope(|s| {
-        let h = s.spawn(move || crate::algorithms::all_gt(&host_backend, a, threshold));
-        let d = s.spawn(move || crate::algorithms::all_gt(&dev_backend, b, threshold));
+        let h = s.spawn(move || {
+            let counter = host_any(
+                a,
+                l.tasks_for(eng.host_threads, a.len()),
+                l.par_threshold_or(DEFAULT_PAR_THRESHOLD),
+                |x: K| !matches!(x.partial_cmp(&threshold), Some(std::cmp::Ordering::Greater)),
+            );
+            Ok(!counter)
+        });
+        let d = s.spawn(move || device_shard_all(eng, b, threshold, l));
         (h.join(), d.join())
     });
-    Ok(join_flat(host_res, "host")? && join_flat(dev_res, "device")?)
+    Ok(join_flat(host_res, "host", "co_all_gt")? && join_flat(dev_res, "device", "co_all_gt")?)
 }
 
 #[cfg(test)]
@@ -368,6 +606,23 @@ mod tests {
     }
 
     #[test]
+    fn cosort_launch_knobs_preserve_results() {
+        let xs: Vec<i64> = generate(&mut Prng::new(12), Distribution::Uniform, MIN_COSPLIT * 3);
+        let mut want = xs.clone();
+        want.sort_unstable();
+        for l in [
+            Launch::new().max_tasks(1),
+            Launch::new().min_elems_per_task(MIN_COSPLIT),
+            Launch::new().prefer_parallel_threshold(64),
+            Launch::new().prefer_parallel_threshold(usize::MAX),
+        ] {
+            let mut got = xs.clone();
+            co_sort_launch(&engine(0.5), &mut got, &l).unwrap();
+            assert_eq!(got, want, "{l:?}");
+        }
+    }
+
+    #[test]
     fn coreduce_matches_host() {
         let xs: Vec<i64> = generate(&mut Prng::new(9), Distribution::Uniform, 30_000);
         let want: i64 = xs.iter().fold(0i64, |a, &b| a.wrapping_add(b));
@@ -417,6 +672,18 @@ mod tests {
     }
 
     #[test]
+    fn copredicates_generic_dtypes() {
+        let n = MIN_COSPLIT * 2;
+        let mut xs = vec![0i64; n];
+        xs[n - 3] = 9;
+        let eng = engine(0.5);
+        assert!(co_any_gt(&eng, &xs, 5i64).unwrap());
+        assert!(!co_any_gt(&eng, &xs, 9i64).unwrap());
+        assert!(co_all_gt(&eng, &xs, -1i64).unwrap());
+        assert!(!co_all_gt(&eng, &xs, 0i64).unwrap());
+    }
+
+    #[test]
     fn engine_describe_mentions_plan() {
         let eng = engine(0.25);
         assert!(eng.describe().contains("25%"));
@@ -433,5 +700,8 @@ mod tests {
         assert_eq!(engine(1.0).route(MIN_COSPLIT), CoRoute::Host);
         // Proper fractions split.
         assert_eq!(engine(0.5).route(MIN_COSPLIT * 2), CoRoute::Split(MIN_COSPLIT));
+        // The launch gate moves the split point.
+        assert_eq!(engine(0.5).route_with(1000, 500), CoRoute::Split(500));
+        assert_eq!(engine(0.5).route_with(1000, 2000), CoRoute::Host);
     }
 }

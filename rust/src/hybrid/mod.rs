@@ -27,7 +27,8 @@ pub mod plan;
 
 pub use calibrate::{calibrate_sort, SortCalibration};
 pub use cosort::{
-    co_all_gt, co_any_gt, co_foreach_mut, co_foreachindex, co_reduce, co_sort, CoRoute,
-    HybridEngine, MIN_COSPLIT,
+    co_all_gt, co_all_gt_launch, co_any_gt, co_any_gt_launch, co_foreach_mut,
+    co_foreach_mut_launch, co_foreachindex, co_foreachindex_launch, co_reduce, co_reduce_launch,
+    co_sort, co_sort_launch, CoRoute, HybridEngine, MIN_COSPLIT,
 };
 pub use plan::HybridPlan;

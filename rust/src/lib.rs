@@ -12,11 +12,13 @@
 //! * **L2** — JAX graphs (`python/compile/model.py`) composing the
 //!   kernels, AOT-lowered once to HLO text (`artifacts/`).
 //! * **L3** — this crate: the [`runtime`] loads the artifacts via PJRT,
-//!   the [`algorithms`] suite exposes the paper's API over pluggable
-//!   [`backend`]s, [`hybrid`] composes host and device engines into one
-//!   CPU–GPU co-processing call (DESIGN.md §10), and [`mpisort`]
-//!   implements the SIHSort multi-node sorting coordinator over a
-//!   simulated HPC [`cluster`] with an MPI-like [`comm`] layer.
+//!   the [`session`] API ([`Session`]/[`Launch`]) exposes the paper's
+//!   unified call surface — per-call tuning knobs, typed [`AkError`]s —
+//!   over pluggable [`backend`]s (host engines live in [`algorithms`]),
+//!   [`hybrid`] composes host and device engines into one CPU–GPU
+//!   co-processing call (DESIGN.md §10), and [`mpisort`] implements the
+//!   SIHSort multi-node sorting coordinator over a simulated HPC
+//!   [`cluster`] with an MPI-like [`comm`] layer.
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
@@ -38,8 +40,11 @@ pub mod metrics;
 pub mod mpisort;
 pub mod prop;
 pub mod runtime;
+pub mod session;
 pub mod util;
 pub mod workload;
+
+pub use session::{AkError, AkResult, Launch, Session};
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -138,16 +138,19 @@ fn run(cli: &Cli) -> anyhow::Result<()> {
             // Host sort engine throughput sweep -> BENCH_sort.json
             // (DESIGN.md §11). Also a correctness gate: cross-engine
             // divergence is a hard error, which is what CI relies on.
+            // The active Launch knobs ride into the JSON metadata.
             let n = cli.get_usize("n")?.unwrap_or(if quick { 1 << 20 } else { 1 << 22 });
             let threads = cli
                 .get_usize("threads")?
                 .unwrap_or_else(accelkern::backend::threaded::default_threads);
             let out = cli.get("out").unwrap_or("BENCH_sort.json").to_string();
+            let launch = cli.launch_overrides(accelkern::session::Launch::default())?;
             accelkern::bench::sort_bench::run_and_emit(
                 n,
                 threads,
                 quick,
                 std::path::Path::new(&out),
+                &launch,
             )
         }
         "calibrate" => {

@@ -2,13 +2,14 @@
 //! plus this repo's HY hybrid co-sorter (DESIGN.md §10).
 //!
 //! * `JuliaBase` — single-thread comparison sort on a CPU rank.
-//! * `Ak` — the AcceleratedKernels merge sort: our Pallas/XLA artifact
-//!   through PJRT (i128: host merge fallback, DESIGN.md §2).
+//! * `Ak` — the AcceleratedKernels merge sort: a [`Session`] over the
+//!   Pallas/XLA artifact engine (or its host stand-in pre-artifacts).
 //! * `ThrustMerge` / `ThrustRadix` — the vendor-primitive analogs
-//!   (`baselines`).
-//! * `Hybrid` — the rank's host thread pool and its device engine sort
-//!   disjoint sub-shards concurrently and k-way merge
-//!   (`crate::hybrid::co_sort`): SIHSort ranks co-sort their shards.
+//!   (`baselines`); TR's worker count and parallel gate follow the
+//!   run's [`Launch`] knobs.
+//! * `Hybrid` — a [`Session`] over the hybrid engine: the rank's host
+//!   thread pool and its device engine sort disjoint sub-shards
+//!   concurrently and merge (`crate::hybrid::co_sort`).
 //!
 //! Each sorter measures its own wall time; the caller converts it to
 //! simulated device time through `cluster::DeviceModel`.
@@ -19,20 +20,21 @@ use crate::backend::{Backend, DeviceKey};
 use crate::baselines;
 use crate::cfg::Sorter;
 use crate::hybrid::HybridEngine;
+use crate::session::{Launch, Session};
 
 /// A rank's local sorting engine.
 #[derive(Clone)]
 pub enum LocalSorter {
     /// Single-thread comparison sort ("CC-JB").
     JuliaBase,
-    /// AcceleratedKernels merge sort over the given backend ("AK").
-    Ak(Backend),
+    /// AcceleratedKernels merge sort over a session ("AK").
+    Ak(Session),
     /// Vendor merge-sort analog ("TM").
     ThrustMerge,
     /// Vendor radix-sort analog ("TR").
     ThrustRadix,
-    /// Hybrid CPU–GPU co-sort ("HY", DESIGN.md §10).
-    Hybrid(HybridEngine),
+    /// Hybrid CPU–GPU co-sort session ("HY", DESIGN.md §10).
+    Hybrid(Session),
 }
 
 impl LocalSorter {
@@ -45,15 +47,15 @@ impl LocalSorter {
     ) -> anyhow::Result<Self> {
         Ok(match sorter {
             Sorter::JuliaBase => LocalSorter::JuliaBase,
-            Sorter::Ak => LocalSorter::Ak(
+            Sorter::Ak => LocalSorter::Ak(Session::from_backend(
                 device_backend
                     .ok_or_else(|| anyhow::anyhow!("AK sorter requires the device backend"))?,
-            ),
+            )),
             Sorter::ThrustMerge => LocalSorter::ThrustMerge,
             Sorter::ThrustRadix => LocalSorter::ThrustRadix,
-            Sorter::Hybrid => LocalSorter::Hybrid(hybrid.ok_or_else(|| {
+            Sorter::Hybrid => LocalSorter::Hybrid(Session::hybrid(hybrid.ok_or_else(|| {
                 anyhow::anyhow!("hybrid sorter requires a prepared HybridEngine")
-            })?),
+            })?)),
         })
     }
 
@@ -74,19 +76,25 @@ impl LocalSorter {
         !matches!(self, LocalSorter::JuliaBase)
     }
 
-    /// Sort in place; returns measured host wall seconds.
-    pub fn sort<K: DeviceKey>(&self, xs: &mut [K]) -> anyhow::Result<f64> {
+    /// Sort in place under the run's [`Launch`] knobs; returns measured
+    /// host wall seconds.
+    pub fn sort<K: DeviceKey>(&self, xs: &mut [K], launch: &Launch) -> anyhow::Result<f64> {
         let t0 = Instant::now();
         match self {
             LocalSorter::JuliaBase => xs.sort_by(|a, b| a.cmp_total(b)),
-            LocalSorter::Ak(backend) => crate::algorithms::sort(backend, xs)?,
+            LocalSorter::Ak(session) | LocalSorter::Hybrid(session) => {
+                session.sort(xs, Some(launch))?
+            }
             LocalSorter::ThrustMerge => baselines::merge_sort(xs),
-            // TR dispatches by size: the threaded LSD radix above
-            // `RADIX_PAR_MIN` (DESIGN.md §11), sequential passes below —
+            // TR dispatches by size: the threaded LSD radix above the
+            // parallel gate (DESIGN.md §11), sequential passes below —
             // so calibration and the cost model see the engine that will
-            // actually run.
-            LocalSorter::ThrustRadix => baselines::radix_sort_auto(xs),
-            LocalSorter::Hybrid(engine) => crate::hybrid::co_sort(engine, xs)?,
+            // actually run. Worker count and gate follow the knobs.
+            LocalSorter::ThrustRadix => baselines::radix_sort_auto_with(
+                xs,
+                launch.tasks_for(crate::backend::threaded::default_threads(), xs.len()),
+                launch.par_threshold_or(baselines::radix::RADIX_PAR_MIN),
+            ),
         }
         Ok(t0.elapsed().as_secs_f64())
     }
@@ -101,7 +109,7 @@ mod tests {
     use crate::workload::{generate, Distribution};
 
     fn hybrid_sorter(frac: f64) -> LocalSorter {
-        LocalSorter::Hybrid(HybridEngine::new(HybridPlan::new(frac), 2, None))
+        LocalSorter::Hybrid(Session::hybrid(HybridEngine::new(HybridPlan::new(frac), 2, None)))
     }
 
     #[test]
@@ -116,7 +124,7 @@ mod tests {
             hybrid_sorter(0.5),
         ] {
             let mut got = xs.clone();
-            let secs = s.sort(&mut got).unwrap();
+            let secs = s.sort(&mut got, &Launch::default()).unwrap();
             assert!(got == want, "{}", s.code());
             assert!(secs >= 0.0);
         }
@@ -132,8 +140,21 @@ mod tests {
             hybrid_sorter(0.4),
         ] {
             let mut got = xs.clone();
-            s.sort(&mut got).unwrap();
+            s.sort(&mut got, &Launch::default()).unwrap();
             assert!(is_sorted_total(&got));
+        }
+    }
+
+    #[test]
+    fn launch_knobs_reach_tr_and_hy() {
+        let xs: Vec<i32> = generate(&mut Prng::new(3), Distribution::Uniform, 80_000);
+        let mut want = xs.clone();
+        want.sort_unstable();
+        let l = Launch::new().max_tasks(2).prefer_parallel_threshold(1024);
+        for s in [LocalSorter::ThrustRadix, hybrid_sorter(0.5)] {
+            let mut got = xs.clone();
+            s.sort(&mut got, &l).unwrap();
+            assert_eq!(got, want, "{}", s.code());
         }
     }
 

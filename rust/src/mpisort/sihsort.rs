@@ -29,6 +29,9 @@ pub struct SihConfig {
     pub final_phase: FinalPhase,
     /// Compute-time scaling for device ranks.
     pub devmodel: DeviceModel,
+    /// Per-call tuning knobs for the rank-local sorts and the final
+    /// recombine (`Session`/`Launch` API, DESIGN.md §12).
+    pub launch: crate::session::Launch,
 }
 
 impl Default for SihConfig {
@@ -39,6 +42,7 @@ impl Default for SihConfig {
             balance_tol: 0.10,
             final_phase: FinalPhase::Merge,
             devmodel: DeviceModel::default(),
+            launch: crate::session::Launch::default(),
         }
     }
 }
@@ -87,7 +91,7 @@ pub fn sihsort_rank<K: DeviceKey>(
     // rank's work alone, not host-core oversubscription (fabric docs).
     let ((sorted, sort_res), secs) = ep.measured(move || {
         let mut s = shard;
-        let r = sorter.sort(&mut s);
+        let r = sorter.sort(&mut s, &cfg.launch);
         (s, r)
     });
     sort_res?;
@@ -125,15 +129,18 @@ pub fn sihsort_rank<K: DeviceKey>(
                 // threads and the measured seconds model a rank owning
                 // its node's cores.
                 let refs: Vec<&[K]> = received.iter().map(|r| r.as_slice()).collect();
-                Ok(merge_path::kmerge_parallel(
+                let total: usize = refs.iter().map(|r| r.len()).sum();
+                Ok(merge_path::kmerge_parallel_with(
                     &refs,
-                    crate::backend::threaded::default_threads(),
+                    cfg.launch
+                        .tasks_for(crate::backend::threaded::default_threads(), total),
+                    cfg.launch.par_threshold_or(merge_path::PAR_MERGE_MIN),
                 ))
             }
             FinalPhase::Sort => {
                 // The paper's described variant: concatenate + full re-sort.
                 let mut all: Vec<K> = received.iter().flatten().copied().collect();
-                sorter.sort(&mut all)?;
+                sorter.sort(&mut all, &cfg.launch)?;
                 Ok(all)
             }
         }

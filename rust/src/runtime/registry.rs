@@ -6,7 +6,7 @@
 //! the dtype maximum (sentinels sink to the tail and are truncated),
 //! scans/reduces pad with the op identity. When a request exceeds the
 //! largest class the caller chunks and combines natively (e.g.
-//! `algorithms::sort` k-way-merges sorted chunks) — the same strategy a
+//! `Session::sort` k-way-merges sorted chunks) — the same strategy a
 //! real deployment uses to bound device memory.
 
 use std::sync::Arc;

@@ -1,0 +1,143 @@
+//! The typed error surface of the [`super::Session`] API.
+//!
+//! Every algorithm method returns [`AkResult`]: callers can match on the
+//! failure class (dtype gap, backend gap, device outage, shape bug)
+//! instead of string-matching an `anyhow` chain. The deprecated free
+//! functions in [`crate::algorithms`] convert these back into
+//! `anyhow::Error` so pre-session code keeps compiling unchanged.
+
+use crate::dtype::ElemType;
+
+/// Result alias of the [`super::Session`] API.
+pub type AkResult<T> = Result<T, AkError>;
+
+/// Why a [`super::Session`] call could not run.
+#[derive(Debug)]
+pub enum AkError {
+    /// The element type has no implementation on the selected engine
+    /// (e.g. `i128` on the device backend: XLA has no `s128` —
+    /// DESIGN.md §2).
+    UnsupportedDtype {
+        /// The element type of the call.
+        dtype: ElemType,
+        /// The algorithm that was invoked.
+        op: &'static str,
+        /// Why this dtype cannot run here.
+        detail: &'static str,
+    },
+    /// The algorithm variant cannot run on the selected backend at all
+    /// (e.g. `sortperm_lowmem` on the device: the pair-free argsort
+    /// cannot cross the AOT boundary). Distinct from a dtype gap: no
+    /// dtype would make this combination work.
+    UnsupportedBackend {
+        /// Engine name (`Backend::name`).
+        backend: String,
+        /// The algorithm that was invoked.
+        op: &'static str,
+        /// Why this backend cannot serve the call.
+        detail: &'static str,
+    },
+    /// A device engine was required but could not serve the call
+    /// (artifact missing, PJRT unavailable, execution failure).
+    DeviceUnavailable {
+        /// The algorithm that was invoked.
+        op: &'static str,
+        /// The underlying runtime/registry failure chain.
+        detail: String,
+    },
+    /// Input lengths or layouts disagree (key/value length mismatch,
+    /// ragged `(3, n)` packing, index space overflow).
+    ShapeMismatch {
+        /// The algorithm that was invoked.
+        op: &'static str,
+        /// What disagreed.
+        detail: String,
+    },
+    /// Engine-internal failure: a worker panicked or an invariant the
+    /// engines rely on was violated.
+    Internal(anyhow::Error),
+}
+
+impl AkError {
+    /// Shorthand for the dtype-gap variant.
+    pub(crate) fn unsupported_dtype(
+        dtype: ElemType,
+        op: &'static str,
+        detail: &'static str,
+    ) -> AkError {
+        AkError::UnsupportedDtype { dtype, op, detail }
+    }
+
+    /// Shorthand for the backend-gap variant.
+    pub(crate) fn unsupported_backend(
+        backend: &crate::backend::Backend,
+        op: &'static str,
+        detail: &'static str,
+    ) -> AkError {
+        AkError::UnsupportedBackend { backend: backend.name(), op, detail }
+    }
+
+    /// Wrap a device runtime/registry failure.
+    pub(crate) fn device(op: &'static str, err: anyhow::Error) -> AkError {
+        AkError::DeviceUnavailable { op, detail: format!("{err:#}") }
+    }
+
+    /// Shorthand for the shape-mismatch variant.
+    pub(crate) fn shape(op: &'static str, detail: String) -> AkError {
+        AkError::ShapeMismatch { op, detail }
+    }
+
+    /// Wrap a worker panic observed at a join point.
+    pub(crate) fn panicked(who: &str, op: &str) -> AkError {
+        AkError::Internal(anyhow::anyhow!("{who} worker panicked during {op}"))
+    }
+}
+
+impl std::fmt::Display for AkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AkError::UnsupportedDtype { dtype, op, detail } => {
+                write!(f, "{op}: dtype {dtype} unsupported on this engine ({detail})")
+            }
+            AkError::UnsupportedBackend { backend, op, detail } => {
+                write!(f, "{op}: backend {backend} cannot serve this call ({detail})")
+            }
+            AkError::DeviceUnavailable { op, detail } => {
+                write!(f, "{op}: device engine unavailable: {detail}")
+            }
+            AkError::ShapeMismatch { op, detail } => write!(f, "{op}: shape mismatch: {detail}"),
+            AkError::Internal(e) => write!(f, "internal error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AkError {}
+
+impl From<anyhow::Error> for AkError {
+    fn from(e: anyhow::Error) -> AkError {
+        AkError::Internal(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_failure_class() {
+        let e = AkError::unsupported_dtype(ElemType::I128, "sort", "no XLA s128");
+        assert!(e.to_string().contains("i128"));
+        assert!(e.to_string().contains("sort"));
+        let e = AkError::shape("sort_by_key", "keys 3 vs vals 4".into());
+        assert!(e.to_string().contains("shape mismatch"));
+    }
+
+    #[test]
+    fn converts_into_anyhow_for_the_shims() {
+        fn old_style() -> anyhow::Result<()> {
+            Err(AkError::shape("rbf", "(3, n) layout required".into()).into())
+        }
+        let msg = format!("{:#}", old_style().unwrap_err());
+        assert!(msg.contains("rbf"), "{msg}");
+    }
+}

@@ -1,0 +1,189 @@
+//! Per-call launch configuration — the paper's tuning keywords
+//! (`block_size`, `max_tasks`, `min_elems` — §III) as a builder.
+//!
+//! A [`Launch`] is pure data: every field is an `Option` whose `None`
+//! means "use the session's default policy, then the engine's built-in
+//! constant". Resolution is per engine — the thread-chunk gate, the
+//! merge-path gate, the radix gate and the hybrid co-split gate each
+//! have their own historical default (see the knob→engine table in
+//! DESIGN.md §12), and one `prefer_parallel_threshold` override applies
+//! to whichever gate the call reaches.
+
+/// Default input size below which host engines stay sequential — the
+/// constant previously hard-coded per algorithm (sort chunk gate, scan,
+/// predicates, search, sortperm).
+pub const DEFAULT_PAR_THRESHOLD: usize = 4096;
+
+/// Per-call tuning knobs (paper §III keywords). Build with the fluent
+/// setters and pass `Some(&launch)` to any [`super::Session`] method;
+/// `None` uses the session's default policy.
+///
+/// ```
+/// use accelkern::session::Launch;
+/// let l = Launch::new().max_tasks(4).min_elems_per_task(64 * 1024);
+/// assert_eq!(l.tasks_for(10, 1 << 20), 4);      // capped by max_tasks
+/// assert_eq!(l.tasks_for(10, 100_000), 1);      // too little work per task
+/// ```
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Launch {
+    /// Device chunk granule (elements): caps the artifact size class one
+    /// device call covers, chunking + host-recombining above it.
+    pub block_size: Option<usize>,
+    /// Upper bound on host worker tasks for this call (caps the
+    /// backend's thread count, never raises it).
+    pub max_tasks: Option<usize>,
+    /// Minimum elements each host task must own: fewer tasks are spawned
+    /// when the input cannot feed them all.
+    pub min_elems_per_task: Option<usize>,
+    /// Input size below which the call prefers its sequential engine.
+    /// Overrides every parallel gate the call reaches: the per-algorithm
+    /// chunk gates ([`DEFAULT_PAR_THRESHOLD`]), the merge-path gate
+    /// (`baselines::merge_path::PAR_MERGE_MIN`), the radix gate
+    /// (`baselines::radix::RADIX_PAR_MIN`) and the hybrid co-split gate
+    /// (`hybrid::MIN_COSPLIT`).
+    pub prefer_parallel_threshold: Option<usize>,
+    /// `reduce` only: inputs at or below this size finish the fold on
+    /// the host from device partials (the paper's device-sync-masking
+    /// rule, §II-B).
+    pub switch_below: Option<usize>,
+    /// Borrow temporary buffers (merge scratch, sortperm pair buffers)
+    /// from the session's scratch pool instead of allocating per call.
+    /// Tri-state so a per-call `false` can override a session default of
+    /// `true` ([`Launch::merged_over`]); `None` means "session policy,
+    /// else off" — read it through [`Launch::reuse_scratch_on`].
+    pub reuse_scratch: Option<bool>,
+}
+
+impl Launch {
+    /// An all-defaults launch (identical to `Launch::default()`).
+    pub fn new() -> Launch {
+        Launch::default()
+    }
+
+    /// Set the device chunk granule (elements).
+    pub fn block_size(mut self, elems: usize) -> Launch {
+        self.block_size = Some(elems.max(1));
+        self
+    }
+
+    /// Cap the host worker tasks for this call.
+    pub fn max_tasks(mut self, tasks: usize) -> Launch {
+        self.max_tasks = Some(tasks.max(1));
+        self
+    }
+
+    /// Require at least this many elements per host task.
+    pub fn min_elems_per_task(mut self, elems: usize) -> Launch {
+        self.min_elems_per_task = Some(elems.max(1));
+        self
+    }
+
+    /// Stay sequential below this input size (overrides every engine
+    /// gate — see the field docs).
+    pub fn prefer_parallel_threshold(mut self, elems: usize) -> Launch {
+        self.prefer_parallel_threshold = Some(elems);
+        self
+    }
+
+    /// `reduce`: host-finish the fold at or below this input size.
+    pub fn switch_below(mut self, elems: usize) -> Launch {
+        self.switch_below = Some(elems);
+        self
+    }
+
+    /// Borrow temporaries from the session scratch pool (or, with
+    /// `false`, explicitly opt a call out of a session-default `true`).
+    pub fn reuse_scratch(mut self, on: bool) -> Launch {
+        self.reuse_scratch = Some(on);
+        self
+    }
+
+    /// Resolved scratch-pool flag (`None` means off).
+    pub fn reuse_scratch_on(&self) -> bool {
+        self.reuse_scratch.unwrap_or(false)
+    }
+
+    /// Worker count for a host engine call over `n` elements, given the
+    /// backend's base thread width: `base` capped by `max_tasks`, then by
+    /// `n / min_elems_per_task` (always at least 1).
+    pub fn tasks_for(&self, base: usize, n: usize) -> usize {
+        let mut t = base.max(1);
+        if let Some(cap) = self.max_tasks {
+            t = t.min(cap.max(1));
+        }
+        if let Some(me) = self.min_elems_per_task {
+            t = t.min((n / me.max(1)).max(1));
+        }
+        t
+    }
+
+    /// The sequential-engine gate: the override if set, else the calling
+    /// engine's built-in default.
+    pub fn par_threshold_or(&self, engine_default: usize) -> usize {
+        self.prefer_parallel_threshold.unwrap_or(engine_default)
+    }
+
+    /// The reduce host-finish gate: the override if set, else `default`.
+    pub fn switch_below_or(&self, default: usize) -> usize {
+        self.switch_below.unwrap_or(default)
+    }
+
+    /// Overlay: fields set on `self` win, unset fields fall back to
+    /// `base` (how a per-call launch composes with the session policy).
+    pub fn merged_over(&self, base: &Launch) -> Launch {
+        Launch {
+            block_size: self.block_size.or(base.block_size),
+            max_tasks: self.max_tasks.or(base.max_tasks),
+            min_elems_per_task: self.min_elems_per_task.or(base.min_elems_per_task),
+            prefer_parallel_threshold: self
+                .prefer_parallel_threshold
+                .or(base.prefer_parallel_threshold),
+            switch_below: self.switch_below.or(base.switch_below),
+            reuse_scratch: self.reuse_scratch.or(base.reuse_scratch),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tasks_capping_rules() {
+        let l = Launch::new();
+        assert_eq!(l.tasks_for(8, 1 << 20), 8); // defaults: backend width
+        assert_eq!(l.tasks_for(0, 10), 1); // degenerate base
+        let l = Launch::new().max_tasks(3);
+        assert_eq!(l.tasks_for(8, 1 << 20), 3);
+        assert_eq!(l.tasks_for(2, 1 << 20), 2); // never raises
+        let l = Launch::new().min_elems_per_task(1000);
+        assert_eq!(l.tasks_for(8, 2500), 2);
+        assert_eq!(l.tasks_for(8, 999), 1);
+    }
+
+    #[test]
+    fn threshold_fallbacks() {
+        assert_eq!(Launch::new().par_threshold_or(4096), 4096);
+        assert_eq!(Launch::new().prefer_parallel_threshold(64).par_threshold_or(4096), 64);
+        assert_eq!(Launch::new().switch_below_or(0), 0);
+        assert_eq!(Launch::new().switch_below(100).switch_below_or(0), 100);
+    }
+
+    #[test]
+    fn merge_overlay_prefers_call_over_policy() {
+        let policy = Launch::new().max_tasks(2).switch_below(7);
+        let call = Launch::new().max_tasks(5);
+        let m = call.merged_over(&policy);
+        assert_eq!(m.max_tasks, Some(5));
+        assert_eq!(m.switch_below, Some(7));
+        assert!(!m.reuse_scratch_on());
+        let m = Launch::new().reuse_scratch(true).merged_over(&policy);
+        assert!(m.reuse_scratch_on());
+        // A per-call `false` overrides a session default of `true`.
+        let pool_on = Launch::new().reuse_scratch(true);
+        let m = Launch::new().reuse_scratch(false).merged_over(&pool_on);
+        assert!(!m.reuse_scratch_on());
+        // And an unset call inherits the policy.
+        assert!(Launch::new().merged_over(&pool_on).reuse_scratch_on());
+    }
+}

@@ -1,0 +1,927 @@
+//! The unified `Session`/`Launch` API — one dispatch surface for every
+//! engine (DESIGN.md §12).
+//!
+//! The paper's headline is not any single kernel but the call shape:
+//! every algorithm is *one call* that dispatches on execution context
+//! and accepts per-call tuning keywords (`block_size`, `max_tasks`,
+//! `min_elems` — §III). This module is that surface for the Rust side:
+//!
+//! * [`Session`] owns a [`Backend`], a metrics sink and a default
+//!   tuning policy. Construct one per engine —
+//!   [`Session::native`] / [`Session::threaded`] / [`Session::device`] /
+//!   [`Session::hybrid`] — and call algorithms as methods.
+//! * [`Launch`] is the per-call knob set, merged over the session's
+//!   defaults ([`Launch::merged_over`]); `None` means "session policy".
+//! * Every method returns [`AkResult`], whose [`AkError`] names the
+//!   failure class (dtype gap, backend gap, device outage, shape bug)
+//!   instead of an opaque `anyhow` chain.
+//!
+//! The pre-session free functions in [`crate::algorithms`] remain as
+//! `#[deprecated]` shims delegating here, so downstream code migrates
+//! incrementally; in-tree code is shim-free (CI denies `deprecated`).
+//!
+//! ```
+//! use accelkern::session::{Launch, Session};
+//! let s = Session::threaded(4);
+//! let mut v = vec![3i32, -1, 2, 0];
+//! s.sort(&mut v, None).unwrap();
+//! assert_eq!(v, vec![-1, 0, 2, 3]);
+//!
+//! // Per-call knobs: cap the worker count, reuse merge scratch.
+//! let l = Launch::new().max_tasks(2).reuse_scratch(true);
+//! let mut w = vec![9i64, 8, 7, 6];
+//! s.sort(&mut w, Some(&l)).unwrap();
+//! assert_eq!(w, vec![6, 7, 8, 9]);
+//! ```
+
+pub mod error;
+pub mod launch;
+
+pub use error::{AkError, AkResult};
+pub use launch::{Launch, DEFAULT_PAR_THRESHOLD};
+
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::algorithms::arith::{ljg_host, ljg_powf_host, rbf_host, LjgConsts};
+use crate::algorithms::predicates::host_any;
+use crate::algorithms::reduce::{host_mapreduce, host_reduce, Reducible, ReduceKind};
+use crate::algorithms::scan::{host_scan, threaded_scan, ScanAdd};
+use crate::algorithms::search::host_search;
+use crate::algorithms::sort::{apply_permutation, threaded_sort};
+use crate::algorithms::sortperm::{host_sortperm, host_sortperm_lowmem};
+use crate::backend::{Backend, DeviceKey};
+use crate::baselines::merge_path::PAR_MERGE_MIN;
+use crate::dtype::SortKey;
+use crate::hybrid::{HybridEngine, MIN_COSPLIT};
+use crate::runtime::Registry;
+
+/// Call/volume/scratch counters a [`Session`] records into. Shared by
+/// clones of the session (the sink is behind an `Arc`).
+#[derive(Debug, Default)]
+pub struct SessionMetrics {
+    calls: AtomicU64,
+    elems: AtomicU64,
+    scratch_hits: AtomicU64,
+    scratch_misses: AtomicU64,
+}
+
+impl SessionMetrics {
+    fn record(&self, n: usize) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.elems.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Algorithm calls issued through this session (and its clones).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Total elements those calls covered.
+    pub fn elems(&self) -> u64 {
+        self.elems.load(Ordering::Relaxed)
+    }
+
+    /// Scratch-pool borrows that found a reusable buffer.
+    pub fn scratch_hits(&self) -> u64 {
+        self.scratch_hits.load(Ordering::Relaxed)
+    }
+
+    /// Scratch-pool borrows that had to allocate fresh.
+    pub fn scratch_misses(&self) -> u64 {
+        self.scratch_misses.load(Ordering::Relaxed)
+    }
+}
+
+/// Type-erased reusable temporary buffers, keyed by element type. One
+/// buffer is retained per type; `Launch::reuse_scratch` opts a call in.
+#[derive(Default)]
+struct ScratchPool {
+    bufs: Mutex<HashMap<TypeId, Box<dyn Any + Send>>>,
+}
+
+impl ScratchPool {
+    fn take<T: Send + 'static>(&self) -> Option<Vec<T>> {
+        self.bufs
+            .lock()
+            .unwrap()
+            .remove(&TypeId::of::<Vec<T>>())
+            .and_then(|b| b.downcast::<Vec<T>>().ok())
+            .map(|b| *b)
+    }
+
+    fn put<T: Send + 'static>(&self, mut v: Vec<T>) {
+        v.clear();
+        self.bufs.lock().unwrap().insert(TypeId::of::<Vec<T>>(), Box::new(v));
+    }
+}
+
+struct SessionState {
+    metrics: SessionMetrics,
+    scratch: ScratchPool,
+}
+
+/// An execution session: a [`Backend`], a default tuning policy and a
+/// metrics/scratch sink. Cheap to clone (clones share the sink); `Send`
+/// + `Sync`, so one session can serve many rank threads.
+#[derive(Clone)]
+pub struct Session {
+    backend: Backend,
+    defaults: Launch,
+    state: Arc<SessionState>,
+}
+
+impl Session {
+    /// Single-thread host session.
+    pub fn native() -> Session {
+        Session::from_backend(Backend::Native)
+    }
+
+    /// Host session over `n` std threads.
+    pub fn threaded(n: usize) -> Session {
+        Session::from_backend(Backend::Threaded(n.max(1)))
+    }
+
+    /// Device session over an artifact registry (AOT engine via PJRT).
+    pub fn device(reg: Registry) -> Session {
+        Session::from_backend(Backend::device(reg))
+    }
+
+    /// Hybrid CPU–GPU co-processing session (DESIGN.md §10).
+    pub fn hybrid(engine: HybridEngine) -> Session {
+        Session::from_backend(Backend::Hybrid(engine))
+    }
+
+    /// Session over an already-built [`Backend`] handle.
+    pub fn from_backend(backend: Backend) -> Session {
+        Session {
+            backend,
+            defaults: Launch::default(),
+            state: Arc::new(SessionState {
+                metrics: SessionMetrics::default(),
+                scratch: ScratchPool::default(),
+            }),
+        }
+    }
+
+    /// Replace the session's default tuning policy: per-call launches
+    /// are merged *over* this ([`Launch::merged_over`]).
+    pub fn with_defaults(mut self, defaults: Launch) -> Session {
+        self.defaults = defaults;
+        self
+    }
+
+    /// The process-default session (host thread pool at the adaptive
+    /// default width) — what one-off calls and quick scripts use.
+    pub fn global() -> &'static Session {
+        static GLOBAL: OnceLock<Session> = OnceLock::new();
+        GLOBAL.get_or_init(|| Session::threaded(crate::backend::threaded::default_threads()))
+    }
+
+    /// The session's execution backend.
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+
+    /// The session's default tuning policy.
+    pub fn defaults(&self) -> &Launch {
+        &self.defaults
+    }
+
+    /// Human-readable engine name (`Backend::name`).
+    pub fn name(&self) -> String {
+        self.backend.name()
+    }
+
+    /// The metrics sink (shared across clones of this session).
+    pub fn metrics(&self) -> &SessionMetrics {
+        &self.state.metrics
+    }
+
+    fn resolve(&self, launch: Option<&Launch>) -> Launch {
+        match launch {
+            Some(l) => l.merged_over(&self.defaults),
+            None => self.defaults.clone(),
+        }
+    }
+
+    fn take_scratch<T: Send + 'static>(&self, l: &Launch) -> Vec<T> {
+        if !l.reuse_scratch_on() {
+            return Vec::new();
+        }
+        match self.state.scratch.take::<T>() {
+            Some(v) => {
+                self.state.metrics.scratch_hits.fetch_add(1, Ordering::Relaxed);
+                v
+            }
+            None => {
+                self.state.metrics.scratch_misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    fn put_scratch<T: Send + 'static>(&self, v: Vec<T>, l: &Launch) {
+        if l.reuse_scratch_on() {
+            self.state.scratch.put(v);
+        }
+    }
+
+    // ---- sorting ----------------------------------------------------------
+
+    /// Sort `xs` ascending (total order; NaN-safe for floats). Not
+    /// stable — see `algorithms::sort` module docs for the stability
+    /// contract split.
+    ///
+    /// ```
+    /// use accelkern::session::Session;
+    /// let mut f = vec![1.0f64, f64::NAN, f64::NEG_INFINITY, -0.0];
+    /// Session::threaded(2).sort(&mut f, None).unwrap();
+    /// assert_eq!(f[0], f64::NEG_INFINITY);
+    /// assert!(f[3].is_nan());
+    /// ```
+    pub fn sort<K: DeviceKey>(&self, xs: &mut [K], launch: Option<&Launch>) -> AkResult<()> {
+        let l = self.resolve(launch);
+        self.state.metrics.record(xs.len());
+        match &self.backend {
+            Backend::Native => {
+                xs.sort_unstable_by(|a, b| a.cmp_total(b));
+                Ok(())
+            }
+            Backend::Threaded(t) => {
+                self.host_sort(xs, *t, &l);
+                Ok(())
+            }
+            Backend::Device(dev) => {
+                if !K::XLA {
+                    return Err(AkError::unsupported_dtype(
+                        K::ELEM,
+                        "sort",
+                        "no XLA artifact family (XLA-CPU has no s128, DESIGN.md §2)",
+                    ));
+                }
+                dev.sort_blocked(xs, l.block_size).map_err(|e| AkError::device("sort", e))
+            }
+            Backend::Hybrid(h) => {
+                let mut scratch = self.take_scratch::<K>(&l);
+                let res = crate::hybrid::co_sort_scratch(h, xs, &l, &mut scratch);
+                self.put_scratch(scratch, &l);
+                res
+            }
+        }
+    }
+
+    fn host_sort<K: SortKey>(&self, xs: &mut [K], base_threads: usize, l: &Launch) {
+        let t = l.tasks_for(base_threads, xs.len());
+        let mut scratch = self.take_scratch::<K>(l);
+        threaded_sort(
+            xs,
+            t,
+            l.par_threshold_or(DEFAULT_PAR_THRESHOLD),
+            l.par_threshold_or(PAR_MERGE_MIN),
+            &mut scratch,
+        );
+        self.put_scratch(scratch, l);
+    }
+
+    /// Sort `keys` ascending carrying `vals` along (stable payload
+    /// sort): equal keys keep their input order.
+    pub fn sort_by_key<K: DeviceKey, V: Copy + Send + Sync>(
+        &self,
+        keys: &mut [K],
+        vals: &mut [V],
+        launch: Option<&Launch>,
+    ) -> AkResult<()> {
+        if keys.len() != vals.len() {
+            return Err(AkError::shape(
+                "sort_by_key",
+                format!("keys {} vs vals {}", keys.len(), vals.len()),
+            ));
+        }
+        if keys.len() <= 1 {
+            return Ok(());
+        }
+        // General payloads go through an index permutation (native work
+        // is an O(n) scatter either way); the permutation inherits the
+        // session's device path when one applies.
+        let perm = self.sortperm(keys, launch)?;
+        apply_permutation(keys, &perm);
+        apply_permutation(vals, &perm);
+        Ok(())
+    }
+
+    /// Permutation `p` such that `xs[p[0]] <= xs[p[1]] <= ...` (stable).
+    pub fn sortperm<K: DeviceKey>(
+        &self,
+        xs: &[K],
+        launch: Option<&Launch>,
+    ) -> AkResult<Vec<u32>> {
+        let l = self.resolve(launch);
+        if xs.len() > u32::MAX as usize {
+            return Err(AkError::shape(
+                "sortperm",
+                format!("index space is u32, input has {} elements", xs.len()),
+            ));
+        }
+        self.state.metrics.record(xs.len());
+        match &self.backend {
+            Backend::Native => Ok(self.host_perm(xs, 1, &l)),
+            Backend::Threaded(t) => Ok(self.host_perm(xs, *t, &l)),
+            Backend::Device(dev) => {
+                if K::XLA {
+                    if let Ok(plan) = dev.registry().plan("sort_pairs", K::ELEM, xs.len()) {
+                        if plan.chunks == 1 {
+                            let vals: Vec<i32> = (0..xs.len() as i32).collect();
+                            let (_, perm) = dev
+                                .sort_pairs(xs, &vals)
+                                .map_err(|e| AkError::device("sortperm", e))?;
+                            return Ok(perm.into_iter().map(|v| v as u32).collect());
+                        }
+                    }
+                }
+                // No pair artifact for this dtype/size class: host path
+                // (the permutation is host-consumed anyway).
+                Ok(self.host_perm(xs, 1, &l))
+            }
+            // The pair buffer cannot straddle two engines without an
+            // extra gather; hybrid sortperm runs on the host pool
+            // (DESIGN.md §10).
+            Backend::Hybrid(h) => Ok(self.host_perm(xs, h.host_threads, &l)),
+        }
+    }
+
+    fn host_perm<K: SortKey>(&self, xs: &[K], base_threads: usize, l: &Launch) -> Vec<u32> {
+        let t = l.tasks_for(base_threads, xs.len());
+        let mut pairs = self.take_scratch::<(u128, u32)>(l);
+        let out = host_sortperm(xs, t, l.par_threshold_or(DEFAULT_PAR_THRESHOLD), &mut pairs);
+        self.put_scratch(pairs, l);
+        out
+    }
+
+    /// Lower-memory `sortperm` variant: sorts the index array in place
+    /// with a key-indexed comparator (no `(key, index)` pair buffer).
+    /// Host engines only — the indexed comparator cannot cross the AOT
+    /// boundary, so the device backend returns
+    /// [`AkError::UnsupportedBackend`] instead of silently degrading.
+    pub fn sortperm_lowmem<K: SortKey>(
+        &self,
+        xs: &[K],
+        launch: Option<&Launch>,
+    ) -> AkResult<Vec<u32>> {
+        let l = self.resolve(launch);
+        if xs.len() > u32::MAX as usize {
+            return Err(AkError::shape(
+                "sortperm_lowmem",
+                format!("index space is u32, input has {} elements", xs.len()),
+            ));
+        }
+        self.state.metrics.record(xs.len());
+        let base_threads = match &self.backend {
+            Backend::Native => 1,
+            Backend::Threaded(t) => *t,
+            // Hybrid runs host-side like `sortperm` (same pair-buffer
+            // rule); the host pool is the documented engine.
+            Backend::Hybrid(h) => h.host_threads,
+            Backend::Device(_) => {
+                return Err(AkError::unsupported_backend(
+                    &self.backend,
+                    "sortperm_lowmem",
+                    "indexed-comparator argsort cannot cross the AOT boundary; \
+                     use `sortperm` or a host session",
+                ));
+            }
+        };
+        let t = l.tasks_for(base_threads, xs.len());
+        Ok(host_sortperm_lowmem(xs, t, l.par_threshold_or(DEFAULT_PAR_THRESHOLD)))
+    }
+
+    // ---- reductions -------------------------------------------------------
+
+    /// Reduce `xs` with `kind`. The `switch_below` launch knob routes
+    /// device inputs at or below that size through the partials artifact
+    /// with a host-side finish (paper §II-B device-sync masking).
+    ///
+    /// ```
+    /// use accelkern::algorithms::ReduceKind;
+    /// use accelkern::session::Session;
+    /// let xs = vec![3i64, -1, 4, 1, 5];
+    /// let s = Session::native();
+    /// assert_eq!(s.reduce(&xs, ReduceKind::Add, None).unwrap(), 12);
+    /// assert_eq!(s.reduce(&xs, ReduceKind::Min, None).unwrap(), -1);
+    /// ```
+    pub fn reduce<K: Reducible>(
+        &self,
+        xs: &[K],
+        kind: ReduceKind,
+        launch: Option<&Launch>,
+    ) -> AkResult<K> {
+        let l = self.resolve(launch);
+        self.state.metrics.record(xs.len());
+        match &self.backend {
+            Backend::Native => Ok(host_reduce(xs, kind)),
+            Backend::Threaded(t) => {
+                let tasks = l.tasks_for(*t, xs.len());
+                if tasks <= 1 || xs.len() < l.par_threshold_or(DEFAULT_PAR_THRESHOLD) {
+                    return Ok(host_reduce(xs, kind));
+                }
+                let partials = crate::backend::parallel_for_each_chunk(xs.len(), tasks, |r| {
+                    host_reduce(&xs[r], kind)
+                });
+                Ok(partials.into_iter().fold(K::identity(kind), |a, b| K::fold(kind, a, b)))
+            }
+            Backend::Device(dev) => {
+                if !K::XLA {
+                    // Documented host fallback (unlike `sort`, there is
+                    // no data-movement hazard in folding on the host).
+                    return Ok(host_reduce(xs, kind));
+                }
+                if kind == ReduceKind::Add && xs.len() <= l.switch_below_or(0) {
+                    return dev
+                        .reduce_partials_add_shim(xs)
+                        .map_err(|e| AkError::device("reduce", e));
+                }
+                dev.reduce(xs, kind.op_name(), K::identity(kind), |a, b| K::fold(kind, a, b))
+                    .map_err(|e| AkError::device("reduce", e))
+            }
+            Backend::Hybrid(h) => crate::hybrid::co_reduce_launch(h, xs, kind, &l),
+        }
+    }
+
+    /// `mapreduce(f, op, xs)`: host closures on host engines; the device
+    /// backend host-executes (arbitrary lambdas cannot cross the AOT
+    /// boundary — the device variants are the named-map artifacts).
+    pub fn mapreduce<K: Reducible, M>(
+        &self,
+        xs: &[K],
+        map: M,
+        kind: ReduceKind,
+        launch: Option<&Launch>,
+    ) -> AkResult<K>
+    where
+        M: Fn(K) -> K + Sync,
+    {
+        let l = self.resolve(launch);
+        self.state.metrics.record(xs.len());
+        let threads = match &self.backend {
+            Backend::Native | Backend::Device(_) => 1,
+            Backend::Threaded(t) => *t,
+            Backend::Hybrid(h) => h.host_threads,
+        };
+        let tasks = l.tasks_for(threads, xs.len());
+        if tasks <= 1 || xs.len() < l.par_threshold_or(DEFAULT_PAR_THRESHOLD) {
+            return Ok(host_mapreduce(xs, &map, kind));
+        }
+        let partials = crate::backend::parallel_for_each_chunk(xs.len(), tasks, |r| {
+            host_mapreduce(&xs[r], &map, kind)
+        });
+        Ok(partials.into_iter().fold(K::identity(kind), |a, b| K::fold(kind, a, b)))
+    }
+
+    // ---- scans ------------------------------------------------------------
+
+    /// Prefix-sum of `xs`; `inclusive` selects the scan flavour.
+    pub fn accumulate<K: ScanAdd + std::ops::Add<Output = K>>(
+        &self,
+        xs: &[K],
+        inclusive: bool,
+        launch: Option<&Launch>,
+    ) -> AkResult<Vec<K>> {
+        let l = self.resolve(launch);
+        self.state.metrics.record(xs.len());
+        match &self.backend {
+            Backend::Native => Ok(host_scan(xs, inclusive)),
+            Backend::Threaded(t) => Ok(threaded_scan(
+                xs,
+                inclusive,
+                l.tasks_for(*t, xs.len()),
+                l.par_threshold_or(DEFAULT_PAR_THRESHOLD),
+            )),
+            Backend::Device(dev) => {
+                if K::XLA {
+                    dev.scan_add(xs, inclusive).map_err(|e| AkError::device("accumulate", e))
+                } else {
+                    Ok(host_scan(xs, inclusive))
+                }
+            }
+            // Carries serialise the chunk recombination, so co-processing
+            // buys nothing: hybrid scans run on the host pool.
+            Backend::Hybrid(h) => Ok(threaded_scan(
+                xs,
+                inclusive,
+                l.tasks_for(h.host_threads, xs.len()),
+                l.par_threshold_or(DEFAULT_PAR_THRESHOLD),
+            )),
+        }
+    }
+
+    // ---- parallel loops ---------------------------------------------------
+
+    /// Run `f(i)` for every `i in 0..len`, statically partitioned over
+    /// the backend's workers. Infallible: every engine has a host
+    /// execution for arbitrary closures.
+    pub fn foreachindex<F>(&self, len: usize, f: F, launch: Option<&Launch>)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let l = self.resolve(launch);
+        self.state.metrics.record(len);
+        match &self.backend {
+            Backend::Native | Backend::Device(_) => {
+                for i in 0..len {
+                    f(i);
+                }
+            }
+            Backend::Threaded(t) => {
+                let tasks = l.tasks_for(*t, len);
+                if tasks <= 1 || len < l.par_threshold_or(DEFAULT_PAR_THRESHOLD) {
+                    for i in 0..len {
+                        f(i);
+                    }
+                    return;
+                }
+                crate::backend::parallel_for_each_chunk(len, tasks, |r| {
+                    for i in r {
+                        f(i);
+                    }
+                });
+            }
+            Backend::Hybrid(h) => crate::hybrid::co_foreachindex_launch(h, len, &f, &l),
+        }
+    }
+
+    /// Mutating loop over a slice: `f(i, &mut xs[i])` on disjoint chunks
+    /// (the dst/src copy-kernel pattern of paper Algorithm 3).
+    pub fn foreach_mut<T: Send, F>(&self, xs: &mut [T], f: F, launch: Option<&Launch>)
+    where
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let l = self.resolve(launch);
+        self.state.metrics.record(xs.len());
+        match &self.backend {
+            Backend::Native | Backend::Device(_) => {
+                for (i, x) in xs.iter_mut().enumerate() {
+                    f(i, x);
+                }
+            }
+            Backend::Threaded(t) => {
+                let tasks = l.tasks_for(*t, xs.len());
+                if tasks <= 1 || xs.len() < l.par_threshold_or(DEFAULT_PAR_THRESHOLD) {
+                    for (i, x) in xs.iter_mut().enumerate() {
+                        f(i, x);
+                    }
+                    return;
+                }
+                let ranges = crate::backend::threaded::split_ranges(xs.len(), tasks);
+                crate::backend::parallel_chunks(xs, tasks, |ci, chunk| {
+                    let base = ranges[ci].start;
+                    for (j, x) in chunk.iter_mut().enumerate() {
+                        f(base + j, x);
+                    }
+                });
+            }
+            Backend::Hybrid(h) => crate::hybrid::co_foreach_mut_launch(h, xs, &f, &l),
+        }
+    }
+
+    // ---- searching --------------------------------------------------------
+
+    /// Leftmost insertion indices of `needles` into ascending `haystack`.
+    pub fn searchsorted_first<K: DeviceKey>(
+        &self,
+        haystack: &[K],
+        needles: &[K],
+        launch: Option<&Launch>,
+    ) -> AkResult<Vec<u32>> {
+        self.searchsorted(haystack, needles, "first", launch)
+    }
+
+    /// Rightmost insertion indices (`upper_bound`).
+    pub fn searchsorted_last<K: DeviceKey>(
+        &self,
+        haystack: &[K],
+        needles: &[K],
+        launch: Option<&Launch>,
+    ) -> AkResult<Vec<u32>> {
+        self.searchsorted(haystack, needles, "last", launch)
+    }
+
+    fn searchsorted<K: DeviceKey>(
+        &self,
+        haystack: &[K],
+        needles: &[K],
+        side: &'static str,
+        launch: Option<&Launch>,
+    ) -> AkResult<Vec<u32>> {
+        debug_assert!(crate::dtype::is_sorted_total(haystack), "haystack must be sorted");
+        let l = self.resolve(launch);
+        self.state.metrics.record(needles.len());
+        let seq = l.par_threshold_or(DEFAULT_PAR_THRESHOLD);
+        match &self.backend {
+            Backend::Native => Ok(host_search(haystack, needles, side, 1, seq)),
+            Backend::Threaded(t) => {
+                Ok(host_search(haystack, needles, side, l.tasks_for(*t, needles.len()), seq))
+            }
+            Backend::Device(dev) => {
+                if K::XLA && dev.registry().supports(&format!("searchsorted_{side}"), K::ELEM) {
+                    // Device artifacts cap the haystack class; oversize
+                    // falls back to the host path.
+                    if let Ok(plan) = dev.registry().plan(
+                        &format!("searchsorted_{side}"),
+                        K::ELEM,
+                        haystack.len(),
+                    ) {
+                        if plan.chunks == 1 {
+                            return dev
+                                .searchsorted(haystack, needles, side)
+                                .map_err(|e| AkError::device("searchsorted", e));
+                        }
+                    }
+                }
+                Ok(host_search(haystack, needles, side, 1, seq))
+            }
+            // Co-processing: the needle block splits between the engines
+            // (both search the same haystack); results concatenate in
+            // order (DESIGN.md §10).
+            Backend::Hybrid(h) => {
+                let min_split = l.par_threshold_or(MIN_COSPLIT);
+                let split = match h.route_with(needles.len(), min_split) {
+                    crate::hybrid::CoRoute::Host => {
+                        return Ok(host_search(
+                            haystack,
+                            needles,
+                            side,
+                            l.tasks_for(h.host_threads, needles.len()),
+                            seq,
+                        ));
+                    }
+                    crate::hybrid::CoRoute::Device => {
+                        return Session::from_backend(h.device_backend())
+                            .searchsorted(haystack, needles, side, Some(&l));
+                    }
+                    crate::hybrid::CoRoute::Split(split) => split,
+                };
+                let (host_needles, dev_needles) = needles.split_at(split);
+                let dev_session = Session::from_backend(h.device_backend());
+                let host_tasks = l.tasks_for(h.host_threads, host_needles.len());
+                let lr = &l;
+                let (host_res, dev_res) = std::thread::scope(|s| {
+                    let hj = s.spawn(move || {
+                        host_search(haystack, host_needles, side, host_tasks, seq)
+                    });
+                    let dj = s.spawn(|| {
+                        dev_session.searchsorted(haystack, dev_needles, side, Some(lr))
+                    });
+                    (hj.join(), dj.join())
+                });
+                let mut out =
+                    host_res.map_err(|_| AkError::panicked("host", "searchsorted"))?;
+                out.extend(
+                    dev_res.map_err(|_| AkError::panicked("device", "searchsorted"))??,
+                );
+                Ok(out)
+            }
+        }
+    }
+
+    // ---- predicates -------------------------------------------------------
+
+    /// `any(x > threshold)` with early exit, for every sortable dtype.
+    /// IEEE comparison semantics on floats (`NaN > t` is false). The
+    /// device path uses the `any_gt` artifact family when one exists for
+    /// the dtype, the host reducer otherwise.
+    pub fn any_gt<K: DeviceKey>(
+        &self,
+        xs: &[K],
+        threshold: K,
+        launch: Option<&Launch>,
+    ) -> AkResult<bool> {
+        let l = self.resolve(launch);
+        self.state.metrics.record(xs.len());
+        match &self.backend {
+            Backend::Native => Ok(xs.iter().any(|&x| x > threshold)),
+            Backend::Threaded(t) => Ok(host_any(
+                xs,
+                l.tasks_for(*t, xs.len()),
+                l.par_threshold_or(DEFAULT_PAR_THRESHOLD),
+                |x| x > threshold,
+            )),
+            Backend::Device(dev) => {
+                if K::XLA && dev.registry().supports("any_gt", K::ELEM) {
+                    dev.any_gt(xs, threshold).map_err(|e| AkError::device("any_gt", e))
+                } else {
+                    Ok(xs.iter().any(|&x| x > threshold))
+                }
+            }
+            Backend::Hybrid(h) => crate::hybrid::co_any_gt_launch(h, xs, threshold, &l),
+        }
+    }
+
+    /// `all(x > threshold)`, for every sortable dtype. IEEE semantics:
+    /// a NaN element fails the predicate, so `all` is false (every
+    /// engine agrees — the pre-session threaded path did not).
+    pub fn all_gt<K: DeviceKey>(
+        &self,
+        xs: &[K],
+        threshold: K,
+        launch: Option<&Launch>,
+    ) -> AkResult<bool> {
+        let l = self.resolve(launch);
+        self.state.metrics.record(xs.len());
+        match &self.backend {
+            Backend::Native => Ok(xs.iter().all(|&x| x > threshold)),
+            // The racing-flag reducer hunts counterexamples: an element
+            // that does NOT satisfy `x > t` (IEEE: NaN is one).
+            Backend::Threaded(t) => Ok(!host_any(
+                xs,
+                l.tasks_for(*t, xs.len()),
+                l.par_threshold_or(DEFAULT_PAR_THRESHOLD),
+                |x: K| !matches!(x.partial_cmp(&threshold), Some(std::cmp::Ordering::Greater)),
+            )),
+            Backend::Device(dev) => {
+                if K::XLA && dev.registry().supports("all_gt", K::ELEM) {
+                    dev.all_gt(xs, threshold).map_err(|e| AkError::device("all_gt", e))
+                } else {
+                    Ok(xs.iter().all(|&x| x > threshold))
+                }
+            }
+            Backend::Hybrid(h) => crate::hybrid::co_all_gt_launch(h, xs, threshold, &l),
+        }
+    }
+
+    /// Generic `any(pred, xs)` over the session's host workers (the
+    /// paper's `any(f, itr)`): arbitrary predicates cannot cross the
+    /// AOT boundary, so device/hybrid sessions run their host engine.
+    pub fn any_by<T: Sync + Copy, P: Fn(&T) -> bool + Sync>(
+        &self,
+        xs: &[T],
+        pred: P,
+        launch: Option<&Launch>,
+    ) -> bool {
+        let l = self.resolve(launch);
+        self.state.metrics.record(xs.len());
+        let base = match &self.backend {
+            Backend::Native | Backend::Device(_) => 1,
+            Backend::Threaded(t) => *t,
+            Backend::Hybrid(h) => h.host_threads,
+        };
+        host_any(
+            xs,
+            l.tasks_for(base, xs.len()),
+            l.par_threshold_or(DEFAULT_PAR_THRESHOLD),
+            |x| pred(&x),
+        )
+    }
+
+    /// Generic `all(pred, xs)` (see [`Session::any_by`]).
+    pub fn all_by<T: Sync + Copy, P: Fn(&T) -> bool + Sync>(
+        &self,
+        xs: &[T],
+        pred: P,
+        launch: Option<&Launch>,
+    ) -> bool {
+        !self.any_by(xs, |x| !pred(x), launch)
+    }
+
+    // ---- arithmetic kernels -----------------------------------------------
+
+    /// RBF over packed `(3, n)` coordinates `[x.., y.., z..]` → `(n,)`
+    /// (paper Algorithm 4, Table II).
+    pub fn rbf(&self, pts: &[f32], launch: Option<&Launch>) -> AkResult<Vec<f32>> {
+        let l = self.resolve(launch);
+        if pts.len() % 3 != 0 {
+            return Err(AkError::shape("rbf", format!("(3, n) layout required, got {}", pts.len())));
+        }
+        let n = pts.len() / 3;
+        self.state.metrics.record(n);
+        match &self.backend {
+            Backend::Native => Ok(rbf_host(pts, n, 1)),
+            Backend::Threaded(t) => Ok(rbf_host(pts, n, l.tasks_for(*t, n))),
+            Backend::Device(dev) => dev.rbf_f32(pts).map_err(|e| AkError::device("rbf", e)),
+            // The (3, n) packed rows cannot split contiguously between
+            // two engines without a repack: hybrid runs the host pool.
+            Backend::Hybrid(h) => Ok(rbf_host(pts, n, l.tasks_for(h.host_threads, n))),
+        }
+    }
+
+    /// LJG potential over two packed `(3, n)` position arrays
+    /// (Algorithm 5), integer powers expanded to multiplications.
+    pub fn ljg(
+        &self,
+        p1: &[f32],
+        p2: &[f32],
+        c: LjgConsts,
+        launch: Option<&Launch>,
+    ) -> AkResult<Vec<f32>> {
+        let l = self.resolve(launch);
+        if p1.len() != p2.len() || p1.len() % 3 != 0 {
+            return Err(AkError::shape(
+                "ljg",
+                format!("matched (3, n) layouts required, got {} vs {}", p1.len(), p2.len()),
+            ));
+        }
+        let n = p1.len() / 3;
+        self.state.metrics.record(n);
+        match &self.backend {
+            Backend::Native => Ok(ljg_host(p1, p2, n, c, 1)),
+            Backend::Threaded(t) => Ok(ljg_host(p1, p2, n, c, l.tasks_for(*t, n))),
+            Backend::Device(dev) => dev
+                .ljg_f32(p1, p2, [c.epsilon, c.sigma, c.r0, c.cutoff])
+                .map_err(|e| AkError::device("ljg", e)),
+            Backend::Hybrid(h) => Ok(ljg_host(p1, p2, n, c, l.tasks_for(h.host_threads, n))),
+        }
+    }
+
+    /// The naive-C LJG variant (`powf` powers — the Table II pathology).
+    /// Host-only arithmetic; device sessions run the host engine.
+    pub fn ljg_powf(
+        &self,
+        p1: &[f32],
+        p2: &[f32],
+        c: LjgConsts,
+        launch: Option<&Launch>,
+    ) -> AkResult<Vec<f32>> {
+        let l = self.resolve(launch);
+        if p1.len() != p2.len() || p1.len() % 3 != 0 {
+            return Err(AkError::shape(
+                "ljg_powf",
+                format!("matched (3, n) layouts required, got {} vs {}", p1.len(), p2.len()),
+            ));
+        }
+        let n = p1.len() / 3;
+        self.state.metrics.record(n);
+        let base = match &self.backend {
+            Backend::Native | Backend::Device(_) => 1,
+            Backend::Threaded(t) => *t,
+            Backend::Hybrid(h) => h.host_threads,
+        };
+        Ok(ljg_powf_host(p1, p2, n, c, l.tasks_for(base, n)))
+    }
+}
+
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Session({})", self.backend.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution};
+
+    #[test]
+    fn scratch_pool_hits_after_first_call() {
+        let s = Session::threaded(4);
+        let l = Launch::new().reuse_scratch(true).prefer_parallel_threshold(64);
+        for _ in 0..3 {
+            let mut xs: Vec<i64> = generate(&mut Prng::new(1), Distribution::Uniform, 20_000);
+            s.sort(&mut xs, Some(&l)).unwrap();
+            assert!(crate::dtype::is_sorted_total(&xs));
+        }
+        assert!(s.metrics().scratch_hits() >= 2, "hits {}", s.metrics().scratch_hits());
+        assert_eq!(s.metrics().scratch_misses(), 1);
+        assert_eq!(s.metrics().calls(), 3);
+    }
+
+    #[test]
+    fn clones_share_the_metrics_sink() {
+        let s = Session::native();
+        let c = s.clone();
+        let mut xs = vec![3i32, 1, 2];
+        c.sort(&mut xs, None).unwrap();
+        assert_eq!(s.metrics().calls(), 1);
+        assert_eq!(s.metrics().elems(), 3);
+    }
+
+    #[test]
+    fn global_session_sorts() {
+        let mut xs = vec![5i32, -2, 9];
+        Session::global().sort(&mut xs, None).unwrap();
+        assert_eq!(xs, vec![-2, 5, 9]);
+    }
+
+    #[test]
+    fn shape_errors_are_typed() {
+        let s = Session::native();
+        let mut k = vec![1i32, 2, 3];
+        let mut v = vec![0u8; 2];
+        match s.sort_by_key(&mut k, &mut v, None) {
+            Err(AkError::ShapeMismatch { op, .. }) => assert_eq!(op, "sort_by_key"),
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+        assert!(matches!(s.rbf(&[1.0, 2.0], None), Err(AkError::ShapeMismatch { .. })));
+    }
+
+    #[test]
+    fn defaults_merge_under_per_call_launch() {
+        let s = Session::threaded(8).with_defaults(Launch::new().max_tasks(2));
+        // Session policy caps to 2; per-call override raises within the
+        // backend width.
+        assert_eq!(s.resolve(None).tasks_for(8, 1 << 20), 2);
+        let l = Launch::new().max_tasks(4);
+        assert_eq!(s.resolve(Some(&l)).tasks_for(8, 1 << 20), 4);
+    }
+}

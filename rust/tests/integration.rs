@@ -5,17 +5,17 @@
 
 use std::sync::Arc;
 
-use accelkern::algorithms as ak;
-use accelkern::backend::Backend;
+use accelkern::algorithms::{LjgConsts, ReduceKind};
 use accelkern::cfg::{RunConfig, Sorter, TransferMode};
 use accelkern::coordinator::driver::{run_distributed_sort, run_for_config};
 use accelkern::dtype::{is_sorted_total, ElemType};
 use accelkern::runtime::{Registry, Runtime};
+use accelkern::session::{Launch, Session};
 use accelkern::util::Prng;
 use accelkern::workload::{generate, points_f32, positions_f32, Distribution};
 
-fn device_backend() -> Option<Backend> {
-    Runtime::open_default().ok().map(|rt| Backend::device(Registry::new(rt)))
+fn device_session() -> Option<Session> {
+    Runtime::open_default().ok().map(|rt| Session::device(Registry::new(rt)))
 }
 
 fn runtime() -> Option<Arc<Runtime>> {
@@ -26,14 +26,14 @@ fn runtime() -> Option<Arc<Runtime>> {
 
 #[test]
 fn device_sort_matches_native_all_xla_dtypes() {
-    let Some(dev) = device_backend() else { return };
+    let Some(dev) = device_session() else { return };
     macro_rules! check {
         ($ty:ty, $seed:expr) => {{
             let xs: Vec<$ty> = generate(&mut Prng::new($seed), Distribution::Uniform, 40_000);
             let mut a = xs.clone();
-            ak::sort(&dev, &mut a).unwrap();
+            dev.sort(&mut a, None).unwrap();
             let mut b = xs;
-            ak::sort(&Backend::Native, &mut b).unwrap();
+            Session::native().sort(&mut b, None).unwrap();
             assert!(a == b, stringify!($ty));
         }};
     }
@@ -45,12 +45,45 @@ fn device_sort_matches_native_all_xla_dtypes() {
 }
 
 #[test]
+fn device_i128_sort_is_a_typed_error() {
+    // The silent host fallback is gone: i128 on the device engine is an
+    // UnsupportedDtype, caught at dispatch before any artifact call.
+    let Some(dev) = device_session() else { return };
+    let mut xs: Vec<i128> = generate(&mut Prng::new(99), Distribution::Uniform, 1000);
+    match dev.sort(&mut xs, None) {
+        Err(accelkern::session::AkError::UnsupportedDtype { dtype, .. }) => {
+            assert_eq!(dtype, ElemType::I128)
+        }
+        other => panic!("expected UnsupportedDtype, got {other:?}"),
+    }
+    // And the lowmem argsort names the backend gap explicitly.
+    assert!(matches!(
+        dev.sortperm_lowmem(&xs, None),
+        Err(accelkern::session::AkError::UnsupportedBackend { .. })
+    ));
+}
+
+#[test]
+fn device_block_size_knob_chunks_and_stays_correct() {
+    let Some(dev) = device_session() else { return };
+    let xs: Vec<i32> = generate(&mut Prng::new(41), Distribution::Uniform, 50_000);
+    let mut want = xs.clone();
+    want.sort_unstable();
+    // A small block granule forces the chunk + host-merge path even
+    // though the shard fits a single class.
+    let l = Launch::new().block_size(16_384);
+    let mut got = xs;
+    dev.sort(&mut got, Some(&l)).unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
 fn device_sort_chunked_beyond_largest_class() {
-    let Some(dev) = device_backend() else { return };
+    let Some(dev) = device_session() else { return };
     // Largest sort class is 2^17; force the chunk+merge path.
     let xs: Vec<i32> = generate(&mut Prng::new(7), Distribution::Uniform, (1 << 17) + 12_345);
     let mut a = xs.clone();
-    ak::sort(&dev, &mut a).unwrap();
+    dev.sort(&mut a, None).unwrap();
     assert!(is_sorted_total(&a));
     let mut b = xs;
     b.sort_unstable();
@@ -59,23 +92,25 @@ fn device_sort_chunked_beyond_largest_class() {
 
 #[test]
 fn device_scan_reduce_search_match_host() {
-    let Some(dev) = device_backend() else { return };
+    let Some(dev) = device_session() else { return };
+    let host = Session::native();
     let xs: Vec<i64> = generate(&mut Prng::new(8), Distribution::Uniform, 30_000)
         .into_iter()
         .map(|x: i64| x % 1_000_000) // keep sums small
         .collect();
-    let scan_d = ak::accumulate(&dev, &xs, true).unwrap();
-    let scan_h = ak::accumulate(&Backend::Native, &xs, true).unwrap();
+    let scan_d = dev.accumulate(&xs, true, None).unwrap();
+    let scan_h = host.accumulate(&xs, true, None).unwrap();
     assert_eq!(scan_d, scan_h);
-    let excl_d = ak::accumulate(&dev, &xs, false).unwrap();
-    let excl_h = ak::accumulate(&Backend::Native, &xs, false).unwrap();
+    let excl_d = dev.accumulate(&xs, false, None).unwrap();
+    let excl_h = host.accumulate(&xs, false, None).unwrap();
     assert_eq!(excl_d, excl_h);
 
-    let sum_d = ak::reduce(&dev, &xs, ak::ReduceKind::Add, 0).unwrap();
-    let sum_h = ak::reduce(&Backend::Native, &xs, ak::ReduceKind::Add, 0).unwrap();
+    let sum_d = dev.reduce(&xs, ReduceKind::Add, None).unwrap();
+    let sum_h = host.reduce(&xs, ReduceKind::Add, None).unwrap();
     assert_eq!(sum_d, sum_h);
-    // switch_below: host-finished fold must agree too.
-    let sum_sb = ak::reduce(&dev, &xs, ak::ReduceKind::Add, usize::MAX).unwrap();
+    // switch_below knob: host-finished fold must agree too.
+    let sb = Launch::new().switch_below(usize::MAX);
+    let sum_sb = dev.reduce(&xs, ReduceKind::Add, Some(&sb)).unwrap();
     assert_eq!(sum_sb, sum_h);
 
     let mut hay = xs.clone();
@@ -84,37 +119,38 @@ fn device_scan_reduce_search_match_host() {
         .into_iter()
         .map(|x: i64| x % 1_000_000)
         .collect();
-    let f_d = ak::searchsorted_first(&dev, &hay, &needles).unwrap();
-    let f_h = ak::searchsorted_first(&Backend::Native, &hay, &needles).unwrap();
+    let f_d = dev.searchsorted_first(&hay, &needles, None).unwrap();
+    let f_h = host.searchsorted_first(&hay, &needles, None).unwrap();
     assert_eq!(f_d, f_h);
-    let l_d = ak::searchsorted_last(&dev, &hay, &needles).unwrap();
-    let l_h = ak::searchsorted_last(&Backend::Native, &hay, &needles).unwrap();
+    let l_d = dev.searchsorted_last(&hay, &needles, None).unwrap();
+    let l_h = host.searchsorted_last(&hay, &needles, None).unwrap();
     assert_eq!(l_d, l_h);
 }
 
 #[test]
 fn device_sortperm_matches_host() {
-    let Some(dev) = device_backend() else { return };
+    let Some(dev) = device_session() else { return };
     let xs: Vec<i32> = generate(&mut Prng::new(10), Distribution::DupHeavy, 20_000);
-    let pd = ak::sortperm(&dev, &xs).unwrap();
-    let ph = ak::sortperm(&Backend::Native, &xs).unwrap();
+    let pd = dev.sortperm(&xs, None).unwrap();
+    let ph = Session::native().sortperm(&xs, None).unwrap();
     assert_eq!(pd, ph); // both stable -> identical permutation
 }
 
 #[test]
 fn device_arith_kernels_match_host() {
-    let Some(dev) = device_backend() else { return };
+    let Some(dev) = device_session() else { return };
+    let host = Session::native();
     let pts = points_f32(&mut Prng::new(11), 50_000);
-    let rd = ak::rbf(&dev, &pts).unwrap();
-    let rh = ak::rbf(&Backend::Native, &pts).unwrap();
+    let rd = dev.rbf(&pts, None).unwrap();
+    let rh = host.rbf(&pts, None).unwrap();
     for (a, b) in rd.iter().zip(&rh) {
         assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0));
     }
     let p1 = positions_f32(&mut Prng::new(12), 50_000, 4.0);
     let p2 = positions_f32(&mut Prng::new(13), 50_000, 4.0);
-    let c = ak::LjgConsts::default();
-    let ld = ak::ljg(&dev, &p1, &p2, c).unwrap();
-    let lh = ak::ljg(&Backend::Native, &p1, &p2, c).unwrap();
+    let c = LjgConsts::default();
+    let ld = dev.ljg(&p1, &p2, c, None).unwrap();
+    let lh = host.ljg(&p1, &p2, c, None).unwrap();
     for (i, (a, b)) in ld.iter().zip(&lh).enumerate() {
         assert!((a - b).abs() <= 2e-3 * b.abs().max(1.0), "i={i}: {a} vs {b}");
     }
@@ -122,13 +158,17 @@ fn device_arith_kernels_match_host() {
 
 #[test]
 fn device_predicates_early_exit() {
-    let Some(dev) = device_backend() else { return };
+    let Some(dev) = device_session() else { return };
     let mut xs = vec![0.0f32; 100_000];
     xs[70_000] = 5.0;
-    assert!(ak::any_gt(&dev, &xs, 1.0).unwrap());
-    assert!(!ak::any_gt(&dev, &xs, 10.0).unwrap());
-    assert!(!ak::all_gt(&dev, &xs, -0.5).unwrap() == false); // all > -0.5
-    assert!(!ak::all_gt(&dev, &xs, 0.5).unwrap());
+    assert!(dev.any_gt(&xs, 1.0f32, None).unwrap());
+    assert!(!dev.any_gt(&xs, 10.0f32, None).unwrap());
+    assert!(dev.all_gt(&xs, -0.5f32, None).unwrap()); // all > -0.5
+    assert!(!dev.all_gt(&xs, 0.5f32, None).unwrap());
+    // Generic device predicates: the i32 artifact family.
+    let ys: Vec<i32> = (0..100_000).collect();
+    assert!(dev.any_gt(&ys, 99_998i32, None).unwrap());
+    assert!(!dev.any_gt(&ys, 99_999i32, None).unwrap());
 }
 
 // ---------- distributed sorts through the full stack ----------

@@ -5,7 +5,6 @@
 //! distribution, all six paper dtypes, float specials (NaN, −0.0,
 //! infinities), duplicate-heavy inputs, and empty/tiny runs.
 
-use accelkern::backend::Backend;
 use accelkern::baselines::kmerge::kmerge_into_slice;
 use accelkern::baselines::merge_path::{self, PAR_MERGE_MIN};
 use accelkern::baselines::radix::{radix_sort, radix_sort_threaded, RADIX_PAR_MIN};
@@ -222,10 +221,10 @@ fn threaded_sort_matches_native_across_threads() {
         xs[5] = f32::NAN;
         xs[6] = -0.0;
         let mut want = xs.clone();
-        accelkern::algorithms::sort(&Backend::Native, &mut want).unwrap();
+        accelkern::session::Session::native().sort(&mut want, None).unwrap();
         for t in THREADS {
             let mut got = xs.clone();
-            accelkern::algorithms::sort(&Backend::Threaded(t), &mut got).unwrap();
+            accelkern::session::Session::threaded(t).sort(&mut got, None).unwrap();
             assert!(bits_eq(&got, &want), "{dist:?} t={t}");
         }
     }
@@ -239,8 +238,10 @@ fn local_sorter_tr_uses_consistent_engine() {
     let n = RADIX_PAR_MIN + 1000;
     let xs: Vec<i32> = generate(&mut Prng::new(500), Distribution::Uniform, n);
     let mut want = xs.clone();
-    LocalSorter::JuliaBase.sort(&mut want).unwrap();
+    LocalSorter::JuliaBase.sort(&mut want, &accelkern::session::Launch::default()).unwrap();
     let mut got = xs;
-    LocalSorter::ThrustRadix.sort(&mut got).unwrap();
+    LocalSorter::ThrustRadix
+        .sort(&mut got, &accelkern::session::Launch::default())
+        .unwrap();
     assert_eq!(got, want);
 }

@@ -256,13 +256,12 @@ fn prop_hybrid_cosort_equals_total_sort_ints() {
 
 #[test]
 fn prop_scan_matches_reference() {
-    use accelkern::algorithms::accumulate;
-    use accelkern::backend::Backend;
+    use accelkern::session::Session;
     let gen = VecGen::new(5000, |r| r.range_i64(-1_000_000, 1_000_000));
     check("scan-threaded", &PropConfig::default(), &gen, |xs| {
         for inclusive in [true, false] {
-            let native = accumulate(&Backend::Native, xs, inclusive).unwrap();
-            let threaded = accumulate(&Backend::Threaded(4), xs, inclusive).unwrap();
+            let native = Session::native().accumulate(xs, inclusive, None).unwrap();
+            let threaded = Session::threaded(4).accumulate(xs, inclusive, None).unwrap();
             if native != threaded {
                 return Err(format!("threaded scan mismatch inclusive={inclusive}"));
             }

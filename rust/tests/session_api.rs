@@ -1,0 +1,276 @@
+//! The `Session`/`Launch` API contract (DESIGN.md §12):
+//!
+//! * (a) the deprecated free-function shims and the session methods are
+//!   result-equivalent on every host backend;
+//! * (b) `Launch` knobs actually change the *observed parallelism*
+//!   (thread-id probe), never the results;
+//! * (c) the typed error surface: shape mismatches, backend gaps,
+//!   i128-on-device dtype gaps (artifact-gated), and empty/degenerate
+//!   inputs.
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use accelkern::algorithms::ReduceKind;
+use accelkern::backend::Backend;
+use accelkern::hybrid::{HybridEngine, HybridPlan};
+use accelkern::session::{AkError, Launch, Session};
+use accelkern::util::Prng;
+use accelkern::workload::{generate, Distribution};
+
+fn host_backends() -> Vec<Backend> {
+    vec![
+        Backend::Native,
+        Backend::Threaded(4),
+        Backend::Hybrid(HybridEngine::new(HybridPlan::new(0.5), 3, None)),
+    ]
+}
+
+// ---- (a) shim-vs-session equivalence ---------------------------------------
+
+#[test]
+#[allow(deprecated)]
+fn shims_and_sessions_agree_on_every_host_backend() {
+    let xs: Vec<i64> = generate(&mut Prng::new(1), Distribution::Uniform, 30_000);
+    let fs: Vec<f32> = generate(&mut Prng::new(2), Distribution::Uniform, 30_000);
+    for backend in host_backends() {
+        let session = Session::from_backend(backend.clone());
+
+        let mut a = xs.clone();
+        accelkern::algorithms::sort(&backend, &mut a).unwrap();
+        let mut b = xs.clone();
+        session.sort(&mut b, None).unwrap();
+        assert_eq!(a, b, "sort {backend:?}");
+
+        let pa = accelkern::algorithms::sortperm(&backend, &xs).unwrap();
+        let pb = session.sortperm(&xs, None).unwrap();
+        assert_eq!(pa, pb, "sortperm {backend:?}");
+
+        let ra = accelkern::algorithms::reduce(&backend, &xs, ReduceKind::Add, 0).unwrap();
+        let rb = session.reduce(&xs, ReduceKind::Add, None).unwrap();
+        assert_eq!(ra, rb, "reduce {backend:?}");
+
+        let sa = accelkern::algorithms::accumulate(&backend, &xs, true).unwrap();
+        let sb = session.accumulate(&xs, true, None).unwrap();
+        assert_eq!(sa, sb, "accumulate {backend:?}");
+
+        let mut hay = xs.clone();
+        hay.sort_unstable();
+        let qa = accelkern::algorithms::searchsorted_first(&backend, &hay, &xs[..100]).unwrap();
+        let qb = session.searchsorted_first(&hay, &xs[..100], None).unwrap();
+        assert_eq!(qa, qb, "searchsorted {backend:?}");
+
+        let ga = accelkern::algorithms::any_gt(&backend, &fs, 0.5).unwrap();
+        let gb = session.any_gt(&fs, 0.5f32, None).unwrap();
+        assert_eq!(ga, gb, "any_gt {backend:?}");
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn lowmem_shim_dispatches_instead_of_ignoring_backend() {
+    // The satellite fix: `sortperm_lowmem` used to ignore its backend
+    // argument; it now dispatches (and the results stay identical).
+    let xs: Vec<f64> = generate(&mut Prng::new(3), Distribution::DupHeavy, 20_000);
+    let want = accelkern::algorithms::sortperm_lowmem(&Backend::Native, &xs).unwrap();
+    for backend in host_backends() {
+        let got = accelkern::algorithms::sortperm_lowmem(&backend, &xs).unwrap();
+        assert_eq!(got, want, "{backend:?}");
+    }
+}
+
+// ---- (b) knobs change observed parallelism ---------------------------------
+
+/// Count distinct worker thread ids across a foreachindex sweep: the
+/// parallel engine spawns scoped workers (their ids differ from the
+/// caller's), the sequential engine runs on the caller thread only.
+fn observed_threads(session: &Session, n: usize, launch: Option<&Launch>) -> usize {
+    let seen: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+    session.foreachindex(
+        n,
+        |_| {
+            seen.lock().unwrap().insert(std::thread::current().id());
+        },
+        launch,
+    );
+    seen.lock().unwrap().len()
+}
+
+#[test]
+fn max_tasks_caps_worker_count() {
+    let s = Session::threaded(4);
+    let n = 1 << 16;
+    assert_eq!(observed_threads(&s, n, None), 4);
+    assert_eq!(observed_threads(&s, n, Some(&Launch::new().max_tasks(2))), 2);
+    assert_eq!(observed_threads(&s, n, Some(&Launch::new().max_tasks(1))), 1);
+}
+
+#[test]
+fn min_elems_per_task_starves_excess_workers() {
+    let s = Session::threaded(8);
+    let n = 40_000;
+    // 40k elements at >=20k per task -> at most 2 workers.
+    let l = Launch::new().min_elems_per_task(20_000);
+    assert_eq!(observed_threads(&s, n, Some(&l)), 2);
+}
+
+#[test]
+fn par_threshold_forces_the_sequential_engine() {
+    let s = Session::threaded(4);
+    let n = 1 << 16;
+    let caller = std::thread::current().id();
+    let seen: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+    s.foreachindex(
+        n,
+        |_| {
+            seen.lock().unwrap().insert(std::thread::current().id());
+        },
+        Some(&Launch::new().prefer_parallel_threshold(usize::MAX)),
+    );
+    let seen = seen.into_inner().unwrap();
+    assert_eq!(seen.len(), 1);
+    assert!(seen.contains(&caller), "sequential path must run on the caller");
+    // The hybrid host route honours the same gate.
+    let hy = Session::hybrid(HybridEngine::new(HybridPlan::new(0.5), 3, None));
+    let l = Launch::new().prefer_parallel_threshold(usize::MAX);
+    assert_eq!(observed_threads(&hy, n, Some(&l)), 1);
+}
+
+#[test]
+fn session_default_policy_applies_and_per_call_overrides() {
+    let s = Session::threaded(8).with_defaults(Launch::new().max_tasks(2));
+    let n = 1 << 16;
+    assert_eq!(observed_threads(&s, n, None), 2); // policy
+    assert_eq!(observed_threads(&s, n, Some(&Launch::new().max_tasks(4))), 4); // override
+}
+
+#[test]
+fn knobs_never_change_results() {
+    let xs: Vec<f64> = generate(&mut Prng::new(4), Distribution::DupHeavy, 100_000);
+    let mut want = xs.clone();
+    Session::native().sort(&mut want, None).unwrap();
+    for backend in host_backends() {
+        let s = Session::from_backend(backend);
+        for l in [
+            Launch::new().max_tasks(3),
+            Launch::new().min_elems_per_task(10_000),
+            Launch::new().prefer_parallel_threshold(16),
+            Launch::new().prefer_parallel_threshold(usize::MAX),
+            Launch::new().reuse_scratch(true),
+        ] {
+            let mut got = xs.clone();
+            s.sort(&mut got, Some(&l)).unwrap();
+            assert!(
+                accelkern::dtype::bits_eq(&got, &want),
+                "{:?} with {l:?}",
+                s.backend().name()
+            );
+        }
+    }
+}
+
+#[test]
+fn scratch_reuse_is_observable_in_metrics() {
+    let s = Session::threaded(4);
+    let l = Launch::new().reuse_scratch(true);
+    for seed in 0..3u64 {
+        let mut xs: Vec<i32> = generate(&mut Prng::new(seed), Distribution::Uniform, 50_000);
+        s.sort(&mut xs, Some(&l)).unwrap();
+    }
+    assert_eq!(s.metrics().calls(), 3);
+    assert!(s.metrics().scratch_hits() >= 2, "hits {}", s.metrics().scratch_hits());
+}
+
+// ---- (c) typed errors + degenerate inputs ----------------------------------
+
+#[test]
+fn shape_mismatch_is_typed() {
+    let s = Session::native();
+    let mut keys = vec![1i32, 2, 3];
+    let mut vals = vec![0u64; 5];
+    assert!(matches!(
+        s.sort_by_key(&mut keys, &mut vals, None),
+        Err(AkError::ShapeMismatch { op: "sort_by_key", .. })
+    ));
+    assert!(matches!(s.rbf(&[1.0, 2.0], None), Err(AkError::ShapeMismatch { op: "rbf", .. })));
+    assert!(matches!(
+        s.ljg(&[1.0; 3], &[1.0; 6], Default::default(), None),
+        Err(AkError::ShapeMismatch { .. })
+    ));
+}
+
+#[test]
+fn device_dtype_and_backend_gaps_are_typed() {
+    // Needs `make artifacts`; skips gracefully offline like the other
+    // device tests (integration.rs covers the same path).
+    let Some(rt) = accelkern::runtime::Runtime::open_default().ok() else { return };
+    let dev = Session::device(accelkern::runtime::Registry::new(rt));
+    let mut xs: Vec<i128> = generate(&mut Prng::new(5), Distribution::Uniform, 2000);
+    assert!(matches!(
+        dev.sort(&mut xs, None),
+        Err(AkError::UnsupportedDtype { op: "sort", .. })
+    ));
+    assert!(matches!(
+        dev.sortperm_lowmem(&xs, None),
+        Err(AkError::UnsupportedBackend { op: "sortperm_lowmem", .. })
+    ));
+}
+
+#[test]
+fn lowmem_errors_are_host_gap_only() {
+    // On host sessions lowmem works everywhere (no typed error).
+    let xs: Vec<i64> = generate(&mut Prng::new(6), Distribution::Uniform, 5000);
+    for backend in host_backends() {
+        assert!(Session::from_backend(backend).sortperm_lowmem(&xs, None).is_ok());
+    }
+}
+
+#[test]
+fn errors_convert_into_anyhow_for_shim_callers() {
+    fn caller() -> anyhow::Result<()> {
+        let s = Session::native();
+        s.rbf(&[1.0, 2.0], None)?;
+        Ok(())
+    }
+    let msg = format!("{:#}", caller().unwrap_err());
+    assert!(msg.contains("rbf"), "{msg}");
+}
+
+#[test]
+fn empty_and_degenerate_inputs() {
+    for backend in host_backends() {
+        let s = Session::from_backend(backend);
+        let e: Vec<i64> = vec![];
+        let mut es = e.clone();
+        s.sort(&mut es, None).unwrap();
+        assert!(es.is_empty());
+        assert!(s.sortperm(&e, None).unwrap().is_empty());
+        assert_eq!(s.reduce(&e, ReduceKind::Add, None).unwrap(), 0);
+        assert_eq!(s.reduce(&e, ReduceKind::Min, None).unwrap(), i64::MAX);
+        assert!(s.accumulate(&e, true, None).unwrap().is_empty());
+        assert!(!s.any_gt(&e, 0i64, None).unwrap());
+        assert!(s.all_gt(&e, 0i64, None).unwrap()); // vacuous truth
+
+        let mut one = vec![42i64];
+        s.sort(&mut one, None).unwrap();
+        assert_eq!(one, vec![42]);
+        let mut k = vec![7i32];
+        let mut v = vec![1u8];
+        s.sort_by_key(&mut k, &mut v, None).unwrap();
+    }
+}
+
+#[test]
+fn hybrid_session_composes_engines() {
+    // The hybrid backend through the one dispatch surface: same results,
+    // co-split observable through the launch gate.
+    let xs: Vec<i64> = generate(&mut Prng::new(7), Distribution::Uniform, 60_000);
+    let mut want = xs.clone();
+    want.sort_unstable();
+    let s = Session::hybrid(HybridEngine::new(HybridPlan::new(0.4), 3, None));
+    let mut got = xs.clone();
+    s.sort(&mut got, None).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(s.reduce(&xs, ReduceKind::Max, None).unwrap(), *xs.iter().max().unwrap());
+    assert!(s.any_gt(&xs, *xs.iter().min().unwrap(), None).unwrap());
+}
