@@ -1,6 +1,6 @@
 # Top-level convenience targets (see README.md).
 
-.PHONY: artifacts build test doc bench-smoke bench-sort clean-artifacts
+.PHONY: artifacts build test doc bench-smoke bench-sort bench-stream clean-artifacts
 
 # AOT-lower the L1/L2 Pallas/JAX catalog to artifacts/ (requires jax).
 artifacts:
@@ -26,6 +26,13 @@ bench-smoke:
 # non-zero. Drop --quick for the full dtype grid at n = 2^22.
 bench-sort: build
 	cargo run --release --bin akbench -- bench-sort --quick
+
+# Out-of-core pipeline sweep -> BENCH_stream.json (DESIGN.md §13):
+# external sort of datasets 8x larger than the memory budget, verified
+# bitwise against the in-memory sort (divergence exits non-zero). Drop
+# --quick for the full dtype grid and the 16x ratio.
+bench-stream: build
+	cargo run --release --bin akbench -- bench-stream --quick
 
 clean-artifacts:
 	rm -rf artifacts

@@ -149,6 +149,142 @@ fn loser_tree_merge<K: SortKey, U: MergeImage>(live: &[&[K]], out: &mut [K]) {
     }
 }
 
+/// A pull-based cursor over one ascending-sorted run — the streaming
+/// counterpart of a `&[K]` run reference. `head` peeks the next key;
+/// `advance` consumes it and may refill an internal buffer (file-backed
+/// cursors in `crate::stream` do exactly that), which is why it is
+/// fallible: an I/O error surfaces at the merge call site instead of
+/// silently truncating the run.
+pub trait RunCursor<K: SortKey> {
+    /// The next unconsumed key, or `None` when the run is exhausted.
+    fn head(&self) -> Option<K>;
+    /// Consume the current head (no-op once exhausted).
+    fn advance(&mut self) -> anyhow::Result<()>;
+}
+
+/// In-memory [`RunCursor`] over a sorted slice.
+pub struct SliceCursor<'a, K> {
+    run: &'a [K],
+    pos: usize,
+}
+
+impl<'a, K> SliceCursor<'a, K> {
+    /// Cursor at the start of `run` (must be ascending-sorted).
+    pub fn new(run: &'a [K]) -> Self {
+        SliceCursor { run, pos: 0 }
+    }
+}
+
+impl<K: SortKey> RunCursor<K> for SliceCursor<'_, K> {
+    fn head(&self) -> Option<K> {
+        self.run.get(self.pos).copied()
+    }
+
+    fn advance(&mut self) -> anyhow::Result<()> {
+        self.pos = (self.pos + 1).min(self.run.len());
+        Ok(())
+    }
+}
+
+/// Resumable k-way merge: the same loser tree as [`kmerge_into_slice`],
+/// but pull-based — output is yielded in caller-sized chunks instead of
+/// filling one output slice, so a consumer (the out-of-core merge in
+/// `crate::stream`, a network writer) can drain it incrementally under a
+/// memory budget. Matches compare `(bit image, exhausted)` pairs, so a
+/// real key whose image is all-ones (`i64::MAX`, `i128::MAX`) still
+/// merges correctly — the same no-sentinel-in-band rule as the slice
+/// engine.
+pub struct KmergePull<K: SortKey, C: RunCursor<K>> {
+    cursors: Vec<C>,
+    /// Internal nodes hold match losers (run ids); `winner` is the root.
+    losers: Vec<usize>,
+    winner: usize,
+    tree_size: usize,
+    _marker: std::marker::PhantomData<K>,
+}
+
+impl<K: SortKey, C: RunCursor<K>> KmergePull<K, C> {
+    /// Build the tournament over `cursors` (each ascending-sorted).
+    pub fn new(cursors: Vec<C>) -> Self {
+        let k = cursors.len();
+        let tree_size = k.next_power_of_two().max(1);
+        let mut merge = KmergePull {
+            cursors,
+            losers: vec![usize::MAX; tree_size],
+            winner: usize::MAX,
+            tree_size,
+            _marker: std::marker::PhantomData,
+        };
+        // Seed the bracket exactly like the slice engine: leaves are run
+        // ids (usize::MAX pads to a power of two), internal nodes keep
+        // the loser, the winner propagates to the root.
+        let mut winner_at = vec![usize::MAX; 2 * tree_size];
+        for leaf in 0..tree_size {
+            winner_at[tree_size + leaf] = if leaf < k { leaf } else { usize::MAX };
+        }
+        for node in (1..tree_size).rev() {
+            let a = winner_at[2 * node];
+            let b = winner_at[2 * node + 1];
+            let (win, lose) = if merge.key_of(a) <= merge.key_of(b) { (a, b) } else { (b, a) };
+            winner_at[node] = win;
+            merge.losers[node] = lose;
+        }
+        // Root at index 1 (for tree_size == 1 that slot IS the only
+        // leaf, so 0- and 1-run merges need no special casing).
+        merge.winner = winner_at[1];
+        merge
+    }
+
+    /// `(image, exhausted)` match key of a run id (padding ids and
+    /// exhausted cursors sort after every live key).
+    fn key_of(&self, run: usize) -> (u128, bool) {
+        match self.cursors.get(run).and_then(|c| c.head()) {
+            Some(k) => (k.to_bits(), false),
+            None => (u128::MAX, true),
+        }
+    }
+
+    /// Has every run been fully drained?
+    pub fn is_done(&self) -> bool {
+        self.winner == usize::MAX || self.cursors[self.winner].head().is_none()
+    }
+
+    /// Append up to `max` merged elements to `out`; returns how many were
+    /// produced (0 means every run is exhausted). Calling again resumes
+    /// where the previous chunk stopped.
+    pub fn next_chunk(&mut self, out: &mut Vec<K>, max: usize) -> anyhow::Result<usize> {
+        let mut produced = 0;
+        while produced < max {
+            let w = self.winner;
+            let Some(head) = self.cursors.get(w).and_then(|c| c.head()) else {
+                break;
+            };
+            out.push(head);
+            produced += 1;
+            self.cursors[w].advance()?;
+            // Replay from the winner's leaf up to the root.
+            let mut node = (self.tree_size + w) / 2;
+            let mut cur = w;
+            let mut cur_key = self.key_of(cur);
+            while node >= 1 {
+                let opp = self.losers[node];
+                let opp_key = self.key_of(opp);
+                if opp_key < cur_key {
+                    self.losers[node] = cur;
+                    cur = opp;
+                    cur_key = opp_key;
+                }
+                if node == 1 {
+                    break;
+                }
+                node /= 2;
+            }
+            self.winner = cur;
+        }
+        Ok(produced)
+    }
+}
+
 /// 2-way merge into an exactly-sized output slice.
 #[inline]
 pub(super) fn merge2_into_slice<K: SortKey>(a: &[K], b: &[K], out: &mut [K]) {
@@ -257,6 +393,83 @@ mod tests {
         assert_eq!(buf, want);
         kmerge_into(&refs, &mut buf); // reused
         assert_eq!(buf, want);
+    }
+
+    #[test]
+    fn pull_merge_matches_batch_engine_across_chunk_sizes() {
+        // The resumable engine must produce exactly the batch engine's
+        // output regardless of how the consumer slices its pulls.
+        for k in [1usize, 2, 3, 5, 8, 13] {
+            let (runs, want) = split_sorted::<i32>(40 + k as u64, 3000, k);
+            let refs: Vec<&[i32]> = runs.iter().map(|r| r.as_slice()).collect();
+            for chunk in [1usize, 3, 64, 1000, 10_000] {
+                let cursors: Vec<SliceCursor<i32>> =
+                    refs.iter().map(|r| SliceCursor::new(r)).collect();
+                let mut m = KmergePull::new(cursors);
+                let mut got = Vec::new();
+                loop {
+                    let n = m.next_chunk(&mut got, chunk).unwrap();
+                    if n == 0 {
+                        break;
+                    }
+                    assert!(n <= chunk);
+                }
+                assert!(m.is_done());
+                assert_eq!(m.next_chunk(&mut got, 16).unwrap(), 0, "drained merge yields 0");
+                assert_eq!(got, want, "k={k} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn pull_merge_resumes_mid_run() {
+        // Interleave differently-sized pulls; the boundary must never
+        // duplicate or drop an element.
+        let (runs, want) = split_sorted::<f64>(77, 2000, 4);
+        let refs: Vec<&[f64]> = runs.iter().map(|r| r.as_slice()).collect();
+        let mut m = KmergePull::new(refs.iter().map(|r| SliceCursor::new(r)).collect());
+        let mut got = Vec::new();
+        for (i, sz) in [7usize, 1, 400, 3, 1999].iter().cycle().enumerate() {
+            if m.next_chunk(&mut got, *sz).unwrap() == 0 {
+                break;
+            }
+            assert!(i < 10_000, "merge failed to terminate");
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pull_merge_handles_degenerate_inputs() {
+        // Zero runs.
+        let mut m = KmergePull::<i32, SliceCursor<i32>>::new(vec![]);
+        let mut out = Vec::new();
+        assert!(m.is_done());
+        assert_eq!(m.next_chunk(&mut out, 8).unwrap(), 0);
+        // One run (fast path through the same tree).
+        let a = vec![1i32, 2, 3];
+        let mut m = KmergePull::new(vec![SliceCursor::new(&a)]);
+        assert_eq!(m.next_chunk(&mut out, 100).unwrap(), 3);
+        assert_eq!(out, vec![1, 2, 3]);
+        // Empty runs among live ones.
+        let b: Vec<i32> = vec![];
+        let c = vec![0i32, 9];
+        let mut m =
+            KmergePull::new(vec![SliceCursor::new(&a), SliceCursor::new(&b), SliceCursor::new(&c)]);
+        let mut out2 = Vec::new();
+        while m.next_chunk(&mut out2, 2).unwrap() > 0 {}
+        assert_eq!(out2, vec![0, 1, 2, 3, 9]);
+    }
+
+    #[test]
+    fn pull_merge_max_keys_are_not_sentinels() {
+        // Same regression as the batch engine: all-ones images are real
+        // keys, not exhaustion markers.
+        let a = vec![1i64, i64::MAX];
+        let b = vec![i64::MAX, i64::MAX];
+        let mut m = KmergePull::new(vec![SliceCursor::new(&a), SliceCursor::new(&b)]);
+        let mut out = Vec::new();
+        while m.next_chunk(&mut out, 1).unwrap() > 0 {}
+        assert_eq!(out, vec![1, i64::MAX, i64::MAX, i64::MAX]);
     }
 
     #[test]

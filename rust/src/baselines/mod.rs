@@ -17,7 +17,7 @@ pub mod merge;
 pub mod merge_path;
 pub mod radix;
 
-pub use kmerge::kmerge;
+pub use kmerge::{kmerge, KmergePull, RunCursor, SliceCursor};
 pub use merge::merge_sort;
 pub use merge_path::{kmerge_parallel, merge2_parallel};
 pub use radix::{radix_sort, radix_sort_auto, radix_sort_auto_with, radix_sort_threaded};

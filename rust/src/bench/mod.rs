@@ -9,6 +9,30 @@
 
 pub mod runner;
 pub mod sort_bench;
+pub mod stream_bench;
 
 pub use runner::{benchmark, benchmark_with_setup, BenchOpts, BenchResult, Bencher};
 pub use sort_bench::{run_sort_bench, SortBenchRecord, SortBenchReport};
+pub use stream_bench::{run_stream_bench, StreamBenchRecord, StreamBenchReport};
+
+/// JSON object for the active launch knobs — one serialisation shared
+/// by every bench report writer, so `BENCH_sort.json` and
+/// `BENCH_stream.json` cannot drift apart when a knob is added.
+pub(crate) fn launch_json(l: &crate::session::Launch) -> String {
+    fn opt(v: Option<usize>) -> String {
+        match v {
+            Some(x) => x.to_string(),
+            None => "null".to_string(),
+        }
+    }
+    format!(
+        "{{\"block_size\": {}, \"max_tasks\": {}, \"min_elems_per_task\": {}, \
+         \"par_threshold\": {}, \"switch_below\": {}, \"reuse_scratch\": {}}}",
+        opt(l.block_size),
+        opt(l.max_tasks),
+        opt(l.min_elems_per_task),
+        opt(l.prefer_parallel_threshold),
+        opt(l.switch_below),
+        l.reuse_scratch_on(),
+    )
+}

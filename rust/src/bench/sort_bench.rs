@@ -67,13 +67,6 @@ pub struct SortBenchReport {
     pub records: Vec<SortBenchRecord>,
 }
 
-fn json_opt(v: Option<usize>) -> String {
-    match v {
-        Some(x) => x.to_string(),
-        None => "null".to_string(),
-    }
-}
-
 impl SortBenchReport {
     /// Find a record by engine name and dtype.
     pub fn get(&self, engine: &str, dtype: ElemType) -> Option<&SortBenchRecord> {
@@ -86,16 +79,7 @@ impl SortBenchReport {
         let mut s = String::new();
         s.push_str("{\n  \"version\": 2,\n");
         s.push_str(&format!("  \"n\": {},\n  \"threads\": {},\n", self.n, self.threads));
-        s.push_str(&format!(
-            "  \"launch\": {{\"block_size\": {}, \"max_tasks\": {}, \"min_elems_per_task\": {}, \
-             \"par_threshold\": {}, \"switch_below\": {}, \"reuse_scratch\": {}}},\n",
-            json_opt(self.launch.block_size),
-            json_opt(self.launch.max_tasks),
-            json_opt(self.launch.min_elems_per_task),
-            json_opt(self.launch.prefer_parallel_threshold),
-            json_opt(self.launch.switch_below),
-            self.launch.reuse_scratch_on(),
-        ));
+        s.push_str(&format!("  \"launch\": {},\n", crate::bench::launch_json(&self.launch)));
         s.push_str("  \"results\": [\n");
         for (i, r) in self.records.iter().enumerate() {
             s.push_str(&format!(

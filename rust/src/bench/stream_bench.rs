@@ -1,0 +1,509 @@
+//! `akbench bench-stream` — the out-of-core pipeline throughput tracker.
+//!
+//! Sorts datasets a fixed multiple (≥ 8×) larger than the engine's
+//! memory budget through [`crate::stream`]'s external sort, per memory
+//! budget × dtype, and emits `BENCH_stream.json` so the streaming
+//! subsystem's perf trajectory is tracked from commit to commit next to
+//! `BENCH_sort.json`. Every measured configuration doubles as a
+//! correctness gate: the streamed output must be bitwise-identical to
+//! the in-memory `Session::sort` reference on a subsampled verification
+//! pass (plus full-length and boundary checks) — any divergence is a
+//! hard error, which CI relies on.
+//!
+//! Engine legend:
+//! * `external-sort`   — run generation + budgeted k-way merge over the
+//!   configured spill medium ([`crate::stream::StreamCtx::external_sort`]).
+//! * `stream-reduce`   — single-pass budgeted fold (the pipeline
+//!   overhead floor: no spill, no merge).
+//! * `sort-inmem[ref]` — the in-memory session sort of the same dataset
+//!   (the budget-free baseline the streaming engines are normalised
+//!   against).
+
+use std::path::{Path, PathBuf};
+
+use crate::algorithms::ReduceKind;
+use crate::backend::DeviceKey;
+use crate::bench::{BenchOpts, Bencher};
+use crate::dtype::ElemType;
+use crate::session::{Launch, Session};
+use crate::stream::{GenSource, SliceSource, SpillMedium, StreamBudget, VecSink};
+use crate::util::Prng;
+use crate::workload::{Distribution, KeyGen};
+
+/// Dataset-bytes : budget-bytes ratios measured per dtype. The first
+/// entry is the acceptance-critical ≥ 8× out-of-core configuration.
+pub const FULL_RATIOS: [usize; 2] = [8, 16];
+/// `--quick` ratio grid.
+pub const QUICK_RATIOS: [usize; 1] = [8];
+
+/// Verification sample count per configuration (subsampled bitwise
+/// comparison against the in-memory reference).
+const VERIFY_SAMPLES: usize = 2048;
+
+/// One measured row of the stream bench.
+#[derive(Clone, Debug)]
+pub struct StreamBenchRecord {
+    /// Engine name (see the module docs legend).
+    pub engine: String,
+    /// Element type processed.
+    pub dtype: ElemType,
+    /// Elements per iteration.
+    pub n: usize,
+    /// Engine memory budget in bytes (0 for the budget-free reference).
+    pub budget_bytes: usize,
+    /// Dataset bytes / budget bytes (0 for the reference row).
+    pub ratio: usize,
+    /// Sorted runs generated (external-sort rows).
+    pub runs: usize,
+    /// Merge passes executed (external-sort rows).
+    pub merge_passes: usize,
+    /// Merge fan-in the run used (external-sort rows).
+    pub fan_in: usize,
+    /// Bytes spilled to disk per iteration (external-sort rows).
+    pub spilled_bytes: u64,
+    /// Output positions bitwise-verified against the reference.
+    pub verified: usize,
+    /// Mean seconds per iteration.
+    pub secs_mean: f64,
+    /// Standard deviation of the per-iteration seconds.
+    pub secs_std: f64,
+    /// Throughput in bytes/second (n × key bytes / mean seconds).
+    pub bytes_per_sec: f64,
+    /// Recorded samples.
+    pub samples: usize,
+}
+
+/// The full bench outcome.
+#[derive(Clone, Debug, Default)]
+pub struct StreamBenchReport {
+    /// Elements per iteration.
+    pub n: usize,
+    /// Host threads the per-chunk engines ran with.
+    pub threads: usize,
+    /// Spill medium of the external sorts.
+    pub spill: &'static str,
+    /// The launch knobs the per-chunk engines ran with.
+    pub launch: Launch,
+    /// All measured rows.
+    pub records: Vec<StreamBenchRecord>,
+}
+
+impl StreamBenchReport {
+    /// Find a record by engine name, dtype and ratio.
+    pub fn get(&self, engine: &str, dtype: ElemType, ratio: usize) -> Option<&StreamBenchRecord> {
+        self.records
+            .iter()
+            .find(|r| r.engine == engine && r.dtype == dtype && r.ratio == ratio)
+    }
+
+    /// Serialise as JSON (`BENCH_stream.json`, schema version 1).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"version\": 1,\n");
+        s.push_str(&format!(
+            "  \"n\": {},\n  \"threads\": {},\n  \"spill\": \"{}\",\n",
+            self.n, self.threads, self.spill
+        ));
+        s.push_str(&format!("  \"launch\": {},\n", crate::bench::launch_json(&self.launch)));
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"engine\": \"{}\", \"dtype\": \"{}\", \"n\": {}, \"budget_bytes\": {}, \
+                 \"ratio\": {}, \"runs\": {}, \"merge_passes\": {}, \"fan_in\": {}, \
+                 \"spilled_bytes\": {}, \"verified\": {}, \"secs_mean\": {:.9}, \
+                 \"secs_std\": {:.9}, \"gbps\": {:.6}, \"samples\": {}}}{}\n",
+                r.engine,
+                r.dtype.name(),
+                r.n,
+                r.budget_bytes,
+                r.ratio,
+                r.runs,
+                r.merge_passes,
+                r.fan_in,
+                r.spilled_bytes,
+                r.verified,
+                r.secs_mean,
+                r.secs_std,
+                r.bytes_per_sec / 1e9,
+                r.samples,
+                if i + 1 == self.records.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+/// Bitwise-compare `got` against `want` at `samples` seeded positions
+/// plus both boundaries; errors on any mismatch. Returns positions
+/// checked.
+fn verify_subsampled<K: DeviceKey>(
+    got: &[K],
+    want: &[K],
+    samples: usize,
+    seed: u64,
+) -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        got.len() == want.len(),
+        "streamed output has {} elements, reference has {}",
+        got.len(),
+        want.len()
+    );
+    if got.is_empty() {
+        return Ok(0);
+    }
+    let mut rng = Prng::new(seed);
+    let mut checked = 0;
+    let mut check = |i: usize| -> anyhow::Result<()> {
+        anyhow::ensure!(
+            got[i].to_bits() == want[i].to_bits(),
+            "streamed output diverges from the in-memory reference at index {i}: \
+             {:?} vs {:?}",
+            got[i],
+            want[i],
+        );
+        Ok(())
+    };
+    check(0)?;
+    check(got.len() - 1)?;
+    checked += 2;
+    for _ in 0..samples {
+        check(rng.below(got.len() as u64) as usize)?;
+        checked += 1;
+    }
+    Ok(checked)
+}
+
+struct DtypeGrid<'a> {
+    n: usize,
+    threads: usize,
+    ratios: &'a [usize],
+    seed: u64,
+    medium: SpillMedium,
+    spill_parent: Option<PathBuf>,
+    launch: &'a Launch,
+    opts: &'a BenchOpts,
+}
+
+/// Measure one dtype over every budget ratio and append rows.
+fn bench_dtype<K: KeyGen + DeviceKey>(
+    grid: &DtypeGrid<'_>,
+    report: &mut StreamBenchReport,
+) -> anyhow::Result<()> {
+    let dtype = K::ELEM;
+    let n = grid.n;
+    let bytes = (n * K::KEY_BYTES) as f64;
+    let session = Session::threaded(grid.threads).with_defaults(grid.launch.clone());
+    // The dataset a GenSource yields is chunk-size invariant, so the
+    // reference sees byte-identical input to every streamed run.
+    let data: Vec<K> = GenSource::new(grid.seed, Distribution::Uniform, n as u64).materialize();
+    let mut want = data.clone();
+    session.sort(&mut want, None)?;
+
+    let mut bencher = Bencher::new(grid.opts.clone());
+
+    // Budget-free in-memory reference row.
+    let label = format!("sort-inmem[ref]/{dtype}");
+    bencher.run_with_setup(&label, Some(bytes), || data.clone(), |mut v| {
+        session.sort(&mut v, None).expect("in-memory reference sort");
+    });
+    {
+        let r = bencher.get(&label).expect("bench result recorded");
+        report.records.push(StreamBenchRecord {
+            engine: "sort-inmem[ref]".into(),
+            dtype,
+            n,
+            budget_bytes: 0,
+            ratio: 0,
+            runs: 0,
+            merge_passes: 0,
+            fan_in: 0,
+            spilled_bytes: 0,
+            verified: 0,
+            secs_mean: r.time.mean,
+            secs_std: r.time.std,
+            bytes_per_sec: r.throughput_bps().unwrap_or(0.0),
+            samples: r.time.n,
+        });
+    }
+
+    for &ratio in grid.ratios {
+        let budget_bytes = ((n * K::KEY_BYTES) / ratio).max(1);
+        eprintln!(
+            "-- bench-stream {dtype} n={n} budget={budget_bytes}B (x{ratio}) threads={}",
+            grid.threads
+        );
+        let mut ctx = session.stream(StreamBudget::bytes(budget_bytes));
+        ctx = match grid.medium {
+            SpillMedium::Memory => ctx.in_memory_spill(),
+            SpillMedium::Disk => match &grid.spill_parent {
+                Some(p) => ctx.spill_parent(p.clone()),
+                None => ctx,
+            },
+        };
+
+        // external-sort: measured from a fresh generator each iteration
+        // (the engine streams; only the budget lives in memory).
+        let label = format!("external-sort/{dtype}/x{ratio}");
+        bencher.run(&label, Some(bytes), || {
+            let mut src = GenSource::<K>::new(grid.seed, Distribution::Uniform, n as u64);
+            let mut sink = VecSink::new();
+            ctx.external_sort(&mut src, &mut sink, None).expect("external sort");
+        });
+        // Verification run: correctness gate + pipeline-shape stats.
+        let mut src = GenSource::<K>::new(grid.seed, Distribution::Uniform, n as u64);
+        let mut sink = VecSink::new();
+        let stats = ctx.external_sort(&mut src, &mut sink, None)?;
+        let verified = verify_subsampled(&sink.out, &want, VERIFY_SAMPLES, grid.seed ^ 0x5EED)?;
+        anyhow::ensure!(
+            stats.elems == n as u64,
+            "external sort consumed {} of {} elements",
+            stats.elems,
+            n
+        );
+        let r = bencher.get(&label).expect("bench result recorded");
+        report.records.push(StreamBenchRecord {
+            engine: "external-sort".into(),
+            dtype,
+            n,
+            budget_bytes,
+            ratio,
+            runs: stats.runs,
+            merge_passes: stats.merge_passes,
+            fan_in: stats.fan_in,
+            spilled_bytes: stats.spilled_bytes,
+            verified,
+            secs_mean: r.time.mean,
+            secs_std: r.time.std,
+            bytes_per_sec: r.throughput_bps().unwrap_or(0.0),
+            samples: r.time.n,
+        });
+
+        // stream-reduce: the single-pass overhead floor, gated against
+        // the in-memory fold (bitwise for integers, relative for floats
+        // — chunking regroups float additions).
+        let label = format!("stream-reduce/{dtype}/x{ratio}");
+        bencher.run(&label, Some(bytes), || {
+            let mut src = SliceSource::new(&data);
+            ctx.stream_reduce(&mut src, ReduceKind::Add, None).expect("stream reduce");
+        });
+        let got = ctx.stream_reduce(&mut SliceSource::new(&data), ReduceKind::Add, None)?;
+        let reference = session.reduce(&data, ReduceKind::Add, None)?;
+        anyhow::ensure!(
+            reduce_close(got, reference, &data),
+            "stream-reduce diverged from the in-memory reduce on {dtype}: {got:?} vs {reference:?}"
+        );
+        let r = bencher.get(&label).expect("bench result recorded");
+        report.records.push(StreamBenchRecord {
+            engine: "stream-reduce".into(),
+            dtype,
+            n,
+            budget_bytes,
+            ratio,
+            runs: 0,
+            merge_passes: 0,
+            fan_in: 0,
+            spilled_bytes: 0,
+            verified: 1,
+            secs_mean: r.time.mean,
+            secs_std: r.time.std,
+            bytes_per_sec: r.throughput_bps().unwrap_or(0.0),
+            samples: r.time.n,
+        });
+    }
+    Ok(())
+}
+
+/// Integer sums must match bitwise. Float sums compare within a slack
+/// scaled by the dataset's absolute mass `Σ|x|`, not the total: the
+/// rounding error of regrouped summation grows like `√n·ε·Σ|x|`, while
+/// the total itself nearly cancels for the ±uniform bench workload — a
+/// fixed relative-to-total tolerance would reject correct f32 runs at
+/// the full-bench n = 2^22 (one f32 ulp at the partial-sum magnitude
+/// dwarfs 1e-6 of the cancelled total).
+fn reduce_close<K: DeviceKey>(got: K, want: K, data: &[K]) -> bool {
+    if !matches!(K::ELEM, ElemType::F32 | ElemType::F64) {
+        return got.to_bits() == want.to_bits();
+    }
+    let abs_mass: f64 = data.iter().map(|&x| float_of(x).abs()).sum();
+    let (g, w) = (float_of(got), float_of(want));
+    (g - w).abs() <= 1e-3 * abs_mass.max(1.0)
+}
+
+fn float_of<K: DeviceKey>(k: K) -> f64 {
+    // Round-trip through the bit image: exact for f32/f64 keys.
+    match K::ELEM {
+        ElemType::F32 => f32::from_bits_key(k.to_bits()) as f64,
+        ElemType::F64 => f64::from_bits_key(k.to_bits()),
+        _ => 0.0,
+    }
+}
+
+trait FromBitsKey {
+    fn from_bits_key(bits: u128) -> Self;
+}
+impl FromBitsKey for f32 {
+    fn from_bits_key(bits: u128) -> Self {
+        <f32 as crate::dtype::SortKey>::from_bits(bits)
+    }
+}
+impl FromBitsKey for f64 {
+    fn from_bits_key(bits: u128) -> Self {
+        <f64 as crate::dtype::SortKey>::from_bits(bits)
+    }
+}
+
+/// Run the stream bench over `dtypes` × `ratios` and return the report.
+#[allow(clippy::too_many_arguments)]
+pub fn run_stream_bench(
+    n: usize,
+    threads: usize,
+    ratios: &[usize],
+    dtypes: &[ElemType],
+    opts: &BenchOpts,
+    launch: &Launch,
+    medium: SpillMedium,
+    spill_parent: Option<PathBuf>,
+) -> anyhow::Result<StreamBenchReport> {
+    let mut report = StreamBenchReport {
+        n,
+        threads: threads.max(1),
+        spill: match medium {
+            SpillMedium::Memory => "memory",
+            SpillMedium::Disk => "disk",
+        },
+        launch: launch.clone(),
+        records: Vec::new(),
+    };
+    let grid = DtypeGrid {
+        n,
+        threads: report.threads,
+        ratios,
+        seed: 0x57AE4B,
+        medium,
+        spill_parent,
+        launch,
+        opts,
+    };
+    for &dt in dtypes {
+        crate::dispatch_dtype!(dt, K => bench_dtype::<K>(&grid, &mut report)?);
+    }
+    Ok(report)
+}
+
+/// CLI entry point: run the grid (`--quick` trims dtypes, ratios and
+/// sampling), print a summary, and emit the JSON report to `out`.
+pub fn run_and_emit(
+    n: usize,
+    threads: usize,
+    quick: bool,
+    out: &Path,
+    launch: &Launch,
+    medium: SpillMedium,
+    spill_parent: Option<PathBuf>,
+) -> anyhow::Result<()> {
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::default() }.scaled_from_env();
+    let dtypes: &[ElemType] =
+        if quick { &[ElemType::I32, ElemType::F64] } else { &ElemType::ALL };
+    let ratios: &[usize] = if quick { &QUICK_RATIOS } else { &FULL_RATIOS };
+    let report =
+        run_stream_bench(n, threads, ratios, dtypes, &opts, launch, medium, spill_parent)?;
+    report.write_json(out)?;
+    println!(
+        "bench-stream: {} rows (n={}, threads={}, spill={}) -> {}",
+        report.records.len(),
+        report.n,
+        report.threads,
+        report.spill,
+        out.display()
+    );
+    for &dt in dtypes {
+        for &ratio in ratios {
+            if let (Some(ext), Some(inm)) =
+                (report.get("external-sort", dt, ratio), report.get("sort-inmem[ref]", dt, 0))
+            {
+                if ext.secs_mean > 0.0 && inm.secs_mean > 0.0 {
+                    println!(
+                        "  {dt:<5} x{ratio:<3} external-sort {:.2} GB/s ({} runs, {} passes) \
+                         vs in-mem {:.2} GB/s ({:.2}x overhead, {} positions verified)",
+                        ext.bytes_per_sec / 1e9,
+                        ext.runs,
+                        ext.merge_passes,
+                        inm.bytes_per_sec / 1e9,
+                        ext.secs_mean / inm.secs_mean,
+                        ext.verified,
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> BenchOpts {
+        BenchOpts {
+            warmup: std::time::Duration::from_millis(2),
+            budget: std::time::Duration::from_millis(30),
+            min_samples: 2,
+            max_samples: 3,
+        }
+    }
+
+    #[test]
+    fn report_covers_engines_and_json_parses() {
+        let launch = Launch::new().max_tasks(2);
+        let report = run_stream_bench(
+            40_000,
+            2,
+            &[8],
+            &[ElemType::I32],
+            &tiny_opts(),
+            &launch,
+            SpillMedium::Memory,
+            None,
+        )
+        .unwrap();
+        // 1 reference row + (external-sort + stream-reduce) per ratio.
+        assert_eq!(report.records.len(), 3);
+        let ext = report.get("external-sort", ElemType::I32, 8).unwrap();
+        // The acceptance property: dataset is 8x the budget, so the
+        // pipeline must actually go out of core and verify clean.
+        assert!(ext.runs > 1, "dataset must exceed one run ({} runs)", ext.runs);
+        assert!(ext.merge_passes >= 1);
+        assert!(ext.verified > 2);
+        assert_eq!(ext.budget_bytes, 40_000 * 4 / 8);
+        let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
+        assert_eq!(j.get("version").as_usize(), Some(1));
+        assert_eq!(j.get("spill").as_str(), Some("memory"));
+        assert_eq!(j.get("results").as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("launch").get("max_tasks").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn disk_spill_roundtrips_under_bench_harness() {
+        let report = run_stream_bench(
+            20_000,
+            2,
+            &[8],
+            &[ElemType::F64],
+            &tiny_opts(),
+            &Launch::default(),
+            SpillMedium::Disk,
+            None,
+        )
+        .unwrap();
+        let ext = report.get("external-sort", ElemType::F64, 8).unwrap();
+        assert!(ext.spilled_bytes > 0, "disk medium must actually spill");
+        assert!(ext.verified > 2);
+    }
+}

@@ -307,6 +307,30 @@ pub enum FinalPhase {
     Sort,
 }
 
+/// Streaming / out-of-core settings (`[stream]` config section and the
+/// `bench-stream` CLI flags — DESIGN.md §13).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StreamCfg {
+    /// Spill sorted runs to memory instead of disk (`spill = "memory"`;
+    /// the default medium is temp-file spill).
+    pub spill_memory: bool,
+    /// Parent directory for the guarded spill directories (`spill_dir`;
+    /// default: the OS temp dir). Points at fast scratch storage on
+    /// cluster nodes.
+    pub spill_dir: Option<String>,
+}
+
+impl StreamCfg {
+    /// Parse a `spill = "disk"|"memory"` value.
+    pub fn parse_spill(v: &str) -> anyhow::Result<bool> {
+        match v {
+            "memory" => Ok(true),
+            "disk" => Ok(false),
+            other => bail!("spill: expected disk|memory, got '{other}'"),
+        }
+    }
+}
+
 /// Top-level run configuration (CLI + config file).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -348,6 +372,9 @@ pub struct RunConfig {
     /// `--par-threshold` / `--reuse-scratch`; `[run]` keys of the same
     /// names — the `Session`/`Launch` API of DESIGN.md §12).
     pub launch: crate::session::Launch,
+    /// Streaming / out-of-core settings (`[stream]` section and the
+    /// `bench-stream` flags — DESIGN.md §13).
+    pub stream: StreamCfg,
 }
 
 impl Default for RunConfig {
@@ -369,6 +396,7 @@ impl Default for RunConfig {
             host_threads: crate::backend::threaded::default_threads(),
             hybrid_host_fraction: None,
             launch: crate::session::Launch::default(),
+            stream: StreamCfg::default(),
         }
     }
 }
@@ -436,6 +464,13 @@ impl RunConfig {
         if let Some(v) = doc.get("run", "reuse_scratch").and_then(|v| v.as_bool()) {
             self.launch.reuse_scratch = Some(v);
         }
+        // Streaming settings ([stream] section — DESIGN.md §13).
+        if let Some(v) = doc.get("stream", "spill").and_then(|v| v.as_str()) {
+            self.stream.spill_memory = StreamCfg::parse_spill(v)?;
+        }
+        if let Some(v) = doc.get("stream", "spill_dir").and_then(|v| v.as_str()) {
+            self.stream.spill_dir = Some(v.to_string());
+        }
         self.cluster.apply_toml(doc)?;
         Ok(())
     }
@@ -493,6 +528,21 @@ mod tests {
     fn rejects_garbage() {
         assert!(Toml::parse("novalue").is_err());
         assert!(Toml::parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn stream_section_via_toml() {
+        let doc =
+            Toml::parse("[stream]\nspill = \"memory\"\nspill_dir = \"/scratch/ak\"\n").unwrap();
+        let mut cfg = RunConfig::default();
+        assert!(!cfg.stream.spill_memory);
+        cfg.apply_toml(&doc).unwrap();
+        assert!(cfg.stream.spill_memory);
+        assert_eq!(cfg.stream.spill_dir.as_deref(), Some("/scratch/ak"));
+        // Bad medium values are rejected.
+        let bad = Toml::parse("[stream]\nspill = \"tape\"\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&bad).is_err());
+        assert!(StreamCfg::parse_spill("disk").is_ok_and(|m| !m));
     }
 
     #[test]

@@ -39,6 +39,10 @@ COMMANDS
   bench-sort           host sort engine throughput sweep (sequential vs
                        parallel merge-path / threaded radix, DESIGN.md
                        §11) -> BENCH_sort.json; --out overrides the path
+  bench-stream         out-of-core pipeline throughput sweep: external
+                       sort of datasets 8x/16x larger than the memory
+                       budget, verified bitwise against the in-memory
+                       sort (DESIGN.md §13) -> BENCH_stream.json
   ablate               design-choice ablations (final phase, digit width,
                        samples/rank, refinement rounds)
   selftest             quick end-to-end health check
@@ -63,6 +67,10 @@ COMMON FLAGS
   --n N                element count for table2/calibrate/examples
   --threads N          host thread count: table2 rows and the hybrid
                        rank pool (sort/calibrate/figs)
+  --spill M            bench-stream: disk|memory spill medium
+                       (default disk; [stream] spill in TOML)
+  --spill-dir PATH     bench-stream: parent dir for the guarded spill
+                       directory (default OS temp; [stream] spill_dir)
 
 LAUNCH KNOBS (per-call tuning, Session/Launch API — DESIGN.md §12)
   --max-tasks N        cap host worker tasks per call
@@ -196,6 +204,13 @@ impl Cli {
         if let Some(v) = self.get_usize("refine-rounds")? {
             cfg.refine_rounds = v;
         }
+        if let Some(v) = self.get("spill") {
+            cfg.stream.spill_memory = crate::cfg::StreamCfg::parse_spill(v)
+                .with_context(|| format!("--spill: bad value '{v}'"))?;
+        }
+        if let Some(v) = self.get("spill-dir") {
+            cfg.stream.spill_dir = Some(v.to_string());
+        }
         cfg.launch = self.launch_overrides(cfg.launch.clone())?;
         Ok(cfg)
     }
@@ -284,6 +299,19 @@ mod tests {
         // Bool flag takes no value: the next token stays positional.
         let c = Cli::parse(args("sort --reuse-scratch extra")).unwrap();
         assert_eq!(c.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn stream_flags_flow_into_config() {
+        let c = Cli::parse(args("bench-stream --spill memory --spill-dir /scratch")).unwrap();
+        let cfg = c.run_config().unwrap();
+        assert!(cfg.stream.spill_memory);
+        assert_eq!(cfg.stream.spill_dir.as_deref(), Some("/scratch"));
+        // Default medium is disk; bad values error.
+        let default_cfg = Cli::parse(args("bench-stream")).unwrap().run_config().unwrap();
+        assert!(!default_cfg.stream.spill_memory);
+        let c = Cli::parse(args("bench-stream --spill tape")).unwrap();
+        assert!(c.run_config().is_err());
     }
 
     #[test]

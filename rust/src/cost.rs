@@ -21,17 +21,32 @@ pub fn normalised_time(sim_secs: f64, sorter: Sorter, cost_ratio: f64) -> f64 {
     }
 }
 
+/// Relative tolerance for matching grid points across curves: n-grids
+/// built by different generators (`10f64.powi(k)` vs repeated `* 10.0`
+/// vs literal `1e6`) agree only to a few ulps, far inside 1e-9 relative.
+pub const GRID_MATCH_RTOL: f64 = 1e-9;
+
+/// Do two grid abscissae name the same n? Exact matches (including both
+/// zero) pass; otherwise the difference must be within
+/// [`GRID_MATCH_RTOL`] of the larger magnitude.
+fn same_grid_n(a: f64, b: f64) -> bool {
+    a == b || (a - b).abs() <= GRID_MATCH_RTOL * a.abs().max(b.abs())
+}
+
 /// Crossover analysis: given (n, cpu_time) and (n, gpu_time) curves,
 /// return the smallest n where the *normalised* GPU time beats CPU, if
 /// any (the paper's "economically justifiable above ~1e6 elements" for
-/// GG variants).
+/// GG variants). Grid points are matched with a relative tolerance
+/// ([`GRID_MATCH_RTOL`]) instead of float equality, so curves whose
+/// n-grids came from different generators (and so differ by an ulp)
+/// still pair up instead of silently missing every point.
 pub fn crossover_n(
     cpu: &[(f64, f64)],
     gpu: &[(f64, f64)],
     cost_ratio: f64,
 ) -> Option<f64> {
     for (n, g) in gpu {
-        if let Some((_, c)) = cpu.iter().find(|(cn, _)| cn == n) {
+        if let Some((_, c)) = cpu.iter().find(|(cn, _)| same_grid_n(*cn, *n)) {
             if g * cost_ratio < *c {
                 return Some(*n);
             }
@@ -87,6 +102,30 @@ mod tests {
         let cpu = vec![(1e5, 1.0)];
         let gpu = vec![(1e5, 0.5)]; // 2x faster — not enough at ×22
         assert_eq!(crossover_n(&cpu, &gpu, 22.0), None);
+    }
+
+    #[test]
+    fn crossover_matches_grids_from_different_generators() {
+        // The CPU grid from literals, the GPU grid from powi/multiplied
+        // generators: abscissae differ by ulps, not values. Exact float
+        // equality silently missed every point (and reported None).
+        let cpu = vec![(1e5, 1.0), (1e6, 10.0), (1e7, 100.0)];
+        let mut x = 1.0f64;
+        let gpu: Vec<(f64, f64)> = [(5, 0.5), (6, 0.33), (7, 3.3)]
+            .iter()
+            .map(|&(k, t)| {
+                while x < 10f64.powi(k) * 0.999 {
+                    x *= 10.0;
+                }
+                (x * (1.0 + 1e-15), t) // a-few-ulps perturbation
+            })
+            .collect();
+        assert!(gpu.iter().zip(&cpu).all(|(g, c)| g.0 != c.0), "grids must differ in bits");
+        assert_eq!(crossover_n(&cpu, &gpu, 22.0), Some(gpu[1].0));
+        // But genuinely different n never pair up.
+        let far = vec![(2e6, 0.01)];
+        assert_eq!(crossover_n(&cpu, &far, 22.0), None);
+        assert!(same_grid_n(0.0, 0.0));
     }
 
     #[test]

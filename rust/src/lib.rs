@@ -16,9 +16,11 @@
 //!   unified call surface — per-call tuning knobs, typed [`AkError`]s —
 //!   over pluggable [`backend`]s (host engines live in [`algorithms`]),
 //!   [`hybrid`] composes host and device engines into one CPU–GPU
-//!   co-processing call (DESIGN.md §10), and [`mpisort`] implements the
-//!   SIHSort multi-node sorting coordinator over a simulated HPC
-//!   [`cluster`] with an MPI-like [`comm`] layer.
+//!   co-processing call (DESIGN.md §10), [`stream`] pipelines the same
+//!   engines over datasets larger than RAM under a fixed memory budget
+//!   (DESIGN.md §13), and [`mpisort`] implements the SIHSort multi-node
+//!   sorting coordinator over a simulated HPC [`cluster`] with an
+//!   MPI-like [`comm`] layer.
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
@@ -41,6 +43,7 @@ pub mod mpisort;
 pub mod prop;
 pub mod runtime;
 pub mod session;
+pub mod stream;
 pub mod util;
 pub mod workload;
 

@@ -153,6 +153,33 @@ fn run(cli: &Cli) -> anyhow::Result<()> {
                 &launch,
             )
         }
+        "bench-stream" => {
+            // Out-of-core pipeline sweep -> BENCH_stream.json (DESIGN.md
+            // §13). Sorts datasets 8x/16x larger than the engine memory
+            // budget; each configuration is verified bitwise against the
+            // in-memory reference sort on a subsampled pass — divergence
+            // is a hard error, which is what CI relies on.
+            let cfg = cli.run_config()?;
+            let n = cli.get_usize("n")?.unwrap_or(if quick { 1 << 20 } else { 1 << 22 });
+            let threads = cli
+                .get_usize("threads")?
+                .unwrap_or_else(accelkern::backend::threaded::default_threads);
+            let out = cli.get("out").unwrap_or("BENCH_stream.json").to_string();
+            let medium = if cfg.stream.spill_memory {
+                accelkern::stream::SpillMedium::Memory
+            } else {
+                accelkern::stream::SpillMedium::Disk
+            };
+            accelkern::bench::stream_bench::run_and_emit(
+                n,
+                threads,
+                quick,
+                std::path::Path::new(&out),
+                &cfg.launch,
+                medium,
+                cfg.stream.spill_dir.clone().map(std::path::PathBuf::from),
+            )
+        }
         "calibrate" => {
             // Measure the host:device sort throughput ratio and print the
             // hybrid co-processing split it implies (DESIGN.md §10).

@@ -200,6 +200,25 @@ impl Session {
         &self.state.metrics
     }
 
+    /// A bounded-memory streaming context over this session's engines
+    /// (out-of-core sort, reduce, scan, histogram, top-k — DESIGN.md
+    /// §13). The context clones the session, so per-chunk work runs on
+    /// this backend, records into this metrics sink, and honours the
+    /// same default `Launch` policy.
+    ///
+    /// ```
+    /// use accelkern::session::Session;
+    /// use accelkern::stream::{SliceSource, StreamBudget, VecSink};
+    /// let data = vec![4i64, 1, 3, 2];
+    /// let ctx = Session::threaded(2).stream(StreamBudget::mib(1));
+    /// let mut out = VecSink::new();
+    /// ctx.external_sort(&mut SliceSource::new(&data), &mut out, None).unwrap();
+    /// assert_eq!(out.out, vec![1, 2, 3, 4]);
+    /// ```
+    pub fn stream(&self, budget: crate::stream::StreamBudget) -> crate::stream::StreamCtx {
+        crate::stream::StreamCtx::new(self.clone(), budget)
+    }
+
     fn resolve(&self, launch: Option<&Launch>) -> Launch {
         match launch {
             Some(l) => l.merged_over(&self.defaults),

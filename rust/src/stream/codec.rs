@@ -1,0 +1,111 @@
+//! Compact fixed-width record codec for spills and binary datasets.
+//!
+//! One record is the little-endian [`SortKey::to_bits`] image truncated
+//! to `K::KEY_BYTES` — 2 bytes per `i16` key, 16 per `i128`. The image
+//! transform is a bijection, so the round trip is exact for every bit
+//! pattern (NaN payloads and `-0.0` survive spills byte-identically:
+//! the streaming-vs-in-memory equivalence tests rely on this).
+//!
+//! The format is deliberately headerless: a run file's element count is
+//! `len / KEY_BYTES`, checked on open ([`decode_into`] rejects ragged
+//! tails), and the dtype is part of the surrounding context (spill runs
+//! are typed, `FileSource`/`FileSink` are generic over `K`).
+
+use anyhow::ensure;
+
+use crate::dtype::SortKey;
+
+/// Encoded size in bytes of `n` records of type `K`.
+pub fn encoded_len<K: SortKey>(n: usize) -> usize {
+    n * K::KEY_BYTES
+}
+
+/// Append the records of `keys` to `out` (little-endian bit images).
+pub fn encode_into<K: SortKey>(keys: &[K], out: &mut Vec<u8>) {
+    out.reserve(encoded_len::<K>(keys.len()));
+    for &k in keys {
+        let bits = k.to_bits().to_le_bytes();
+        out.extend_from_slice(&bits[..K::KEY_BYTES]);
+    }
+}
+
+/// Decode every record in `bytes`, appending to `out`; errors on a
+/// ragged tail (truncated spill / foreign file).
+pub fn decode_into<K: SortKey>(bytes: &[u8], out: &mut Vec<K>) -> anyhow::Result<usize> {
+    ensure!(
+        bytes.len() % K::KEY_BYTES == 0,
+        "record codec: {} bytes is not a multiple of the {}-byte {} record",
+        bytes.len(),
+        K::KEY_BYTES,
+        K::ELEM,
+    );
+    let n = bytes.len() / K::KEY_BYTES;
+    out.reserve(n);
+    for rec in bytes.chunks_exact(K::KEY_BYTES) {
+        let mut wide = [0u8; 16];
+        wide[..K::KEY_BYTES].copy_from_slice(rec);
+        out.push(K::from_bits(u128::from_le_bytes(wide)));
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::bits_eq;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution, KeyGen};
+
+    fn roundtrip<K: KeyGen>(seed: u64, n: usize) {
+        let xs: Vec<K> = generate(&mut Prng::new(seed), Distribution::Uniform, n);
+        let mut bytes = Vec::new();
+        encode_into(&xs, &mut bytes);
+        assert_eq!(bytes.len(), encoded_len::<K>(n));
+        let mut back: Vec<K> = Vec::new();
+        assert_eq!(decode_into(&bytes, &mut back).unwrap(), n);
+        assert!(bits_eq(&xs, &back));
+    }
+
+    #[test]
+    fn all_dtypes_roundtrip() {
+        roundtrip::<i16>(1, 500);
+        roundtrip::<i32>(2, 500);
+        roundtrip::<i64>(3, 500);
+        roundtrip::<i128>(4, 500);
+        roundtrip::<f32>(5, 500);
+        roundtrip::<f64>(6, 500);
+    }
+
+    #[test]
+    fn ieee_oddities_survive_bit_exactly() {
+        let xs = vec![f64::NAN, -f64::NAN, -0.0, 0.0, f64::INFINITY, f64::NEG_INFINITY, 1.5];
+        let mut bytes = Vec::new();
+        encode_into(&xs, &mut bytes);
+        let mut back: Vec<f64> = Vec::new();
+        decode_into(&bytes, &mut back).unwrap();
+        assert!(bits_eq(&xs, &back));
+        // Raw IEEE bits (not just the sort image) are preserved.
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn ragged_tail_rejected() {
+        let xs = vec![7i32, 8];
+        let mut bytes = Vec::new();
+        encode_into(&xs, &mut bytes);
+        bytes.pop();
+        let mut back: Vec<i32> = Vec::new();
+        assert!(decode_into(&bytes, &mut back).is_err());
+    }
+
+    #[test]
+    fn decode_appends() {
+        let mut bytes = Vec::new();
+        encode_into(&[1i16, 2], &mut bytes);
+        let mut out = vec![0i16];
+        decode_into(&bytes, &mut out).unwrap();
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,249 @@
+//! External merge sort: bounded-memory sorting of datasets larger than
+//! RAM (DESIGN.md §13).
+//!
+//! Three phases, all under the [`super::StreamBudget`]:
+//!
+//! 1. **Run generation** — budget-sized chunks are pulled from the
+//!    source, sorted with the session's in-memory engine (threaded /
+//!    hybrid dispatch and every `Launch` knob apply — this is the same
+//!    rank-local sort the cluster pipeline runs), and spilled as sorted
+//!    runs. A dataset that fits one chunk sorts in core and streams
+//!    straight to the sink (no spill I/O).
+//! 2. **Intermediate merge passes** — while runs outnumber the fan-in,
+//!    each pass k-way merges groups of `fan_in` runs into longer runs
+//!    through the resumable loser tree
+//!    ([`crate::baselines::kmerge::KmergePull`]); retired input runs
+//!    delete their spill files immediately.
+//! 3. **Final merge** — the surviving ≤ `fan_in` runs merge once more,
+//!    streaming output chunks into the sink.
+
+use crate::backend::DeviceKey;
+use crate::baselines::kmerge::KmergePull;
+use crate::session::{AkResult, Launch};
+use crate::stream::source::{ChunkSink, ChunkSource};
+use crate::stream::spill::{SpillRun, SpillStore};
+use crate::stream::{StreamCtx, StreamPlan};
+
+/// What a [`StreamCtx::external_sort`] run did (the bench records these
+/// next to its throughput rows).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExternalSortStats {
+    /// Elements sorted.
+    pub elems: u64,
+    /// Sorted runs generated from the source (1 = in-core fast path).
+    pub runs: usize,
+    /// Merge passes over the data (0 = in-core, 1 = single k-way merge,
+    /// ≥ 2 = multi-pass because runs exceeded the fan-in).
+    pub merge_passes: usize,
+    /// Bytes written to spill files (0 on the memory medium).
+    pub spilled_bytes: u64,
+    /// The fan-in the merge phases ran with.
+    pub fan_in: usize,
+    /// The run-generation chunk size (elements).
+    pub run_chunk_elems: usize,
+}
+
+impl StreamCtx {
+    /// Sort everything `src` yields into `sink` (ascending total order,
+    /// NaN-safe — output is bitwise what `Session::sort` produces on the
+    /// concatenated input) while holding at most the budget in engine
+    /// state. `launch` tunes the per-chunk in-memory sorts.
+    pub fn external_sort<K: DeviceKey>(
+        &self,
+        src: &mut dyn ChunkSource<K>,
+        sink: &mut dyn ChunkSink<K>,
+        launch: Option<&Launch>,
+    ) -> AkResult<ExternalSortStats> {
+        let plan = self.plan::<K>();
+        let mut stats = ExternalSortStats {
+            fan_in: plan.fan_in,
+            run_chunk_elems: plan.run_chunk_elems,
+            ..ExternalSortStats::default()
+        };
+
+        // ---- phase 1: run generation ----------------------------------
+        let mut buf: Vec<K> = Vec::new();
+        let mut next: Vec<K> = Vec::new();
+        if src.next_chunk(&mut buf, plan.run_chunk_elems)? == 0 {
+            sink.finish()?;
+            return Ok(stats);
+        }
+        stats.elems += buf.len() as u64;
+        src.next_chunk(&mut next, plan.run_chunk_elems)?;
+        self.session.sort(&mut buf, launch)?;
+        if next.is_empty() {
+            // In-core fast path: one chunk, no spill.
+            stats.runs = 1;
+            for c in buf.chunks(plan.io_chunk_elems) {
+                sink.push_chunk(c)?;
+            }
+            sink.finish()?;
+            return Ok(stats);
+        }
+        let mut store = self.store();
+        let mut runs: Vec<SpillRun<K>> = vec![store.write_run(&buf)?];
+        while !next.is_empty() {
+            std::mem::swap(&mut buf, &mut next);
+            stats.elems += buf.len() as u64;
+            self.session.sort(&mut buf, launch)?;
+            runs.push(store.write_run(&buf)?);
+            src.next_chunk(&mut next, plan.run_chunk_elems)?;
+        }
+        stats.runs = runs.len();
+
+        // ---- phase 2: intermediate merge passes -----------------------
+        while runs.len() > plan.fan_in {
+            stats.merge_passes += 1;
+            let mut merged: Vec<SpillRun<K>> = Vec::new();
+            while !runs.is_empty() {
+                let take = plan.fan_in.min(runs.len());
+                let group: Vec<SpillRun<K>> = runs.drain(..take).collect();
+                if group.len() == 1 {
+                    // A lone trailing run passes through unmerged.
+                    merged.extend(group);
+                    continue;
+                }
+                merged.push(merge_group_to_store(&group, &mut store, &plan)?);
+                // `group` drops here: retired runs delete their files.
+            }
+            runs = merged;
+        }
+
+        // ---- phase 3: final merge into the sink -----------------------
+        // `runs.len() >= 2` always holds here (single-chunk datasets took
+        // the in-core path; a pass over > fan_in >= 2 runs yields >= 2).
+        stats.merge_passes += 1;
+        let mut cursors = Vec::with_capacity(runs.len());
+        for r in &runs {
+            cursors.push(r.cursor(plan.io_chunk_elems)?);
+        }
+        let mut merge = KmergePull::new(cursors);
+        let mut out: Vec<K> = Vec::with_capacity(plan.io_chunk_elems);
+        loop {
+            out.clear();
+            if merge.next_chunk(&mut out, plan.io_chunk_elems)? == 0 {
+                break;
+            }
+            sink.push_chunk(&out)?;
+        }
+        sink.finish()?;
+        stats.spilled_bytes = store.bytes_spilled();
+        Ok(stats)
+    }
+}
+
+/// Merge `group` (≥ 2 runs) into one new spilled run, streaming through
+/// I/O-granule chunks.
+fn merge_group_to_store<K: DeviceKey>(
+    group: &[SpillRun<K>],
+    store: &mut SpillStore,
+    plan: &StreamPlan,
+) -> AkResult<SpillRun<K>> {
+    let mut cursors = Vec::with_capacity(group.len());
+    for r in group {
+        cursors.push(r.cursor(plan.io_chunk_elems)?);
+    }
+    let mut merge = KmergePull::new(cursors);
+    let mut writer = store.run_writer::<K>()?;
+    let mut out: Vec<K> = Vec::with_capacity(plan.io_chunk_elems);
+    loop {
+        out.clear();
+        if merge.next_chunk(&mut out, plan.io_chunk_elems)? == 0 {
+            break;
+        }
+        writer.push_chunk(&out)?;
+    }
+    Ok(writer.finish()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::bits_eq;
+    use crate::session::Session;
+    use crate::stream::{SliceSource, StreamBudget, VecSink};
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution, KeyGen};
+
+    fn reference<K: KeyGen + DeviceKey>(data: &[K]) -> Vec<K> {
+        let mut want = data.to_vec();
+        Session::native().sort(&mut want, None).unwrap();
+        want
+    }
+
+    fn sort_streamed<K: KeyGen + DeviceKey>(
+        ctx: &StreamCtx,
+        data: &[K],
+    ) -> (Vec<K>, ExternalSortStats) {
+        let mut sink = VecSink::new();
+        let stats = ctx.external_sort(&mut SliceSource::new(data), &mut sink, None).unwrap();
+        (sink.out, stats)
+    }
+
+    #[test]
+    fn in_core_fast_path_skips_spill() {
+        let data: Vec<i32> = generate(&mut Prng::new(1), Distribution::Uniform, 800);
+        let ctx = Session::threaded(2).stream(StreamBudget::mib(1));
+        let (got, stats) = sort_streamed(&ctx, &data);
+        assert!(bits_eq(&got, &reference(&data)));
+        assert_eq!(stats.runs, 1);
+        assert_eq!(stats.merge_passes, 0);
+        assert_eq!(stats.spilled_bytes, 0);
+        assert_eq!(stats.elems, 800);
+    }
+
+    #[test]
+    fn empty_input() {
+        let data: Vec<i64> = vec![];
+        let ctx = Session::native().stream(StreamBudget::mib(1));
+        let (got, stats) = sort_streamed(&ctx, &data);
+        assert!(got.is_empty());
+        assert_eq!(stats.runs, 0);
+        assert_eq!(stats.merge_passes, 0);
+    }
+
+    #[test]
+    fn single_merge_pass_on_memory_spill() {
+        let data: Vec<i64> = generate(&mut Prng::new(2), Distribution::Uniform, 12_000);
+        let ctx = Session::threaded(2)
+            .stream(StreamBudget::bytes(64))
+            .in_memory_spill()
+            .run_chunk_elems(2000); // 6 runs, fan_in >= 2
+        let (got, stats) = sort_streamed(&ctx, &data);
+        assert!(bits_eq(&got, &reference(&data)));
+        assert_eq!(stats.runs, 6);
+        assert!(stats.merge_passes >= 1);
+    }
+
+    #[test]
+    fn multi_pass_merge_on_disk() {
+        // 16 runs at fan-in 2: passes 16 -> 8 -> 4 -> 2 -> final = 4.
+        let data: Vec<f64> = generate(&mut Prng::new(3), Distribution::Uniform, 16_000);
+        let ctx = Session::threaded(2)
+            .stream(StreamBudget::bytes(64))
+            .run_chunk_elems(1000)
+            .fan_in(2)
+            .io_chunk_elems(128);
+        let (got, stats) = sort_streamed(&ctx, &data);
+        assert!(bits_eq(&got, &reference(&data)));
+        assert_eq!(stats.runs, 16);
+        assert_eq!(stats.merge_passes, 4);
+        assert!(stats.spilled_bytes > 0);
+    }
+
+    #[test]
+    fn uneven_trailing_run_passes_through() {
+        // 5 runs at fan-in 2: pass 1 merges (2, 2) and passes the 5th
+        // through; 3 runs then (2) + pass-through; final merges 2.
+        let data: Vec<i16> = generate(&mut Prng::new(4), Distribution::DupHeavy, 5000);
+        let ctx = Session::native()
+            .stream(StreamBudget::bytes(64))
+            .in_memory_spill()
+            .run_chunk_elems(1000)
+            .fan_in(2);
+        let (got, stats) = sort_streamed(&ctx, &data);
+        assert!(bits_eq(&got, &reference(&data)));
+        assert_eq!(stats.runs, 5);
+        assert_eq!(stats.merge_passes, 3);
+    }
+}

@@ -1,0 +1,279 @@
+//! Single-pass streaming folds: reduce, scan, histogram, top-k
+//! (DESIGN.md §13).
+//!
+//! Each pipeline pulls budget-sized chunks from a [`ChunkSource`], runs
+//! the session's in-memory engine on the chunk (so threaded / hybrid /
+//! device dispatch and `Launch` knobs apply unchanged), and carries O(1)
+//! or O(k) state across chunk boundaries:
+//!
+//! * `reduce` — one accumulator, folded with the operator.
+//! * `scan` — the running prefix total; each output chunk is the chunk's
+//!   in-memory scan plus the carry (exactly the carry phase of the
+//!   three-phase block scan in `algorithms::scan`, applied across I/O
+//!   chunks instead of threads). Integer scans are bitwise-identical to
+//!   the in-memory engines (wrapping add is associative); float scans
+//!   regroup additions per chunk, same as the threaded engine does per
+//!   thread.
+//! * `histogram` — per-chunk `searchsorted_last` against the bin edges
+//!   (total-order semantics: NaN counts into the overflow bin).
+//! * `top-k` — a 2k-element pool with a strict-greater floor filter;
+//!   compaction sorts the pool with the session engine.
+
+use crate::algorithms::reduce::{Reducible, ReduceKind};
+use crate::algorithms::scan::ScanAdd;
+use crate::backend::DeviceKey;
+use crate::session::{AkError, AkResult, Launch};
+use crate::stream::source::{ChunkSink, ChunkSource};
+use crate::stream::StreamCtx;
+
+impl StreamCtx {
+    /// Fold everything `src` yields with `kind`, holding one chunk at a
+    /// time. Integer results are bitwise-identical to the in-memory
+    /// `Session::reduce`; float sums may differ in rounding (chunking
+    /// regroups the additions, exactly like the threaded engine).
+    pub fn stream_reduce<K: Reducible>(
+        &self,
+        src: &mut dyn ChunkSource<K>,
+        kind: ReduceKind,
+        launch: Option<&Launch>,
+    ) -> AkResult<K> {
+        let chunk = self.plan::<K>().run_chunk_elems;
+        let mut acc = K::identity(kind);
+        let mut buf: Vec<K> = Vec::new();
+        while src.next_chunk(&mut buf, chunk)? > 0 {
+            let part = self.session.reduce(&buf, kind, launch)?;
+            acc = K::fold(kind, acc, part);
+        }
+        Ok(acc)
+    }
+
+    /// Prefix-sum of the stream into `sink`, chunk at a time; `inclusive`
+    /// selects the flavour. Returns the element count. The carry (the
+    /// running total of all previous chunks) is the only cross-chunk
+    /// state.
+    pub fn stream_scan<K: ScanAdd + std::ops::Add<Output = K>>(
+        &self,
+        src: &mut dyn ChunkSource<K>,
+        sink: &mut dyn ChunkSink<K>,
+        inclusive: bool,
+        launch: Option<&Launch>,
+    ) -> AkResult<u64> {
+        // Chunk + its scan output both live at once: half the fold chunk.
+        let chunk = (self.plan::<K>().run_chunk_elems / 2).max(1);
+        let mut carry = K::default();
+        let mut buf: Vec<K> = Vec::new();
+        let mut elems = 0u64;
+        while src.next_chunk(&mut buf, chunk)? > 0 {
+            elems += buf.len() as u64;
+            let inc = self.session.accumulate(&buf, true, launch)?;
+            let total = *inc.last().expect("non-empty chunk has a last prefix");
+            let out: Vec<K> = if inclusive {
+                inc.iter().map(|&v| K::add(carry, v)).collect()
+            } else {
+                let mut o = Vec::with_capacity(buf.len());
+                o.push(carry);
+                o.extend(inc[..inc.len() - 1].iter().map(|&v| K::add(carry, v)));
+                o
+            };
+            sink.push_chunk(&out)?;
+            carry = K::add(carry, total);
+        }
+        sink.finish()?;
+        Ok(elems)
+    }
+
+    /// Histogram of the stream over ascending `edges`: `counts[i]`
+    /// is the number of keys `x` with `edges[i-1] <= x < edges[i]` in the
+    /// total order (`counts[0]` is the underflow bin, the last slot the
+    /// overflow bin — NaN lands there), so `counts.len() == edges.len() + 1`.
+    pub fn stream_histogram<K: DeviceKey>(
+        &self,
+        src: &mut dyn ChunkSource<K>,
+        edges: &[K],
+        launch: Option<&Launch>,
+    ) -> AkResult<Vec<u64>> {
+        if !crate::dtype::is_sorted_total(edges) {
+            return Err(AkError::shape(
+                "stream_histogram",
+                "bin edges must be ascending in the total order".into(),
+            ));
+        }
+        let chunk = self.plan::<K>().run_chunk_elems;
+        let mut counts = vec![0u64; edges.len() + 1];
+        let mut buf: Vec<K> = Vec::new();
+        while src.next_chunk(&mut buf, chunk)? > 0 {
+            let bins = self.session.searchsorted_last(edges, &buf, launch)?;
+            for b in bins {
+                counts[b as usize] += 1;
+            }
+        }
+        Ok(counts)
+    }
+
+    /// The `k` largest keys of the stream, descending (total order, so
+    /// NaN outranks +inf — same rule as `external_sort`'s tail). Holds
+    /// at most `2k` candidates plus one input chunk; the result is
+    /// bitwise what "in-memory sort descending, take `k`" produces.
+    pub fn stream_topk<K: DeviceKey>(
+        &self,
+        src: &mut dyn ChunkSource<K>,
+        k: usize,
+        launch: Option<&Launch>,
+    ) -> AkResult<Vec<K>> {
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        let chunk = self.plan::<K>().run_chunk_elems;
+        let mut pool: Vec<K> = Vec::with_capacity(2 * k);
+        // Once the pool has been compacted to k survivors, only keys
+        // strictly above the smallest survivor can alter the answer
+        // (ties are bit-identical under the total order, so dropping
+        // them is exact).
+        let mut floor: Option<K> = None;
+        let mut buf: Vec<K> = Vec::new();
+        while src.next_chunk(&mut buf, chunk)? > 0 {
+            for &x in &buf {
+                let keep = match floor {
+                    None => true,
+                    Some(f) => x.cmp_total(&f) == std::cmp::Ordering::Greater,
+                };
+                if keep {
+                    pool.push(x);
+                    if pool.len() >= 2 * k {
+                        compact_pool(self, &mut pool, k, launch)?;
+                        floor = Some(pool[0]);
+                    }
+                }
+            }
+        }
+        self.session.sort(&mut pool, launch)?;
+        let start = pool.len().saturating_sub(k);
+        let mut top = pool.split_off(start);
+        top.reverse();
+        Ok(top)
+    }
+}
+
+/// Sort the pool and keep its top `k` (ascending afterwards).
+fn compact_pool<K: DeviceKey>(
+    ctx: &StreamCtx,
+    pool: &mut Vec<K>,
+    k: usize,
+    launch: Option<&Launch>,
+) -> AkResult<()> {
+    ctx.session.sort(pool, launch)?;
+    let cut = pool.len() - k;
+    pool.drain(..cut);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::bits_eq;
+    use crate::session::Session;
+    use crate::stream::{SliceSource, StreamBudget, VecSink};
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution};
+
+    fn small_ctx() -> StreamCtx {
+        // Tiny chunks force many carry hand-offs.
+        Session::threaded(2).stream(StreamBudget::bytes(64)).run_chunk_elems(257)
+    }
+
+    #[test]
+    fn reduce_matches_in_memory_for_ints() {
+        let xs: Vec<i64> = generate(&mut Prng::new(1), Distribution::Uniform, 10_000);
+        let want = Session::native().reduce(&xs, ReduceKind::Add, None).unwrap();
+        for kind in [ReduceKind::Add, ReduceKind::Min, ReduceKind::Max] {
+            let got = small_ctx().stream_reduce(&mut SliceSource::new(&xs), kind, None).unwrap();
+            let reference = Session::native().reduce(&xs, kind, None).unwrap();
+            assert_eq!(got, reference, "{kind:?}");
+        }
+        assert_eq!(
+            small_ctx().stream_reduce(&mut SliceSource::new(&xs), ReduceKind::Add, None).unwrap(),
+            want
+        );
+        // Empty stream folds to the identity.
+        let empty: Vec<i64> = vec![];
+        let got = small_ctx()
+            .stream_reduce(&mut SliceSource::new(&empty), ReduceKind::Min, None)
+            .unwrap();
+        assert_eq!(got, i64::MAX);
+    }
+
+    #[test]
+    fn scan_matches_in_memory_for_ints() {
+        let xs: Vec<i32> = generate(&mut Prng::new(2), Distribution::Uniform, 5003);
+        for inclusive in [true, false] {
+            let want = Session::native().accumulate(&xs, inclusive, None).unwrap();
+            let mut sink = VecSink::new();
+            let n = small_ctx()
+                .stream_scan(&mut SliceSource::new(&xs), &mut sink, inclusive, None)
+                .unwrap();
+            assert_eq!(n, xs.len() as u64);
+            assert_eq!(sink.out, want, "inclusive={inclusive}");
+        }
+    }
+
+    #[test]
+    fn float_scan_tracks_reference_within_tolerance() {
+        // Chunking regroups float additions (same as the threaded
+        // engine), so the comparison is relative, not bitwise.
+        let xs: Vec<f64> = generate(&mut Prng::new(3), Distribution::Gaussian, 4000)
+            .into_iter()
+            .map(|x: f64| x % 1000.0)
+            .collect();
+        let want = Session::native().accumulate(&xs, true, None).unwrap();
+        let mut sink = VecSink::new();
+        small_ctx().stream_scan(&mut SliceSource::new(&xs), &mut sink, true, None).unwrap();
+        for (g, w) in sink.out.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-6 * w.abs().max(1.0), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn histogram_counts_by_total_order() {
+        let xs: Vec<f32> =
+            vec![-1.0, 0.5, 2.0, 2.0, 7.5, f32::NAN, f32::INFINITY, -f32::INFINITY, 1.99];
+        let edges = vec![0.0f32, 2.0, 5.0];
+        let got = small_ctx().stream_histogram(&mut SliceSource::new(&xs), &edges, None).unwrap();
+        // Bins: (..., 0) | [0, 2) | [2, 5) | [5, ...); NaN > +inf in
+        // the total order, so it overflows into the last bin alongside
+        // 7.5 and +inf.
+        assert_eq!(got, vec![2, 2, 2, 3]);
+        // Unsorted edges are a typed shape error.
+        let bad = small_ctx().stream_histogram(&mut SliceSource::new(&xs), &[5.0f32, 0.0], None);
+        assert!(matches!(bad, Err(AkError::ShapeMismatch { .. })));
+        // Empty edge list: everything lands in the single bin.
+        let all = small_ctx().stream_histogram(&mut SliceSource::new(&xs), &[], None).unwrap();
+        assert_eq!(all, vec![xs.len() as u64]);
+    }
+
+    #[test]
+    fn topk_matches_sort_desc_take_k() {
+        let xs: Vec<i32> = generate(&mut Prng::new(4), Distribution::DupHeavy, 20_000);
+        let mut want = xs.clone();
+        Session::native().sort(&mut want, None).unwrap();
+        want.reverse();
+        for k in [1usize, 7, 100, 2048] {
+            let got = small_ctx().stream_topk(&mut SliceSource::new(&xs), k, None).unwrap();
+            assert!(bits_eq(&got, &want[..k.min(want.len())]), "k={k}");
+        }
+        // k larger than the stream returns everything, descending.
+        let tiny = vec![3i32, 9, 1];
+        let got = small_ctx().stream_topk(&mut SliceSource::new(&tiny), 10, None).unwrap();
+        assert_eq!(got, vec![9, 3, 1]);
+        // k = 0.
+        assert!(small_ctx().stream_topk(&mut SliceSource::new(&tiny), 0, None).unwrap().is_empty());
+    }
+
+    #[test]
+    fn topk_total_order_on_floats() {
+        let xs = vec![1.0f64, f64::NAN, f64::INFINITY, -0.0, 0.0, 5.0];
+        let got = small_ctx().stream_topk(&mut SliceSource::new(&xs), 3, None).unwrap();
+        assert!(got[0].is_nan());
+        assert_eq!(got[1], f64::INFINITY);
+        assert_eq!(got[2], 5.0);
+    }
+}

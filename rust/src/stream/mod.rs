@@ -1,0 +1,251 @@
+//! Bounded-memory streaming / out-of-core pipelines (DESIGN.md §13).
+//!
+//! Every in-memory algorithm in this crate takes its whole input as one
+//! slice, so the largest problem a session can serve is bounded by one
+//! host's RAM. This module removes that bound for the algorithms whose
+//! access patterns stream: datasets arrive chunk by chunk from a
+//! [`ChunkSource`], results leave through a [`ChunkSink`], and the
+//! engines in between never hold more than a [`StreamBudget`] of state.
+//!
+//! * [`StreamCtx::external_sort`] — classic external merge sort: sorted
+//!   runs are generated with the session's in-memory engines (threaded
+//!   or hybrid — run generation is exactly the rank-local sort of the
+//!   paper's cluster pipeline), spilled through a [`SpillStore`], then
+//!   k-way merged by the resumable loser tree
+//!   ([`crate::baselines::kmerge::KmergePull`]) with budget-aware
+//!   fan-in; when runs outnumber the fan-in, intermediate merge passes
+//!   reduce them first (multi-pass merge).
+//! * [`StreamCtx::stream_reduce`] / [`StreamCtx::stream_scan`] /
+//!   [`StreamCtx::stream_histogram`] / [`StreamCtx::stream_topk`] —
+//!   single-pass folds: reduce carries one accumulator, scan carries the
+//!   running prefix between chunks (chunk-at-a-time output), histogram
+//!   bins each chunk via `searchsorted`, top-k keeps a 2k-element pool.
+//!
+//! Entry point: [`crate::session::Session::stream`] — the context
+//! inherits the session's backend, metrics sink and default launch
+//! policy, and every method accepts the same per-call
+//! [`crate::session::Launch`] knobs and returns the same typed
+//! [`crate::session::AkError`]s as the in-memory surface.
+//!
+//! ```
+//! use accelkern::session::Session;
+//! use accelkern::stream::{SliceSource, StreamBudget, VecSink};
+//!
+//! let data = vec![5i32, -7, 3, 0, 9, -2, 8, 1];
+//! let ctx = Session::threaded(2).stream(StreamBudget::bytes(64 * 1024));
+//! let mut out = VecSink::new();
+//! let stats = ctx
+//!     .external_sort(&mut SliceSource::new(&data), &mut out, None)
+//!     .unwrap();
+//! assert_eq!(out.out, vec![-7, -2, 0, 1, 3, 5, 8, 9]);
+//! assert_eq!(stats.elems, 8);
+//! ```
+
+pub mod codec;
+pub mod external_sort;
+pub mod folds;
+pub mod source;
+pub mod spill;
+
+pub use external_sort::ExternalSortStats;
+pub use source::{ChunkSink, ChunkSource, FileSink, FileSource, GenSource, SliceSource, VecSink};
+pub use spill::{SpillMedium, SpillRun, SpillStore, TempDirGuard};
+
+use std::path::PathBuf;
+
+use crate::dtype::SortKey;
+use crate::session::Session;
+
+/// Floor on the derived run-generation chunk (elements).
+pub(crate) const MIN_RUN_CHUNK: usize = 1024;
+/// Floor on each merge I/O buffer (elements per run cursor / output).
+pub(crate) const MIN_IO_ELEMS: usize = 256;
+/// Cap on the merge fan-in (beyond ~this, tournament depth and seek
+/// churn cost more than an extra pass saves).
+pub(crate) const MAX_FAN_IN: usize = 128;
+
+/// The engine-state memory target of a streaming pipeline, in bytes.
+///
+/// The budget is what the *engine* may hold — chunk buffers, merge I/O
+/// buffers, the scan carry — not the dataset, the spill files or the
+/// caller's source/sink. Derivations (DESIGN.md §13): the run chunk
+/// gets a third of the budget (the current chunk, the one-chunk
+/// look-ahead and the in-memory sort's scratch each own a third at the
+/// peak of run generation), the merge phase splits a quarter of it
+/// across `fan_in` input cursors plus one output buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamBudget {
+    bytes: usize,
+}
+
+impl StreamBudget {
+    /// A budget of `n` bytes (floored to something workable per dtype).
+    pub fn bytes(n: usize) -> StreamBudget {
+        StreamBudget { bytes: n.max(1) }
+    }
+
+    /// A budget of `n` MiB.
+    pub fn mib(n: usize) -> StreamBudget {
+        StreamBudget::bytes(n.saturating_mul(1 << 20))
+    }
+
+    /// The budget in bytes.
+    pub fn get(self) -> usize {
+        self.bytes
+    }
+}
+
+/// Resolved per-dtype pipeline shape (see [`StreamBudget`] for the
+/// accounting; recorded in [`ExternalSortStats`] and `BENCH_stream.json`).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct StreamPlan {
+    /// Elements per run-generation chunk (also the fold chunk).
+    pub run_chunk_elems: usize,
+    /// Maximum runs one merge consumes at once.
+    pub fan_in: usize,
+    /// Elements per merge I/O buffer (cursor refill / output granule).
+    pub io_chunk_elems: usize,
+}
+
+/// A bounded-memory streaming context over one [`Session`]'s engines.
+/// Built by [`Session::stream`]; see the module docs for the pipeline
+/// inventory.
+#[derive(Clone, Debug)]
+pub struct StreamCtx {
+    pub(crate) session: Session,
+    budget: StreamBudget,
+    medium: SpillMedium,
+    spill_parent: Option<PathBuf>,
+    run_chunk_override: Option<usize>,
+    fan_in_override: Option<usize>,
+    io_chunk_override: Option<usize>,
+}
+
+impl StreamCtx {
+    pub(crate) fn new(session: Session, budget: StreamBudget) -> StreamCtx {
+        StreamCtx {
+            session,
+            budget,
+            medium: SpillMedium::Disk,
+            spill_parent: None,
+            run_chunk_override: None,
+            fan_in_override: None,
+            io_chunk_override: None,
+        }
+    }
+
+    /// Keep spilled runs in memory (tests / datasets that happen to fit;
+    /// the pipeline logic is unchanged).
+    pub fn in_memory_spill(mut self) -> StreamCtx {
+        self.medium = SpillMedium::Memory;
+        self
+    }
+
+    /// Put the guarded spill directory under `parent` instead of the OS
+    /// temp dir (e.g. a scratch filesystem).
+    pub fn spill_parent(mut self, parent: PathBuf) -> StreamCtx {
+        self.spill_parent = Some(parent);
+        self.medium = SpillMedium::Disk;
+        self
+    }
+
+    /// Override the derived run-generation chunk (elements). Tests use
+    /// this to pin run counts; production callers should let the budget
+    /// derive it.
+    pub fn run_chunk_elems(mut self, elems: usize) -> StreamCtx {
+        self.run_chunk_override = Some(elems.max(1));
+        self
+    }
+
+    /// Override the derived merge fan-in (≥ 2). Lower fan-in forces more
+    /// merge passes — the multi-pass equivalence tests pin it to 2.
+    pub fn fan_in(mut self, fan_in: usize) -> StreamCtx {
+        self.fan_in_override = Some(fan_in.max(2));
+        self
+    }
+
+    /// Override the derived merge I/O buffer granule (elements).
+    pub fn io_chunk_elems(mut self, elems: usize) -> StreamCtx {
+        self.io_chunk_override = Some(elems.max(1));
+        self
+    }
+
+    /// The session this context executes on.
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// The engine-state budget.
+    pub fn budget(&self) -> StreamBudget {
+        self.budget
+    }
+
+    /// Where spilled runs go.
+    pub fn medium(&self) -> SpillMedium {
+        self.medium
+    }
+
+    pub(crate) fn store(&self) -> SpillStore {
+        SpillStore::new(self.medium, self.spill_parent.clone())
+    }
+
+    /// Budget → pipeline shape for keys of type `K` (see
+    /// [`StreamBudget`] for the accounting).
+    pub(crate) fn plan<K: SortKey>(&self) -> StreamPlan {
+        let budget_elems = (self.budget.bytes / K::KEY_BYTES).max(2 * MIN_IO_ELEMS);
+        let run_chunk_elems =
+            self.run_chunk_override.unwrap_or_else(|| (budget_elems / 3).max(MIN_RUN_CHUNK));
+        let fan_in = self
+            .fan_in_override
+            .unwrap_or_else(|| (budget_elems / (4 * MIN_IO_ELEMS)).clamp(2, MAX_FAN_IN));
+        let io_chunk_elems = self
+            .io_chunk_override
+            .unwrap_or_else(|| (budget_elems / (4 * (fan_in + 1))).max(MIN_IO_ELEMS));
+        StreamPlan { run_chunk_elems, fan_in, io_chunk_elems }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_scales_with_budget_and_dtype() {
+        let s = Session::native();
+        // 1 MiB of i32: 262144 budget elements, a third to the chunk.
+        let p = s.stream(StreamBudget::mib(1)).plan::<i32>();
+        assert_eq!(p.run_chunk_elems, 87_381);
+        assert_eq!(p.fan_in, MAX_FAN_IN);
+        assert!(p.io_chunk_elems >= MIN_IO_ELEMS);
+        // Same bytes, wider keys: fewer elements everywhere.
+        let p16 = s.stream(StreamBudget::mib(1)).plan::<i128>();
+        assert!(p16.run_chunk_elems < p.run_chunk_elems);
+        // Tiny budgets clamp to the floors instead of degenerating.
+        let tiny = s.stream(StreamBudget::bytes(64)).plan::<i64>();
+        assert_eq!(tiny.run_chunk_elems, MIN_RUN_CHUNK);
+        assert_eq!(tiny.fan_in, 2);
+        assert_eq!(tiny.io_chunk_elems, MIN_IO_ELEMS);
+    }
+
+    #[test]
+    fn overrides_pin_the_plan() {
+        let ctx = Session::native()
+            .stream(StreamBudget::mib(4))
+            .run_chunk_elems(5000)
+            .fan_in(2)
+            .io_chunk_elems(128);
+        let p = ctx.plan::<f64>();
+        assert_eq!(p.run_chunk_elems, 5000);
+        assert_eq!(p.fan_in, 2);
+        assert_eq!(p.io_chunk_elems, 128);
+        // fan_in floor.
+        let floored = Session::native().stream(StreamBudget::mib(1)).fan_in(0);
+        assert_eq!(floored.plan::<i32>().fan_in, 2);
+    }
+
+    #[test]
+    fn budget_constructors() {
+        assert_eq!(StreamBudget::mib(2).get(), 2 << 20);
+        assert_eq!(StreamBudget::bytes(0).get(), 1);
+    }
+}

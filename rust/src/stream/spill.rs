@@ -1,0 +1,400 @@
+//! Spilled sorted runs and their bounded-memory cursors.
+//!
+//! A [`SpillStore`] is where `external_sort` parks sorted runs between
+//! the run-generation and merge phases. Two media:
+//!
+//! * [`SpillMedium::Memory`] — runs stay as `Vec<K>` (for tests and
+//!   datasets that happen to fit; the pipeline logic is identical).
+//! * [`SpillMedium::Disk`] — runs are codec-encoded files inside a
+//!   process-unique temp directory owned by a [`TempDirGuard`], which
+//!   removes the whole directory on `Drop` — including during a panic
+//!   unwind, so an aborted sort never leaks spill files.
+//!
+//! Runs are written incrementally through a [`RunWriter`] (merge output
+//! never materialises in memory) and read back through a [`SpillCursor`],
+//! a [`RunCursor`] whose refill buffer is the unit of budget accounting
+//! for merge fan-in (DESIGN.md §13).
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Context;
+
+use crate::baselines::kmerge::RunCursor;
+use crate::dtype::SortKey;
+use crate::stream::codec;
+
+/// Where spilled runs live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpillMedium {
+    /// Runs held as plain vectors (no I/O).
+    Memory,
+    /// Runs codec-encoded into files under a guarded temp directory.
+    Disk,
+}
+
+/// An owned temp directory removed on `Drop` (panic-safe: `Drop` runs
+/// during unwinding, so spill files are cleaned even when a sink or
+/// engine panics mid-pipeline — tested in `rust/tests/stream_pipeline.rs`).
+#[derive(Debug)]
+pub struct TempDirGuard {
+    path: PathBuf,
+}
+
+/// Process-wide counter making sibling guard paths unique.
+static GUARD_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl TempDirGuard {
+    /// Create `akstream-<pid>-<seq>` under `parent` (default: the OS
+    /// temp dir).
+    pub fn new(parent: Option<&Path>) -> anyhow::Result<TempDirGuard> {
+        let base = parent.map(Path::to_path_buf).unwrap_or_else(std::env::temp_dir);
+        let seq = GUARD_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = base.join(format!("akstream-{}-{seq}", std::process::id()));
+        std::fs::create_dir_all(&path)
+            .with_context(|| format!("creating spill dir {}", path.display()))?;
+        Ok(TempDirGuard { path })
+    }
+
+    /// The guarded directory.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDirGuard {
+    fn drop(&mut self) {
+        // Best effort: a failed cleanup must not turn an unwind into an
+        // abort, and the OS temp dir reaps leftovers eventually.
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// One sorted run parked in the store. File-backed runs delete their
+/// file on `Drop`, so intermediate runs consumed by a merge pass free
+/// their disk as soon as the pass retires them.
+#[derive(Debug)]
+pub enum SpillRun<K: SortKey> {
+    /// In-memory run.
+    Mem(Vec<K>),
+    /// Codec-encoded file of `elems` records.
+    File {
+        /// Path inside the store's guarded directory.
+        path: PathBuf,
+        /// Record count (validated against the file size on write).
+        elems: usize,
+    },
+}
+
+impl<K: SortKey> SpillRun<K> {
+    /// Elements in the run.
+    pub fn elems(&self) -> usize {
+        match self {
+            SpillRun::Mem(v) => v.len(),
+            SpillRun::File { elems, .. } => *elems,
+        }
+    }
+
+    /// Open a bounded-memory cursor over the run; `buf_elems` is the
+    /// refill granule for file-backed runs (in-memory runs borrow).
+    pub fn cursor(&self, buf_elems: usize) -> anyhow::Result<SpillCursor<'_, K>> {
+        match self {
+            SpillRun::Mem(v) => Ok(SpillCursor {
+                mem: Some(v),
+                pos: 0,
+                file: None,
+                remaining: 0,
+                buf: Vec::new(),
+                raw: Vec::new(),
+                buf_elems: 0,
+            }),
+            SpillRun::File { path, elems } => {
+                let file =
+                    File::open(path).with_context(|| format!("opening run {}", path.display()))?;
+                let mut c = SpillCursor {
+                    mem: None,
+                    pos: 0,
+                    file: Some(file),
+                    remaining: *elems,
+                    buf: Vec::new(),
+                    raw: Vec::new(),
+                    buf_elems: buf_elems.max(1),
+                };
+                c.refill()?;
+                Ok(c)
+            }
+        }
+    }
+}
+
+impl<K: SortKey> Drop for SpillRun<K> {
+    fn drop(&mut self) {
+        if let SpillRun::File { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Factory + accounting for spilled runs. The store owns the temp-dir
+/// guard; run files live inside it, so dropping the store (normally or
+/// through a panic) removes every spill at once.
+#[derive(Debug)]
+pub struct SpillStore {
+    medium: SpillMedium,
+    /// Parent for the guarded dir (`None`: OS temp dir). Lazy so a
+    /// memory-medium store never touches the filesystem.
+    parent: Option<PathBuf>,
+    guard: Option<TempDirGuard>,
+    next_id: u64,
+    runs_written: u64,
+    bytes_spilled: u64,
+}
+
+impl SpillStore {
+    /// A store on the given medium; `spill_parent` overrides where the
+    /// disk medium puts its guarded directory.
+    pub fn new(medium: SpillMedium, spill_parent: Option<PathBuf>) -> SpillStore {
+        SpillStore {
+            medium,
+            parent: spill_parent,
+            guard: None,
+            next_id: 0,
+            runs_written: 0,
+            bytes_spilled: 0,
+        }
+    }
+
+    /// Runs written so far.
+    pub fn runs_written(&self) -> u64 {
+        self.runs_written
+    }
+
+    /// Bytes written to disk so far (0 on the memory medium).
+    pub fn bytes_spilled(&self) -> u64 {
+        self.bytes_spilled
+    }
+
+    /// The guarded spill directory, if one has been created.
+    pub fn dir(&self) -> Option<&Path> {
+        self.guard.as_ref().map(TempDirGuard::path)
+    }
+
+    fn ensure_dir(&mut self) -> anyhow::Result<&Path> {
+        if self.guard.is_none() {
+            self.guard = Some(TempDirGuard::new(self.parent.as_deref())?);
+        }
+        Ok(self.guard.as_ref().unwrap().path())
+    }
+
+    /// Start a new run; feed it sorted chunks, then [`RunWriter::finish`].
+    pub fn run_writer<K: SortKey>(&mut self) -> anyhow::Result<RunWriter<'_, K>> {
+        let sink = match self.medium {
+            SpillMedium::Memory => RunWriterSink::Mem(Vec::new()),
+            SpillMedium::Disk => {
+                let id = self.next_id;
+                self.next_id += 1;
+                let path = self.ensure_dir()?.join(format!("run-{id}.bin"));
+                let file = File::create(&path)
+                    .with_context(|| format!("creating run {}", path.display()))?;
+                RunWriterSink::File { w: BufWriter::new(file), path, elems: 0, raw: Vec::new() }
+            }
+        };
+        Ok(RunWriter { store: self, sink })
+    }
+
+    /// Write one fully-materialised sorted run (run-generation path).
+    pub fn write_run<K: SortKey>(&mut self, sorted: &[K]) -> anyhow::Result<SpillRun<K>> {
+        let mut w = self.run_writer::<K>()?;
+        w.push_chunk(sorted)?;
+        w.finish()
+    }
+}
+
+enum RunWriterSink<K: SortKey> {
+    Mem(Vec<K>),
+    File { w: BufWriter<File>, path: PathBuf, elems: usize, raw: Vec<u8> },
+}
+
+/// Incremental writer for one spilled run (merge output streams through
+/// here chunk by chunk, never materialising the full run in memory).
+pub struct RunWriter<'s, K: SortKey> {
+    store: &'s mut SpillStore,
+    sink: RunWriterSink<K>,
+}
+
+impl<K: SortKey> RunWriter<'_, K> {
+    /// Append one sorted chunk.
+    pub fn push_chunk(&mut self, chunk: &[K]) -> anyhow::Result<()> {
+        match &mut self.sink {
+            RunWriterSink::Mem(v) => v.extend_from_slice(chunk),
+            RunWriterSink::File { w, elems, raw, .. } => {
+                raw.clear();
+                codec::encode_into(chunk, raw);
+                w.write_all(raw).context("writing spill run")?;
+                *elems += chunk.len();
+                self.store.bytes_spilled += raw.len() as u64;
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush and hand back the finished run.
+    pub fn finish(self) -> anyhow::Result<SpillRun<K>> {
+        self.store.runs_written += 1;
+        match self.sink {
+            RunWriterSink::Mem(v) => Ok(SpillRun::Mem(v)),
+            RunWriterSink::File { mut w, path, elems, .. } => {
+                w.flush().context("flushing spill run")?;
+                Ok(SpillRun::File { path, elems })
+            }
+        }
+    }
+}
+
+/// Bounded-memory [`RunCursor`] over a [`SpillRun`]: in-memory runs
+/// borrow their vector; file runs hold one decoded buffer of at most
+/// `buf_elems` keys and refill from disk as the merge drains them.
+pub struct SpillCursor<'r, K: SortKey> {
+    mem: Option<&'r [K]>,
+    /// Position in `mem` (memory runs) or in `buf` (file runs).
+    pos: usize,
+    file: Option<File>,
+    /// Records not yet pulled into `buf`.
+    remaining: usize,
+    buf: Vec<K>,
+    raw: Vec<u8>,
+    buf_elems: usize,
+}
+
+impl<K: SortKey> SpillCursor<'_, K> {
+    fn refill(&mut self) -> anyhow::Result<()> {
+        let Some(file) = self.file.as_mut() else {
+            return Ok(());
+        };
+        self.buf.clear();
+        self.pos = 0;
+        let want = self.buf_elems.min(self.remaining);
+        if want == 0 {
+            return Ok(());
+        }
+        let bytes = codec::encoded_len::<K>(want);
+        self.raw.resize(bytes, 0);
+        file.read_exact(&mut self.raw).context("reading spill run")?;
+        codec::decode_into(&self.raw, &mut self.buf)?;
+        self.remaining -= want;
+        Ok(())
+    }
+}
+
+impl<K: SortKey> RunCursor<K> for SpillCursor<'_, K> {
+    fn head(&self) -> Option<K> {
+        match self.mem {
+            Some(m) => m.get(self.pos).copied(),
+            None => self.buf.get(self.pos).copied(),
+        }
+    }
+
+    fn advance(&mut self) -> anyhow::Result<()> {
+        self.pos += 1;
+        if self.mem.is_none() && self.pos >= self.buf.len() && self.remaining > 0 {
+            self.refill()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtype::bits_eq;
+    use crate::util::Prng;
+    use crate::workload::{generate, Distribution};
+
+    fn sorted_keys(seed: u64, n: usize) -> Vec<f64> {
+        let mut xs: Vec<f64> = generate(&mut Prng::new(seed), Distribution::Uniform, n);
+        xs.sort_unstable_by(|a, b| a.cmp_total(b));
+        xs
+    }
+
+    fn drain<K: SortKey>(run: &SpillRun<K>, buf_elems: usize) -> Vec<K> {
+        let mut c = run.cursor(buf_elems).unwrap();
+        let mut out = Vec::new();
+        while let Some(k) = c.head() {
+            out.push(k);
+            c.advance().unwrap();
+        }
+        out
+    }
+
+    #[test]
+    fn memory_and_disk_runs_roundtrip() {
+        let xs = sorted_keys(1, 5000);
+        for medium in [SpillMedium::Memory, SpillMedium::Disk] {
+            let mut store = SpillStore::new(medium, None);
+            let run = store.write_run(&xs).unwrap();
+            assert_eq!(run.elems(), xs.len());
+            // Tiny refill buffer exercises many refills.
+            assert!(bits_eq(&drain(&run, 64), &xs), "{medium:?}");
+            assert_eq!(store.runs_written(), 1);
+        }
+    }
+
+    #[test]
+    fn incremental_writer_equals_one_shot() {
+        let xs = sorted_keys(2, 3000);
+        let mut store = SpillStore::new(SpillMedium::Disk, None);
+        let mut w = store.run_writer::<f64>().unwrap();
+        for chunk in xs.chunks(701) {
+            w.push_chunk(chunk).unwrap();
+        }
+        let run = w.finish().unwrap();
+        assert_eq!(run.elems(), xs.len());
+        assert!(bits_eq(&drain(&run, 97), &xs));
+        assert_eq!(store.bytes_spilled(), codec::encoded_len::<f64>(xs.len()) as u64);
+    }
+
+    #[test]
+    fn run_files_deleted_on_drop() {
+        let mut store = SpillStore::new(SpillMedium::Disk, None);
+        let run = store.write_run(&[1i32, 2, 3]).unwrap();
+        let path = match &run {
+            SpillRun::File { path, .. } => path.clone(),
+            _ => unreachable!("disk store produced a memory run"),
+        };
+        assert!(path.exists());
+        drop(run);
+        assert!(!path.exists(), "run file must be deleted when retired");
+        // The guarded dir itself disappears with the store.
+        let dir = store.dir().unwrap().to_path_buf();
+        drop(store);
+        assert!(!dir.exists());
+    }
+
+    #[test]
+    fn tempdir_guard_cleans_on_panic() {
+        // The guard's Drop must run during unwinding: a panicking
+        // pipeline leaves no spill directory behind.
+        let captured = std::sync::Arc::new(std::sync::Mutex::new(PathBuf::new()));
+        let cap = captured.clone();
+        let result = std::panic::catch_unwind(move || {
+            let guard = TempDirGuard::new(None).unwrap();
+            std::fs::write(guard.path().join("run-0.bin"), b"abc").unwrap();
+            *cap.lock().unwrap() = guard.path().to_path_buf();
+            panic!("mid-pipeline failure");
+        });
+        assert!(result.is_err());
+        let path = captured.lock().unwrap().clone();
+        assert!(!path.as_os_str().is_empty());
+        assert!(!path.exists(), "guarded dir {} must be removed on panic", path.display());
+    }
+
+    #[test]
+    fn memory_store_touches_no_filesystem() {
+        let mut store = SpillStore::new(SpillMedium::Memory, None);
+        let _ = store.write_run(&[5i64, 6]).unwrap();
+        assert_eq!(store.dir(), None);
+        assert_eq!(store.bytes_spilled(), 0);
+    }
+}

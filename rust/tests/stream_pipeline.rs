@@ -1,0 +1,339 @@
+//! Streaming-vs-in-memory equivalence suite (DESIGN.md §13).
+//!
+//! The contract under test: every streaming pipeline produces what its
+//! in-memory `Session` counterpart produces on the concatenated input —
+//! bitwise for order-canonical results (external sort, top-k) and for
+//! the associative integer folds (reduce, scan), within rounding slack
+//! for float folds (chunking regroups the additions, exactly as the
+//! threaded in-memory engines regroup them per worker). Budgets are
+//! driven through configurations that force the in-core fast path and
+//! 1, 2 and 3+ merge passes, on both spill media, across all six paper
+//! dtypes plus the NaN/−0.0/duplicate/empty adversarial inputs.
+
+use accelkern::algorithms::ReduceKind;
+use accelkern::backend::DeviceKey;
+use accelkern::dtype::{bits_eq, is_sorted_total, SortKey};
+use accelkern::prop::{check, PropConfig, VecGen};
+use accelkern::session::{Launch, Session};
+use accelkern::stream::{
+    FileSink, FileSource, GenSource, SliceSource, StreamBudget, StreamCtx, TempDirGuard, VecSink,
+};
+use accelkern::util::Prng;
+use accelkern::workload::{generate, Distribution, KeyGen};
+
+/// In-memory reference: session sort of the whole input.
+fn sorted_ref<K: KeyGen + DeviceKey>(data: &[K]) -> Vec<K> {
+    let mut want = data.to_vec();
+    Session::threaded(3).sort(&mut want, None).unwrap();
+    want
+}
+
+fn stream_sort<K: KeyGen + DeviceKey>(ctx: &StreamCtx, data: &[K]) -> (Vec<K>, usize) {
+    let mut sink = VecSink::new();
+    let stats = ctx.external_sort(&mut SliceSource::new(data), &mut sink, None).unwrap();
+    (sink.out, stats.merge_passes)
+}
+
+/// The merge-pass-forcing budget grid: (run_chunk, fan_in, expected
+/// merge passes) for a 40k-element input.
+/// * 1 pass: 8 runs at fan-in 16 — one k-way merge.
+/// * 2 passes: 8 runs at fan-in 4 — one intermediate sweep + final.
+/// * 3+ passes: 40 runs at fan-in 2 — 40→20→10→5→3→2 intermediate
+///   sweeps, then the final merge (6 passes total).
+const PASS_GRID: [(usize, usize, usize); 3] = [(5000, 16, 1), (5000, 4, 2), (1000, 2, 6)];
+
+fn equivalence_over_budgets<K: KeyGen + DeviceKey>(seed: u64) {
+    let n = 40_000;
+    let data: Vec<K> = generate(&mut Prng::new(seed), Distribution::Uniform, n);
+    let want = sorted_ref(&data);
+    for (run_chunk, fan_in, want_passes) in PASS_GRID {
+        for mem_spill in [true, false] {
+            let mut ctx = Session::threaded(2)
+                .stream(StreamBudget::bytes(64))
+                .run_chunk_elems(run_chunk)
+                .fan_in(fan_in)
+                .io_chunk_elems(173);
+            if mem_spill {
+                ctx = ctx.in_memory_spill();
+            }
+            let (got, passes) = stream_sort(&ctx, &data);
+            assert!(
+                bits_eq(&got, &want),
+                "{} diverged (chunk={run_chunk} fan_in={fan_in} mem={mem_spill})",
+                std::any::type_name::<K>(),
+            );
+            assert_eq!(
+                passes, want_passes,
+                "{} pass count (chunk={run_chunk} fan_in={fan_in})",
+                std::any::type_name::<K>(),
+            );
+        }
+    }
+}
+
+#[test]
+fn external_sort_equivalence_all_dtypes_and_pass_counts() {
+    equivalence_over_budgets::<i16>(10);
+    equivalence_over_budgets::<i32>(11);
+    equivalence_over_budgets::<i64>(12);
+    equivalence_over_budgets::<i128>(13);
+    equivalence_over_budgets::<f32>(14);
+    equivalence_over_budgets::<f64>(15);
+}
+
+#[test]
+fn external_sort_adversarial_inputs() {
+    let ctx = Session::threaded(2)
+        .stream(StreamBudget::bytes(64))
+        .in_memory_spill()
+        .run_chunk_elems(100)
+        .fan_in(2);
+    // NaN payloads, signed zeros, infinities, duplicates.
+    let mut data = vec![
+        f64::NAN,
+        -f64::NAN,
+        -0.0,
+        0.0,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        1.0,
+        1.0,
+        -1.0,
+    ];
+    for i in 0..500 {
+        data.push(if i % 3 == 0 { f64::NAN } else { (i % 7) as f64 - 3.0 });
+    }
+    let want = sorted_ref(&data);
+    let (got, _) = stream_sort(&ctx, &data);
+    assert!(bits_eq(&got, &want), "NaN/-0.0/dup stream sort must be bit-identical");
+    assert!(is_sorted_total(&got));
+    // Empty and single-element streams.
+    let empty: Vec<f64> = vec![];
+    let (got, passes) = stream_sort(&ctx, &empty);
+    assert!(got.is_empty());
+    assert_eq!(passes, 0);
+    let (got, _) = stream_sort(&ctx, &[42.0f64]);
+    assert_eq!(got, vec![42.0]);
+    // Duplicate-heavy integers across a multi-pass merge.
+    let dups: Vec<i32> = generate(&mut Prng::new(77), Distribution::DupHeavy, 30_000);
+    let (got, passes) = stream_sort(&ctx, &dups);
+    assert!(bits_eq(&got, &sorted_ref(&dups)));
+    assert!(passes >= 3, "300 runs at fan-in 2 must multi-pass (got {passes})");
+}
+
+#[test]
+fn external_sort_proptest_random_budgets() {
+    // Property: for any input and any (run_chunk, fan_in) shape, the
+    // streamed sort is bitwise the in-memory sort.
+    let gen = VecGen::new(3000, |r| r.range_i64(-1 << 40, 1 << 40));
+    check("stream-sort-equivalence", &PropConfig::default(), &gen, |xs| {
+        let mut rng = Prng::new(xs.len() as u64 ^ 0xC0FFEE);
+        let ctx = Session::threaded(2)
+            .stream(StreamBudget::bytes(64))
+            .in_memory_spill()
+            .run_chunk_elems(1 + rng.below(700) as usize)
+            .fan_in(2 + rng.below(5) as usize);
+        let want = sorted_ref(xs);
+        let (got, _) = stream_sort(&ctx, xs);
+        if bits_eq(&got, &want) {
+            Ok(())
+        } else {
+            Err(format!("diverged on {} elems", xs.len()))
+        }
+    });
+}
+
+#[test]
+fn stream_folds_proptest_integer_bitwise() {
+    // Integer reduce + scan are bitwise across every chunking (wrapping
+    // add is associative); the chunk size is drawn per case.
+    let gen = VecGen::new(2000, |r| r.range_i64(i64::MIN / 4, i64::MAX / 4));
+    check("stream-fold-equivalence", &PropConfig::default(), &gen, |xs| {
+        let mut rng = Prng::new(xs.len() as u64 ^ 0xF01D);
+        let ctx = Session::threaded(2)
+            .stream(StreamBudget::bytes(64))
+            .run_chunk_elems(1 + rng.below(500) as usize);
+        let s = Session::native();
+        for kind in [ReduceKind::Add, ReduceKind::Min, ReduceKind::Max] {
+            let got = ctx.stream_reduce(&mut SliceSource::new(xs), kind, None).unwrap();
+            let want = s.reduce(xs, kind, None).unwrap();
+            if got != want {
+                return Err(format!("{kind:?}: {got} != {want}"));
+            }
+        }
+        for inclusive in [true, false] {
+            let mut sink = VecSink::new();
+            ctx.stream_scan(&mut SliceSource::new(xs), &mut sink, inclusive, None).unwrap();
+            let want = s.accumulate(xs, inclusive, None).unwrap();
+            if sink.out != want {
+                return Err(format!("scan inclusive={inclusive} diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn float_folds_track_reference_within_tolerance() {
+    // Chunking regroups float additions — same contract as the threaded
+    // in-memory engines, so the comparison is relative, not bitwise.
+    let xs: Vec<f64> = generate(&mut Prng::new(5), Distribution::Gaussian, 6000)
+        .into_iter()
+        .map(|x: f64| x % 100.0)
+        .collect();
+    let ctx = Session::threaded(2).stream(StreamBudget::bytes(64)).run_chunk_elems(311);
+    let got = ctx.stream_reduce(&mut SliceSource::new(&xs), ReduceKind::Add, None).unwrap();
+    let want = Session::native().reduce(&xs, ReduceKind::Add, None).unwrap();
+    assert!((got - want).abs() <= 1e-6 * want.abs().max(1.0), "{got} vs {want}");
+    // Min/Max are exact selections — bitwise even for floats.
+    for kind in [ReduceKind::Min, ReduceKind::Max] {
+        let got = ctx.stream_reduce(&mut SliceSource::new(&xs), kind, None).unwrap();
+        let want = Session::native().reduce(&xs, kind, None).unwrap();
+        assert_eq!(got.to_bits(), want.to_bits(), "{kind:?}");
+    }
+}
+
+#[test]
+fn launch_knobs_reach_the_per_chunk_engines() {
+    // A per-call Launch flows into run generation: results stay
+    // identical under any knob combination.
+    let data: Vec<i64> = generate(&mut Prng::new(6), Distribution::Uniform, 25_000);
+    let want = sorted_ref(&data);
+    let ctx = Session::threaded(4)
+        .stream(StreamBudget::bytes(64))
+        .in_memory_spill()
+        .run_chunk_elems(4000);
+    for l in [
+        Launch::new().max_tasks(1),
+        Launch::new().min_elems_per_task(100_000),
+        Launch::new().prefer_parallel_threshold(usize::MAX),
+        Launch::new().reuse_scratch(true),
+    ] {
+        let mut sink = VecSink::new();
+        ctx.external_sort(&mut SliceSource::new(&data), &mut sink, Some(&l)).unwrap();
+        assert!(bits_eq(&sink.out, &want), "{l:?}");
+    }
+}
+
+#[test]
+fn file_to_file_pipeline_roundtrips() {
+    // Dataset on disk -> external sort -> output file -> read back:
+    // the full out-of-core deployment shape.
+    use accelkern::stream::{ChunkSink, ChunkSource};
+    let dir = TempDirGuard::new(None).unwrap();
+    let input = dir.path().join("input.bin");
+    let output = dir.path().join("sorted.bin");
+    let data: Vec<i32> = generate(&mut Prng::new(7), Distribution::Zipf, 20_000);
+    {
+        // Materialise the dataset file through the sink contract.
+        let mut sink = FileSink::create(&input).unwrap();
+        let mut src = SliceSource::new(&data);
+        let mut buf = Vec::new();
+        while src.next_chunk(&mut buf, 4096).unwrap() > 0 {
+            sink.push_chunk(&buf).unwrap();
+        }
+        sink.finish().unwrap();
+    }
+    let ctx = Session::threaded(2)
+        .stream(StreamBudget::bytes(64))
+        .spill_parent(dir.path().to_path_buf())
+        .run_chunk_elems(3000)
+        .fan_in(2);
+    let mut src = FileSource::<i32>::open(&input).unwrap();
+    let mut sink = FileSink::create(&output).unwrap();
+    let stats = ctx.external_sort(&mut src, &mut sink, None).unwrap();
+    assert_eq!(stats.elems, data.len() as u64);
+    assert!(stats.merge_passes >= 2);
+    let mut back = FileSource::<i32>::open(&output).unwrap();
+    let mut out = Vec::new();
+    let mut buf = Vec::new();
+    while back.next_chunk(&mut buf, 1024).unwrap() > 0 {
+        out.extend_from_slice(&buf);
+    }
+    assert!(bits_eq(&out, &sorted_ref(&data)));
+}
+
+#[test]
+fn gensource_pipeline_verifies_like_the_bench() {
+    // The bench-stream acceptance shape in miniature: a generated
+    // dataset 8x the budget, streamed sort, bitwise equal to the
+    // in-memory sort of the materialised stream.
+    let n: usize = 64_000;
+    let budget = StreamBudget::bytes(n * std::mem::size_of::<i64>() / 8);
+    let ctx = Session::threaded(2).stream(budget);
+    let mut src = GenSource::<i64>::new(99, Distribution::Uniform, n as u64);
+    let mut sink = VecSink::new();
+    let stats = ctx.external_sort(&mut src, &mut sink, None).unwrap();
+    assert_eq!(stats.elems, n as u64);
+    assert!(stats.runs > 1, "8x dataset must spill ({} runs)", stats.runs);
+    assert!(stats.merge_passes >= 1);
+    let replay = GenSource::<i64>::new(99, Distribution::Uniform, n as u64).materialize();
+    assert!(bits_eq(&sink.out, &sorted_ref(&replay)));
+}
+
+#[test]
+fn spill_dir_cleaned_on_sink_panic() {
+    // A sink that panics mid-stream must not leak the guarded spill
+    // directory (the TempDirGuard drops during unwinding).
+    use accelkern::stream::ChunkSink;
+    struct PanicSink;
+    impl ChunkSink<i64> for PanicSink {
+        fn push_chunk(&mut self, _chunk: &[i64]) -> anyhow::Result<()> {
+            panic!("sink failure mid-stream");
+        }
+        fn finish(&mut self) -> anyhow::Result<()> {
+            Ok(())
+        }
+    }
+    let parent = TempDirGuard::new(None).unwrap();
+    let parent_path = parent.path().to_path_buf();
+    let data: Vec<i64> = generate(&mut Prng::new(8), Distribution::Uniform, 10_000);
+    let result = std::panic::catch_unwind(move || {
+        let ctx = Session::native()
+            .stream(StreamBudget::bytes(64))
+            .spill_parent(parent_path)
+            .run_chunk_elems(1000)
+            .fan_in(2);
+        let mut sink = PanicSink;
+        let _ = ctx.external_sort(&mut SliceSource::new(&data), &mut sink, None);
+    });
+    assert!(result.is_err(), "the sink panic must propagate");
+    let leftovers: Vec<_> = std::fs::read_dir(parent.path())
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    assert!(
+        leftovers.is_empty(),
+        "spill dirs leaked after a mid-stream panic: {leftovers:?}"
+    );
+}
+
+#[test]
+fn topk_and_histogram_streaming_equivalence() {
+    let xs: Vec<f32> = generate(&mut Prng::new(9), Distribution::Gaussian, 30_000);
+    let ctx = Session::threaded(2).stream(StreamBudget::bytes(64)).run_chunk_elems(997);
+    // top-k vs in-memory sort-desc-take-k, bitwise.
+    let mut want = xs.clone();
+    Session::native().sort(&mut want, None).unwrap();
+    want.reverse();
+    for k in [1usize, 50, 1000] {
+        let got = ctx.stream_topk(&mut SliceSource::new(&xs), k, None).unwrap();
+        assert!(bits_eq(&got, &want[..k]), "k={k}");
+    }
+    // histogram vs a direct count on the total order.
+    let edges = vec![-2.0f32, -0.5, 0.0, 0.5, 2.0];
+    let got = ctx.stream_histogram(&mut SliceSource::new(&xs), &edges, None).unwrap();
+    let mut expect = vec![0u64; edges.len() + 1];
+    for &x in &xs {
+        // NB: qualified — the *total-order* image, not f32's raw IEEE
+        // bits (raw bits misorder negatives).
+        let bin = edges
+            .iter()
+            .take_while(|&&e| SortKey::to_bits(e) <= SortKey::to_bits(x))
+            .count();
+        expect[bin] += 1;
+    }
+    assert_eq!(got, expect);
+    assert_eq!(got.iter().sum::<u64>(), xs.len() as u64);
+}
