@@ -1,6 +1,6 @@
 # Top-level convenience targets (see README.md).
 
-.PHONY: artifacts build test doc bench-smoke bench-sort bench-stream clean-artifacts
+.PHONY: artifacts build test doc bench-smoke bench-sort bench-stream bench-cluster-stream clean-artifacts
 
 # AOT-lower the L1/L2 Pallas/JAX catalog to artifacts/ (requires jax).
 artifacts:
@@ -33,6 +33,14 @@ bench-sort: build
 # --quick for the full dtype grid and the 16x ratio.
 bench-stream: build
 	cargo run --release --bin akbench -- bench-stream --quick
+
+# Multi-node x out-of-core sweep -> BENCH_cluster_stream.json (DESIGN.md
+# §14): SIHSort with the external rank-local sorter, each configuration
+# verified bitwise against one single-node Session::sort (divergence
+# exits non-zero). Drop --quick for ranks {2,4,8} x ratios {8,16} x the
+# full dtype grid.
+bench-cluster-stream: build
+	cargo run --release --bin akbench -- bench-cluster-stream --quick
 
 clean-artifacts:
 	rm -rf artifacts

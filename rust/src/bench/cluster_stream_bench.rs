@@ -1,0 +1,352 @@
+//! `akbench bench-cluster-stream` — the multi-node × out-of-core sort
+//! tracker (DESIGN.md §14): SIHSort with the external rank-local sorter
+//! (`LocalSorter::External`) over rank-counts × budget ratios × dtypes,
+//! emitting `BENCH_cluster_stream.json` next to `BENCH_stream.json`.
+//!
+//! Every configuration doubles as a correctness gate, which CI relies
+//! on: the concatenated rank outputs must be bitwise-identical to one
+//! single-node `Session::sort` of the same dataset on a subsampled
+//! verification pass, every rank must report stream stats whose
+//! pipeline shape respects the configured budget (run chunk within the
+//! budget's derivation, genuinely out-of-core at ratio ≥ 8), and on the
+//! disk medium every rank must actually spill. Any violation is a hard
+//! error.
+//!
+//! Throughput is the paper's unit — total bytes / simulated makespan
+//! (GB sorted per simulated second) — with host wall seconds recorded
+//! alongside.
+
+use std::path::Path;
+
+use crate::backend::DeviceKey;
+use crate::bench::verify_subsampled;
+use crate::cfg::{RunConfig, Sorter};
+use crate::coordinator::driver::run_distributed_sort_data;
+use crate::dtype::ElemType;
+use crate::session::{Launch, Session};
+use crate::stream::{MIN_IO_ELEMS, MIN_RUN_CHUNK};
+use crate::util::Prng;
+use crate::workload::{generate, KeyGen};
+
+/// Rank grid of the full bench (the acceptance-critical scaling axis).
+pub const FULL_RANKS: [usize; 3] = [2, 4, 8];
+/// `--quick` rank grid (the CI smoke: 2 ranks).
+pub const QUICK_RANKS: [usize; 1] = [2];
+/// Per-rank shard-bytes : budget-bytes ratios. The first entry is the
+/// acceptance-critical ≥ 8× out-of-core configuration.
+pub const FULL_RATIOS: [usize; 2] = [8, 16];
+/// `--quick` ratio grid.
+pub const QUICK_RATIOS: [usize; 1] = [8];
+
+/// Verification sample count per configuration.
+const VERIFY_SAMPLES: usize = 2048;
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct ClusterStreamRecord {
+    /// Simulated ranks in the collective.
+    pub ranks: usize,
+    /// Element type sorted.
+    pub dtype: ElemType,
+    /// Elements per rank.
+    pub elems_per_rank: usize,
+    /// Per-rank engine budget in bytes.
+    pub budget_bytes: usize,
+    /// Per-rank shard bytes / budget bytes.
+    pub ratio: usize,
+    /// Max sorted runs any rank generated locally.
+    pub runs_max: usize,
+    /// Max merge passes any rank ran locally.
+    pub merge_passes_max: usize,
+    /// Total bytes spilled by rank-local sorts (intermediate runs + the
+    /// parked sorted shards), summed over ranks.
+    pub local_spilled_bytes: u64,
+    /// Total bytes spilled buffering exchange runs, summed over ranks.
+    pub exchange_spilled_bytes: u64,
+    /// Output positions bitwise-verified against the single-node sort.
+    pub verified: usize,
+    /// Splitter refinement rounds used.
+    pub rounds_used: usize,
+    /// Simulated end-to-end makespan (seconds).
+    pub sim_secs: f64,
+    /// Throughput in bytes / simulated second (the paper's unit).
+    pub bytes_per_sim_sec: f64,
+    /// Host wall seconds the whole collective took.
+    pub wall_secs: f64,
+}
+
+/// The full bench outcome.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStreamReport {
+    /// Elements per rank.
+    pub elems_per_rank: usize,
+    /// Host threads per rank-local streaming session.
+    pub threads: usize,
+    /// Spill medium of the streaming ranks.
+    pub spill: &'static str,
+    /// The launch knobs the per-chunk engines ran with.
+    pub launch: Launch,
+    /// All measured rows.
+    pub records: Vec<ClusterStreamRecord>,
+}
+
+impl ClusterStreamReport {
+    /// Find a record by rank count, dtype and budget ratio.
+    pub fn get(
+        &self,
+        ranks: usize,
+        dtype: ElemType,
+        ratio: usize,
+    ) -> Option<&ClusterStreamRecord> {
+        self.records
+            .iter()
+            .find(|r| r.ranks == ranks && r.dtype == dtype && r.ratio == ratio)
+    }
+
+    /// Serialise as JSON (`BENCH_cluster_stream.json`, schema version 1).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"version\": 1,\n");
+        s.push_str(&format!(
+            "  \"elems_per_rank\": {},\n  \"threads\": {},\n  \"spill\": \"{}\",\n",
+            self.elems_per_rank, self.threads, self.spill
+        ));
+        s.push_str(&format!("  \"launch\": {},\n", crate::bench::launch_json(&self.launch)));
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"ranks\": {}, \"dtype\": \"{}\", \"elems_per_rank\": {}, \
+                 \"budget_bytes\": {}, \"ratio\": {}, \"runs_max\": {}, \
+                 \"merge_passes_max\": {}, \"local_spilled_bytes\": {}, \
+                 \"exchange_spilled_bytes\": {}, \"verified\": {}, \"rounds_used\": {}, \
+                 \"sim_secs\": {:.9}, \"gbps\": {:.6}, \"wall_secs\": {:.6}}}{}\n",
+                r.ranks,
+                r.dtype.name(),
+                r.elems_per_rank,
+                r.budget_bytes,
+                r.ratio,
+                r.runs_max,
+                r.merge_passes_max,
+                r.local_spilled_bytes,
+                r.exchange_spilled_bytes,
+                r.verified,
+                r.rounds_used,
+                r.sim_secs,
+                r.bytes_per_sim_sec / 1e9,
+                r.wall_secs,
+                if i + 1 == self.records.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+/// Run one (ranks, ratio) configuration for dtype `K` and append the
+/// verified row.
+fn bench_config<K: KeyGen + DeviceKey>(
+    base: &RunConfig,
+    ranks: usize,
+    ratio: usize,
+    report: &mut ClusterStreamReport,
+) -> anyhow::Result<()> {
+    let dtype = K::ELEM;
+    let shard_bytes = base.elems_per_rank * K::KEY_BYTES;
+    let budget_bytes = (shard_bytes / ratio).max(1);
+    let mut cfg = base.clone();
+    cfg.ranks = ranks;
+    cfg.dtype = dtype;
+    cfg.sorter = Sorter::External;
+    cfg.stream.budget_bytes = Some(budget_bytes);
+    eprintln!(
+        "-- bench-cluster-stream {dtype} ranks={ranks} n/rank={} budget={budget_bytes}B \
+         (x{ratio}) spill={}",
+        cfg.elems_per_rank,
+        if cfg.stream.spill_memory { "memory" } else { "disk" },
+    );
+
+    let (out, outcomes) = run_distributed_sort_data::<K>(&cfg, None)?;
+
+    // Correctness gate 1: bitwise vs one single-node Session::sort of
+    // the identical dataset (the driver's shard generation is
+    // deterministic in (seed, rank)).
+    let got: Vec<K> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+    let mut root = Prng::new(cfg.seed);
+    let mut want: Vec<K> = Vec::with_capacity(ranks * cfg.elems_per_rank);
+    for r in 0..ranks {
+        let mut rng = root.fork(r as u64);
+        want.extend(generate::<K>(&mut rng, cfg.dist, cfg.elems_per_rank));
+    }
+    let session = Session::threaded(cfg.host_threads).with_defaults(cfg.launch.clone());
+    session.sort(&mut want, None)?;
+    let verified = verify_subsampled(&got, &want, VERIFY_SAMPLES, cfg.seed ^ 0xC157)?;
+    drop(got);
+    drop(want);
+
+    // Correctness gate 2: every rank ran the streamed pipeline under
+    // the configured budget (pipeline-shape accounting).
+    let budget_elems = (budget_bytes / K::KEY_BYTES).max(2 * MIN_IO_ELEMS);
+    let run_chunk_cap = (budget_elems / 3).max(MIN_RUN_CHUNK);
+    let mut runs_max = 0usize;
+    let mut merge_passes_max = 0usize;
+    let mut local_spilled = 0u64;
+    let mut exchange_spilled = 0u64;
+    for (r, o) in outcomes.iter().enumerate() {
+        let st = o
+            .stream
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("rank {r}: external rank without stream stats"))?;
+        anyhow::ensure!(
+            st.budget_bytes == budget_bytes,
+            "rank {r}: ran budget {} instead of {budget_bytes}",
+            st.budget_bytes
+        );
+        anyhow::ensure!(
+            st.local.run_chunk_elems <= run_chunk_cap,
+            "rank {r}: run chunk {} exceeds the budget derivation cap {run_chunk_cap}",
+            st.local.run_chunk_elems
+        );
+        if ratio >= 8 {
+            anyhow::ensure!(
+                st.local.runs > 1,
+                "rank {r}: x{ratio} budget must force an out-of-core local sort \
+                 ({} runs)",
+                st.local.runs
+            );
+        }
+        if !cfg.stream.spill_memory {
+            anyhow::ensure!(
+                st.local_run_bytes > 0,
+                "rank {r}: disk medium must spill the parked sorted shard"
+            );
+        }
+        runs_max = runs_max.max(st.local.runs);
+        merge_passes_max = merge_passes_max.max(st.local.merge_passes);
+        local_spilled += st.local.spilled_bytes + st.local_run_bytes;
+        exchange_spilled += st.exchange_spilled_bytes;
+    }
+
+    report.records.push(ClusterStreamRecord {
+        ranks,
+        dtype,
+        elems_per_rank: cfg.elems_per_rank,
+        budget_bytes,
+        ratio,
+        runs_max,
+        merge_passes_max,
+        local_spilled_bytes: local_spilled,
+        exchange_spilled_bytes: exchange_spilled,
+        verified,
+        rounds_used: out.rounds_used,
+        sim_secs: out.record.sim_total,
+        bytes_per_sim_sec: out.record.throughput_bps(),
+        wall_secs: out.record.wall_secs,
+    });
+    Ok(())
+}
+
+/// Run the grid: ranks × ratios × dtypes, one verified collective each.
+pub fn run_cluster_stream_bench(
+    base: &RunConfig,
+    ranks_list: &[usize],
+    ratios: &[usize],
+    dtypes: &[ElemType],
+) -> anyhow::Result<ClusterStreamReport> {
+    let mut report = ClusterStreamReport {
+        elems_per_rank: base.elems_per_rank,
+        threads: base.host_threads.max(1),
+        spill: if base.stream.spill_memory { "memory" } else { "disk" },
+        launch: base.launch.clone(),
+        records: Vec::new(),
+    };
+    for &dt in dtypes {
+        for &ranks in ranks_list {
+            for &ratio in ratios {
+                crate::dispatch_dtype!(dt, K => {
+                    bench_config::<K>(base, ranks, ratio, &mut report)?
+                });
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// CLI entry point: run the grid (`--quick` trims ranks, ratios, dtypes
+/// and the per-rank size), print a summary, and emit the JSON report.
+pub fn run_and_emit(base: &RunConfig, quick: bool, out: &Path) -> anyhow::Result<()> {
+    let dtypes: &[ElemType] =
+        if quick { &[ElemType::I32, ElemType::F64] } else { &ElemType::ALL };
+    let ranks_list: &[usize] = if quick { &QUICK_RANKS } else { &FULL_RANKS };
+    let ratios: &[usize] = if quick { &QUICK_RATIOS } else { &FULL_RATIOS };
+    let report = run_cluster_stream_bench(base, ranks_list, ratios, dtypes)?;
+    report.write_json(out)?;
+    println!(
+        "bench-cluster-stream: {} rows (n/rank={}, threads={}, spill={}) -> {}",
+        report.records.len(),
+        report.elems_per_rank,
+        report.threads,
+        report.spill,
+        out.display()
+    );
+    for r in &report.records {
+        println!(
+            "  {:<5} ranks={:<3} x{:<3} {:>8.3} GB/s sim ({} runs, {} passes, {} rounds, \
+             {} positions verified, wall {:.2}s)",
+            r.dtype.name(),
+            r.ranks,
+            r.ratio,
+            r.bytes_per_sim_sec / 1e9,
+            r.runs_max,
+            r.merge_passes_max,
+            r.rounds_used,
+            r.verified,
+            r.wall_secs,
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_rows_verify_and_json_parses() {
+        let mut base = RunConfig::default();
+        base.elems_per_rank = 12_000;
+        base.host_threads = 2;
+        base.stream.spill_memory = true;
+        let report =
+            run_cluster_stream_bench(&base, &[2], &[8], &[ElemType::I32]).unwrap();
+        assert_eq!(report.records.len(), 1);
+        let r = report.get(2, ElemType::I32, 8).unwrap();
+        // The acceptance property: each rank's shard is 8x its budget,
+        // so every rank went out of core and still verified bitwise.
+        assert!(r.runs_max > 1, "{} runs", r.runs_max);
+        assert!(r.merge_passes_max >= 1);
+        assert!(r.verified > 2);
+        assert_eq!(r.budget_bytes, 12_000 * 4 / 8);
+        let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
+        assert_eq!(j.get("version").as_usize(), Some(1));
+        assert_eq!(j.get("spill").as_str(), Some("memory"));
+        assert_eq!(j.get("results").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn disk_spill_accounts_bytes() {
+        let mut base = RunConfig::default();
+        base.elems_per_rank = 8_000;
+        base.host_threads = 2;
+        let report =
+            run_cluster_stream_bench(&base, &[2], &[8], &[ElemType::F64]).unwrap();
+        let r = report.get(2, ElemType::F64, 8).unwrap();
+        assert!(r.local_spilled_bytes > 0, "disk medium must spill locally");
+        assert!(r.verified > 2);
+    }
+}

@@ -7,10 +7,14 @@
 //! carry mean ± σ (the paper's Table II format) and optional processed
 //! bytes for GB/s reporting.
 
+pub mod cluster_stream_bench;
 pub mod runner;
 pub mod sort_bench;
 pub mod stream_bench;
 
+pub use cluster_stream_bench::{
+    run_cluster_stream_bench, ClusterStreamRecord, ClusterStreamReport,
+};
 pub use runner::{benchmark, benchmark_with_setup, BenchOpts, BenchResult, Bencher};
 pub use sort_bench::{run_sort_bench, SortBenchRecord, SortBenchReport};
 pub use stream_bench::{run_stream_bench, StreamBenchRecord, StreamBenchReport};
@@ -27,12 +31,55 @@ pub(crate) fn launch_json(l: &crate::session::Launch) -> String {
     }
     format!(
         "{{\"block_size\": {}, \"max_tasks\": {}, \"min_elems_per_task\": {}, \
-         \"par_threshold\": {}, \"switch_below\": {}, \"reuse_scratch\": {}}}",
+         \"par_threshold\": {}, \"switch_below\": {}, \"reuse_scratch\": {}, \
+         \"strict_device\": {}}}",
         opt(l.block_size),
         opt(l.max_tasks),
         opt(l.min_elems_per_task),
         opt(l.prefer_parallel_threshold),
         opt(l.switch_below),
         l.reuse_scratch_on(),
+        l.strict_device_on(),
     )
+}
+
+/// Bitwise-compare `got` against `want` at `samples` seeded positions
+/// plus both boundaries; errors on any mismatch. Returns positions
+/// checked. One helper shared by every streaming bench's correctness
+/// gate (`bench-stream`, `bench-cluster-stream`).
+pub(crate) fn verify_subsampled<K: crate::backend::DeviceKey>(
+    got: &[K],
+    want: &[K],
+    samples: usize,
+    seed: u64,
+) -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        got.len() == want.len(),
+        "streamed output has {} elements, reference has {}",
+        got.len(),
+        want.len()
+    );
+    if got.is_empty() {
+        return Ok(0);
+    }
+    let mut rng = crate::util::Prng::new(seed);
+    let mut checked = 0;
+    let mut check = |i: usize| -> anyhow::Result<()> {
+        anyhow::ensure!(
+            got[i].to_bits() == want[i].to_bits(),
+            "streamed output diverges from the in-memory reference at index {i}: \
+             {:?} vs {:?}",
+            got[i],
+            want[i],
+        );
+        Ok(())
+    };
+    check(0)?;
+    check(got.len() - 1)?;
+    checked += 2;
+    for _ in 0..samples {
+        check(rng.below(got.len() as u64) as usize)?;
+        checked += 1;
+    }
+    Ok(checked)
 }

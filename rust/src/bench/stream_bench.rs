@@ -23,11 +23,10 @@ use std::path::{Path, PathBuf};
 
 use crate::algorithms::ReduceKind;
 use crate::backend::DeviceKey;
-use crate::bench::{BenchOpts, Bencher};
+use crate::bench::{verify_subsampled, BenchOpts, Bencher};
 use crate::dtype::ElemType;
 use crate::session::{Launch, Session};
 use crate::stream::{GenSource, SliceSource, SpillMedium, StreamBudget, VecSink};
-use crate::util::Prng;
 use crate::workload::{Distribution, KeyGen};
 
 /// Dataset-bytes : budget-bytes ratios measured per dtype. The first
@@ -138,46 +137,6 @@ impl StreamBenchReport {
         std::fs::write(path, self.to_json())
             .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
     }
-}
-
-/// Bitwise-compare `got` against `want` at `samples` seeded positions
-/// plus both boundaries; errors on any mismatch. Returns positions
-/// checked.
-fn verify_subsampled<K: DeviceKey>(
-    got: &[K],
-    want: &[K],
-    samples: usize,
-    seed: u64,
-) -> anyhow::Result<usize> {
-    anyhow::ensure!(
-        got.len() == want.len(),
-        "streamed output has {} elements, reference has {}",
-        got.len(),
-        want.len()
-    );
-    if got.is_empty() {
-        return Ok(0);
-    }
-    let mut rng = Prng::new(seed);
-    let mut checked = 0;
-    let mut check = |i: usize| -> anyhow::Result<()> {
-        anyhow::ensure!(
-            got[i].to_bits() == want[i].to_bits(),
-            "streamed output diverges from the in-memory reference at index {i}: \
-             {:?} vs {:?}",
-            got[i],
-            want[i],
-        );
-        Ok(())
-    };
-    check(0)?;
-    check(got.len() - 1)?;
-    checked += 2;
-    for _ in 0..samples {
-        check(rng.below(got.len() as u64) as usize)?;
-        checked += 1;
-    }
-    Ok(checked)
 }
 
 struct DtypeGrid<'a> {

@@ -175,6 +175,11 @@ pub enum Sorter {
     /// device engine sort disjoint sub-shards concurrently and merge
     /// (`crate::hybrid`, DESIGN.md §10).
     Hybrid,
+    /// "EX": out-of-core external sorter — each rank's shard streams
+    /// through `stream::external_sort` under a memory budget, so a rank
+    /// handles shards larger than its RAM (`--local-sorter external`,
+    /// DESIGN.md §14).
+    External,
 }
 
 impl Sorter {
@@ -183,7 +188,7 @@ impl Sorter {
     pub const ALL: [Sorter; 4] =
         [Sorter::JuliaBase, Sorter::Ak, Sorter::ThrustMerge, Sorter::ThrustRadix];
 
-    /// Paper legend code ("JB", "AK", "TM", "TR", "HY").
+    /// Paper legend code ("JB", "AK", "TM", "TR", "HY", "EX").
     pub fn code(self) -> &'static str {
         match self {
             Sorter::JuliaBase => "JB",
@@ -191,6 +196,7 @@ impl Sorter {
             Sorter::ThrustMerge => "TM",
             Sorter::ThrustRadix => "TR",
             Sorter::Hybrid => "HY",
+            Sorter::External => "EX",
         }
     }
 
@@ -202,15 +208,16 @@ impl Sorter {
             "TM" | "THRUSTMERGE" => Some(Sorter::ThrustMerge),
             "TR" | "THRUSTRADIX" => Some(Sorter::ThrustRadix),
             "HY" | "HYBRID" => Some(Sorter::Hybrid),
+            "EX" | "EXTERNAL" => Some(Sorter::External),
             _ => None,
         }
     }
 
-    /// GPU-class sorter? (JB runs on a CPU rank; a hybrid rank owns a
-    /// device, so it is device-class for link selection and Fig 5
-    /// normalisation.)
+    /// GPU-class sorter? (JB runs on a CPU rank, as does the streaming
+    /// external sorter; a hybrid rank owns a device, so it is
+    /// device-class for link selection and Fig 5 normalisation.)
     pub fn is_device(self) -> bool {
-        !matches!(self, Sorter::JuliaBase)
+        !matches!(self, Sorter::JuliaBase | Sorter::External)
     }
 }
 
@@ -318,6 +325,11 @@ pub struct StreamCfg {
     /// default: the OS temp dir). Points at fast scratch storage on
     /// cluster nodes.
     pub spill_dir: Option<String>,
+    /// Per-rank engine-state budget in bytes for the external local
+    /// sorter (`budget_mb` / `--stream-budget-mb`, stored in bytes).
+    /// `None`: the driver defaults to a quarter of the per-rank shard,
+    /// so `--local-sorter external` actually streams out of core.
+    pub budget_bytes: Option<usize>,
 }
 
 impl StreamCfg {
@@ -471,6 +483,10 @@ impl RunConfig {
         if let Some(v) = doc.get("stream", "spill_dir").and_then(|v| v.as_str()) {
             self.stream.spill_dir = Some(v.to_string());
         }
+        if let Some(v) = doc.get("stream", "budget_mb").and_then(|v| v.as_f64()) {
+            anyhow::ensure!(v > 0.0, "budget_mb must be positive, got {v}");
+            self.stream.budget_bytes = Some(((v * 1e6) as usize).max(1));
+        }
         self.cluster.apply_toml(doc)?;
         Ok(())
     }
@@ -532,13 +548,20 @@ mod tests {
 
     #[test]
     fn stream_section_via_toml() {
-        let doc =
-            Toml::parse("[stream]\nspill = \"memory\"\nspill_dir = \"/scratch/ak\"\n").unwrap();
+        let doc = Toml::parse(
+            "[stream]\nspill = \"memory\"\nspill_dir = \"/scratch/ak\"\nbudget_mb = 64\n",
+        )
+        .unwrap();
         let mut cfg = RunConfig::default();
         assert!(!cfg.stream.spill_memory);
+        assert_eq!(cfg.stream.budget_bytes, None);
         cfg.apply_toml(&doc).unwrap();
         assert!(cfg.stream.spill_memory);
         assert_eq!(cfg.stream.spill_dir.as_deref(), Some("/scratch/ak"));
+        assert_eq!(cfg.stream.budget_bytes, Some(64_000_000));
+        // Non-positive budgets are rejected.
+        let bad = Toml::parse("[stream]\nbudget_mb = 0\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&bad).is_err());
         // Bad medium values are rejected.
         let bad = Toml::parse("[stream]\nspill = \"tape\"\n").unwrap();
         assert!(RunConfig::default().apply_toml(&bad).is_err());
@@ -551,6 +574,11 @@ mod tests {
         assert_eq!(Sorter::parse("hybrid"), Some(Sorter::Hybrid));
         assert_eq!(Sorter::Hybrid.code(), "HY");
         assert!(Sorter::Hybrid.is_device());
+        assert_eq!(Sorter::parse("external"), Some(Sorter::External));
+        assert_eq!(Sorter::parse("ex"), Some(Sorter::External));
+        assert_eq!(Sorter::External.code(), "EX");
+        assert!(!Sorter::External.is_device(), "external ranks are CPU-class");
+        assert_eq!(TransferMode::GpuDirect.prefix(Sorter::External), "CC");
         assert_eq!(TransferMode::GpuDirect.prefix(Sorter::Ak), "GG");
         assert_eq!(TransferMode::CpuStaged.prefix(Sorter::Ak), "GC");
         assert_eq!(TransferMode::GpuDirect.prefix(Sorter::JuliaBase), "CC");

@@ -43,6 +43,11 @@ COMMANDS
                        sort of datasets 8x/16x larger than the memory
                        budget, verified bitwise against the in-memory
                        sort (DESIGN.md §13) -> BENCH_stream.json
+  bench-cluster-stream multi-node out-of-core sweep: SIHSort with the
+                       external rank-local sorter over rank-counts x
+                       budget ratios x dtypes, verified bitwise against
+                       one Session::sort (DESIGN.md §14)
+                       -> BENCH_cluster_stream.json
   ablate               design-choice ablations (final phase, digit width,
                        samples/rank, refinement rounds)
   selftest             quick end-to-end health check
@@ -67,10 +72,17 @@ COMMON FLAGS
   --n N                element count for table2/calibrate/examples
   --threads N          host thread count: table2 rows and the hybrid
                        rank pool (sort/calibrate/figs)
-  --spill M            bench-stream: disk|memory spill medium
+  --spill M            streaming runs: disk|memory spill medium
                        (default disk; [stream] spill in TOML)
-  --spill-dir PATH     bench-stream: parent dir for the guarded spill
+  --spill-dir PATH     streaming runs: parent dir for the guarded spill
                        directory (default OS temp; [stream] spill_dir)
+  --local-sorter S     rank-local sorter by long name; `external`
+                       streams each rank's shard through the budgeted
+                       out-of-core engine (alias of --sorter EX,
+                       DESIGN.md §14)
+  --stream-budget-mb X per-rank engine-state budget in MB for the
+                       external sorter ([stream] budget_mb; default:
+                       a quarter of the per-rank shard)
 
 LAUNCH KNOBS (per-call tuning, Session/Launch API — DESIGN.md §12)
   --max-tasks N        cap host worker tasks per call
@@ -165,6 +177,10 @@ impl Cli {
         if let Some(v) = self.get("sorter") {
             cfg.sorter = Sorter::parse(v).with_context(|| format!("--sorter: unknown '{v}'"))?;
         }
+        if let Some(v) = self.get("local-sorter") {
+            cfg.sorter =
+                Sorter::parse(v).with_context(|| format!("--local-sorter: unknown '{v}'"))?;
+        }
         if let Some(v) = self.get_f64("host-fraction")? {
             anyhow::ensure!(
                 (0.0..=1.0).contains(&v),
@@ -210,6 +226,10 @@ impl Cli {
         }
         if let Some(v) = self.get("spill-dir") {
             cfg.stream.spill_dir = Some(v.to_string());
+        }
+        if let Some(v) = self.get_f64("stream-budget-mb")? {
+            anyhow::ensure!(v > 0.0, "--stream-budget-mb: expected a positive size, got {v}");
+            cfg.stream.budget_bytes = Some(((v * 1e6) as usize).max(1));
         }
         cfg.launch = self.launch_overrides(cfg.launch.clone())?;
         Ok(cfg)
@@ -312,6 +332,21 @@ mod tests {
         assert!(!default_cfg.stream.spill_memory);
         let c = Cli::parse(args("bench-stream --spill tape")).unwrap();
         assert!(c.run_config().is_err());
+    }
+
+    #[test]
+    fn local_sorter_external_flows_into_config() {
+        let c = Cli::parse(args("sort --local-sorter external --stream-budget-mb 2.5")).unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.sorter, crate::cfg::Sorter::External);
+        assert_eq!(cfg.stream.budget_bytes, Some(2_500_000));
+        // --local-sorter wins over --backend's implied sorter, like
+        // --sorter does.
+        let c = Cli::parse(args("sort --backend hybrid --local-sorter external")).unwrap();
+        assert_eq!(c.run_config().unwrap().sorter, crate::cfg::Sorter::External);
+        // Bad values error.
+        assert!(Cli::parse(args("sort --local-sorter nope")).unwrap().run_config().is_err());
+        assert!(Cli::parse(args("sort --stream-budget-mb -1")).unwrap().run_config().is_err());
     }
 
     #[test]

@@ -239,6 +239,16 @@ impl Endpoint {
         (1 << 63) | self.coll_seq
     }
 
+    /// Reserve one collective tag for a caller-driven collective built
+    /// from raw sends/recvs (e.g. the streamed chunk-at-a-time exchange
+    /// in `mpisort::exchange`). Every rank must call this at the same
+    /// point in the collective schedule — the sequence number advances
+    /// in lockstep exactly like the built-in collectives, so tags can
+    /// never cross-talk between phases.
+    pub fn collective_tag(&mut self) -> u64 {
+        self.next_coll_tag()
+    }
+
     /// Simulated times snapshot (rank -> seconds); for metrics.
     pub fn sim_time_of(&self, rank: usize) -> f64 {
         self.shared.clocks.get(rank)

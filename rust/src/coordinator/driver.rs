@@ -41,6 +41,17 @@ pub fn run_distributed_sort<K: DeviceKey + KeyGen>(
     run_distributed_sort_mixed::<K>(cfg, &sorters, runtime)
 }
 
+/// [`run_distributed_sort`] keeping the per-rank outcomes (sorted
+/// shards + streaming stats): what the cluster-stream bench and the
+/// equivalence tests verify bitwise against a single `Session::sort`.
+pub fn run_distributed_sort_data<K: DeviceKey + KeyGen>(
+    cfg: &RunConfig,
+    runtime: Option<Arc<Runtime>>,
+) -> anyhow::Result<(DistSortOutput, Vec<RankOutcome<K>>)> {
+    let sorters = vec![cfg.sorter; cfg.ranks];
+    run_distributed_sort_full::<K>(cfg, &sorters, runtime)
+}
+
 /// Heterogeneous variant: per-rank sorter assignment — the paper's
 /// CPU-GPU *co-sorting* composability demo (examples/cosort.rs) uses CPU
 /// JB ranks next to device ranks in one collective sort.
@@ -49,7 +60,27 @@ pub fn run_distributed_sort_mixed<K: DeviceKey + KeyGen>(
     sorters: &[Sorter],
     runtime: Option<Arc<Runtime>>,
 ) -> anyhow::Result<DistSortOutput> {
+    Ok(run_distributed_sort_full::<K>(cfg, sorters, runtime)?.0)
+}
+
+/// The full driver: heterogeneous sorters, outcomes returned alongside
+/// the aggregate record.
+pub fn run_distributed_sort_full<K: DeviceKey + KeyGen>(
+    cfg: &RunConfig,
+    sorters: &[Sorter],
+    runtime: Option<Arc<Runtime>>,
+) -> anyhow::Result<(DistSortOutput, Vec<RankOutcome<K>>)> {
     anyhow::ensure!(sorters.len() == cfg.ranks, "one sorter per rank");
+    // The streamed exchange speaks a chunked wire protocol (k data
+    // messages + end marker per peer) where alltoallv sends exactly one
+    // message per peer — the two cannot share a collective, so External
+    // is all-or-nothing across ranks.
+    let n_external = sorters.iter().filter(|s| matches!(s, Sorter::External)).count();
+    anyhow::ensure!(
+        n_external == 0 || n_external == sorters.len(),
+        "the external (streamed) sorter cannot mix with in-memory sorters in one \
+         collective: its chunked exchange protocol differs from alltoallv"
+    );
     anyhow::ensure!(
         K::ELEM == cfg.dtype,
         "type parameter {} disagrees with cfg.dtype {} (labels/byte counts would lie)",
@@ -102,6 +133,35 @@ pub fn run_distributed_sort_mixed<K: DeviceKey + KeyGen>(
         None
     };
 
+    // External (out-of-core) ranks: resolve the [stream] knobs once and
+    // share one StreamCtx across ranks (sessions are cheap to clone and
+    // Sync; each rank still gets its own spill stores). Default budget:
+    // a quarter of the per-rank shard — `--local-sorter external`
+    // without an explicit `--stream-budget-mb` actually streams.
+    let stream_cfg: Option<crate::mpisort::SihStreamCfg> =
+        if sorters.iter().any(|s| *s == Sorter::External) {
+            let budget = cfg
+                .stream
+                .budget_bytes
+                .unwrap_or_else(|| (cfg.elems_per_rank * cfg.dtype.size_bytes() / 4).max(1));
+            Some(crate::mpisort::SihStreamCfg {
+                budget: crate::stream::StreamBudget::bytes(budget),
+                medium: if cfg.stream.spill_memory {
+                    crate::stream::SpillMedium::Memory
+                } else {
+                    crate::stream::SpillMedium::Disk
+                },
+                spill_dir: cfg.stream.spill_dir.clone().map(std::path::PathBuf::from),
+            })
+        } else {
+            None
+        };
+    let stream_ctx: Option<crate::stream::StreamCtx> = stream_cfg.as_ref().map(|s| {
+        let session = crate::session::Session::threaded(cfg.host_threads)
+            .with_defaults(cfg.launch.clone());
+        s.ctx(session)
+    });
+
     // Shards: deterministic per (seed, rank).
     let mut root = Prng::new(cfg.seed);
     let shards: Vec<Vec<K>> = (0..cfg.ranks)
@@ -124,6 +184,7 @@ pub fn run_distributed_sort_mixed<K: DeviceKey + KeyGen>(
         final_phase: cfg.final_phase,
         devmodel: DeviceModel::new(cfg.cluster.gpu_speedup),
         launch: cfg.launch.clone(),
+        stream: stream_cfg,
     };
 
     let wall0 = Instant::now();
@@ -138,10 +199,16 @@ pub fn run_distributed_sort_mixed<K: DeviceKey + KeyGen>(
             let results = &results;
             let device_backend = device_backend.clone();
             let hybrid_engine = hybrid_engine.clone();
+            let stream_ctx = stream_ctx.clone();
             s.spawn(move || {
                 let rank = ep.rank();
                 let run = (|| {
-                    let sorter = LocalSorter::from_cfg(sorter_kind, device_backend, hybrid_engine)?;
+                    let sorter = LocalSorter::from_cfg(
+                        sorter_kind,
+                        device_backend,
+                        hybrid_engine,
+                        stream_ctx,
+                    )?;
                     let outcome = sihsort_rank(&mut ep, shard, &sorter, &sih)?;
                     let (msgs, wire) = ep.stats().snapshot();
                     Ok((outcome, ep.sim_makespan(), msgs, wire))
@@ -183,11 +250,14 @@ pub fn run_distributed_sort_mixed<K: DeviceKey + KeyGen>(
         wire_bytes: wire,
         wall_secs,
     };
-    Ok(DistSortOutput {
-        out_sizes: outcomes.iter().map(|o| o.data.len()).collect(),
-        rounds_used: outcomes.iter().map(|o| o.rounds_used).max().unwrap_or(0),
-        record,
-    })
+    Ok((
+        DistSortOutput {
+            out_sizes: outcomes.iter().map(|o| o.data.len()).collect(),
+            rounds_used: outcomes.iter().map(|o| o.rounds_used).max().unwrap_or(0),
+            record,
+        },
+        outcomes,
+    ))
 }
 
 /// Global correctness: every shard ascending, shard boundaries ordered,
@@ -339,6 +409,39 @@ mod tests {
         let out = run_distributed_sort::<f64>(&cfg, None).unwrap();
         assert_eq!(out.out_sizes.iter().sum::<usize>(), 6 * 5000);
         assert!(out.record.sim_total > 0.0);
+    }
+
+    #[test]
+    fn external_ranks_sort_out_of_core_in_collective() {
+        // EX ranks stream: a tiny budget forces multiple runs + merge
+        // passes per rank; the driver's verifier is the oracle for
+        // order + conservation, the stream stats for budget accounting.
+        let mut cfg = small_cfg();
+        cfg.sorter = Sorter::External;
+        cfg.stream.spill_memory = true;
+        cfg.stream.budget_bytes = Some(4 * 1024);
+        let (out, outcomes) =
+            run_distributed_sort_data::<i32>(&cfg, None).unwrap();
+        assert_eq!(out.out_sizes.iter().sum::<usize>(), 6 * 5000);
+        for o in &outcomes {
+            let st = o.stream.as_ref().expect("external ranks report stream stats");
+            assert_eq!(st.budget_bytes, 4 * 1024);
+            assert!(st.local.runs > 1, "5000 elems under a 1k-elem chunk must spill runs");
+            assert!(st.local.merge_passes >= 1);
+        }
+        // Mixing EX with in-memory ranks is rejected up front: the
+        // chunked exchange protocol cannot share a collective with the
+        // one-message-per-peer alltoallv.
+        let sorters = vec![
+            Sorter::External,
+            Sorter::JuliaBase,
+            Sorter::External,
+            Sorter::ThrustRadix,
+            Sorter::External,
+            Sorter::ThrustMerge,
+        ];
+        let err = run_distributed_sort_mixed::<i32>(&cfg, &sorters, None).unwrap_err();
+        assert!(format!("{err:#}").contains("cannot mix"), "{err:#}");
     }
 
     #[test]

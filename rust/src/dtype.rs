@@ -130,6 +130,17 @@ pub trait SortKey: Copy + Send + Sync + PartialOrd + fmt::Debug + 'static {
 
     /// Minimum key.
     fn min_key() -> Self;
+
+    /// IEEE-comparison canonical form: floats map `-0.0` to `+0.0` (the
+    /// one non-NaN case where IEEE `==` and the total order disagree);
+    /// everything else — integers, NaN included — is the identity.
+    /// [`crate::stream`]'s histogram binning canonicalises edges and
+    /// keys through this so a `-0.0` key never lands strictly below a
+    /// `0.0` bin edge.
+    #[inline]
+    fn canon_ieee_zero(self) -> Self {
+        self
+    }
 }
 
 impl SortKey for i16 {
@@ -230,6 +241,15 @@ impl SortKey for f32 {
     fn min_key() -> Self {
         f32::NEG_INFINITY
     }
+    #[inline]
+    fn canon_ieee_zero(self) -> Self {
+        // `-0.0 == 0.0` under IEEE; NaN compares false and passes through.
+        if self == 0.0 {
+            0.0
+        } else {
+            self
+        }
+    }
 }
 
 impl SortKey for f64 {
@@ -260,6 +280,14 @@ impl SortKey for f64 {
     }
     fn min_key() -> Self {
         f64::NEG_INFINITY
+    }
+    #[inline]
+    fn canon_ieee_zero(self) -> Self {
+        if self == 0.0 {
+            0.0
+        } else {
+            self
+        }
     }
 }
 

@@ -180,6 +180,24 @@ fn run(cli: &Cli) -> anyhow::Result<()> {
                 cfg.stream.spill_dir.clone().map(std::path::PathBuf::from),
             )
         }
+        "bench-cluster-stream" => {
+            // Multi-node x out-of-core sweep -> BENCH_cluster_stream.json
+            // (DESIGN.md §14): SIHSort with the external rank-local
+            // sorter over rank-counts x budget ratios x dtypes. Each
+            // configuration is verified bitwise against one single-node
+            // Session::sort and against the per-rank budget accounting —
+            // divergence is a hard error, which is what CI relies on.
+            let mut cfg = cli.run_config()?;
+            if !cli.has("elems-per-rank") && !cli.has("mb-per-rank") {
+                cfg.elems_per_rank = if quick { 1 << 15 } else { 1 << 17 };
+            }
+            let out = cli.get("out").unwrap_or("BENCH_cluster_stream.json").to_string();
+            accelkern::bench::cluster_stream_bench::run_and_emit(
+                &cfg,
+                quick,
+                std::path::Path::new(&out),
+            )
+        }
         "calibrate" => {
             // Measure the host:device sort throughput ratio and print the
             // hybrid co-processing split it implies (DESIGN.md §10).

@@ -3,8 +3,27 @@
 //! Partitioning a *sorted* shard at the splitters is P-1 binary searches
 //! (zero element copies — we slice). The exchange is exactly one
 //! `alltoallv`: bucket j of every rank lands on rank j.
+//!
+//! The streamed variant ([`streamed_exchange`]) keeps the same
+//! semantics for shards parked in a [`SpillRun`]: the run streams
+//! through in I/O-granule chunks, each chunk partitions at the
+//! splitters (still binary searches — chunks of a sorted run are
+//! sorted), and every non-empty sub-bucket ships immediately as one
+//! codec-encoded message. Receivers append each source's chunks to a
+//! spilled run in arrival order, so what lands is again P sorted runs —
+//! ready for the final k-way merge. The rank's own *engine* state stays
+//! a few I/O granules (one partition chunk + one decode buffer); bytes
+//! in flight ride the fabric's unbounded channels, which stand in for
+//! the network exactly as they do for `alltoallv`'s whole-bucket
+//! messages — credit-based flow control for a bounded-transport port is
+//! future work (DESIGN.md §14).
 
+use std::time::Instant;
+
+use crate::comm::Endpoint;
 use crate::dtype::SortKey;
+use crate::stream::codec;
+use crate::stream::{ChunkSource, SpillRun, SpillRunSource, SpillStore};
 
 /// Cut points of a sorted shard at the splitters (bit image): bucket `j`
 /// is `sorted[cuts[j]..cuts[j+1]]` with implicit cuts[0]=0,
@@ -33,6 +52,86 @@ pub fn buckets<'a, K: SortKey>(sorted: &'a [K], cuts: &[usize]) -> Vec<&'a [K]> 
     }
     out.push(&sorted[lo..]);
     out
+}
+
+/// Streamed chunk-at-a-time alltoallv of a sorted [`SpillRun`] (see the
+/// module docs). Collective: every rank calls this at the same point.
+/// Received bucket `j` of every source rank lands on rank `j` as one
+/// spilled sorted run per source, written into `store`. Returns the
+/// per-source runs (indexed by source rank) and the host seconds this
+/// rank spent on partition/codec compute — the caller charges those to
+/// the simulated clock (transfer time is charged by the fabric itself).
+/// The compute is timed with a plain clock rather than the fabric's
+/// compute token: the token must not be held across sends/recvs, and
+/// the per-chunk work here is I/O-dominated either way.
+pub fn streamed_exchange<K: SortKey>(
+    ep: &mut Endpoint,
+    run: &SpillRun<K>,
+    splitters_bits: &[u128],
+    io_chunk: usize,
+    store: &mut SpillStore,
+) -> anyhow::Result<(Vec<SpillRun<K>>, f64)> {
+    let p = ep.nranks();
+    debug_assert_eq!(splitters_bits.len() + 1, p, "P-1 splitters for P ranks");
+    let tag = ep.collective_tag();
+    let io_chunk = io_chunk.max(1);
+    let mut compute = 0.0f64;
+
+    // Send side: stream the run, partition each chunk, ship sub-buckets.
+    let mut src = SpillRunSource::new(run, io_chunk)?;
+    let mut buf: Vec<K> = Vec::with_capacity(io_chunk);
+    let mut payloads: Vec<Vec<u8>> = Vec::new();
+    loop {
+        let t0 = Instant::now();
+        if src.next_chunk(&mut buf, io_chunk)? == 0 {
+            break;
+        }
+        let cuts = partition_points(&buf, splitters_bits);
+        payloads.clear();
+        for b in buckets(&buf, &cuts) {
+            let mut raw = Vec::new();
+            if !b.is_empty() {
+                codec::encode_into(b, &mut raw);
+            }
+            payloads.push(raw);
+        }
+        compute += t0.elapsed().as_secs_f64();
+        for (dst, raw) in payloads.drain(..).enumerate() {
+            // Data chunks are never empty, so empty unambiguously means
+            // end-of-stream below.
+            if !raw.is_empty() {
+                ep.send_bytes(dst, tag, raw);
+            }
+        }
+    }
+    // End-of-stream marker per destination. All sends complete before
+    // any receive (the fabric's channels are unbounded), so the
+    // collective cannot deadlock.
+    for dst in 0..p {
+        ep.send_bytes(dst, tag, Vec::new());
+    }
+
+    // Receive side: append each source's chunks (in order — per-source
+    // FIFO) to one spilled run; chunks of a sorted stream concatenate
+    // to a sorted run.
+    let mut runs: Vec<SpillRun<K>> = Vec::with_capacity(p);
+    let mut decode: Vec<K> = Vec::new();
+    for src in 0..p {
+        let mut w = store.run_writer::<K>()?;
+        loop {
+            let bytes = ep.recv_bytes(src, tag);
+            if bytes.is_empty() {
+                break;
+            }
+            let t0 = Instant::now();
+            decode.clear();
+            codec::decode_into(&bytes, &mut decode)?;
+            w.push_chunk(&decode)?;
+            compute += t0.elapsed().as_secs_f64();
+        }
+        runs.push(w.finish()?);
+    }
+    Ok((runs, compute))
 }
 
 #[cfg(test)]
@@ -78,5 +177,76 @@ mod tests {
         assert_eq!(cuts, vec![0]);
         let bs = buckets(&xs, &cuts);
         assert!(bs.iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    fn streamed_exchange_matches_in_memory_partition() {
+        use crate::cfg::TransferMode;
+        use crate::cluster::ClusterSpec;
+        use crate::comm::Fabric;
+        use crate::dtype::bits_eq;
+        use crate::stream::{SpillMedium, SpillStore};
+
+        let p = 3usize;
+        let shards: Vec<Vec<i32>> = (0..p)
+            .map(|r| {
+                let mut v: Vec<i32> =
+                    generate(&mut Prng::new(r as u64 + 1), Distribution::Uniform, 4000);
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let splitters: Vec<u128> = vec![(-400_000i32).to_bits(), 300_000i32.to_bits()];
+
+        let eps = Fabric::new(ClusterSpec::baskerville(), TransferMode::GpuDirect, vec![false; p]);
+        let results: Vec<Vec<Vec<i32>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .zip(shards.clone())
+                .map(|(mut ep, shard)| {
+                    let splitters = splitters.clone();
+                    s.spawn(move || {
+                        // Tiny io granule: many chunk messages per peer.
+                        let mut store = SpillStore::new(SpillMedium::Memory, None);
+                        let run = store.write_run(&shard).unwrap();
+                        let (runs, secs) =
+                            streamed_exchange(&mut ep, &run, &splitters, 256, &mut store)
+                                .unwrap();
+                        assert!(secs >= 0.0);
+                        (
+                            ep.rank(),
+                            runs.iter()
+                                .map(|r| {
+                                    let mut c = r.cursor(64).unwrap();
+                                    let mut out = Vec::new();
+                                    while let Some(k) = c.head() {
+                                        out.push(k);
+                                        c.advance().unwrap();
+                                    }
+                                    out
+                                })
+                                .collect::<Vec<Vec<i32>>>(),
+                        )
+                    })
+                })
+                .collect();
+            let mut res = vec![Vec::new(); p];
+            for h in handles {
+                let (rank, runs) = h.join().unwrap();
+                res[rank] = runs;
+            }
+            res
+        });
+
+        // Rank d's run from source s must be exactly source s's bucket d.
+        for (d, per_source) in results.iter().enumerate() {
+            assert_eq!(per_source.len(), p);
+            for (src, got) in per_source.iter().enumerate() {
+                let cuts = partition_points(&shards[src], &splitters);
+                let want = buckets(&shards[src], &cuts)[d].to_vec();
+                assert!(bits_eq(got, &want), "dst {d} src {src}");
+                assert!(crate::dtype::is_sorted_total(got));
+            }
+        }
     }
 }

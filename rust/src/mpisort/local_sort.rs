@@ -10,6 +10,11 @@
 //! * `Hybrid` — a [`Session`] over the hybrid engine: the rank's host
 //!   thread pool and its device engine sort disjoint sub-shards
 //!   concurrently and merge (`crate::hybrid::co_sort`).
+//! * `External` — the out-of-core engine: a [`StreamCtx`] (session +
+//!   [`crate::stream::StreamBudget`] + spill medium) whose
+//!   `external_sort` lets the rank sort a shard larger than its memory
+//!   budget; `sihsort_rank` routes such ranks through the fully
+//!   streamed pipeline (DESIGN.md §14).
 //!
 //! Each sorter measures its own wall time; the caller converts it to
 //! simulated device time through `cluster::DeviceModel`.
@@ -21,6 +26,7 @@ use crate::baselines;
 use crate::cfg::Sorter;
 use crate::hybrid::HybridEngine;
 use crate::session::{Launch, Session};
+use crate::stream::{SliceSource, StreamCtx, VecSink};
 
 /// A rank's local sorting engine.
 #[derive(Clone)]
@@ -35,15 +41,22 @@ pub enum LocalSorter {
     ThrustRadix,
     /// Hybrid CPU–GPU co-sort session ("HY", DESIGN.md §10).
     Hybrid(Session),
+    /// Out-of-core external sorter ("EX", DESIGN.md §14): the rank's
+    /// shard streams through `StreamCtx::external_sort` under the
+    /// context's memory budget instead of sorting in place.
+    External(StreamCtx),
 }
 
 impl LocalSorter {
     /// Build from config; `Ak` needs the device backend handle, `Hybrid`
-    /// a prepared engine (the driver calibrates it once per run).
+    /// a prepared engine (the driver calibrates it once per run),
+    /// `External` a prepared streaming context (budget + spill medium,
+    /// built from the `[stream]` config by the driver).
     pub fn from_cfg(
         sorter: Sorter,
         device_backend: Option<Backend>,
         hybrid: Option<HybridEngine>,
+        stream: Option<StreamCtx>,
     ) -> anyhow::Result<Self> {
         Ok(match sorter {
             Sorter::JuliaBase => LocalSorter::JuliaBase,
@@ -56,6 +69,9 @@ impl LocalSorter {
             Sorter::Hybrid => LocalSorter::Hybrid(Session::hybrid(hybrid.ok_or_else(|| {
                 anyhow::anyhow!("hybrid sorter requires a prepared HybridEngine")
             })?)),
+            Sorter::External => LocalSorter::External(stream.ok_or_else(|| {
+                anyhow::anyhow!("external sorter requires a prepared StreamCtx (budget/spill)")
+            })?),
         })
     }
 
@@ -67,13 +83,15 @@ impl LocalSorter {
             LocalSorter::ThrustMerge => "TM",
             LocalSorter::ThrustRadix => "TR",
             LocalSorter::Hybrid(_) => "HY",
+            LocalSorter::External(_) => "EX",
         }
     }
 
     /// Runs on a device (GPU-class) rank? Hybrid ranks own a device, so
-    /// they are device-class for link selection and the device model.
+    /// they are device-class for link selection and the device model;
+    /// JB and the out-of-core external sorter are CPU-class.
     pub fn is_device(&self) -> bool {
-        !matches!(self, LocalSorter::JuliaBase)
+        !matches!(self, LocalSorter::JuliaBase | LocalSorter::External(_))
     }
 
     /// Sort in place under the run's [`Launch`] knobs; returns measured
@@ -95,6 +113,19 @@ impl LocalSorter {
                 launch.tasks_for(crate::backend::threaded::default_threads(), xs.len()),
                 launch.par_threshold_or(baselines::radix::RADIX_PAR_MIN),
             ),
+            // In-place slice entry point for the external engine (the
+            // FinalPhase::Sort path and tests). `sihsort_rank` never
+            // takes this for its main phase — external ranks run the
+            // fully streamed pipeline instead (DESIGN.md §14).
+            LocalSorter::External(ctx) => {
+                let sorted = {
+                    let mut src = SliceSource::new(&xs[..]);
+                    let mut sink = VecSink::new();
+                    ctx.external_sort(&mut src, &mut sink, Some(launch))?;
+                    sink.out
+                };
+                xs.copy_from_slice(&sorted);
+            }
         }
         Ok(t0.elapsed().as_secs_f64())
     }
@@ -160,16 +191,37 @@ mod tests {
 
     #[test]
     fn ak_requires_backend() {
-        assert!(LocalSorter::from_cfg(Sorter::Ak, None, None).is_err());
-        assert!(LocalSorter::from_cfg(Sorter::JuliaBase, None, None).is_ok());
+        assert!(LocalSorter::from_cfg(Sorter::Ak, None, None, None).is_err());
+        assert!(LocalSorter::from_cfg(Sorter::JuliaBase, None, None, None).is_ok());
     }
 
     #[test]
     fn hybrid_requires_engine() {
-        assert!(LocalSorter::from_cfg(Sorter::Hybrid, None, None).is_err());
+        assert!(LocalSorter::from_cfg(Sorter::Hybrid, None, None, None).is_err());
         let eng = HybridEngine::new(HybridPlan::new(0.5), 2, None);
-        let s = LocalSorter::from_cfg(Sorter::Hybrid, None, Some(eng)).unwrap();
+        let s = LocalSorter::from_cfg(Sorter::Hybrid, None, Some(eng), None).unwrap();
         assert_eq!(s.code(), "HY");
         assert!(s.is_device());
+    }
+
+    #[test]
+    fn external_requires_ctx_and_sorts_out_of_core() {
+        use crate::stream::StreamBudget;
+        assert!(LocalSorter::from_cfg(Sorter::External, None, None, None).is_err());
+        // Tiny budget + in-memory spill: the slice path must still be a
+        // faithful sort (multiple runs merged back bitwise-correct).
+        let ctx = Session::threaded(2)
+            .stream(StreamBudget::bytes(64))
+            .in_memory_spill()
+            .run_chunk_elems(1000);
+        let s = LocalSorter::from_cfg(Sorter::External, None, None, Some(ctx)).unwrap();
+        assert_eq!(s.code(), "EX");
+        assert!(!s.is_device(), "external ranks are CPU-class");
+        let xs: Vec<i64> = generate(&mut Prng::new(4), Distribution::DupHeavy, 5000);
+        let mut want = xs.clone();
+        want.sort_unstable();
+        let mut got = xs.clone();
+        s.sort(&mut got, &Launch::default()).unwrap();
+        assert_eq!(got, want);
     }
 }

@@ -23,6 +23,14 @@
 //! "counters hidden at the end of integer arrays" trick — and exactly
 //! one all-to-all data exchange. The proptests assert global order,
 //! permutation preservation and bucket balance.
+//!
+//! Ranks using [`LocalSorter::External`] run the same schedule fully
+//! *streamed* (DESIGN.md §14): the local sort is
+//! `stream::external_sort` into a spilled run, sampling and splitter
+//! rank measurement re-read that run chunk by chunk, and the exchange
+//! ships codec-encoded chunks — so each simulated rank handles shards
+//! larger than its memory budget (the paper-scale cluster ×
+//! out-of-core composition).
 
 pub mod exchange;
 pub mod local_sort;
@@ -30,4 +38,4 @@ pub mod sihsort;
 pub mod splitters;
 
 pub use local_sort::LocalSorter;
-pub use sihsort::{sihsort_rank, RankOutcome, SihConfig};
+pub use sihsort::{sihsort_rank, RankOutcome, RankStreamStats, SihConfig, SihStreamCfg};

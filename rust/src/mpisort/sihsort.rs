@@ -1,20 +1,84 @@
 //! The per-rank SIHSort algorithm (see module docs in `mod.rs`).
+//!
+//! Two pipelines share the collective schedule:
+//!
+//! * the classic in-memory rank ([`sihsort_rank`]'s main body) sorts
+//!   its shard in place and partitions slices, and
+//! * the **streamed** rank (`LocalSorter::External`, DESIGN.md §14)
+//!   never holds its shard sorted in memory: the local sort is
+//!   `stream::external_sort` into a spilled run, splitter sampling and
+//!   rank measurement re-read that run chunk by chunk
+//!   (`splitters::regular_samples_streamed` /
+//!   `splitters::local_ranks_streamed` over the streaming histogram),
+//!   the exchange ships codec-encoded chunks
+//!   (`exchange::streamed_exchange`), and the final phase k-way merges
+//!   the received spilled runs. Engine state stays bounded by the
+//!   [`crate::stream::StreamBudget`]; only the rank's *output* shard
+//!   materialises (it is the caller-owned result, same rule as a
+//!   `VecSink`).
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::backend::DeviceKey;
+use crate::baselines::kmerge::KmergePull;
 use crate::baselines::merge_path;
 use crate::cfg::FinalPhase;
 use crate::cluster::DeviceModel;
 use crate::comm::Endpoint;
 use crate::dtype::SortKey;
+use crate::session::Session;
+use crate::stream::external_sort::merge_group_to_store;
+use crate::stream::{
+    ExternalSortStats, RunSink, SliceSource, SpillMedium, SpillRun, SpillStore, StreamBudget,
+    StreamCtx,
+};
 
-use super::exchange::{buckets, partition_points};
+use super::exchange::{buckets, partition_points, streamed_exchange};
 use super::local_sort::LocalSorter;
 use super::splitters::{
-    initial_brackets, initial_candidates, local_ranks, pack_candidates, refine, regular_samples,
-    unpack_candidates, RefineState,
+    initial_brackets, initial_candidates, local_ranks, local_ranks_streamed, pack_candidates,
+    refine, regular_samples, regular_samples_streamed, unpack_candidates, RefineState,
 };
+
+/// Streaming knobs for out-of-core ranks: the per-rank engine budget
+/// and where spilled runs live. The driver fills this from the
+/// `[stream]` config / `--stream-budget-mb` / `--spill*` flags whenever
+/// the run uses `--local-sorter external`, and builds the matching
+/// [`StreamCtx`] for [`LocalSorter::External`] through
+/// [`SihStreamCfg::ctx`]. Inside `sihsort_rank` it also provides the
+/// exchange-side spill store.
+#[derive(Clone, Debug)]
+pub struct SihStreamCfg {
+    /// Engine-state budget of each rank's streaming pipelines.
+    pub budget: StreamBudget,
+    /// Spill medium for the rank-local sort and the exchange.
+    pub medium: SpillMedium,
+    /// Parent directory for guarded spill dirs (disk medium).
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl SihStreamCfg {
+    /// Build the rank-local [`StreamCtx`] these knobs describe over
+    /// `session`'s engines.
+    pub fn ctx(&self, session: Session) -> StreamCtx {
+        let mut ctx = session.stream(self.budget);
+        match self.medium {
+            SpillMedium::Memory => ctx = ctx.in_memory_spill(),
+            SpillMedium::Disk => {
+                if let Some(dir) = &self.spill_dir {
+                    ctx = ctx.spill_parent(dir.clone());
+                }
+            }
+        }
+        ctx
+    }
+
+    /// A fresh spill store on these knobs (exchange side).
+    pub fn store(&self) -> SpillStore {
+        SpillStore::new(self.medium, self.spill_dir.clone())
+    }
+}
 
 /// SIHSort tuning parameters.
 #[derive(Clone, Debug)]
@@ -25,13 +89,18 @@ pub struct SihConfig {
     pub refine_rounds: usize,
     /// Bucket balance tolerance (fraction of ideal bucket size).
     pub balance_tol: f64,
-    /// Final-phase strategy (k-way merge vs full re-sort).
+    /// Final-phase strategy (k-way merge vs full re-sort). Streamed
+    /// (`External`) ranks always merge: their received runs are spilled,
+    /// and a second full external sort would only redo the merge's work.
     pub final_phase: FinalPhase,
     /// Compute-time scaling for device ranks.
     pub devmodel: DeviceModel,
     /// Per-call tuning knobs for the rank-local sorts and the final
     /// recombine (`Session`/`Launch` API, DESIGN.md §12).
     pub launch: crate::session::Launch,
+    /// Streaming knobs for out-of-core ranks (`None` on in-memory
+    /// runs). See [`SihStreamCfg`].
+    pub stream: Option<SihStreamCfg>,
 }
 
 impl Default for SihConfig {
@@ -43,8 +112,28 @@ impl Default for SihConfig {
             final_phase: FinalPhase::Merge,
             devmodel: DeviceModel::default(),
             launch: crate::session::Launch::default(),
+            stream: None,
         }
     }
+}
+
+/// What a streamed (out-of-core) rank did, for budget/spill accounting
+/// — the bench and the equivalence tests assert against these.
+#[derive(Clone, Debug)]
+pub struct RankStreamStats {
+    /// The rank-local external sort's pipeline shape (runs, merge
+    /// passes, intermediate spill volume, budget-derived granules).
+    pub local: ExternalSortStats,
+    /// Bytes the rank spilled parking its sorted shard (phase-1 output
+    /// run; 0 on the memory medium).
+    pub local_run_bytes: u64,
+    /// Bytes the rank spilled buffering received exchange runs, plus
+    /// the final phase's fan-in-capping pre-merge passes when the rank
+    /// count exceeds the budget's merge fan-in (0 on the memory
+    /// medium).
+    pub exchange_spilled_bytes: u64,
+    /// The engine-state budget the rank ran under.
+    pub budget_bytes: usize,
 }
 
 /// Per-rank result: the globally-sorted shard + phase breakdown
@@ -65,6 +154,9 @@ pub struct RankOutcome<K> {
     pub wall_secs: f64,
     /// Splitter refinement rounds actually used (leader-reported).
     pub rounds_used: usize,
+    /// Streaming accounting when this rank ran out-of-core
+    /// (`LocalSorter::External`); `None` on the in-memory pipelines.
+    pub stream: Option<RankStreamStats>,
 }
 
 const LEADER: usize = 0;
@@ -78,6 +170,10 @@ pub fn sihsort_rank<K: DeviceKey>(
     sorter: &LocalSorter,
     cfg: &SihConfig,
 ) -> anyhow::Result<RankOutcome<K>> {
+    if let LocalSorter::External(ctx) = sorter {
+        // Out-of-core rank: the fully streamed pipeline (DESIGN.md §14).
+        return sihsort_rank_streamed(ep, shard, ctx, cfg);
+    }
     let wall0 = Instant::now();
     let p = ep.nranks();
     let is_dev = sorter.is_device();
@@ -158,17 +254,193 @@ pub fn sihsort_rank<K: DeviceKey>(
         sim_final,
         wall_secs: wall0.elapsed().as_secs_f64(),
         rounds_used,
+        stream: None,
     })
 }
 
-/// Collective splitter selection; returns P-1 splitters in bit-image
-/// space and the number of refinement rounds used.
+/// The streamed SIHSort rank: same collective schedule as
+/// [`sihsort_rank`], but the shard never sits sorted in memory — it is
+/// external-sorted into a spilled run, re-read chunk by chunk for
+/// splitter work, exchanged chunk-at-a-time, and the received runs are
+/// k-way merged into the output (pre-merged in fan-in groups when the
+/// rank count exceeds the budget's merge fan-in). Engine state is
+/// bounded by the [`StreamCtx`]'s budget throughout; only the input
+/// shard (owned by the driver), the output shard (the result), and the
+/// in-flight exchange chunks in the fabric's channels (the network
+/// stand-in — see `exchange`) live outside it.
+fn sihsort_rank_streamed<K: DeviceKey>(
+    ep: &mut Endpoint,
+    shard: Vec<K>,
+    ctx: &StreamCtx,
+    cfg: &SihConfig,
+) -> anyhow::Result<RankOutcome<K>> {
+    let wall0 = Instant::now();
+    // External ranks are CPU-class (`LocalSorter::is_device`).
+    let is_dev = false;
+    let charge = |ep: &Endpoint, measured: f64| {
+        ep.advance(cfg.devmodel.compute_time(measured, is_dev));
+    };
+    let io_chunk = ctx.plan::<K>().io_chunk_elems;
+
+    // ---- Phase 1: budget-bounded rank-local external sort -------------
+    let t_phase = ep.now();
+    let mut local_store = ctx.store();
+    let (sorted_res, secs) = {
+        let store = &mut local_store;
+        ep.measured(move || -> anyhow::Result<(SpillRun<K>, ExternalSortStats)> {
+            let mut src = SliceSource::new(&shard);
+            let mut sink = RunSink::new(store)?;
+            let stats = ctx.external_sort(&mut src, &mut sink, Some(&cfg.launch))?;
+            Ok((sink.into_run()?, stats))
+        })
+    };
+    let (run, local_stats) = sorted_res?;
+    charge(ep, secs);
+    ep.barrier();
+    let sim_local_sort = ep.now() - t_phase;
+    let local_run_bytes = local_store.bytes_spilled();
+
+    // ---- Phase 2+3: splitters over the streamed shard -----------------
+    let t_phase = ep.now();
+    let local_len = run.elems() as u64;
+    let (splitters, rounds_used) = select_splitters_core(
+        ep,
+        cfg,
+        is_dev,
+        local_len,
+        || {
+            let mut src = crate::stream::SpillRunSource::new(&run, io_chunk)?;
+            Ok(regular_samples_streamed(&mut src, local_len, cfg.samples_per_rank, io_chunk)?
+                .into_iter()
+                .map(|x| x.to_bits())
+                .collect())
+        },
+        |cands| local_ranks_streamed(ctx, &run, cands, io_chunk, &cfg.launch),
+    )?;
+    let sim_splitters = ep.now() - t_phase;
+
+    // ---- Phase 4+5: streamed chunk-at-a-time exchange -----------------
+    let t_phase = ep.now();
+    let mut xstore = match &cfg.stream {
+        Some(s) => s.store(),
+        None => ctx.store(),
+    };
+    let (recv_runs, secs) = streamed_exchange(ep, &run, &splitters, io_chunk, &mut xstore)?;
+    // The parked input shard is consumed: free its spill before merging.
+    drop(run);
+    drop(local_store);
+    charge(ep, secs);
+    let sim_exchange = ep.now() - t_phase;
+
+    // ---- Phase 6: final k-way merge of the received runs --------------
+    let t_phase = ep.now();
+    let plan = ctx.plan::<K>();
+    let (data_res, secs) = {
+        let xstore_ref = &mut xstore;
+        ep.measured(move || -> anyhow::Result<Vec<K>> {
+            // The rank count can exceed the budget's merge fan-in, and
+            // every open cursor owns an io-granule refill buffer — so
+            // pre-merge received runs in fan-in-sized groups (the same
+            // rule as `external_sort`'s intermediate passes) until one
+            // merge fits the budget.
+            let mut runs = recv_runs;
+            while runs.len() > plan.fan_in {
+                let mut merged: Vec<SpillRun<K>> = Vec::new();
+                while !runs.is_empty() {
+                    let take = plan.fan_in.min(runs.len());
+                    let group: Vec<SpillRun<K>> = runs.drain(..take).collect();
+                    if group.len() == 1 {
+                        merged.extend(group);
+                        continue;
+                    }
+                    merged.push(merge_group_to_store(&group, xstore_ref, &plan)?);
+                }
+                runs = merged;
+            }
+            let mut cursors = Vec::with_capacity(runs.len());
+            for r in &runs {
+                cursors.push(r.cursor(io_chunk)?);
+            }
+            let mut merge = KmergePull::new(cursors);
+            let total: usize = runs.iter().map(SpillRun::elems).sum();
+            let mut data = Vec::with_capacity(total);
+            let mut chunk: Vec<K> = Vec::with_capacity(io_chunk);
+            loop {
+                chunk.clear();
+                if merge.next_chunk(&mut chunk, io_chunk)? == 0 {
+                    break;
+                }
+                data.extend_from_slice(&chunk);
+            }
+            Ok(data)
+        })
+    };
+    let data = data_res?;
+    let exchange_spilled_bytes = xstore.bytes_spilled();
+    drop(xstore);
+    charge(ep, secs);
+    ep.barrier();
+    let sim_final = ep.now() - t_phase;
+
+    Ok(RankOutcome {
+        data,
+        sim_local_sort,
+        sim_splitters,
+        sim_exchange,
+        sim_final,
+        wall_secs: wall0.elapsed().as_secs_f64(),
+        rounds_used,
+        stream: Some(RankStreamStats {
+            local: local_stats,
+            local_run_bytes,
+            exchange_spilled_bytes,
+            budget_bytes: ctx.budget().get(),
+        }),
+    })
+}
+
+/// Collective splitter selection over an in-memory sorted shard;
+/// returns P-1 splitters in bit-image space and the number of
+/// refinement rounds used.
 fn select_splitters<K: SortKey>(
     ep: &mut Endpoint,
     sorted: &[K],
     cfg: &SihConfig,
     is_dev: bool,
 ) -> anyhow::Result<(Vec<u128>, usize)> {
+    select_splitters_core(
+        ep,
+        cfg,
+        is_dev,
+        sorted.len() as u64,
+        || {
+            Ok(regular_samples(sorted, cfg.samples_per_rank)
+                .into_iter()
+                .map(|x| x.to_bits())
+                .collect())
+        },
+        |cands| Ok(local_ranks(sorted, cands)),
+    )
+}
+
+/// The collective splitter-selection schedule, generic over how a rank
+/// measures itself: `sample` draws this rank's regular samples (bit
+/// images) and `ranks_of` the local ranks of candidate splitters. The
+/// in-memory path indexes its sorted slice; the streamed path re-reads
+/// its spilled run ([`sihsort_rank_streamed`]). Both measurements run
+/// under the fabric's compute token.
+fn select_splitters_core<S, R>(
+    ep: &mut Endpoint,
+    cfg: &SihConfig,
+    is_dev: bool,
+    local_len: u64,
+    mut sample: S,
+    mut ranks_of: R,
+) -> anyhow::Result<(Vec<u128>, usize)>
+where
+    S: FnMut() -> anyhow::Result<Vec<u128>>,
+    R: FnMut(&[u128]) -> anyhow::Result<Vec<u64>>,
+{
     let p = ep.nranks();
     if p == 1 {
         return Ok((Vec::new(), 0));
@@ -178,18 +450,14 @@ fn select_splitters<K: SortKey>(
     };
 
     // Sampling: gather p regular samples (as bit images) at the leader.
-    let (samples, secs) = ep.measured(|| {
-        regular_samples(sorted, cfg.samples_per_rank)
-            .into_iter()
-            .map(|x| x.to_bits())
-            .collect::<Vec<u128>>()
-    });
+    let (samples, secs) = ep.measured(&mut sample);
+    let samples = samples?;
     charge(ep, secs);
     let sample_bytes = u128s_to_bytes(&samples);
     let gathered = ep.gather_bytes(LEADER, sample_bytes);
 
     // Global element count rides an allreduce (one u64).
-    let total = ep.allreduce_u64(sorted.len() as u64, crate::comm::collectives::ReduceOp::Sum);
+    let total = ep.allreduce_u64(local_len, crate::comm::collectives::ReduceOp::Sum);
 
     let mut leader_state: Option<RefineState> = if ep.rank() == LEADER {
         let pooled: Vec<u128> =
@@ -218,8 +486,9 @@ fn select_splitters<K: SortKey>(
         }
         rounds_used = round + 1;
 
-        // Every rank measures exact local ranks (searchsortedlast).
-        let (lranks, secs) = ep.measured(|| local_ranks(sorted, &candidates));
+        // Every rank measures its local candidate ranks.
+        let (lranks, secs) = ep.measured(|| ranks_of(&candidates));
+        let lranks = lranks?;
         charge(ep, secs);
         let gathered = ep.gather_bytes(LEADER, u64s_to_bytes(&lranks));
 

@@ -14,7 +14,10 @@
 //! Everything runs on the key *bit image* (u128): one code path for all
 //! six dtypes, floats included (monotone transform).
 
+use crate::backend::DeviceKey;
 use crate::dtype::SortKey;
+use crate::session::Launch;
+use crate::stream::{ChunkSource, SpillRun, SpillRunSource, StreamCtx};
 
 /// Leader-side state for one refinement round.
 #[derive(Clone, Debug)]
@@ -68,6 +71,80 @@ pub fn local_ranks<K: SortKey>(sorted: &[K], candidates: &[u128]) -> Vec<u64> {
         .iter()
         .map(|&c| sorted.partition_point(|x| x.to_bits() <= c) as u64)
         .collect()
+}
+
+/// [`regular_samples`] over a *streamed* sorted shard: one forward pass
+/// over the [`ChunkSource`], picking the elements at the same quantile
+/// offsets the in-memory sampler indexes, never holding more than one
+/// chunk. `total` is the stream's element count (a [`SpillRun`] knows
+/// its length).
+pub fn regular_samples_streamed<K: SortKey>(
+    src: &mut dyn ChunkSource<K>,
+    total: u64,
+    p: usize,
+    chunk: usize,
+) -> anyhow::Result<Vec<K>> {
+    if total == 0 || p == 0 {
+        return Ok(Vec::new());
+    }
+    // Identical targets to `regular_samples`: (i + 1) / (p + 1)
+    // quantiles, clamped interior (non-decreasing, duplicates allowed).
+    let targets: Vec<u64> = (0..p as u64)
+        .map(|i| (((i + 1) * total) / (p as u64 + 1)).min(total - 1))
+        .collect();
+    let mut out = Vec::with_capacity(p);
+    let mut buf: Vec<K> = Vec::new();
+    let mut pos = 0u64;
+    let mut t = 0usize;
+    while t < targets.len() && src.next_chunk(&mut buf, chunk.max(1))? > 0 {
+        let end = pos + buf.len() as u64;
+        while t < targets.len() && targets[t] < end {
+            out.push(buf[(targets[t] - pos) as usize]);
+            t += 1;
+        }
+        pos = end;
+    }
+    anyhow::ensure!(t == targets.len(), "stream ended at {pos} before the last sample target");
+    Ok(out)
+}
+
+/// Candidate-rank measurement over a *streamed* sorted shard, reusing
+/// the streaming histogram: the candidate bit images (clamped into the
+/// dtype's image space) become the bin edges, and the cumulative bin
+/// counts are the candidate ranks. The histogram bins by
+/// `searchsorted_last` against the edges, so the measured rank is the
+/// *strict* count `#{x < c}` — off from the in-memory
+/// `searchsortedlast` rank by the candidate's duplicate mass (and, on
+/// float dtypes, by the histogram's IEEE `-0.0 == 0.0` edge rule).
+/// That slack only steers bucket-balance refinement; the partition
+/// itself (`exchange::partition_points`) stays exact total-order `<=`,
+/// so global sortedness never depends on it.
+pub fn local_ranks_streamed<K: DeviceKey>(
+    ctx: &StreamCtx,
+    run: &SpillRun<K>,
+    candidates: &[u128],
+    io_chunk: usize,
+    launch: &Launch,
+) -> anyhow::Result<Vec<u64>> {
+    // The dtype's image space is the full KEY_BYTES-wide integer range
+    // (for floats that tops out at the max-payload NaN, above
+    // `max_key().to_bits()` = +inf); clamping into it keeps `from_bits`
+    // exact for every in-range candidate.
+    let max_img = if K::KEY_BYTES >= 16 {
+        u128::MAX
+    } else {
+        (1u128 << (8 * K::KEY_BYTES)) - 1
+    };
+    let edges: Vec<K> = candidates.iter().map(|&c| K::from_bits(c.min(max_img))).collect();
+    let mut src = SpillRunSource::new(run, io_chunk)?;
+    let counts = ctx.stream_histogram(&mut src, &edges, Some(launch))?;
+    let mut ranks = Vec::with_capacity(candidates.len());
+    let mut acc = 0u64;
+    for c in counts.iter().take(candidates.len()) {
+        acc += c;
+        ranks.push(acc);
+    }
+    Ok(ranks)
 }
 
 /// One leader-side refinement step: move candidates whose global rank is
@@ -212,6 +289,52 @@ mod tests {
             }
         }
         assert!(worst < 0.05, "imbalance {worst}");
+    }
+
+    #[test]
+    fn streamed_samples_match_in_memory() {
+        use crate::stream::SliceSource;
+        let mut xs: Vec<i64> = generate(&mut Prng::new(9), Distribution::Uniform, 4321);
+        xs.sort_unstable();
+        let want = regular_samples(&xs, 16);
+        for chunk in [7usize, 100, 10_000] {
+            let got = regular_samples_streamed(
+                &mut SliceSource::new(&xs),
+                xs.len() as u64,
+                16,
+                chunk,
+            )
+            .unwrap();
+            assert_eq!(got, want, "chunk {chunk}");
+        }
+        // Degenerate inputs mirror the in-memory sampler.
+        let empty: Vec<i64> = vec![];
+        assert!(regular_samples_streamed(&mut SliceSource::new(&empty), 0, 8, 64)
+            .unwrap()
+            .is_empty());
+        assert!(regular_samples_streamed(&mut SliceSource::new(&xs), xs.len() as u64, 0, 64)
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn streamed_ranks_match_strict_counts() {
+        use crate::session::Session;
+        use crate::stream::{SpillMedium, SpillStore, StreamBudget};
+        let mut xs: Vec<i32> = generate(&mut Prng::new(10), Distribution::DupHeavy, 3000);
+        xs.sort_unstable();
+        let mut store = SpillStore::new(SpillMedium::Memory, None);
+        let run = store.write_run(&xs).unwrap();
+        let ctx = Session::native().stream(StreamBudget::mib(1));
+        let cands: Vec<u128> = xs.iter().step_by(500).map(|x| x.to_bits()).collect();
+        let got =
+            local_ranks_streamed(&ctx, &run, &cands, 128, &Launch::default()).unwrap();
+        for (c, r) in cands.iter().zip(&got) {
+            // Histogram ranks are the strict count #{x < c} (see docs).
+            assert_eq!(*r as usize, xs.iter().filter(|x| x.to_bits() < *c).count());
+            // ...and never exceed the partition's `<=` count.
+            assert!(*r as usize <= xs.iter().filter(|x| x.to_bits() <= *c).count());
+        }
     }
 
     #[test]

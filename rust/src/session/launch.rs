@@ -52,6 +52,14 @@ pub struct Launch {
     /// `true` ([`Launch::merged_over`]); `None` means "session policy,
     /// else off" — read it through [`Launch::reuse_scratch_on`].
     pub reuse_scratch: Option<bool>,
+    /// Device sessions: fail with a typed
+    /// [`super::AkError::UnsupportedBackend`] instead of silently
+    /// running the host engine when the device cannot serve a call
+    /// (no artifact for the dtype/size class, multi-chunk `sort_pairs`
+    /// plan). Off (`None`/`false`), the fallback still happens but is
+    /// recorded in [`super::SessionMetrics::device_fallbacks`]. Same
+    /// tri-state rules as `reuse_scratch`.
+    pub strict_device: Option<bool>,
 }
 
 impl Launch {
@@ -103,6 +111,19 @@ impl Launch {
         self.reuse_scratch.unwrap_or(false)
     }
 
+    /// Error (typed) instead of host-falling-back when the device
+    /// cannot serve a call (see the field docs).
+    pub fn strict_device(mut self, on: bool) -> Launch {
+        self.strict_device = Some(on);
+        self
+    }
+
+    /// Resolved strict-device flag (`None` means off: fall back and
+    /// record a [`super::SessionMetrics::device_fallbacks`] event).
+    pub fn strict_device_on(&self) -> bool {
+        self.strict_device.unwrap_or(false)
+    }
+
     /// Worker count for a host engine call over `n` elements, given the
     /// backend's base thread width: `base` capped by `max_tasks`, then by
     /// `n / min_elems_per_task` (always at least 1).
@@ -140,6 +161,7 @@ impl Launch {
                 .or(base.prefer_parallel_threshold),
             switch_below: self.switch_below.or(base.switch_below),
             reuse_scratch: self.reuse_scratch.or(base.reuse_scratch),
+            strict_device: self.strict_device.or(base.strict_device),
         }
     }
 }
@@ -185,5 +207,14 @@ mod tests {
         assert!(!m.reuse_scratch_on());
         // And an unset call inherits the policy.
         assert!(Launch::new().merged_over(&pool_on).reuse_scratch_on());
+    }
+
+    #[test]
+    fn strict_device_merges_like_the_other_tristates() {
+        assert!(!Launch::new().strict_device_on());
+        assert!(Launch::new().strict_device(true).strict_device_on());
+        let policy = Launch::new().strict_device(true);
+        assert!(Launch::new().merged_over(&policy).strict_device_on());
+        assert!(!Launch::new().strict_device(false).merged_over(&policy).strict_device_on());
     }
 }

@@ -40,7 +40,6 @@ pub mod launch;
 pub use error::{AkError, AkResult};
 pub use launch::{Launch, DEFAULT_PAR_THRESHOLD};
 
-use std::any::{Any, TypeId};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -66,6 +65,7 @@ pub struct SessionMetrics {
     elems: AtomicU64,
     scratch_hits: AtomicU64,
     scratch_misses: AtomicU64,
+    device_fallbacks: AtomicU64,
 }
 
 impl SessionMetrics {
@@ -93,28 +93,86 @@ impl SessionMetrics {
     pub fn scratch_misses(&self) -> u64 {
         self.scratch_misses.load(Ordering::Relaxed)
     }
+
+    /// Calls a device session served on its host engine because the
+    /// device could not run them (missing artifact, multi-chunk
+    /// `sort_pairs` plan). `Launch::strict_device` turns these into
+    /// typed errors instead.
+    pub fn device_fallbacks(&self) -> u64 {
+        self.device_fallbacks.load(Ordering::Relaxed)
+    }
 }
 
-/// Type-erased reusable temporary buffers, keyed by element type. One
-/// buffer is retained per type; `Launch::reuse_scratch` opts a call in.
+/// The retained allocation of a cleared `Vec<T>`, type-erased down to
+/// its layout so any element type with the same (size, alignment) can
+/// adopt it. Only ever constructed from an empty vector, so there are
+/// no live elements to drop or transmute.
+struct RawScratch {
+    ptr: std::ptr::NonNull<u8>,
+    cap_elems: usize,
+    elem_size: usize,
+    elem_align: usize,
+}
+
+// SAFETY: the allocation is exclusively owned (taken out of a `Vec<T>`
+// where `T: Send`) and holds no initialised elements.
+unsafe impl Send for RawScratch {}
+
+impl Drop for RawScratch {
+    fn drop(&mut self) {
+        // SAFETY: `ptr` came from a `Vec<T>` with `size_of::<T>() ==
+        // elem_size`, `align_of::<T>() == elem_align` and capacity
+        // `cap_elems`, which is exactly this layout's allocation.
+        unsafe {
+            let layout = std::alloc::Layout::from_size_align_unchecked(
+                self.elem_size * self.cap_elems,
+                self.elem_align,
+            );
+            std::alloc::dealloc(self.ptr.as_ptr(), layout);
+        }
+    }
+}
+
+/// Reusable temporary buffers, keyed by element *layout* — (byte size,
+/// alignment) — rather than `TypeId`, so mixed-dtype workloads of the
+/// same width (an `f32` sort after an `i32` sort, `f64` after `i64`)
+/// share one buffer instead of allocating parallel ones. One buffer is
+/// retained per layout class; `Launch::reuse_scratch` opts a call in.
 #[derive(Default)]
 struct ScratchPool {
-    bufs: Mutex<HashMap<TypeId, Box<dyn Any + Send>>>,
+    bufs: Mutex<HashMap<(usize, usize), RawScratch>>,
 }
 
 impl ScratchPool {
     fn take<T: Send + 'static>(&self) -> Option<Vec<T>> {
-        self.bufs
-            .lock()
-            .unwrap()
-            .remove(&TypeId::of::<Vec<T>>())
-            .and_then(|b| b.downcast::<Vec<T>>().ok())
-            .map(|b| *b)
+        let key = (std::mem::size_of::<T>(), std::mem::align_of::<T>());
+        if key.0 == 0 {
+            return None; // ZSTs never allocate; nothing to reuse.
+        }
+        let buf = self.bufs.lock().unwrap().remove(&key)?;
+        let buf = std::mem::ManuallyDrop::new(buf);
+        // SAFETY: same (size, align) key means `Vec::<T>` with capacity
+        // `cap_elems` describes the identical allocation the buffer was
+        // taken from; length 0 means no element is ever read
+        // uninitialised.
+        Some(unsafe { Vec::from_raw_parts(buf.ptr.as_ptr() as *mut T, 0, buf.cap_elems) })
     }
 
     fn put<T: Send + 'static>(&self, mut v: Vec<T>) {
         v.clear();
-        self.bufs.lock().unwrap().insert(TypeId::of::<Vec<T>>(), Box::new(v));
+        if std::mem::size_of::<T>() == 0 || v.capacity() == 0 {
+            return; // nothing worth retaining (and nothing to dealloc).
+        }
+        let key = (std::mem::size_of::<T>(), std::mem::align_of::<T>());
+        let mut v = std::mem::ManuallyDrop::new(v);
+        let raw = RawScratch {
+            // SAFETY: a non-zero-capacity Vec's pointer is non-null.
+            ptr: unsafe { std::ptr::NonNull::new_unchecked(v.as_mut_ptr() as *mut u8) },
+            cap_elems: v.capacity(),
+            elem_size: key.0,
+            elem_align: key.1,
+        };
+        self.bufs.lock().unwrap().insert(key, raw);
     }
 }
 
@@ -349,20 +407,35 @@ impl Session {
             Backend::Native => Ok(self.host_perm(xs, 1, &l)),
             Backend::Threaded(t) => Ok(self.host_perm(xs, *t, &l)),
             Backend::Device(dev) => {
-                if K::XLA {
-                    if let Ok(plan) = dev.registry().plan("sort_pairs", K::ELEM, xs.len()) {
-                        if plan.chunks == 1 {
-                            let vals: Vec<i32> = (0..xs.len() as i32).collect();
-                            let (_, perm) = dev
-                                .sort_pairs(xs, &vals)
-                                .map_err(|e| AkError::device("sortperm", e))?;
-                            return Ok(perm.into_iter().map(|v| v as u32).collect());
+                let plan_chunks = if K::XLA {
+                    dev.registry().plan("sort_pairs", K::ELEM, xs.len()).ok().map(|p| p.chunks)
+                } else {
+                    None
+                };
+                match device_sortperm_route(K::XLA, plan_chunks) {
+                    DeviceRoute::Device => {
+                        let vals: Vec<i32> = (0..xs.len() as i32).collect();
+                        let (_, perm) = dev
+                            .sort_pairs(xs, &vals)
+                            .map_err(|e| AkError::device("sortperm", e))?;
+                        Ok(perm.into_iter().map(|v| v as u32).collect())
+                    }
+                    DeviceRoute::HostFallback(why) => {
+                        // The device cannot serve this call: the fallback
+                        // is never silent — strict sessions get a typed
+                        // error, the rest a metrics event (ROADMAP's
+                        // "multi-chunk sortperm" deferred item).
+                        if l.strict_device_on() {
+                            return Err(AkError::unsupported_backend(
+                                &self.backend,
+                                "sortperm",
+                                why,
+                            ));
                         }
+                        self.state.metrics.device_fallbacks.fetch_add(1, Ordering::Relaxed);
+                        Ok(self.host_perm(xs, 1, &l))
                     }
                 }
-                // No pair artifact for this dtype/size class: host path
-                // (the permutation is host-consumed anyway).
-                Ok(self.host_perm(xs, 1, &l))
             }
             // The pair buffer cannot straddle two engines without an
             // extra gather; hybrid sortperm runs on the host pool
@@ -879,6 +952,38 @@ impl Session {
     }
 }
 
+/// Where a device-session `sortperm` call runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DeviceRoute {
+    /// The single-chunk `sort_pairs` artifact serves it.
+    Device,
+    /// The host engine serves it; the payload says why (strict sessions
+    /// turn this into a typed error, others into a metrics event).
+    HostFallback(&'static str),
+}
+
+/// Pure routing decision for `Session::device` sortperm: `plan_chunks`
+/// is the registry's `sort_pairs` chunking plan for this input, `None`
+/// when no artifact family exists (or the dtype has none at all).
+fn device_sortperm_route(xla: bool, plan_chunks: Option<usize>) -> DeviceRoute {
+    if !xla {
+        return DeviceRoute::HostFallback(
+            "no XLA artifact family for this dtype (sortperm runs on the host engine)",
+        );
+    }
+    match plan_chunks {
+        Some(1) => DeviceRoute::Device,
+        Some(_) => DeviceRoute::HostFallback(
+            "sort_pairs plan needs multiple chunks: the chunked pair path is not \
+             dispatched on the device (ROADMAP deferred item) — use a host session \
+             or a size class that fits one chunk",
+        ),
+        None => DeviceRoute::HostFallback(
+            "no sort_pairs artifact for this dtype/size class",
+        ),
+    }
+}
+
 impl std::fmt::Debug for Session {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "Session({})", self.backend.name())
@@ -906,6 +1011,31 @@ mod tests {
     }
 
     #[test]
+    fn scratch_pool_reuses_across_same_layout_dtypes() {
+        // The pool is keyed by (size, align), not TypeId: an f32 sort's
+        // merge scratch must be adopted by a following i32 sort (same
+        // 4-byte layout) instead of allocating a parallel buffer.
+        let s = Session::threaded(4);
+        let l = Launch::new().reuse_scratch(true).prefer_parallel_threshold(64);
+        let mut f: Vec<f32> = generate(&mut Prng::new(7), Distribution::Uniform, 20_000);
+        s.sort(&mut f, Some(&l)).unwrap();
+        assert_eq!(s.metrics().scratch_misses(), 1);
+        let mut u: Vec<i32> = generate(&mut Prng::new(8), Distribution::Uniform, 20_000);
+        s.sort(&mut u, Some(&l)).unwrap();
+        assert!(crate::dtype::is_sorted_total(&f) && crate::dtype::is_sorted_total(&u));
+        assert_eq!(
+            s.metrics().scratch_misses(),
+            1,
+            "i32 after f32 must reuse the same-layout buffer, not allocate"
+        );
+        assert_eq!(s.metrics().scratch_hits(), 1);
+        // A wider dtype is a different layout class: new allocation.
+        let mut d: Vec<f64> = generate(&mut Prng::new(9), Distribution::Uniform, 20_000);
+        s.sort(&mut d, Some(&l)).unwrap();
+        assert_eq!(s.metrics().scratch_misses(), 2);
+    }
+
+    #[test]
     fn clones_share_the_metrics_sink() {
         let s = Session::native();
         let c = s.clone();
@@ -913,6 +1043,20 @@ mod tests {
         c.sort(&mut xs, None).unwrap();
         assert_eq!(s.metrics().calls(), 1);
         assert_eq!(s.metrics().elems(), 3);
+    }
+
+    #[test]
+    fn device_sortperm_route_is_explicit_about_fallbacks() {
+        // Single-chunk pair plans run on the device; everything else is
+        // an explicit host fallback (typed error under strict_device, a
+        // `device_fallbacks` metrics event otherwise) — never silent.
+        assert_eq!(device_sortperm_route(true, Some(1)), DeviceRoute::Device);
+        assert!(matches!(
+            device_sortperm_route(true, Some(4)),
+            DeviceRoute::HostFallback(why) if why.contains("multiple chunks")
+        ));
+        assert!(matches!(device_sortperm_route(true, None), DeviceRoute::HostFallback(_)));
+        assert!(matches!(device_sortperm_route(false, None), DeviceRoute::HostFallback(_)));
     }
 
     #[test]

@@ -133,8 +133,10 @@ impl StreamCtx {
 }
 
 /// Merge `group` (≥ 2 runs) into one new spilled run, streaming through
-/// I/O-granule chunks.
-fn merge_group_to_store<K: DeviceKey>(
+/// I/O-granule chunks. Also the fan-in-capping engine of the streamed
+/// SIHSort rank's final phase (`mpisort::sihsort`), which pre-merges
+/// received runs when the rank count exceeds the plan's fan-in.
+pub(crate) fn merge_group_to_store<K: DeviceKey>(
     group: &[SpillRun<K>],
     store: &mut SpillStore,
     plan: &StreamPlan,

@@ -83,15 +83,29 @@ impl StreamCtx {
     }
 
     /// Histogram of the stream over ascending `edges`: `counts[i]`
-    /// is the number of keys `x` with `edges[i-1] <= x < edges[i]` in the
-    /// total order (`counts[0]` is the underflow bin, the last slot the
-    /// overflow bin — NaN lands there), so `counts.len() == edges.len() + 1`.
+    /// is the number of keys `x` with `edges[i-1] <= x < edges[i]`
+    /// (`counts[0]` is the underflow bin, the last slot the overflow
+    /// bin), so `counts.len() == edges.len() + 1`. Edge comparison uses
+    /// IEEE semantics on float dtypes — `-0.0` and `0.0` are the same
+    /// value, so a `-0.0` key counts at/above a `0.0` edge (and vice
+    /// versa); both are canonicalised through
+    /// [`crate::dtype::SortKey::canon_ieee_zero`] before binning. NaN
+    /// has no IEEE order, so it keeps its total-order position above
+    /// `+inf` and always lands in the overflow bin.
     pub fn stream_histogram<K: DeviceKey>(
         &self,
         src: &mut dyn ChunkSource<K>,
         edges: &[K],
         launch: Option<&Launch>,
     ) -> AkResult<Vec<u64>> {
+        let is_float = matches!(K::ELEM, crate::dtype::ElemType::F32 | crate::dtype::ElemType::F64);
+        let canon: Vec<K>;
+        let edges: &[K] = if is_float {
+            canon = edges.iter().map(|e| e.canon_ieee_zero()).collect();
+            &canon
+        } else {
+            edges
+        };
         if !crate::dtype::is_sorted_total(edges) {
             return Err(AkError::shape(
                 "stream_histogram",
@@ -102,6 +116,11 @@ impl StreamCtx {
         let mut counts = vec![0u64; edges.len() + 1];
         let mut buf: Vec<K> = Vec::new();
         while src.next_chunk(&mut buf, chunk)? > 0 {
+            if is_float {
+                for x in buf.iter_mut() {
+                    *x = x.canon_ieee_zero();
+                }
+            }
             let bins = self.session.searchsorted_last(edges, &buf, launch)?;
             for b in bins {
                 counts[b as usize] += 1;
@@ -248,6 +267,32 @@ mod tests {
         // Empty edge list: everything lands in the single bin.
         let all = small_ctx().stream_histogram(&mut SliceSource::new(&xs), &[], None).unwrap();
         assert_eq!(all, vec![xs.len() as u64]);
+    }
+
+    #[test]
+    fn histogram_zero_edges_use_ieee_semantics() {
+        // -0.0 == 0.0 under IEEE: a -0.0 key must count at/above a 0.0
+        // edge (the total order alone would put it strictly below), and
+        // a -0.0 edge must behave exactly like a 0.0 edge.
+        let keys = vec![-1.0f64, -0.0, 0.0, 1.0];
+        let got =
+            small_ctx().stream_histogram(&mut SliceSource::new(&keys), &[0.0f64], None).unwrap();
+        assert_eq!(got, vec![1, 3], "-0.0 lands at/above the 0.0 edge");
+        let got =
+            small_ctx().stream_histogram(&mut SliceSource::new(&keys), &[-0.0f64], None).unwrap();
+        assert_eq!(got, vec![1, 3], "a -0.0 edge equals a 0.0 edge");
+        // Edges that differ only in zero sign canonicalise to duplicates
+        // and are accepted ([0.0, -0.0] is IEEE-ascending).
+        let got = small_ctx()
+            .stream_histogram(&mut SliceSource::new(&keys), &[0.0f64, -0.0], None)
+            .unwrap();
+        assert_eq!(got.iter().sum::<u64>(), keys.len() as u64);
+        assert_eq!(got[0], 1);
+        // NaN keeps its documented overflow-bin position.
+        let nan = vec![f64::NAN, -0.0];
+        let got =
+            small_ctx().stream_histogram(&mut SliceSource::new(&nan), &[0.0f64], None).unwrap();
+        assert_eq!(got, vec![0, 2]);
     }
 
     #[test]

@@ -49,7 +49,7 @@ pub mod spill;
 
 pub use external_sort::ExternalSortStats;
 pub use source::{ChunkSink, ChunkSource, FileSink, FileSource, GenSource, SliceSource, VecSink};
-pub use spill::{SpillMedium, SpillRun, SpillStore, TempDirGuard};
+pub use spill::{RunSink, SpillMedium, SpillRun, SpillRunSource, SpillStore, TempDirGuard};
 
 use std::path::PathBuf;
 

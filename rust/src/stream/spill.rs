@@ -25,6 +25,7 @@ use anyhow::Context;
 use crate::baselines::kmerge::RunCursor;
 use crate::dtype::SortKey;
 use crate::stream::codec;
+use crate::stream::source::{ChunkSink, ChunkSource};
 
 /// Where spilled runs live.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -253,6 +254,80 @@ impl<K: SortKey> RunWriter<'_, K> {
     }
 }
 
+/// [`ChunkSource`] view of a parked [`SpillRun`]: lets the streaming
+/// folds re-read a run under the same bounded-memory contract the merge
+/// cursors obey. The streamed SIHSort rank reads its sorted shard back
+/// this way — splitter sampling and histogram rank measurement consume
+/// the run chunk by chunk instead of materialising it (DESIGN.md §14).
+pub struct SpillRunSource<'r, K: SortKey> {
+    cur: SpillCursor<'r, K>,
+    remaining: u64,
+}
+
+impl<'r, K: SortKey> SpillRunSource<'r, K> {
+    /// Open a chunked reader over `run`; `buf_elems` bounds the refill
+    /// buffer for file-backed runs.
+    pub fn new(run: &'r SpillRun<K>, buf_elems: usize) -> anyhow::Result<Self> {
+        Ok(SpillRunSource { cur: run.cursor(buf_elems)?, remaining: run.elems() as u64 })
+    }
+}
+
+impl<K: SortKey> ChunkSource<K> for SpillRunSource<'_, K> {
+    fn len_hint(&self) -> Option<u64> {
+        // Remaining, which equals the total before the first read.
+        Some(self.remaining)
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<K>, max: usize) -> anyhow::Result<usize> {
+        buf.clear();
+        while buf.len() < max {
+            match self.cur.head() {
+                Some(k) => {
+                    buf.push(k);
+                    self.cur.advance()?;
+                }
+                None => break,
+            }
+        }
+        self.remaining -= buf.len() as u64;
+        Ok(buf.len())
+    }
+}
+
+/// [`ChunkSink`] writing one spilled
+/// run into a [`SpillStore`] — the glue that lets `external_sort` park
+/// its output as a run later pipeline stages (the streamed exchange,
+/// the splitter sampler) re-read under the budget. The pipeline's
+/// `finish` call seals the run; take it with [`RunSink::into_run`].
+pub struct RunSink<'s, K: SortKey> {
+    writer: Option<RunWriter<'s, K>>,
+    run: Option<SpillRun<K>>,
+}
+
+impl<'s, K: SortKey> RunSink<'s, K> {
+    /// Start a new run in `store`.
+    pub fn new(store: &'s mut SpillStore) -> anyhow::Result<Self> {
+        Ok(RunSink { writer: Some(store.run_writer()?), run: None })
+    }
+
+    /// The sealed run (errors if the pipeline never called `finish`).
+    pub fn into_run(self) -> anyhow::Result<SpillRun<K>> {
+        self.run.ok_or_else(|| anyhow::anyhow!("RunSink::into_run before finish"))
+    }
+}
+
+impl<K: SortKey> ChunkSink<K> for RunSink<'_, K> {
+    fn push_chunk(&mut self, chunk: &[K]) -> anyhow::Result<()> {
+        self.writer.as_mut().context("RunSink already finished")?.push_chunk(chunk)
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        let w = self.writer.take().context("RunSink finished twice")?;
+        self.run = Some(w.finish()?);
+        Ok(())
+    }
+}
+
 /// Bounded-memory [`RunCursor`] over a [`SpillRun`]: in-memory runs
 /// borrow their vector; file runs hold one decoded buffer of at most
 /// `buf_elems` keys and refill from disk as the merge drains them.
@@ -353,6 +428,37 @@ mod tests {
         assert_eq!(run.elems(), xs.len());
         assert!(bits_eq(&drain(&run, 97), &xs));
         assert_eq!(store.bytes_spilled(), codec::encoded_len::<f64>(xs.len()) as u64);
+    }
+
+    #[test]
+    fn run_sink_and_source_roundtrip() {
+        use crate::stream::source::{ChunkSink, ChunkSource};
+        let xs = sorted_keys(3, 4000);
+        for medium in [SpillMedium::Memory, SpillMedium::Disk] {
+            let mut store = SpillStore::new(medium, None);
+            let mut sink = RunSink::new(&mut store).unwrap();
+            for c in xs.chunks(333) {
+                sink.push_chunk(c).unwrap();
+            }
+            ChunkSink::finish(&mut sink).unwrap();
+            let run = sink.into_run().unwrap();
+            assert_eq!(run.elems(), xs.len());
+            let mut src = SpillRunSource::new(&run, 128).unwrap();
+            assert_eq!(src.len_hint(), Some(xs.len() as u64));
+            let mut out = Vec::new();
+            let mut buf = Vec::new();
+            while src.next_chunk(&mut buf, 97).unwrap() > 0 {
+                out.extend_from_slice(&buf);
+            }
+            assert!(bits_eq(&out, &xs), "{medium:?}");
+        }
+    }
+
+    #[test]
+    fn run_sink_guards_the_finish_protocol() {
+        let mut store = SpillStore::new(SpillMedium::Memory, None);
+        let sink = RunSink::<i32>::new(&mut store).unwrap();
+        assert!(sink.into_run().is_err(), "into_run before finish must error");
     }
 
     #[test]

@@ -1,0 +1,368 @@
+//! Cluster × out-of-core equivalence suite (DESIGN.md §14).
+//!
+//! The contract under test: a multi-rank SIHSort whose ranks use the
+//! streamed external local sorter (`LocalSorter::External`) produces,
+//! concatenated in rank order, *bitwise* what one single-node
+//! `Session::sort` produces on the same dataset — across rank counts,
+//! budget regimes that force the in-core / 1-pass / multi-pass
+//! rank-local pipelines, both spill media, four dtypes, adversarial
+//! value patterns (NaN payloads, −0.0, duplicate-heavy, skewed
+//! distributions with non-uniform splitters) — and that every spill
+//! byte is cleaned up, on success and mid-pipeline panic alike.
+
+use accelkern::backend::DeviceKey;
+use accelkern::cfg::{RunConfig, Sorter, TransferMode};
+use accelkern::cluster::ClusterSpec;
+use accelkern::comm::Fabric;
+use accelkern::coordinator::driver::run_distributed_sort_data;
+use accelkern::dtype::{bits_eq, is_sorted_total, SortKey};
+use accelkern::mpisort::{sihsort_rank, LocalSorter, RankStreamStats, SihConfig, SihStreamCfg};
+use accelkern::session::Session;
+use accelkern::stream::{
+    ChunkSource, RunSink, SpillMedium, StreamBudget, TempDirGuard,
+};
+use accelkern::util::Prng;
+use accelkern::workload::{generate, Distribution, KeyGen};
+
+/// Elements per rank throughout the suite (big enough that the tiny
+/// budgets below force real multi-run pipelines, small enough to keep
+/// the cross-product fast).
+const N_PER_RANK: usize = 16_384;
+
+/// Budget regime for the rank-local external sort, with the pipeline
+/// shape it must force at [`N_PER_RANK`] (derivations: run chunk =
+/// max(budget_elems/3, 1024), fan-in = clamp(budget_elems/1024, 2, 128)
+/// — DESIGN.md §13).
+#[derive(Clone, Copy, Debug)]
+enum Regime {
+    /// Budget ≥ 3n: one run, no merge pass, no intermediate spill.
+    InCore,
+    /// 12288 budget elems → 4 runs at fan-in 12: exactly one pass.
+    OnePass,
+    /// 2048 budget elems → 16 runs at fan-in 2: 3 intermediate passes
+    /// + final.
+    MultiPass,
+}
+
+impl Regime {
+    fn budget_elems(self) -> usize {
+        match self {
+            Regime::InCore => 3 * N_PER_RANK + 64,
+            Regime::OnePass => 12_288,
+            Regime::MultiPass => 2_048,
+        }
+    }
+
+    fn check(self, rank: usize, st: &RankStreamStats) {
+        match self {
+            Regime::InCore => {
+                assert_eq!(st.local.runs, 1, "rank {rank}: in-core budget must give one run");
+                assert_eq!(st.local.merge_passes, 0, "rank {rank}");
+                assert_eq!(st.local.spilled_bytes, 0, "rank {rank}: no intermediate spill");
+            }
+            Regime::OnePass => {
+                assert_eq!(st.local.runs, 4, "rank {rank}");
+                assert_eq!(st.local.merge_passes, 1, "rank {rank}");
+            }
+            Regime::MultiPass => {
+                assert_eq!(st.local.runs, 16, "rank {rank}");
+                assert!(
+                    st.local.merge_passes >= 2,
+                    "rank {rank}: fan-in 2 over 16 runs needs multiple passes, got {}",
+                    st.local.merge_passes
+                );
+            }
+        }
+    }
+}
+
+fn cluster_cfg<K: SortKey>(
+    ranks: usize,
+    dist: Distribution,
+    regime: Regime,
+    mem_spill: bool,
+) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.ranks = ranks;
+    cfg.elems_per_rank = N_PER_RANK;
+    cfg.dtype = K::ELEM;
+    cfg.dist = dist;
+    cfg.sorter = Sorter::External;
+    cfg.host_threads = 2;
+    cfg.stream.spill_memory = mem_spill;
+    cfg.stream.budget_bytes = Some(regime.budget_elems() * K::KEY_BYTES);
+    cfg
+}
+
+/// Single-node reference: the driver's deterministic per-rank shards,
+/// concatenated and sorted by one in-memory session.
+fn reference<K: KeyGen + DeviceKey>(cfg: &RunConfig) -> Vec<K> {
+    let mut root = Prng::new(cfg.seed);
+    let mut all: Vec<K> = Vec::with_capacity(cfg.ranks * cfg.elems_per_rank);
+    for r in 0..cfg.ranks {
+        let mut rng = root.fork(r as u64);
+        all.extend(generate::<K>(&mut rng, cfg.dist, cfg.elems_per_rank));
+    }
+    Session::threaded(2).sort(&mut all, None).unwrap();
+    all
+}
+
+/// Run the driver, assert bitwise equivalence + per-rank budget
+/// accounting for the regime.
+fn check_cluster<K: KeyGen + DeviceKey>(
+    ranks: usize,
+    dist: Distribution,
+    regime: Regime,
+    mem_spill: bool,
+) {
+    let cfg = cluster_cfg::<K>(ranks, dist, regime, mem_spill);
+    let (_, outcomes) = run_distributed_sort_data::<K>(&cfg, None)
+        .unwrap_or_else(|e| panic!("{:?} ranks={ranks} {dist:?} {regime:?}: {e:#}", K::ELEM));
+    let got: Vec<K> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+    let want = reference::<K>(&cfg);
+    assert!(
+        bits_eq(&got, &want),
+        "{:?} ranks={ranks} {dist:?} {regime:?} mem={mem_spill}: output diverges from \
+         the single-node sort",
+        K::ELEM
+    );
+    let budget_elems = regime.budget_elems();
+    for (r, o) in outcomes.iter().enumerate() {
+        let st = o.stream.as_ref().expect("external ranks report stream stats");
+        assert_eq!(st.budget_bytes, budget_elems * K::KEY_BYTES);
+        // Budget accounting: the run-generation chunk never exceeds its
+        // budget derivation (a third of the budget, floored at 1024).
+        assert!(
+            st.local.run_chunk_elems <= (budget_elems / 3).max(1024),
+            "rank {r}: run chunk {} breaks the budget derivation",
+            st.local.run_chunk_elems
+        );
+        regime.check(r, st);
+        if !mem_spill && !matches!(regime, Regime::InCore) {
+            assert!(st.local.spilled_bytes > 0, "rank {r}: disk medium must spill runs");
+        }
+        if !mem_spill {
+            assert!(st.local_run_bytes > 0, "rank {r}: the parked shard spills on disk");
+        }
+    }
+}
+
+// ---- the acceptance cross: ranks × regimes × media × dtypes ---------------
+
+#[test]
+fn equivalence_i32_across_ranks_budgets_media() {
+    for ranks in [2usize, 4, 8] {
+        for regime in [Regime::OnePass, Regime::MultiPass] {
+            for mem in [true, false] {
+                check_cluster::<i32>(ranks, Distribution::Uniform, regime, mem);
+            }
+        }
+    }
+}
+
+#[test]
+fn equivalence_i64_across_ranks_budgets_media() {
+    for ranks in [2usize, 4, 8] {
+        for regime in [Regime::OnePass, Regime::MultiPass] {
+            for mem in [true, false] {
+                check_cluster::<i64>(ranks, Distribution::Uniform, regime, mem);
+            }
+        }
+    }
+}
+
+#[test]
+fn equivalence_f32_across_ranks_budgets_media() {
+    for ranks in [2usize, 4, 8] {
+        for regime in [Regime::OnePass, Regime::MultiPass] {
+            for mem in [true, false] {
+                check_cluster::<f32>(ranks, Distribution::Uniform, regime, mem);
+            }
+        }
+    }
+}
+
+#[test]
+fn equivalence_f64_across_ranks_budgets_media() {
+    for ranks in [2usize, 4, 8] {
+        for regime in [Regime::OnePass, Regime::MultiPass] {
+            for mem in [true, false] {
+                check_cluster::<f64>(ranks, Distribution::Uniform, regime, mem);
+            }
+        }
+    }
+}
+
+#[test]
+fn in_core_budgets_still_verify() {
+    // Budgets generous enough that every rank's shard sorts in one
+    // chunk: the streamed pipeline's fast path, still collective.
+    for ranks in [2usize, 4, 8] {
+        for mem in [true, false] {
+            check_cluster::<i32>(ranks, Distribution::Uniform, Regime::InCore, mem);
+            check_cluster::<f64>(ranks, Distribution::Uniform, Regime::InCore, mem);
+        }
+    }
+}
+
+#[test]
+fn skewed_and_duplicate_distributions() {
+    // Non-uniform splitter refinement: heavy duplication (splitters land
+    // on value plateaus), Zipf skew and pre-sorted input (maximally
+    // unequal sample spacing) must all stay bitwise-equivalent.
+    for dist in [Distribution::DupHeavy, Distribution::Zipf, Distribution::Sorted] {
+        check_cluster::<i32>(4, dist, Regime::MultiPass, true);
+        check_cluster::<i32>(4, dist, Regime::OnePass, false);
+        check_cluster::<f64>(4, dist, Regime::MultiPass, false);
+    }
+}
+
+#[test]
+fn tiny_shards_with_empty_buckets() {
+    // Fewer elements than samples per rank: some buckets are empty and
+    // several candidate splitters coincide; the streamed exchange must
+    // still route every element.
+    let mut cfg = cluster_cfg::<i64>(4, Distribution::Uniform, Regime::InCore, true);
+    cfg.elems_per_rank = 7;
+    cfg.stream.budget_bytes = Some(1 << 16);
+    let (_, outcomes) = run_distributed_sort_data::<i64>(&cfg, None).unwrap();
+    let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+    let want = reference::<i64>(&cfg);
+    assert!(bits_eq(&got, &want));
+}
+
+// ---- adversarial values through a hand-built collective -------------------
+
+/// Mini-driver: run one collective over hand-built shards (the public
+/// driver generates its own workloads, so NaN/−0.0 injection goes
+/// through `sihsort_rank` + `LocalSorter::External` directly, exactly
+/// as the driver invokes them).
+fn run_mini_cluster<K: DeviceKey>(
+    shards: Vec<Vec<K>>,
+    budget_bytes: usize,
+    medium: SpillMedium,
+) -> Vec<K> {
+    let p = shards.len();
+    let scfg = SihStreamCfg { budget: StreamBudget::bytes(budget_bytes), medium, spill_dir: None };
+    let ctx = scfg.ctx(Session::threaded(2));
+    let mut cfg = SihConfig::default();
+    cfg.stream = Some(scfg);
+    let eps = Fabric::new(ClusterSpec::baskerville(), TransferMode::GpuDirect, vec![false; p]);
+    let mut out: Vec<Vec<K>> = (0..p).map(|_| Vec::new()).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = eps
+            .into_iter()
+            .zip(shards)
+            .map(|(mut ep, shard)| {
+                let ctx = ctx.clone();
+                let cfg = cfg.clone();
+                s.spawn(move || {
+                    let sorter = LocalSorter::External(ctx);
+                    let o = sihsort_rank(&mut ep, shard, &sorter, &cfg).unwrap();
+                    assert!(o.stream.is_some());
+                    (ep.rank(), o.data)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, data) = h.join().unwrap();
+            out[rank] = data;
+        }
+    });
+    out.into_iter().flatten().collect()
+}
+
+#[test]
+fn nan_neg_zero_and_duplicates_survive_bitwise() {
+    let mut rng = Prng::new(77);
+    let shards: Vec<Vec<f64>> = (0..4)
+        .map(|_r| {
+            let mut v: Vec<f64> = Vec::with_capacity(3000);
+            for i in 0..3000usize {
+                v.push(match i % 7 {
+                    0 => f64::NAN,
+                    1 => -f64::NAN,
+                    2 => -0.0,
+                    3 => 0.0,
+                    4 => (i % 11) as f64 - 5.0, // heavy duplicates
+                    5 => f64::INFINITY,
+                    _ => <f64 as KeyGen>::uniform(&mut rng),
+                });
+            }
+            v
+        })
+        .collect();
+    let mut want: Vec<f64> = shards.iter().flatten().copied().collect();
+    Session::threaded(2).sort(&mut want, None).unwrap();
+    for medium in [SpillMedium::Memory, SpillMedium::Disk] {
+        // 2048-elem budget: every rank streams (3000 > 682-elem chunks
+        // would be below the floor — the 1024 floor gives 3 runs).
+        let got = run_mini_cluster(shards.clone(), 2048 * 8, medium);
+        assert!(is_sorted_total(&got));
+        assert!(
+            bits_eq(&got, &want),
+            "{medium:?}: NaN payloads / −0.0 must survive the streamed collective bit-exactly"
+        );
+    }
+}
+
+// ---- spill hygiene --------------------------------------------------------
+
+#[test]
+fn driver_run_leaves_no_spill_behind() {
+    // Point every guarded spill dir of a full driver run (local sorts +
+    // exchange stores on all ranks) at one parent and assert the parent
+    // is empty afterwards.
+    let parent = TempDirGuard::new(None).unwrap();
+    let mut cfg = cluster_cfg::<i32>(4, Distribution::Uniform, Regime::MultiPass, false);
+    cfg.stream.spill_dir = Some(parent.path().to_string_lossy().into_owned());
+    let (_, outcomes) = run_distributed_sort_data::<i32>(&cfg, None).unwrap();
+    assert!(outcomes.iter().all(|o| o.stream.as_ref().unwrap().local_run_bytes > 0));
+    let leftovers: Vec<_> = std::fs::read_dir(parent.path()).unwrap().collect();
+    assert!(leftovers.is_empty(), "spill leaked: {leftovers:?}");
+}
+
+#[test]
+fn spill_cleanup_on_panic_mid_pipeline() {
+    // A source that dies mid-stream unwinds through the rank-local
+    // external sort after runs have spilled; every guarded dir (the
+    // pipeline's intermediate store and the rank's park/exchange store,
+    // built from the same SihStreamCfg the driver threads through) must
+    // vanish during the unwind.
+    struct DyingSource {
+        rng: Prng,
+        chunks_left: usize,
+    }
+    impl ChunkSource<i64> for DyingSource {
+        fn len_hint(&self) -> Option<u64> {
+            None
+        }
+        fn next_chunk(&mut self, buf: &mut Vec<i64>, max: usize) -> anyhow::Result<usize> {
+            assert!(self.chunks_left > 0, "mid-pipeline source failure");
+            self.chunks_left -= 1;
+            buf.clear();
+            for _ in 0..max {
+                buf.push(self.rng.next_u64() as i64);
+            }
+            Ok(buf.len())
+        }
+    }
+
+    let parent = TempDirGuard::new(None).unwrap();
+    let scfg = SihStreamCfg {
+        budget: StreamBudget::bytes(2048 * 8),
+        medium: SpillMedium::Disk,
+        spill_dir: Some(parent.path().to_path_buf()),
+    };
+    let ctx = scfg.ctx(Session::native());
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut store = scfg.store();
+        let mut sink = RunSink::<i64>::new(&mut store).unwrap();
+        // 4 chunks spill into runs, then the source panics.
+        let mut src = DyingSource { rng: Prng::new(5), chunks_left: 4 };
+        let _ = ctx.external_sort(&mut src, &mut sink, None);
+    }));
+    assert!(result.is_err(), "the dying source must abort the pipeline");
+    let leftovers: Vec<_> = std::fs::read_dir(parent.path()).unwrap().collect();
+    assert!(leftovers.is_empty(), "panic unwind leaked spill state: {leftovers:?}");
+}

@@ -217,6 +217,27 @@ fn device_dtype_and_backend_gaps_are_typed() {
 }
 
 #[test]
+fn device_sortperm_fallback_is_strict_or_recorded() {
+    // Needs `make artifacts`; skips gracefully offline.
+    let Some(rt) = accelkern::runtime::Runtime::open_default().ok() else { return };
+    let dev = Session::device(accelkern::runtime::Registry::new(rt));
+    // i128 has no pair artifact on any runtime: the device cannot serve
+    // the call, so strict sessions get the typed backend error...
+    let xs: Vec<i128> = generate(&mut Prng::new(7), Distribution::Uniform, 2000);
+    let strict = accelkern::session::Launch::new().strict_device(true);
+    assert!(matches!(
+        dev.sortperm(&xs, Some(&strict)),
+        Err(AkError::UnsupportedBackend { op: "sortperm", .. })
+    ));
+    assert_eq!(dev.metrics().device_fallbacks(), 0);
+    // ...and non-strict sessions fall back to the host engine with the
+    // fallback recorded in the metrics sink (never silent).
+    let perm = dev.sortperm(&xs, None).unwrap();
+    assert_eq!(perm.len(), xs.len());
+    assert_eq!(dev.metrics().device_fallbacks(), 1);
+}
+
+#[test]
 fn lowmem_errors_are_host_gap_only() {
     // On host sessions lowmem works everywhere (no typed error).
     let xs: Vec<i64> = generate(&mut Prng::new(6), Distribution::Uniform, 5000);
