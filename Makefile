@@ -1,6 +1,6 @@
 # Top-level convenience targets (see README.md).
 
-.PHONY: artifacts build test doc bench-smoke bench-sort bench-stream bench-cluster-stream clean-artifacts
+.PHONY: artifacts build test test-faults doc bench-smoke bench-sort bench-stream bench-cluster-stream clean-artifacts
 
 # AOT-lower the L1/L2 Pallas/JAX catalog to artifacts/ (requires jax).
 artifacts:
@@ -11,6 +11,13 @@ build:
 
 test:
 	cargo test -q
+
+# Crash/resume fault-injection matrix (DESIGN.md §15): kill the
+# external and cluster sorts at every phase/pass boundary (error and
+# panic modes), resume from the manifests, assert bitwise-identical
+# output and zero leaked spill files.
+test-faults:
+	cargo test -q -p accelkern --test crash_resume
 
 # Docs with warnings promoted to errors (the CI gate): broken intra-doc
 # links on the Session/Launch surface fail the build.

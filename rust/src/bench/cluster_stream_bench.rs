@@ -84,6 +84,9 @@ pub struct ClusterStreamReport {
     pub threads: usize,
     /// Spill medium of the streaming ranks.
     pub spill: &'static str,
+    /// Seed of the subsampled verification passes — recorded so any
+    /// reported `verified` count is reproducible from the JSON alone.
+    pub verify_seed: u64,
     /// The launch knobs the per-chunk engines ran with.
     pub launch: Launch,
     /// All measured rows.
@@ -108,8 +111,9 @@ impl ClusterStreamReport {
         let mut s = String::new();
         s.push_str("{\n  \"version\": 1,\n");
         s.push_str(&format!(
-            "  \"elems_per_rank\": {},\n  \"threads\": {},\n  \"spill\": \"{}\",\n",
-            self.elems_per_rank, self.threads, self.spill
+            "  \"elems_per_rank\": {},\n  \"threads\": {},\n  \"spill\": \"{}\",\n  \
+             \"verify_seed\": {},\n",
+            self.elems_per_rank, self.threads, self.spill, self.verify_seed
         ));
         s.push_str(&format!("  \"launch\": {},\n", crate::bench::launch_json(&self.launch)));
         s.push_str("  \"results\": [\n");
@@ -262,6 +266,7 @@ pub fn run_cluster_stream_bench(
         elems_per_rank: base.elems_per_rank,
         threads: base.host_threads.max(1),
         spill: if base.stream.spill_memory { "memory" } else { "disk" },
+        verify_seed: base.seed ^ 0xC157,
         launch: base.launch.clone(),
         records: Vec::new(),
     };
@@ -335,6 +340,9 @@ mod tests {
         let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
         assert_eq!(j.get("version").as_usize(), Some(1));
         assert_eq!(j.get("spill").as_str(), Some("memory"));
+        // The verification seed is part of the report so `verified`
+        // counts are reproducible from the JSON alone.
+        assert_eq!(j.get("verify_seed").as_usize(), Some((base.seed ^ 0xC157) as usize));
         assert_eq!(j.get("results").as_arr().unwrap().len(), 1);
     }
 

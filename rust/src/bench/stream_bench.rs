@@ -26,7 +26,7 @@ use crate::backend::DeviceKey;
 use crate::bench::{verify_subsampled, BenchOpts, Bencher};
 use crate::dtype::ElemType;
 use crate::session::{Launch, Session};
-use crate::stream::{GenSource, SliceSource, SpillMedium, StreamBudget, VecSink};
+use crate::stream::{Checkpoint, GenSource, SliceSource, SpillMedium, StreamBudget, VecSink};
 use crate::workload::{Distribution, KeyGen};
 
 /// Dataset-bytes : budget-bytes ratios measured per dtype. The first
@@ -81,6 +81,9 @@ pub struct StreamBenchReport {
     pub threads: usize,
     /// Spill medium of the external sorts.
     pub spill: &'static str,
+    /// Seed of the subsampled verification passes — recorded so any
+    /// reported `verified` count is reproducible from the JSON alone.
+    pub verify_seed: u64,
     /// The launch knobs the per-chunk engines ran with.
     pub launch: Launch,
     /// All measured rows.
@@ -100,8 +103,8 @@ impl StreamBenchReport {
         let mut s = String::new();
         s.push_str("{\n  \"version\": 1,\n");
         s.push_str(&format!(
-            "  \"n\": {},\n  \"threads\": {},\n  \"spill\": \"{}\",\n",
-            self.n, self.threads, self.spill
+            "  \"n\": {},\n  \"threads\": {},\n  \"spill\": \"{}\",\n  \"verify_seed\": {},\n",
+            self.n, self.threads, self.spill, self.verify_seed
         ));
         s.push_str(&format!("  \"launch\": {},\n", crate::bench::launch_json(&self.launch)));
         s.push_str("  \"results\": [\n");
@@ -146,6 +149,8 @@ struct DtypeGrid<'a> {
     seed: u64,
     medium: SpillMedium,
     spill_parent: Option<PathBuf>,
+    ckpt_dir: Option<PathBuf>,
+    resume: bool,
     launch: &'a Launch,
     opts: &'a BenchOpts,
 }
@@ -207,18 +212,42 @@ fn bench_dtype<K: KeyGen + DeviceKey>(
             },
         };
 
-        // external-sort: measured from a fresh generator each iteration
-        // (the engine streams; only the budget lives in memory).
-        let label = format!("external-sort/{dtype}/x{ratio}");
-        bencher.run(&label, Some(bytes), || {
-            let mut src = GenSource::<K>::new(grid.seed, Distribution::Uniform, n as u64);
-            let mut sink = VecSink::new();
-            ctx.external_sort(&mut src, &mut sink, None).expect("external sort");
-        });
-        // Verification run: correctness gate + pipeline-shape stats.
+        // Verification run first (correctness gate + pipeline-shape
+        // stats): a divergence — or an `AKBENCH_FAILPOINT` trip — aborts
+        // before any measurement time is spent. With a checkpoint dir
+        // the gate runs crash-safe through `external_sort_ckpt`, which
+        // is what the CI smoke relies on: kill it mid-merge via the env
+        // fail point, rerun with `--resume`, and the gate finishes from
+        // the manifest instead of from zero.
         let mut src = GenSource::<K>::new(grid.seed, Distribution::Uniform, n as u64);
         let mut sink = VecSink::new();
-        let stats = ctx.external_sort(&mut src, &mut sink, None)?;
+        let stats = match &grid.ckpt_dir {
+            Some(root) => {
+                let cell = root.join(format!("{dtype}-x{ratio}"));
+                let tag = format!("bench-stream/{dtype}/x{ratio}");
+                let mut ck = Checkpoint::new(&cell, tag.as_str());
+                if grid.resume {
+                    ck = ck.resume();
+                }
+                let mut stats = ctx.external_sort_ckpt(&mut src, &mut sink, None, &ck)?;
+                if stats.completed_noop {
+                    // A previous incarnation already finished this cell;
+                    // resuming it is a no-op that leaves the sink empty,
+                    // so redo the cell fresh — the gate must always check
+                    // real output.
+                    src = GenSource::new(grid.seed, Distribution::Uniform, n as u64);
+                    sink = VecSink::new();
+                    stats = ctx.external_sort_ckpt(
+                        &mut src,
+                        &mut sink,
+                        None,
+                        &Checkpoint::new(&cell, tag.as_str()),
+                    )?;
+                }
+                stats
+            }
+            None => ctx.external_sort(&mut src, &mut sink, None)?,
+        };
         let verified = verify_subsampled(&sink.out, &want, VERIFY_SAMPLES, grid.seed ^ 0x5EED)?;
         anyhow::ensure!(
             stats.elems == n as u64,
@@ -226,6 +255,17 @@ fn bench_dtype<K: KeyGen + DeviceKey>(
             stats.elems,
             n
         );
+
+        // external-sort: measured from a fresh generator each iteration
+        // (the engine streams; only the budget lives in memory). The
+        // timed pass never checkpoints — manifest fsyncs are not what
+        // this bench tracks.
+        let label = format!("external-sort/{dtype}/x{ratio}");
+        bencher.run(&label, Some(bytes), || {
+            let mut src = GenSource::<K>::new(grid.seed, Distribution::Uniform, n as u64);
+            let mut sink = VecSink::new();
+            ctx.external_sort(&mut src, &mut sink, None).expect("external sort");
+        });
         let r = bencher.get(&label).expect("bench result recorded");
         report.records.push(StreamBenchRecord {
             engine: "external-sort".into(),
@@ -329,7 +369,10 @@ pub fn run_stream_bench(
     launch: &Launch,
     medium: SpillMedium,
     spill_parent: Option<PathBuf>,
+    ckpt_dir: Option<PathBuf>,
+    resume: bool,
 ) -> anyhow::Result<StreamBenchReport> {
+    let seed = 0x57AE4B_u64;
     let mut report = StreamBenchReport {
         n,
         threads: threads.max(1),
@@ -337,6 +380,7 @@ pub fn run_stream_bench(
             SpillMedium::Memory => "memory",
             SpillMedium::Disk => "disk",
         },
+        verify_seed: seed ^ 0x5EED,
         launch: launch.clone(),
         records: Vec::new(),
     };
@@ -344,9 +388,11 @@ pub fn run_stream_bench(
         n,
         threads: report.threads,
         ratios,
-        seed: 0x57AE4B,
+        seed,
         medium,
         spill_parent,
+        ckpt_dir,
+        resume,
         launch,
         opts,
     };
@@ -358,6 +404,7 @@ pub fn run_stream_bench(
 
 /// CLI entry point: run the grid (`--quick` trims dtypes, ratios and
 /// sampling), print a summary, and emit the JSON report to `out`.
+#[allow(clippy::too_many_arguments)]
 pub fn run_and_emit(
     n: usize,
     threads: usize,
@@ -366,13 +413,25 @@ pub fn run_and_emit(
     launch: &Launch,
     medium: SpillMedium,
     spill_parent: Option<PathBuf>,
+    ckpt_dir: Option<PathBuf>,
+    resume: bool,
 ) -> anyhow::Result<()> {
     let opts = if quick { BenchOpts::quick() } else { BenchOpts::default() }.scaled_from_env();
     let dtypes: &[ElemType] =
         if quick { &[ElemType::I32, ElemType::F64] } else { &ElemType::ALL };
     let ratios: &[usize] = if quick { &QUICK_RATIOS } else { &FULL_RATIOS };
-    let report =
-        run_stream_bench(n, threads, ratios, dtypes, &opts, launch, medium, spill_parent)?;
+    let report = run_stream_bench(
+        n,
+        threads,
+        ratios,
+        dtypes,
+        &opts,
+        launch,
+        medium,
+        spill_parent,
+        ckpt_dir,
+        resume,
+    )?;
     report.write_json(out)?;
     println!(
         "bench-stream: {} rows (n={}, threads={}, spill={}) -> {}",
@@ -430,6 +489,8 @@ mod tests {
             &launch,
             SpillMedium::Memory,
             None,
+            None,
+            false,
         )
         .unwrap();
         // 1 reference row + (external-sort + stream-reduce) per ratio.
@@ -444,6 +505,9 @@ mod tests {
         let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
         assert_eq!(j.get("version").as_usize(), Some(1));
         assert_eq!(j.get("spill").as_str(), Some("memory"));
+        // The verification seed is part of the report so `verified`
+        // counts are reproducible from the JSON alone.
+        assert_eq!(j.get("verify_seed").as_usize(), Some((0x57AE4B ^ 0x5EED) as usize));
         assert_eq!(j.get("results").as_arr().unwrap().len(), 3);
         assert_eq!(j.get("launch").get("max_tasks").as_usize(), Some(2));
     }
@@ -459,6 +523,8 @@ mod tests {
             &Launch::default(),
             SpillMedium::Disk,
             None,
+            None,
+            false,
         )
         .unwrap();
         let ext = report.get("external-sort", ElemType::F64, 8).unwrap();

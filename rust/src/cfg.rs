@@ -330,6 +330,13 @@ pub struct StreamCfg {
     /// `None`: the driver defaults to a quarter of the per-rank shard,
     /// so `--local-sorter external` actually streams out of core.
     pub budget_bytes: Option<usize>,
+    /// Durable checkpoint root for crash-safe external/cluster sorts
+    /// (`checkpoint` / `--checkpoint-dir` — DESIGN.md §15). Requires
+    /// the external sorter on every rank.
+    pub checkpoint_dir: Option<String>,
+    /// Resume from the manifests under `checkpoint_dir` instead of
+    /// starting fresh (`resume = true` / `--resume`).
+    pub resume: bool,
 }
 
 impl StreamCfg {
@@ -487,6 +494,12 @@ impl RunConfig {
             anyhow::ensure!(v > 0.0, "budget_mb must be positive, got {v}");
             self.stream.budget_bytes = Some(((v * 1e6) as usize).max(1));
         }
+        if let Some(v) = doc.get("stream", "checkpoint").and_then(|v| v.as_str()) {
+            self.stream.checkpoint_dir = Some(v.to_string());
+        }
+        if let Some(v) = doc.get("stream", "resume").and_then(|v| v.as_bool()) {
+            self.stream.resume = v;
+        }
         self.cluster.apply_toml(doc)?;
         Ok(())
     }
@@ -549,16 +562,21 @@ mod tests {
     #[test]
     fn stream_section_via_toml() {
         let doc = Toml::parse(
-            "[stream]\nspill = \"memory\"\nspill_dir = \"/scratch/ak\"\nbudget_mb = 64\n",
+            "[stream]\nspill = \"memory\"\nspill_dir = \"/scratch/ak\"\nbudget_mb = 64\n\
+             checkpoint = \"/scratch/ckpt\"\nresume = true\n",
         )
         .unwrap();
         let mut cfg = RunConfig::default();
         assert!(!cfg.stream.spill_memory);
         assert_eq!(cfg.stream.budget_bytes, None);
+        assert_eq!(cfg.stream.checkpoint_dir, None);
+        assert!(!cfg.stream.resume);
         cfg.apply_toml(&doc).unwrap();
         assert!(cfg.stream.spill_memory);
         assert_eq!(cfg.stream.spill_dir.as_deref(), Some("/scratch/ak"));
         assert_eq!(cfg.stream.budget_bytes, Some(64_000_000));
+        assert_eq!(cfg.stream.checkpoint_dir.as_deref(), Some("/scratch/ckpt"));
+        assert!(cfg.stream.resume);
         // Non-positive budgets are rejected.
         let bad = Toml::parse("[stream]\nbudget_mb = 0\n").unwrap();
         assert!(RunConfig::default().apply_toml(&bad).is_err());

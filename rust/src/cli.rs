@@ -83,6 +83,13 @@ COMMON FLAGS
   --stream-budget-mb X per-rank engine-state budget in MB for the
                        external sorter ([stream] budget_mb; default:
                        a quarter of the per-rank shard)
+  --checkpoint-dir P   crash-safe checkpoint root for external/cluster
+                       sorts ([stream] checkpoint; requires --sorter EX /
+                       --local-sorter external, DESIGN.md §15)
+  --resume             resume a killed run from the manifests under
+                       --checkpoint-dir instead of starting fresh; the
+                       same config (seed, dtype, budget) must be given
+                       ([stream] resume)
 
 LAUNCH KNOBS (per-call tuning, Session/Launch API — DESIGN.md §12)
   --max-tasks N        cap host worker tasks per call
@@ -110,7 +117,10 @@ impl Cli {
             if let Some(name) = a.strip_prefix("--") {
                 // Boolean flags take no value; detect by peeking semantics:
                 // known boolean names are listed here.
-                if matches!(name, "quick" | "no-device" | "help" | "verify" | "reuse-scratch") {
+                if matches!(
+                    name,
+                    "quick" | "no-device" | "help" | "verify" | "reuse-scratch" | "resume"
+                ) {
                     cli.flags.insert(name.to_string(), "true".to_string());
                 } else {
                     let v = it
@@ -231,6 +241,12 @@ impl Cli {
             anyhow::ensure!(v > 0.0, "--stream-budget-mb: expected a positive size, got {v}");
             cfg.stream.budget_bytes = Some(((v * 1e6) as usize).max(1));
         }
+        if let Some(v) = self.get("checkpoint-dir") {
+            cfg.stream.checkpoint_dir = Some(v.to_string());
+        }
+        if self.has("resume") {
+            cfg.stream.resume = true;
+        }
         cfg.launch = self.launch_overrides(cfg.launch.clone())?;
         Ok(cfg)
     }
@@ -330,8 +346,20 @@ mod tests {
         // Default medium is disk; bad values error.
         let default_cfg = Cli::parse(args("bench-stream")).unwrap().run_config().unwrap();
         assert!(!default_cfg.stream.spill_memory);
+        assert_eq!(default_cfg.stream.checkpoint_dir, None);
+        assert!(!default_cfg.stream.resume);
         let c = Cli::parse(args("bench-stream --spill tape")).unwrap();
         assert!(c.run_config().is_err());
+    }
+
+    #[test]
+    fn checkpoint_flags_flow_into_config() {
+        // --resume is boolean: the path after it stays positional.
+        let c = Cli::parse(args("sort --checkpoint-dir /scratch/ckpt --resume extra")).unwrap();
+        assert_eq!(c.positional, vec!["extra"]);
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.stream.checkpoint_dir.as_deref(), Some("/scratch/ckpt"));
+        assert!(cfg.stream.resume);
     }
 
     #[test]

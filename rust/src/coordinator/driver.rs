@@ -152,10 +152,24 @@ pub fn run_distributed_sort_full<K: DeviceKey + KeyGen>(
                     crate::stream::SpillMedium::Disk
                 },
                 spill_dir: cfg.stream.spill_dir.clone().map(std::path::PathBuf::from),
+                ckpt_dir: cfg.stream.checkpoint_dir.clone().map(std::path::PathBuf::from),
+                resume: cfg.stream.resume,
             })
         } else {
             None
         };
+    // Checkpointing lives in the streamed rank pipeline: every rank
+    // must be External for `[stream] checkpoint` / `--resume` to mean
+    // anything — fail loudly instead of silently not checkpointing.
+    anyhow::ensure!(
+        cfg.stream.checkpoint_dir.is_none() || n_external == sorters.len(),
+        "checkpoint/resume requires the external sorter on every rank \
+         (--sorter EX / --local-sorter external)"
+    );
+    anyhow::ensure!(
+        !cfg.stream.resume || cfg.stream.checkpoint_dir.is_some(),
+        "--resume requires a checkpoint directory ([stream] checkpoint / --checkpoint-dir)"
+    );
     let stream_ctx: Option<crate::stream::StreamCtx> = stream_cfg.as_ref().map(|s| {
         let session = crate::session::Session::threaded(cfg.host_threads)
             .with_defaults(cfg.launch.clone());
@@ -232,6 +246,10 @@ pub fn run_distributed_sort_full<K: DeviceKey + KeyGen>(
         outcomes.push(o);
     }
 
+    // Post-rank kill site: every rank committed phase 6, the driver
+    // dies before verifying — a resume must reload all outputs cheaply
+    // and still pass verification.
+    crate::util::failpoint::check("driver.verify")?;
     verify_outcomes(&outcomes, in_checksum)?;
 
     let phase_max = |f: fn(&RankOutcome<K>) -> f64| {

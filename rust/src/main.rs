@@ -12,6 +12,10 @@ use accelkern::dtype::ElemType;
 use accelkern::runtime::Runtime;
 
 fn main() {
+    // Deterministic fault injection for the crash/resume CI smoke:
+    // AKBENCH_FAILPOINT=name[:skip[:panic]] arms one named fail point
+    // for the whole process (DESIGN.md §15).
+    let _failpoint_guard = accelkern::util::failpoint::arm_env();
     let cli = match Cli::parse(std::env::args()) {
         Ok(c) => c,
         Err(e) => {
@@ -178,6 +182,8 @@ fn run(cli: &Cli) -> anyhow::Result<()> {
                 &cfg.launch,
                 medium,
                 cfg.stream.spill_dir.clone().map(std::path::PathBuf::from),
+                cfg.stream.checkpoint_dir.clone().map(std::path::PathBuf::from),
+                cfg.stream.resume,
             )
         }
         "bench-cluster-stream" => {

@@ -24,6 +24,7 @@ use crate::comm::Endpoint;
 use crate::dtype::SortKey;
 use crate::stream::codec;
 use crate::stream::{ChunkSource, SpillRun, SpillRunSource, SpillStore};
+use crate::util::failpoint;
 
 /// Cut points of a sorted shard at the splitters (bit image): bucket `j`
 /// is `sorted[cuts[j]..cuts[j+1]]` with implicit cuts[0]=0,
@@ -110,6 +111,12 @@ pub fn streamed_exchange<K: SortKey>(
     for dst in 0..p {
         ep.send_bytes(dst, tag, Vec::new());
     }
+    // Mid-exchange kill site, placed at the one point where dying is
+    // deadlock-free by construction: every send (including the end
+    // markers) is already queued, no receive has started, and the fail
+    // point trips on every rank — in-flight bytes drop with the
+    // channels and a resume replays the whole collective.
+    failpoint::check("sih.exchange.sent")?;
 
     // Receive side: append each source's chunks (in order — per-source
     // FIFO) to one spilled run; chunks of a sorted stream concatenate

@@ -28,11 +28,13 @@ use crate::cluster::DeviceModel;
 use crate::comm::Endpoint;
 use crate::dtype::SortKey;
 use crate::session::Session;
+use crate::comm::collectives::ReduceOp;
 use crate::stream::external_sort::merge_group_to_store;
 use crate::stream::{
-    ExternalSortStats, RunSink, SliceSource, SpillMedium, SpillRun, SpillStore, StreamBudget,
-    StreamCtx,
+    Checkpoint, ChunkSource, ExternalSortStats, RunMeta, RunSink, SliceSource, SpillMedium,
+    SpillRun, SpillStore, StreamBudget, StreamCtx,
 };
+use crate::util::failpoint;
 
 use super::exchange::{buckets, partition_points, streamed_exchange};
 use super::local_sort::LocalSorter;
@@ -56,6 +58,15 @@ pub struct SihStreamCfg {
     pub medium: SpillMedium,
     /// Parent directory for guarded spill dirs (disk medium).
     pub spill_dir: Option<PathBuf>,
+    /// Durable checkpoint root (DESIGN.md §15): when set, every rank
+    /// keeps a `rank-<r>/` manifest directory under it and commits each
+    /// phase boundary, making the whole distributed sort resumable
+    /// after a crash. Checkpointing implies disk spill for the
+    /// manifested state regardless of `medium`.
+    pub ckpt_dir: Option<PathBuf>,
+    /// Resume from the manifests in `ckpt_dir` instead of starting
+    /// fresh (a directory with no manifest still starts fresh).
+    pub resume: bool,
 }
 
 impl SihStreamCfg {
@@ -274,6 +285,11 @@ fn sihsort_rank_streamed<K: DeviceKey>(
     ctx: &StreamCtx,
     cfg: &SihConfig,
 ) -> anyhow::Result<RankOutcome<K>> {
+    if let Some(scfg) = cfg.stream.as_ref().filter(|s| s.ckpt_dir.is_some()) {
+        // Crash-safe variant: every phase boundary commits to a durable
+        // per-rank manifest (DESIGN.md §15).
+        return sihsort_rank_streamed_ckpt(ep, shard, ctx, cfg, scfg);
+    }
     let wall0 = Instant::now();
     // External ranks are CPU-class (`LocalSorter::is_device`).
     let is_dev = false;
@@ -378,6 +394,316 @@ fn sihsort_rank_streamed<K: DeviceKey>(
     let data = data_res?;
     let exchange_spilled_bytes = xstore.bytes_spilled();
     drop(xstore);
+    charge(ep, secs);
+    ep.barrier();
+    let sim_final = ep.now() - t_phase;
+
+    Ok(RankOutcome {
+        data,
+        sim_local_sort,
+        sim_splitters,
+        sim_exchange,
+        sim_final,
+        wall_secs: wall0.elapsed().as_secs_f64(),
+        rounds_used,
+        stream: Some(RankStreamStats {
+            local: local_stats,
+            local_run_bytes,
+            exchange_spilled_bytes,
+            budget_bytes: ctx.budget().get(),
+        }),
+    })
+}
+
+/// The crash-safe streamed rank (DESIGN.md §15): the pipeline of
+/// [`sihsort_rank_streamed`], with every phase boundary committed to a
+/// durable per-rank manifest under `<ckpt_dir>/rank-<r>/` so a killed
+/// job resumes (`SihStreamCfg::resume`) instead of restarting. The
+/// recovery model is *idempotent ranks*: redoing work a crash lost is
+/// always acceptable, losing committed work never is.
+///
+/// Per-rank vs collective state: phases 1 (park the locally sorted
+/// shard) and 6 (final merge) are rank-local, so each rank skips them
+/// individually once its own manifest passed them. Phases 2–5 are
+/// collectives — a rank can only skip them when **every** rank
+/// committed them, so the skip decision rides an allreduce-Min over the
+/// manifest phases; a rank that already committed a collective phase
+/// re-executes it identically (the schedule is deterministic given the
+/// parked runs) whenever any peer still needs it, retiring its own
+/// stale downstream state first. The parked pass-1 run is deliberately
+/// never retired: it is what makes any such redo possible regardless of
+/// the phase skew the crash left behind.
+///
+/// Resume contract: the driver re-supplies the identical input shard
+/// (`workload` generation is seeded) and every rank resumes with the
+/// same budget; both are validated against the manifest.
+fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
+    ep: &mut Endpoint,
+    shard: Vec<K>,
+    ctx: &StreamCtx,
+    cfg: &SihConfig,
+    scfg: &SihStreamCfg,
+) -> anyhow::Result<RankOutcome<K>> {
+    let wall0 = Instant::now();
+    // External ranks are CPU-class (`LocalSorter::is_device`).
+    let is_dev = false;
+    let charge = |ep: &Endpoint, measured: f64| {
+        ep.advance(cfg.devmodel.compute_time(measured, is_dev));
+    };
+    let plan = ctx.plan::<K>();
+    let io_chunk = plan.io_chunk_elems;
+    let p = ep.nranks();
+    let rank = ep.rank();
+    let ck_root = scfg.ckpt_dir.as_ref().expect("ckpt rank requires a checkpoint dir");
+    let rank_dir = ck_root.join(format!("rank-{rank}"));
+    // The phase-1 local sort nests its own checkpoint in a subdirectory
+    // (the manifest sweep leaves subdirectories alone).
+    let local_dir = rank_dir.join("local");
+    let tag = format!("p{p}-r{rank}");
+
+    let mut store = SpillStore::checkpointed(
+        &rank_dir,
+        "sihsort_rank",
+        &tag,
+        K::ELEM.name(),
+        plan.run_chunk_elems as u64,
+        scfg.resume,
+    )?;
+    let my_phase = store.manifest().expect("checkpointed store has a manifest").phase;
+    // Collective skip decisions must be uniform across ranks (see the
+    // function docs): agree on the slowest rank's committed phase.
+    let start = ep.allreduce_u64(my_phase as u64, ReduceOp::Min) as u32;
+
+    // ---- Phase 1: park the external-sorted shard (per-rank skip) ------
+    let t_phase = ep.now();
+    let (run, local_stats, secs) = if my_phase >= 1 {
+        // The parked run is durable and input-deterministic: reopen it.
+        let meta = store
+            .manifest()
+            .and_then(|m| m.runs.iter().find(|r| r.pass == 1).cloned())
+            .ok_or_else(|| {
+                anyhow::anyhow!("rank {rank}: manifest at phase >= 1 without a parked run")
+            })?;
+        let run = store.open_manifested_run::<K>(&meta)?;
+        let stats = ExternalSortStats {
+            elems: meta.elems,
+            fan_in: plan.fan_in,
+            run_chunk_elems: plan.run_chunk_elems,
+            completed_noop: true,
+            ..ExternalSortStats::default()
+        };
+        drop(shard);
+        let _ = std::fs::remove_dir_all(&local_dir); // stale nested state
+        (run, stats, 0.0)
+    } else {
+        // A crash between the park record and the phase commit leaves a
+        // manifested pass-1 run with phase still 0: retire it, or the
+        // re-park below would record a duplicate.
+        store.retire_runs(|r| r.pass >= 1)?;
+        let local_ck = Checkpoint::new(&local_dir, tag.as_str()).resume().defer_complete();
+        let (res, secs) = {
+            let store_ref = &mut store;
+            ep.measured(move || -> anyhow::Result<(SpillRun<K>, ExternalSortStats)> {
+                let mut src = SliceSource::new(&shard);
+                let mut sink = RunSink::new(store_ref)?;
+                let stats =
+                    ctx.external_sort_ckpt(&mut src, &mut sink, Some(&cfg.launch), &local_ck)?;
+                Ok((sink.into_run()?, stats))
+            })
+        };
+        let (mut run, stats) = res?;
+        // Satellite-1 crash window: the park is on disk (fsynced) but
+        // unmanifested — a kill here sweeps it on resume, and the
+        // nested checkpoint's merged runs make the re-park cheap.
+        failpoint::check("sih.park")?;
+        store.record_run(&mut run, 1, 0)?;
+        store.update(|m| m.phase = 1)?;
+        // The parked run supersedes the nested checkpoint.
+        let _ = std::fs::remove_dir_all(&local_dir);
+        failpoint::check("sih.parked")?;
+        (run, stats, secs)
+    };
+    charge(ep, secs);
+    ep.barrier();
+    let sim_local_sort = ep.now() - t_phase;
+    let local_run_bytes = store.bytes_spilled();
+
+    // ---- Phase 2+3: splitters (collective; uniform skip) --------------
+    let t_phase = ep.now();
+    let (splitters, rounds_used) = if start >= 3 {
+        let m = store.manifest().expect("checkpointed store has a manifest");
+        (m.splitters.clone(), m.rounds_used as usize)
+    } else {
+        let local_len = run.elems() as u64;
+        let (splitters, rounds_used) = select_splitters_core(
+            ep,
+            cfg,
+            is_dev,
+            local_len,
+            || {
+                let mut src = crate::stream::SpillRunSource::new(&run, io_chunk)?;
+                Ok(regular_samples_streamed(&mut src, local_len, cfg.samples_per_rank, io_chunk)?
+                    .into_iter()
+                    .map(|x| x.to_bits())
+                    .collect())
+            },
+            |cands| local_ranks_streamed(ctx, &run, cands, io_chunk, &cfg.launch),
+        )?;
+        failpoint::check("sih.splitters")?;
+        let spl = splitters.clone();
+        let ru = rounds_used as u64;
+        store.update(move |m| {
+            m.splitters = spl;
+            m.rounds_used = ru;
+            m.phase = 3;
+        })?;
+        failpoint::check("sih.splitters.recorded")?;
+        (splitters, rounds_used)
+    };
+    let sim_splitters = ep.now() - t_phase;
+
+    // ---- Phase 4+5: streamed exchange (collective; uniform skip) ------
+    let t_phase = ep.now();
+    let (recv_runs, secs) = if start >= 5 {
+        if store.manifest().expect("checkpointed store has a manifest").phase >= 6 {
+            // This rank's output is already durable (and its exchange
+            // runs may be retired); phase 6 reloads the output instead.
+            (Vec::new(), 0.0)
+        } else {
+            let metas: Vec<RunMeta> = {
+                let m = store.manifest().expect("checkpointed store has a manifest");
+                let mut v: Vec<RunMeta> =
+                    m.runs.iter().filter(|r| r.pass == 5).cloned().collect();
+                // seq is the source rank: restore exchange order.
+                v.sort_by_key(|r| r.seq);
+                v
+            };
+            anyhow::ensure!(
+                metas.len() == p,
+                "rank {rank}: manifest at phase >= 5 holds {} of {p} exchange runs",
+                metas.len(),
+            );
+            let mut runs = Vec::with_capacity(p);
+            for meta in &metas {
+                runs.push(store.open_manifested_run::<K>(meta)?);
+            }
+            (runs, 0.0)
+        }
+    } else {
+        // Stale downstream state — partial exchange batches from a
+        // crash between records and the phase commit, or a committed
+        // exchange/output this rank must redo because a peer lost its
+        // copy — retires first; the collective then replays.
+        store.retire_runs(|r| r.pass >= 5)?;
+        let (mut runs, secs) = streamed_exchange(ep, &run, &splitters, io_chunk, &mut store)?;
+        failpoint::check("sih.exchange")?;
+        for (src, r) in runs.iter_mut().enumerate() {
+            store.record_run(r, 5, src as u64)?;
+        }
+        failpoint::check("sih.exchange.recorded")?;
+        store.update(|m| m.phase = 5)?;
+        (runs, secs)
+    };
+    // The parked run handle drops here, but its file stays durable
+    // (never retired — see the function docs).
+    drop(run);
+    charge(ep, secs);
+    let sim_exchange = ep.now() - t_phase;
+
+    // ---- Phase 6: final merge + durable output (per-rank skip) --------
+    let t_phase = ep.now();
+    let my_phase = store.manifest().expect("checkpointed store has a manifest").phase;
+    let (data, secs) = if my_phase >= 6 {
+        let meta = store
+            .manifest()
+            .and_then(|m| m.runs.iter().find(|r| r.pass == 6).cloned())
+            .ok_or_else(|| {
+                anyhow::anyhow!("rank {rank}: manifest at phase 6 without an output run")
+            })?;
+        // A crash between the output commit and the exchange-run retire
+        // leaves stale pass-5 runs; reclaim them now.
+        store.retire_runs(|r| r.pass == 5)?;
+        drop(recv_runs);
+        let (res, secs) = {
+            let store_ref = &store;
+            ep.measured(move || -> anyhow::Result<Vec<K>> {
+                let out_run = store_ref.open_manifested_run::<K>(&meta)?;
+                let mut src = crate::stream::SpillRunSource::new(&out_run, io_chunk)?;
+                let mut data = Vec::with_capacity(out_run.elems());
+                let mut chunk: Vec<K> = Vec::new();
+                while src.next_chunk(&mut chunk, io_chunk)? > 0 {
+                    data.extend_from_slice(&chunk);
+                }
+                Ok(data)
+            })
+        };
+        (res?, secs)
+    } else {
+        failpoint::check("sih.final")?;
+        // A crash between the output record and the phase-6 commit
+        // leaves a manifested pass-6 run with phase still 5: retire it,
+        // or the redo below would record a duplicate.
+        store.retire_runs(|r| r.pass == 6)?;
+        let (res, secs) = {
+            let store_ref = &mut store;
+            ep.measured(move || -> anyhow::Result<(Vec<K>, SpillRun<K>)> {
+                // Fan-in-capped pre-merge, as in the non-ckpt rank. The
+                // intermediate merged runs stay unmanifested (keep =
+                // false): a crash sweeps them and phase 6 redoes from
+                // the manifested pass-5 runs, whose files survive the
+                // group drop.
+                let mut runs = recv_runs;
+                while runs.len() > plan.fan_in {
+                    let mut merged: Vec<SpillRun<K>> = Vec::new();
+                    while !runs.is_empty() {
+                        let take = plan.fan_in.min(runs.len());
+                        let group: Vec<SpillRun<K>> = runs.drain(..take).collect();
+                        if group.len() == 1 {
+                            merged.extend(group);
+                            continue;
+                        }
+                        merged.push(merge_group_to_store(&group, store_ref, &plan)?);
+                    }
+                    runs = merged;
+                }
+                let total: usize = runs.iter().map(SpillRun::elems).sum();
+                let mut data = Vec::with_capacity(total);
+                let mut cursors = Vec::with_capacity(runs.len());
+                for r in &runs {
+                    cursors.push(r.cursor(io_chunk)?);
+                }
+                let mut merge = KmergePull::new(cursors);
+                // Tee the merge: the caller gets the output vector, the
+                // manifest gets a durable copy so a completed rank can
+                // resume by reload instead of redoing the merge.
+                let mut writer = store_ref.run_writer::<K>()?;
+                let mut chunk: Vec<K> = Vec::with_capacity(io_chunk);
+                loop {
+                    chunk.clear();
+                    if merge.next_chunk(&mut chunk, io_chunk)? == 0 {
+                        break;
+                    }
+                    failpoint::check("sih.final.mid")?;
+                    data.extend_from_slice(&chunk);
+                    writer.push_chunk(&chunk)?;
+                }
+                let out = writer.finish()?;
+                drop(merge);
+                Ok((data, out))
+            })
+        };
+        let (data, mut out_run) = res?;
+        store.record_run(&mut out_run, 6, 0)?;
+        // Commit point: phase 6 means "output durable". A crash before
+        // this line is redone from the pass-5 runs (the stale pass-6
+        // record retires above); a crash after it reloads the output.
+        store.update(|m| m.phase = 6)?;
+        // The exchange runs are superseded by the output.
+        store.retire_runs(|r| r.pass == 5)?;
+        failpoint::check("sih.done")?;
+        (data, secs)
+    };
+    let exchange_spilled_bytes = store.bytes_spilled().saturating_sub(local_run_bytes);
     charge(ep, secs);
     ep.barrier();
     let sim_final = ep.now() - t_phase;

@@ -111,7 +111,17 @@ impl std::fmt::Display for AkError {
     }
 }
 
-impl std::error::Error for AkError {}
+impl std::error::Error for AkError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        // Keep the wrapped chain walkable: callers downcast through an
+        // `Internal` (the crash/resume tests find an injected
+        // `FailpointAbort` this way — `failpoint::is_abort`).
+        match self {
+            AkError::Internal(e) => Some(e.as_ref()),
+            _ => None,
+        }
+    }
+}
 
 impl From<anyhow::Error> for AkError {
     fn from(e: anyhow::Error) -> AkError {
@@ -139,5 +149,22 @@ mod tests {
         }
         let msg = format!("{:#}", old_style().unwrap_err());
         assert!(msg.contains("rbf"), "{msg}");
+    }
+
+    #[test]
+    fn internal_keeps_the_cause_chain_walkable() {
+        // anyhow -> AkError::Internal -> anyhow must still expose the
+        // root cause via chain() (the fault harness downcasts this way).
+        #[derive(Debug)]
+        struct Root;
+        impl std::fmt::Display for Root {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "root cause")
+            }
+        }
+        impl std::error::Error for Root {}
+        let ak: AkError = anyhow::Error::new(Root).context("mid layer").into();
+        let back: anyhow::Error = ak.into();
+        assert!(back.chain().any(|c| c.is::<Root>()), "{back:#}");
     }
 }

@@ -19,10 +19,12 @@
 
 use crate::backend::DeviceKey;
 use crate::baselines::kmerge::KmergePull;
+use crate::dtype::SortKey;
 use crate::session::{AkResult, Launch};
 use crate::stream::source::{ChunkSink, ChunkSource};
 use crate::stream::spill::{SpillRun, SpillStore};
-use crate::stream::{StreamCtx, StreamPlan};
+use crate::stream::{Checkpoint, StreamCtx, StreamPlan};
+use crate::util::failpoint;
 
 /// What a [`StreamCtx::external_sort`] run did (the bench records these
 /// next to its throughput rows).
@@ -30,7 +32,8 @@ use crate::stream::{StreamCtx, StreamPlan};
 pub struct ExternalSortStats {
     /// Elements sorted.
     pub elems: u64,
-    /// Sorted runs generated from the source (1 = in-core fast path).
+    /// Sorted runs generated from the source (1 = in-core fast path),
+    /// or — on a resume — runs entering the merge phase.
     pub runs: usize,
     /// Merge passes over the data (0 = in-core, 1 = single k-way merge,
     /// ≥ 2 = multi-pass because runs exceeded the fan-in).
@@ -41,6 +44,11 @@ pub struct ExternalSortStats {
     pub fan_in: usize,
     /// The run-generation chunk size (elements).
     pub run_chunk_elems: usize,
+    /// Manifested runs reopened from a previous incarnation (resume).
+    pub resumed_runs: usize,
+    /// True when a resume found the job already complete and returned
+    /// without touching the source or the sink.
+    pub completed_noop: bool,
 }
 
 impl StreamCtx {
@@ -130,6 +138,187 @@ impl StreamCtx {
         stats.spilled_bytes = store.bytes_spilled();
         Ok(stats)
     }
+
+    /// Crash-safe [`StreamCtx::external_sort`] (DESIGN.md §15): the
+    /// same three phases, but every completed run and merge pass is
+    /// recorded in an atomic manifest inside `ckpt.dir`, so a job
+    /// killed at any point resumes from its last durable state with
+    /// `ckpt.resume` instead of restarting from zero.
+    ///
+    /// Contract on resume: the caller must present the *identical*
+    /// source (the engine skips exactly the elements previous
+    /// incarnations already consumed) and a fresh sink (the final merge
+    /// always replays into it — output depends only on the sorted key
+    /// multiset, so the result is bitwise what an uninterrupted run
+    /// produces). Resuming an already-complete job returns immediately
+    /// with `completed_noop` set and touches neither source nor sink.
+    ///
+    /// Checkpointing forces the disk spill medium (memory cannot
+    /// survive the crash the checkpoint exists for) and skips the
+    /// in-core fast path: even a single-run dataset parks its run so
+    /// the manifest always describes the full job state.
+    pub fn external_sort_ckpt<K: DeviceKey>(
+        &self,
+        src: &mut dyn ChunkSource<K>,
+        sink: &mut dyn ChunkSink<K>,
+        launch: Option<&Launch>,
+        ckpt: &Checkpoint,
+    ) -> AkResult<ExternalSortStats> {
+        let plan = self.plan::<K>();
+        let mut stats = ExternalSortStats {
+            fan_in: plan.fan_in,
+            run_chunk_elems: plan.run_chunk_elems,
+            ..ExternalSortStats::default()
+        };
+        let mut store = SpillStore::checkpointed(
+            &ckpt.dir,
+            "external_sort",
+            &ckpt.tag,
+            K::ELEM.name(),
+            plan.run_chunk_elems as u64,
+            ckpt.resume,
+        )?;
+        let m = store.manifest().expect("checkpointed store has a manifest").clone();
+        if m.complete {
+            stats.completed_noop = true;
+            return Ok(stats);
+        }
+
+        // Reopen whatever previous incarnations made durable, in
+        // recording order. Manifested runs are disjoint and cover
+        // exactly the consumed prefix, so their sizes sum to it.
+        let mut runs: Vec<SpillRun<K>> = Vec::with_capacity(m.runs.len());
+        for meta in &m.runs {
+            runs.push(store.open_manifested_run(meta)?);
+            stats.elems += meta.elems;
+        }
+        stats.resumed_runs = runs.len();
+
+        // ---- phase 1: (continue) run generation -----------------------
+        if !m.gen_done {
+            // Merges are never recorded before `gen_done`, so every
+            // manifested run is a generation run and their sum is the
+            // consumed prefix to skip.
+            let consumed: u64 = m.runs.iter().map(|r| r.elems).sum();
+            skip_elems(src, consumed, plan.run_chunk_elems)?;
+            let mut seq = runs.len() as u64;
+            let mut buf: Vec<K> = Vec::new();
+            loop {
+                if src.next_chunk(&mut buf, plan.run_chunk_elems)? == 0 {
+                    break;
+                }
+                stats.elems += buf.len() as u64;
+                self.session.sort(&mut buf, launch)?;
+                let mut run = store.write_run(&buf)?;
+                // The satellite-2 crash window: run data is on disk and
+                // fsynced, but the manifest does not reference it yet —
+                // a kill here must resume from the previous run.
+                failpoint::check("ext.run")?;
+                store.record_run(&mut run, 0, seq)?;
+                failpoint::check("ext.run.recorded")?;
+                seq += 1;
+                runs.push(run);
+            }
+            store.update(|m| m.gen_done = true)?;
+            failpoint::check("ext.gen-done")?;
+        }
+        stats.runs = runs.len();
+
+        if runs.is_empty() {
+            if !ckpt.defer_complete {
+                store.update(|m| m.complete = true)?;
+            }
+            sink.finish()?;
+            return Ok(stats);
+        }
+
+        // ---- phase 2: intermediate merge passes -----------------------
+        let mut pass =
+            store.manifest().map_or(0, |m| m.runs.iter().map(|r| r.pass).max().unwrap_or(0));
+        while runs.len() > plan.fan_in {
+            stats.merge_passes += 1;
+            pass += 1;
+            let mut merged: Vec<SpillRun<K>> = Vec::new();
+            let mut mseq = 0u64;
+            while !runs.is_empty() {
+                let take = plan.fan_in.min(runs.len());
+                let group: Vec<SpillRun<K>> = runs.drain(..take).collect();
+                if group.len() == 1 {
+                    merged.extend(group);
+                    continue;
+                }
+                failpoint::check("ext.merge.group")?;
+                let mut out = merge_group_to_store(&group, &mut store, &plan)?;
+                // One atomic manifest rewrite swaps the inputs for the
+                // output; the input files are deleted only after it.
+                store.commit_merge(&mut out, group, pass, mseq)?;
+                failpoint::check("ext.merge.retired")?;
+                mseq += 1;
+                merged.push(out);
+            }
+            runs = merged;
+            failpoint::check("ext.merge.pass")?;
+        }
+
+        // ---- phase 3: final merge into the sink -----------------------
+        // Always replayed on resume: it mutates no durable state, and a
+        // fresh sink makes the replay idempotent.
+        failpoint::check("ext.final")?;
+        stats.merge_passes += 1;
+        {
+            let mut cursors = Vec::with_capacity(runs.len());
+            for r in &runs {
+                cursors.push(r.cursor(plan.io_chunk_elems)?);
+            }
+            let mut merge = KmergePull::new(cursors);
+            let mut out: Vec<K> = Vec::with_capacity(plan.io_chunk_elems);
+            loop {
+                out.clear();
+                if merge.next_chunk(&mut out, plan.io_chunk_elems)? == 0 {
+                    break;
+                }
+                failpoint::check("ext.final.mid")?;
+                sink.push_chunk(&out)?;
+            }
+        }
+        sink.finish()?;
+        stats.spilled_bytes = store.bytes_spilled();
+        if !ckpt.defer_complete {
+            // Job done: one rewrite drops every run from the manifest
+            // and marks completion, then the files are reclaimed. Only
+            // MANIFEST.json remains as the durable job-done record.
+            store.update(|m| {
+                m.complete = true;
+                m.runs.clear();
+            })?;
+            for r in &mut runs {
+                r.persist(false);
+            }
+        }
+        Ok(stats)
+    }
+}
+
+/// Pull and discard exactly `n` elements from `src` (the consumed
+/// prefix a resumed generation phase skips). Errors if the source runs
+/// dry early — the resume contract requires the identical input.
+fn skip_elems<K: SortKey>(
+    src: &mut dyn ChunkSource<K>,
+    mut n: u64,
+    chunk: usize,
+) -> anyhow::Result<()> {
+    let mut buf: Vec<K> = Vec::new();
+    while n > 0 {
+        let want = (chunk as u64).min(n) as usize;
+        let got = src.next_chunk(&mut buf, want)?;
+        anyhow::ensure!(
+            got > 0,
+            "resume source ended {n} elements before the checkpointed position \
+             (a resumed job must re-supply the identical input)"
+        );
+        n -= got as u64;
+    }
+    Ok(())
 }
 
 /// Merge `group` (≥ 2 runs) into one new spilled run, streaming through
@@ -153,6 +342,9 @@ pub(crate) fn merge_group_to_store<K: DeviceKey>(
         if merge.next_chunk(&mut out, plan.io_chunk_elems)? == 0 {
             break;
         }
+        // Mid-merge kill site: the output run is half-written and
+        // unmanifested; a resume sweeps it and redoes the group.
+        failpoint::check("ext.merge.mid")?;
         writer.push_chunk(&out)?;
     }
     Ok(writer.finish()?)

@@ -1,0 +1,368 @@
+//! The crash-safe run manifest (DESIGN.md §15).
+//!
+//! A checkpointed spill directory carries one `MANIFEST.json` — the
+//! single durable source of truth for which spilled runs are *real*.
+//! Every mutation is atomic: the new manifest is written to
+//! `MANIFEST.json.tmp`, fsynced, and renamed over the old one (POSIX
+//! rename is atomic), then the directory is fsynced so the rename
+//! itself is durable. A crash therefore leaves either the old or the
+//! new manifest on disk, never a torn one — and any run file the
+//! surviving manifest does not reference is, by definition, garbage
+//! that the next resume sweeps.
+//!
+//! The manifest is versioned (`MANIFEST_VERSION`): a resume of a spill
+//! directory written by a future incompatible format fails loudly
+//! instead of misreading it, and old directories stay readable for as
+//! long as their version is supported.
+//!
+//! Serialisation rides [`crate::util::json`]; splitter bit images are
+//! `u128` and `Json::Num` is an `f64`, so splitters serialise as
+//! decimal *strings*. Element/byte counts stay well under 2^53 and are
+//! stored as plain numbers.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::failpoint;
+use crate::util::json::Json;
+
+/// Current manifest format version.
+pub const MANIFEST_VERSION: u64 = 1;
+/// Manifest file name inside a checkpointed spill directory.
+pub const MANIFEST_FILE: &str = "MANIFEST.json";
+const MANIFEST_TMP: &str = "MANIFEST.json.tmp";
+
+/// One durable sorted run the manifest vouches for.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RunMeta {
+    /// File name relative to the spill directory.
+    pub file: String,
+    /// Elements in the run.
+    pub elems: u64,
+    /// Producer tier: 0 = generated run, 1.. = merge pass outputs; the
+    /// SIHSort rank manifest reuses it as the phase that produced the
+    /// run (1 = parked shard, 5 = exchange runs, 6 = final output).
+    pub pass: u32,
+    /// Stable ordering key within a pass (generation order, or the
+    /// source rank for exchange runs).
+    pub seq: u64,
+}
+
+/// Durable job state for one checkpointed sort (external or per-rank).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// Format version ([`MANIFEST_VERSION`]).
+    pub version: u64,
+    /// Job kind: `"external_sort"` or `"sihsort_rank"`.
+    pub kind: String,
+    /// Caller tag; a resume must present the same tag (guards against
+    /// resuming rank 2's directory as rank 0).
+    pub tag: String,
+    /// Element type name; a resume must sort the same dtype.
+    pub dtype: String,
+    /// Run-generation chunk size the job started with; a resume must
+    /// derive the same value or the skip arithmetic would be wrong.
+    pub run_chunk: u64,
+    /// True once run generation consumed the whole input.
+    pub gen_done: bool,
+    /// True once the job's output was delivered; resuming is a no-op.
+    pub complete: bool,
+    /// SIHSort rank phase high-water mark (0 for external sorts).
+    pub phase: u32,
+    /// Splitter refinement rounds used (recorded with `splitters`).
+    pub rounds_used: u64,
+    /// Chosen splitter bit images (SIHSort phase 3 state).
+    pub splitters: Vec<u128>,
+    /// Every durable run, in recording order.
+    pub runs: Vec<RunMeta>,
+    /// Next spill-file id, so resumed writers never reuse a name.
+    pub next_seq: u64,
+}
+
+impl Manifest {
+    /// Fresh manifest for a new job.
+    pub fn new(kind: &str, tag: &str, dtype: &str, run_chunk: u64) -> Manifest {
+        Manifest {
+            version: MANIFEST_VERSION,
+            kind: kind.to_string(),
+            tag: tag.to_string(),
+            dtype: dtype.to_string(),
+            run_chunk,
+            gen_done: false,
+            complete: false,
+            phase: 0,
+            rounds_used: 0,
+            splitters: Vec::new(),
+            runs: Vec::new(),
+            next_seq: 0,
+        }
+    }
+
+    /// Serialise (schema version [`MANIFEST_VERSION`]).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"version\": {},\n", self.version));
+        s.push_str(&format!("  \"kind\": \"{}\",\n", self.kind));
+        s.push_str(&format!("  \"tag\": \"{}\",\n", self.tag));
+        s.push_str(&format!("  \"dtype\": \"{}\",\n", self.dtype));
+        s.push_str(&format!("  \"run_chunk\": {},\n", self.run_chunk));
+        s.push_str(&format!("  \"gen_done\": {},\n", self.gen_done));
+        s.push_str(&format!("  \"complete\": {},\n", self.complete));
+        s.push_str(&format!("  \"phase\": {},\n", self.phase));
+        s.push_str(&format!("  \"rounds_used\": {},\n", self.rounds_used));
+        let spl: Vec<String> =
+            self.splitters.iter().map(|b| format!("\"{b}\"")).collect();
+        s.push_str(&format!("  \"splitters\": [{}],\n", spl.join(", ")));
+        s.push_str("  \"runs\": [\n");
+        for (i, r) in self.runs.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"file\": \"{}\", \"elems\": {}, \"pass\": {}, \"seq\": {}}}{}\n",
+                r.file,
+                r.elems,
+                r.pass,
+                r.seq,
+                if i + 1 == self.runs.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!("  \"next_seq\": {}\n", self.next_seq));
+        s.push_str("}\n");
+        s
+    }
+
+    /// Parse a serialised manifest, verifying the version is supported.
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).context("parsing spill manifest")?;
+        let version = j
+            .get("version")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing version"))?
+            as u64;
+        anyhow::ensure!(
+            version <= MANIFEST_VERSION,
+            "spill manifest version {version} is newer than supported {MANIFEST_VERSION}"
+        );
+        let field = |k: &str| -> anyhow::Result<u64> {
+            j.get(k)
+                .as_usize()
+                .map(|v| v as u64)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing numeric '{k}'"))
+        };
+        let text_field = |k: &str| -> anyhow::Result<String> {
+            j.get(k)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing string '{k}'"))
+        };
+        let flag = |k: &str| -> anyhow::Result<bool> {
+            match j.get(k) {
+                Json::Bool(b) => Ok(*b),
+                _ => Err(anyhow::anyhow!("manifest missing flag '{k}'")),
+            }
+        };
+        let mut splitters = Vec::new();
+        for s in j.get("splitters").as_arr().unwrap_or(&[]) {
+            let txt = s
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("manifest splitter is not a string"))?;
+            splitters
+                .push(txt.parse::<u128>().with_context(|| format!("splitter '{txt}'"))?);
+        }
+        let mut runs = Vec::new();
+        for r in j.get("runs").as_arr().unwrap_or(&[]) {
+            runs.push(RunMeta {
+                file: r
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("manifest run missing file"))?
+                    .to_string(),
+                elems: r
+                    .get("elems")
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("manifest run missing elems"))?
+                    as u64,
+                pass: r
+                    .get("pass")
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("manifest run missing pass"))?
+                    as u32,
+                seq: r
+                    .get("seq")
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("manifest run missing seq"))?
+                    as u64,
+            });
+        }
+        Ok(Manifest {
+            version,
+            kind: text_field("kind")?,
+            tag: text_field("tag")?,
+            dtype: text_field("dtype")?,
+            run_chunk: field("run_chunk")?,
+            gen_done: flag("gen_done")?,
+            complete: flag("complete")?,
+            phase: field("phase")? as u32,
+            rounds_used: field("rounds_used")?,
+            splitters,
+            runs,
+            next_seq: field("next_seq")?,
+        })
+    }
+}
+
+/// Atomically persist `m` as `dir/MANIFEST.json`: write the temp file,
+/// fsync it, rename over the live manifest, fsync the directory. The
+/// `manifest.rename` fail point sits exactly in the crash window the
+/// protocol defends — after the temp write, before the rename.
+pub fn write_manifest(dir: &Path, m: &Manifest) -> anyhow::Result<()> {
+    let tmp = dir.join(MANIFEST_TMP);
+    let live = dir.join(MANIFEST_FILE);
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        use std::io::Write;
+        f.write_all(m.to_json().as_bytes())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    failpoint::check("manifest.rename")?;
+    fs::rename(&tmp, &live)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), live.display()))?;
+    // Make the rename itself durable. Directory fsync is best-effort:
+    // not every filesystem supports opening a directory for sync.
+    if let Ok(d) = fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Load `dir/MANIFEST.json` if present. A leftover temp file from a
+/// crash mid-write is ignored (and later swept); only the renamed
+/// manifest counts.
+pub fn load_manifest(dir: &Path) -> anyhow::Result<Option<Manifest>> {
+    let live = dir.join(MANIFEST_FILE);
+    let text = match fs::read_to_string(&live) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", live.display())),
+    };
+    Manifest::parse(&text).with_context(|| live.display().to_string()).map(Some)
+}
+
+/// Delete every regular file in `dir` the manifest does not reference
+/// (crash orphans: half-written runs, stale temp manifests).
+/// Subdirectories are left alone — a SIHSort rank directory nests its
+/// phase-1 `local/` checkpoint, which has its own manifest.
+pub fn sweep_unmanifested(dir: &Path, m: &Manifest) -> anyhow::Result<()> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e).with_context(|| format!("listing {}", dir.display())),
+    };
+    for entry in entries {
+        let entry = entry?;
+        if entry.file_type()?.is_dir() {
+            continue;
+        }
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name == MANIFEST_FILE || m.runs.iter().any(|r| r.file == name) {
+            continue;
+        }
+        fs::remove_file(entry.path())
+            .with_context(|| format!("sweeping {}", entry.path().display()))?;
+    }
+    Ok(())
+}
+
+/// Remove everything inside `dir` (a fresh, non-resuming checkpointed
+/// job starts from a clean slate). The directory itself survives.
+pub fn clear_dir(dir: &Path) -> anyhow::Result<()> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e).with_context(|| format!("listing {}", dir.display())),
+    };
+    for entry in entries {
+        let entry = entry?;
+        if entry.file_type()?.is_dir() {
+            fs::remove_dir_all(entry.path())
+                .with_context(|| format!("clearing {}", entry.path().display()))?;
+        } else {
+            fs::remove_file(entry.path())
+                .with_context(|| format!("clearing {}", entry.path().display()))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let mut m = Manifest::new("sihsort_rank", "p4-r2", "f64", 4096);
+        m.gen_done = true;
+        m.phase = 5;
+        m.rounds_used = 3;
+        m.splitters = vec![0, u128::MAX, 1 << 90];
+        m.runs = vec![
+            RunMeta { file: "run-0.bin".into(), elems: 4096, pass: 0, seq: 0 },
+            RunMeta { file: "run-7.bin".into(), elems: 123, pass: 5, seq: 3 },
+        ];
+        m.next_seq = 8;
+        m
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let m = sample();
+        let back = Manifest::parse(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+        // u128 splitters survive exactly (they exceed f64 precision).
+        assert_eq!(back.splitters[1], u128::MAX);
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let mut m = sample();
+        m.version = MANIFEST_VERSION + 1;
+        let err = Manifest::parse(&m.to_json()).unwrap_err();
+        assert!(err.to_string().contains("newer than supported"), "{err}");
+    }
+
+    #[test]
+    fn write_load_sweep() {
+        let dir = std::env::temp_dir().join(format!("akmanifest-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample();
+        write_manifest(&dir, &m).unwrap();
+        assert_eq!(load_manifest(&dir).unwrap().unwrap(), m);
+        // Orphans (crash leftovers) are swept; manifested files and
+        // subdirectories survive.
+        std::fs::write(dir.join("run-0.bin"), b"keep").unwrap();
+        std::fs::write(dir.join("run-99.bin"), b"orphan").unwrap();
+        std::fs::write(dir.join(MANIFEST_TMP), b"{}").unwrap();
+        std::fs::create_dir_all(dir.join("local")).unwrap();
+        std::fs::write(dir.join("local").join("nested.bin"), b"nested").unwrap();
+        sweep_unmanifested(&dir, &m).unwrap();
+        assert!(dir.join("run-0.bin").exists());
+        assert!(!dir.join("run-99.bin").exists());
+        assert!(!dir.join(MANIFEST_TMP).exists());
+        assert!(dir.join("local").join("nested.bin").exists());
+        assert!(dir.join(MANIFEST_FILE).exists());
+        clear_dir(&dir).unwrap();
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0);
+        assert!(load_manifest(&dir).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_is_none() {
+        let dir = std::env::temp_dir().join("akmanifest-none-nonexistent");
+        assert!(load_manifest(&dir).unwrap().is_none());
+    }
+}

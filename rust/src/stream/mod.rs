@@ -44,14 +44,16 @@
 pub mod codec;
 pub mod external_sort;
 pub mod folds;
+pub mod manifest;
 pub mod source;
 pub mod spill;
 
 pub use external_sort::ExternalSortStats;
+pub use manifest::{Manifest, RunMeta, MANIFEST_FILE, MANIFEST_VERSION};
 pub use source::{ChunkSink, ChunkSource, FileSink, FileSource, GenSource, SliceSource, VecSink};
 pub use spill::{RunSink, SpillMedium, SpillRun, SpillRunSource, SpillStore, TempDirGuard};
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use crate::dtype::SortKey;
 use crate::session::Session;
@@ -92,6 +94,58 @@ impl StreamBudget {
     /// The budget in bytes.
     pub fn get(self) -> usize {
         self.bytes
+    }
+}
+
+/// Crash-safe checkpoint configuration for
+/// [`StreamCtx::external_sort_ckpt`] (DESIGN.md §15).
+///
+/// `dir` is a durable directory the caller owns (unlike the guarded
+/// temp dirs of a plain external sort, it survives the process); the
+/// engine keeps a [`Manifest`] there recording every completed run and
+/// merge pass, so a crashed job can resume. With `resume = false` the
+/// directory is cleared and the job starts fresh; with `resume = true`
+/// a valid manifest continues where it left off (and an absent or
+/// completed manifest degrades to fresh / no-op respectively).
+///
+/// The checkpoint medium is always disk regardless of the context's
+/// configured spill medium — memory cannot survive the crash the
+/// checkpoint exists for.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Durable checkpoint/spill directory (created if missing).
+    pub dir: PathBuf,
+    /// Job identity; a resume must present the same tag.
+    pub tag: String,
+    /// Continue from an existing manifest instead of starting fresh.
+    pub resume: bool,
+    /// Leave `complete = false` and keep the merged output runs: the
+    /// caller owns job completion (the SIHSort rank nests its phase-1
+    /// local sort this way so the parked run is never the only copy).
+    pub(crate) defer_complete: bool,
+}
+
+impl Checkpoint {
+    /// A checkpoint rooted at `dir` with job identity `tag`.
+    pub fn new(dir: impl Into<PathBuf>, tag: impl Into<String>) -> Checkpoint {
+        Checkpoint { dir: dir.into(), tag: tag.into(), resume: false, defer_complete: false }
+    }
+
+    /// Resume from an existing manifest (fresh start when none exists).
+    pub fn resume(mut self) -> Checkpoint {
+        self.resume = true;
+        self
+    }
+
+    /// Caller-owned completion (see the type docs).
+    pub(crate) fn defer_complete(mut self) -> Checkpoint {
+        self.defer_complete = true;
+        self
+    }
+
+    /// The checkpoint directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 }
 

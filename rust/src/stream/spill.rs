@@ -14,6 +14,15 @@
 //! never materialises in memory) and read back through a [`SpillCursor`],
 //! a [`RunCursor`] whose refill buffer is the unit of budget accounting
 //! for merge fan-in (DESIGN.md §13).
+//!
+//! A store can additionally be *checkpointed*
+//! ([`SpillStore::checkpointed`]): it then lives in a caller-named
+//! durable directory with a [`crate::stream::manifest::Manifest`]
+//! recording which runs are real, every recorded run file is fsynced
+//! before the manifest references it, and the temp-dir guard preserves
+//! the directory across crashes (sweeping only unmanifested orphans)
+//! instead of deleting it — the substrate of crash/resume
+//! (DESIGN.md §15).
 
 use std::fs::File;
 use std::io::{BufWriter, Read, Write};
@@ -25,6 +34,7 @@ use anyhow::Context;
 use crate::baselines::kmerge::RunCursor;
 use crate::dtype::SortKey;
 use crate::stream::codec;
+use crate::stream::manifest::{self, Manifest, RunMeta};
 use crate::stream::source::{ChunkSink, ChunkSource};
 
 /// Where spilled runs live.
@@ -59,6 +69,16 @@ impl TempDirGuard {
         Ok(TempDirGuard { path })
     }
 
+    /// Guard a caller-named durable directory (checkpointed stores).
+    /// Created if missing; unlike [`TempDirGuard::new`] dirs it is
+    /// expected to outlive crashes — `Drop` keeps it whenever a
+    /// manifest is present.
+    pub fn at(path: &Path) -> anyhow::Result<TempDirGuard> {
+        std::fs::create_dir_all(path)
+            .with_context(|| format!("creating checkpoint dir {}", path.display()))?;
+        Ok(TempDirGuard { path: path.to_path_buf() })
+    }
+
     /// The guarded directory.
     pub fn path(&self) -> &Path {
         &self.path
@@ -67,6 +87,15 @@ impl TempDirGuard {
 
 impl Drop for TempDirGuard {
     fn drop(&mut self) {
+        // A manifest marks the directory as checkpointed state that
+        // must survive this process (including a panic unwind): keep
+        // it, reclaiming only files the manifest does not vouch for.
+        if self.path.join(manifest::MANIFEST_FILE).exists() {
+            if let Ok(Some(m)) = manifest::load_manifest(&self.path) {
+                let _ = manifest::sweep_unmanifested(&self.path, &m);
+            }
+            return;
+        }
         // Best effort: a failed cleanup must not turn an unwind into an
         // abort, and the OS temp dir reaps leftovers eventually.
         let _ = std::fs::remove_dir_all(&self.path);
@@ -86,6 +115,9 @@ pub enum SpillRun<K: SortKey> {
         path: PathBuf,
         /// Record count (validated against the file size on write).
         elems: usize,
+        /// True once a manifest references the file: `Drop` then leaves
+        /// it on disk for a later resume instead of deleting it.
+        keep: bool,
     },
 }
 
@@ -95,6 +127,22 @@ impl<K: SortKey> SpillRun<K> {
         match self {
             SpillRun::Mem(v) => v.len(),
             SpillRun::File { elems, .. } => *elems,
+        }
+    }
+
+    /// Mark a file-backed run durable (`keep = true`: survives `Drop`)
+    /// or reclaimable. No-op for in-memory runs.
+    pub fn persist(&mut self, durable: bool) {
+        if let SpillRun::File { keep, .. } = self {
+            *keep = durable;
+        }
+    }
+
+    /// The backing file of a disk run.
+    pub fn path(&self) -> Option<&Path> {
+        match self {
+            SpillRun::Mem(_) => None,
+            SpillRun::File { path, .. } => Some(path),
         }
     }
 
@@ -111,7 +159,7 @@ impl<K: SortKey> SpillRun<K> {
                 raw: Vec::new(),
                 buf_elems: 0,
             }),
-            SpillRun::File { path, elems } => {
+            SpillRun::File { path, elems, .. } => {
                 let file =
                     File::open(path).with_context(|| format!("opening run {}", path.display()))?;
                 let mut c = SpillCursor {
@@ -132,8 +180,10 @@ impl<K: SortKey> SpillRun<K> {
 
 impl<K: SortKey> Drop for SpillRun<K> {
     fn drop(&mut self) {
-        if let SpillRun::File { path, .. } = self {
-            let _ = std::fs::remove_file(path);
+        if let SpillRun::File { path, keep, .. } = self {
+            if !*keep {
+                let _ = std::fs::remove_file(path);
+            }
         }
     }
 }
@@ -151,6 +201,8 @@ pub struct SpillStore {
     next_id: u64,
     runs_written: u64,
     bytes_spilled: u64,
+    /// The durable manifest of a checkpointed store (DESIGN.md §15).
+    ckpt: Option<Manifest>,
 }
 
 impl SpillStore {
@@ -164,7 +216,209 @@ impl SpillStore {
             next_id: 0,
             runs_written: 0,
             bytes_spilled: 0,
+            ckpt: None,
         }
+    }
+
+    /// A manifest-backed store rooted at the durable directory `dir`.
+    ///
+    /// Checkpointing implies the disk medium regardless of the job's
+    /// configured spill medium — memory cannot survive the crash the
+    /// checkpoint exists for. With `resume = false` any previous
+    /// contents of `dir` are cleared and a fresh manifest written; with
+    /// `resume = true` an existing manifest is validated against
+    /// `(kind, tag, dtype, run_chunk)`, unmanifested crash orphans are
+    /// swept, and recording resumes where the manifest left off (no
+    /// manifest at all — e.g. a crash before the first write — starts
+    /// fresh).
+    pub fn checkpointed(
+        dir: &Path,
+        kind: &str,
+        tag: &str,
+        dtype: &str,
+        run_chunk: u64,
+        resume: bool,
+    ) -> anyhow::Result<SpillStore> {
+        let guard = TempDirGuard::at(dir)?;
+        let existing = if resume { manifest::load_manifest(dir)? } else { None };
+        let m = match existing {
+            Some(m) => {
+                anyhow::ensure!(
+                    m.kind == kind && m.tag == tag,
+                    "checkpoint {} holds job '{}/{}' but the resume asked for '{kind}/{tag}'",
+                    dir.display(),
+                    m.kind,
+                    m.tag,
+                );
+                anyhow::ensure!(
+                    m.dtype == dtype,
+                    "checkpoint {} was written for dtype {} (resume runs {dtype})",
+                    dir.display(),
+                    m.dtype,
+                );
+                anyhow::ensure!(
+                    m.run_chunk == run_chunk,
+                    "checkpoint {} used run chunk {} (resume derived {run_chunk}; \
+                     the budget must not change across a resume)",
+                    dir.display(),
+                    m.run_chunk,
+                );
+                manifest::sweep_unmanifested(dir, &m)?;
+                m
+            }
+            None => {
+                manifest::clear_dir(dir)?;
+                let m = Manifest::new(kind, tag, dtype, run_chunk);
+                manifest::write_manifest(dir, &m)?;
+                m
+            }
+        };
+        Ok(SpillStore {
+            medium: SpillMedium::Disk,
+            parent: None,
+            guard: Some(guard),
+            next_id: m.next_seq,
+            runs_written: 0,
+            bytes_spilled: 0,
+            ckpt: Some(m),
+        })
+    }
+
+    /// True when the store is manifest-backed.
+    pub fn is_checkpointed(&self) -> bool {
+        self.ckpt.is_some()
+    }
+
+    /// The durable manifest (checkpointed stores only).
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.ckpt.as_ref()
+    }
+
+    fn ckpt_dir(&self) -> anyhow::Result<&Path> {
+        self.guard
+            .as_ref()
+            .map(TempDirGuard::path)
+            .ok_or_else(|| anyhow::anyhow!("store is not checkpointed"))
+    }
+
+    fn persist_manifest(&self) -> anyhow::Result<()> {
+        let m = self.ckpt.as_ref().ok_or_else(|| anyhow::anyhow!("store is not checkpointed"))?;
+        manifest::write_manifest(self.ckpt_dir()?, m)
+    }
+
+    /// Mutate the manifest and atomically persist it in one step.
+    pub fn update(&mut self, f: impl FnOnce(&mut Manifest)) -> anyhow::Result<()> {
+        let m = self.ckpt.as_mut().ok_or_else(|| anyhow::anyhow!("store is not checkpointed"))?;
+        f(m);
+        self.persist_manifest()
+    }
+
+    /// Record a finished (fsynced) run in the manifest under
+    /// `(pass, seq)` and mark it durable — after this returns, the run
+    /// survives a crash and `Drop`.
+    pub fn record_run<K: SortKey>(
+        &mut self,
+        run: &mut SpillRun<K>,
+        pass: u32,
+        seq: u64,
+    ) -> anyhow::Result<()> {
+        let meta = self.meta_of(run, pass, seq)?;
+        let next_id = self.next_id;
+        self.update(|m| {
+            m.runs.push(meta);
+            m.next_seq = next_id;
+        })?;
+        run.persist(true);
+        Ok(())
+    }
+
+    /// Atomically replace `inputs` with the merged `out` run in the
+    /// manifest (one rename covers retire + record), then mark `out`
+    /// durable and drop the inputs, deleting their files.
+    pub fn commit_merge<K: SortKey>(
+        &mut self,
+        out: &mut SpillRun<K>,
+        inputs: Vec<SpillRun<K>>,
+        pass: u32,
+        seq: u64,
+    ) -> anyhow::Result<()> {
+        let meta = self.meta_of(out, pass, seq)?;
+        let gone: Vec<String> = inputs
+            .iter()
+            .filter_map(|r| r.path())
+            .filter_map(|p| p.file_name().map(|n| n.to_string_lossy().into_owned()))
+            .collect();
+        let next_id = self.next_id;
+        self.update(|m| {
+            m.runs.retain(|r| !gone.contains(&r.file));
+            m.runs.push(meta);
+            m.next_seq = next_id;
+        })?;
+        out.persist(true);
+        for mut r in inputs {
+            r.persist(false);
+        }
+        Ok(())
+    }
+
+    /// Drop every manifested run matching `pred` (stale state from a
+    /// crash between batch records and the phase commit): one atomic
+    /// manifest rewrite, then the files are deleted.
+    pub fn retire_runs(&mut self, pred: impl Fn(&RunMeta) -> bool) -> anyhow::Result<()> {
+        let retired: Vec<RunMeta> = self
+            .ckpt
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("store is not checkpointed"))?
+            .runs
+            .iter()
+            .filter(|r| pred(r))
+            .cloned()
+            .collect();
+        if retired.is_empty() {
+            return Ok(());
+        }
+        self.update(|m| m.runs.retain(|r| !pred(r)))?;
+        let dir = self.ckpt_dir()?.to_path_buf();
+        for r in &retired {
+            let _ = std::fs::remove_file(dir.join(&r.file));
+        }
+        Ok(())
+    }
+
+    /// Reopen a manifested run from a previous process incarnation,
+    /// validating the file is present and exactly the recorded size.
+    pub fn open_manifested_run<K: SortKey>(
+        &self,
+        meta: &RunMeta,
+    ) -> anyhow::Result<SpillRun<K>> {
+        let path = self.ckpt_dir()?.join(&meta.file);
+        let md = std::fs::metadata(&path)
+            .with_context(|| format!("manifested run {} is missing", path.display()))?;
+        let want = codec::encoded_len::<K>(meta.elems as usize) as u64;
+        anyhow::ensure!(
+            md.len() == want,
+            "manifested run {} is {} bytes, manifest says {want}",
+            path.display(),
+            md.len(),
+        );
+        Ok(SpillRun::File { path, elems: meta.elems as usize, keep: true })
+    }
+
+    fn meta_of<K: SortKey>(
+        &self,
+        run: &SpillRun<K>,
+        pass: u32,
+        seq: u64,
+    ) -> anyhow::Result<RunMeta> {
+        let path = run
+            .path()
+            .ok_or_else(|| anyhow::anyhow!("checkpointed runs must be file-backed"))?;
+        let file = path
+            .file_name()
+            .ok_or_else(|| anyhow::anyhow!("run path {} has no file name", path.display()))?
+            .to_string_lossy()
+            .into_owned();
+        Ok(RunMeta { file, elems: run.elems() as u64, pass, seq })
     }
 
     /// Runs written so far.
@@ -241,14 +495,22 @@ impl<K: SortKey> RunWriter<'_, K> {
         Ok(())
     }
 
-    /// Flush and hand back the finished run.
+    /// Flush and hand back the finished run. In a checkpointed store
+    /// the file is fsynced here, **before** any manifest can reference
+    /// it — the manifest must never vouch for bytes still in the page
+    /// cache (DESIGN.md §15).
     pub fn finish(self) -> anyhow::Result<SpillRun<K>> {
         self.store.runs_written += 1;
         match self.sink {
             RunWriterSink::Mem(v) => Ok(SpillRun::Mem(v)),
             RunWriterSink::File { mut w, path, elems, .. } => {
                 w.flush().context("flushing spill run")?;
-                Ok(SpillRun::File { path, elems })
+                if self.store.ckpt.is_some() {
+                    w.get_ref()
+                        .sync_all()
+                        .with_context(|| format!("fsync run {}", path.display()))?;
+                }
+                Ok(SpillRun::File { path, elems, keep: false })
             }
         }
     }
@@ -502,5 +764,124 @@ mod tests {
         let _ = store.write_run(&[5i64, 6]).unwrap();
         assert_eq!(store.dir(), None);
         assert_eq!(store.bytes_spilled(), 0);
+    }
+
+    fn ckpt_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("akspill-ckpt-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn checkpointed_runs_survive_store_drop_and_resume() {
+        let dir = ckpt_dir("survive");
+        let xs = sorted_keys(9, 2000);
+        {
+            let mut store =
+                SpillStore::checkpointed(&dir, "external_sort", "t", "f64", 512, false).unwrap();
+            let mut run = store.write_run(&xs).unwrap();
+            store.record_run(&mut run, 0, 0).unwrap();
+            // Recorded runs outlive both the run handle and the store.
+        }
+        assert!(dir.exists(), "checkpoint dir must survive the store");
+        let store =
+            SpillStore::checkpointed(&dir, "external_sort", "t", "f64", 512, true).unwrap();
+        let m = store.manifest().unwrap().clone();
+        assert_eq!(m.runs.len(), 1);
+        let run = store.open_manifested_run::<f64>(&m.runs[0]).unwrap();
+        assert!(bits_eq(&drain(&run, 64), &xs));
+        drop(run);
+        // keep = true: reopening and dropping must not eat the file.
+        assert!(store.open_manifested_run::<f64>(&m.runs[0]).is_ok());
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_resume_validates_identity_and_budget() {
+        let dir = ckpt_dir("validate");
+        {
+            let mut store =
+                SpillStore::checkpointed(&dir, "external_sort", "t", "i64", 512, false).unwrap();
+            let mut run = store.write_run(&[1i64, 2]).unwrap();
+            store.record_run(&mut run, 0, 0).unwrap();
+        }
+        for (kind, tag, dtype, chunk) in [
+            ("sihsort_rank", "t", "i64", 512u64),
+            ("external_sort", "other", "i64", 512),
+            ("external_sort", "t", "f64", 512),
+            ("external_sort", "t", "i64", 256),
+        ] {
+            assert!(
+                SpillStore::checkpointed(&dir, kind, tag, dtype, chunk, true).is_err(),
+                "resume must reject ({kind}, {tag}, {dtype}, {chunk})"
+            );
+        }
+        // A non-resuming open of the same dir starts clean instead.
+        let store =
+            SpillStore::checkpointed(&dir, "sihsort_rank", "x", "f32", 99, false).unwrap();
+        assert!(store.manifest().unwrap().runs.is_empty());
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn commit_merge_retires_inputs_in_one_rewrite() {
+        let dir = ckpt_dir("merge");
+        let a = sorted_keys(10, 500);
+        let b = sorted_keys(11, 700);
+        let mut store =
+            SpillStore::checkpointed(&dir, "external_sort", "t", "f64", 512, false).unwrap();
+        let mut ra = store.write_run(&a).unwrap();
+        store.record_run(&mut ra, 0, 0).unwrap();
+        let mut rb = store.write_run(&b).unwrap();
+        store.record_run(&mut rb, 0, 1).unwrap();
+        let (pa, pb) = (ra.path().unwrap().to_path_buf(), rb.path().unwrap().to_path_buf());
+        let mut merged: Vec<f64> = a.iter().chain(&b).copied().collect();
+        merged.sort_unstable_by(|x, y| x.cmp_total(y));
+        let mut out = store.write_run(&merged).unwrap();
+        store.commit_merge(&mut out, vec![ra, rb], 1, 0).unwrap();
+        let m = store.manifest().unwrap();
+        assert_eq!(m.runs.len(), 1);
+        assert_eq!(m.runs[0].pass, 1);
+        assert!(!pa.exists() && !pb.exists(), "retired inputs must free their disk");
+        assert!(out.path().unwrap().exists());
+        drop(out);
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn guard_keeps_manifested_dir_on_panic_but_sweeps_orphans() {
+        // The satellite-1 regression at the spill layer: a panic after
+        // a manifest write must never delete checkpointed runs, while
+        // unmanifested temp files are still reclaimed.
+        let dir = ckpt_dir("panic");
+        let xs = sorted_keys(12, 300);
+        let dir2 = dir.clone();
+        let xs2 = xs.clone();
+        let result = std::panic::catch_unwind(move || {
+            let mut store =
+                SpillStore::checkpointed(&dir2, "external_sort", "t", "f64", 512, false)
+                    .unwrap();
+            let mut run = store.write_run(&xs2).unwrap();
+            store.record_run(&mut run, 0, 0).unwrap();
+            std::mem::forget(run); // keep=true either way; exercise the guard sweep
+            std::fs::write(store.dir().unwrap().join("run-orphan.bin"), b"half-written")
+                .unwrap();
+            panic!("mid-pipeline failure");
+        });
+        assert!(result.is_err());
+        assert!(dir.exists(), "manifested dir must survive the unwind");
+        assert!(!dir.join("run-orphan.bin").exists(), "orphan must be swept");
+        let store =
+            SpillStore::checkpointed(&dir, "external_sort", "t", "f64", 512, true).unwrap();
+        let m = store.manifest().unwrap().clone();
+        assert_eq!(m.runs.len(), 1);
+        let run = store.open_manifested_run::<f64>(&m.runs[0]).unwrap();
+        assert!(bits_eq(&drain(&run, 64), &xs));
+        drop(run);
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

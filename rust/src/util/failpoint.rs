@@ -1,0 +1,260 @@
+//! Deterministic fault-injection harness for the crash/resume suite
+//! (DESIGN.md §15).
+//!
+//! A *fail point* is a named site in the streaming / cluster-sort code
+//! (`failpoint::check("ext.merge.mid")?`) that is a no-op in normal
+//! operation. A test (or the `AKBENCH_FAILPOINT` env hook, parsed once
+//! at `akbench` start-up) can *arm* one named point so that its
+//! `(skip + 1)`-th execution aborts — either by returning a
+//! [`FailpointAbort`] error that unwinds through the normal `?` error
+//! path, or by panicking to simulate abrupt process death mid-frame.
+//!
+//! Determinism model:
+//! * hits are counted **per thread**, so in the simulated collective
+//!   every rank thread trips at its *own* `(skip + 1)`-th visit of the
+//!   armed site. Crucially this means an armed point fires on *every*
+//!   rank — the in-process fabric's barriers would otherwise hang the
+//!   survivors of a single-rank death (a `std::sync::Barrier` never
+//!   disconnects). All ranks dying at the same named site *is* the
+//!   simulated whole-process kill.
+//! * per-thread counters are keyed by an arming *epoch*, reset whenever
+//!   a new guard arms, so skip counts never leak between tests.
+//! * arming takes a process-wide exclusive lock ([`FailpointGuard`]),
+//!   serialising fault tests within one test binary; the guard disarms
+//!   on drop (including unwinds), so a tripped panic cannot poison a
+//!   later test.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// How an armed fail point aborts when it trips.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailMode {
+    /// Return a [`FailpointAbort`] error through the normal `?` path.
+    Error,
+    /// Panic — simulates abrupt process death with no error-path
+    /// cleanup beyond `Drop` impls (the crash model the manifest's
+    /// atomicity argument is written against).
+    Panic,
+}
+
+/// The error an armed fail point injects in [`FailMode::Error`].
+#[derive(Debug)]
+pub struct FailpointAbort {
+    /// Name of the tripped fail point.
+    pub name: String,
+    /// Per-thread hit count at the trip (== armed `skip + 1`).
+    pub hits: u64,
+}
+
+impl fmt::Display for FailpointAbort {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "failpoint '{}' tripped (hit {})", self.name, self.hits)
+    }
+}
+
+impl std::error::Error for FailpointAbort {}
+
+#[derive(Clone)]
+struct Armed {
+    name: &'static str,
+    skip: u64,
+    mode: FailMode,
+    epoch: u64,
+}
+
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+static ARMED: Mutex<Option<Armed>> = Mutex::new(None);
+/// Serialises arming across tests in one binary (fault tests cannot
+/// overlap — the armed site is process-global state).
+static ARM_LOCK: Mutex<()> = Mutex::new(());
+static EPOCH: Mutex<u64> = Mutex::new(0);
+
+thread_local! {
+    /// (arming epoch, per-site hit counts). Reset when the epoch moves.
+    static HITS: RefCell<(u64, HashMap<&'static str, u64>)> =
+        RefCell::new((0, HashMap::new()));
+}
+
+fn unpoisoned<T>(m: &'static Mutex<T>) -> MutexGuard<'static, T> {
+    // A tripped Panic-mode fail point may unwind while holding nothing
+    // of ours, but the *test* thread panicking elsewhere can poison
+    // these locks; the protected state stays valid either way.
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Exclusive arming handle. Dropping it (normally or during an unwind)
+/// disarms the fail point and releases the process-wide fault lock.
+pub struct FailpointGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl FailpointGuard {
+    /// Disarm while keeping the process-wide fault lock held: the
+    /// holder's resumed runs execute unarmed, and no other test can arm
+    /// a site that those runs might traverse in the meantime.
+    pub fn disarm(&self) {
+        *unpoisoned(&ARMED) = None;
+        ANY_ARMED.store(false, Ordering::SeqCst);
+    }
+
+    /// Swap the armed site without releasing the fault lock — lets one
+    /// test chain crash → resume → crash again (the double-resume case)
+    /// with no window in which another test could arm.
+    pub fn rearm(&self, name: &'static str, skip: u64, mode: FailMode) {
+        let epoch = {
+            let mut e = unpoisoned(&EPOCH);
+            *e += 1;
+            *e
+        };
+        *unpoisoned(&ARMED) = Some(Armed { name, skip, mode, epoch });
+        ANY_ARMED.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Drop for FailpointGuard {
+    fn drop(&mut self) {
+        *unpoisoned(&ARMED) = None;
+        ANY_ARMED.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Arm `name` so each thread's `(skip + 1)`-th [`check`] of that site
+/// aborts with `mode`. Holds the process-wide fault lock until the
+/// returned guard drops.
+pub fn arm(name: &'static str, skip: u64, mode: FailMode) -> FailpointGuard {
+    let lock = unpoisoned(&ARM_LOCK);
+    let epoch = {
+        let mut e = unpoisoned(&EPOCH);
+        *e += 1;
+        *e
+    };
+    *unpoisoned(&ARMED) = Some(Armed { name, skip, mode, epoch });
+    ANY_ARMED.store(true, Ordering::SeqCst);
+    FailpointGuard { _lock: lock }
+}
+
+/// Parse the `AKBENCH_FAILPOINT` env hook — `name[:skip[:panic]]` —
+/// and arm it for the process lifetime. Returns `None` when unset.
+/// `main` holds the guard so CI can kill a real `akbench` run at a
+/// named site (`AKBENCH_FAILPOINT=ext.merge.mid akbench bench-stream`).
+pub fn arm_env() -> Option<FailpointGuard> {
+    let spec = std::env::var("AKBENCH_FAILPOINT").ok()?;
+    if spec.is_empty() {
+        return None;
+    }
+    let mut parts = spec.splitn(3, ':');
+    let name = parts.next().unwrap_or_default().to_string();
+    let skip: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+    let mode =
+        if parts.next() == Some("panic") { FailMode::Panic } else { FailMode::Error };
+    // The name must outlive the guard; env arming happens once per
+    // process, so leaking the string is the static lifetime we need.
+    let name: &'static str = Box::leak(name.into_boxed_str());
+    Some(arm(name, skip, mode))
+}
+
+/// The fail-point site: a no-op unless `name` is armed, in which case
+/// the calling thread's `(skip + 1)`-th visit aborts with the armed
+/// [`FailMode`].
+pub fn check(name: &'static str) -> anyhow::Result<()> {
+    if !ANY_ARMED.load(Ordering::SeqCst) {
+        return Ok(());
+    }
+    let armed = match unpoisoned(&ARMED).clone() {
+        Some(a) if a.name == name => a,
+        _ => return Ok(()),
+    };
+    let hits = HITS.with(|h| {
+        let mut h = h.borrow_mut();
+        if h.0 != armed.epoch {
+            *h = (armed.epoch, HashMap::new());
+        }
+        let c = h.1.entry(name).or_insert(0);
+        *c += 1;
+        *c
+    });
+    if hits <= armed.skip {
+        return Ok(());
+    }
+    match armed.mode {
+        FailMode::Error => Err(FailpointAbort { name: name.to_string(), hits }.into()),
+        FailMode::Panic => panic!("failpoint '{name}' tripped (hit {hits})"),
+    }
+}
+
+/// True when `err`'s chain bottoms out in a [`FailpointAbort`] — how
+/// tests distinguish an injected crash from a genuine failure.
+pub fn is_abort(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.is::<FailpointAbort>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_check_is_free() {
+        check("never.armed").unwrap();
+    }
+
+    #[test]
+    fn trips_after_skip_per_thread() {
+        let _g = arm("fp.test.skip", 2, FailMode::Error);
+        check("fp.test.skip").unwrap();
+        check("fp.test.skip").unwrap();
+        let err = check("fp.test.skip").unwrap_err();
+        assert!(is_abort(&err), "{err}");
+        let abort = err.downcast_ref::<FailpointAbort>().unwrap();
+        assert_eq!(abort.hits, 3);
+        // Other sites stay silent while a different one is armed.
+        check("fp.test.other").unwrap();
+        // A fresh thread counts its own hits from zero.
+        std::thread::spawn(|| {
+            check("fp.test.skip").unwrap();
+            check("fp.test.skip").unwrap();
+            assert!(check("fp.test.skip").is_err());
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn guard_drop_disarms_and_epoch_resets_counts() {
+        {
+            let _g = arm("fp.test.epoch", 0, FailMode::Error);
+            assert!(check("fp.test.epoch").is_err());
+        }
+        check("fp.test.epoch").unwrap();
+        // Re-arming starts a new epoch: the main thread's stale count
+        // from the previous arming must not pre-trip the new one.
+        let _g = arm("fp.test.epoch", 1, FailMode::Error);
+        check("fp.test.epoch").unwrap();
+        assert!(check("fp.test.epoch").is_err());
+    }
+
+    #[test]
+    fn disarm_and_rearm_keep_the_lock() {
+        let g = arm("fp.test.swap", 0, FailMode::Error);
+        assert!(check("fp.test.swap").is_err());
+        g.disarm();
+        check("fp.test.swap").unwrap();
+        // Rearming opens a fresh epoch: counts restart even on the same
+        // thread and the new skip applies.
+        g.rearm("fp.test.swap", 1, FailMode::Error);
+        check("fp.test.swap").unwrap();
+        assert!(check("fp.test.swap").is_err());
+    }
+
+    #[test]
+    fn panic_mode_panics() {
+        let _g = arm("fp.test.panic", 0, FailMode::Panic);
+        let r = std::panic::catch_unwind(|| {
+            let _ = check("fp.test.panic");
+        });
+        assert!(r.is_err());
+    }
+}

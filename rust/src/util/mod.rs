@@ -3,6 +3,7 @@
 //! These replace crates that are unavailable in the offline build
 //! environment (rand, serde_json, humansize) — see DESIGN.md §9.
 
+pub mod failpoint;
 pub mod fmt;
 pub mod json;
 pub mod prng;

@@ -243,7 +243,13 @@ fn run_mini_cluster<K: DeviceKey>(
     medium: SpillMedium,
 ) -> Vec<K> {
     let p = shards.len();
-    let scfg = SihStreamCfg { budget: StreamBudget::bytes(budget_bytes), medium, spill_dir: None };
+    let scfg = SihStreamCfg {
+        budget: StreamBudget::bytes(budget_bytes),
+        medium,
+        spill_dir: None,
+        ckpt_dir: None,
+        resume: false,
+    };
     let ctx = scfg.ctx(Session::threaded(2));
     let mut cfg = SihConfig::default();
     cfg.stream = Some(scfg);
@@ -322,6 +328,105 @@ fn driver_run_leaves_no_spill_behind() {
     assert!(leftovers.is_empty(), "spill leaked: {leftovers:?}");
 }
 
+// ---- crash/resume equivalence (DESIGN.md §15) -----------------------------
+
+use accelkern::util::failpoint::{self, FailMode};
+
+/// Checkpointed cluster config rooted at `dir`.
+fn ckpt_cfg(ranks: usize, regime: Regime, dir: &std::path::Path) -> RunConfig {
+    let mut cfg = cluster_cfg::<i64>(ranks, Distribution::Uniform, regime, false);
+    cfg.stream.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    cfg
+}
+
+/// Run the collective expecting the armed fail point to kill it — an
+/// injected error and a simulated-process-death panic both count as
+/// "the crash", but a genuine (non-injected) error does not.
+fn crash_run(cfg: &RunConfig, site: &str) {
+    let crashed = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_distributed_sort_data::<i64>(cfg, None)
+    })) {
+        Ok(Ok(_)) => false,
+        Ok(Err(e)) => {
+            assert!(
+                failpoint::is_abort(&e),
+                "{site}: genuine failure instead of the injected abort: {e:#}"
+            );
+            true
+        }
+        Err(_) => true,
+    };
+    assert!(crashed, "{site}: the armed fail point must kill the run");
+}
+
+#[test]
+fn seeded_random_kill_site_resumes_bitwise() {
+    // Resume-equivalence proptest: the kill site and abort mode are
+    // drawn from a seeded Prng; wherever the collective dies, the
+    // resumed run must produce bitwise the uninterrupted output. The
+    // guard's fault lock is held across the whole test (disarm, not
+    // drop, before each resume) so no concurrent fault test can arm a
+    // site our resumed runs traverse. Sites shared with the
+    // non-checkpointed paths (sih.exchange.sent, driver.verify,
+    // ext.merge.mid) live in tests/crash_resume.rs, where every test
+    // arms — arming them here would trip the plain-path tests running
+    // concurrently in this binary.
+    const SITES: &[&str] = &[
+        "sih.park",
+        "sih.parked",
+        "sih.splitters",
+        "sih.splitters.recorded",
+        "sih.exchange",
+        "sih.exchange.recorded",
+        "sih.final",
+        "sih.final.mid",
+        "sih.done",
+    ];
+    let parent = TempDirGuard::new(None).unwrap();
+    let mut rng = Prng::new(0xFA117);
+    let guard = failpoint::arm("fp.cluster.hold", 0, FailMode::Error);
+    for trial in 0..4u64 {
+        let site = SITES[(rng.next_u64() % SITES.len() as u64) as usize];
+        let mode =
+            if rng.next_u64() % 2 == 0 { FailMode::Error } else { FailMode::Panic };
+        let dir = parent.path().join(format!("trial-{trial}"));
+        let mut cfg = ckpt_cfg(4, Regime::OnePass, &dir);
+        guard.rearm(site, 0, mode);
+        crash_run(&cfg, site);
+        guard.disarm();
+        cfg.stream.resume = true;
+        let (_, outcomes) = run_distributed_sort_data::<i64>(&cfg, None)
+            .unwrap_or_else(|e| panic!("resume after {site} ({mode:?}) kill: {e:#}"));
+        let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+        assert!(
+            bits_eq(&got, &reference::<i64>(&cfg)),
+            "{site} ({mode:?}): resumed output diverges from the single-node sort"
+        );
+    }
+}
+
+#[test]
+fn double_resume_recovers() {
+    // Crash the collective, crash the *resume* at a later phase, then
+    // resume again: recovery must compose.
+    let parent = TempDirGuard::new(None).unwrap();
+    let dir = parent.path().join("double");
+    let mut cfg = ckpt_cfg(2, Regime::OnePass, &dir);
+    let guard = failpoint::arm("sih.splitters.recorded", 0, FailMode::Error);
+    crash_run(&cfg, "sih.splitters.recorded");
+    cfg.stream.resume = true;
+    guard.rearm("sih.final", 0, FailMode::Panic);
+    crash_run(&cfg, "sih.final");
+    guard.disarm();
+    let (_, outcomes) = run_distributed_sort_data::<i64>(&cfg, None)
+        .unwrap_or_else(|e| panic!("second resume: {e:#}"));
+    let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+    assert!(
+        bits_eq(&got, &reference::<i64>(&cfg)),
+        "double resume diverges from the single-node sort"
+    );
+}
+
 #[test]
 fn spill_cleanup_on_panic_mid_pipeline() {
     // A source that dies mid-stream unwinds through the rank-local
@@ -353,6 +458,8 @@ fn spill_cleanup_on_panic_mid_pipeline() {
         budget: StreamBudget::bytes(2048 * 8),
         medium: SpillMedium::Disk,
         spill_dir: Some(parent.path().to_path_buf()),
+        ckpt_dir: None,
+        resume: false,
     };
     let ctx = scfg.ctx(Session::native());
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {

@@ -1,0 +1,463 @@
+//! Kill-at-every-boundary crash/resume matrix (DESIGN.md §15).
+//!
+//! The contract under test: `external_sort_ckpt` and the checkpointed
+//! SIHSort collective can be killed — by an injected error or by a
+//! panic simulating abrupt process death — at *every* phase/pass
+//! boundary and mid-merge, and a resume over the identical input
+//! produces bitwise what the uninterrupted in-memory `Session::sort`
+//! produces, leaves no orphaned spill files behind, and turns a resume
+//! of an already-complete job into a no-op.
+//!
+//! Every test here arms a fail point and holds the process-wide fault
+//! lock for its full duration (disarm-and-rearm on the same guard,
+//! never drop-and-rearm), so the tests in this binary serialise and
+//! never trip each other's sites. This is also the only binary that
+//! arms sites shared with non-checkpointed paths (`ext.merge.mid`,
+//! `sih.exchange.sent`, `driver.verify`) — arming those in the
+//! equivalence suites would trip their plain-path tests.
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use accelkern::backend::DeviceKey;
+use accelkern::cfg::{RunConfig, Sorter, TransferMode};
+use accelkern::cluster::ClusterSpec;
+use accelkern::comm::Fabric;
+use accelkern::coordinator::driver::run_distributed_sort_data;
+use accelkern::dtype::{bits_eq, ElemType};
+use accelkern::mpisort::{sihsort_rank, LocalSorter, SihConfig, SihStreamCfg};
+use accelkern::session::Session;
+use accelkern::stream::manifest::load_manifest;
+use accelkern::stream::{
+    Checkpoint, MANIFEST_FILE, SliceSource, SpillMedium, StreamBudget, StreamCtx, TempDirGuard,
+    VecSink,
+};
+use accelkern::util::failpoint::{self, FailMode, FailpointGuard};
+use accelkern::util::Prng;
+use accelkern::workload::{generate, Distribution, KeyGen};
+
+// ---- external_sort_ckpt: every boundary ----------------------------------
+
+/// Fixture shape: 40k elements in 5000-element runs at fan-in 2 gives
+/// 8 generation runs, two intermediate merge passes and a final merge —
+/// every site below is reachable at skip 0.
+const EXT_SITES: &[&str] = &[
+    "manifest.rename",
+    "ext.run",
+    "ext.run.recorded",
+    "ext.gen-done",
+    "ext.merge.group",
+    "ext.merge.mid",
+    "ext.merge.retired",
+    "ext.merge.pass",
+    "ext.final",
+    "ext.final.mid",
+];
+
+fn ext_ctx() -> StreamCtx {
+    Session::threaded(2)
+        .stream(StreamBudget::bytes(64))
+        .run_chunk_elems(5000)
+        .fan_in(2)
+        .io_chunk_elems(509)
+}
+
+fn sorted_ref<K: KeyGen + DeviceKey>(data: &[K]) -> Vec<K> {
+    let mut want = data.to_vec();
+    Session::threaded(2).sort(&mut want, None).unwrap();
+    want
+}
+
+/// Run the checkpointed sort expecting the armed site to kill it.
+fn crash_external<K: DeviceKey>(ctx: &StreamCtx, data: &[K], dir: &Path, site: &str) {
+    let crashed = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut sink = VecSink::new();
+        ctx.external_sort_ckpt(
+            &mut SliceSource::new(data),
+            &mut sink,
+            None,
+            &Checkpoint::new(dir, "matrix"),
+        )
+    })) {
+        Ok(Ok(_)) => false,
+        Ok(Err(e)) => {
+            let e: anyhow::Error = e.into();
+            assert!(
+                failpoint::is_abort(&e),
+                "{site}: genuine failure instead of the injected abort: {e:#}"
+            );
+            true
+        }
+        Err(_) => true,
+    };
+    assert!(crashed, "{site}: the armed fail point must kill the run");
+}
+
+/// Resume after the crash: bitwise output, all elements, then assert
+/// the completed job reclaimed every spill file (only the manifest
+/// remains) and that resuming it again is a no-op.
+fn resume_and_verify<K: DeviceKey>(
+    ctx: &StreamCtx,
+    data: &[K],
+    want: &[K],
+    dir: &Path,
+    site: &str,
+) {
+    let mut sink = VecSink::new();
+    let stats = ctx
+        .external_sort_ckpt(
+            &mut SliceSource::new(data),
+            &mut sink,
+            None,
+            &Checkpoint::new(dir, "matrix").resume(),
+        )
+        .unwrap_or_else(|e| panic!("{site}: resume failed: {e:#}"));
+    assert_eq!(stats.elems, data.len() as u64, "{site}");
+    assert!(bits_eq(&sink.out, want), "{site}: resumed output diverges from Session::sort");
+
+    let names: Vec<String> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert_eq!(names, vec![MANIFEST_FILE.to_string()], "{site}: spill files leaked");
+
+    // Completed-job resume is a no-op: the empty source proves the
+    // engine returned before reading anything.
+    let empty: Vec<K> = Vec::new();
+    let mut sink = VecSink::new();
+    let stats = ctx
+        .external_sort_ckpt(
+            &mut SliceSource::new(&empty),
+            &mut sink,
+            None,
+            &Checkpoint::new(dir, "matrix").resume(),
+        )
+        .unwrap();
+    assert!(stats.completed_noop, "{site}: completed job must resume as a no-op");
+    assert!(sink.out.is_empty(), "{site}");
+}
+
+fn external_matrix<K: KeyGen + DeviceKey>(data: &[K], mode: FailMode, guard: &FailpointGuard) {
+    let parent = TempDirGuard::new(None).unwrap();
+    let ctx = ext_ctx();
+    let want = sorted_ref(data);
+    for (i, &site) in EXT_SITES.iter().enumerate() {
+        let dir = parent.path().join(format!("cell-{i}"));
+        guard.rearm(site, 0, mode);
+        crash_external(&ctx, data, &dir, site);
+        guard.disarm();
+        resume_and_verify(&ctx, data, &want, &dir, site);
+    }
+}
+
+#[test]
+fn external_sort_kill_every_boundary_i64() {
+    let guard = failpoint::arm("fp.matrix.hold", 0, FailMode::Error);
+    let data: Vec<i64> = generate(&mut Prng::new(31), Distribution::Uniform, 40_000);
+    external_matrix(&data, FailMode::Error, &guard);
+}
+
+#[test]
+fn external_sort_kill_every_boundary_f64_nan() {
+    // NaN payloads, −0.0, signed infinities and duplicates must survive
+    // every kill/resume bit-exactly.
+    let guard = failpoint::arm("fp.matrix.hold", 0, FailMode::Error);
+    let mut rng = Prng::new(32);
+    let data: Vec<f64> = (0..40_000usize)
+        .map(|i| match i % 9 {
+            0 => f64::NAN,
+            1 => -f64::NAN,
+            2 => -0.0,
+            3 => 0.0,
+            4 => f64::INFINITY,
+            5 => f64::NEG_INFINITY,
+            6 => (i % 13) as f64 - 6.0,
+            _ => <f64 as KeyGen>::uniform(&mut rng),
+        })
+        .collect();
+    external_matrix(&data, FailMode::Error, &guard);
+}
+
+#[test]
+fn external_sort_kill_every_boundary_by_panic() {
+    // The abrupt-death model: no error-path cleanup, only Drop impls.
+    let guard = failpoint::arm("fp.matrix.hold", 0, FailMode::Error);
+    let data: Vec<i64> = generate(&mut Prng::new(33), Distribution::DupHeavy, 40_000);
+    external_matrix(&data, FailMode::Panic, &guard);
+}
+
+#[test]
+fn run_park_crash_keeps_recorded_runs_and_sweeps_the_orphan() {
+    // The satellite-1/2 regression, observed precisely: `ext.run` sits
+    // after a run file is written and fsynced but before the manifest
+    // references it. Killing there with two runs already recorded must
+    // never delete the two checkpointed run files; the unmanifested
+    // third run is reclaimed — by `Drop` during this in-process unwind,
+    // and by the resume's sweep after a hard kill where no `Drop` ran
+    // (simulated below by planting an orphan by hand).
+    let guard = failpoint::arm("ext.run", 2, FailMode::Panic);
+    let parent = TempDirGuard::new(None).unwrap();
+    let dir = parent.path().join("park");
+    let ctx = ext_ctx();
+    let data: Vec<i64> = generate(&mut Prng::new(34), Distribution::Uniform, 40_000);
+    let want = sorted_ref(&data);
+    crash_external(&ctx, &data, &dir, "ext.run");
+    guard.disarm();
+
+    let m = load_manifest(&dir).unwrap().expect("manifest survives the crash");
+    assert_eq!(m.runs.len(), 2, "two runs were recorded before the kill");
+    assert!(!m.gen_done);
+    let mut files: HashSet<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    for r in &m.runs {
+        assert!(files.remove(&r.file), "checkpointed run '{}' was deleted", r.file);
+    }
+    assert!(files.remove(MANIFEST_FILE));
+    assert!(files.is_empty(), "the unwind must reclaim the unmanifested run: {files:?}");
+
+    // A hard kill runs no destructors: fake the orphan such a crash
+    // would strand and let the resume's sweep reclaim it.
+    std::fs::write(dir.join("orphan-999.bin"), b"stranded by a hard kill").unwrap();
+    resume_and_verify(&ctx, &data, &want, &dir, "ext.run");
+}
+
+// ---- the checkpointed SIHSort collective: every boundary ------------------
+
+/// Every kill site of the checkpointed rank pipeline plus the
+/// post-rank driver site, in schedule order.
+const SIH_SITES: &[&str] = &[
+    "sih.park",
+    "sih.parked",
+    "sih.splitters",
+    "sih.splitters.recorded",
+    "sih.exchange.sent",
+    "sih.exchange",
+    "sih.exchange.recorded",
+    "sih.final",
+    "sih.final.mid",
+    "sih.done",
+    "driver.verify",
+];
+
+/// 8192 i64/rank against a 2048-element budget: 8 local runs at
+/// fan-in 2, so every rank streams through the full multi-pass shape.
+fn cluster_cfg(ranks: usize, dir: &Path) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.ranks = ranks;
+    cfg.elems_per_rank = 8192;
+    cfg.dtype = ElemType::I64;
+    cfg.sorter = Sorter::External;
+    cfg.host_threads = 2;
+    cfg.stream.budget_bytes = Some(2048 * 8);
+    cfg.stream.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    cfg
+}
+
+/// Single-node reference over the driver's deterministic shards.
+fn cluster_reference(cfg: &RunConfig) -> Vec<i64> {
+    let mut root = Prng::new(cfg.seed);
+    let mut all: Vec<i64> = Vec::with_capacity(cfg.ranks * cfg.elems_per_rank);
+    for r in 0..cfg.ranks {
+        let mut rng = root.fork(r as u64);
+        all.extend(generate::<i64>(&mut rng, cfg.dist, cfg.elems_per_rank));
+    }
+    Session::threaded(2).sort(&mut all, None).unwrap();
+    all
+}
+
+/// Run the collective expecting the armed site to kill it (the fail
+/// point trips on every rank — all ranks dying at the same site is the
+/// simulated whole-process kill).
+fn crash_driver(cfg: &RunConfig, site: &str) {
+    let crashed = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_distributed_sort_data::<i64>(cfg, None)
+    })) {
+        Ok(Ok(_)) => false,
+        Ok(Err(e)) => {
+            assert!(
+                failpoint::is_abort(&e),
+                "{site}: genuine failure instead of the injected abort: {e:#}"
+            );
+            true
+        }
+        Err(_) => true,
+    };
+    assert!(crashed, "{site}: the armed fail point must kill the collective");
+}
+
+/// After a completed (resumed or uninterrupted) checkpointed collective,
+/// each rank directory holds exactly its manifest plus the manifested
+/// parked-shard and output files — no orphans, no stale exchange runs,
+/// no leftover nested checkpoint.
+fn assert_rank_dirs_clean(root: &Path, ranks: usize) {
+    for r in 0..ranks {
+        let dir = root.join(format!("rank-{r}"));
+        let m = load_manifest(&dir).unwrap().expect("rank manifest");
+        assert_eq!(m.phase, 6, "rank {r}: not committed to the final phase");
+        assert!(
+            m.runs.iter().all(|x| x.pass == 1 || x.pass == 6),
+            "rank {r}: stale exchange runs in the manifest: {:?}",
+            m.runs
+        );
+        let mut expect: HashSet<String> = m.runs.iter().map(|x| x.file.clone()).collect();
+        expect.insert(MANIFEST_FILE.to_string());
+        for e in std::fs::read_dir(&dir).unwrap() {
+            let e = e.unwrap();
+            let name = e.file_name().to_string_lossy().into_owned();
+            assert!(
+                e.file_type().unwrap().is_file(),
+                "rank {r}: leftover directory '{name}' after resume"
+            );
+            assert!(expect.contains(&name), "rank {r}: orphan spill file '{name}'");
+        }
+    }
+}
+
+fn cluster_matrix(ranks: usize, mode: FailMode, sites: &[&'static str], guard: &FailpointGuard) {
+    let parent = TempDirGuard::new(None).unwrap();
+    for (i, &site) in sites.iter().enumerate() {
+        let dir = parent.path().join(format!("cell-{i}"));
+        let mut cfg = cluster_cfg(ranks, &dir);
+        let want = cluster_reference(&cfg);
+        guard.rearm(site, 0, mode);
+        crash_driver(&cfg, site);
+        guard.disarm();
+        cfg.stream.resume = true;
+        let (_, outcomes) = run_distributed_sort_data::<i64>(&cfg, None)
+            .unwrap_or_else(|e| panic!("{site}: resume failed: {e:#}"));
+        let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+        assert!(
+            bits_eq(&got, &want),
+            "{site} (ranks={ranks}): resumed collective diverges from the single-node sort"
+        );
+        assert_rank_dirs_clean(&dir, ranks);
+    }
+}
+
+#[test]
+fn cluster_kill_every_boundary_2_ranks() {
+    let guard = failpoint::arm("fp.matrix.hold", 0, FailMode::Error);
+    cluster_matrix(2, FailMode::Error, SIH_SITES, &guard);
+}
+
+#[test]
+fn cluster_kill_every_boundary_4_ranks() {
+    let guard = failpoint::arm("fp.matrix.hold", 0, FailMode::Error);
+    cluster_matrix(4, FailMode::Error, SIH_SITES, &guard);
+}
+
+#[test]
+fn cluster_kill_by_panic() {
+    // Abrupt-death model across the three structurally distinct
+    // regions: the per-rank park, the deadlock-free mid-exchange site
+    // (all sends queued, no receive started) and the mid-final-merge
+    // loop inside the measured section.
+    let guard = failpoint::arm("fp.matrix.hold", 0, FailMode::Error);
+    cluster_matrix(2, FailMode::Panic, &["sih.park", "sih.exchange.sent", "sih.final.mid"], &guard);
+}
+
+#[test]
+fn completed_cluster_resume_is_a_cheap_reload() {
+    // Resume a collective that already finished: every rank is at
+    // phase 6 and reloads its durable output instead of recomputing;
+    // the driver's verification still passes and the output is
+    // unchanged.
+    let guard = failpoint::arm("fp.matrix.hold", 0, FailMode::Error);
+    guard.disarm();
+    let parent = TempDirGuard::new(None).unwrap();
+    let dir = parent.path().join("completed");
+    let mut cfg = cluster_cfg(2, &dir);
+    let want = cluster_reference(&cfg);
+    let (_, outcomes) = run_distributed_sort_data::<i64>(&cfg, None).unwrap();
+    let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+    assert!(bits_eq(&got, &want));
+    assert_rank_dirs_clean(&dir, 2);
+
+    cfg.stream.resume = true;
+    let (_, outcomes) = run_distributed_sort_data::<i64>(&cfg, None).unwrap();
+    let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+    assert!(bits_eq(&got, &want), "reloaded outputs diverge");
+    assert_rank_dirs_clean(&dir, 2);
+}
+
+// ---- adversarial values through a hand-built checkpointed collective ------
+
+#[test]
+fn nan_neg_zero_cluster_crash_resume_bitwise() {
+    // The driver generates its own workloads, so NaN/−0.0 injection
+    // goes through `sihsort_rank` + `LocalSorter::External` directly
+    // with checkpointing on, killed mid-schedule and resumed.
+    let guard = failpoint::arm("fp.matrix.hold", 0, FailMode::Error);
+    let parent = TempDirGuard::new(None).unwrap();
+    let ck_root = parent.path().join("nan");
+    let mut rng = Prng::new(78);
+    let shards: Vec<Vec<f64>> = (0..2)
+        .map(|_r| {
+            (0..6000usize)
+                .map(|i| match i % 7 {
+                    0 => f64::NAN,
+                    1 => -f64::NAN,
+                    2 => -0.0,
+                    3 => 0.0,
+                    4 => (i % 11) as f64 - 5.0,
+                    5 => f64::INFINITY,
+                    _ => <f64 as KeyGen>::uniform(&mut rng),
+                })
+                .collect()
+        })
+        .collect();
+    let mut want: Vec<f64> = shards.iter().flatten().copied().collect();
+    Session::threaded(2).sort(&mut want, None).unwrap();
+
+    let run_once = |resume: bool| -> Vec<anyhow::Result<(usize, Vec<f64>)>> {
+        let p = shards.len();
+        let scfg = SihStreamCfg {
+            budget: StreamBudget::bytes(2048 * 8),
+            medium: SpillMedium::Disk,
+            spill_dir: None,
+            ckpt_dir: Some(ck_root.clone()),
+            resume,
+        };
+        let ctx = scfg.ctx(Session::threaded(2));
+        let mut cfg = SihConfig::default();
+        cfg.stream = Some(scfg);
+        let eps = Fabric::new(ClusterSpec::baskerville(), TransferMode::GpuDirect, vec![false; p]);
+        let shards = shards.clone();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .zip(shards)
+                .map(|(mut ep, shard)| {
+                    let ctx = ctx.clone();
+                    let cfg = cfg.clone();
+                    s.spawn(move || {
+                        let sorter = LocalSorter::External(ctx);
+                        let o = sihsort_rank(&mut ep, shard, &sorter, &cfg)?;
+                        Ok((ep.rank(), o.data))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    };
+
+    guard.rearm("sih.exchange", 0, FailMode::Error);
+    for res in run_once(false) {
+        let e = res.expect_err("every rank must die at the armed site");
+        assert!(failpoint::is_abort(&e), "{e:#}");
+    }
+    guard.disarm();
+
+    let mut out: Vec<Vec<f64>> = vec![Vec::new(); 2];
+    for res in run_once(true) {
+        let (rank, data) = res.expect("resume must complete");
+        out[rank] = data;
+    }
+    let got: Vec<f64> = out.into_iter().flatten().collect();
+    assert!(
+        bits_eq(&got, &want),
+        "NaN payloads / −0.0 must survive the checkpointed crash/resume bit-exactly"
+    );
+}

@@ -309,6 +309,164 @@ fn spill_dir_cleaned_on_sink_panic() {
     );
 }
 
+// ---- crash/resume equivalence (DESIGN.md §15) -----------------------------
+
+use accelkern::stream::Checkpoint;
+use accelkern::util::failpoint::{self, FailMode};
+
+/// The resumable-sort fixture: 8 generation runs at fan-in 2 (two
+/// intermediate merge passes plus the final), so every kill site below
+/// is reachable.
+fn ckpt_ctx() -> StreamCtx {
+    Session::threaded(2)
+        .stream(StreamBudget::bytes(64))
+        .run_chunk_elems(5000)
+        .fan_in(2)
+        .io_chunk_elems(509)
+}
+
+#[test]
+fn checkpointed_sort_random_kill_sites_resume_bitwise() {
+    // Resume-equivalence proptest: kill site, skip depth and abort mode
+    // are drawn from a seeded Prng; wherever the pipeline dies, a
+    // resumed run over the identical source must produce bitwise the
+    // uninterrupted output. The guard's fault lock is held across the
+    // whole test (disarm, not drop, before each resume) so no
+    // concurrent fault test can arm a site our resumed runs traverse.
+    // `ext.merge.mid` is shared with the plain merge path the other
+    // tests in this binary run concurrently, so it lives in
+    // tests/crash_resume.rs, where every test arms.
+    //
+    // Each site is paired with the largest skip the fixture's pipeline
+    // shape reaches (gen-done and the final merge run once per job).
+    const SITES: &[(&str, u64)] = &[
+        ("manifest.rename", 3),
+        ("ext.run", 3),
+        ("ext.run.recorded", 3),
+        ("ext.gen-done", 0),
+        ("ext.merge.group", 3),
+        ("ext.merge.retired", 3),
+        ("ext.merge.pass", 1),
+        ("ext.final", 0),
+        ("ext.final.mid", 3),
+    ];
+    let parent = TempDirGuard::new(None).unwrap();
+    let data: Vec<i64> = generate(&mut Prng::new(21), Distribution::Uniform, 40_000);
+    let want = sorted_ref(&data);
+    let ctx = ckpt_ctx();
+    let mut rng = Prng::new(0xFA115EED);
+    let guard = failpoint::arm("fp.stream.hold", 0, FailMode::Error);
+    for trial in 0..6u64 {
+        let (site, max_skip) = SITES[(rng.next_u64() % SITES.len() as u64) as usize];
+        let skip = if max_skip == 0 { 0 } else { rng.next_u64() % (max_skip + 1) };
+        let mode =
+            if rng.next_u64() % 2 == 0 { FailMode::Error } else { FailMode::Panic };
+        let dir = parent.path().join(format!("trial-{trial}"));
+        guard.rearm(site, skip, mode);
+        let crashed = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut sink = VecSink::new();
+            ctx.external_sort_ckpt(
+                &mut SliceSource::new(&data),
+                &mut sink,
+                None,
+                &Checkpoint::new(&dir, "proptest"),
+            )
+        })) {
+            Ok(Ok(_)) => false,
+            Ok(Err(e)) => {
+                let e: anyhow::Error = e.into();
+                assert!(
+                    failpoint::is_abort(&e),
+                    "{site}:{skip}: genuine failure instead of the injected abort: {e:#}"
+                );
+                true
+            }
+            Err(_) => true,
+        };
+        guard.disarm();
+        assert!(crashed, "{site}:{skip}: the armed fail point must kill the run");
+        let mut sink = VecSink::new();
+        let stats = ctx
+            .external_sort_ckpt(
+                &mut SliceSource::new(&data),
+                &mut sink,
+                None,
+                &Checkpoint::new(&dir, "proptest").resume(),
+            )
+            .unwrap_or_else(|e| panic!("resume after {site}:{skip} ({mode:?}): {e:#}"));
+        assert!(!stats.completed_noop, "{site}:{skip}: the killed job cannot be complete");
+        assert_eq!(stats.elems, data.len() as u64, "{site}:{skip}");
+        assert!(
+            bits_eq(&sink.out, &want),
+            "{site}:{skip} ({mode:?}): resumed output diverges from the in-memory sort"
+        );
+    }
+}
+
+#[test]
+fn checkpointed_sort_double_resume_then_noop() {
+    // Kill run generation, kill the first resume mid-merge, finish on
+    // the second resume — then resuming the *completed* job must be a
+    // no-op that touches neither source nor sink.
+    let parent = TempDirGuard::new(None).unwrap();
+    let dir = parent.path().join("double");
+    let data: Vec<i64> = generate(&mut Prng::new(22), Distribution::Uniform, 40_000);
+    let want = sorted_ref(&data);
+    let ctx = ckpt_ctx();
+
+    let guard = failpoint::arm("ext.run", 3, FailMode::Error);
+    let e: anyhow::Error = ctx
+        .external_sort_ckpt(
+            &mut SliceSource::new(&data),
+            &mut VecSink::new(),
+            None,
+            &Checkpoint::new(&dir, "double"),
+        )
+        .unwrap_err()
+        .into();
+    assert!(failpoint::is_abort(&e), "{e:#}");
+
+    guard.rearm("ext.merge.retired", 1, FailMode::Error);
+    let e: anyhow::Error = ctx
+        .external_sort_ckpt(
+            &mut SliceSource::new(&data),
+            &mut VecSink::new(),
+            None,
+            &Checkpoint::new(&dir, "double").resume(),
+        )
+        .unwrap_err()
+        .into();
+    assert!(failpoint::is_abort(&e), "{e:#}");
+    guard.disarm();
+
+    let mut sink = VecSink::new();
+    let stats = ctx
+        .external_sort_ckpt(
+            &mut SliceSource::new(&data),
+            &mut sink,
+            None,
+            &Checkpoint::new(&dir, "double").resume(),
+        )
+        .unwrap();
+    assert!(stats.resumed_runs > 0, "the second resume must reuse durable runs");
+    assert!(bits_eq(&sink.out, &want), "double resume diverges from the in-memory sort");
+
+    // Completed-job resume: the empty source proves the engine returned
+    // before reading anything (a real source would be re-supplied here).
+    let empty: Vec<i64> = Vec::new();
+    let mut sink = VecSink::new();
+    let stats = ctx
+        .external_sort_ckpt(
+            &mut SliceSource::new(&empty),
+            &mut sink,
+            None,
+            &Checkpoint::new(&dir, "double").resume(),
+        )
+        .unwrap();
+    assert!(stats.completed_noop, "resuming a completed job must be a no-op");
+    assert!(sink.out.is_empty());
+}
+
 #[test]
 fn topk_and_histogram_streaming_equivalence() {
     let xs: Vec<f32> = generate(&mut Prng::new(9), Distribution::Gaussian, 30_000);
