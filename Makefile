@@ -12,12 +12,16 @@ build:
 test:
 	cargo test -q
 
-# Crash/resume fault-injection matrix (DESIGN.md §15): kill the
+# Fault-injection matrices. Crash/resume (DESIGN.md §15): kill the
 # external and cluster sorts at every phase/pass boundary (error and
 # panic modes), resume from the manifests, assert bitwise-identical
-# output and zero leaked spill files.
+# output and zero leaked spill files. Link faults (DESIGN.md §16):
+# flaky/partitioned links and killed or stalled ranks through the
+# bounded fallible fabric — retries, watchdog, and in-process restarts
+# must recover to the bitwise single-node answer.
 test-faults:
 	cargo test -q -p accelkern --test crash_resume
+	cargo test -q -p accelkern --test fault_recovery
 
 # Docs with warnings promoted to errors (the CI gate): broken intra-doc
 # links on the Session/Launch surface fail the build.

@@ -73,6 +73,15 @@ pub struct ClusterStreamRecord {
     pub bytes_per_sim_sec: f64,
     /// Host wall seconds the whole collective took.
     pub wall_secs: f64,
+    /// Fault/flow counters summed over driver restart attempts
+    /// (DESIGN.md §16): credit-exhausted send stalls, sender retries,
+    /// deadline timeouts, messages eaten by injected faults, and
+    /// in-process recoveries.
+    pub credit_stalls: u64,
+    pub retries: u64,
+    pub timeouts: u64,
+    pub dropped: u64,
+    pub recoveries: u64,
 }
 
 /// The full bench outcome.
@@ -106,10 +115,12 @@ impl ClusterStreamReport {
             .find(|r| r.ranks == ranks && r.dtype == dtype && r.ratio == ratio)
     }
 
-    /// Serialise as JSON (`BENCH_cluster_stream.json`, schema version 1).
+    /// Serialise as JSON (`BENCH_cluster_stream.json`, schema version 2:
+    /// v2 adds the per-row fault/flow counters `credit_stalls`,
+    /// `retries`, `timeouts`, `dropped` and `recoveries`).
     pub fn to_json(&self) -> String {
         let mut s = String::new();
-        s.push_str("{\n  \"version\": 1,\n");
+        s.push_str("{\n  \"version\": 2,\n");
         s.push_str(&format!(
             "  \"elems_per_rank\": {},\n  \"threads\": {},\n  \"spill\": \"{}\",\n  \
              \"verify_seed\": {},\n",
@@ -123,7 +134,9 @@ impl ClusterStreamReport {
                  \"budget_bytes\": {}, \"ratio\": {}, \"runs_max\": {}, \
                  \"merge_passes_max\": {}, \"local_spilled_bytes\": {}, \
                  \"exchange_spilled_bytes\": {}, \"verified\": {}, \"rounds_used\": {}, \
-                 \"sim_secs\": {:.9}, \"gbps\": {:.6}, \"wall_secs\": {:.6}}}{}\n",
+                 \"sim_secs\": {:.9}, \"gbps\": {:.6}, \"wall_secs\": {:.6}, \
+                 \"credit_stalls\": {}, \"retries\": {}, \"timeouts\": {}, \
+                 \"dropped\": {}, \"recoveries\": {}}}{}\n",
                 r.ranks,
                 r.dtype.name(),
                 r.elems_per_rank,
@@ -138,6 +151,11 @@ impl ClusterStreamReport {
                 r.sim_secs,
                 r.bytes_per_sim_sec / 1e9,
                 r.wall_secs,
+                r.credit_stalls,
+                r.retries,
+                r.timeouts,
+                r.dropped,
+                r.recoveries,
                 if i + 1 == self.records.len() { "" } else { "," },
             ));
         }
@@ -236,6 +254,23 @@ fn bench_config<K: KeyGen + DeviceKey>(
         exchange_spilled += st.exchange_spilled_bytes;
     }
 
+    // Correctness gate 3 (`--faults` smoke): when a fault plan is
+    // injected the run must both verify bitwise (gate 1 above already
+    // hard-errored otherwise) AND show the faults actually fired —
+    // a clean counter set means the injection never exercised the
+    // recovery machinery and the smoke proved nothing.
+    if cfg.comm.faults.is_some() {
+        anyhow::ensure!(
+            out.record.retries > 0
+                || out.record.timeouts > 0
+                || out.record.dropped > 0
+                || out.record.recoveries > 0,
+            "--faults {:?} injected but no fault counter fired \
+             (retries/timeouts/dropped/recoveries all zero)",
+            cfg.comm.faults.as_deref().unwrap_or("")
+        );
+    }
+
     report.records.push(ClusterStreamRecord {
         ranks,
         dtype,
@@ -251,6 +286,11 @@ fn bench_config<K: KeyGen + DeviceKey>(
         sim_secs: out.record.sim_total,
         bytes_per_sim_sec: out.record.throughput_bps(),
         wall_secs: out.record.wall_secs,
+        credit_stalls: out.record.credit_stalls,
+        retries: out.record.retries,
+        timeouts: out.record.timeouts,
+        dropped: out.record.dropped,
+        recoveries: out.record.recoveries,
     });
     Ok(())
 }
@@ -313,6 +353,17 @@ pub fn run_and_emit(base: &RunConfig, quick: bool, out: &Path) -> anyhow::Result
             r.verified,
             r.wall_secs,
         );
+        if r.credit_stalls > 0
+            || r.retries > 0
+            || r.timeouts > 0
+            || r.dropped > 0
+            || r.recoveries > 0
+        {
+            println!(
+                "        faults: stalls={} retries={} timeouts={} dropped={} recoveries={}",
+                r.credit_stalls, r.retries, r.timeouts, r.dropped, r.recoveries,
+            );
+        }
     }
     Ok(())
 }
@@ -338,12 +389,43 @@ mod tests {
         assert!(r.verified > 2);
         assert_eq!(r.budget_bytes, 12_000 * 4 / 8);
         let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
-        assert_eq!(j.get("version").as_usize(), Some(1));
+        assert_eq!(j.get("version").as_usize(), Some(2));
         assert_eq!(j.get("spill").as_str(), Some("memory"));
         // The verification seed is part of the report so `verified`
         // counts are reproducible from the JSON alone.
         assert_eq!(j.get("verify_seed").as_usize(), Some((base.seed ^ 0xC157) as usize));
-        assert_eq!(j.get("results").as_arr().unwrap().len(), 1);
+        let rows = j.get("results").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        // Schema v2: fault counters are present on every row, and a
+        // fault-free run reports them all zero.
+        for key in ["credit_stalls", "retries", "timeouts", "dropped", "recoveries"] {
+            assert_eq!(rows[0].get(key).as_usize(), Some(0), "row key {key}");
+        }
+    }
+
+    #[test]
+    fn faults_smoke_fires_counters_and_verifies() {
+        // The CI `--faults` smoke in miniature: a lossy link through a
+        // full External-sorter collective must still verify bitwise and
+        // must show non-zero fault counters (else bench_config bails).
+        // The drop rule makes the counters deterministic; the flaky
+        // rule keeps some seeded chaos on top.
+        let mut base = RunConfig::default();
+        base.elems_per_rank = 6_000;
+        base.host_threads = 2;
+        base.stream.spill_memory = true;
+        base.comm.faults = Some("drop:0:1:2, flaky:0:1:0.25".into());
+        base.comm.fault_seed = 7;
+        base.comm.retry_attempts = 10;
+        base.comm.max_restarts = 2;
+        let report =
+            run_cluster_stream_bench(&base, &[2], &[8], &[ElemType::I64]).unwrap();
+        let r = report.get(2, ElemType::I64, 8).unwrap();
+        assert!(r.verified > 2);
+        assert!(
+            r.dropped >= 2 && r.retries >= 2,
+            "lossy link fired nothing: {r:?}"
+        );
     }
 
     #[test]

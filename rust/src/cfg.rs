@@ -350,6 +350,100 @@ impl StreamCfg {
     }
 }
 
+/// Fabric transport settings (`[comm]` section and CLI flags —
+/// DESIGN.md §16): per-link credit caps, blocking-wait deadlines, the
+/// sender retry policy, deterministic fault injection, and the driver's
+/// restart/watchdog budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommCfg {
+    /// In-flight credit cap per NVLink hop (MB; `cap_nvlink_mb`).
+    pub cap_nvlink_mb: f64,
+    /// In-flight credit cap per InfiniBand hop (MB; `cap_ib_mb`).
+    pub cap_ib_mb: f64,
+    /// In-flight credit cap per PCIe hop (MB; `cap_pcie_mb`).
+    pub cap_pcie_mb: f64,
+    /// In-flight credit cap per host-memory hop (MB; `cap_hostmem_mb`).
+    pub cap_hostmem_mb: f64,
+    /// Deadline of every blocking receive / barrier (wall seconds).
+    pub recv_timeout_secs: f64,
+    /// Deadline of a credit-blocked send (wall seconds).
+    pub send_timeout_secs: f64,
+    /// Sender retry attempts per message on retryable comm timeouts.
+    pub retry_attempts: u32,
+    /// First-retry backoff (simulated seconds; doubles per attempt).
+    pub retry_base_secs: f64,
+    /// Driver watchdog: wall seconds before a hung collective is
+    /// aborted and reported with per-rank diagnostics.
+    pub watchdog_secs: f64,
+    /// In-process restart attempts after a recoverable rank death
+    /// (`--max-restarts`; checkpointed ranks resume from manifests).
+    pub max_restarts: u32,
+    /// Deterministic link/rank fault spec (`--faults`; see
+    /// [`crate::comm::FaultPlan::parse`] for the grammar).
+    pub faults: Option<String>,
+    /// Seed for the fault plan's deterministic draws (`--fault-seed`).
+    pub fault_seed: u64,
+}
+
+impl Default for CommCfg {
+    fn default() -> Self {
+        Self {
+            cap_nvlink_mb: 64.0,
+            cap_ib_mb: 64.0,
+            cap_pcie_mb: 64.0,
+            cap_hostmem_mb: 64.0,
+            recv_timeout_secs: 600.0,
+            send_timeout_secs: 600.0,
+            retry_attempts: 4,
+            retry_base_secs: 1e-4,
+            watchdog_secs: 300.0,
+            max_restarts: 0,
+            faults: None,
+            fault_seed: 0,
+        }
+    }
+}
+
+impl CommCfg {
+    /// Set every per-link credit cap at once (`cap_mb` /
+    /// `--comm-cap-mb`).
+    pub fn set_all_caps_mb(&mut self, mb: f64) {
+        self.cap_nvlink_mb = mb;
+        self.cap_ib_mb = mb;
+        self.cap_pcie_mb = mb;
+        self.cap_hostmem_mb = mb;
+    }
+
+    /// The parsed fault plan, if a spec is configured.
+    pub fn fault_plan(&self) -> anyhow::Result<Option<crate::comm::FaultPlan>> {
+        self.faults
+            .as_deref()
+            .map(|s| crate::comm::FaultPlan::parse(s, self.fault_seed))
+            .transpose()
+    }
+
+    /// Build the fabric tuning these knobs describe (epoch 0, no fault
+    /// state — the driver attaches both per restart attempt).
+    pub fn tuning(&self) -> crate::comm::CommTuning {
+        let mb = |v: f64| ((v * 1e6) as usize).max(1);
+        crate::comm::CommTuning {
+            cap_nvlink: mb(self.cap_nvlink_mb),
+            cap_ib: mb(self.cap_ib_mb),
+            cap_pcie: mb(self.cap_pcie_mb),
+            cap_hostmem: mb(self.cap_hostmem_mb),
+            recv_timeout_secs: self.recv_timeout_secs,
+            send_timeout_secs: self.send_timeout_secs,
+            retry: crate::comm::RetryPolicy {
+                max_attempts: self.retry_attempts,
+                base_secs: self.retry_base_secs,
+                ..crate::comm::RetryPolicy::default()
+            },
+            faults: None,
+            epoch: 0,
+        }
+    }
+}
+
 /// Top-level run configuration (CLI + config file).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -394,6 +488,8 @@ pub struct RunConfig {
     /// Streaming / out-of-core settings (`[stream]` section and the
     /// `bench-stream` flags — DESIGN.md §13).
     pub stream: StreamCfg,
+    /// Fabric transport settings (`[comm]` section — DESIGN.md §16).
+    pub comm: CommCfg,
 }
 
 impl Default for RunConfig {
@@ -416,6 +512,7 @@ impl Default for RunConfig {
             hybrid_host_fraction: None,
             launch: crate::session::Launch::default(),
             stream: StreamCfg::default(),
+            comm: CommCfg::default(),
         }
     }
 }
@@ -500,6 +597,57 @@ impl RunConfig {
         if let Some(v) = doc.get("stream", "resume").and_then(|v| v.as_bool()) {
             self.stream.resume = v;
         }
+        // Fabric transport settings ([comm] section — DESIGN.md §16).
+        if let Some(v) = doc.get("comm", "cap_mb").and_then(|v| v.as_f64()) {
+            anyhow::ensure!(v > 0.0, "comm cap_mb must be positive, got {v}");
+            self.comm.set_all_caps_mb(v);
+        }
+        for (key, slot) in [
+            ("cap_nvlink_mb", 0usize),
+            ("cap_ib_mb", 1),
+            ("cap_pcie_mb", 2),
+            ("cap_hostmem_mb", 3),
+        ] {
+            if let Some(v) = doc.get("comm", key).and_then(|v| v.as_f64()) {
+                anyhow::ensure!(v > 0.0, "comm {key} must be positive, got {v}");
+                match slot {
+                    0 => self.comm.cap_nvlink_mb = v,
+                    1 => self.comm.cap_ib_mb = v,
+                    2 => self.comm.cap_pcie_mb = v,
+                    _ => self.comm.cap_hostmem_mb = v,
+                }
+            }
+        }
+        if let Some(v) = doc.get("comm", "recv_timeout_secs").and_then(|v| v.as_f64()) {
+            anyhow::ensure!(v > 0.0, "comm recv_timeout_secs must be positive, got {v}");
+            self.comm.recv_timeout_secs = v;
+        }
+        if let Some(v) = doc.get("comm", "send_timeout_secs").and_then(|v| v.as_f64()) {
+            anyhow::ensure!(v > 0.0, "comm send_timeout_secs must be positive, got {v}");
+            self.comm.send_timeout_secs = v;
+        }
+        if let Some(v) = doc.get("comm", "retry_attempts").and_then(|v| v.as_i64()) {
+            self.comm.retry_attempts = (v.max(1)) as u32;
+        }
+        if let Some(v) = doc.get("comm", "retry_base_secs").and_then(|v| v.as_f64()) {
+            anyhow::ensure!(v > 0.0, "comm retry_base_secs must be positive, got {v}");
+            self.comm.retry_base_secs = v;
+        }
+        if let Some(v) = doc.get("comm", "watchdog_secs").and_then(|v| v.as_f64()) {
+            anyhow::ensure!(v > 0.0, "comm watchdog_secs must be positive, got {v}");
+            self.comm.watchdog_secs = v;
+        }
+        if let Some(v) = doc.get("comm", "max_restarts").and_then(|v| v.as_i64()) {
+            self.comm.max_restarts = (v.max(0)) as u32;
+        }
+        if let Some(v) = doc.get("comm", "faults").and_then(|v| v.as_str()) {
+            self.comm.faults = Some(v.to_string());
+        }
+        if let Some(v) = doc.get("comm", "fault_seed").and_then(|v| v.as_i64()) {
+            self.comm.fault_seed = v as u64;
+        }
+        // Fail at config time, not mid-run, on an unparsable fault spec.
+        self.comm.fault_plan()?;
         self.cluster.apply_toml(doc)?;
         Ok(())
     }
@@ -584,6 +732,40 @@ mod tests {
         let bad = Toml::parse("[stream]\nspill = \"tape\"\n").unwrap();
         assert!(RunConfig::default().apply_toml(&bad).is_err());
         assert!(StreamCfg::parse_spill("disk").is_ok_and(|m| !m));
+    }
+
+    #[test]
+    fn comm_section_via_toml() {
+        let doc = Toml::parse(
+            "[comm]\ncap_mb = 8\ncap_ib_mb = 2.5\nrecv_timeout_secs = 30\n\
+             retry_attempts = 6\nwatchdog_secs = 45\nmax_restarts = 2\n\
+             faults = \"flaky:0:1:0.25, kill:1:3:exchange\"\nfault_seed = 7\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.comm, CommCfg::default());
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.comm.cap_nvlink_mb, 8.0);
+        assert_eq!(cfg.comm.cap_ib_mb, 2.5, "specific cap overrides the blanket cap_mb");
+        assert_eq!(cfg.comm.cap_pcie_mb, 8.0);
+        assert_eq!(cfg.comm.recv_timeout_secs, 30.0);
+        assert_eq!(cfg.comm.retry_attempts, 6);
+        assert_eq!(cfg.comm.watchdog_secs, 45.0);
+        assert_eq!(cfg.comm.max_restarts, 2);
+        assert_eq!(cfg.comm.fault_seed, 7);
+        let plan = cfg.comm.fault_plan().unwrap().expect("spec parsed");
+        assert_eq!(plan.rules.len(), 2);
+        // The tuning carries the caps in bytes and the retry policy.
+        let t = cfg.comm.tuning();
+        assert_eq!(t.cap_nvlink, 8_000_000);
+        assert_eq!(t.cap_ib, 2_500_000);
+        assert_eq!(t.retry.max_attempts, 6);
+        // Unparsable fault specs fail at config time.
+        let bad = Toml::parse("[comm]\nfaults = \"melt:0\"\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&bad).is_err());
+        // Non-positive caps are rejected.
+        let bad = Toml::parse("[comm]\ncap_mb = 0\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&bad).is_err());
     }
 
     #[test]

@@ -91,6 +91,27 @@ COMMON FLAGS
                        same config (seed, dtype, budget) must be given
                        ([stream] resume)
 
+COMM / FAULT FLAGS (bounded fallible fabric — DESIGN.md §16)
+  --comm-cap-mb X      per-link in-flight credit cap in MB for every
+                       link kind ([comm] cap_mb; per-kind keys
+                       cap_nvlink_mb/cap_ib_mb/cap_pcie_mb/
+                       cap_hostmem_mb in TOML; default 64)
+  --recv-timeout SECS  deadline of every blocking receive/barrier
+                       ([comm] recv_timeout_secs; default 600)
+  --watchdog-secs SECS driver watchdog: abort + per-rank diagnostics if
+                       the collective has not joined by then
+                       ([comm] watchdog_secs; default 300)
+  --max-restarts N     in-process restart attempts after a recoverable
+                       rank death / comm timeout; checkpointed runs
+                       resume from their manifests ([comm] max_restarts;
+                       default 0)
+  --faults SPEC        deterministic fault plan, comma-separated rules:
+                       drop:SRC:DST:N, flaky:SRC:DST:P, delay:SRC:DST:S,
+                       partition:K:OPS, kill:RANK:N[:PHASE],
+                       stall:RANK:N[:PHASE]  ([comm] faults)
+  --fault-seed N       seed for the plan's random draws ([comm]
+                       fault_seed; default 0)
+
 LAUNCH KNOBS (per-call tuning, Session/Launch API — DESIGN.md §12)
   --max-tasks N        cap host worker tasks per call
   --min-elems-per-task N  spawn no task for fewer elements
@@ -247,6 +268,30 @@ impl Cli {
         if self.has("resume") {
             cfg.stream.resume = true;
         }
+        // Comm / fault flags (DESIGN.md §16).
+        if let Some(v) = self.get_f64("comm-cap-mb")? {
+            anyhow::ensure!(v > 0.0, "--comm-cap-mb: expected a positive size, got {v}");
+            cfg.comm.set_all_caps_mb(v);
+        }
+        if let Some(v) = self.get_f64("recv-timeout")? {
+            anyhow::ensure!(v > 0.0, "--recv-timeout: expected positive seconds, got {v}");
+            cfg.comm.recv_timeout_secs = v;
+        }
+        if let Some(v) = self.get_f64("watchdog-secs")? {
+            anyhow::ensure!(v > 0.0, "--watchdog-secs: expected positive seconds, got {v}");
+            cfg.comm.watchdog_secs = v;
+        }
+        if let Some(v) = self.get_usize("max-restarts")? {
+            cfg.comm.max_restarts = v as u32;
+        }
+        if let Some(v) = self.get("faults") {
+            cfg.comm.faults = Some(v.to_string());
+        }
+        if let Some(v) = self.get_usize("fault-seed")? {
+            cfg.comm.fault_seed = v as u64;
+        }
+        // Unparsable fault specs fail at flag-parse time, not mid-run.
+        cfg.comm.fault_plan().context("--faults")?;
         cfg.launch = self.launch_overrides(cfg.launch.clone())?;
         Ok(cfg)
     }
@@ -375,6 +420,29 @@ mod tests {
         // Bad values error.
         assert!(Cli::parse(args("sort --local-sorter nope")).unwrap().run_config().is_err());
         assert!(Cli::parse(args("sort --stream-budget-mb -1")).unwrap().run_config().is_err());
+    }
+
+    #[test]
+    fn comm_flags_flow_into_config() {
+        let c = Cli::parse(args(
+            "sort --comm-cap-mb 4 --recv-timeout 30 --watchdog-secs 20 --max-restarts 2 \
+             --faults flaky:0:1:0.1,kill:1:3:exchange --fault-seed 9",
+        ))
+        .unwrap();
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.comm.cap_nvlink_mb, 4.0);
+        assert_eq!(cfg.comm.cap_hostmem_mb, 4.0);
+        assert_eq!(cfg.comm.recv_timeout_secs, 30.0);
+        assert_eq!(cfg.comm.watchdog_secs, 20.0);
+        assert_eq!(cfg.comm.max_restarts, 2);
+        assert_eq!(cfg.comm.fault_seed, 9);
+        assert_eq!(cfg.comm.fault_plan().unwrap().unwrap().rules.len(), 2);
+        // Defaults hold with no flags.
+        let cfg = Cli::parse(args("sort")).unwrap().run_config().unwrap();
+        assert_eq!(cfg.comm, crate::cfg::CommCfg::default());
+        // Bad specs and non-positive caps error at parse time.
+        assert!(Cli::parse(args("sort --faults melt:0")).unwrap().run_config().is_err());
+        assert!(Cli::parse(args("sort --comm-cap-mb 0")).unwrap().run_config().is_err());
     }
 
     #[test]

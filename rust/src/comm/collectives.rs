@@ -6,8 +6,18 @@
 //! costs O(log P) rounds, matching real MPI. `alltoallv` is inherently
 //! O(P) messages per rank. Every collective advances the same `coll_seq`
 //! on every rank so tags can never cross-talk between phases.
+//!
+//! Every collective is fallible (PR 7): sends go through
+//! [`Endpoint::send_retry`] so transient link faults are absorbed by
+//! bounded backoff at the sender, and a dead rank or deadline surfaces
+//! as a typed [`crate::session::AkError`] instead of a hang or panic.
+//! Credit-flow safety: each collective uses any `(src, dst)` link at
+//! most once per invocation, and every protocol message is consumed by
+//! its target *during* the collective — exhausted credit can therefore
+//! stall a sender (until the receiver consumes) but never deadlock it.
 
 use crate::dtype::SortKey;
+use crate::session::AkResult;
 
 use super::fabric::Endpoint;
 use super::wire::{bytes_to_vec, vec_to_bytes};
@@ -15,7 +25,7 @@ use super::wire::{bytes_to_vec, vec_to_bytes};
 impl Endpoint {
     /// Broadcast bytes from `root` (binomial tree); returns the payload on
     /// every rank.
-    pub fn bcast_bytes(&mut self, root: usize, bytes: Vec<u8>) -> Vec<u8> {
+    pub fn bcast_bytes(&mut self, root: usize, bytes: Vec<u8>) -> AkResult<Vec<u8>> {
         let tag = self.next_coll_tag();
         let me = self.rank();
         let p = self.nranks();
@@ -26,7 +36,7 @@ impl Endpoint {
         while mask < p {
             if rel & mask != 0 {
                 let src = (me + p - mask) % p;
-                payload = self.recv_bytes(src, tag);
+                payload = self.recv_bytes(src, tag)?;
                 break;
             }
             mask <<= 1;
@@ -36,16 +46,16 @@ impl Endpoint {
         while mask > 0 {
             if rel + mask < p {
                 let dst = (me + mask) % p;
-                self.send_bytes(dst, tag, payload.clone());
+                self.send_retry(dst, tag, &payload)?;
             }
             mask >>= 1;
         }
-        payload
+        Ok(payload)
     }
 
     /// Typed broadcast.
-    pub fn bcast<K: SortKey>(&mut self, root: usize, xs: Vec<K>) -> Vec<K> {
-        bytes_to_vec(&self.bcast_bytes(root, vec_to_bytes(&xs)))
+    pub fn bcast<K: SortKey>(&mut self, root: usize, xs: Vec<K>) -> AkResult<Vec<K>> {
+        Ok(bytes_to_vec(&self.bcast_bytes(root, vec_to_bytes(&xs))?))
     }
 
     /// Gather per-rank byte payloads at `root` (None elsewhere), indexed
@@ -53,7 +63,7 @@ impl Endpoint {
     /// into a framed buffer ([u64 src][u64 len][bytes]...) and forwards it
     /// once — O(log P) rounds, same total bytes through the root as the
     /// linear algorithm.
-    pub fn gather_bytes(&mut self, root: usize, bytes: Vec<u8>) -> Option<Vec<Vec<u8>>> {
+    pub fn gather_bytes(&mut self, root: usize, bytes: Vec<u8>) -> AkResult<Option<Vec<Vec<u8>>>> {
         let tag = self.next_coll_tag();
         let me = self.rank();
         let p = self.nranks();
@@ -68,12 +78,12 @@ impl Endpoint {
             if rel & mask != 0 {
                 // Send the accumulated subtree to the parent and stop.
                 let dst = (me + p - mask) % p;
-                self.send_bytes(dst, tag, acc);
-                return None;
+                self.send_retry(dst, tag, &acc)?;
+                return Ok(None);
             }
             if rel + mask < p {
                 let src = (me + mask) % p;
-                let sub = self.recv_bytes(src, tag);
+                let sub = self.recv_bytes(src, tag)?;
                 acc.extend_from_slice(&sub);
             }
             mask <<= 1;
@@ -86,19 +96,20 @@ impl Endpoint {
             out[src as usize] = payload;
             off = next;
         }
-        Some(out)
+        Ok(Some(out))
     }
 
     /// Typed gather.
-    pub fn gather<K: SortKey>(&mut self, root: usize, xs: &[K]) -> Option<Vec<Vec<K>>> {
-        self.gather_bytes(root, vec_to_bytes(xs))
-            .map(|vs| vs.iter().map(|b| bytes_to_vec(b)).collect())
+    pub fn gather<K: SortKey>(&mut self, root: usize, xs: &[K]) -> AkResult<Option<Vec<Vec<K>>>> {
+        Ok(self
+            .gather_bytes(root, vec_to_bytes(xs))?
+            .map(|vs| vs.iter().map(|b| bytes_to_vec(b)).collect()))
     }
 
     /// Allgather: every rank ends with every rank's payload (gather at
     /// rank 0 + broadcast of the concatenation with a length header).
-    pub fn allgather_bytes(&mut self, bytes: Vec<u8>) -> Vec<Vec<u8>> {
-        let gathered = self.gather_bytes(0, bytes);
+    pub fn allgather_bytes(&mut self, bytes: Vec<u8>) -> AkResult<Vec<Vec<u8>>> {
+        let gathered = self.gather_bytes(0, bytes)?;
         // Pack: [n_ranks × u64 length] + concatenated payloads.
         let packed = if self.rank() == 0 {
             let parts = gathered.unwrap();
@@ -113,7 +124,7 @@ impl Endpoint {
         } else {
             Vec::new()
         };
-        let buf = self.bcast_bytes(0, packed);
+        let buf = self.bcast_bytes(0, packed)?;
         let n = self.nranks();
         let mut lens = Vec::with_capacity(n);
         for i in 0..n {
@@ -127,18 +138,18 @@ impl Endpoint {
             out.push(buf[off..off + len].to_vec());
             off += len;
         }
-        out
+        Ok(out)
     }
 
     /// Typed allgather.
-    pub fn allgather<K: SortKey>(&mut self, xs: &[K]) -> Vec<Vec<K>> {
-        self.allgather_bytes(vec_to_bytes(xs)).iter().map(|b| bytes_to_vec(b)).collect()
+    pub fn allgather<K: SortKey>(&mut self, xs: &[K]) -> AkResult<Vec<Vec<K>>> {
+        Ok(self.allgather_bytes(vec_to_bytes(xs))?.iter().map(|b| bytes_to_vec(b)).collect())
     }
 
     /// All-to-all with variable counts: `parts[d]` goes to rank `d`;
     /// returns what every rank sent to *this* rank, indexed by source.
     /// This is SIHSort's single data-exchange step.
-    pub fn alltoallv_bytes(&mut self, parts: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+    pub fn alltoallv_bytes(&mut self, parts: Vec<Vec<u8>>) -> AkResult<Vec<Vec<u8>>> {
         assert_eq!(parts.len(), self.nranks());
         let tag = self.next_coll_tag();
         let me = self.rank();
@@ -149,24 +160,24 @@ impl Endpoint {
         for step in 0..n {
             let dst = (me + step) % n;
             let payload = std::mem::take(&mut parts[dst]);
-            self.send_bytes(dst, tag, payload);
+            self.send_retry(dst, tag, &payload)?;
         }
         for step in 0..n {
             let src = (me + n - step) % n;
-            out[src] = self.recv_bytes(src, tag);
+            out[src] = self.recv_bytes(src, tag)?;
         }
-        out
+        Ok(out)
     }
 
     /// Typed alltoallv over key vectors.
-    pub fn alltoallv<K: SortKey>(&mut self, parts: Vec<Vec<K>>) -> Vec<Vec<K>> {
+    pub fn alltoallv<K: SortKey>(&mut self, parts: Vec<Vec<K>>) -> AkResult<Vec<Vec<K>>> {
         let bytes = parts.into_iter().map(|p| vec_to_bytes(&p)).collect();
-        self.alltoallv_bytes(bytes).iter().map(|b| bytes_to_vec(b)).collect()
+        Ok(self.alltoallv_bytes(bytes)?.iter().map(|b| bytes_to_vec(b)).collect())
     }
 
     /// Allreduce on f64 (sum/min/max): gather to 0, fold, broadcast.
-    pub fn allreduce_f64(&mut self, x: f64, op: ReduceOp) -> f64 {
-        let parts = self.gather_bytes(0, x.to_le_bytes().to_vec());
+    pub fn allreduce_f64(&mut self, x: f64, op: ReduceOp) -> AkResult<f64> {
+        let parts = self.gather_bytes(0, x.to_le_bytes().to_vec())?;
         let folded = if let Some(parts) = parts {
             let vals = parts.iter().map(|b| {
                 let mut a = [0u8; 8];
@@ -181,15 +192,15 @@ impl Endpoint {
         } else {
             0.0
         };
-        let out = self.bcast_bytes(0, folded.to_le_bytes().to_vec());
+        let out = self.bcast_bytes(0, folded.to_le_bytes().to_vec())?;
         let mut a = [0u8; 8];
         a.copy_from_slice(&out);
-        f64::from_le_bytes(a)
+        Ok(f64::from_le_bytes(a))
     }
 
     /// Allreduce on u64 counters.
-    pub fn allreduce_u64(&mut self, x: u64, op: ReduceOp) -> u64 {
-        let parts = self.gather_bytes(0, x.to_le_bytes().to_vec());
+    pub fn allreduce_u64(&mut self, x: u64, op: ReduceOp) -> AkResult<u64> {
+        let parts = self.gather_bytes(0, x.to_le_bytes().to_vec())?;
         let folded = if let Some(parts) = parts {
             let vals = parts.iter().map(|b| {
                 let mut a = [0u8; 8];
@@ -204,10 +215,10 @@ impl Endpoint {
         } else {
             0
         };
-        let out = self.bcast_bytes(0, folded.to_le_bytes().to_vec());
+        let out = self.bcast_bytes(0, folded.to_le_bytes().to_vec())?;
         let mut a = [0u8; 8];
         a.copy_from_slice(&out);
-        u64::from_le_bytes(a)
+        Ok(u64::from_le_bytes(a))
     }
 }
 
@@ -242,7 +253,7 @@ mod tests {
     use super::*;
     use crate::cfg::TransferMode;
     use crate::cluster::ClusterSpec;
-    use crate::comm::fabric::Fabric;
+    use crate::comm::fabric::{CommTuning, Fabric};
 
     fn run_ranks<F, T>(n: usize, f: F) -> Vec<T>
     where
@@ -264,7 +275,7 @@ mod tests {
     fn bcast_reaches_everyone() {
         let out = run_ranks(4, |mut e| {
             let payload = if e.rank() == 2 { vec![7i32, 8, 9] } else { vec![] };
-            e.bcast::<i32>(2, payload)
+            e.bcast::<i32>(2, payload).unwrap()
         });
         for v in out {
             assert_eq!(v, vec![7, 8, 9]);
@@ -275,7 +286,7 @@ mod tests {
     fn gather_collects_by_source() {
         let out = run_ranks(3, |mut e| {
             let mine = vec![e.rank() as i64 * 10];
-            e.gather::<i64>(0, &mine)
+            e.gather::<i64>(0, &mine).unwrap()
         });
         let at_root = out[0].as_ref().unwrap();
         assert_eq!(at_root[0], vec![0]);
@@ -288,7 +299,7 @@ mod tests {
     fn allgather_everywhere() {
         let out = run_ranks(4, |mut e| {
             let mine = vec![e.rank() as i32; e.rank() + 1]; // ragged sizes
-            e.allgather::<i32>(&mine)
+            e.allgather::<i32>(&mine).unwrap()
         });
         for parts in out {
             for (src, p) in parts.iter().enumerate() {
@@ -303,7 +314,7 @@ mod tests {
             let me = e.rank() as i32;
             // Send [me*10 + dst] to each dst.
             let parts: Vec<Vec<i32>> = (0..3).map(|d| vec![me * 10 + d as i32]).collect();
-            e.alltoallv::<i32>(parts)
+            e.alltoallv::<i32>(parts).unwrap()
         });
         for (me, parts) in out.iter().enumerate() {
             for (src, p) in parts.iter().enumerate() {
@@ -314,9 +325,9 @@ mod tests {
 
     #[test]
     fn allreduce_ops() {
-        let sums = run_ranks(4, |mut e| e.allreduce_f64(e.rank() as f64, ReduceOp::Sum));
+        let sums = run_ranks(4, |mut e| e.allreduce_f64(e.rank() as f64, ReduceOp::Sum).unwrap());
         assert!(sums.iter().all(|&s| s == 6.0));
-        let maxs = run_ranks(4, |mut e| e.allreduce_u64(e.rank() as u64, ReduceOp::Max));
+        let maxs = run_ranks(4, |mut e| e.allreduce_u64(e.rank() as u64, ReduceOp::Max).unwrap());
         assert!(maxs.iter().all(|&m| m == 3));
     }
 
@@ -325,10 +336,10 @@ mod tests {
         // Two different collectives back-to-back must not steal each
         // other's messages.
         let out = run_ranks(3, |mut e| {
-            let a = e.allreduce_u64(1, ReduceOp::Sum);
-            let b = e.allgather::<i32>(&[e.rank() as i32]);
-            e.barrier();
-            let c = e.allreduce_u64(10, ReduceOp::Sum);
+            let a = e.allreduce_u64(1, ReduceOp::Sum).unwrap();
+            let b = e.allgather::<i32>(&[e.rank() as i32]).unwrap();
+            e.barrier().unwrap();
+            let c = e.allreduce_u64(10, ReduceOp::Sum).unwrap();
             (a, b.len(), c)
         });
         for (a, blen, c) in out {
@@ -336,5 +347,46 @@ mod tests {
             assert_eq!(blen, 3);
             assert_eq!(c, 30);
         }
+    }
+
+    #[test]
+    fn collectives_survive_a_flaky_link() {
+        // A 30%-flaky link inside a 4-rank job: sender-side bounded
+        // backoff must absorb every drop (deterministic seed).
+        use crate::comm::fault::FaultPlan;
+        let faults = FaultPlan::parse("flaky:0:1:0.3", 11).unwrap().state();
+        let tuning = CommTuning {
+            faults: Some(faults),
+            retry: crate::comm::RetryPolicy { max_attempts: 12, ..Default::default() },
+            ..CommTuning::default()
+        };
+        let eps = Fabric::new_with(
+            ClusterSpec::baskerville(),
+            TransferMode::GpuDirect,
+            vec![true; 4],
+            tuning,
+        );
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut e| {
+                std::thread::spawn(move || {
+                    let mut s = 0;
+                    for _ in 0..6 {
+                        s = e.allreduce_u64(e.rank() as u64 + 1, ReduceOp::Sum).unwrap();
+                    }
+                    let g = e.allgather::<i64>(&[e.rank() as i64]).unwrap();
+                    e.finish();
+                    (s, g.len(), e.stats().fault_counters())
+                })
+            })
+            .collect();
+        let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (s, glen, _) in &outs {
+            assert_eq!(*s, 10);
+            assert_eq!(*glen, 4);
+        }
+        // The seed is chosen so the link actually dropped something.
+        assert!(outs[0].2.dropped > 0, "flaky link never fired: {:?}", outs[0].2);
+        assert_eq!(outs[0].2.retries, outs[0].2.dropped);
     }
 }

@@ -1,15 +1,46 @@
 //! The message fabric: rank endpoints, point-to-point send/recv, logical
 //! clock accounting, and communication statistics.
+//!
+//! Since PR 7 the fabric is a **bounded, fallible** transport
+//! (DESIGN.md §16):
+//!
+//! - **Credit-based flow control** — every `(src, dst)` link carries at
+//!   most `cap` in-flight bytes, where `cap` is the minimum over the
+//!   link's hops of the per-[`LinkKind`] caps in [`CommTuning`].
+//!   Senders block (or report [`TrySend::Full`]) when credit is
+//!   exhausted; credit returns when the *receiver consumes* the
+//!   message, not when it is enqueued — an out-of-order stash therefore
+//!   holds credit and cannot grow past the cap. A message larger than
+//!   the cap is admitted only when its link is idle, so oversized
+//!   collective payloads make progress instead of deadlocking.
+//! - **Fallible API** — send/recv return [`AkResult`]; every blocking
+//!   wait carries a deadline and surfaces
+//!   [`AkError::CommTimeout`], and a dead peer surfaces as
+//!   [`AkError::RankDead`] with rank attribution instead of the old
+//!   cross-thread `.expect()` panic.
+//! - **Fault injection** — an optional [`FaultState`]
+//!   (see [`super::fault`]) drops, delays, or partitions links and
+//!   kills or stalls ranks at deterministic message boundaries; the
+//!   `comm.send` / `comm.recv` [`crate::util::failpoint`] hooks compose
+//!   with it.
+//! - **Coordinated abort** — a rank that dies (kill fault, panic, or a
+//!   fatal comm error) trips an epoch-tagged abort flag on drop; every
+//!   blocked survivor wakes with `RankDead` so the driver can join all
+//!   threads, then restart and resume the job ([`FabricCtl::abort_all`]
+//!   is the watchdog's handle on the same mechanism).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use crate::cfg::TransferMode;
 use crate::cluster::{ClusterSpec, LinkKind, SimClocks};
 use crate::dtype::SortKey;
+use crate::session::{AkError, AkResult};
+use crate::util::failpoint;
 
+use super::fault::{FaultState, OpFault, RetryPolicy, SendFault};
 use super::wire::{bytes_to_vec, vec_to_bytes};
 
 /// One in-flight message.
@@ -19,6 +50,89 @@ struct Msg {
     bytes: Vec<u8>,
     /// Simulated arrival time at the destination.
     arrive: f64,
+    /// Bytes charged against the link's credit (0 for self-sends).
+    charged: usize,
+}
+
+/// Tuning knobs of the bounded fabric (derived from `[comm]` config by
+/// the driver; [`Default`] gives generous caps and deadlines suitable
+/// for fault-free runs).
+#[derive(Clone, Debug)]
+pub struct CommTuning {
+    /// In-flight byte cap per NVLink hop.
+    pub cap_nvlink: usize,
+    /// In-flight byte cap per InfiniBand hop.
+    pub cap_ib: usize,
+    /// In-flight byte cap per PCIe hop.
+    pub cap_pcie: usize,
+    /// In-flight byte cap per host-memory hop.
+    pub cap_hostmem: usize,
+    /// Deadline of every blocking receive / barrier (wall seconds).
+    pub recv_timeout_secs: f64,
+    /// Deadline of a credit-blocked send (wall seconds).
+    pub send_timeout_secs: f64,
+    /// Sender-side retry policy for retryable comm timeouts.
+    pub retry: RetryPolicy,
+    /// Deterministic fault injection (shared across restart attempts).
+    pub faults: Option<Arc<FaultState>>,
+    /// Coordinated-abort epoch (the driver's restart-attempt index).
+    pub epoch: u64,
+}
+
+impl Default for CommTuning {
+    fn default() -> CommTuning {
+        CommTuning {
+            cap_nvlink: 64 << 20,
+            cap_ib: 64 << 20,
+            cap_pcie: 64 << 20,
+            cap_hostmem: 64 << 20,
+            recv_timeout_secs: 600.0,
+            send_timeout_secs: 600.0,
+            retry: RetryPolicy::default(),
+            faults: None,
+            epoch: 0,
+        }
+    }
+}
+
+impl CommTuning {
+    fn cap(&self, kind: LinkKind) -> usize {
+        match kind {
+            LinkKind::NvLink => self.cap_nvlink,
+            LinkKind::Infiniband => self.cap_ib,
+            LinkKind::PcieD2H => self.cap_pcie,
+            LinkKind::HostMem => self.cap_hostmem,
+        }
+    }
+}
+
+/// Fault/flow counters extracted from [`CommStats`] for records and
+/// bench reports (aggregatable across driver restart attempts).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Sends that blocked at least once on exhausted link credit.
+    pub credit_stalls: u64,
+    /// Sender-side retries after a retryable comm timeout.
+    pub retries: u64,
+    /// Operations that gave up at a deadline (or saw a fault drop).
+    pub timeouts: u64,
+    /// Messages eaten by injected link faults.
+    pub dropped: u64,
+}
+
+impl FaultCounters {
+    /// Element-wise accumulate (the driver sums attempts).
+    pub fn add(&mut self, o: FaultCounters) {
+        self.credit_stalls += o.credit_stalls;
+        self.retries += o.retries;
+        self.timeouts += o.timeouts;
+        self.dropped += o.dropped;
+    }
+
+    /// True when any fault-path counter is non-zero (CI smoke gate).
+    pub fn any_faults(&self) -> bool {
+        self.retries > 0 || self.timeouts > 0 || self.dropped > 0
+    }
 }
 
 /// Cumulative fabric statistics (shared across ranks).
@@ -30,6 +144,19 @@ pub struct CommStats {
     pub ib_bytes: AtomicU64,
     pub pcie_bytes: AtomicU64,
     pub hostmem_bytes: AtomicU64,
+    /// Sends that blocked at least once on exhausted link credit.
+    pub credit_stalls: AtomicU64,
+    /// Sender-side retries after a retryable comm timeout.
+    pub retries: AtomicU64,
+    /// Operations that gave up at a deadline (or saw a fault drop).
+    pub timeouts: AtomicU64,
+    /// Messages eaten by injected link faults.
+    pub dropped: AtomicU64,
+    /// Messages delivered with injected extra latency.
+    pub delayed: AtomicU64,
+    /// Peak in-flight bytes observed on any single link (proves the
+    /// credit cap held — the flow-control proptest reads this).
+    pub peak_link_bytes: AtomicU64,
 }
 
 impl CommStats {
@@ -47,9 +174,52 @@ impl CommStats {
         }
     }
 
+    fn note_peak(&self, in_flight: usize) {
+        self.peak_link_bytes.fetch_max(in_flight as u64, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> (u64, u64) {
         (self.messages.load(Ordering::Relaxed), self.bytes.load(Ordering::Relaxed))
     }
+
+    /// The fault/flow counters (see [`FaultCounters`]).
+    pub fn fault_counters(&self) -> FaultCounters {
+        FaultCounters {
+            credit_stalls: self.credit_stalls.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Coordinated-abort marker: which rank died, in which epoch.
+#[derive(Clone, Copy, Debug)]
+struct Abort {
+    rank: usize,
+    epoch: u64,
+}
+
+/// Everything the condvar guards: inboxes, credit ledger, liveness,
+/// abort flag, barrier generation, and per-rank phase notes.
+struct State {
+    /// Per-destination inbox (FIFO per link by construction: a sender
+    /// appends its link's messages in program order under the lock).
+    inboxes: Vec<VecDeque<Msg>>,
+    /// In-flight (sent, not yet consumed) bytes per `src * p + dst`.
+    in_flight: Vec<usize>,
+    /// Simulated time at which each link last returned credit; a
+    /// sender that stalled resumes no earlier than this.
+    release_clock: Vec<f64>,
+    /// False once a rank's endpoint dropped.
+    alive: Vec<bool>,
+    /// Set when a rank died *with failure* (or the watchdog fired).
+    abort: Option<Abort>,
+    /// Barrier generation counter + arrivals this generation.
+    bar_gen: u64,
+    bar_arrived: usize,
+    /// Last phase note per rank (watchdog diagnostics).
+    phases: Vec<&'static str>,
 }
 
 struct Shared {
@@ -59,25 +229,43 @@ struct Shared {
     stats: CommStats,
     /// Per-rank: does this rank host a device (GPU) or is it a CPU rank?
     device: Vec<bool>,
-    barrier: Barrier,
+    tuning: CommTuning,
+    state: Mutex<State>,
+    cv: Condvar,
     /// Compute token: measured-compute sections run one at a time so the
     /// wall time a rank observes is its own work, not oversubscription
     /// noise from the other rank threads sharing this host's cores.
     /// Logical clocks make the serialisation invisible in simulated time.
-    compute: std::sync::Mutex<()>,
+    compute: Mutex<()>,
+}
+
+impl Shared {
+    /// Lock the state, surviving a poisoned mutex (a rank thread that
+    /// panicked mid-op must not take the whole fabric down with it).
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
 }
 
 /// Builder for a set of connected [`Endpoint`]s.
 pub struct Fabric;
 
 impl Fabric {
-    /// Create `ranks` endpoints. `device[r]` marks device ranks (affects
-    /// link selection and the device model); pass all-true for GPU runs,
-    /// all-false for the "CC-JB" CPU algorithm, or a mix for co-sorting.
-    pub fn new(
+    /// Create `ranks` endpoints with default [`CommTuning`]. `device[r]`
+    /// marks device ranks (affects link selection and the device model);
+    /// pass all-true for GPU runs, all-false for the "CC-JB" CPU
+    /// algorithm, or a mix for co-sorting.
+    pub fn new(spec: ClusterSpec, mode: TransferMode, device: Vec<bool>) -> Vec<Endpoint> {
+        Fabric::new_with(spec, mode, device, CommTuning::default())
+    }
+
+    /// [`Fabric::new`] with explicit tuning (credit caps, deadlines,
+    /// retry policy, fault injection, abort epoch).
+    pub fn new_with(
         spec: ClusterSpec,
         mode: TransferMode,
         device: Vec<bool>,
+        tuning: CommTuning,
     ) -> Vec<Endpoint> {
         let ranks = device.len();
         assert!(ranks > 0);
@@ -87,41 +275,141 @@ impl Fabric {
             clocks: SimClocks::new(ranks),
             stats: CommStats::default(),
             device,
-            barrier: Barrier::new(ranks),
-            compute: std::sync::Mutex::new(()),
+            tuning,
+            state: Mutex::new(State {
+                inboxes: (0..ranks).map(|_| VecDeque::new()).collect(),
+                in_flight: vec![0; ranks * ranks],
+                release_clock: vec![0.0; ranks * ranks],
+                alive: vec![true; ranks],
+                abort: None,
+                bar_gen: 0,
+                bar_arrived: 0,
+                phases: vec!["start"; ranks],
+            }),
+            cv: Condvar::new(),
+            compute: Mutex::new(()),
         });
-        let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(ranks);
-        let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(ranks);
-        for _ in 0..ranks {
-            let (tx, rx) = channel();
-            senders.push(tx);
-            receivers.push(rx);
-        }
-        receivers
-            .into_iter()
-            .enumerate()
-            .map(|(rank, rx)| Endpoint {
+        (0..ranks)
+            .map(|rank| Endpoint {
                 rank,
+                nranks: ranks,
                 shared: shared.clone(),
-                senders: senders.clone(),
-                rx,
                 pending: HashMap::new(),
+                stashed: 0,
                 coll_seq: 0,
+                phase: "start",
+                failed: false,
+                finished: false,
             })
             .collect()
     }
 }
 
+/// Per-rank snapshot for watchdog / abort diagnostics.
+#[derive(Clone, Copy, Debug)]
+pub struct RankDiag {
+    /// The rank.
+    pub rank: usize,
+    /// Its last phase note (see [`Endpoint::note_phase`]).
+    pub phase: &'static str,
+    /// Its simulated clock.
+    pub clock: f64,
+    /// Whether its endpoint is still alive.
+    pub alive: bool,
+}
+
+/// Driver-side handle on a fabric: coordinated abort + diagnostics
+/// without owning any rank's [`Endpoint`].
+#[derive(Clone)]
+pub struct FabricCtl {
+    shared: Arc<Shared>,
+}
+
+impl FabricCtl {
+    /// Trip the coordinated abort, blaming `rank`: every blocked fabric
+    /// wait (send credit, recv, barrier, injected stall) wakes with
+    /// [`AkError::RankDead`] so the driver can join all rank threads.
+    pub fn abort_all(&self, rank: usize) {
+        let mut st = self.shared.lock();
+        if st.abort.is_none() {
+            st.abort = Some(Abort { rank, epoch: self.shared.tuning.epoch });
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// Last-known per-rank phase notes, clocks, and liveness.
+    pub fn diagnostics(&self) -> Vec<RankDiag> {
+        let st = self.shared.lock();
+        (0..st.phases.len())
+            .map(|r| RankDiag {
+                rank: r,
+                phase: st.phases[r],
+                clock: self.shared.clocks.get(r),
+                alive: st.alive[r],
+            })
+            .collect()
+    }
+
+    /// One line per rank, for embedding in a watchdog error.
+    pub fn diag_table(&self) -> String {
+        self.diagnostics()
+            .iter()
+            .map(|d| {
+                format!(
+                    "rank {}: phase={} clock={:.6}s {}",
+                    d.rank,
+                    d.phase,
+                    d.clock,
+                    if d.alive { "alive" } else { "dead" }
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("; ")
+    }
+
+    /// The fabric's shared statistics.
+    pub fn stats(&self) -> &CommStats {
+        &self.shared.stats
+    }
+
+    /// Ranks that have not noted completion (`phase != "done"`); the
+    /// watchdog blames the first of these.
+    pub fn unfinished_ranks(&self) -> Vec<usize> {
+        let st = self.shared.lock();
+        (0..st.phases.len()).filter(|&r| st.phases[r] != "done").collect()
+    }
+}
+
+/// Outcome of a non-blocking send attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrySend {
+    /// Enqueued.
+    Sent,
+    /// The link's credit is exhausted; try again after
+    /// [`Endpoint::wait_activity`].
+    Full,
+}
+
 /// A rank's handle on the fabric. Not `Clone`: exactly one per rank.
 pub struct Endpoint {
     rank: usize,
+    nranks: usize,
     shared: Arc<Shared>,
-    senders: Vec<Sender<Msg>>,
-    rx: Receiver<Msg>,
-    /// Out-of-order stash: messages received before they were asked for.
+    /// Out-of-order stash: messages received before they were asked
+    /// for. Stashed messages still hold their link credit (released on
+    /// consumption), so the stash is bounded by the sum of link caps.
     pending: HashMap<(usize, u64), VecDeque<Msg>>,
+    /// Bytes currently held in `pending` (diagnostics / tests).
+    stashed: usize,
     /// Collective sequence number (advances identically on all ranks).
     pub(super) coll_seq: u64,
+    /// Current phase note (fault scoping + watchdog diagnostics).
+    phase: &'static str,
+    /// A fatal comm error surfaced through this endpoint; its drop
+    /// trips the coordinated abort.
+    failed: bool,
+    /// The rank completed cleanly; its drop is not a death.
+    finished: bool,
 }
 
 impl Endpoint {
@@ -130,7 +418,7 @@ impl Endpoint {
     }
 
     pub fn nranks(&self) -> usize {
-        self.senders.len()
+        self.nranks
     }
 
     pub fn is_device(&self) -> bool {
@@ -149,6 +437,21 @@ impl Endpoint {
         &self.shared.stats
     }
 
+    /// The active retry policy (collectives and the exchange share it).
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.shared.tuning.retry.clone()
+    }
+
+    /// The blocking-receive deadline, as a [`Duration`].
+    pub fn recv_timeout(&self) -> Duration {
+        Duration::from_secs_f64(self.shared.tuning.recv_timeout_secs.max(1e-3))
+    }
+
+    /// A driver-side control handle on this endpoint's fabric.
+    pub fn ctl(&self) -> FabricCtl {
+        FabricCtl { shared: self.shared.clone() }
+    }
+
     /// Current simulated time of this rank.
     pub fn now(&self) -> f64 {
         self.shared.clocks.get(self.rank)
@@ -165,72 +468,553 @@ impl Endpoint {
     /// inside `f` (the token would serialise against other ranks' compute
     /// and deadlock a collective).
     pub fn measured<R>(&self, f: impl FnOnce() -> R) -> (R, f64) {
-        let _token = self.shared.compute.lock().unwrap();
-        let t0 = std::time::Instant::now();
+        let _token = self.shared.compute.lock().unwrap_or_else(|e| e.into_inner());
+        let t0 = Instant::now();
         let r = f();
         (r, t0.elapsed().as_secs_f64())
     }
 
+    /// Record the rank's current phase ("local-sort", "splitters",
+    /// "exchange", "final", "done"): scopes phase-targeted fault rules
+    /// and feeds the watchdog's per-rank diagnostics.
+    pub fn note_phase(&mut self, phase: &'static str) {
+        self.phase = phase;
+        let mut st = self.shared.lock();
+        st.phases[self.rank] = phase;
+    }
+
+    /// Mark clean completion: the endpoint's drop will not be treated
+    /// as a rank death. Called at the end of a rank's pipeline, after
+    /// the final barrier.
+    pub fn finish(&mut self) {
+        self.finished = true;
+        self.note_phase("done");
+    }
+
+    /// Mark this endpoint failed and return the error (its drop will
+    /// trip the coordinated abort so peers unblock promptly).
+    fn fatal<T>(&mut self, e: AkError) -> AkResult<T> {
+        self.failed = true;
+        Err(e)
+    }
+
+    fn rank_dead(&mut self, a: Abort) -> AkError {
+        self.failed = true;
+        AkError::RankDead { rank: a.rank, epoch: a.epoch }
+    }
+
+    /// Build (and count) a timeout error; `fatal` decides whether it
+    /// poisons the endpoint (receiver deadlines do, retryable sender
+    /// timeouts don't).
+    fn timeout_err(
+        &mut self,
+        op: &'static str,
+        peer: Option<usize>,
+        waited: Duration,
+        detail: String,
+        fatal: bool,
+    ) -> AkError {
+        self.shared.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+        if fatal {
+            self.failed = true;
+        }
+        AkError::CommTimeout {
+            op,
+            rank: self.rank,
+            peer,
+            waited_secs: waited.as_secs_f64(),
+            detail,
+        }
+    }
+
+    /// Public form of [`Self::timeout_err`] for callers that implement
+    /// their own progress deadline over `try_send`/`try_recv_any` (the
+    /// streamed exchange).
+    pub fn deadline_exceeded(
+        &mut self,
+        op: &'static str,
+        waited: Duration,
+        detail: String,
+    ) -> AkError {
+        self.timeout_err(op, None, waited, detail, true)
+    }
+
+    /// Every fabric op passes through here: failpoint hooks compose
+    /// with the seeded fault plan's kill/stall rules (a "message
+    /// boundary" in the fault grammar is one of these checks).
+    fn op_boundary(&mut self, op: &'static str) -> AkResult<()> {
+        failpoint::check(if op == "send" { "comm.send" } else { "comm.recv" })
+            .map_err(AkError::Internal)?;
+        let Some(faults) = self.shared.tuning.faults.clone() else {
+            return Ok(());
+        };
+        match faults.on_op(self.rank, self.phase) {
+            OpFault::None => Ok(()),
+            OpFault::Kill => {
+                let epoch = self.shared.tuning.epoch;
+                self.fatal(AkError::RankDead { rank: self.rank, epoch })
+            }
+            OpFault::Stall => {
+                // Park on the fabric (not a raw sleep): the watchdog's
+                // `abort_all` must be able to release a stalled rank.
+                let deadline = Instant::now() + self.recv_timeout();
+                let mut st = self.shared.lock();
+                loop {
+                    if let Some(a) = st.abort {
+                        drop(st);
+                        return Err(self.rank_dead(a));
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        let waited = self.recv_timeout();
+                        drop(st);
+                        return Err(self.timeout_err(
+                            op,
+                            None,
+                            waited,
+                            "injected stall never aborted".into(),
+                            true,
+                        ));
+                    }
+                    let (g, _) = self
+                        .shared
+                        .cv
+                        .wait_timeout(st, deadline - now)
+                        .unwrap_or_else(|e| e.into_inner());
+                    st = g;
+                }
+            }
+        }
+    }
+
+    /// The credit cap of the `self.rank → dst` link: minimum over the
+    /// path's hops of the per-kind caps.
+    fn link_cap(&self, hops: &[LinkKind]) -> usize {
+        hops.iter().map(|&k| self.shared.tuning.cap(k)).min().unwrap_or(usize::MAX)
+    }
+
+    fn hops_to(&self, dst: usize) -> Vec<LinkKind> {
+        let is_dev = self.is_device() && self.shared.device[dst];
+        self.shared.spec.hops(self.rank, dst, self.shared.mode, is_dev)
+    }
+
+    /// Enqueue under the lock after admission (credit already charged).
+    fn enqueue(&self, st: &mut State, dst: usize, tag: u64, bytes: &[u8], arrive: f64, len: usize) {
+        st.inboxes[dst].push_back(Msg {
+            src: self.rank,
+            tag,
+            bytes: bytes.to_vec(),
+            arrive,
+            charged: len,
+        });
+        self.shared.cv.notify_all();
+    }
+
+    fn self_send(&mut self, tag: u64, bytes: &[u8]) {
+        let t = self.now();
+        let rank = self.rank;
+        let mut st = self.shared.lock();
+        st.inboxes[rank].push_back(Msg {
+            src: rank,
+            tag,
+            bytes: bytes.to_vec(),
+            arrive: t,
+            charged: 0,
+        });
+        self.shared.cv.notify_all();
+    }
+
+    /// Evaluate link faults for one attempt; `Ok(extra_delay)` or the
+    /// sender-side timeout a dropped message surfaces as (the simulated
+    /// transport is acked — DESIGN.md §16).
+    fn apply_link_faults(&mut self, dst: usize, dt: f64) -> AkResult<f64> {
+        let Some(faults) = self.shared.tuning.faults.clone() else {
+            return Ok(0.0);
+        };
+        match faults.on_send(self.rank, dst) {
+            SendFault::Deliver => Ok(0.0),
+            SendFault::Delayed(secs) => {
+                self.shared.stats.delayed.fetch_add(1, Ordering::Relaxed);
+                Ok(secs)
+            }
+            SendFault::Dropped => {
+                self.shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                // The wire time was still spent before the loss.
+                self.shared.clocks.advance(self.rank, dt);
+                Err(self.timeout_err(
+                    "send",
+                    Some(dst),
+                    Duration::ZERO,
+                    "message dropped by injected link fault".into(),
+                    false,
+                ))
+            }
+        }
+    }
+
     /// Point-to-point send. The sender's clock advances by the transfer
     /// time (its link is busy); the message carries its arrival time.
-    /// Self-sends are free (stay in device memory).
-    pub fn send_bytes(&self, dst: usize, tag: u64, bytes: Vec<u8>) {
+    /// Blocks while the link's in-flight bytes exceed its credit cap;
+    /// self-sends are free (stay in device memory).
+    pub fn send_bytes(&mut self, dst: usize, tag: u64, bytes: &[u8]) -> AkResult<()> {
+        self.op_boundary("send")?;
+        if dst == self.rank {
+            self.self_send(tag, bytes);
+            return Ok(());
+        }
+        let hops = self.hops_to(dst);
+        let dt: f64 = hops.iter().map(|&k| self.shared.spec.hop_time(k, bytes.len())).sum();
+        self.apply_link_faults(dst, dt)?;
+        let cap = self.link_cap(&hops);
+        let len = bytes.len();
+        let link = self.rank * self.nranks + dst;
+        let timeout = Duration::from_secs_f64(self.shared.tuning.send_timeout_secs.max(1e-3));
+        let deadline = Instant::now() + timeout;
+        let mut stalled = false;
+        let mut st = self.shared.lock();
+        loop {
+            if let Some(a) = st.abort {
+                drop(st);
+                return Err(self.rank_dead(a));
+            }
+            if !st.alive[dst] {
+                let epoch = self.shared.tuning.epoch;
+                drop(st);
+                return self.fatal(AkError::RankDead { rank: dst, epoch });
+            }
+            // Admission: fits under the cap, or the link is idle (a
+            // single message larger than the cap must still progress).
+            if st.in_flight[link] == 0 || st.in_flight[link] + len <= cap {
+                break;
+            }
+            if !stalled {
+                stalled = true;
+                self.shared.stats.credit_stalls.fetch_add(1, Ordering::Relaxed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(st);
+                return Err(self.timeout_err(
+                    "send",
+                    Some(dst),
+                    timeout,
+                    format!("link credit exhausted ({} bytes in flight, cap {cap})", len),
+                    false,
+                ));
+            }
+            let (g, _) = self
+                .shared
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = g;
+        }
+        st.in_flight[link] += len;
+        self.shared.stats.note_peak(st.in_flight[link]);
+        if stalled {
+            // Resume no earlier than the consumption that freed credit.
+            self.shared.clocks.merge_at_least(self.rank, st.release_clock[link]);
+        }
         let t_send = self.now();
-        let arrive = if dst == self.rank {
-            t_send
-        } else {
-            let is_dev = self.is_device() && self.shared.device[dst];
-            let hops = self.shared.spec.hops(self.rank, dst, self.shared.mode, is_dev);
-            let dt: f64 =
-                hops.iter().map(|&k| self.shared.spec.hop_time(k, bytes.len())).sum();
-            self.shared.stats.record(&hops, bytes.len());
-            self.shared.clocks.advance(self.rank, dt);
-            t_send + dt
-        };
-        self.senders[dst]
-            .send(Msg { src: self.rank, tag, bytes, arrive })
-            .expect("fabric endpoint dropped");
+        self.shared.stats.record(&hops, len);
+        self.shared.clocks.advance(self.rank, dt);
+        self.enqueue(&mut st, dst, tag, bytes, t_send + dt, len);
+        Ok(())
+    }
+
+    /// Non-blocking send: [`TrySend::Full`] when the link's credit is
+    /// exhausted (the caller should make receive progress, then retry —
+    /// the streamed exchange's interleaved loop). Faulted links error
+    /// exactly like [`Self::send_bytes`].
+    pub fn try_send_bytes(&mut self, dst: usize, tag: u64, bytes: &[u8]) -> AkResult<TrySend> {
+        self.op_boundary("send")?;
+        if dst == self.rank {
+            self.self_send(tag, bytes);
+            return Ok(TrySend::Sent);
+        }
+        let hops = self.hops_to(dst);
+        let cap = self.link_cap(&hops);
+        let len = bytes.len();
+        let link = self.rank * self.nranks + dst;
+        let mut st = self.shared.lock();
+        if let Some(a) = st.abort {
+            drop(st);
+            return Err(self.rank_dead(a));
+        }
+        if !st.alive[dst] {
+            let epoch = self.shared.tuning.epoch;
+            drop(st);
+            return self.fatal(AkError::RankDead { rank: dst, epoch });
+        }
+        if !(st.in_flight[link] == 0 || st.in_flight[link] + len <= cap) {
+            return Ok(TrySend::Full);
+        }
+        drop(st);
+        let dt: f64 = hops.iter().map(|&k| self.shared.spec.hop_time(k, bytes.len())).sum();
+        self.apply_link_faults(dst, dt)?;
+        let mut st = self.shared.lock();
+        // Re-check admission: the fault evaluation dropped the lock.
+        if !(st.in_flight[link] == 0 || st.in_flight[link] + len <= cap) {
+            return Ok(TrySend::Full);
+        }
+        st.in_flight[link] += len;
+        self.shared.stats.note_peak(st.in_flight[link]);
+        let t_send = self.now();
+        self.shared.stats.record(&hops, len);
+        self.shared.clocks.advance(self.rank, dt);
+        self.enqueue(&mut st, dst, tag, bytes, t_send + dt, len);
+        Ok(TrySend::Sent)
+    }
+
+    /// Merge this rank's clock with the last credit-release time of its
+    /// link to `dst`. The interleaved exchange calls this when a
+    /// previously-`Full` send finally goes through, so the stall is
+    /// honest in simulated time too.
+    pub fn sync_link_release(&self, dst: usize) {
+        let link = self.rank * self.nranks + dst;
+        let t = self.shared.lock().release_clock[link];
+        self.shared.clocks.merge_at_least(self.rank, t);
+    }
+
+    /// Release a consumed message's credit and merge arrival time.
+    fn consume(&mut self, m: Msg) -> Vec<u8> {
+        if m.charged > 0 {
+            let link = m.src * self.nranks + self.rank;
+            let mut st = self.shared.lock();
+            st.in_flight[link] = st.in_flight[link].saturating_sub(m.charged);
+            let t = self.shared.clocks.get(self.rank).max(m.arrive);
+            if t > st.release_clock[link] {
+                st.release_clock[link] = t;
+            }
+            self.shared.cv.notify_all();
+        }
+        self.shared.clocks.merge_at_least(self.rank, m.arrive);
+        m.bytes
+    }
+
+    fn stash(&mut self, m: Msg) {
+        self.stashed += m.bytes.len();
+        self.pending.entry((m.src, m.tag)).or_default().push_back(m);
+    }
+
+    fn unstash(&mut self, key: (usize, u64)) -> Option<Msg> {
+        let m = self.pending.get_mut(&key).and_then(VecDeque::pop_front)?;
+        self.stashed -= m.bytes.len();
+        Some(m)
+    }
+
+    /// Bytes currently parked in the out-of-order stash (still holding
+    /// link credit; bounded by the sum of this rank's inbound caps).
+    pub fn stashed_bytes(&self) -> usize {
+        self.stashed
     }
 
     /// Blocking receive of the next message from `src` with `tag`.
-    /// Merges the arrival time into this rank's clock.
-    pub fn recv_bytes(&mut self, src: usize, tag: u64) -> Vec<u8> {
+    /// Merges the arrival time into this rank's clock. Fails with
+    /// [`AkError::RankDead`] when `src` is dead with nothing left to
+    /// deliver, or [`AkError::CommTimeout`] at the receive deadline.
+    pub fn recv_bytes(&mut self, src: usize, tag: u64) -> AkResult<Vec<u8>> {
+        self.op_boundary("recv")?;
         let key = (src, tag);
-        let msg = loop {
-            if let Some(q) = self.pending.get_mut(&key) {
-                if let Some(m) = q.pop_front() {
-                    break m;
+        if let Some(m) = self.unstash(key) {
+            return Ok(self.consume(m));
+        }
+        let timeout = self.recv_timeout();
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.lock();
+        loop {
+            // Drain my inbox in arrival order; stash mismatches (their
+            // credit stays held until someone consumes them).
+            let mut found = None;
+            while let Some(m) = st.inboxes[self.rank].pop_front() {
+                if (m.src, m.tag) == key {
+                    found = Some(m);
+                    break;
                 }
+                self.stashed += m.bytes.len();
+                self.pending.entry((m.src, m.tag)).or_default().push_back(m);
             }
-            let m = self.rx.recv().expect("fabric senders dropped");
-            if (m.src, m.tag) == key {
-                break m;
+            if let Some(m) = found {
+                drop(st);
+                return Ok(self.consume(m));
             }
+            // Nothing deliverable: check for abort / dead peer, then wait.
+            if let Some(a) = st.abort {
+                drop(st);
+                return Err(self.rank_dead(a));
+            }
+            if !st.alive[src] {
+                let epoch = self.shared.tuning.epoch;
+                drop(st);
+                return self.fatal(AkError::RankDead { rank: src, epoch });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(st);
+                return Err(self.timeout_err(
+                    "recv",
+                    Some(src),
+                    timeout,
+                    format!("no message with tag {tag:#x}"),
+                    true,
+                ));
+            }
+            let (g, _) = self
+                .shared
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = g;
+        }
+    }
+
+    /// Non-blocking receive of the next message carrying `tag` from
+    /// *any* source (stash first, then inbox arrival order). Returns
+    /// `Ok(None)` when nothing with `tag` is available right now.
+    pub fn try_recv_any(&mut self, tag: u64) -> AkResult<Option<(usize, Vec<u8>)>> {
+        for src in 0..self.nranks {
+            if let Some(m) = self.unstash((src, tag)) {
+                let src = m.src;
+                return Ok(Some((src, self.consume(m))));
+            }
+        }
+        let mut st = self.shared.lock();
+        let mut found = None;
+        while let Some(m) = st.inboxes[self.rank].pop_front() {
+            if m.tag == tag {
+                found = Some(m);
+                break;
+            }
+            self.stashed += m.bytes.len();
             self.pending.entry((m.src, m.tag)).or_default().push_back(m);
-        };
-        self.shared.clocks.merge_at_least(self.rank, msg.arrive);
-        msg.bytes
+        }
+        match found {
+            Some(m) => {
+                drop(st);
+                let src = m.src;
+                Ok(Some((src, self.consume(m))))
+            }
+            None => {
+                if let Some(a) = st.abort {
+                    drop(st);
+                    return Err(self.rank_dead(a));
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    /// Park until fabric activity that could unblock this rank (message
+    /// arrival, credit release, abort) or `max_wait`, whichever first.
+    pub fn wait_activity(&mut self, max_wait: Duration) -> AkResult<()> {
+        let st = self.shared.lock();
+        if let Some(a) = st.abort {
+            drop(st);
+            return Err(self.rank_dead(a));
+        }
+        if !st.inboxes[self.rank].is_empty() {
+            return Ok(());
+        }
+        let (st, _) =
+            self.shared.cv.wait_timeout(st, max_wait).unwrap_or_else(|e| e.into_inner());
+        if let Some(a) = st.abort {
+            drop(st);
+            return Err(self.rank_dead(a));
+        }
+        Ok(())
+    }
+
+    /// [`Self::send_bytes`] with bounded exponential backoff on
+    /// retryable timeouts (fault drops, credit starvation); fails fast
+    /// on [`AkError::RankDead`]. Backoff advances the *simulated*
+    /// clock with deterministic seeded jitter — see
+    /// [`RetryPolicy::backoff_secs`].
+    pub fn send_retry(&mut self, dst: usize, tag: u64, bytes: &[u8]) -> AkResult<()> {
+        let policy = self.retry_policy();
+        let mut attempt = 1u32;
+        loop {
+            match self.send_bytes(dst, tag, bytes) {
+                Ok(()) => return Ok(()),
+                Err(AkError::CommTimeout { .. }) if attempt < policy.max_attempts => {
+                    let wait = policy.backoff_secs(self.rank, dst, tag, attempt);
+                    self.shared.clocks.advance(self.rank, wait);
+                    self.shared.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Typed point-to-point send of a key slice.
-    pub fn send<K: SortKey>(&self, dst: usize, tag: u64, xs: &[K]) {
-        self.send_bytes(dst, tag, vec_to_bytes(xs));
+    pub fn send<K: SortKey>(&mut self, dst: usize, tag: u64, xs: &[K]) -> AkResult<()> {
+        self.send_bytes(dst, tag, &vec_to_bytes(xs))
     }
 
     /// Typed point-to-point receive.
-    pub fn recv<K: SortKey>(&mut self, src: usize, tag: u64) -> Vec<K> {
-        bytes_to_vec(&self.recv_bytes(src, tag))
+    pub fn recv<K: SortKey>(&mut self, src: usize, tag: u64) -> AkResult<Vec<K>> {
+        Ok(bytes_to_vec(&self.recv_bytes(src, tag)?))
     }
 
-    /// Synchronise all ranks (thread barrier + clock max-merge).
-    pub fn barrier(&mut self) {
+    /// Synchronise all ranks (abortable generation barrier + clock
+    /// max-merge). Fails with [`AkError::RankDead`] when a participant
+    /// died instead of hanging forever.
+    pub fn barrier(&mut self) -> AkResult<()> {
         self.coll_seq += 1;
-        let res = self.shared.barrier.wait();
-        if res.is_leader() {
-            self.shared.clocks.barrier_sync();
+        if self.nranks == 1 {
+            return Ok(());
         }
-        // Second phase: nobody proceeds until clocks are merged.
-        self.shared.barrier.wait();
+        let timeout = self.recv_timeout();
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.lock();
+        let gen = st.bar_gen;
+        st.bar_arrived += 1;
+        if st.bar_arrived == self.nranks {
+            // Everyone else is parked inside the wait loop below (they
+            // cannot leave until the generation advances, which happens
+            // only here, under the lock) — the clocks are quiescent, as
+            // `barrier_sync` requires.
+            self.shared.clocks.barrier_sync();
+            st.bar_arrived = 0;
+            st.bar_gen += 1;
+            self.shared.cv.notify_all();
+            return Ok(());
+        }
+        loop {
+            if st.bar_gen != gen {
+                return Ok(());
+            }
+            if let Some(a) = st.abort {
+                drop(st);
+                return Err(self.rank_dead(a));
+            }
+            // A dead participant will never arrive: fail fast with
+            // attribution. (Clean completions can't trip this — every
+            // rank passes the final barrier before any endpoint drops,
+            // and the generation check above runs first.)
+            if let Some(d) = st.alive.iter().position(|&a| !a) {
+                let epoch = self.shared.tuning.epoch;
+                drop(st);
+                return self.fatal(AkError::RankDead { rank: d, epoch });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(st);
+                return Err(self.timeout_err(
+                    "barrier",
+                    None,
+                    timeout,
+                    format!("generation {gen} never completed"),
+                    true,
+                ));
+            }
+            let (g, _) = self
+                .shared
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = g;
+        }
     }
 
     pub(super) fn next_coll_tag(&mut self) -> u64 {
@@ -260,6 +1044,32 @@ impl Endpoint {
     }
 }
 
+impl Drop for Endpoint {
+    fn drop(&mut self) {
+        let died = self.failed || (!self.finished && std::thread::panicking());
+        let mut st = self.shared.lock();
+        st.alive[self.rank] = false;
+        // Release credit held by this rank's unconsumed stash and inbox
+        // so surviving senders aren't starved by a dead receiver.
+        let drain: Vec<(usize, usize)> = self
+            .pending
+            .values()
+            .flatten()
+            .map(|m| (m.src, m.charged))
+            .chain(st.inboxes[self.rank].iter().map(|m| (m.src, m.charged)))
+            .collect();
+        for (src, charged) in drain {
+            let link = src * self.nranks + self.rank;
+            st.in_flight[link] = st.in_flight[link].saturating_sub(charged);
+        }
+        st.inboxes[self.rank].clear();
+        if died && st.abort.is_none() {
+            st.abort = Some(Abort { rank: self.rank, epoch: self.shared.tuning.epoch });
+        }
+        self.shared.cv.notify_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -268,27 +1078,32 @@ mod tests {
         Fabric::new(ClusterSpec::baskerville(), TransferMode::GpuDirect, vec![true; n])
     }
 
+    fn mk_tuned(n: usize, tuning: CommTuning) -> Vec<Endpoint> {
+        Fabric::new_with(ClusterSpec::baskerville(), TransferMode::GpuDirect, vec![true; n], tuning)
+    }
+
     #[test]
     fn p2p_roundtrip() {
         let mut eps = mk(2);
         let mut e1 = eps.pop().unwrap();
-        let e0 = eps.pop().unwrap();
-        let h = std::thread::spawn(move || e1.recv::<i32>(0, 7));
-        e0.send::<i32>(1, 7, &[1, 2, 3]);
+        let mut e0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || e1.recv::<i32>(0, 7).unwrap());
+        e0.send::<i32>(1, 7, &[1, 2, 3]).unwrap();
         assert_eq!(h.join().unwrap(), vec![1, 2, 3]);
+        e0.finish();
     }
 
     #[test]
     fn clock_advances_on_transfer() {
         let mut eps = mk(2);
         let mut e1 = eps.pop().unwrap();
-        let e0 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
         let payload = vec![0u8; 30 << 20]; // 30 MB over NVLink ≈ 100 µs
         let h = std::thread::spawn(move || {
-            let b = e1.recv_bytes(0, 1);
+            let b = e1.recv_bytes(0, 1).unwrap();
             (b.len(), e1.now())
         });
-        e0.send_bytes(1, 1, payload);
+        e0.send_bytes(1, 1, &payload).unwrap();
         assert!(e0.now() > 50e-6, "sender time {}", e0.now());
         let (len, t1) = h.join().unwrap();
         assert_eq!(len, 30 << 20);
@@ -299,15 +1114,15 @@ mod tests {
     fn out_of_order_tags() {
         let mut eps = mk(2);
         let mut e1 = eps.pop().unwrap();
-        let e0 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
         let h = std::thread::spawn(move || {
             // Ask for tag 2 first even though tag 1 arrives first.
-            let b = e1.recv::<i32>(0, 2);
-            let a = e1.recv::<i32>(0, 1);
+            let b = e1.recv::<i32>(0, 2).unwrap();
+            let a = e1.recv::<i32>(0, 1).unwrap();
             (a, b)
         });
-        e0.send::<i32>(1, 1, &[10]);
-        e0.send::<i32>(1, 2, &[20]);
+        e0.send::<i32>(1, 1, &[10]).unwrap();
+        e0.send::<i32>(1, 2, &[20]).unwrap();
         let (a, b) = h.join().unwrap();
         assert_eq!(a, vec![10]);
         assert_eq!(b, vec![20]);
@@ -317,24 +1132,21 @@ mod tests {
     fn self_send_is_free() {
         let mut eps = mk(1);
         let mut e0 = eps.pop().unwrap();
-        e0.send::<i64>(0, 3, &[5, 6]);
+        e0.send::<i64>(0, 3, &[5, 6]).unwrap();
         let t_before = e0.now();
-        assert_eq!(e0.recv::<i64>(0, 3), vec![5, 6]);
+        assert_eq!(e0.recv::<i64>(0, 3).unwrap(), vec![5, 6]);
         assert_eq!(e0.now(), t_before);
         assert_eq!(e0.stats().snapshot().0, 0); // not counted as traffic
     }
 
     #[test]
     fn stats_count_hops() {
-        let mut eps = Fabric::new(
-            ClusterSpec::baskerville(),
-            TransferMode::CpuStaged,
-            vec![true; 2],
-        );
+        let mut eps =
+            Fabric::new(ClusterSpec::baskerville(), TransferMode::CpuStaged, vec![true; 2]);
         let mut e1 = eps.pop().unwrap();
-        let e0 = eps.pop().unwrap();
-        let h = std::thread::spawn(move || e1.recv::<i32>(0, 1));
-        e0.send::<i32>(1, 1, &[1; 256]);
+        let mut e0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || e1.recv::<i32>(0, 1).unwrap());
+        e0.send::<i32>(1, 1, &[1; 256]).unwrap();
         h.join().unwrap();
         let stats = e0.stats();
         assert_eq!(stats.messages.load(Ordering::Relaxed), 1);
@@ -353,13 +1165,234 @@ mod tests {
             .map(|mut e| {
                 std::thread::spawn(move || {
                     e.advance(e.rank() as f64); // ranks at t=0,1,2
-                    e.barrier();
-                    e.now()
+                    e.barrier().unwrap();
+                    let t = e.now();
+                    e.finish();
+                    t
                 })
             })
             .collect();
         for h in handles {
             assert_eq!(h.join().unwrap(), 2.0);
         }
+    }
+
+    #[test]
+    fn dead_peer_surfaces_as_rank_dead_not_panic() {
+        let tuning = CommTuning { recv_timeout_secs: 5.0, ..CommTuning::default() };
+        let mut eps = mk_tuned(2, tuning);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        drop(e1); // peer gone (clean drop, nothing queued)
+        match e0.recv_bytes(1, 9) {
+            Err(AkError::RankDead { rank: 1, .. }) => {}
+            other => panic!("expected RankDead{{rank:1}}, got {other:?}"),
+        }
+        // ...and sends to the dead peer fail the same way.
+        let mut eps = mk_tuned(2, CommTuning { send_timeout_secs: 5.0, ..CommTuning::default() });
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        drop(e1);
+        match e0.send_bytes(1, 9, &[0u8; 8]) {
+            Err(AkError::RankDead { rank: 1, .. }) => {}
+            other => panic!("expected RankDead{{rank:1}}, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn queued_messages_survive_a_clean_peer_drop() {
+        // A peer that sent, then dropped cleanly: its messages are
+        // still deliverable (message-first, dead-check-second).
+        let mut eps = mk(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send::<i32>(1, 4, &[42]).unwrap();
+        e0.finish();
+        drop(e0);
+        assert_eq!(e1.recv::<i32>(0, 4).unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn recv_deadline_times_out() {
+        let tuning = CommTuning { recv_timeout_secs: 0.05, ..CommTuning::default() };
+        let mut eps = mk_tuned(2, tuning);
+        let _e1 = eps.pop().unwrap(); // alive but silent
+        let mut e0 = eps.pop().unwrap();
+        let t0 = Instant::now();
+        match e0.recv_bytes(1, 1) {
+            Err(AkError::CommTimeout { op: "recv", rank: 0, peer: Some(1), .. }) => {}
+            other => panic!("expected CommTimeout, got {other:?}"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+        assert_eq!(e0.stats().timeouts.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn credit_cap_blocks_sender_and_releases_on_consume() {
+        let tuning = CommTuning {
+            cap_nvlink: 4096,
+            cap_ib: 4096,
+            cap_pcie: 4096,
+            cap_hostmem: 4096,
+            send_timeout_secs: 10.0,
+            ..CommTuning::default()
+        };
+        let mut eps = mk_tuned(2, tuning);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            // Consume slowly: the sender must stall on credit.
+            std::thread::sleep(Duration::from_millis(50));
+            for i in 0..8 {
+                let b = e1.recv_bytes(0, i).unwrap();
+                assert_eq!(b.len(), 3000);
+            }
+            e1.stats().peak_link_bytes.load(Ordering::Relaxed)
+        });
+        for i in 0..8 {
+            e0.send_bytes(1, i, &[7u8; 3000]).unwrap();
+        }
+        let peak = h.join().unwrap();
+        assert!(peak <= 4096, "peak in-flight {peak} exceeded the 4096-byte cap");
+        assert!(
+            e0.stats().credit_stalls.load(Ordering::Relaxed) >= 1,
+            "sender never stalled on credit"
+        );
+        e0.finish();
+    }
+
+    #[test]
+    fn oversized_message_admitted_only_when_idle() {
+        let tuning = CommTuning {
+            cap_nvlink: 1024,
+            cap_ib: 1024,
+            cap_pcie: 1024,
+            cap_hostmem: 1024,
+            send_timeout_secs: 10.0,
+            ..CommTuning::default()
+        };
+        let mut eps = mk_tuned(2, tuning);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        // Fill the link, then try an oversized message: Full until the
+        // small one is consumed, admitted once idle.
+        e0.send_bytes(1, 1, &[0u8; 1000]).unwrap();
+        assert_eq!(e0.try_send_bytes(1, 2, &vec![0u8; 8192]).unwrap(), TrySend::Full);
+        e1.recv_bytes(0, 1).unwrap();
+        assert_eq!(e0.try_send_bytes(1, 2, &vec![0u8; 8192]).unwrap(), TrySend::Sent);
+        assert_eq!(e1.recv_bytes(0, 2).unwrap().len(), 8192);
+        e0.finish();
+        e1.finish();
+    }
+
+    #[test]
+    fn stash_holds_credit_until_consumed() {
+        let tuning = CommTuning {
+            cap_nvlink: 4096,
+            cap_ib: 4096,
+            cap_pcie: 4096,
+            cap_hostmem: 4096,
+            send_timeout_secs: 0.1,
+            recv_timeout_secs: 0.1,
+            ..CommTuning::default()
+        };
+        let mut eps = mk_tuned(2, tuning);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            // Ask for a tag the flood never sends: everything received
+            // is stashed — credit stays held, so the stash is bounded
+            // and the wait ends in a timeout, not an OOM.
+            let r = e1.recv_bytes(0, 999);
+            (e1.stashed_bytes(), r)
+        });
+        // Tag-skewed flood: more bytes than the cap, wrong tags.
+        let mut send_err = None;
+        for i in 0..32 {
+            if let Err(e) = e0.send_bytes(1, i, &[1u8; 512]) {
+                send_err = Some(e);
+                break;
+            }
+        }
+        let (stashed, recv_res) = h.join().unwrap();
+        assert!(stashed <= 4096, "stash grew to {stashed} bytes, past the 4096 cap");
+        assert!(
+            matches!(recv_res, Err(AkError::CommTimeout { .. })),
+            "flooded receiver should time out, got {recv_res:?}"
+        );
+        assert!(
+            matches!(send_err, Some(AkError::CommTimeout { .. })),
+            "blocked sender should time out, got {send_err:?}"
+        );
+    }
+
+    #[test]
+    fn kill_fault_fires_at_message_boundary() {
+        use super::super::fault::FaultPlan;
+        let faults = FaultPlan::parse("kill:0:2", 1).unwrap().state();
+        let tuning = CommTuning { faults: Some(faults), epoch: 3, ..CommTuning::default() };
+        let mut eps = mk_tuned(2, tuning);
+        let _e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send_bytes(1, 1, &[0u8; 8]).unwrap(); // op 1: survives
+        match e0.send_bytes(1, 2, &[0u8; 8]) {
+            Err(AkError::RankDead { rank: 0, epoch: 3 }) => {}
+            other => panic!("expected RankDead at op 2, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_link_fault_surfaces_as_retryable_timeout() {
+        use super::super::fault::FaultPlan;
+        let faults = FaultPlan::parse("drop:0:1:1", 1).unwrap().state();
+        let tuning = CommTuning { faults: Some(faults), ..CommTuning::default() };
+        let mut eps = mk_tuned(2, tuning);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        // First attempt is eaten; send_retry recovers deterministically.
+        e0.send_retry(1, 5, &[9u8; 16]).unwrap();
+        assert_eq!(e1.recv_bytes(0, 5).unwrap(), vec![9u8; 16]);
+        assert_eq!(e0.stats().dropped.load(Ordering::Relaxed), 1);
+        assert_eq!(e0.stats().retries.load(Ordering::Relaxed), 1);
+        e0.finish();
+        e1.finish();
+    }
+
+    #[test]
+    fn abort_all_releases_blocked_ranks() {
+        let tuning = CommTuning { recv_timeout_secs: 30.0, ..CommTuning::default() };
+        let mut eps = mk_tuned(2, tuning);
+        let _e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let ctl = e0.ctl();
+        let h = std::thread::spawn(move || e0.recv_bytes(1, 1));
+        std::thread::sleep(Duration::from_millis(30));
+        ctl.abort_all(1);
+        match h.join().unwrap() {
+            Err(AkError::RankDead { rank: 1, .. }) => {}
+            other => panic!("expected RankDead from abort, got {other:?}"),
+        }
+        let d = ctl.diag_table();
+        assert!(d.contains("rank 0") && d.contains("rank 1"), "{d}");
+    }
+
+    #[test]
+    fn failed_drop_trips_coordinated_abort() {
+        let tuning = CommTuning { recv_timeout_secs: 30.0, ..CommTuning::default() };
+        let mut eps = mk_tuned(3, tuning);
+        let mut e2 = eps.pop().unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        // Rank 2 blocks on a message that never comes; rank 1 dies with
+        // failure; rank 2 must wake with RankDead{rank:1}.
+        let h = std::thread::spawn(move || e2.recv_bytes(0, 1));
+        std::thread::sleep(Duration::from_millis(20));
+        let _ = e1.fatal::<()>(AkError::RankDead { rank: 1, epoch: 0 });
+        drop(e1);
+        match h.join().unwrap() {
+            Err(AkError::RankDead { rank: 1, .. }) => {}
+            other => panic!("expected abort-propagated RankDead, got {other:?}"),
+        }
+        e0.finish();
     }
 }

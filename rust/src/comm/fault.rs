@@ -1,0 +1,417 @@
+//! Deterministic link/rank fault injection and bounded retry policy
+//! for the simulated fabric (DESIGN.md §16).
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string (`--faults` /
+//! `[comm] faults`), then instantiated once per *job* as an
+//! [`Arc<FaultState>`] that persists across driver restart attempts —
+//! one-shot rules (kill, stall) fire exactly once per job, so a
+//! restarted rank does not die again at the same message boundary.
+//!
+//! The transport is modelled as *acked*: a dropped or partitioned
+//! message surfaces at the **sender** as a retryable
+//! [`crate::session::AkError::CommTimeout`], which is what lets the
+//! bounded-backoff retry layer ([`RetryPolicy`]) recover transient
+//! faults without any receiver-side protocol.
+//!
+//! Determinism: flaky-link draws use one [`Prng`] per rule *per link*,
+//! and only the link's source rank ever draws from it, so the sequence
+//! of drop decisions is a pure function of (seed, link, send index)
+//! regardless of thread interleaving. The partition heal clock is the
+//! global send-attempt counter, which is interleaving-dependent by
+//! nature; partitions therefore heal "after roughly OPS sends", which
+//! is all the recovery tests rely on.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::Prng;
+
+/// One parsed fault rule. Spec grammar (comma-separated rules):
+///
+/// | spec                    | meaning                                        |
+/// |-------------------------|------------------------------------------------|
+/// | `drop:SRC:DST:N`        | drop the next `N` messages on link SRC→DST     |
+/// | `flaky:SRC:DST:P`       | drop each message on SRC→DST with probability P|
+/// | `delay:SRC:DST:SECS`    | add SECS simulated latency to SRC→DST          |
+/// | `partition:K:OPS`       | links crossing the {&lt;K, ≥K} cut drop until the |
+/// |                         | global send-attempt counter passes OPS (heal)  |
+/// | `kill:RANK:N[:PHASE]`   | RANK dies at its N-th fabric op (optionally    |
+/// |                         | counted only inside phase note PHASE); one-shot|
+/// | `stall:RANK:N[:PHASE]`  | RANK hangs at its N-th op until aborted;       |
+/// |                         | one-shot (the watchdog's `abort_all` frees it) |
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultRule {
+    /// Drop the next `n` messages on the link.
+    Drop {
+        /// Source rank of the faulted link.
+        src: usize,
+        /// Destination rank of the faulted link.
+        dst: usize,
+        /// How many messages to eat.
+        n: u64,
+    },
+    /// Drop each message on the link with probability `p`.
+    Flaky {
+        /// Source rank of the faulted link.
+        src: usize,
+        /// Destination rank of the faulted link.
+        dst: usize,
+        /// Per-message drop probability in `[0, 1)`.
+        p: f64,
+    },
+    /// Add fixed simulated delivery latency to the link.
+    Delay {
+        /// Source rank of the faulted link.
+        src: usize,
+        /// Destination rank of the faulted link.
+        dst: usize,
+        /// Extra latency in simulated seconds.
+        secs: f64,
+    },
+    /// Messages crossing the `{< k, >= k}` cut drop until healed.
+    Partition {
+        /// The cut point: ranks `< k` vs ranks `>= k`.
+        k: usize,
+        /// Global send-attempt count after which the partition heals.
+        heal_ops: u64,
+    },
+    /// The rank returns `RankDead` from its `at_op`-th fabric op.
+    Kill {
+        /// The rank to kill.
+        rank: usize,
+        /// Which op (1-based) within the matching scope triggers it.
+        at_op: u64,
+        /// When set, only ops issued under this phase note count.
+        phase: Option<String>,
+    },
+    /// The rank parks on the fabric at its `at_op`-th op until aborted.
+    Stall {
+        /// The rank to stall.
+        rank: usize,
+        /// Which op (1-based) within the matching scope triggers it.
+        at_op: u64,
+        /// When set, only ops issued under this phase note count.
+        phase: Option<String>,
+    },
+}
+
+/// A parsed, seeded fault-injection plan (see [`FaultRule`] grammar).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// The rules, applied in order (first matching rule wins per event).
+    pub rules: Vec<FaultRule>,
+    /// Seed for probabilistic rules (flaky links).
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated spec string (grammar on [`FaultRule`]).
+    pub fn parse(spec: &str, seed: u64) -> anyhow::Result<FaultPlan> {
+        let mut rules = Vec::new();
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let parts: Vec<&str> = item.split(':').collect();
+            let usage = || anyhow::anyhow!("bad fault rule '{item}' (see --help for the grammar)");
+            let num = |s: &str| s.parse::<u64>().map_err(|_| usage());
+            let idx = |s: &str| s.parse::<usize>().map_err(|_| usage());
+            let flt = |s: &str| s.parse::<f64>().map_err(|_| usage());
+            let rule = match (parts[0], parts.len()) {
+                ("drop", 4) => {
+                    FaultRule::Drop { src: idx(parts[1])?, dst: idx(parts[2])?, n: num(parts[3])? }
+                }
+                ("flaky", 4) => {
+                    let p = flt(parts[3])?;
+                    anyhow::ensure!((0.0..1.0).contains(&p), "flaky probability {p} not in [0,1)");
+                    FaultRule::Flaky { src: idx(parts[1])?, dst: idx(parts[2])?, p }
+                }
+                ("delay", 4) => FaultRule::Delay {
+                    src: idx(parts[1])?,
+                    dst: idx(parts[2])?,
+                    secs: flt(parts[3])?,
+                },
+                ("partition", 3) => {
+                    FaultRule::Partition { k: idx(parts[1])?, heal_ops: num(parts[2])? }
+                }
+                ("kill", 3 | 4) => FaultRule::Kill {
+                    rank: idx(parts[1])?,
+                    at_op: num(parts[2])?,
+                    phase: parts.get(3).map(|s| s.to_string()),
+                },
+                ("stall", 3 | 4) => FaultRule::Stall {
+                    rank: idx(parts[1])?,
+                    at_op: num(parts[2])?,
+                    phase: parts.get(3).map(|s| s.to_string()),
+                },
+                _ => return Err(usage()),
+            };
+            rules.push(rule);
+        }
+        anyhow::ensure!(!rules.is_empty(), "empty fault spec");
+        Ok(FaultPlan { rules, seed })
+    }
+
+    /// Instantiate the mutable per-job state. Create this **once** per
+    /// job and share the `Arc` across driver restart attempts so
+    /// one-shot rules stay fired.
+    pub fn state(&self) -> Arc<FaultState> {
+        Arc::new(FaultState {
+            drops: self
+                .rules
+                .iter()
+                .map(|r| match r {
+                    FaultRule::Drop { n, .. } => AtomicU64::new(*n),
+                    _ => AtomicU64::new(0),
+                })
+                .collect(),
+            flaky: self
+                .rules
+                .iter()
+                .enumerate()
+                .map(|(i, r)| match r {
+                    FaultRule::Flaky { src, dst, .. } => Mutex::new(Prng::new(
+                        self.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                            ^ ((*src as u64) << 32 | *dst as u64),
+                    )),
+                    _ => Mutex::new(Prng::new(0)),
+                })
+                .collect(),
+            scoped_ops: self.rules.iter().map(|_| AtomicU64::new(0)).collect(),
+            fired: self.rules.iter().map(|_| AtomicBool::new(false)).collect(),
+            send_ops: AtomicU64::new(0),
+            plan: self.clone(),
+        })
+    }
+}
+
+/// What the fault layer decided about one send attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SendFault {
+    /// Deliver normally.
+    Deliver,
+    /// The message is eaten; the sender sees a retryable timeout.
+    Dropped,
+    /// Deliver with this much extra simulated latency.
+    Delayed(f64),
+}
+
+/// What the fault layer decided about one endpoint op boundary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OpFault {
+    /// Proceed.
+    None,
+    /// The rank dies here (`AkError::RankDead`).
+    Kill,
+    /// The rank parks on the fabric until the coordinated abort.
+    Stall,
+}
+
+/// Mutable per-job fault state (shared across restart attempts).
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    /// Remaining drop budget per `Drop` rule (index-aligned).
+    drops: Vec<AtomicU64>,
+    /// Per-`Flaky`-rule link Prng. Only the link's source rank draws,
+    /// so the stream is consumed in that rank's program order.
+    flaky: Vec<Mutex<Prng>>,
+    /// Per-rule matched-op counters (kill/stall phase scoping).
+    scoped_ops: Vec<AtomicU64>,
+    /// One-shot flags (kill/stall fire once per job).
+    fired: Vec<AtomicBool>,
+    /// Global send-attempt counter (the partition heal clock).
+    send_ops: AtomicU64,
+}
+
+impl FaultState {
+    /// Evaluate link faults for one send attempt on `src → dst`.
+    /// First matching rule wins.
+    pub fn on_send(&self, src: usize, dst: usize) -> SendFault {
+        let op = self.send_ops.fetch_add(1, Ordering::Relaxed) + 1;
+        for (i, rule) in self.plan.rules.iter().enumerate() {
+            match rule {
+                FaultRule::Drop { src: s, dst: d, .. } if *s == src && *d == dst => {
+                    let took = self.drops[i]
+                        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+                        .is_ok();
+                    if took {
+                        return SendFault::Dropped;
+                    }
+                }
+                FaultRule::Flaky { src: s, dst: d, p } if *s == src && *d == dst => {
+                    let roll = self.flaky[i].lock().unwrap_or_else(|e| e.into_inner()).uniform_f64();
+                    if roll < *p {
+                        return SendFault::Dropped;
+                    }
+                }
+                FaultRule::Delay { src: s, dst: d, secs } if *s == src && *d == dst => {
+                    return SendFault::Delayed(*secs);
+                }
+                FaultRule::Partition { k, heal_ops } if op <= *heal_ops => {
+                    if (src < *k) != (dst < *k) {
+                        return SendFault::Dropped;
+                    }
+                }
+                _ => {}
+            }
+        }
+        SendFault::Deliver
+    }
+
+    /// Evaluate rank faults at one endpoint op boundary. `phase` is the
+    /// rank's current phase note (empty when none was set).
+    pub fn on_op(&self, rank: usize, phase: &str) -> OpFault {
+        for (i, rule) in self.plan.rules.iter().enumerate() {
+            let (r, at_op, want_phase, fault) = match rule {
+                FaultRule::Kill { rank, at_op, phase } => (*rank, *at_op, phase, OpFault::Kill),
+                FaultRule::Stall { rank, at_op, phase } => (*rank, *at_op, phase, OpFault::Stall),
+                _ => continue,
+            };
+            if r != rank || self.fired[i].load(Ordering::Relaxed) {
+                continue;
+            }
+            if let Some(want) = want_phase {
+                if want != phase {
+                    continue;
+                }
+            }
+            let seen = self.scoped_ops[i].fetch_add(1, Ordering::Relaxed) + 1;
+            if seen >= at_op && !self.fired[i].swap(true, Ordering::Relaxed) {
+                return fault;
+            }
+        }
+        OpFault::None
+    }
+}
+
+/// Bounded exponential backoff with deterministic seeded jitter for
+/// sender-side retries of [`crate::session::AkError::CommTimeout`].
+///
+/// Backoff advances the *simulated* clock (a real rank would sit inside
+/// `MPI_Send`); no wall time is slept, so fault tests stay fast.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 disables retries).
+    pub max_attempts: u32,
+    /// Nominal backoff before the first retry, in simulated seconds.
+    pub base_secs: f64,
+    /// Multiplier per further retry.
+    pub factor: f64,
+    /// Per-step nominal cap, in simulated seconds.
+    pub max_secs: f64,
+    /// Jitter seed (derive from the run seed for reproducible runs).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 4, base_secs: 1e-4, factor: 2.0, max_secs: 0.1, seed: 0 }
+    }
+}
+
+impl RetryPolicy {
+    /// Deterministic backoff before retry `attempt` (1-based): the
+    /// nominal exponential step scaled by a seeded jitter in
+    /// `[0.5, 1.0]`. Pure in `(self, rank, peer, tag, attempt)` — two
+    /// calls with the same inputs return the same wait.
+    pub fn backoff_secs(&self, rank: usize, peer: usize, tag: u64, attempt: u32) -> f64 {
+        let nominal =
+            (self.base_secs * self.factor.powi(attempt.saturating_sub(1) as i32)).min(self.max_secs);
+        let mix = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((rank as u64) << 40)
+            .wrapping_add((peer as u64) << 20)
+            .wrapping_add(tag)
+            .wrapping_add((attempt as u64) << 56);
+        let mut prng = Prng::new(mix);
+        nominal * (0.5 + 0.5 * prng.uniform_f64())
+    }
+
+    /// The full backoff schedule for one `(rank, peer, tag)` message —
+    /// one entry per possible retry (diagnostics and tests).
+    pub fn schedule(&self, rank: usize, peer: usize, tag: u64) -> Vec<f64> {
+        (1..self.max_attempts).map(|a| self.backoff_secs(rank, peer, tag, a)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_rule_kind() {
+        let p = FaultPlan::parse(
+            "drop:0:1:3, flaky:1:2:0.25, delay:2:0:0.005, partition:2:100, kill:1:7:exchange, stall:3:2",
+            42,
+        )
+        .unwrap();
+        assert_eq!(p.rules.len(), 6);
+        assert_eq!(p.rules[0], FaultRule::Drop { src: 0, dst: 1, n: 3 });
+        assert_eq!(
+            p.rules[4],
+            FaultRule::Kill { rank: 1, at_op: 7, phase: Some("exchange".into()) }
+        );
+        assert_eq!(p.rules[5], FaultRule::Stall { rank: 3, at_op: 2, phase: None });
+        assert!(FaultPlan::parse("drop:0:1", 0).is_err());
+        assert!(FaultPlan::parse("flaky:0:1:1.5", 0).is_err());
+        assert!(FaultPlan::parse("", 0).is_err());
+    }
+
+    #[test]
+    fn drop_rule_eats_exactly_n() {
+        let st = FaultPlan::parse("drop:0:1:2", 0).unwrap().state();
+        assert_eq!(st.on_send(0, 1), SendFault::Dropped);
+        assert_eq!(st.on_send(0, 1), SendFault::Dropped);
+        assert_eq!(st.on_send(0, 1), SendFault::Deliver);
+        // Other links never match.
+        assert_eq!(st.on_send(1, 0), SendFault::Deliver);
+    }
+
+    #[test]
+    fn partition_heals_after_ops() {
+        let st = FaultPlan::parse("partition:2:3", 0).unwrap().state();
+        // Cross-cut sends drop while the heal clock is below 3...
+        assert_eq!(st.on_send(0, 2), SendFault::Dropped);
+        // ...same-side traffic is unaffected (but advances the clock)...
+        assert_eq!(st.on_send(0, 1), SendFault::Deliver);
+        assert_eq!(st.on_send(2, 3), SendFault::Deliver);
+        // ...and the 4th attempt onward is healed.
+        assert_eq!(st.on_send(0, 2), SendFault::Deliver);
+    }
+
+    #[test]
+    fn kill_is_one_shot_and_phase_scoped() {
+        let st = FaultPlan::parse("kill:1:2:exchange", 0).unwrap().state();
+        // Ops outside the phase, or on other ranks, never count.
+        assert_eq!(st.on_op(1, "splitters"), OpFault::None);
+        assert_eq!(st.on_op(0, "exchange"), OpFault::None);
+        assert_eq!(st.on_op(1, "exchange"), OpFault::None);
+        assert_eq!(st.on_op(1, "exchange"), OpFault::Kill);
+        // One-shot: a restarted rank sails through the same boundary.
+        assert_eq!(st.on_op(1, "exchange"), OpFault::None);
+    }
+
+    #[test]
+    fn flaky_draws_are_deterministic_per_seed() {
+        let a = FaultPlan::parse("flaky:0:1:0.5", 7).unwrap().state();
+        let b = FaultPlan::parse("flaky:0:1:0.5", 7).unwrap().state();
+        let seq_a: Vec<_> = (0..64).map(|_| a.on_send(0, 1)).collect();
+        let seq_b: Vec<_> = (0..64).map(|_| b.on_send(0, 1)).collect();
+        assert_eq!(seq_a, seq_b);
+        assert!(seq_a.contains(&SendFault::Dropped) && seq_a.contains(&SendFault::Deliver));
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_jittered() {
+        let p = RetryPolicy { max_attempts: 6, seed: 99, ..RetryPolicy::default() };
+        let s1 = p.schedule(2, 5, 17);
+        let s2 = p.schedule(2, 5, 17);
+        assert_eq!(s1, s2);
+        assert_eq!(s1.len(), 5);
+        for (i, w) in s1.iter().enumerate() {
+            let nominal = (p.base_secs * p.factor.powi(i as i32)).min(p.max_secs);
+            assert!(*w >= 0.5 * nominal && *w <= nominal, "step {i}: {w} vs nominal {nominal}");
+        }
+        // Different links jitter differently.
+        assert_ne!(p.schedule(2, 5, 17), p.schedule(3, 5, 17));
+    }
+}

@@ -11,11 +11,19 @@
 //! Byte/message counters are recorded per link kind — the paper claims
 //! SIHSort uses "the least amount of MPI communication" of non-IO sorts,
 //! and `mpisort` tests assert our implementation's message complexity.
+//!
+//! The fabric is bounded and fallible (DESIGN.md §16): per-link credit
+//! caps give real backpressure, every blocking wait carries a deadline,
+//! and a seeded [`FaultPlan`] can drop/delay/partition links or
+//! kill/stall ranks deterministically. All send/recv surfaces return
+//! [`crate::session::AkResult`] — the old panicking API is gone.
 
 pub mod collectives;
 pub mod fabric;
+pub mod fault;
 pub mod wire;
 
 pub use collectives::ReduceOp;
-pub use fabric::{CommStats, Endpoint, Fabric};
+pub use fabric::{CommStats, CommTuning, Endpoint, Fabric, FabricCtl, FaultCounters, TrySend};
+pub use fault::{FaultPlan, FaultRule, FaultState, RetryPolicy};
 pub use wire::{bytes_to_vec, vec_to_bytes};

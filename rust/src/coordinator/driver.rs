@@ -1,22 +1,30 @@
 //! The distributed-sort driver: spawns one thread per simulated rank,
 //! runs SIHSort collectively, verifies global order + conservation, and
 //! aggregates the run record.
+//!
+//! Fault tolerance (DESIGN.md §16): each job is an *attempt* on a fresh
+//! fabric. A watchdog thread converts a hung collective into a typed
+//! failure with per-rank diagnostics, and recoverable comm failures
+//! (rank death, comm timeout) restart the whole collective in-process —
+//! up to `[comm] max_restarts` times — against the *same* persistent
+//! fault-injection state, resuming checkpointed ranks from their
+//! manifests. Shards are regenerated deterministically per attempt.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
-
-use anyhow::Context;
+use std::time::{Duration, Instant};
 
 use crate::backend::{Backend, DeviceKey};
 use crate::cfg::{RunConfig, Sorter};
 use crate::cluster::DeviceModel;
-use crate::comm::Fabric;
+use crate::comm::{CommTuning, Fabric, FaultCounters};
 use crate::dtype::SortKey;
 use crate::hybrid::{calibrate_sort, HybridEngine, HybridPlan};
 use crate::metrics::{legend_dtype, SortRunRecord};
 use crate::mpisort::sihsort::checksum;
 use crate::mpisort::{sihsort_rank, LocalSorter, RankOutcome, SihConfig};
 use crate::runtime::{Registry, Runtime};
+use crate::session::AkError;
 use crate::util::Prng;
 use crate::workload::{generate, KeyGen};
 
@@ -64,12 +72,39 @@ pub fn run_distributed_sort_mixed<K: DeviceKey + KeyGen>(
 }
 
 /// The full driver: heterogeneous sorters, outcomes returned alongside
-/// the aggregate record.
+/// the aggregate record. Shards are the seeded workload, regenerated
+/// identically per restart attempt.
 pub fn run_distributed_sort_full<K: DeviceKey + KeyGen>(
     cfg: &RunConfig,
     sorters: &[Sorter],
     runtime: Option<Arc<Runtime>>,
 ) -> anyhow::Result<(DistSortOutput, Vec<RankOutcome<K>>)> {
+    run_distributed_sort_shards::<K, _>(cfg, sorters, runtime, || {
+        let mut root = Prng::new(cfg.seed);
+        (0..cfg.ranks)
+            .map(|r| {
+                let mut rng = root.fork(r as u64);
+                generate::<K>(&mut rng, cfg.dist, cfg.elems_per_rank)
+            })
+            .collect()
+    })
+}
+
+/// [`run_distributed_sort_full`] with caller-supplied shards: the fault
+/// and equivalence suites inject adversarial payloads (NaN / -0.0
+/// floats) that the seeded generator cannot produce. `make_shards` runs
+/// once per restart attempt and must be deterministic — recovery
+/// replays the identical input (checkpointed ranks validate it against
+/// their manifests).
+pub fn run_distributed_sort_shards<K: DeviceKey, F>(
+    cfg: &RunConfig,
+    sorters: &[Sorter],
+    runtime: Option<Arc<Runtime>>,
+    make_shards: F,
+) -> anyhow::Result<(DistSortOutput, Vec<RankOutcome<K>>)>
+where
+    F: Fn() -> Vec<Vec<K>>,
+{
     anyhow::ensure!(sorters.len() == cfg.ranks, "one sorter per rank");
     // The streamed exchange speaks a chunked wire protocol (k data
     // messages + end marker per peer) where alltoallv sends exactly one
@@ -176,22 +211,7 @@ pub fn run_distributed_sort_full<K: DeviceKey + KeyGen>(
         s.ctx(session)
     });
 
-    // Shards: deterministic per (seed, rank).
-    let mut root = Prng::new(cfg.seed);
-    let shards: Vec<Vec<K>> = (0..cfg.ranks)
-        .map(|r| {
-            let mut rng = root.fork(r as u64);
-            generate::<K>(&mut rng, cfg.dist, cfg.elems_per_rank)
-        })
-        .collect();
-    let in_checksum = shards.iter().map(|s| checksum(s)).fold((0u64, 0u128), |a, b| {
-        (a.0 + b.0, a.1.wrapping_add(b.1))
-    });
-
-    let device_flags: Vec<bool> = sorters.iter().map(|s| s.is_device()).collect();
-    let eps = Fabric::new(cfg.cluster.clone(), cfg.transfer, device_flags);
-
-    let sih = SihConfig {
+    let sih_base = SihConfig {
         samples_per_rank: cfg.samples_per_rank,
         refine_rounds: cfg.refine_rounds,
         balance_tol: cfg.balance_tol,
@@ -201,9 +221,105 @@ pub fn run_distributed_sort_full<K: DeviceKey + KeyGen>(
         stream: stream_cfg,
     };
 
+    // Fault-injection state persists across restart attempts: one-shot
+    // kill/stall rules stay fired, drop budgets stay spent, and the
+    // global send-op counter keeps healing partitions — a restarted job
+    // faces the *rest* of the fault schedule, not a fresh copy of it.
+    let mut base_tuning = cfg.comm.tuning();
+    base_tuning.faults = cfg.comm.fault_plan()?.map(|p| p.state());
+
+    let wall0 = Instant::now();
+    let mut fault_totals = FaultCounters::default();
+    let mut recoveries = 0u64;
+    let mut attempt = 0u64;
+    loop {
+        let mut tuning = base_tuning.clone();
+        tuning.epoch = attempt;
+        // Restart attempts of a checkpointed job resume from the
+        // per-rank manifests instead of redoing committed phases.
+        let mut sih = sih_base.clone();
+        if attempt > 0 {
+            if let Some(s) = sih.stream.as_mut() {
+                if s.ckpt_dir.is_some() {
+                    s.resume = true;
+                }
+            }
+        }
+        let (res, counters) = run_attempt::<K, F>(
+            cfg,
+            sorters,
+            &sih,
+            tuning,
+            &make_shards,
+            &device_backend,
+            &hybrid_engine,
+            &stream_ctx,
+        );
+        fault_totals.add(counters);
+        match res {
+            Ok((mut out, outcomes)) => {
+                out.record.wall_secs = wall0.elapsed().as_secs_f64();
+                out.record.credit_stalls = fault_totals.credit_stalls;
+                out.record.retries = fault_totals.retries;
+                out.record.timeouts = fault_totals.timeouts;
+                out.record.dropped = fault_totals.dropped;
+                out.record.recoveries = recoveries;
+                return Ok((out, outcomes));
+            }
+            Err(e) => {
+                if attempt >= u64::from(cfg.comm.max_restarts) || !recoverable_comm_error(&e) {
+                    return Err(e);
+                }
+                attempt += 1;
+                recoveries += 1;
+            }
+        }
+    }
+}
+
+/// One collective attempt on a fresh fabric. Returns the attempt's
+/// result alongside its fabric fault counters (captured even on
+/// failure, so the driver can sum them across attempts).
+#[allow(clippy::too_many_arguments)]
+fn run_attempt<K: DeviceKey, F: Fn() -> Vec<Vec<K>>>(
+    cfg: &RunConfig,
+    sorters: &[Sorter],
+    sih: &SihConfig,
+    tuning: CommTuning,
+    make_shards: &F,
+    device_backend: &Option<Backend>,
+    hybrid_engine: &Option<HybridEngine>,
+    stream_ctx: &Option<crate::stream::StreamCtx>,
+) -> (anyhow::Result<(DistSortOutput, Vec<RankOutcome<K>>)>, FaultCounters) {
+    let shards = make_shards();
+    debug_assert_eq!(shards.len(), cfg.ranks);
+    let in_checksum = shards.iter().map(|s| checksum(s)).fold((0u64, 0u128), |a, b| {
+        (a.0 + b.0, a.1.wrapping_add(b.1))
+    });
+
+    let device_flags: Vec<bool> = sorters.iter().map(|s| s.is_device()).collect();
+    let eps = Fabric::new_with(cfg.cluster.clone(), cfg.transfer, device_flags, tuning);
+    let ctl = eps[0].ctl();
+
     let wall0 = Instant::now();
     let results: Mutex<Vec<(usize, anyhow::Result<(RankOutcome<K>, f64, u64, u64)>)>> =
         Mutex::new(Vec::with_capacity(cfg.ranks));
+    // Rank threads that *ended* — by pushing a result or by unwinding
+    // (drop guard). The watchdog waits on this, not on `results`, so an
+    // injected panic on every rank releases it immediately instead of
+    // stalling the join until the watchdog deadline.
+    let ended = AtomicUsize::new(0);
+    let wd_fired = AtomicBool::new(false);
+    let wd_blamed = AtomicUsize::new(0);
+    let wd_detail: Mutex<String> = Mutex::new(String::new());
+
+    /// Counts a rank thread as ended on both return and unwind.
+    struct EndGuard<'a>(&'a AtomicUsize);
+    impl Drop for EndGuard<'_> {
+        fn drop(&mut self) {
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+    }
 
     std::thread::scope(|s| {
         for ((mut ep, shard), sorter_kind) in
@@ -211,10 +327,12 @@ pub fn run_distributed_sort_full<K: DeviceKey + KeyGen>(
         {
             let sih = sih.clone();
             let results = &results;
+            let ended = &ended;
             let device_backend = device_backend.clone();
             let hybrid_engine = hybrid_engine.clone();
             let stream_ctx = stream_ctx.clone();
             s.spawn(move || {
+                let _end = EndGuard(ended);
                 let rank = ep.rank();
                 let run = (|| {
                     let sorter = LocalSorter::from_cfg(
@@ -230,52 +348,134 @@ pub fn run_distributed_sort_full<K: DeviceKey + KeyGen>(
                 results.lock().unwrap().push((rank, run));
             });
         }
+
+        // Driver watchdog: a rank wedged outside the fabric's own
+        // deadlines (e.g. stuck in a compute section) would hang the
+        // join forever — convert it into a coordinated abort and a
+        // typed failure carrying per-rank phase/clock diagnostics.
+        let ctl_w = ctl.clone();
+        let ended_ref = &ended;
+        let (fired, blamed, detail) = (&wd_fired, &wd_blamed, &wd_detail);
+        let ranks = cfg.ranks;
+        let deadline = Duration::from_secs_f64(cfg.comm.watchdog_secs);
+        s.spawn(move || {
+            let t0 = Instant::now();
+            while ended_ref.load(Ordering::SeqCst) < ranks {
+                if t0.elapsed() >= deadline {
+                    *detail.lock().unwrap() = ctl_w.diag_table();
+                    let blame = ctl_w.unfinished_ranks().first().copied().unwrap_or(0);
+                    blamed.store(blame, Ordering::SeqCst);
+                    fired.store(true, Ordering::SeqCst);
+                    ctl_w.abort_all(blame);
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
     });
     let wall_secs = wall0.elapsed().as_secs_f64();
+    let counters = ctl.stats().fault_counters();
+
+    if wd_fired.load(Ordering::SeqCst) {
+        let err = AkError::CommTimeout {
+            op: "watchdog",
+            rank: wd_blamed.load(Ordering::SeqCst),
+            peer: None,
+            waited_secs: cfg.comm.watchdog_secs,
+            detail: wd_detail.into_inner().unwrap(),
+        };
+        return (Err(anyhow::Error::new(err)), counters);
+    }
 
     let mut per_rank = results.into_inner().unwrap();
     per_rank.sort_by_key(|(r, _)| *r);
     let mut outcomes = Vec::with_capacity(cfg.ranks);
     let mut makespan = 0.0f64;
     let (mut msgs, mut wire) = (0u64, 0u64);
+    // When several ranks fail, prefer a failpoint abort over the
+    // secondary RankDead/CommTimeout errors the abort fanned out to the
+    // survivors — the injected crash is the root cause, and the
+    // crash/resume suite classifies on it.
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
     for (rank, res) in per_rank {
-        let (o, mk, m, w) = res.with_context(|| format!("rank {rank}"))?;
-        makespan = makespan.max(mk);
-        msgs = m; // shared counters: any rank's final snapshot is global
-        wire = w;
-        outcomes.push(o);
+        match res {
+            Ok((o, mk, m, w)) => {
+                makespan = makespan.max(mk);
+                msgs = m; // shared counters: any rank's final snapshot is global
+                wire = w;
+                outcomes.push(o);
+            }
+            Err(e) => {
+                let replaces = match &first_err {
+                    None => true,
+                    Some((_, prev)) => {
+                        crate::util::failpoint::is_abort(&e)
+                            && !crate::util::failpoint::is_abort(prev)
+                    }
+                };
+                if replaces {
+                    first_err = Some((rank, e));
+                }
+            }
+        }
+    }
+    if let Some((rank, e)) = first_err {
+        return (Err(e.context(format!("rank {rank}"))), counters);
     }
 
-    // Post-rank kill site: every rank committed phase 6, the driver
-    // dies before verifying — a resume must reload all outputs cheaply
-    // and still pass verification.
-    crate::util::failpoint::check("driver.verify")?;
-    verify_outcomes(&outcomes, in_checksum)?;
+    let res = (|| {
+        // Post-rank kill site: every rank committed phase 6, the driver
+        // dies before verifying — a resume must reload all outputs
+        // cheaply and still pass verification.
+        crate::util::failpoint::check("driver.verify")?;
+        verify_outcomes(&outcomes, in_checksum)?;
 
-    let phase_max = |f: fn(&RankOutcome<K>) -> f64| {
-        outcomes.iter().map(f).fold(0.0f64, f64::max)
-    };
-    let record = SortRunRecord {
-        label: legend_dtype(cfg),
-        ranks: cfg.ranks,
-        total_bytes: cfg.total_bytes(),
-        sim_total: makespan,
-        sim_local_sort: phase_max(|o| o.sim_local_sort),
-        sim_splitters: phase_max(|o| o.sim_splitters),
-        sim_exchange: phase_max(|o| o.sim_exchange),
-        sim_final: phase_max(|o| o.sim_final),
-        messages: msgs,
-        wire_bytes: wire,
-        wall_secs,
-    };
-    Ok((
-        DistSortOutput {
-            out_sizes: outcomes.iter().map(|o| o.data.len()).collect(),
-            rounds_used: outcomes.iter().map(|o| o.rounds_used).max().unwrap_or(0),
-            record,
-        },
-        outcomes,
-    ))
+        let phase_max = |f: fn(&RankOutcome<K>) -> f64| {
+            outcomes.iter().map(f).fold(0.0f64, f64::max)
+        };
+        let record = SortRunRecord {
+            label: legend_dtype(cfg),
+            ranks: cfg.ranks,
+            total_bytes: cfg.total_bytes(),
+            sim_total: makespan,
+            sim_local_sort: phase_max(|o| o.sim_local_sort),
+            sim_splitters: phase_max(|o| o.sim_splitters),
+            sim_exchange: phase_max(|o| o.sim_exchange),
+            sim_final: phase_max(|o| o.sim_final),
+            messages: msgs,
+            wire_bytes: wire,
+            credit_stalls: 0,
+            retries: 0,
+            timeouts: 0,
+            dropped: 0,
+            recoveries: 0,
+            wall_secs,
+        };
+        Ok((
+            DistSortOutput {
+                out_sizes: outcomes.iter().map(|o| o.data.len()).collect(),
+                rounds_used: outcomes.iter().map(|o| o.rounds_used).max().unwrap_or(0),
+                record,
+            },
+            outcomes,
+        ))
+    })();
+    (res, counters)
+}
+
+/// True when `e` is a comm-layer failure the driver may retry: a dead
+/// rank or a timed-out operation. Injected failpoint crashes are *not*
+/// recoverable — the crash/resume suite drives resume explicitly.
+fn recoverable_comm_error(e: &anyhow::Error) -> bool {
+    if crate::util::failpoint::is_abort(e) {
+        return false;
+    }
+    e.chain().any(|c| {
+        matches!(
+            c.downcast_ref::<AkError>(),
+            Some(AkError::RankDead { .. } | AkError::CommTimeout { .. })
+        )
+    })
 }
 
 /// Global correctness: every shard ascending, shard boundaries ordered,

@@ -32,6 +32,16 @@ pub struct SortRunRecord {
     /// Fabric statistics.
     pub messages: u64,
     pub wire_bytes: u64,
+    /// Fault/flow counters, summed over driver restart attempts
+    /// (DESIGN.md §16): sends that blocked on exhausted link credit,
+    /// sender-side retries, deadline/fault timeouts, messages eaten by
+    /// injected link faults, and in-process recoveries (restart
+    /// attempts that went on to finish the job).
+    pub credit_stalls: u64,
+    pub retries: u64,
+    pub timeouts: u64,
+    pub dropped: u64,
+    pub recoveries: u64,
     /// Wall-clock the host actually spent (for the §Perf log).
     pub wall_secs: f64,
 }
@@ -46,7 +56,7 @@ impl SortRunRecord {
     }
 
     pub fn row(&self) -> String {
-        format!(
+        let mut row = format!(
             "{:<22} ranks={:<4} {:>10}  t={:>10}  [sort {} | split {} | xchg {} | final {}]  {:>14}  msgs={} wire={}",
             self.label,
             self.ranks,
@@ -59,7 +69,20 @@ impl SortRunRecord {
             fmt_throughput(self.throughput_bps()),
             self.messages,
             fmt_bytes(self.wire_bytes as f64),
-        )
+        );
+        if self.credit_stalls > 0
+            || self.retries > 0
+            || self.timeouts > 0
+            || self.dropped > 0
+            || self.recoveries > 0
+        {
+            let _ = write!(
+                row,
+                " faults[stalls={} retries={} timeouts={} dropped={} recoveries={}]",
+                self.credit_stalls, self.retries, self.timeouts, self.dropped, self.recoveries,
+            );
+        }
+        row
     }
 }
 
@@ -173,10 +196,22 @@ mod tests {
             sim_final: 0.2,
             messages: 10,
             wire_bytes: 100,
+            credit_stalls: 0,
+            retries: 0,
+            timeouts: 0,
+            dropped: 0,
+            recoveries: 0,
             wall_secs: 30.0,
         };
         assert_eq!(rec.throughput_bps(), 4e9);
         assert!(rec.row().contains("GB/s"));
+        // Fault counters stay out of the row unless something fired.
+        assert!(!rec.row().contains("faults["));
+        let mut faulted = rec.clone();
+        faulted.retries = 3;
+        faulted.recoveries = 1;
+        assert!(faulted.row().contains("retries=3"));
+        assert!(faulted.row().contains("recoveries=1"));
     }
 
     #[test]

@@ -11,18 +11,29 @@
 //! sorted), and every non-empty sub-bucket ships immediately as one
 //! codec-encoded message. Receivers append each source's chunks to a
 //! spilled run in arrival order, so what lands is again P sorted runs —
-//! ready for the final k-way merge. The rank's own *engine* state stays
-//! a few I/O granules (one partition chunk + one decode buffer); bytes
-//! in flight ride the fabric's unbounded channels, which stand in for
-//! the network exactly as they do for `alltoallv`'s whole-bucket
-//! messages — credit-based flow control for a bounded-transport port is
-//! future work (DESIGN.md §14).
+//! ready for the final k-way merge.
+//!
+//! Since PR 7 the fabric is credit-bounded (DESIGN.md §16), so the
+//! exchange runs an **interleaved progress loop**: each iteration tries
+//! to admit queued sends ([`crate::comm::TrySend::Full`] means the
+//! link's credit is exhausted), drains every arrived message into
+//! per-source [`DetachedRunWriter`]s (consumption is what returns
+//! credit to the senders), and parks on fabric activity when neither
+//! direction can move. Send-side state stays bounded at ≤ P messages of
+//! about one I/O granule each; receive-side state is bounded by the
+//! inbound credit caps. Transient link faults are retried here with the
+//! fabric's bounded-backoff policy; a dead rank or a global progress
+//! deadline surfaces as a typed error.
 
-use std::time::Instant;
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
 
-use crate::comm::Endpoint;
+use crate::comm::{Endpoint, TrySend};
 use crate::dtype::SortKey;
+use crate::session::AkError;
 use crate::stream::codec;
+use crate::stream::spill::DetachedRunWriter;
 use crate::stream::{ChunkSource, SpillRun, SpillRunSource, SpillStore};
 use crate::util::failpoint;
 
@@ -77,66 +88,135 @@ pub fn streamed_exchange<K: SortKey>(
     let tag = ep.collective_tag();
     let io_chunk = io_chunk.max(1);
     let mut compute = 0.0f64;
+    let policy = ep.retry_policy();
 
-    // Send side: stream the run, partition each chunk, ship sub-buckets.
+    // Send side: stream the run, partition each chunk, queue sub-bucket
+    // messages. The out-queue holds at most one chunk's worth (≤ P
+    // messages of about one I/O granule) — refilled only when drained,
+    // so send-side state is bounded no matter how slow the links are.
     let mut src = SpillRunSource::new(run, io_chunk)?;
     let mut buf: Vec<K> = Vec::with_capacity(io_chunk);
-    let mut payloads: Vec<Vec<u8>> = Vec::new();
-    loop {
-        let t0 = Instant::now();
-        if src.next_chunk(&mut buf, io_chunk)? == 0 {
-            break;
-        }
-        let cuts = partition_points(&buf, splitters_bits);
-        payloads.clear();
-        for b in buckets(&buf, &cuts) {
-            let mut raw = Vec::new();
-            if !b.is_empty() {
-                codec::encode_into(b, &mut raw);
-            }
-            payloads.push(raw);
-        }
-        compute += t0.elapsed().as_secs_f64();
-        for (dst, raw) in payloads.drain(..).enumerate() {
-            // Data chunks are never empty, so empty unambiguously means
-            // end-of-stream below.
-            if !raw.is_empty() {
-                ep.send_bytes(dst, tag, raw);
-            }
-        }
-    }
-    // End-of-stream marker per destination. All sends complete before
-    // any receive (the fabric's channels are unbounded), so the
-    // collective cannot deadlock.
-    for dst in 0..p {
-        ep.send_bytes(dst, tag, Vec::new());
-    }
-    // Mid-exchange kill site, placed at the one point where dying is
-    // deadlock-free by construction: every send (including the end
-    // markers) is already queued, no receive has started, and the fail
-    // point trips on every rank — in-flight bytes drop with the
-    // channels and a resume replays the whole collective.
-    failpoint::check("sih.exchange.sent")?;
+    let mut outq: VecDeque<(usize, Vec<u8>)> = VecDeque::new();
+    let mut markers_queued = false;
+    let mut front_attempts = 1u32;
+    let mut front_was_full = false;
 
-    // Receive side: append each source's chunks (in order — per-source
-    // FIFO) to one spilled run; chunks of a sorted stream concatenate
-    // to a sorted run.
-    let mut runs: Vec<SpillRun<K>> = Vec::with_capacity(p);
+    // Receive side: one detached writer per source (they interleave in
+    // arrival order under flow control; per-link FIFO keeps each
+    // source's run sorted). Consuming arrivals promptly is what returns
+    // credit to the senders — that is the loop's liveness argument.
+    let mut writers: Vec<DetachedRunWriter<K>> = Vec::with_capacity(p);
+    for _ in 0..p {
+        writers.push(store.detached_run_writer::<K>()?);
+    }
+    let mut open = p; // sources whose end-of-stream marker is pending
     let mut decode: Vec<K> = Vec::new();
-    for src in 0..p {
-        let mut w = store.run_writer::<K>()?;
-        loop {
-            let bytes = ep.recv_bytes(src, tag);
+
+    // Global progress deadline: reset on any progress in either
+    // direction; hitting it means the exchange is wedged (typed error,
+    // not a hang).
+    let progress_timeout = ep.recv_timeout();
+    let mut last_progress = Instant::now();
+
+    while open > 0 || !(markers_queued && outq.is_empty()) {
+        let mut progressed = false;
+
+        // 1. Refill the out-queue from the next chunk of the run.
+        if outq.is_empty() && !markers_queued {
+            let t0 = Instant::now();
+            if src.next_chunk(&mut buf, io_chunk)? == 0 {
+                // Data chunks are never empty, so an empty message
+                // unambiguously means end-of-stream.
+                for dst in 0..p {
+                    outq.push_back((dst, Vec::new()));
+                }
+                markers_queued = true;
+            } else {
+                let cuts = partition_points(&buf, splitters_bits);
+                for (dst, b) in buckets(&buf, &cuts).into_iter().enumerate() {
+                    if !b.is_empty() {
+                        let mut raw = Vec::new();
+                        codec::encode_into(b, &mut raw);
+                        outq.push_back((dst, raw));
+                    }
+                }
+            }
+            compute += t0.elapsed().as_secs_f64();
+            progressed = true;
+        }
+
+        // 2. Admit queued sends; a faulted link retries with the
+        // fabric's bounded backoff (deterministic jitter, sim-clock
+        // wait); exhausted credit pauses sending until credit returns.
+        while let Some((dst, raw)) = outq.front() {
+            let dst = *dst;
+            match ep.try_send_bytes(dst, tag, raw) {
+                Ok(TrySend::Sent) => {
+                    if front_was_full {
+                        // The stall is honest in simulated time too.
+                        ep.sync_link_release(dst);
+                    }
+                    outq.pop_front();
+                    front_attempts = 1;
+                    front_was_full = false;
+                    progressed = true;
+                }
+                Ok(TrySend::Full) => {
+                    if !front_was_full {
+                        front_was_full = true;
+                        ep.stats().credit_stalls.fetch_add(1, Ordering::Relaxed);
+                    }
+                    break;
+                }
+                Err(AkError::CommTimeout { .. }) if front_attempts < policy.max_attempts => {
+                    let wait = policy.backoff_secs(ep.rank(), dst, tag, front_attempts);
+                    ep.advance(wait);
+                    ep.stats().retries.fetch_add(1, Ordering::Relaxed);
+                    front_attempts += 1;
+                    progressed = true; // bounded: max_attempts then error
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+
+        // 3. Drain every arrival into its source's writer.
+        while let Some((from, bytes)) = ep.try_recv_any(tag)? {
+            progressed = true;
             if bytes.is_empty() {
-                break;
+                open -= 1;
+                continue;
             }
             let t0 = Instant::now();
             decode.clear();
             codec::decode_into(&bytes, &mut decode)?;
-            w.push_chunk(&decode)?;
+            writers[from].push_chunk(&decode)?;
             compute += t0.elapsed().as_secs_f64();
         }
-        runs.push(w.finish()?);
+
+        // 4. Park when stuck (waking on arrival/credit/abort).
+        if progressed {
+            last_progress = Instant::now();
+        } else {
+            if last_progress.elapsed() >= progress_timeout {
+                let detail = format!(
+                    "exchange wedged: {open} sources still open, {} messages queued",
+                    outq.len()
+                );
+                return Err(ep.deadline_exceeded("exchange", progress_timeout, detail).into());
+            }
+            ep.wait_activity(Duration::from_millis(2))?;
+        }
+    }
+
+    // Mid-exchange kill site, placed where dying is deadlock-free by
+    // construction: the transport is fully drained on this rank (all
+    // sends delivered, all end markers consumed) and the fail point
+    // trips on every rank — a resume replays the whole collective.
+    failpoint::check("sih.exchange.sent")?;
+
+    let mut runs: Vec<SpillRun<K>> = Vec::with_capacity(p);
+    for w in writers {
+        runs.push(w.finish(store)?);
     }
     Ok((runs, compute))
 }

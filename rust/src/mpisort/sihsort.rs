@@ -193,6 +193,7 @@ pub fn sihsort_rank<K: DeviceKey>(
     };
 
     // ---- Phase 1: local sort ------------------------------------------------
+    ep.note_phase("local-sort");
     let t_phase = ep.now();
     // Measured under the fabric's compute token: wall time reflects this
     // rank's work alone, not host-core oversubscription (fabric docs).
@@ -203,15 +204,17 @@ pub fn sihsort_rank<K: DeviceKey>(
     });
     sort_res?;
     charge(ep, secs);
-    ep.barrier();
+    ep.barrier()?;
     let sim_local_sort = ep.now() - t_phase;
 
     // ---- Phase 2+3: sampling + interpolated-histogram refinement -----------
+    ep.note_phase("splitters");
     let t_phase = ep.now();
     let (splitters, rounds_used) = select_splitters(ep, &sorted, cfg, is_dev)?;
     let sim_splitters = ep.now() - t_phase;
 
     // ---- Phase 4+5: partition + single alltoallv ----------------------------
+    ep.note_phase("exchange");
     let t_phase = ep.now();
     let (parts, secs) = ep.measured(|| {
         let cuts = partition_points(&sorted, &splitters);
@@ -219,11 +222,12 @@ pub fn sihsort_rank<K: DeviceKey>(
     });
     debug_assert_eq!(parts.len(), p);
     charge(ep, secs);
-    let received = ep.alltoallv(parts);
+    let received = ep.alltoallv(parts)?;
     drop(sorted);
     let sim_exchange = ep.now() - t_phase;
 
     // ---- Phase 6: final combine ---------------------------------------------
+    ep.note_phase("final");
     let t_phase = ep.now();
     let (data, secs) = ep.measured(|| -> anyhow::Result<Vec<K>> {
         match cfg.final_phase {
@@ -254,9 +258,10 @@ pub fn sihsort_rank<K: DeviceKey>(
     });
     let data = data?;
     charge(ep, secs);
-    ep.barrier();
+    ep.barrier()?;
     let sim_final = ep.now() - t_phase;
 
+    ep.finish();
     Ok(RankOutcome {
         data,
         sim_local_sort,
@@ -299,6 +304,7 @@ fn sihsort_rank_streamed<K: DeviceKey>(
     let io_chunk = ctx.plan::<K>().io_chunk_elems;
 
     // ---- Phase 1: budget-bounded rank-local external sort -------------
+    ep.note_phase("local-sort");
     let t_phase = ep.now();
     let mut local_store = ctx.store();
     let (sorted_res, secs) = {
@@ -312,11 +318,12 @@ fn sihsort_rank_streamed<K: DeviceKey>(
     };
     let (run, local_stats) = sorted_res?;
     charge(ep, secs);
-    ep.barrier();
+    ep.barrier()?;
     let sim_local_sort = ep.now() - t_phase;
     let local_run_bytes = local_store.bytes_spilled();
 
     // ---- Phase 2+3: splitters over the streamed shard -----------------
+    ep.note_phase("splitters");
     let t_phase = ep.now();
     let local_len = run.elems() as u64;
     let (splitters, rounds_used) = select_splitters_core(
@@ -336,6 +343,7 @@ fn sihsort_rank_streamed<K: DeviceKey>(
     let sim_splitters = ep.now() - t_phase;
 
     // ---- Phase 4+5: streamed chunk-at-a-time exchange -----------------
+    ep.note_phase("exchange");
     let t_phase = ep.now();
     let mut xstore = match &cfg.stream {
         Some(s) => s.store(),
@@ -349,6 +357,7 @@ fn sihsort_rank_streamed<K: DeviceKey>(
     let sim_exchange = ep.now() - t_phase;
 
     // ---- Phase 6: final k-way merge of the received runs --------------
+    ep.note_phase("final");
     let t_phase = ep.now();
     let plan = ctx.plan::<K>();
     let (data_res, secs) = {
@@ -395,9 +404,10 @@ fn sihsort_rank_streamed<K: DeviceKey>(
     let exchange_spilled_bytes = xstore.bytes_spilled();
     drop(xstore);
     charge(ep, secs);
-    ep.barrier();
+    ep.barrier()?;
     let sim_final = ep.now() - t_phase;
 
+    ep.finish();
     Ok(RankOutcome {
         data,
         sim_local_sort,
@@ -472,9 +482,10 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
     let my_phase = store.manifest().expect("checkpointed store has a manifest").phase;
     // Collective skip decisions must be uniform across ranks (see the
     // function docs): agree on the slowest rank's committed phase.
-    let start = ep.allreduce_u64(my_phase as u64, ReduceOp::Min) as u32;
+    let start = ep.allreduce_u64(my_phase as u64, ReduceOp::Min)? as u32;
 
     // ---- Phase 1: park the external-sorted shard (per-rank skip) ------
+    ep.note_phase("local-sort");
     let t_phase = ep.now();
     let (run, local_stats, secs) = if my_phase >= 1 {
         // The parked run is durable and input-deterministic: reopen it.
@@ -524,11 +535,12 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
         (run, stats, secs)
     };
     charge(ep, secs);
-    ep.barrier();
+    ep.barrier()?;
     let sim_local_sort = ep.now() - t_phase;
     let local_run_bytes = store.bytes_spilled();
 
     // ---- Phase 2+3: splitters (collective; uniform skip) --------------
+    ep.note_phase("splitters");
     let t_phase = ep.now();
     let (splitters, rounds_used) = if start >= 3 {
         let m = store.manifest().expect("checkpointed store has a manifest");
@@ -563,6 +575,7 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
     let sim_splitters = ep.now() - t_phase;
 
     // ---- Phase 4+5: streamed exchange (collective; uniform skip) ------
+    ep.note_phase("exchange");
     let t_phase = ep.now();
     let (recv_runs, secs) = if start >= 5 {
         if store.manifest().expect("checkpointed store has a manifest").phase >= 6 {
@@ -611,6 +624,7 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
     let sim_exchange = ep.now() - t_phase;
 
     // ---- Phase 6: final merge + durable output (per-rank skip) --------
+    ep.note_phase("final");
     let t_phase = ep.now();
     let my_phase = store.manifest().expect("checkpointed store has a manifest").phase;
     let (data, secs) = if my_phase >= 6 {
@@ -705,9 +719,10 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
     };
     let exchange_spilled_bytes = store.bytes_spilled().saturating_sub(local_run_bytes);
     charge(ep, secs);
-    ep.barrier();
+    ep.barrier()?;
     let sim_final = ep.now() - t_phase;
 
+    ep.finish();
     Ok(RankOutcome {
         data,
         sim_local_sort,
@@ -780,10 +795,10 @@ where
     let samples = samples?;
     charge(ep, secs);
     let sample_bytes = u128s_to_bytes(&samples);
-    let gathered = ep.gather_bytes(LEADER, sample_bytes);
+    let gathered = ep.gather_bytes(LEADER, sample_bytes)?;
 
     // Global element count rides an allreduce (one u64).
-    let total = ep.allreduce_u64(local_len, crate::comm::collectives::ReduceOp::Sum);
+    let total = ep.allreduce_u64(local_len, crate::comm::collectives::ReduceOp::Sum)?;
 
     let mut leader_state: Option<RefineState> = if ep.rank() == LEADER {
         let pooled: Vec<u128> =
@@ -806,7 +821,7 @@ where
         } else {
             Vec::new()
         };
-        let (candidates, done) = unpack_candidates(&ep.bcast_bytes(LEADER, payload));
+        let (candidates, done) = unpack_candidates(&ep.bcast_bytes(LEADER, payload)?);
         if done {
             return Ok((candidates, rounds_used));
         }
@@ -816,7 +831,7 @@ where
         let (lranks, secs) = ep.measured(|| ranks_of(&candidates));
         let lranks = lranks?;
         charge(ep, secs);
-        let gathered = ep.gather_bytes(LEADER, u64s_to_bytes(&lranks));
+        let gathered = ep.gather_bytes(LEADER, u64s_to_bytes(&lranks))?;
 
         if ep.rank() == LEADER {
             let per_rank: Vec<Vec<u64>> =

@@ -53,6 +53,33 @@ pub enum AkError {
         /// What disagreed.
         detail: String,
     },
+    /// A fabric operation exceeded its deadline or lost a message on a
+    /// faulted link. Retryable: the sender-side backoff in
+    /// [`crate::comm::RetryPolicy`] re-attempts exactly this class
+    /// (DESIGN.md §16 — the simulated transport is acked, so drops and
+    /// partitions surface at the *sender* as timeouts).
+    CommTimeout {
+        /// The fabric operation ("send", "recv", "barrier", "watchdog").
+        op: &'static str,
+        /// The rank whose operation timed out.
+        rank: usize,
+        /// The peer of a point-to-point op, if any.
+        peer: Option<usize>,
+        /// How long the op waited before giving up (wall seconds).
+        waited_secs: f64,
+        /// What was being waited for (tag, credit, diagnostics table).
+        detail: String,
+    },
+    /// A rank died: a fault-injected kill, a peer endpoint dropped
+    /// mid-collective, or the coordinated abort that follows either.
+    /// Tagged with the abort epoch (the driver's restart-attempt index)
+    /// so stale aborts from a previous attempt are attributable.
+    RankDead {
+        /// The rank that died (or was blamed by the watchdog).
+        rank: usize,
+        /// The coordinated-abort epoch the death was observed in.
+        epoch: u64,
+    },
     /// Engine-internal failure: a worker panicked or an invariant the
     /// engines rely on was violated.
     Internal(anyhow::Error),
@@ -106,6 +133,19 @@ impl std::fmt::Display for AkError {
                 write!(f, "{op}: device engine unavailable: {detail}")
             }
             AkError::ShapeMismatch { op, detail } => write!(f, "{op}: shape mismatch: {detail}"),
+            AkError::CommTimeout { op, rank, peer, waited_secs, detail } => match peer {
+                Some(p) => write!(
+                    f,
+                    "comm {op} timed out on rank {rank} (peer {p}) after {waited_secs:.3}s: {detail}"
+                ),
+                None => write!(
+                    f,
+                    "comm {op} timed out on rank {rank} after {waited_secs:.3}s: {detail}"
+                ),
+            },
+            AkError::RankDead { rank, epoch } => {
+                write!(f, "rank {rank} died (abort epoch {epoch})")
+            }
             AkError::Internal(e) => write!(f, "internal error: {e}"),
         }
     }
@@ -149,6 +189,28 @@ mod tests {
         }
         let msg = format!("{:#}", old_style().unwrap_err());
         assert!(msg.contains("rbf"), "{msg}");
+    }
+
+    #[test]
+    fn comm_errors_name_rank_and_peer() {
+        let e = AkError::CommTimeout {
+            op: "recv",
+            rank: 2,
+            peer: Some(5),
+            waited_secs: 1.5,
+            detail: "tag 7".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("rank 2") && s.contains("peer 5") && s.contains("tag 7"), "{s}");
+        let e = AkError::RankDead { rank: 3, epoch: 1 };
+        let s = e.to_string();
+        assert!(s.contains("rank 3") && s.contains("epoch 1"), "{s}");
+        // Both stay downcastable through an anyhow hop — the driver's
+        // recovery loop classifies rank failures this way.
+        let back: anyhow::Error = AkError::RankDead { rank: 3, epoch: 1 }.into();
+        assert!(back
+            .chain()
+            .any(|c| matches!(c.downcast_ref::<AkError>(), Some(AkError::RankDead { rank: 3, .. }))));
     }
 
     #[test]

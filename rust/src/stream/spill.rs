@@ -465,6 +465,26 @@ impl SpillStore {
         w.push_chunk(sorted)?;
         w.finish()
     }
+
+    /// Start a run writer that does **not** borrow the store, so several
+    /// can be open at once — the interleaved streamed exchange holds one
+    /// per source rank while messages arrive in credit-paced order
+    /// (DESIGN.md §16). The run id/file is reserved here; byte and run
+    /// accounting land at [`DetachedRunWriter::finish`].
+    pub fn detached_run_writer<K: SortKey>(&mut self) -> anyhow::Result<DetachedRunWriter<K>> {
+        let sink = match self.medium {
+            SpillMedium::Memory => RunWriterSink::Mem(Vec::new()),
+            SpillMedium::Disk => {
+                let id = self.next_id;
+                self.next_id += 1;
+                let path = self.ensure_dir()?.join(format!("run-{id}.bin"));
+                let file = File::create(&path)
+                    .with_context(|| format!("creating run {}", path.display()))?;
+                RunWriterSink::File { w: BufWriter::new(file), path, elems: 0, raw: Vec::new() }
+            }
+        };
+        Ok(DetachedRunWriter { sink, spilled: 0 })
+    }
 }
 
 enum RunWriterSink<K: SortKey> {
@@ -506,6 +526,62 @@ impl<K: SortKey> RunWriter<'_, K> {
             RunWriterSink::File { mut w, path, elems, .. } => {
                 w.flush().context("flushing spill run")?;
                 if self.store.ckpt.is_some() {
+                    w.get_ref()
+                        .sync_all()
+                        .with_context(|| format!("fsync run {}", path.display()))?;
+                }
+                Ok(SpillRun::File { path, elems, keep: false })
+            }
+        }
+    }
+}
+
+/// A run writer that owns its sink instead of borrowing the store (see
+/// [`SpillStore::detached_run_writer`]): the streamed exchange keeps
+/// one open per source rank simultaneously. Must be finished against
+/// the store that created it so spill accounting stays consistent.
+pub struct DetachedRunWriter<K: SortKey> {
+    sink: RunWriterSink<K>,
+    /// Bytes written through this writer (folded into the store's
+    /// `bytes_spilled` at finish).
+    spilled: u64,
+}
+
+impl<K: SortKey> DetachedRunWriter<K> {
+    /// Append one sorted chunk.
+    pub fn push_chunk(&mut self, chunk: &[K]) -> anyhow::Result<()> {
+        match &mut self.sink {
+            RunWriterSink::Mem(v) => v.extend_from_slice(chunk),
+            RunWriterSink::File { w, elems, raw, .. } => {
+                raw.clear();
+                codec::encode_into(chunk, raw);
+                w.write_all(raw).context("writing spill run")?;
+                *elems += chunk.len();
+                self.spilled += raw.len() as u64;
+            }
+        }
+        Ok(())
+    }
+
+    /// Elements written so far.
+    pub fn elems(&self) -> usize {
+        match &self.sink {
+            RunWriterSink::Mem(v) => v.len(),
+            RunWriterSink::File { elems, .. } => *elems,
+        }
+    }
+
+    /// Flush, settle accounting on `store`, and hand back the finished
+    /// run (fsynced first when the store is checkpointed, same contract
+    /// as [`RunWriter::finish`]).
+    pub fn finish(self, store: &mut SpillStore) -> anyhow::Result<SpillRun<K>> {
+        store.runs_written += 1;
+        store.bytes_spilled += self.spilled;
+        match self.sink {
+            RunWriterSink::Mem(v) => Ok(SpillRun::Mem(v)),
+            RunWriterSink::File { mut w, path, elems, .. } => {
+                w.flush().context("flushing spill run")?;
+                if store.ckpt.is_some() {
                     w.get_ref()
                         .sync_all()
                         .with_context(|| format!("fsync run {}", path.display()))?;

@@ -1,0 +1,353 @@
+//! Fault-tolerance suite for the bounded, fallible fabric
+//! (DESIGN.md §16).
+//!
+//! The contract under test: a distributed sort whose fabric loses
+//! messages, stalls, or kills a rank mid-collective either *recovers
+//! in-process* (bounded sender retries for transient link faults,
+//! whole-collective restart + checkpoint resume for rank death) and
+//! produces bitwise what one single-node `Session::sort` produces — or
+//! fails with a *typed* comm error carrying rank attribution and
+//! per-rank diagnostics, never a hang and never an opaque panic.
+//! Alongside: seeded-randomised flow-control schedules proving the
+//! per-link credit cap is a hard bound, and retry-backoff determinism.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use accelkern::backend::DeviceKey;
+use accelkern::cfg::{RunConfig, Sorter, TransferMode};
+use accelkern::cluster::ClusterSpec;
+use accelkern::comm::{CommTuning, Fabric, RetryPolicy};
+use accelkern::coordinator::driver::{run_distributed_sort_data, run_distributed_sort_shards};
+use accelkern::dtype::{bits_eq, ElemType};
+use accelkern::session::{AkError, Session};
+use accelkern::stream::TempDirGuard;
+use accelkern::util::Prng;
+use accelkern::workload::{generate, KeyGen};
+
+const N_PER_RANK: usize = 4000;
+
+/// In-memory-sorter cluster config with a comm section tuned for fault
+/// tests: short deadlines, generous retries, restarts allowed.
+fn fault_cfg(ranks: usize, dtype: ElemType) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.ranks = ranks;
+    cfg.elems_per_rank = N_PER_RANK;
+    cfg.dtype = dtype;
+    cfg.sorter = Sorter::ThrustRadix;
+    cfg.host_threads = 2;
+    cfg.comm.recv_timeout_secs = 30.0;
+    cfg.comm.send_timeout_secs = 30.0;
+    cfg.comm.retry_attempts = 10;
+    cfg.comm.max_restarts = 2;
+    cfg
+}
+
+/// Switch a config to the External (out-of-core) sorter, checkpointed
+/// under `dir`, with a budget that forces every rank out of core.
+fn externalize(cfg: &mut RunConfig, dir: &std::path::Path) {
+    cfg.sorter = Sorter::External;
+    cfg.stream.budget_bytes = Some(N_PER_RANK * cfg.dtype.size_bytes() / 8);
+    cfg.stream.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+}
+
+/// The driver's deterministic seeded shards for `cfg`.
+fn seeded_shards<K: KeyGen + DeviceKey>(cfg: &RunConfig) -> Vec<Vec<K>> {
+    let mut root = Prng::new(cfg.seed);
+    (0..cfg.ranks)
+        .map(|r| {
+            let mut rng = root.fork(r as u64);
+            generate::<K>(&mut rng, cfg.dist, cfg.elems_per_rank)
+        })
+        .collect()
+}
+
+/// Adversarial f64 shards: NaN payloads (both signs), −0.0/0.0, heavy
+/// duplicates, infinities — the values bitwise equivalence is hardest
+/// for, injected through the caller-supplied-shards driver entry.
+fn nan_shards(ranks: usize) -> Vec<Vec<f64>> {
+    let mut rng = Prng::new(4242);
+    (0..ranks)
+        .map(|_| {
+            (0..N_PER_RANK)
+                .map(|i| match i % 7 {
+                    0 => f64::NAN,
+                    1 => -f64::NAN,
+                    2 => -0.0,
+                    3 => 0.0,
+                    4 => (i % 11) as f64 - 5.0,
+                    5 => f64::NEG_INFINITY,
+                    _ => <f64 as KeyGen>::uniform(&mut rng),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Single-node reference for hand-built shards.
+fn reference<K: DeviceKey>(shards: &[Vec<K>]) -> Vec<K> {
+    let mut all: Vec<K> = shards.iter().flatten().copied().collect();
+    Session::threaded(2).sort(&mut all, None).unwrap();
+    all
+}
+
+/// Run the collective with `shards` under `cfg`'s fault plan and assert
+/// it recovered in-process to the bitwise single-node answer.
+fn check_recovers<K: DeviceKey>(cfg: &RunConfig, shards: Vec<Vec<K>>, label: &str) {
+    let want = reference(&shards);
+    let sorters = vec![cfg.sorter; cfg.ranks];
+    let (out, outcomes) =
+        run_distributed_sort_shards::<K, _>(cfg, &sorters, None, || shards.clone())
+            .unwrap_or_else(|e| panic!("{label}: job did not recover: {e:#}"));
+    let got: Vec<K> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+    assert!(bits_eq(&got, &want), "{label}: recovered output diverges from single-node sort");
+    assert!(
+        out.record.recoveries >= 1,
+        "{label}: the kill must force at least one in-process restart"
+    );
+}
+
+// ---- rank death mid-exchange: restart + resume, bitwise ------------------
+
+#[test]
+fn killed_rank_mid_exchange_recovers_in_memory() {
+    for ranks in [2usize, 4] {
+        // i64 through the seeded generator...
+        let mut cfg = fault_cfg(ranks, ElemType::I64);
+        cfg.comm.faults = Some("kill:1:2:exchange".into());
+        check_recovers(&cfg, seeded_shards::<i64>(&cfg), &format!("TR/i64/ranks={ranks}"));
+
+        // ...and f64 with NaN payloads / −0.0 through hand-built shards.
+        let mut cfg = fault_cfg(ranks, ElemType::F64);
+        cfg.comm.faults = Some("kill:1:2:exchange".into());
+        check_recovers(&cfg, nan_shards(ranks), &format!("TR/f64/ranks={ranks}"));
+    }
+}
+
+#[test]
+fn killed_rank_mid_exchange_recovers_external_from_checkpoints() {
+    for ranks in [2usize, 4] {
+        let parent = TempDirGuard::new(None).unwrap();
+
+        let mut cfg = fault_cfg(ranks, ElemType::I64);
+        externalize(&mut cfg, &parent.path().join("i64"));
+        cfg.comm.faults = Some("kill:1:2:exchange".into());
+        check_recovers(&cfg, seeded_shards::<i64>(&cfg), &format!("EX/i64/ranks={ranks}"));
+
+        let mut cfg = fault_cfg(ranks, ElemType::F64);
+        externalize(&mut cfg, &parent.path().join("f64"));
+        cfg.comm.faults = Some("kill:1:2:exchange".into());
+        check_recovers(&cfg, nan_shards(ranks), &format!("EX/f64/ranks={ranks}"));
+    }
+}
+
+#[test]
+fn rank_death_without_restart_budget_is_a_typed_failure() {
+    // max_restarts = 0: the kill is fatal, and it surfaces as
+    // `AkError::RankDead` with rank attribution — not a panic, not a
+    // hang, not a string.
+    let mut cfg = fault_cfg(2, ElemType::I64);
+    cfg.comm.faults = Some("kill:1:2:exchange".into());
+    cfg.comm.max_restarts = 0;
+    let e = run_distributed_sort_data::<i64>(&cfg, None).unwrap_err();
+    let ak = e
+        .chain()
+        .find_map(|c| c.downcast_ref::<AkError>())
+        .unwrap_or_else(|| panic!("no typed comm error in the chain: {e:#}"));
+    assert!(
+        matches!(ak, AkError::RankDead { rank: 1, .. }),
+        "expected RankDead{{rank:1}}, got {ak:?}"
+    );
+}
+
+// ---- transient link faults: bounded retries, no restart needed -----------
+
+#[test]
+fn dropped_messages_are_retried_to_completion() {
+    // drop-next-3 on the leader's bcast link: deterministic — exactly 3
+    // sender-side losses, each recovered by the bounded backoff without
+    // burning a restart attempt.
+    let mut cfg = fault_cfg(2, ElemType::I64);
+    cfg.comm.faults = Some("drop:0:1:3".into());
+    let want = reference(&seeded_shards::<i64>(&cfg));
+    let (out, outcomes) = run_distributed_sort_data::<i64>(&cfg, None).unwrap();
+    let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+    assert!(bits_eq(&got, &want));
+    assert_eq!(out.record.dropped, 3, "the drop rule eats exactly its budget");
+    assert!(out.record.retries >= 3, "every loss must surface as a sender retry");
+    assert_eq!(out.record.recoveries, 0, "transient faults must not need a restart");
+}
+
+#[test]
+fn flaky_link_survives_retries_and_restarts() {
+    // A deterministic drop pair guarantees the counters fire; the flaky
+    // tail keeps dropping with p=0.3 for the rest of the job. Retries
+    // (and, if a message exhausts its attempts, a restart) must still
+    // deliver the bitwise answer.
+    let mut cfg = fault_cfg(2, ElemType::I64);
+    cfg.comm.faults = Some("drop:0:1:2, flaky:0:1:0.3".into());
+    cfg.comm.fault_seed = 11;
+    let want = reference(&seeded_shards::<i64>(&cfg));
+    let (out, outcomes) = run_distributed_sort_data::<i64>(&cfg, None).unwrap();
+    let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+    assert!(bits_eq(&got, &want));
+    assert!(out.record.dropped >= 2 && out.record.retries >= 2, "{:?}", out.record.row());
+}
+
+#[test]
+fn partition_heals_and_the_job_completes() {
+    // Every cross-cut message drops until the global send-attempt
+    // counter passes 6 — the retry layer itself advances that clock, so
+    // the partition heals under backoff and the job finishes.
+    let mut cfg = fault_cfg(2, ElemType::I64);
+    cfg.comm.faults = Some("partition:1:6".into());
+    let want = reference(&seeded_shards::<i64>(&cfg));
+    let (out, outcomes) = run_distributed_sort_data::<i64>(&cfg, None).unwrap();
+    let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+    assert!(bits_eq(&got, &want));
+    assert!(out.record.dropped >= 1 && out.record.retries >= 1, "{:?}", out.record.row());
+}
+
+// ---- watchdog: hung rank -> typed failure with diagnostics ---------------
+
+#[test]
+fn watchdog_converts_stalled_rank_into_typed_failure() {
+    // Rank 1 parks on the fabric mid-exchange; every fabric deadline is
+    // far longer than the watchdog, so the watchdog must fire first,
+    // abort the collective, and surface per-rank phase/clock
+    // diagnostics in a typed CommTimeout.
+    let mut cfg = fault_cfg(2, ElemType::I64);
+    cfg.comm.faults = Some("stall:1:2:exchange".into());
+    cfg.comm.watchdog_secs = 0.4;
+    cfg.comm.max_restarts = 0;
+    let e = run_distributed_sort_data::<i64>(&cfg, None).unwrap_err();
+    let ak = e
+        .chain()
+        .find_map(|c| c.downcast_ref::<AkError>())
+        .unwrap_or_else(|| panic!("no typed comm error in the chain: {e:#}"));
+    match ak {
+        AkError::CommTimeout { op, detail, .. } if *op == "watchdog" => {
+            assert!(
+                detail.contains("rank 0") && detail.contains("rank 1"),
+                "diagnostics must cover every rank: {detail}"
+            );
+            assert!(
+                detail.contains("phase=exchange"),
+                "diagnostics must carry last-known phases: {detail}"
+            );
+        }
+        other => panic!("expected a watchdog CommTimeout, got {other:?}"),
+    }
+}
+
+#[test]
+fn watchdog_abort_is_recoverable_with_restart_budget() {
+    // Same stall, but with a restart budget: the stall rule is one-shot
+    // per job, so the restarted attempt sails through.
+    let mut cfg = fault_cfg(2, ElemType::I64);
+    cfg.comm.faults = Some("stall:1:2:exchange".into());
+    cfg.comm.watchdog_secs = 0.4;
+    cfg.comm.max_restarts = 1;
+    let want = reference(&seeded_shards::<i64>(&cfg));
+    let (out, outcomes) = run_distributed_sort_data::<i64>(&cfg, None).unwrap();
+    let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
+    assert!(bits_eq(&got, &want));
+    assert_eq!(out.record.recoveries, 1);
+}
+
+// ---- flow control: the credit cap is a hard bound ------------------------
+
+#[test]
+fn in_flight_never_exceeds_cap_under_random_chunk_schedules() {
+    // Seeded-randomised schedules (chunk sizes, consumption pacing)
+    // over a deliberately tiny cap: peak in-flight bytes on the link
+    // must never exceed the cap (every message is cap-sized or less, so
+    // the oversized-idle admission cannot apply), and the slow consumer
+    // must force at least one genuine credit stall.
+    const CAP: usize = 4096;
+    const MSGS: usize = 40;
+    for seed in 0..8u64 {
+        let tuning = CommTuning {
+            cap_nvlink: CAP,
+            cap_ib: CAP,
+            cap_pcie: CAP,
+            cap_hostmem: CAP,
+            send_timeout_secs: 30.0,
+            recv_timeout_secs: 30.0,
+            ..CommTuning::default()
+        };
+        let mut eps = Fabric::new_with(
+            ClusterSpec::baskerville(),
+            TransferMode::GpuDirect,
+            vec![true; 2],
+            tuning,
+        );
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let mut rng = Prng::new(0xF10C ^ seed);
+        let sizes: Vec<usize> =
+            (0..MSGS).map(|_| 64 + (rng.uniform_f64() * (CAP - 64) as f64) as usize).collect();
+        let total: usize = sizes.iter().sum();
+        let h = std::thread::spawn(move || {
+            // Start slow so the sender outruns the consumer and stalls.
+            std::thread::sleep(Duration::from_millis(20));
+            let mut rng = Prng::new(0xBEEF ^ seed);
+            let mut got = 0usize;
+            for i in 0..MSGS {
+                if rng.uniform_f64() < 0.3 {
+                    std::thread::sleep(Duration::from_micros(300));
+                }
+                got += e1.recv_bytes(0, i as u64).unwrap().len();
+            }
+            e1.finish();
+            got
+        });
+        for (i, sz) in sizes.iter().enumerate() {
+            e0.send_bytes(1, i as u64, &vec![7u8; *sz]).unwrap();
+        }
+        assert_eq!(h.join().unwrap(), total, "seed {seed}: bytes lost");
+        let peak = e0.stats().peak_link_bytes.load(Ordering::Relaxed);
+        assert!(peak as usize <= CAP, "seed {seed}: peak in-flight {peak} exceeded cap {CAP}");
+        assert!(
+            e0.stats().credit_stalls.load(Ordering::Relaxed) >= 1,
+            "seed {seed}: the slow consumer never forced a credit stall"
+        );
+        e0.finish();
+    }
+}
+
+// ---- retry backoff: deterministic, jittered, bounded ---------------------
+
+#[test]
+fn retry_backoff_schedules_are_deterministic_and_bounded() {
+    let mut rng = Prng::new(2024);
+    for _ in 0..64 {
+        let p = RetryPolicy {
+            max_attempts: 2 + (rng.uniform_f64() * 6.0) as u32,
+            base_secs: 1e-5 + rng.uniform_f64() * 1e-3,
+            factor: 1.5 + rng.uniform_f64(),
+            max_secs: 0.05,
+            seed: (rng.uniform_f64() * 1e9) as u64,
+        };
+        let rank = (rng.uniform_f64() * 8.0) as usize;
+        let peer = (rng.uniform_f64() * 8.0) as usize;
+        let tag = (rng.uniform_f64() * 1e6) as u64;
+        let s = p.schedule(rank, peer, tag);
+        // Deterministic: the same (policy, link, tag) replays bit-equal.
+        assert_eq!(s, p.schedule(rank, peer, tag));
+        assert_eq!(s.len(), (p.max_attempts - 1) as usize);
+        // Bounded: each step within [0.5, 1.0] x its capped nominal.
+        let mut nominal = p.base_secs;
+        for (i, w) in s.iter().enumerate() {
+            let cap = nominal.min(p.max_secs);
+            assert!(
+                *w >= 0.5 * cap - 1e-12 && *w <= cap + 1e-12,
+                "step {i}: {w} outside [{}, {cap}]",
+                0.5 * cap
+            );
+            nominal *= p.factor;
+        }
+        let total: f64 = s.iter().sum();
+        assert!(total <= p.max_secs * p.max_attempts as f64, "unbounded total backoff {total}");
+    }
+}

@@ -7,50 +7,126 @@
 //! for `Result` and `Option` — with the same semantics as upstream:
 //!
 //! * any `std::error::Error + Send + Sync + 'static` converts into
-//!   [`Error`] (so `?` works in `anyhow::Result` functions),
+//!   [`Error`] (so `?` works in `anyhow::Result` functions) **with its
+//!   concrete type preserved**: [`Error::chain`] walks the cause chain
+//!   as `&dyn std::error::Error` links, so `c.is::<T>()` /
+//!   `c.downcast_ref::<T>()` recover the original error — which is how
+//!   `failpoint::is_abort` finds an injected `FailpointAbort` and the
+//!   driver's recovery loop classifies `AkError::{RankDead,
+//!   CommTimeout}` through any number of `.context(..)` hops,
 //! * `.context(..)` / `.with_context(..)` push a new message onto the
-//!   cause chain,
+//!   cause chain without disturbing the links beneath it,
 //! * `{e}` displays the top message, `{e:#}` the full chain joined by
 //!   `": "` (what the repo prints in error paths).
 //!
 //! Swapping this for the upstream crate is a drop-in change.
 
+use std::error::Error as StdError;
 use std::fmt;
 
 /// `Result<T, anyhow::Error>` — the crate-wide error-carrying result.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
-/// A dynamic error: a message plus an optional chain of causes.
+/// A dynamic error: a boxed `std::error::Error` whose `source()` chain
+/// is the cause chain. Context layers are real links in that chain, so
+/// downcasting through [`Error::chain`] sees every original error.
 pub struct Error {
+    obj: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// A plain-message link (what [`Error::msg`] and [`anyhow!`] build).
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// A context layer: displays its own message, sources the wrapped error.
+struct ContextError {
     msg: String,
-    source: Option<Box<Error>>,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ContextError({:?})", self.msg)
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        Some(self.source.as_ref())
+    }
 }
 
 impl Error {
+    /// Build an error from a typed `std::error::Error`, preserving the
+    /// concrete type for later [`Error::downcast_ref`].
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { obj: Box::new(error) }
+    }
+
     /// Build an error from any displayable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msg: message.to_string(), source: None }
+        Error { obj: Box::new(MessageError(message.to_string())) }
     }
 
     /// Wrap this error with an outer context message.
     pub fn context<C: fmt::Display>(self, context: C) -> Error {
-        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+        Error { obj: Box::new(ContextError { msg: context.to_string(), source: self.obj }) }
     }
 
-    /// The cause chain, outermost message first.
-    pub fn chain(&self) -> Vec<&str> {
-        let mut out = Vec::new();
-        let mut cur = Some(self);
-        while let Some(e) = cur {
-            out.push(e.msg.as_str());
-            cur = e.source.as_deref();
-        }
-        out
+    /// The cause chain, outermost link first. Each link is the original
+    /// typed error (or a context/message layer), so
+    /// `chain().any(|c| c.is::<T>())` and
+    /// `chain().find_map(|c| c.downcast_ref::<T>())` work as upstream.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        std::iter::successors(
+            Some(self.obj.as_ref() as &(dyn StdError + 'static)),
+            |e| e.source(),
+        )
     }
 
-    /// The innermost error message.
-    pub fn root_cause(&self) -> &str {
-        self.chain().last().copied().unwrap_or("")
+    /// The innermost error of the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        self.chain().last().expect("chain is never empty")
+    }
+
+    /// First link in the chain that is a `T`, if any. Upstream checks
+    /// the outermost error; walking the whole chain is a superset the
+    /// repo's call sites (fail-point aborts behind context layers) rely
+    /// on.
+    pub fn downcast_ref<T: StdError + 'static>(&self) -> Option<&T> {
+        self.chain().find_map(|c| c.downcast_ref::<T>())
+    }
+
+    /// True when some link in the chain is a `T`.
+    pub fn is<T: StdError + 'static>(&self) -> bool {
+        self.downcast_ref::<T>().is_some()
+    }
+}
+
+impl AsRef<dyn StdError + 'static> for Error {
+    fn as_ref(&self) -> &(dyn StdError + 'static) {
+        self.obj.as_ref()
+    }
+}
+
+impl std::ops::Deref for Error {
+    type Target = dyn StdError + Send + Sync + 'static;
+    fn deref(&self) -> &Self::Target {
+        self.obj.as_ref()
     }
 }
 
@@ -58,20 +134,25 @@ impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         if f.alternate() {
             // `{:#}` — the full chain, upstream-compatible enough for logs.
-            write!(f, "{}", self.chain().join(": "))
+            let mut sep = "";
+            for link in self.chain() {
+                write!(f, "{sep}{link}")?;
+                sep = ": ";
+            }
+            Ok(())
         } else {
-            f.write_str(&self.msg)
+            write!(f, "{}", self.obj)
         }
     }
 }
 
 impl fmt::Debug for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.msg)?;
-        let chain = self.chain();
-        if chain.len() > 1 {
+        write!(f, "{}", self.obj)?;
+        let causes: Vec<_> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
             f.write_str("\n\nCaused by:")?;
-            for cause in &chain[1..] {
+            for cause in causes {
                 write!(f, "\n    {cause}")?;
             }
         }
@@ -81,20 +162,9 @@ impl fmt::Debug for Error {
 
 // Like upstream: `Error` deliberately does NOT implement
 // `std::error::Error`, which is what makes this blanket `From` coherent.
-impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        // Flatten the std source chain into our message chain.
-        let mut msgs: Vec<String> = Vec::new();
-        let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(&e);
-        while let Some(c) = cur {
-            msgs.push(c.to_string());
-            cur = c.source();
-        }
-        let mut err: Option<Error> = None;
-        for msg in msgs.into_iter().rev() {
-            err = Some(Error { msg, source: err.map(Box::new) });
-        }
-        err.expect("at least one message")
+        Error::new(e)
     }
 }
 
@@ -182,7 +252,33 @@ mod tests {
         let e = e.context("reading file");
         assert_eq!(format!("{e}"), "reading file");
         assert_eq!(format!("{e:#}"), "reading file: gone");
-        assert_eq!(e.root_cause(), "gone");
+        assert_eq!(e.root_cause().to_string(), "gone");
+    }
+
+    #[test]
+    fn downcast_survives_context_hops() {
+        let e = Error::new(io_err()).context("outer").context("outermost");
+        assert!(e.is::<std::io::Error>());
+        let io = e.downcast_ref::<std::io::Error>().unwrap();
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.chain().any(|c| c.is::<std::io::Error>()));
+        assert_eq!(e.chain().count(), 3);
+        // A nested std source chain stays walkable too.
+        #[derive(Debug)]
+        struct Outer(std::io::Error);
+        impl fmt::Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "outer typed")
+            }
+        }
+        impl StdError for Outer {
+            fn source(&self) -> Option<&(dyn StdError + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let e: Error = Outer(io_err()).into();
+        assert!(e.is::<Outer>() && e.is::<std::io::Error>());
+        assert_eq!(format!("{e:#}"), "outer typed: gone");
     }
 
     #[test]
