@@ -1,6 +1,6 @@
 # Top-level convenience targets (see README.md).
 
-.PHONY: artifacts build test test-faults doc bench-smoke bench-sort bench-stream bench-cluster-stream clean-artifacts
+.PHONY: artifacts build test test-faults lint lint-fix sanitize sanitize-thread sanitize-address doc bench-smoke bench-sort bench-stream bench-cluster-stream clean-artifacts
 
 # AOT-lower the L1/L2 Pallas/JAX catalog to artifacts/ (requires jax).
 artifacts:
@@ -22,6 +22,43 @@ test:
 test-faults:
 	cargo test -q -p accelkern --test crash_resume
 	cargo test -q -p accelkern --test fault_recovery
+
+# Repo-specific static analysis (DESIGN.md §17): unwrap/expect hygiene
+# on the fallible comm/stream/mpisort paths, SAFETY comments on every
+# unsafe block, the fail-point registry cross-check (source literals vs
+# util::failpoint::SITES vs the crash_resume kill matrix), collective
+# wire-tag minting, checked arithmetic in stream budget math, and the
+# DESIGN.md §15 site-table drift check. Zero findings is a CI gate; the
+# JSON report is uploaded as a CI artifact.
+lint:
+	cargo run -q -p aklint -- --report aklint-report.json
+
+# Regenerate the DESIGN.md §15 site table from util::failpoint::SITES.
+lint-fix:
+	cargo run -q -p aklint -- --fix-design
+
+# Sanitizer matrix (DESIGN.md §17). `make sanitize` runs Miri over the
+# unsafe hot modules (session RawScratch pool, baselines::radix
+# SendPtr scatter, comm::wire, stream::codec) — the modules whose
+# `unsafe` the SAFETY comments argue about. The thread/address targets
+# run the full suite under TSan/ASan; all three need a nightly
+# toolchain and run in the scheduled CI job with the checked-in
+# suppression file.
+sanitize:
+	cargo +nightly miri test -q -p accelkern --lib -- \
+		session:: baselines::radix:: comm::wire:: stream::codec::
+
+sanitize-thread:
+	TSAN_OPTIONS="suppressions=$(CURDIR)/ci/sanitizer-suppressions.txt" \
+	RUSTFLAGS="-Z sanitizer=thread" \
+	cargo +nightly test -q -p accelkern --lib --tests \
+		--target x86_64-unknown-linux-gnu
+
+sanitize-address:
+	ASAN_OPTIONS="detect_odr_violation=1" \
+	RUSTFLAGS="-Z sanitizer=address" \
+	cargo +nightly test -q -p accelkern --lib --tests \
+		--target x86_64-unknown-linux-gnu
 
 # Docs with warnings promoted to errors (the CI gate): broken intra-doc
 # links on the Session/Launch surface fail the build.

@@ -168,7 +168,12 @@ fn radix_passes<K: SortKey, U: RadixImage>(
 /// ranges, which partition `0..n` by construction of the exclusive scan.
 #[derive(Clone, Copy)]
 struct SendPtr<T>(*mut T);
+// SAFETY: the wrapped pointer is only dereferenced inside the scatter's
+// scoped threads, each writing its own disjoint (thread, digit) bucket
+// ranges (the contract above) — no two workers alias a slot.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: same disjoint-bucket contract; shared references never read
+// through the pointer.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 fn radix_passes_parallel<K: SortKey, U: RadixImage>(

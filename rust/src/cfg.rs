@@ -383,6 +383,9 @@ pub struct CommCfg {
     pub faults: Option<String>,
     /// Seed for the fault plan's deterministic draws (`--fault-seed`).
     pub fault_seed: u64,
+    /// Happens-before / deadlock-detector debug mode (`hb_check` /
+    /// `--hb-check`; see [`crate::comm::CommTuning::hb_check`]).
+    pub hb_check: bool,
 }
 
 impl Default for CommCfg {
@@ -400,6 +403,7 @@ impl Default for CommCfg {
             max_restarts: 0,
             faults: None,
             fault_seed: 0,
+            hb_check: false,
         }
     }
 }
@@ -440,6 +444,7 @@ impl CommCfg {
             },
             faults: None,
             epoch: 0,
+            hb_check: self.hb_check,
         }
     }
 }
@@ -646,6 +651,9 @@ impl RunConfig {
         if let Some(v) = doc.get("comm", "fault_seed").and_then(|v| v.as_i64()) {
             self.comm.fault_seed = v as u64;
         }
+        if let Some(v) = doc.get("comm", "hb_check").and_then(|v| v.as_bool()) {
+            self.comm.hb_check = v;
+        }
         // Fail at config time, not mid-run, on an unparsable fault spec.
         self.comm.fault_plan()?;
         self.cluster.apply_toml(doc)?;
@@ -739,7 +747,8 @@ mod tests {
         let doc = Toml::parse(
             "[comm]\ncap_mb = 8\ncap_ib_mb = 2.5\nrecv_timeout_secs = 30\n\
              retry_attempts = 6\nwatchdog_secs = 45\nmax_restarts = 2\n\
-             faults = \"flaky:0:1:0.25, kill:1:3:exchange\"\nfault_seed = 7\n",
+             faults = \"flaky:0:1:0.25, kill:1:3:exchange\"\nfault_seed = 7\n\
+             hb_check = true\n",
         )
         .unwrap();
         let mut cfg = RunConfig::default();
@@ -753,6 +762,7 @@ mod tests {
         assert_eq!(cfg.comm.watchdog_secs, 45.0);
         assert_eq!(cfg.comm.max_restarts, 2);
         assert_eq!(cfg.comm.fault_seed, 7);
+        assert!(cfg.comm.hb_check);
         let plan = cfg.comm.fault_plan().unwrap().expect("spec parsed");
         assert_eq!(plan.rules.len(), 2);
         // The tuning carries the caps in bytes and the retry policy.
@@ -760,6 +770,7 @@ mod tests {
         assert_eq!(t.cap_nvlink, 8_000_000);
         assert_eq!(t.cap_ib, 2_500_000);
         assert_eq!(t.retry.max_attempts, 6);
+        assert!(t.hb_check, "hb_check must flow into the fabric tuning");
         // Unparsable fault specs fail at config time.
         let bad = Toml::parse("[comm]\nfaults = \"melt:0\"\n").unwrap();
         assert!(RunConfig::default().apply_toml(&bad).is_err());

@@ -111,6 +111,11 @@ COMM / FAULT FLAGS (bounded fallible fabric — DESIGN.md §16)
                        stall:RANK:N[:PHASE]  ([comm] faults)
   --fault-seed N       seed for the plan's random draws ([comm]
                        fault_seed; default 0)
+  --hb-check           happens-before debug mode: vector clocks,
+                       per-channel delivery monotonicity checks, and a
+                       wait-for graph that reports a deadlock as a named
+                       cycle the moment it closes ([comm] hb_check;
+                       DESIGN.md §17)
 
 LAUNCH KNOBS (per-call tuning, Session/Launch API — DESIGN.md §12)
   --max-tasks N        cap host worker tasks per call
@@ -141,6 +146,7 @@ impl Cli {
                 if matches!(
                     name,
                     "quick" | "no-device" | "help" | "verify" | "reuse-scratch" | "resume"
+                        | "hb-check"
                 ) {
                     cli.flags.insert(name.to_string(), "true".to_string());
                 } else {
@@ -290,6 +296,9 @@ impl Cli {
         if let Some(v) = self.get_usize("fault-seed")? {
             cfg.comm.fault_seed = v as u64;
         }
+        if self.has("hb-check") {
+            cfg.comm.hb_check = true;
+        }
         // Unparsable fault specs fail at flag-parse time, not mid-run.
         cfg.comm.fault_plan().context("--faults")?;
         cfg.launch = self.launch_overrides(cfg.launch.clone())?;
@@ -426,7 +435,7 @@ mod tests {
     fn comm_flags_flow_into_config() {
         let c = Cli::parse(args(
             "sort --comm-cap-mb 4 --recv-timeout 30 --watchdog-secs 20 --max-restarts 2 \
-             --faults flaky:0:1:0.1,kill:1:3:exchange --fault-seed 9",
+             --faults flaky:0:1:0.1,kill:1:3:exchange --fault-seed 9 --hb-check",
         ))
         .unwrap();
         let cfg = c.run_config().unwrap();
@@ -436,6 +445,7 @@ mod tests {
         assert_eq!(cfg.comm.watchdog_secs, 20.0);
         assert_eq!(cfg.comm.max_restarts, 2);
         assert_eq!(cfg.comm.fault_seed, 9);
+        assert!(cfg.comm.hb_check);
         assert_eq!(cfg.comm.fault_plan().unwrap().unwrap().rules.len(), 2);
         // Defaults hold with no flags.
         let cfg = Cli::parse(args("sort")).unwrap().run_config().unwrap();

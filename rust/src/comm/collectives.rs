@@ -17,7 +17,7 @@
 //! stall a sender (until the receiver consumes) but never deadlock it.
 
 use crate::dtype::SortKey;
-use crate::session::AkResult;
+use crate::session::{AkError, AkResult};
 
 use super::fabric::Endpoint;
 use super::wire::{bytes_to_vec, vec_to_bytes};
@@ -112,7 +112,9 @@ impl Endpoint {
         let gathered = self.gather_bytes(0, bytes)?;
         // Pack: [n_ranks × u64 length] + concatenated payloads.
         let packed = if self.rank() == 0 {
-            let parts = gathered.unwrap();
+            let parts = gathered.ok_or_else(|| {
+                AkError::Internal(anyhow::anyhow!("gather returned no payload at the root"))
+            })?;
             let mut buf = Vec::new();
             for p in &parts {
                 buf.extend_from_slice(&(p.len() as u64).to_le_bytes());

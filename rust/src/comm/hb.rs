@@ -1,0 +1,521 @@
+//! Happens-before tracking and deadlock detection for the fabric
+//! (DESIGN.md §17), behind [`CommTuning::hb_check`].
+//!
+//! Three instruments, all living under the fabric's state mutex:
+//!
+//! - **Vector clocks** — every rank carries a [`VClock`]; sends tick
+//!   and stamp the outgoing message, consumes join the stamp into the
+//!   receiver, barriers join every clock. The clocks give each message
+//!   a happens-before position that diagnostics (and tests) can read
+//!   via `Endpoint::hb_clock`.
+//! - **Per-channel monotonicity** — each `(src, dst, tag)` channel
+//!   numbers its sends; [`HbState::on_consume`] rejects a delivery
+//!   whose sequence number is not exactly the last-consumed + 1. The
+//!   fabric's FIFO inboxes make this invariant structural today; the
+//!   checker catches a future reordering bug at the boundary instead
+//!   of as downstream corruption.
+//! - **Wait-for graph** — a rank parked in the fabric registers what
+//!   it waits on ([`Wait`]): the source of a blocking receive, the
+//!   consumer whose link credit a blocked send needs, the unarrived
+//!   ranks of a barrier generation, or the holder of the compute
+//!   token. Each registration runs a cycle check; a closed cycle among
+//!   *parked* ranks is a true deadlock (every edge's target is the
+//!   only agent that can unblock the waiter), so detection is
+//!   deterministic and immediate — a named cycle with per-rank
+//!   diagnostics, not a watchdog timeout. The fabric turns it into
+//!   [`AkError::Deadlock`] and trips the coordinated abort.
+//!
+//! The state mutex itself is deliberately *not* a graph node: it is
+//! the detector's own monitor, held only for O(1) sections and never
+//! across a park, so it cannot participate in a deadlock. Compute-token
+//! edges can never close a cycle either (a `measured` section must not
+//! communicate, so a holder is never parked in the fabric); they are
+//! tracked so a cycle check sees through ranks queued on the token.
+//!
+//! [`CommTuning::hb_check`]: super::CommTuning::hb_check
+//! [`AkError::Deadlock`]: crate::session::AkError::Deadlock
+
+use std::collections::HashMap;
+
+/// A vector clock: one logical-time component per rank.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VClock(pub Vec<u64>);
+
+impl VClock {
+    /// The zero clock for `n` ranks.
+    pub fn new(n: usize) -> VClock {
+        VClock(vec![0; n])
+    }
+
+    /// Advance `rank`'s own component (a local event).
+    pub fn tick(&mut self, rank: usize) {
+        self.0[rank] += 1;
+    }
+
+    /// Component-wise maximum (receive/barrier join).
+    pub fn join(&mut self, other: &VClock) {
+        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
+            *a = (*a).max(*b);
+        }
+    }
+
+    /// True when every component of `self` is `<=` the matching
+    /// component of `other` (self happened-before-or-equal other).
+    pub fn le(&self, other: &VClock) -> bool {
+        self.0.iter().zip(other.0.iter()).all(|(a, b)| a <= b)
+    }
+}
+
+/// What a parked rank is waiting for — one out-edge set of the
+/// wait-for graph.
+#[derive(Clone, Copy, Debug)]
+pub enum Wait {
+    /// Blocked in a receive for a message from `src` with `tag`.
+    Recv {
+        /// The only rank that can send the awaited message.
+        src: usize,
+        /// The awaited tag.
+        tag: u64,
+    },
+    /// Blocked in a send on exhausted link credit: only `dst`
+    /// consuming frees the link.
+    SendCredit {
+        /// The receiver whose consumption returns the credit.
+        dst: usize,
+        /// Tag of the blocked message.
+        tag: u64,
+        /// In-flight bytes held against the link when the wait began.
+        in_flight: usize,
+        /// The link's credit cap.
+        cap: usize,
+    },
+    /// Parked in barrier generation `gen`, waiting for every rank that
+    /// has not arrived yet.
+    Barrier {
+        /// The barrier generation the rank is parked in.
+        gen: u64,
+    },
+    /// Queued on the compute token (held by another rank).
+    Compute,
+}
+
+/// The per-fabric happens-before state (guarded by the fabric's state
+/// mutex; every method is O(ranks) or better).
+#[derive(Debug)]
+pub struct HbState {
+    n: usize,
+    clocks: Vec<VClock>,
+    /// Next send sequence number per `(src, dst, tag)` channel.
+    send_seq: HashMap<(usize, usize, u64), u64>,
+    /// Last consumed sequence number per `(src, dst, tag)` channel.
+    recv_seq: HashMap<(usize, usize, u64), u64>,
+    waits: Vec<Option<Wait>>,
+    bar_gen: u64,
+    bar_arrived: Vec<bool>,
+    compute_holder: Option<usize>,
+}
+
+impl HbState {
+    /// Fresh state for `n` ranks.
+    pub fn new(n: usize) -> HbState {
+        HbState {
+            n,
+            clocks: vec![VClock::new(n); n],
+            send_seq: HashMap::new(),
+            recv_seq: HashMap::new(),
+            waits: vec![None; n],
+            bar_gen: 0,
+            bar_arrived: vec![false; n],
+            compute_holder: None,
+        }
+    }
+
+    /// A send event on `(src, dst, tag)`: ticks the sender's clock and
+    /// returns the stamp (clock snapshot, channel sequence number) the
+    /// message carries.
+    pub fn on_send(&mut self, src: usize, dst: usize, tag: u64) -> (VClock, u64) {
+        self.clocks[src].tick(src);
+        let seq = self.send_seq.entry((src, dst, tag)).or_insert(0);
+        *seq += 1;
+        (self.clocks[src].clone(), *seq)
+    }
+
+    /// A consume event at `dst`: verifies the channel's sequence is
+    /// exactly last + 1 (FIFO delivery per `(src, dst, tag)`), then
+    /// joins the message stamp into the receiver's clock. An
+    /// out-of-order delivery returns the protocol-violation diagnostic.
+    pub fn on_consume(
+        &mut self,
+        dst: usize,
+        src: usize,
+        tag: u64,
+        stamp: &VClock,
+        seq: u64,
+    ) -> Result<(), String> {
+        let last = self.recv_seq.entry((src, dst, tag)).or_insert(0);
+        if seq != *last + 1 {
+            return Err(format!(
+                "hb_check: out-of-order delivery on channel {src}->{dst} tag {tag:#x}: \
+                 consumed seq {seq} after seq {last}"
+            ));
+        }
+        *last = seq;
+        self.clocks[dst].join(stamp);
+        self.clocks[dst].tick(dst);
+        Ok(())
+    }
+
+    /// This rank's current vector clock.
+    pub fn clock(&self, rank: usize) -> &VClock {
+        &self.clocks[rank]
+    }
+
+    /// A rank arrived at barrier generation `gen`.
+    pub fn barrier_arrive(&mut self, rank: usize, gen: u64) {
+        if gen != self.bar_gen {
+            self.bar_gen = gen;
+            self.bar_arrived.iter_mut().for_each(|a| *a = false);
+        }
+        self.bar_arrived[rank] = true;
+        self.clocks[rank].tick(rank);
+    }
+
+    /// The barrier generation completed: every clock joins every other
+    /// (the barrier is a global synchronisation point).
+    pub fn barrier_complete(&mut self) {
+        let mut max = VClock::new(self.n);
+        for c in &self.clocks {
+            max.join(c);
+        }
+        for c in &mut self.clocks {
+            *c = max.clone();
+        }
+    }
+
+    /// Record (or clear, with `None`) the compute-token holder.
+    pub fn set_compute_holder(&mut self, rank: Option<usize>) {
+        self.compute_holder = rank;
+    }
+
+    /// The current compute-token holder, if any.
+    pub fn compute_holder(&self) -> Option<usize> {
+        self.compute_holder
+    }
+
+    /// Register that `rank` is about to park on `wait`, then check
+    /// whether the registration closed a wait-for cycle. Returns the
+    /// canonical cycle diagnostic if it did — a closed cycle among
+    /// parked ranks is a true deadlock, diagnosed the moment it forms.
+    /// `phases` are the per-rank phase notes for the diagnostic.
+    pub fn register_wait(
+        &mut self,
+        rank: usize,
+        wait: Wait,
+        phases: &[&'static str],
+    ) -> Option<String> {
+        self.waits[rank] = Some(wait);
+        self.find_cycle(rank, phases)
+    }
+
+    /// `rank` stopped waiting (delivered, admitted, errored, or woken
+    /// by an abort).
+    pub fn clear_wait(&mut self, rank: usize) {
+        self.waits[rank] = None;
+    }
+
+    /// A message on `(src, dst, tag)` was just enqueued: if `dst` is
+    /// parked in a receive for exactly that channel, its wake-up is
+    /// already pending — drop its wait edge so a later registration
+    /// cannot close a stale cycle through a rank that is about to run.
+    pub fn on_enqueue(&mut self, dst: usize, src: usize, tag: u64) {
+        if let Some(Wait::Recv { src: ws, tag: wt }) = self.waits[dst] {
+            if ws == src && wt == tag {
+                self.waits[dst] = None;
+            }
+        }
+    }
+
+    /// Credit returned on the `src -> dst` link (the receiver consumed
+    /// a charged message): if `src` is parked on that link's credit,
+    /// its wake-up is already pending — drop its wait edge.
+    pub fn on_credit_release(&mut self, src: usize, dst: usize) {
+        if let Some(Wait::SendCredit { dst: wd, .. }) = self.waits[src] {
+            if wd == dst {
+                self.waits[src] = None;
+            }
+        }
+    }
+
+    /// Ranks `r` currently waits on (the only agents able to unblock
+    /// it). Stale barrier waits — a generation that already advanced —
+    /// have no targets: the waiter is about to wake.
+    fn targets(&self, r: usize) -> Vec<usize> {
+        match self.waits[r] {
+            None => Vec::new(),
+            Some(Wait::Recv { src, .. }) => vec![src],
+            Some(Wait::SendCredit { dst, .. }) => vec![dst],
+            Some(Wait::Barrier { gen }) if gen == self.bar_gen => {
+                (0..self.n).filter(|&x| !self.bar_arrived[x] && x != r).collect()
+            }
+            Some(Wait::Barrier { .. }) => Vec::new(),
+            Some(Wait::Compute) => {
+                self.compute_holder.into_iter().filter(|&h| h != r).collect()
+            }
+        }
+    }
+
+    /// Depth-first search for a path `start -> ... -> start`. Any
+    /// newly-closed cycle must pass through the rank that just
+    /// registered (edges of other ranks only ever shrink), so searching
+    /// from `start` alone is complete.
+    fn find_cycle(&self, start: usize, phases: &[&'static str]) -> Option<String> {
+        let mut path = vec![start];
+        let mut visited = vec![false; self.n];
+        visited[start] = true;
+        if self.dfs(start, start, &mut path, &mut visited) {
+            Some(self.format_cycle(&path, phases))
+        } else {
+            None
+        }
+    }
+
+    fn dfs(
+        &self,
+        node: usize,
+        start: usize,
+        path: &mut Vec<usize>,
+        visited: &mut [bool],
+    ) -> bool {
+        for t in self.targets(node) {
+            if t == start {
+                return true;
+            }
+            if !visited[t] {
+                visited[t] = true;
+                path.push(t);
+                if self.dfs(t, start, path, visited) {
+                    return true;
+                }
+                path.pop();
+            }
+        }
+        false
+    }
+
+    fn edge_label(&self, r: usize) -> String {
+        match self.waits[r] {
+            Some(Wait::Recv { src, tag }) => format!("--recv(src {src}, tag {tag:#x})--"),
+            Some(Wait::SendCredit { dst, tag, in_flight, cap }) => format!(
+                "--send-credit(link {r}->{dst}, in-flight {in_flight}/{cap} bytes, \
+                 tag {tag:#x})--"
+            ),
+            Some(Wait::Barrier { gen }) => format!("--barrier(gen {gen})--"),
+            Some(Wait::Compute) => "--compute-token--".to_string(),
+            None => "--?--".to_string(),
+        }
+    }
+
+    /// Canonical, deterministic rendering: the cycle is rotated to
+    /// start at its smallest rank, each hop names the wait kind with
+    /// its link/credit/tag details and the waiter's phase note.
+    fn format_cycle(&self, path: &[usize], phases: &[&'static str]) -> String {
+        let pivot = path
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &r)| r)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let rot: Vec<usize> =
+            (0..path.len()).map(|i| path[(pivot + i) % path.len()]).collect();
+        let mut s = String::from("wait-for cycle: ");
+        for (i, &r) in rot.iter().enumerate() {
+            let next = rot[(i + 1) % rot.len()];
+            let phase = phases.get(r).copied().unwrap_or("?");
+            s.push_str(&format!("rank {r} [phase={phase}] {}> rank {next}", self.edge_label(r)));
+            if i + 1 < rot.len() {
+                s.push_str("; ");
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clocks_propagate_happens_before() {
+        let mut hb = HbState::new(3);
+        let (stamp, seq) = hb.on_send(0, 1, 7);
+        assert_eq!(seq, 1);
+        assert_eq!(stamp.0, vec![1, 0, 0]);
+        hb.on_consume(1, 0, 7, &stamp, seq).unwrap();
+        // The receiver's clock now dominates the sender's stamp.
+        assert!(stamp.le(hb.clock(1)));
+        assert_eq!(hb.clock(1).0, vec![1, 1, 0]);
+        // Relay 1 -> 2 carries rank 0's component transitively.
+        let (stamp2, seq2) = hb.on_send(1, 2, 9);
+        hb.on_consume(2, 1, 9, &stamp2, seq2).unwrap();
+        assert_eq!(hb.clock(2).0[0], 1, "transitive happens-before lost");
+    }
+
+    #[test]
+    fn out_of_order_consume_is_a_protocol_violation() {
+        let mut hb = HbState::new(2);
+        let (s1, q1) = hb.on_send(0, 1, 5);
+        let (s2, q2) = hb.on_send(0, 1, 5);
+        // Consuming the second message first is the reordering bug the
+        // checker exists to catch.
+        let err = hb.on_consume(1, 0, 5, &s2, q2).unwrap_err();
+        assert!(err.contains("out-of-order"), "{err}");
+        assert!(err.contains("0->1"), "{err}");
+        hb.on_consume(1, 0, 5, &s1, q1).unwrap();
+        hb.on_consume(1, 0, 5, &s2, q2).unwrap();
+        // Distinct tags are distinct channels: no false positive.
+        let (s3, q3) = hb.on_send(0, 1, 6);
+        hb.on_consume(1, 0, 6, &s3, q3).unwrap();
+    }
+
+    #[test]
+    fn barrier_joins_every_clock() {
+        let mut hb = HbState::new(2);
+        let (s, q) = hb.on_send(0, 0, 1);
+        hb.on_consume(0, 0, 1, &s, q).unwrap();
+        hb.barrier_arrive(0, 0);
+        hb.barrier_arrive(1, 0);
+        hb.barrier_complete();
+        assert_eq!(hb.clock(0), hb.clock(1));
+        assert!(hb.clock(1).0[0] >= 2, "rank 0's history not joined: {:?}", hb.clock(1));
+    }
+
+    #[test]
+    fn two_rank_credit_recv_cycle_is_named() {
+        let phases = ["exchange", "exchange"];
+        let mut hb = HbState::new(2);
+        assert!(
+            hb.register_wait(1, Wait::Recv { src: 0, tag: 999 }, &phases).is_none(),
+            "a single wait is not a cycle"
+        );
+        let cycle = hb
+            .register_wait(
+                0,
+                Wait::SendCredit { dst: 1, tag: 8, in_flight: 4096, cap: 4096 },
+                &phases,
+            )
+            .expect("the second wait closes the cycle");
+        assert!(cycle.contains("rank 0") && cycle.contains("rank 1"), "{cycle}");
+        assert!(cycle.contains("send-credit(link 0->1"), "{cycle}");
+        assert!(cycle.contains("recv(src 0, tag 0x3e7"), "{cycle}");
+        assert!(cycle.contains("phase=exchange"), "{cycle}");
+        // Clearing either wait reopens the graph.
+        hb.clear_wait(0);
+        assert!(hb
+            .register_wait(
+                0,
+                Wait::SendCredit { dst: 1, tag: 8, in_flight: 4096, cap: 4096 },
+                &phases,
+            )
+            .is_some());
+        hb.clear_wait(1);
+        assert!(hb
+            .register_wait(
+                0,
+                Wait::SendCredit { dst: 1, tag: 8, in_flight: 4096, cap: 4096 },
+                &phases,
+            )
+            .is_none());
+    }
+
+    #[test]
+    fn pending_wakeups_suppress_stale_cycles() {
+        let phases = ["exchange", "exchange"];
+        // Receiver side: rank 1 parks on recv(0, 7); the awaited
+        // message is enqueued (wake-up pending) before rank 0 blocks
+        // on that link's credit — no cycle, rank 1 is about to run.
+        let mut hb = HbState::new(2);
+        assert!(hb.register_wait(1, Wait::Recv { src: 0, tag: 7 }, &phases).is_none());
+        hb.on_enqueue(1, 0, 7);
+        assert!(hb
+            .register_wait(
+                0,
+                Wait::SendCredit { dst: 1, tag: 7, in_flight: 64, cap: 64 },
+                &phases,
+            )
+            .is_none());
+        // A different channel must NOT clear the wait.
+        let mut hb = HbState::new(2);
+        assert!(hb.register_wait(1, Wait::Recv { src: 0, tag: 7 }, &phases).is_none());
+        hb.on_enqueue(1, 0, 8);
+        assert!(hb
+            .register_wait(
+                0,
+                Wait::SendCredit { dst: 1, tag: 7, in_flight: 64, cap: 64 },
+                &phases,
+            )
+            .is_some());
+        // Sender side: rank 0 parks on credit to 1; rank 1 consumes
+        // (credit released, wake-up pending) before parking in a recv
+        // on rank 0 — no cycle.
+        let mut hb = HbState::new(2);
+        assert!(hb
+            .register_wait(
+                0,
+                Wait::SendCredit { dst: 1, tag: 7, in_flight: 64, cap: 64 },
+                &phases,
+            )
+            .is_none());
+        hb.on_credit_release(0, 1);
+        assert!(hb.register_wait(1, Wait::Recv { src: 0, tag: 9 }, &phases).is_none());
+    }
+
+    #[test]
+    fn three_rank_cycle_through_barrier() {
+        // Rank 0 parks in a barrier (rank 1 and 2 unarrived); rank 1
+        // recv-waits on 2; rank 2 credit-waits on 1's consumption. The
+        // 1 -> 2 -> 1 cycle excludes rank 0 — the detector must name
+        // exactly the deadlocked pair, canonically from rank 1.
+        let phases = ["final", "exchange", "exchange"];
+        let mut hb = HbState::new(3);
+        hb.barrier_arrive(0, 0);
+        assert!(hb.register_wait(0, Wait::Barrier { gen: 0 }, &phases).is_none());
+        assert!(hb.register_wait(1, Wait::Recv { src: 2, tag: 3 }, &phases).is_none());
+        let cycle = hb
+            .register_wait(
+                2,
+                Wait::SendCredit { dst: 1, tag: 4, in_flight: 100, cap: 64 },
+                &phases,
+            )
+            .expect("1 <-> 2 cycle");
+        assert!(cycle.starts_with("wait-for cycle: rank 1"), "{cycle}");
+        assert!(!cycle.contains("rank 0"), "rank 0 is not in the cycle: {cycle}");
+    }
+
+    #[test]
+    fn stale_barrier_generation_has_no_edges() {
+        let phases = ["start", "start"];
+        let mut hb = HbState::new(2);
+        // Rank 0 still holds a wait from generation 0; generation has
+        // moved to 1 — its edges are gone, so no cycle can close
+        // through a waiter that is about to wake.
+        assert!(hb.register_wait(0, Wait::Barrier { gen: 0 }, &phases).is_none());
+        hb.barrier_arrive(1, 1);
+        assert!(hb.register_wait(1, Wait::Recv { src: 0, tag: 1 }, &phases).is_none());
+    }
+
+    #[test]
+    fn compute_token_edges_see_through_queued_ranks() {
+        // Rank 1 queues on the compute token held by rank 2; rank 2 is
+        // not parked, so no cycle — but once rank 2 recv-waits on a
+        // rank that transitively waits on rank 1, the path through the
+        // token closes the loop.
+        let phases = ["local-sort", "local-sort", "local-sort"];
+        let mut hb = HbState::new(3);
+        hb.set_compute_holder(Some(2));
+        assert!(hb.register_wait(1, Wait::Compute, &phases).is_none());
+        let cycle = hb
+            .register_wait(2, Wait::Recv { src: 1, tag: 11 }, &phases)
+            .expect("token edge must participate in the cycle");
+        assert!(cycle.contains("compute-token"), "{cycle}");
+    }
+}

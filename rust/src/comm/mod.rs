@@ -21,9 +21,11 @@
 pub mod collectives;
 pub mod fabric;
 pub mod fault;
+pub mod hb;
 pub mod wire;
 
 pub use collectives::ReduceOp;
 pub use fabric::{CommStats, CommTuning, Endpoint, Fabric, FabricCtl, FaultCounters, TrySend};
+pub use hb::{HbState, VClock, Wait};
 pub use fault::{FaultPlan, FaultRule, FaultState, RetryPolicy};
 pub use wire::{bytes_to_vec, vec_to_bytes};

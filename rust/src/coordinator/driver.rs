@@ -392,10 +392,23 @@ fn run_attempt<K: DeviceKey, F: Fn() -> Vec<Vec<K>>>(
     let mut outcomes = Vec::with_capacity(cfg.ranks);
     let mut makespan = 0.0f64;
     let (mut msgs, mut wire) = (0u64, 0u64);
-    // When several ranks fail, prefer a failpoint abort over the
-    // secondary RankDead/CommTimeout errors the abort fanned out to the
-    // survivors — the injected crash is the root cause, and the
-    // crash/resume suite classifies on it.
+    // When several ranks fail, prefer the root cause over the secondary
+    // RankDead/CommTimeout errors an abort fanned out to the survivors:
+    // a failpoint abort first (the crash/resume suite classifies on
+    // it), then a detected deadlock (the named cycle beats the peers'
+    // RankDead wake-ups), then the lowest-rank error.
+    fn is_deadlock(e: &anyhow::Error) -> bool {
+        e.chain().any(|c| matches!(c.downcast_ref::<AkError>(), Some(AkError::Deadlock { .. })))
+    }
+    fn err_priority(e: &anyhow::Error) -> u8 {
+        if crate::util::failpoint::is_abort(e) {
+            2
+        } else if is_deadlock(e) {
+            1
+        } else {
+            0
+        }
+    }
     let mut first_err: Option<(usize, anyhow::Error)> = None;
     for (rank, res) in per_rank {
         match res {
@@ -408,10 +421,7 @@ fn run_attempt<K: DeviceKey, F: Fn() -> Vec<Vec<K>>>(
             Err(e) => {
                 let replaces = match &first_err {
                     None => true,
-                    Some((_, prev)) => {
-                        crate::util::failpoint::is_abort(&e)
-                            && !crate::util::failpoint::is_abort(prev)
-                    }
+                    Some((_, prev)) => err_priority(&e) > err_priority(prev),
                 };
                 if replaces {
                     first_err = Some((rank, e));

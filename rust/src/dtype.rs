@@ -310,6 +310,9 @@ pub(crate) fn resize_for_overwrite<K: SortKey>(out: &mut Vec<K>, len: usize) {
     out.clear();
     out.reserve(len);
     #[allow(clippy::uninit_vec)]
+    // SAFETY: capacity >= len after the reserve; every `SortKey` is a
+    // `Copy` scalar valid for any bit pattern, and callers overwrite
+    // every slot before reading (the rationale above).
     unsafe {
         out.set_len(len);
     }

@@ -464,7 +464,10 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
     let io_chunk = plan.io_chunk_elems;
     let p = ep.nranks();
     let rank = ep.rank();
-    let ck_root = scfg.ckpt_dir.as_ref().expect("ckpt rank requires a checkpoint dir");
+    let ck_root = scfg
+        .ckpt_dir
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("rank {rank}: checkpointed run without a checkpoint dir"))?;
     let rank_dir = ck_root.join(format!("rank-{rank}"));
     // The phase-1 local sort nests its own checkpoint in a subdirectory
     // (the manifest sweep leaves subdirectories alone).
@@ -479,7 +482,10 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
         plan.run_chunk_elems as u64,
         scfg.resume,
     )?;
-    let my_phase = store.manifest().expect("checkpointed store has a manifest").phase;
+    let my_phase = store
+        .manifest()
+        .ok_or_else(|| anyhow::anyhow!("rank {rank}: checkpointed store lost its manifest"))?
+        .phase;
     // Collective skip decisions must be uniform across ranks (see the
     // function docs): agree on the slowest rank's committed phase.
     let start = ep.allreduce_u64(my_phase as u64, ReduceOp::Min)? as u32;
@@ -543,7 +549,9 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
     ep.note_phase("splitters");
     let t_phase = ep.now();
     let (splitters, rounds_used) = if start >= 3 {
-        let m = store.manifest().expect("checkpointed store has a manifest");
+        let m = store
+            .manifest()
+            .ok_or_else(|| anyhow::anyhow!("rank {rank}: checkpointed store lost its manifest"))?;
         (m.splitters.clone(), m.rounds_used as usize)
     } else {
         let local_len = run.elems() as u64;
@@ -578,13 +586,19 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
     ep.note_phase("exchange");
     let t_phase = ep.now();
     let (recv_runs, secs) = if start >= 5 {
-        if store.manifest().expect("checkpointed store has a manifest").phase >= 6 {
+        let committed = store
+            .manifest()
+            .ok_or_else(|| anyhow::anyhow!("rank {rank}: checkpointed store lost its manifest"))?
+            .phase;
+        if committed >= 6 {
             // This rank's output is already durable (and its exchange
             // runs may be retired); phase 6 reloads the output instead.
             (Vec::new(), 0.0)
         } else {
             let metas: Vec<RunMeta> = {
-                let m = store.manifest().expect("checkpointed store has a manifest");
+                let m = store.manifest().ok_or_else(|| {
+                    anyhow::anyhow!("rank {rank}: checkpointed store lost its manifest")
+                })?;
                 let mut v: Vec<RunMeta> =
                     m.runs.iter().filter(|r| r.pass == 5).cloned().collect();
                 // seq is the source rank: restore exchange order.
@@ -626,7 +640,10 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
     // ---- Phase 6: final merge + durable output (per-rank skip) --------
     ep.note_phase("final");
     let t_phase = ep.now();
-    let my_phase = store.manifest().expect("checkpointed store has a manifest").phase;
+    let my_phase = store
+        .manifest()
+        .ok_or_else(|| anyhow::anyhow!("rank {rank}: checkpointed store lost its manifest"))?
+        .phase;
     let (data, secs) = if my_phase >= 6 {
         let meta = store
             .manifest()
@@ -801,8 +818,9 @@ where
     let total = ep.allreduce_u64(local_len, crate::comm::collectives::ReduceOp::Sum)?;
 
     let mut leader_state: Option<RefineState> = if ep.rank() == LEADER {
-        let pooled: Vec<u128> =
-            gathered.unwrap().iter().flat_map(|b| bytes_to_u128s(b)).collect();
+        let gathered = gathered
+            .ok_or_else(|| anyhow::anyhow!("sample gather returned no payload at the leader"))?;
+        let pooled: Vec<u128> = gathered.iter().flat_map(|b| bytes_to_u128s(b)).collect();
         let candidates = initial_candidates(pooled, p);
         let brackets = initial_brackets(&candidates, total);
         Some(RefineState { candidates, brackets })
@@ -817,7 +835,10 @@ where
         let is_last = round == cfg.refine_rounds || done_next;
         // Leader broadcasts candidates (+ done flag hidden at the tail).
         let payload = if ep.rank() == LEADER {
-            pack_candidates(&leader_state.as_ref().unwrap().candidates, is_last)
+            let state = leader_state
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("leader lost its refine state"))?;
+            pack_candidates(&state.candidates, is_last)
         } else {
             Vec::new()
         };
@@ -834,15 +855,18 @@ where
         let gathered = ep.gather_bytes(LEADER, u64s_to_bytes(&lranks))?;
 
         if ep.rank() == LEADER {
-            let per_rank: Vec<Vec<u64>> =
-                gathered.unwrap().iter().map(|b| bytes_to_u64s(b)).collect();
+            let gathered = gathered
+                .ok_or_else(|| anyhow::anyhow!("rank gather returned no payload at the leader"))?;
+            let per_rank: Vec<Vec<u64>> = gathered.iter().map(|b| bytes_to_u64s(b)).collect();
             let mut global = vec![0u64; candidates.len()];
             for pr in &per_rank {
                 for (g, v) in global.iter_mut().zip(pr.iter()) {
                     *g += v;
                 }
             }
-            let state = leader_state.as_mut().unwrap();
+            let state = leader_state
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("leader lost its refine state"))?;
             // Measurements correspond to the *broadcast* candidates.
             state.candidates = candidates;
             let (next, worst) = refine(state, &global, total, p, cfg.balance_tol);

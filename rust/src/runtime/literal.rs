@@ -25,6 +25,10 @@ pub fn lit_scalar<T: ArrayElement>(x: T) -> anyhow::Result<Literal> {
 }
 
 fn lit_from_bytes<T: ArrayElement>(xs: &[T], dims: &[usize]) -> anyhow::Result<Literal> {
+    // SAFETY: `xs` is a live, initialised slice of plain-old-data
+    // scalars (every `ArrayElement` here is one); viewing it as bytes
+    // covers exactly `size_of_val(xs)` bytes of the same allocation,
+    // and the borrow keeps it alive for the view's lifetime.
     let bytes = unsafe {
         std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
     };

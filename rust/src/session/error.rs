@@ -80,6 +80,19 @@ pub enum AkError {
         /// The coordinated-abort epoch the death was observed in.
         epoch: u64,
     },
+    /// The happens-before detector ([`crate::comm::CommTuning::hb_check`])
+    /// closed a wait-for cycle: every rank in `cycle` is parked on an
+    /// event only another parked rank can produce. Unlike
+    /// [`AkError::CommTimeout`] this is a deterministic diagnosis of a
+    /// protocol bug, made the moment the cycle forms — it is never
+    /// retried or recovered.
+    Deadlock {
+        /// The rank whose wait registration closed the cycle.
+        rank: usize,
+        /// The canonical cycle rendering: each hop's wait kind, link,
+        /// held credit, tag, and the waiter's phase note.
+        cycle: String,
+    },
     /// Engine-internal failure: a worker panicked or an invariant the
     /// engines rely on was violated.
     Internal(anyhow::Error),
@@ -146,6 +159,9 @@ impl std::fmt::Display for AkError {
             AkError::RankDead { rank, epoch } => {
                 write!(f, "rank {rank} died (abort epoch {epoch})")
             }
+            AkError::Deadlock { rank, cycle } => {
+                write!(f, "deadlock detected at rank {rank}: {cycle}")
+            }
             AkError::Internal(e) => write!(f, "internal error: {e}"),
         }
     }
@@ -211,6 +227,20 @@ mod tests {
         assert!(back
             .chain()
             .any(|c| matches!(c.downcast_ref::<AkError>(), Some(AkError::RankDead { rank: 3, .. }))));
+    }
+
+    #[test]
+    fn deadlock_display_names_rank_and_cycle() {
+        let e = AkError::Deadlock {
+            rank: 1,
+            cycle: "wait-for cycle: rank 0 [phase=exchange] \
+                    --send-credit(link 0->1, in-flight 4096/4096 bytes, tag 0x8)--> rank 1; \
+                    rank 1 [phase=exchange] --recv(src 0, tag 0x3e7)--> rank 0"
+                .into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("deadlock detected at rank 1"), "{s}");
+        assert!(s.contains("send-credit") && s.contains("recv"), "{s}");
     }
 
     #[test]

@@ -178,7 +178,10 @@ impl StreamCtx {
             plan.run_chunk_elems as u64,
             ckpt.resume,
         )?;
-        let m = store.manifest().expect("checkpointed store has a manifest").clone();
+        let m = store
+            .manifest()
+            .ok_or_else(|| anyhow::anyhow!("checkpointed store lost its manifest"))?
+            .clone();
         if m.complete {
             stats.completed_noop = true;
             return Ok(stats);

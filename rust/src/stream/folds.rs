@@ -66,7 +66,9 @@ impl StreamCtx {
         while src.next_chunk(&mut buf, chunk)? > 0 {
             elems += buf.len() as u64;
             let inc = self.session.accumulate(&buf, true, launch)?;
-            let total = *inc.last().expect("non-empty chunk has a last prefix");
+            let total = *inc
+                .last()
+                .ok_or_else(|| anyhow::anyhow!("accumulate returned empty for a non-empty chunk"))?;
             let out: Vec<K> = if inclusive {
                 inc.iter().map(|&v| K::add(carry, v)).collect()
             } else {

@@ -245,16 +245,34 @@ impl StreamCtx {
 
     /// Budget → pipeline shape for keys of type `K` (see
     /// [`StreamBudget`] for the accounting).
+    ///
+    /// Every derivation uses `checked_*`/`saturating_*` arithmetic: a
+    /// pathological budget or key width clamps to the documented floors
+    /// instead of wrapping. `aklint` enforces this in the marked region.
     pub(crate) fn plan<K: SortKey>(&self) -> StreamPlan {
-        let budget_elems = (self.budget.bytes / K::KEY_BYTES).max(2 * MIN_IO_ELEMS);
-        let run_chunk_elems =
-            self.run_chunk_override.unwrap_or_else(|| (budget_elems / 3).max(MIN_RUN_CHUNK));
-        let fan_in = self
-            .fan_in_override
-            .unwrap_or_else(|| (budget_elems / (4 * MIN_IO_ELEMS)).clamp(2, MAX_FAN_IN));
-        let io_chunk_elems = self
-            .io_chunk_override
-            .unwrap_or_else(|| (budget_elems / (4 * (fan_in + 1))).max(MIN_IO_ELEMS));
+        // aklint: begin(checked-arith)
+        let budget_elems = self
+            .budget
+            .bytes
+            .checked_div(K::KEY_BYTES)
+            .unwrap_or(0)
+            .max(MIN_IO_ELEMS.saturating_mul(2));
+        let run_chunk_elems = self
+            .run_chunk_override
+            .unwrap_or_else(|| budget_elems.checked_div(3).unwrap_or(0).max(MIN_RUN_CHUNK));
+        let fan_in = self.fan_in_override.unwrap_or_else(|| {
+            budget_elems
+                .checked_div(MIN_IO_ELEMS.saturating_mul(4))
+                .unwrap_or(0)
+                .clamp(2, MAX_FAN_IN)
+        });
+        let io_chunk_elems = self.io_chunk_override.unwrap_or_else(|| {
+            budget_elems
+                .checked_div(fan_in.saturating_add(1).saturating_mul(4))
+                .unwrap_or(0)
+                .max(MIN_IO_ELEMS)
+        });
+        // aklint: end(checked-arith)
         StreamPlan { run_chunk_elems, fan_in, io_chunk_elems }
     }
 }

@@ -111,6 +111,8 @@ impl<K: KeyGen> GenSource<K> {
     pub fn materialize(mut self) -> Vec<K> {
         let mut out = Vec::with_capacity(self.total as usize);
         let mut buf = Vec::new();
+        // aklint: allow(unwrap) — GenSource::next_chunk is infallible (pure PRNG,
+        // no I/O); the Result only exists to satisfy the ChunkSource trait.
         while self.next_chunk(&mut buf, GEN_BLOCK).expect("generator never errors") > 0 {
             out.extend_from_slice(&buf);
         }

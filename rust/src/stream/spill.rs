@@ -440,7 +440,10 @@ impl SpillStore {
         if self.guard.is_none() {
             self.guard = Some(TempDirGuard::new(self.parent.as_deref())?);
         }
-        Ok(self.guard.as_ref().unwrap().path())
+        match self.guard.as_ref() {
+            Some(g) => Ok(g.path()),
+            None => Err(anyhow::anyhow!("spill dir guard vanished after creation")),
+        }
     }
 
     /// Start a new run; feed it sorted chunks, then [`RunWriter::finish`].

@@ -192,6 +192,185 @@ pub fn is_abort(err: &anyhow::Error) -> bool {
     err.chain().any(|c| c.is::<FailpointAbort>())
 }
 
+/// Which fault-injection suite drives a registered site (see [`SITES`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteSuite {
+    /// Killed and resumed by the `tests/crash_resume.rs` kill matrix.
+    CrashResume,
+    /// Exercised by `tests/fault_recovery.rs` through `FaultPlan` rules
+    /// at the fabric op boundaries, not by the crash/resume matrix.
+    FaultRecovery,
+}
+
+/// One registered fail-point site. [`SITES`] is the central registry:
+/// `aklint` checks every `failpoint::check("name")` literal in the tree
+/// against it (unknown literal, stale entry, or a [`CrashResume`] site
+/// missing from the `tests/crash_resume.rs` kill matrix are findings),
+/// and `aklint --fix-design` generates the DESIGN.md §15 site table
+/// from it.
+///
+/// [`CrashResume`]: SiteSuite::CrashResume
+#[derive(Clone, Copy, Debug)]
+pub struct Site {
+    /// The literal name passed to [`check`].
+    pub name: &'static str,
+    /// Repo-relative path of the module holding the `check` call.
+    pub module: &'static str,
+    /// Which fault suite kills/exercises the site.
+    pub suite: SiteSuite,
+    /// What the site marks (one line; lands in the DESIGN.md table).
+    pub doc: &'static str,
+}
+
+/// The central fail-point site registry (DESIGN.md §15). Every
+/// `failpoint::check("name")` literal in `rust/src` must appear here
+/// exactly once — `make lint` enforces it.
+pub const SITES: &[Site] = &[
+    Site {
+        name: "ext.run",
+        module: "rust/src/stream/external_sort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "before a generation run is parked in the spill store",
+    },
+    Site {
+        name: "ext.run.recorded",
+        module: "rust/src/stream/external_sort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "after a generation run is recorded in the manifest",
+    },
+    Site {
+        name: "ext.gen-done",
+        module: "rust/src/stream/external_sort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "after the gen_done progress mark commits",
+    },
+    Site {
+        name: "ext.merge.group",
+        module: "rust/src/stream/external_sort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "after a merge group's output run commits",
+    },
+    Site {
+        name: "ext.merge.mid",
+        module: "rust/src/stream/external_sort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "inside a merge group, between output chunks",
+    },
+    Site {
+        name: "ext.merge.retired",
+        module: "rust/src/stream/external_sort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "after a merge group's input runs are retired",
+    },
+    Site {
+        name: "ext.merge.pass",
+        module: "rust/src/stream/external_sort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "after a full intermediate merge pass commits",
+    },
+    Site {
+        name: "ext.final",
+        module: "rust/src/stream/external_sort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "before the final streaming merge starts writing",
+    },
+    Site {
+        name: "ext.final.mid",
+        module: "rust/src/stream/external_sort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "inside the final merge, between output chunks",
+    },
+    Site {
+        name: "manifest.rename",
+        module: "rust/src/stream/manifest.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "between the manifest temp-file write and its rename",
+    },
+    Site {
+        name: "sih.park",
+        module: "rust/src/mpisort/sihsort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "before the phase-1 parked shard run commits",
+    },
+    Site {
+        name: "sih.parked",
+        module: "rust/src/mpisort/sihsort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "after the parked shard phase mark commits",
+    },
+    Site {
+        name: "sih.splitters",
+        module: "rust/src/mpisort/sihsort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "before the refined splitter images commit",
+    },
+    Site {
+        name: "sih.splitters.recorded",
+        module: "rust/src/mpisort/sihsort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "after the splitter phase mark commits",
+    },
+    Site {
+        name: "sih.exchange.sent",
+        module: "rust/src/mpisort/exchange.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "after a rank's sub-buckets are fully sent",
+    },
+    Site {
+        name: "sih.exchange",
+        module: "rust/src/mpisort/sihsort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "before the received exchange runs commit",
+    },
+    Site {
+        name: "sih.exchange.recorded",
+        module: "rust/src/mpisort/sihsort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "after the exchange phase mark commits",
+    },
+    Site {
+        name: "sih.final",
+        module: "rust/src/mpisort/sihsort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "before the phase-6 output run commits",
+    },
+    Site {
+        name: "sih.final.mid",
+        module: "rust/src/mpisort/sihsort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "inside the phase-6 k-way merge, between output chunks",
+    },
+    Site {
+        name: "sih.done",
+        module: "rust/src/mpisort/sihsort.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "after the rank's completion mark commits",
+    },
+    Site {
+        name: "driver.verify",
+        module: "rust/src/coordinator/driver.rs",
+        suite: SiteSuite::CrashResume,
+        doc: "after every rank commits, before the driver verifies",
+    },
+    Site {
+        name: "comm.send",
+        module: "rust/src/comm/fabric.rs",
+        suite: SiteSuite::FaultRecovery,
+        doc: "fabric send op boundary (composes with FaultPlan rules)",
+    },
+    Site {
+        name: "comm.recv",
+        module: "rust/src/comm/fabric.rs",
+        suite: SiteSuite::FaultRecovery,
+        doc: "fabric recv op boundary (composes with FaultPlan rules)",
+    },
+];
+
+/// Look `name` up in the central site registry ([`SITES`]).
+pub fn site(name: &str) -> Option<&'static Site> {
+    SITES.iter().find(|s| s.name == name)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +426,17 @@ mod tests {
         g.rearm("fp.test.swap", 1, FailMode::Error);
         check("fp.test.swap").unwrap();
         assert!(check("fp.test.swap").is_err());
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let mut seen = std::collections::HashSet::new();
+        for s in SITES {
+            assert!(seen.insert(s.name), "duplicate registry entry: {}", s.name);
+            assert!(!s.doc.is_empty() && !s.module.is_empty(), "{}: empty metadata", s.name);
+            assert_eq!(site(s.name).map(|r| r.name), Some(s.name));
+        }
+        assert!(site("no.such.site").is_none());
     }
 
     #[test]

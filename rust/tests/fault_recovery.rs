@@ -40,6 +40,10 @@ fn fault_cfg(ranks: usize, dtype: ElemType) -> RunConfig {
     cfg.comm.send_timeout_secs = 30.0;
     cfg.comm.retry_attempts = 10;
     cfg.comm.max_restarts = 2;
+    // The whole fault suite runs with the happens-before / deadlock
+    // detector on: any false-positive cycle under injected faults
+    // would fail these tests (DESIGN.md §17).
+    cfg.comm.hb_check = true;
     cfg
 }
 
@@ -274,6 +278,9 @@ fn in_flight_never_exceeds_cap_under_random_chunk_schedules() {
             cap_hostmem: CAP,
             send_timeout_secs: 30.0,
             recv_timeout_secs: 30.0,
+            // The detector must stay silent on these schedules: the
+            // consumer always progresses, so no cycle ever closes.
+            hb_check: true,
             ..CommTuning::default()
         };
         let mut eps = Fabric::new_with(

@@ -1,0 +1,370 @@
+//! Comment/string-aware scrubbing of Rust source.
+//!
+//! `aklint` deliberately avoids a full parser (no `syn` in the offline
+//! build): every rule it enforces is lexical — tokens, string literals,
+//! comments — so all it needs is a scrub pass that separates the three
+//! channels without ever confusing one for another. Line numbers are
+//! preserved exactly so findings point at real source lines.
+
+/// One file split into per-line *code* and *comment* channels, plus the
+/// string literals in source order.
+pub struct FileScan {
+    /// Code with comments and string/char-literal contents blanked to
+    /// spaces, split by line. Token positions are preserved.
+    pub code: Vec<String>,
+    /// Comment text per line (`//` and `/* */` alike, doc or not). A
+    /// block comment spanning lines contributes to each line it covers.
+    pub comment: Vec<String>,
+    /// String literals as `(1-based line, value)`.
+    pub strings: Vec<(usize, String)>,
+}
+
+impl FileScan {
+    /// Number of lines in the file.
+    pub fn lines(&self) -> usize {
+        self.code.len()
+    }
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte at `i`, or NUL past the end.
+fn at(b: &[u8], i: usize) -> u8 {
+    b.get(i).copied().unwrap_or(0)
+}
+
+/// Scrub `src` into its code/comment/string channels.
+pub fn scan(src: &str) -> FileScan {
+    let b = src.as_bytes();
+    let mut code = String::with_capacity(src.len());
+    let mut chunks: Vec<(usize, String)> = Vec::new();
+    let mut strings: Vec<(usize, String)> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        let prev_ident = i > 0 && is_ident_byte(b[i - 1]);
+        if c == b'/' && at(b, i + 1) == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            chunks.push((line, src[start..i].to_string()));
+            code.push_str(&" ".repeat(i - start));
+        } else if c == b'/' && at(b, i + 1) == b'*' {
+            let (start, start_line) = (i, line);
+            let mut depth = 1u32;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && at(b, i + 1) == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && at(b, i + 1) == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            chunks.push((start_line, src[start..i].to_string()));
+            for &ch in &b[start..i] {
+                code.push(if ch == b'\n' { '\n' } else { ' ' });
+            }
+        } else if c == b'"' {
+            i = eat_quoted(b, i, &mut line, &mut code, &mut strings);
+        } else if c == b'r' && !prev_ident && raw_open(b, i + 1).is_some() {
+            i = eat_raw(b, i, i + 1, &mut line, &mut code, &mut strings);
+        } else if c == b'b' && !prev_ident && at(b, i + 1) == b'"' {
+            code.push(' ');
+            i = eat_quoted(b, i + 1, &mut line, &mut code, &mut strings);
+        } else if c == b'b' && !prev_ident && at(b, i + 1) == b'r' {
+            if raw_open(b, i + 2).is_some() {
+                i = eat_raw(b, i, i + 2, &mut line, &mut code, &mut strings);
+            } else {
+                code.push('b');
+                i += 1;
+            }
+        } else if c == b'\'' && !prev_ident {
+            i = eat_char_or_lifetime(b, i, &mut code);
+        } else if c == b'\n' {
+            line += 1;
+            code.push('\n');
+            i += 1;
+        } else {
+            code.push(c as char);
+            i += 1;
+        }
+    }
+
+    let code: Vec<String> = code.split('\n').map(|l| l.to_string()).collect();
+    let mut comment = vec![String::new(); code.len()];
+    for (start_line, text) in chunks {
+        for (off, part) in text.split('\n').enumerate() {
+            let idx = start_line - 1 + off;
+            if idx < comment.len() {
+                if !comment[idx].is_empty() {
+                    comment[idx].push(' ');
+                }
+                comment[idx].push_str(part);
+            }
+        }
+    }
+    FileScan { code, comment, strings }
+}
+
+/// If `b[from..]` starts a raw-string opener (`#*"`), return the index
+/// of the opening `"`; the hash count is `quote - from`.
+fn raw_open(b: &[u8], from: usize) -> Option<usize> {
+    let mut j = from;
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    (j < b.len() && b[j] == b'"').then_some(j)
+}
+
+/// Does `b[i] == '"'` close a raw string with `n_hash` hashes?
+fn raw_closes(b: &[u8], i: usize, n_hash: usize) -> bool {
+    b.len() - i > n_hash && b[i + 1..=i + n_hash].iter().all(|&h| h == b'#')
+}
+
+/// Consume a normal (escaped) string literal, `b[open] == '"'`.
+/// Returns the index just past the closing quote.
+fn eat_quoted(
+    b: &[u8],
+    open: usize,
+    line: &mut usize,
+    code: &mut String,
+    strings: &mut Vec<(usize, String)>,
+) -> usize {
+    let start_line = *line;
+    let mut val = String::new();
+    let mut i = open + 1;
+    code.push('"');
+    while i < b.len() {
+        match b[i] {
+            b'\\' if i + 1 < b.len() => {
+                match b[i + 1] {
+                    b'"' => val.push('"'),
+                    b'\\' => val.push('\\'),
+                    b'\n' => *line += 1,
+                    other => {
+                        val.push('\\');
+                        val.push(other as char);
+                    }
+                }
+                code.push_str("  ");
+                i += 2;
+            }
+            b'"' => {
+                code.push('"');
+                strings.push((start_line, val));
+                return i + 1;
+            }
+            b'\n' => {
+                *line += 1;
+                val.push('\n');
+                code.push('\n');
+                i += 1;
+            }
+            other => {
+                val.push(other as char);
+                code.push(' ');
+                i += 1;
+            }
+        }
+    }
+    strings.push((start_line, val));
+    i
+}
+
+/// Consume a raw string whose opening hashes start at `hashes` (the
+/// `r`/`br` prefix begins at `prefix`). Returns the index past the end.
+fn eat_raw(
+    b: &[u8],
+    prefix: usize,
+    hashes: usize,
+    line: &mut usize,
+    code: &mut String,
+    strings: &mut Vec<(usize, String)>,
+) -> usize {
+    let quote = match raw_open(b, hashes) {
+        Some(q) => q,
+        None => return prefix + 1,
+    };
+    let n_hash = quote - hashes;
+    let start_line = *line;
+    for _ in prefix..=quote {
+        code.push(' ');
+    }
+    let mut i = quote + 1;
+    let body_start = i;
+    while i < b.len() {
+        if b[i] == b'"' && raw_closes(b, i, n_hash) {
+            let body = String::from_utf8_lossy(&b[body_start..i]).into_owned();
+            strings.push((start_line, body));
+            for _ in 0..=n_hash {
+                code.push(' ');
+            }
+            return i + 1 + n_hash;
+        }
+        if b[i] == b'\n' {
+            *line += 1;
+            code.push('\n');
+        } else {
+            code.push(' ');
+        }
+        i += 1;
+    }
+    let body = String::from_utf8_lossy(&b[body_start..i]).into_owned();
+    strings.push((start_line, body));
+    i
+}
+
+/// Consume either a char literal (`'a'`, `'\n'`) — blanked — or a
+/// lifetime (`'a`), which stays in the code channel.
+fn eat_char_or_lifetime(b: &[u8], open: usize, code: &mut String) -> usize {
+    let close = if at(b, open + 1) == b'\\' {
+        let mut j = open + 3;
+        // Skip the escaped payload (covers \', \n, \x41, \u{...}).
+        while j < b.len() && b[j] != b'\'' && b[j] != b'\n' {
+            j += 1;
+        }
+        (j < b.len() && b[j] == b'\'').then_some(j)
+    } else if open + 2 < b.len() && b[open + 2] == b'\'' {
+        Some(open + 2)
+    } else {
+        None
+    };
+    match close {
+        Some(end) => {
+            for _ in open..=end {
+                code.push(' ');
+            }
+            end + 1
+        }
+        None => {
+            code.push('\'');
+            open + 1
+        }
+    }
+}
+
+/// Per-line mask of `#[cfg(test)]`-gated blocks (the `mod tests` at the
+/// bottom of each module). Rules that only govern production code skip
+/// masked lines.
+pub fn test_mod_mask(scan: &FileScan) -> Vec<bool> {
+    let n = scan.lines();
+    let mut mask = vec![false; n];
+    let mut l = 0usize;
+    while l < n {
+        if !scan.code[l].contains("#[cfg(test)]") {
+            l += 1;
+            continue;
+        }
+        // Find the gated item's opening brace (within a few lines).
+        let mut open = None;
+        for k in l..n.min(l + 6) {
+            if scan.code[k].contains('{') {
+                open = Some(k);
+                break;
+            }
+        }
+        let Some(open) = open else {
+            l += 1;
+            continue;
+        };
+        let mut depth = 0i64;
+        let mut k = open;
+        while k < n {
+            for ch in scan.code[k].chars() {
+                match ch {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            mask[k] = true;
+            if depth <= 0 {
+                break;
+            }
+            k += 1;
+        }
+        for m in mask.iter_mut().take(open).skip(l) {
+            *m = true;
+        }
+        l = k + 1;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_leave_the_code_channel() {
+        let s = scan("let x = \"a // not a comment\"; // real\nlet y = 2; /* block */\n");
+        assert!(!s.code[0].contains("not a comment"));
+        assert!(!s.code[0].contains("real"));
+        assert!(s.comment[0].contains("real"));
+        assert_eq!(s.strings, vec![(1, "a // not a comment".to_string())]);
+        assert!(s.comment[1].contains("block"));
+        assert!(s.code[1].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let s = scan("let a = r#\"quote \" inside\"#;\nlet b = \"esc \\\" done\";\n");
+        assert_eq!(s.strings[0], (1, "quote \" inside".to_string()));
+        assert_eq!(s.strings[1], (2, "esc \" done".to_string()));
+        assert!(!s.code[0].contains("inside"));
+    }
+
+    #[test]
+    fn char_literals_are_blanked_but_lifetimes_survive() {
+        let s = scan("fn f<'a>(x: &'a str) { let c = '\\''; let d = 'z'; }\n");
+        assert!(s.code[0].contains("<'a>"));
+        assert!(s.code[0].contains("&'a str"));
+        assert!(!s.code[0].contains("'z'"));
+    }
+
+    #[test]
+    fn byte_strings_are_literals_too() {
+        let s = scan("let a = b\"raw bytes\"; let n = 3;\n");
+        assert_eq!(s.strings[0], (1, "raw bytes".to_string()));
+        assert!(!s.code[0].contains("raw bytes"));
+        assert!(s.code[0].contains("let n = 3;"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_multiline_spans() {
+        let s = scan("a /* outer /* inner */ still */ b\nnext\n");
+        assert!(s.code[0].contains('a') && s.code[0].contains('b'));
+        assert!(!s.code[0].contains("still"));
+        assert!(s.code[1].contains("next"));
+        let s2 = scan("x /* one\ntwo */ y\n");
+        assert!(s2.comment[0].contains("one"));
+        assert!(s2.comment[1].contains("two"));
+        assert!(s2.code[1].contains('y'));
+    }
+
+    #[test]
+    fn test_mod_mask_covers_the_gated_block_only() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let s = scan(src);
+        let mask = test_mod_mask(&s);
+        assert_eq!(mask, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_strings() {
+        let s = scan("let a = \"one\ntwo\";\nlet b = \"late\";\n");
+        assert_eq!(s.strings[0].0, 1);
+        assert_eq!(s.strings[1], (3, "late".to_string()));
+    }
+}

@@ -1,0 +1,228 @@
+//! `aklint` — repo-specific static analysis for the accelkern tree.
+//!
+//! Run from the repository root (`make lint`):
+//!
+//! ```text
+//! aklint [--root DIR] [--report FILE.json] [--fix-design]
+//! ```
+//!
+//! Scans every `.rs` file under `rust/src` with a comment/string-aware
+//! lexical pass ([`lex`]) and applies the five rules in [`rules`]
+//! (unwrap/expect hygiene, SAFETY comments, the fail-point registry
+//! cross-check, collective-tag minting, checked arithmetic regions),
+//! plus the DESIGN.md §15 site-table drift check ([`design`]). Exits
+//! non-zero when any finding survives; `--report` additionally writes
+//! the findings as JSON (the CI artifact).
+
+mod design;
+mod lex;
+mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use rules::{Finding, SourceFile};
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut report: Option<PathBuf> = None;
+    let mut fix_design = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage("--root needs a value"),
+            },
+            "--report" => match args.next() {
+                Some(v) => report = Some(PathBuf::from(v)),
+                None => return usage("--report needs a value"),
+            },
+            "--fix-design" => fix_design = true,
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+
+    let (findings, scanned) = match lint_repo(&root, fix_design) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("aklint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if let Some(path) = report {
+        if let Err(e) = fs::write(&path, report_json(&findings)) {
+            eprintln!("aklint: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+    }
+    if findings.is_empty() {
+        println!("aklint: clean ({scanned} files scanned)");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("aklint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(err: &str) -> ExitCode {
+    eprintln!("aklint: {err}");
+    eprintln!("usage: aklint [--root DIR] [--report FILE.json] [--fix-design]");
+    ExitCode::from(2)
+}
+
+/// Scan the tree under `root` and run every rule. Returns the sorted
+/// findings and the number of files scanned.
+fn lint_repo(root: &Path, fix_design: bool) -> Result<(Vec<Finding>, usize), String> {
+    let src_root = root.join("rust").join("src");
+    let mut paths = Vec::new();
+    walk(&src_root, &mut paths)?;
+    paths.sort();
+
+    let mut files = Vec::new();
+    for p in &paths {
+        let text =
+            fs::read_to_string(p).map_err(|e| format!("cannot read {}: {e}", p.display()))?;
+        let scan = lex::scan(&text);
+        let mask = lex::test_mod_mask(&scan);
+        files.push(SourceFile { path: rel_path(root, p), scan, mask });
+    }
+
+    let crash_path = root.join("rust").join("tests").join("crash_resume.rs");
+    let crash = match fs::read_to_string(&crash_path) {
+        Ok(t) => Some(lex::scan(&t)),
+        Err(e) => return Err(format!("cannot read {}: {e}", crash_path.display())),
+    };
+
+    let mut findings = rules::run_all(&files, crash.as_ref());
+
+    let design_path = root.join("DESIGN.md");
+    let text = fs::read_to_string(&design_path)
+        .map_err(|e| format!("cannot read {}: {e}", design_path.display()))?;
+    if fix_design {
+        match design::fix(&text) {
+            Ok(Some(new)) => fs::write(&design_path, new)
+                .map_err(|e| format!("cannot write {}: {e}", design_path.display()))?,
+            Ok(None) => {}
+            Err(msg) => findings.push(design_finding(msg)),
+        }
+    } else if let Err(msg) = design::check(&text) {
+        findings.push(design_finding(msg));
+    }
+
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok((findings, files.len()))
+}
+
+fn design_finding(msg: String) -> Finding {
+    Finding { rule: "design", file: "DESIGN.md".to_string(), line: 1, msg }
+}
+
+/// Collect `.rs` files under `dir`, recursively.
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("cannot read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("walk {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with forward slashes (what the rules match on).
+fn rel_path(root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    let parts: Vec<&str> = rel.iter().filter_map(|c| c.to_str()).collect();
+    parts.join("/")
+}
+
+/// Hand-rolled JSON report (serde is unavailable offline).
+fn report_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\n  \"count\": ");
+    out.push_str(&findings.len().to_string());
+    out.push_str(",\n  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("\n    {\"rule\": ");
+        out.push_str(&json_str(f.rule));
+        out.push_str(", \"file\": ");
+        out.push_str(&json_str(&f.file));
+        out.push_str(", \"line\": ");
+        out.push_str(&f.line.to_string());
+        out.push_str(", \"msg\": ");
+        out.push_str(&json_str(&f.msg));
+        out.push('}');
+    }
+    if !findings.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("]\n}\n");
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tree this binary ships in must itself be lint-clean: running
+    /// the full rule set (including the DESIGN.md site-table check)
+    /// over the real repository is the strongest regression test the
+    /// linter has — any scanner false positive shows up right here.
+    #[test]
+    fn the_repo_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+        let (findings, scanned) = lint_repo(&root, false).expect("repo scan succeeds");
+        let rendered: Vec<String> = findings
+            .iter()
+            .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg))
+            .collect();
+        assert!(findings.is_empty(), "aklint findings:\n{}", rendered.join("\n"));
+        assert!(scanned > 40, "suspiciously few files scanned: {scanned}");
+    }
+
+    #[test]
+    fn report_json_escapes_and_counts() {
+        let findings = vec![Finding {
+            rule: "unwrap",
+            file: "a\\b.rs".to_string(),
+            line: 3,
+            msg: "say \"no\"".to_string(),
+        }];
+        let json = report_json(&findings);
+        assert!(json.contains("\"count\": 1"));
+        assert!(json.contains("a\\\\b.rs"));
+        assert!(json.contains("say \\\"no\\\""));
+        let empty = report_json(&[]);
+        assert!(empty.contains("\"count\": 0"));
+        assert!(empty.contains("\"findings\": []"));
+    }
+}

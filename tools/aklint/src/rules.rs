@@ -1,0 +1,561 @@
+//! The aklint rule set (DESIGN.md §17).
+//!
+//! Five lexical rules over `rust/src`:
+//!
+//! 1. **unwrap** — no `.unwrap()` / `.expect(` on production
+//!    `comm/` / `stream/` / `mpisort/` paths; `// aklint: allow(unwrap)`
+//!    with a justification exempts a site, `#[cfg(test)]` blocks are
+//!    skipped.
+//! 2. **safety** — every `unsafe` block or impl is preceded by a
+//!    `// SAFETY:` comment (attributes and stacked `unsafe impl`s may
+//!    sit between the comment and the keyword).
+//! 3. **failpoint** — every `failpoint::check("name")` literal resolves
+//!    to exactly one entry of the central `util::failpoint::SITES`
+//!    registry, in the registered module; stale registry entries and
+//!    `CrashResume` sites missing from the `tests/crash_resume.rs` kill
+//!    matrix are findings.
+//! 4. **tag** — the collective tag bit (`1 << 63`) is only minted by
+//!    the fabric's lockstep allocator (`Endpoint::collective_tag`),
+//!    never hand-built, so collective tags stay unique per endpoint.
+//! 5. **checked-arith** — inside `// aklint: begin(checked-arith)`
+//!    regions (budget/offset derivations in `stream/`), bare binary
+//!    `+ - * / %` are findings; use `checked_*` / `saturating_*`.
+
+use accelkern::util::failpoint::{SiteSuite, SITES};
+use std::collections::BTreeMap;
+
+use crate::lex::FileScan;
+
+/// One lint finding, pointing at a repo-relative file and 1-based line.
+pub struct Finding {
+    /// Short rule identifier (`unwrap`, `safety`, ...).
+    pub rule: &'static str,
+    /// Repo-relative path with forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description of the violation.
+    pub msg: String,
+}
+
+impl Finding {
+    fn new(rule: &'static str, file: &str, line: usize, msg: String) -> Finding {
+        Finding { rule, file: file.to_string(), line, msg }
+    }
+}
+
+/// A scrubbed source file plus its test-block mask.
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    /// Scrubbed channels.
+    pub scan: FileScan,
+    /// `true` for lines inside `#[cfg(test)]` blocks.
+    pub mask: Vec<bool>,
+}
+
+const PROD_DIRS: [&str; 3] = ["rust/src/comm/", "rust/src/stream/", "rust/src/mpisort/"];
+
+fn in_prod_dirs(path: &str) -> bool {
+    PROD_DIRS.iter().any(|d| path.starts_with(d))
+}
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Find `w` in `s` as a whole word (identifier boundaries on both sides).
+fn has_word(s: &str, w: &str) -> bool {
+    let b = s.as_bytes();
+    let mut from = 0;
+    while let Some(p) = s[from..].find(w) {
+        let start = from + p;
+        let end = start + w.len();
+        let pre = start == 0 || !is_ident(b[start - 1]);
+        let post = end >= b.len() || !is_ident(b[end]);
+        if pre && post {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Run every rule over the scanned tree. `crash_resume` is the scrubbed
+/// `rust/tests/crash_resume.rs` (kill-matrix cross-check); `None` skips
+/// that check.
+pub fn run_all(files: &[SourceFile], crash_resume: Option<&FileScan>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        rule_unwrap(f, &mut out);
+        rule_safety(f, &mut out);
+        rule_tag(f, &mut out);
+        rule_checked_arith(f, &mut out);
+    }
+    rule_failpoint(files, crash_resume, &mut out);
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    out
+}
+
+/// Rule 1: `.unwrap()` / `.expect(` on production comm/stream/mpisort
+/// paths.
+fn rule_unwrap(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_prod_dirs(&f.path) {
+        return;
+    }
+    for (idx, line) in f.scan.code.iter().enumerate() {
+        if f.mask[idx] {
+            continue;
+        }
+        for pat in [".unwrap()", ".expect("] {
+            if !line.contains(pat) {
+                continue;
+            }
+            let lo = idx.saturating_sub(3);
+            let allowed = (lo..=idx).any(|j| f.scan.comment[j].contains("aklint: allow(unwrap)"));
+            if allowed {
+                continue;
+            }
+            out.push(Finding::new(
+                "unwrap",
+                &f.path,
+                idx + 1,
+                format!(
+                    "`{pat}` on a production comm/stream/mpisort path — return a typed \
+                     error, or annotate `// aklint: allow(unwrap)` with a justification"
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule 2: `unsafe` needs a preceding `// SAFETY:` comment.
+fn rule_safety(f: &SourceFile, out: &mut Vec<Finding>) {
+    for idx in 0..f.scan.lines() {
+        if !has_word(&f.scan.code[idx], "unsafe") {
+            continue;
+        }
+        if !safety_covered(f, idx) {
+            out.push(Finding::new(
+                "safety",
+                &f.path,
+                idx + 1,
+                "`unsafe` without a preceding `// SAFETY:` comment stating the invariant"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+fn safety_covered(f: &SourceFile, idx: usize) -> bool {
+    if f.scan.comment[idx].contains("SAFETY:") {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        if f.scan.comment[j].contains("SAFETY:") {
+            return true;
+        }
+        let code = f.scan.code[j].trim();
+        // Pure comment lines (a continuing SAFETY paragraph) and
+        // attributes sit between the comment and the keyword; stacked
+        // `unsafe impl`s may share one comment.
+        if code.is_empty() && !f.scan.comment[j].is_empty() {
+            continue;
+        }
+        if code.starts_with("#[") || code.starts_with("#!") {
+            continue;
+        }
+        if has_word(code, "unsafe") {
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Site-name grammar: dotted lowercase (`ext.merge.mid`). Filters out
+/// incidental same-line literals (e.g. the `"send"` comparison operand
+/// in the fabric's conditional check).
+fn is_site_name(s: &str) -> bool {
+    let ok = |c: u8| matches!(c, b'a'..=b'z' | b'0'..=b'9' | b'.' | b'-');
+    s.contains('.') && s.bytes().all(ok)
+}
+
+/// Rule 3: failpoint literals ↔ SITES registry ↔ kill matrix.
+fn rule_failpoint(files: &[SourceFile], crash_resume: Option<&FileScan>, out: &mut Vec<Finding>) {
+    // Collect every checked site literal in production code.
+    let mut checked: BTreeMap<&str, Vec<(&str, usize)>> = BTreeMap::new();
+    for f in files {
+        for (idx, line) in f.scan.code.iter().enumerate() {
+            if f.mask[idx] || !line.contains("failpoint::check(") {
+                continue;
+            }
+            let lineno = idx + 1;
+            let lits: Vec<&str> = f
+                .scan
+                .strings
+                .iter()
+                .filter(|(l, v)| *l == lineno && is_site_name(v))
+                .map(|(_, v)| v.as_str())
+                .collect();
+            if lits.is_empty() {
+                out.push(Finding::new(
+                    "failpoint",
+                    &f.path,
+                    lineno,
+                    "failpoint::check call without a literal site name on the same line \
+                     — aklint cannot register it"
+                        .to_string(),
+                ));
+            }
+            for v in lits {
+                checked.entry(v).or_default().push((f.path.as_str(), lineno));
+            }
+        }
+    }
+
+    // Registry self-consistency: duplicate names.
+    let mut seen = std::collections::BTreeSet::new();
+    for s in SITES {
+        if !seen.insert(s.name) {
+            out.push(Finding::new(
+                "failpoint",
+                "rust/src/util/failpoint.rs",
+                registry_line(files, s.name),
+                format!("duplicate SITES registry entry `{}`", s.name),
+            ));
+        }
+    }
+
+    // Checked literals must be registered, in the registered module,
+    // and checked at exactly one call site.
+    for (name, sites) in &checked {
+        let (file, line) = sites[0];
+        match SITES.iter().find(|s| s.name == *name) {
+            None => out.push(Finding::new(
+                "failpoint",
+                file,
+                line,
+                format!("failpoint `{name}` is not in the util::failpoint::SITES registry"),
+            )),
+            Some(site) => {
+                for (file, line) in sites {
+                    if site.module != *file {
+                        out.push(Finding::new(
+                            "failpoint",
+                            file,
+                            *line,
+                            format!(
+                                "failpoint `{name}` checked here but registered for module \
+                                 `{}`",
+                                site.module
+                            ),
+                        ));
+                    }
+                }
+                if sites.len() > 1 {
+                    out.push(Finding::new(
+                        "failpoint",
+                        file,
+                        line,
+                        format!(
+                            "failpoint `{name}` checked at {} call sites — per-thread skip \
+                             counts are ambiguous across duplicated sites",
+                            sites.len()
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Stale registry entries and kill-matrix coverage.
+    for s in SITES {
+        if !checked.contains_key(s.name) {
+            out.push(Finding::new(
+                "failpoint",
+                "rust/src/util/failpoint.rs",
+                registry_line(files, s.name),
+                format!("stale SITES entry `{}`: no failpoint::check call uses it", s.name),
+            ));
+        }
+        if let Some(cr) = crash_resume {
+            let in_matrix = cr.strings.iter().any(|(_, v)| v == s.name);
+            if matches!(s.suite, SiteSuite::CrashResume) && !in_matrix {
+                out.push(Finding::new(
+                    "failpoint",
+                    "rust/tests/crash_resume.rs",
+                    1,
+                    format!(
+                        "CrashResume site `{}` is missing from the crash_resume.rs kill \
+                         matrix",
+                        s.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Line of `name`'s literal inside the registry file, for pointing
+/// registry findings somewhere useful.
+fn registry_line(files: &[SourceFile], name: &str) -> usize {
+    files
+        .iter()
+        .find(|f| f.path.ends_with("util/failpoint.rs"))
+        .and_then(|f| f.scan.strings.iter().find(|(_, v)| v == name))
+        .map(|(l, _)| *l)
+        .unwrap_or(1)
+}
+
+/// Rule 4: the collective tag bit is only minted inside the fabric.
+fn rule_tag(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !in_prod_dirs(&f.path) || f.path == "rust/src/comm/fabric.rs" {
+        return;
+    }
+    for (idx, line) in f.scan.code.iter().enumerate() {
+        if f.mask[idx] {
+            continue;
+        }
+        if line.contains("1 << 63") || line.contains("1u64 << 63") {
+            out.push(Finding::new(
+                "tag",
+                &f.path,
+                idx + 1,
+                "collective tag bit minted outside comm/fabric.rs — use \
+                 Endpoint::collective_tag() so tags stay unique per endpoint schedule"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+const ARITH_BEGIN: &str = "aklint: begin(checked-arith)";
+const ARITH_END: &str = "aklint: end(checked-arith)";
+
+/// Rule 5: bare arithmetic inside `checked-arith` regions of `stream/`.
+fn rule_checked_arith(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !f.path.starts_with("rust/src/stream/") {
+        return;
+    }
+    let mut open: Option<usize> = None;
+    for idx in 0..f.scan.lines() {
+        let com = &f.scan.comment[idx];
+        if com.contains(ARITH_BEGIN) {
+            if open.is_some() {
+                out.push(Finding::new(
+                    "checked-arith",
+                    &f.path,
+                    idx + 1,
+                    "nested checked-arith begin marker".to_string(),
+                ));
+            }
+            open = Some(idx);
+            continue;
+        }
+        if com.contains(ARITH_END) {
+            if open.is_none() {
+                out.push(Finding::new(
+                    "checked-arith",
+                    &f.path,
+                    idx + 1,
+                    "checked-arith end marker without a begin".to_string(),
+                ));
+            }
+            open = None;
+            continue;
+        }
+        if open.is_none() {
+            continue;
+        }
+        let line = &f.scan.code[idx];
+        for op in [" + ", " - ", " * ", " / ", " % "] {
+            if line.contains(op) {
+                out.push(Finding::new(
+                    "checked-arith",
+                    &f.path,
+                    idx + 1,
+                    format!(
+                        "bare `{}` in a checked-arith region — budget/offset derivations \
+                         must use checked_*/saturating_* so they clamp instead of wrapping",
+                        op.trim()
+                    ),
+                ));
+            }
+        }
+    }
+    if let Some(idx) = open {
+        out.push(Finding::new(
+            "checked-arith",
+            &f.path,
+            idx + 1,
+            "checked-arith begin marker never closed".to_string(),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lex;
+
+    fn file(path: &str, src: &str) -> SourceFile {
+        let scan = lex::scan(src);
+        let mask = lex::test_mod_mask(&scan);
+        SourceFile { path: path.to_string(), scan, mask }
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unwrap_rule_scope_and_allowlist() {
+        let bad = file("rust/src/comm/x.rs", "fn f() { y().unwrap(); }\n");
+        let mut out = Vec::new();
+        rule_unwrap(&bad, &mut out);
+        assert_eq!(rules_of(&out), ["unwrap"]);
+
+        // aklint annotation within three lines exempts the site.
+        let ok = file(
+            "rust/src/stream/x.rs",
+            "// aklint: allow(unwrap) — infallible by construction\nfn f() { y().unwrap(); }\n",
+        );
+        let mut out = Vec::new();
+        rule_unwrap(&ok, &mut out);
+        assert!(out.is_empty());
+
+        // Test blocks and non-production paths are out of scope.
+        let src = "#[cfg(test)]\nmod tests {\n fn t() { y().expect(\"m\"); }\n}\n";
+        let test_mod = file("rust/src/mpisort/x.rs", src);
+        let mut out = Vec::new();
+        rule_unwrap(&test_mod, &mut out);
+        assert!(out.is_empty());
+        let elsewhere = file("rust/src/session/mod.rs", "fn f() { y().unwrap(); }\n");
+        let mut out = Vec::new();
+        rule_unwrap(&elsewhere, &mut out);
+        assert!(out.is_empty());
+
+        // unwrap_or and friends never match.
+        let or = file("rust/src/comm/x.rs", "fn f() { y().unwrap_or(0); }\n");
+        let mut out = Vec::new();
+        rule_unwrap(&or, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn safety_rule_accepts_the_repo_idioms() {
+        let naked = file("rust/src/a.rs", "fn f() { unsafe { g() } }\n");
+        let mut out = Vec::new();
+        rule_safety(&naked, &mut out);
+        assert_eq!(rules_of(&out), ["safety"]);
+
+        let commented = file("rust/src/a.rs", "// SAFETY: disjoint ranges.\nunsafe { g() }\n");
+        let mut out = Vec::new();
+        rule_safety(&commented, &mut out);
+        assert!(out.is_empty());
+
+        // Multi-line SAFETY paragraph, attribute in between, stacked impls.
+        let stacked = file(
+            "rust/src/a.rs",
+            "// SAFETY: thread-safe per the C API;\n// mutation is behind a Mutex.\n\
+             #[allow(dead_code)]\nunsafe impl Send for T {}\nunsafe impl Sync for T {}\n",
+        );
+        let mut out = Vec::new();
+        rule_safety(&stacked, &mut out);
+        assert!(out.is_empty());
+
+        // The word in a comment or string is not the keyword.
+        let in_comment = file("rust/src/a.rs", "// unsafe is discussed here\nlet x = \"unsafe\";\n");
+        let mut out = Vec::new();
+        rule_safety(&in_comment, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn failpoint_rule_flags_unregistered_and_module_mismatch() {
+        let f = file(
+            "rust/src/stream/external_sort.rs",
+            "fn f() -> anyhow::Result<()> { failpoint::check(\"no.such.site\")?; Ok(()) }\n",
+        );
+        let mut out = Vec::new();
+        rule_failpoint(&[f], None, &mut out);
+        assert!(out.iter().any(|x| x.msg.contains("not in the util::failpoint::SITES")));
+        // Every registered site is stale in this synthetic tree.
+        let stale = out.iter().filter(|x| x.msg.contains("stale SITES entry")).count();
+        assert_eq!(stale, SITES.len());
+
+        // A registered name checked from the wrong module.
+        let f = file(
+            "rust/src/stream/external_sort.rs",
+            "fn f() -> anyhow::Result<()> { failpoint::check(\"sih.park\")?; Ok(()) }\n",
+        );
+        let mut out = Vec::new();
+        rule_failpoint(&[f], None, &mut out);
+        assert!(out.iter().any(|x| x.msg.contains("registered for module")));
+    }
+
+    #[test]
+    fn failpoint_rule_checks_the_kill_matrix() {
+        // The real tree's call sites, minimally: every site checked once
+        // from its registered module.
+        let files: Vec<SourceFile> = SITES
+            .iter()
+            .map(|s| {
+                let src = format!(
+                    "fn f() -> anyhow::Result<()> {{ failpoint::check(\"{}\")?; Ok(()) }}\n",
+                    s.name
+                );
+                file(s.module, &src)
+            })
+            .collect();
+        // A kill matrix that lists every CrashResume site is clean.
+        let all: String = SITES.iter().map(|s| format!("\"{}\",\n", s.name)).collect();
+        let matrix = lex::scan(&all);
+        let mut out = Vec::new();
+        rule_failpoint(&files, Some(&matrix), &mut out);
+        assert!(out.is_empty(), "{:?}", rules_of(&out));
+        // Dropping one CrashResume site from the matrix is a finding.
+        let partial: String = SITES
+            .iter()
+            .filter(|s| s.name != "ext.run")
+            .map(|s| format!("\"{}\",\n", s.name))
+            .collect();
+        let matrix = lex::scan(&partial);
+        let mut out = Vec::new();
+        rule_failpoint(&files, Some(&matrix), &mut out);
+        assert!(out.iter().any(|x| x.msg.contains("missing from the crash_resume.rs")));
+    }
+
+    #[test]
+    fn tag_rule_confines_the_collective_bit_to_the_fabric() {
+        let f = file("rust/src/mpisort/exchange.rs", "let t = (1 << 63) | seq;\n");
+        let mut out = Vec::new();
+        rule_tag(&f, &mut out);
+        assert_eq!(rules_of(&out), ["tag"]);
+        let fabric = file("rust/src/comm/fabric.rs", "let t = (1 << 63) | seq;\n");
+        let mut out = Vec::new();
+        rule_tag(&fabric, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn checked_arith_rule_guards_marked_regions() {
+        let f = file(
+            "rust/src/stream/mod.rs",
+            "// aklint: begin(checked-arith)\nlet a = b.saturating_mul(2);\nlet c = b / 3;\n\
+             // aklint: end(checked-arith)\nlet outside = b * 2;\n",
+        );
+        let mut out = Vec::new();
+        rule_checked_arith(&f, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 3);
+
+        let unclosed = file("rust/src/stream/mod.rs", "// aklint: begin(checked-arith)\n");
+        let mut out = Vec::new();
+        rule_checked_arith(&unclosed, &mut out);
+        assert!(out.iter().any(|x| x.msg.contains("never closed")));
+    }
+}
