@@ -1,6 +1,6 @@
 # Top-level convenience targets (see README.md).
 
-.PHONY: artifacts build test test-faults lint lint-fix sanitize sanitize-thread sanitize-address doc bench-smoke bench-sort bench-stream bench-cluster-stream clean-artifacts
+.PHONY: artifacts build test test-faults lint lint-fix sanitize sanitize-thread sanitize-address doc bench-smoke bench-sort bench-stream bench-cluster-stream trace-demo clean-artifacts
 
 # AOT-lower the L1/L2 Pallas/JAX catalog to artifacts/ (requires jax).
 artifacts:
@@ -27,9 +27,10 @@ test-faults:
 # on the fallible comm/stream/mpisort paths, SAFETY comments on every
 # unsafe block, the fail-point registry cross-check (source literals vs
 # util::failpoint::SITES vs the crash_resume kill matrix), collective
-# wire-tag minting, checked arithmetic in stream budget math, and the
-# DESIGN.md §15 site-table drift check. Zero findings is a CI gate; the
-# JSON report is uploaded as a CI artifact.
+# wire-tag minting, checked arithmetic in stream budget math, span
+# coverage of fail-point-bearing stream/mpisort modules (DESIGN.md
+# §18), and the DESIGN.md §15 site-table drift check. Zero findings is
+# a CI gate; the JSON report is uploaded as a CI artifact.
 lint:
 	cargo run -q -p aklint -- --report aklint-report.json
 
@@ -89,6 +90,20 @@ bench-stream: build
 # full dtype grid.
 bench-cluster-stream: build
 	cargo run --release --bin akbench -- bench-cluster-stream --quick
+
+# Perfetto trace demo (DESIGN.md §18): a 4-rank faulted cluster-stream
+# sort (external rank-local sorter, two dropped deliveries on link 0->1
+# plus rank 1 killed once mid-exchange) with tracing armed. The kill
+# guarantees at least one in-process driver restart, so the timeline
+# shows a recovery instant next to the fault markers. Writes
+# target/trace.json — load it at https://ui.perfetto.dev — and prints
+# the per-track phase summary table.
+trace-demo: build
+	cargo run --release --bin akbench -- sort --ranks 4 \
+		--local-sorter external --elems-per-rank 32768 \
+		--faults "drop:0:1:2, kill:1:1:exchange" --max-restarts 2 \
+		--recv-timeout 120 \
+		--trace-out target/trace.json --trace-summary
 
 clean-artifacts:
 	rm -rf artifacts

@@ -23,6 +23,7 @@ use crate::bench::verify_subsampled;
 use crate::cfg::{RunConfig, Sorter};
 use crate::coordinator::driver::run_distributed_sort_data;
 use crate::dtype::ElemType;
+use crate::obs::{CounterSnapshot, FABRIC_COUNTERS};
 use crate::session::{Launch, Session};
 use crate::stream::{MIN_IO_ELEMS, MIN_RUN_CHUNK};
 use crate::util::Prng;
@@ -74,14 +75,38 @@ pub struct ClusterStreamRecord {
     /// Host wall seconds the whole collective took.
     pub wall_secs: f64,
     /// Fault/flow counters summed over driver restart attempts
-    /// (DESIGN.md §16): credit-exhausted send stalls, sender retries,
-    /// deadline timeouts, messages eaten by injected faults, and
-    /// in-process recoveries.
-    pub credit_stalls: u64,
-    pub retries: u64,
-    pub timeouts: u64,
-    pub dropped: u64,
-    pub recoveries: u64,
+    /// (DESIGN.md §16, §18): the registered
+    /// [`FABRIC_COUNTERS`] carried as a registry snapshot — the JSON
+    /// row emits it by iteration, so a newly registered counter
+    /// reaches the schema without touching this file.
+    pub fabric: CounterSnapshot,
+}
+
+impl ClusterStreamRecord {
+    /// Sends that blocked on exhausted link credit.
+    pub fn credit_stalls(&self) -> u64 {
+        self.fabric.get("credit_stalls")
+    }
+
+    /// Sender-side retries after transient link faults.
+    pub fn retries(&self) -> u64 {
+        self.fabric.get("retries")
+    }
+
+    /// Deadline/fault timeouts.
+    pub fn timeouts(&self) -> u64 {
+        self.fabric.get("timeouts")
+    }
+
+    /// Messages eaten by injected link faults.
+    pub fn dropped(&self) -> u64 {
+        self.fabric.get("dropped")
+    }
+
+    /// In-process driver restarts that went on to finish the job.
+    pub fn recoveries(&self) -> u64 {
+        self.fabric.get("recoveries")
+    }
 }
 
 /// The full bench outcome.
@@ -134,9 +159,7 @@ impl ClusterStreamReport {
                  \"budget_bytes\": {}, \"ratio\": {}, \"runs_max\": {}, \
                  \"merge_passes_max\": {}, \"local_spilled_bytes\": {}, \
                  \"exchange_spilled_bytes\": {}, \"verified\": {}, \"rounds_used\": {}, \
-                 \"sim_secs\": {:.9}, \"gbps\": {:.6}, \"wall_secs\": {:.6}, \
-                 \"credit_stalls\": {}, \"retries\": {}, \"timeouts\": {}, \
-                 \"dropped\": {}, \"recoveries\": {}}}{}\n",
+                 \"sim_secs\": {:.9}, \"gbps\": {:.6}, \"wall_secs\": {:.6}, {}}}{}\n",
                 r.ranks,
                 r.dtype.name(),
                 r.elems_per_rank,
@@ -151,11 +174,7 @@ impl ClusterStreamReport {
                 r.sim_secs,
                 r.bytes_per_sim_sec / 1e9,
                 r.wall_secs,
-                r.credit_stalls,
-                r.retries,
-                r.timeouts,
-                r.dropped,
-                r.recoveries,
+                r.fabric.json_fields(),
                 if i + 1 == self.records.len() { "" } else { "," },
             ));
         }
@@ -261,10 +280,10 @@ fn bench_config<K: KeyGen + DeviceKey>(
     // recovery machinery and the smoke proved nothing.
     if cfg.comm.faults.is_some() {
         anyhow::ensure!(
-            out.record.retries > 0
-                || out.record.timeouts > 0
-                || out.record.dropped > 0
-                || out.record.recoveries > 0,
+            out.record.retries() > 0
+                || out.record.timeouts() > 0
+                || out.record.dropped() > 0
+                || out.record.recoveries() > 0,
             "--faults {:?} injected but no fault counter fired \
              (retries/timeouts/dropped/recoveries all zero)",
             cfg.comm.faults.as_deref().unwrap_or("")
@@ -286,11 +305,7 @@ fn bench_config<K: KeyGen + DeviceKey>(
         sim_secs: out.record.sim_total,
         bytes_per_sim_sec: out.record.throughput_bps(),
         wall_secs: out.record.wall_secs,
-        credit_stalls: out.record.credit_stalls,
-        retries: out.record.retries,
-        timeouts: out.record.timeouts,
-        dropped: out.record.dropped,
-        recoveries: out.record.recoveries,
+        fabric: out.record.fabric.clone(),
     });
     Ok(())
 }
@@ -353,16 +368,8 @@ pub fn run_and_emit(base: &RunConfig, quick: bool, out: &Path) -> anyhow::Result
             r.verified,
             r.wall_secs,
         );
-        if r.credit_stalls > 0
-            || r.retries > 0
-            || r.timeouts > 0
-            || r.dropped > 0
-            || r.recoveries > 0
-        {
-            println!(
-                "        faults: stalls={} retries={} timeouts={} dropped={} recoveries={}",
-                r.credit_stalls, r.retries, r.timeouts, r.dropped, r.recoveries,
-            );
+        if r.fabric.any_nonzero() {
+            println!("        faults: {}", r.fabric.render_nonzero());
         }
     }
     Ok(())
@@ -396,11 +403,14 @@ mod tests {
         assert_eq!(j.get("verify_seed").as_usize(), Some((base.seed ^ 0xC157) as usize));
         let rows = j.get("results").as_arr().unwrap();
         assert_eq!(rows.len(), 1);
-        // Schema v2: fault counters are present on every row, and a
-        // fault-free run reports them all zero.
-        for key in ["credit_stalls", "retries", "timeouts", "dropped", "recoveries"] {
+        // Schema v2, coverage contract: every *registered* fabric
+        // counter appears on every row (iterated from the registry, so
+        // a newly registered name fails here until the row carries it),
+        // and a fault-free run reports them all zero.
+        for key in FABRIC_COUNTERS {
             assert_eq!(rows[0].get(key).as_usize(), Some(0), "row key {key}");
         }
+        assert_eq!(r.fabric.names(), FABRIC_COUNTERS.to_vec());
     }
 
     #[test]
@@ -423,7 +433,7 @@ mod tests {
         let r = report.get(2, ElemType::I64, 8).unwrap();
         assert!(r.verified > 2);
         assert!(
-            r.dropped >= 2 && r.retries >= 2,
+            r.dropped() >= 2 && r.retries() >= 2,
             "lossy link fired nothing: {r:?}"
         );
     }

@@ -25,6 +25,7 @@ use crate::algorithms::ReduceKind;
 use crate::backend::DeviceKey;
 use crate::bench::{verify_subsampled, BenchOpts, Bencher};
 use crate::dtype::ElemType;
+use crate::obs::{CounterSnapshot, STREAM_COUNTERS};
 use crate::session::{Launch, Session};
 use crate::stream::{Checkpoint, GenSource, SliceSource, SpillMedium, StreamBudget, VecSink};
 use crate::workload::{Distribution, KeyGen};
@@ -52,14 +53,13 @@ pub struct StreamBenchRecord {
     pub budget_bytes: usize,
     /// Dataset bytes / budget bytes (0 for the reference row).
     pub ratio: usize,
-    /// Sorted runs generated (external-sort rows).
-    pub runs: usize,
-    /// Merge passes executed (external-sort rows).
-    pub merge_passes: usize,
-    /// Merge fan-in the run used (external-sort rows).
-    pub fan_in: usize,
-    /// Bytes spilled to disk per iteration (external-sort rows).
-    pub spilled_bytes: u64,
+    /// Pipeline-shape counters of the verification pass — the
+    /// registered [`STREAM_COUNTERS`] (runs, merge passes, spill
+    /// volume, …) carried as a registry snapshot (DESIGN.md §18); all
+    /// zero on the non-streaming rows. The JSON row emits it by
+    /// iteration, so a newly registered counter reaches the schema
+    /// without touching this file.
+    pub stream: CounterSnapshot,
     /// Output positions bitwise-verified against the reference.
     pub verified: usize,
     /// Mean seconds per iteration.
@@ -70,6 +70,28 @@ pub struct StreamBenchRecord {
     pub bytes_per_sec: f64,
     /// Recorded samples.
     pub samples: usize,
+}
+
+impl StreamBenchRecord {
+    /// Sorted runs generated (external-sort rows).
+    pub fn runs(&self) -> usize {
+        self.stream.get("runs") as usize
+    }
+
+    /// Merge passes executed (external-sort rows).
+    pub fn merge_passes(&self) -> usize {
+        self.stream.get("merge_passes") as usize
+    }
+
+    /// Merge fan-in the run used (external-sort rows).
+    pub fn fan_in(&self) -> usize {
+        self.stream.get("fan_in") as usize
+    }
+
+    /// Bytes spilled to disk per iteration (external-sort rows).
+    pub fn spilled_bytes(&self) -> u64 {
+        self.stream.get("spilled_bytes")
+    }
 }
 
 /// The full bench outcome.
@@ -98,10 +120,13 @@ impl StreamBenchReport {
             .find(|r| r.engine == engine && r.dtype == dtype && r.ratio == ratio)
     }
 
-    /// Serialise as JSON (`BENCH_stream.json`, schema version 1).
+    /// Serialise as JSON (`BENCH_stream.json`, schema version 2: v2
+    /// replaces the hand-enumerated `runs`/`merge_passes`/`fan_in`/
+    /// `spilled_bytes` row fields with the full registered
+    /// [`STREAM_COUNTERS`] set, emitted by registry iteration).
     pub fn to_json(&self) -> String {
         let mut s = String::new();
-        s.push_str("{\n  \"version\": 1,\n");
+        s.push_str("{\n  \"version\": 2,\n");
         s.push_str(&format!(
             "  \"n\": {},\n  \"threads\": {},\n  \"spill\": \"{}\",\n  \"verify_seed\": {},\n",
             self.n, self.threads, self.spill, self.verify_seed
@@ -111,18 +136,14 @@ impl StreamBenchReport {
         for (i, r) in self.records.iter().enumerate() {
             s.push_str(&format!(
                 "    {{\"engine\": \"{}\", \"dtype\": \"{}\", \"n\": {}, \"budget_bytes\": {}, \
-                 \"ratio\": {}, \"runs\": {}, \"merge_passes\": {}, \"fan_in\": {}, \
-                 \"spilled_bytes\": {}, \"verified\": {}, \"secs_mean\": {:.9}, \
+                 \"ratio\": {}, {}, \"verified\": {}, \"secs_mean\": {:.9}, \
                  \"secs_std\": {:.9}, \"gbps\": {:.6}, \"samples\": {}}}{}\n",
                 r.engine,
                 r.dtype.name(),
                 r.n,
                 r.budget_bytes,
                 r.ratio,
-                r.runs,
-                r.merge_passes,
-                r.fan_in,
-                r.spilled_bytes,
+                r.stream.json_fields(),
                 r.verified,
                 r.secs_mean,
                 r.secs_std,
@@ -185,10 +206,7 @@ fn bench_dtype<K: KeyGen + DeviceKey>(
             n,
             budget_bytes: 0,
             ratio: 0,
-            runs: 0,
-            merge_passes: 0,
-            fan_in: 0,
-            spilled_bytes: 0,
+            stream: CounterSnapshot::zeroed(&STREAM_COUNTERS),
             verified: 0,
             secs_mean: r.time.mean,
             secs_std: r.time.std,
@@ -273,10 +291,7 @@ fn bench_dtype<K: KeyGen + DeviceKey>(
             n,
             budget_bytes,
             ratio,
-            runs: stats.runs,
-            merge_passes: stats.merge_passes,
-            fan_in: stats.fan_in,
-            spilled_bytes: stats.spilled_bytes,
+            stream: stats.snapshot(),
             verified,
             secs_mean: r.time.mean,
             secs_std: r.time.std,
@@ -305,10 +320,7 @@ fn bench_dtype<K: KeyGen + DeviceKey>(
             n,
             budget_bytes,
             ratio,
-            runs: 0,
-            merge_passes: 0,
-            fan_in: 0,
-            spilled_bytes: 0,
+            stream: CounterSnapshot::zeroed(&STREAM_COUNTERS),
             verified: 1,
             secs_mean: r.time.mean,
             secs_std: r.time.std,
@@ -451,8 +463,8 @@ pub fn run_and_emit(
                         "  {dt:<5} x{ratio:<3} external-sort {:.2} GB/s ({} runs, {} passes) \
                          vs in-mem {:.2} GB/s ({:.2}x overhead, {} positions verified)",
                         ext.bytes_per_sec / 1e9,
-                        ext.runs,
-                        ext.merge_passes,
+                        ext.runs(),
+                        ext.merge_passes(),
                         inm.bytes_per_sec / 1e9,
                         ext.secs_mean / inm.secs_mean,
                         ext.verified,
@@ -498,18 +510,28 @@ mod tests {
         let ext = report.get("external-sort", ElemType::I32, 8).unwrap();
         // The acceptance property: dataset is 8x the budget, so the
         // pipeline must actually go out of core and verify clean.
-        assert!(ext.runs > 1, "dataset must exceed one run ({} runs)", ext.runs);
-        assert!(ext.merge_passes >= 1);
+        assert!(ext.runs() > 1, "dataset must exceed one run ({} runs)", ext.runs());
+        assert!(ext.merge_passes() >= 1);
         assert!(ext.verified > 2);
         assert_eq!(ext.budget_bytes, 40_000 * 4 / 8);
         let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
-        assert_eq!(j.get("version").as_usize(), Some(1));
+        assert_eq!(j.get("version").as_usize(), Some(2));
         assert_eq!(j.get("spill").as_str(), Some("memory"));
         // The verification seed is part of the report so `verified`
         // counts are reproducible from the JSON alone.
         assert_eq!(j.get("verify_seed").as_usize(), Some((0x57AE4B ^ 0x5EED) as usize));
-        assert_eq!(j.get("results").as_arr().unwrap().len(), 3);
+        let rows = j.get("results").as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
         assert_eq!(j.get("launch").get("max_tasks").as_usize(), Some(2));
+        // Schema v2, coverage contract: every *registered* stream
+        // counter appears on every row, iterated from the registry
+        // list — a newly registered name fails here until the rows
+        // carry it.
+        for row in rows {
+            for key in STREAM_COUNTERS {
+                assert!(row.get(key).as_usize().is_some(), "row key {key}");
+            }
+        }
     }
 
     #[test]
@@ -528,7 +550,7 @@ mod tests {
         )
         .unwrap();
         let ext = report.get("external-sort", ElemType::F64, 8).unwrap();
-        assert!(ext.spilled_bytes > 0, "disk medium must actually spill");
+        assert!(ext.spilled_bytes() > 0, "disk medium must actually spill");
         assert!(ext.verified > 2);
     }
 }

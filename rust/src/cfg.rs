@@ -449,6 +449,38 @@ impl CommCfg {
     }
 }
 
+/// Observability settings (`[obs]` config section and the
+/// `--trace-out` / `--trace-summary` CLI flags — DESIGN.md §18).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObsCfg {
+    /// Chrome/Perfetto trace-event JSON output path (`trace_out` /
+    /// `--trace-out`). `None` leaves the tracer disarmed.
+    pub trace_out: Option<String>,
+    /// Print the human phase table after the run (`trace_summary` /
+    /// `--trace-summary`). Arms the tracer even without `trace_out`.
+    pub trace_summary: bool,
+    /// Per-thread trace ring capacity in events (`ring_capacity`).
+    pub ring_capacity: usize,
+}
+
+impl Default for ObsCfg {
+    fn default() -> Self {
+        Self {
+            trace_out: None,
+            trace_summary: false,
+            ring_capacity: crate::obs::tracer::DEFAULT_RING_CAPACITY,
+        }
+    }
+}
+
+impl ObsCfg {
+    /// True when any output is requested — the condition under which
+    /// `main` arms a [`crate::obs::TraceSession`] around the command.
+    pub fn armed(&self) -> bool {
+        self.trace_out.is_some() || self.trace_summary
+    }
+}
+
 /// Top-level run configuration (CLI + config file).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -495,6 +527,8 @@ pub struct RunConfig {
     pub stream: StreamCfg,
     /// Fabric transport settings (`[comm]` section — DESIGN.md §16).
     pub comm: CommCfg,
+    /// Observability settings (`[obs]` section — DESIGN.md §18).
+    pub obs: ObsCfg,
 }
 
 impl Default for RunConfig {
@@ -518,6 +552,7 @@ impl Default for RunConfig {
             launch: crate::session::Launch::default(),
             stream: StreamCfg::default(),
             comm: CommCfg::default(),
+            obs: ObsCfg::default(),
         }
     }
 }
@@ -654,6 +689,17 @@ impl RunConfig {
         if let Some(v) = doc.get("comm", "hb_check").and_then(|v| v.as_bool()) {
             self.comm.hb_check = v;
         }
+        // Observability settings ([obs] section — DESIGN.md §18).
+        if let Some(v) = doc.get("obs", "trace_out").and_then(|v| v.as_str()) {
+            self.obs.trace_out = Some(v.to_string());
+        }
+        if let Some(v) = doc.get("obs", "trace_summary").and_then(|v| v.as_bool()) {
+            self.obs.trace_summary = v;
+        }
+        if let Some(v) = doc.get("obs", "ring_capacity").and_then(|v| v.as_i64()) {
+            anyhow::ensure!(v > 0, "obs ring_capacity must be positive, got {v}");
+            self.obs.ring_capacity = v as usize;
+        }
         // Fail at config time, not mid-run, on an unparsable fault spec.
         self.comm.fault_plan()?;
         self.cluster.apply_toml(doc)?;
@@ -776,6 +822,30 @@ mod tests {
         assert!(RunConfig::default().apply_toml(&bad).is_err());
         // Non-positive caps are rejected.
         let bad = Toml::parse("[comm]\ncap_mb = 0\n").unwrap();
+        assert!(RunConfig::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn obs_section_via_toml() {
+        let doc = Toml::parse(
+            "[obs]\ntrace_out = \"target/trace.json\"\ntrace_summary = true\n\
+             ring_capacity = 4096\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.obs, ObsCfg::default());
+        assert!(!cfg.obs.armed());
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.obs.trace_out.as_deref(), Some("target/trace.json"));
+        assert!(cfg.obs.trace_summary);
+        assert_eq!(cfg.obs.ring_capacity, 4096);
+        assert!(cfg.obs.armed());
+        // A summary alone also arms the tracer.
+        let mut summary_only = RunConfig::default();
+        summary_only.obs.trace_summary = true;
+        assert!(summary_only.obs.armed());
+        // Non-positive ring capacities are rejected.
+        let bad = Toml::parse("[obs]\nring_capacity = 0\n").unwrap();
         assert!(RunConfig::default().apply_toml(&bad).is_err());
     }
 

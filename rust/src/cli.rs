@@ -117,6 +117,19 @@ COMM / FAULT FLAGS (bounded fallible fabric — DESIGN.md §16)
                        cycle the moment it closes ([comm] hb_check;
                        DESIGN.md §17)
 
+OBSERVABILITY FLAGS (tracing & metrics — DESIGN.md §18)
+  --trace-out PATH     write a Chrome/Perfetto trace-event JSON timeline
+                       of the run (per-rank phase spans, fault/retry
+                       instants, per-link in-flight counter tracks) to
+                       PATH ([obs] trace_out; paths inside a guarded
+                       spill dir are remapped outside it)
+  --trace-summary      print a per-track phase table after the run
+                       ([obs] trace_summary; arms tracing even without
+                       --trace-out)
+  --trace-ring-capacity N  per-thread trace ring capacity in events
+                       ([obs] ring_capacity; default 65536 — a full
+                       ring drops the newest events and reports it)
+
 LAUNCH KNOBS (per-call tuning, Session/Launch API — DESIGN.md §12)
   --max-tasks N        cap host worker tasks per call
   --min-elems-per-task N  spawn no task for fewer elements
@@ -146,7 +159,7 @@ impl Cli {
                 if matches!(
                     name,
                     "quick" | "no-device" | "help" | "verify" | "reuse-scratch" | "resume"
-                        | "hb-check"
+                        | "hb-check" | "trace-summary"
                 ) {
                     cli.flags.insert(name.to_string(), "true".to_string());
                 } else {
@@ -298,6 +311,17 @@ impl Cli {
         }
         if self.has("hb-check") {
             cfg.comm.hb_check = true;
+        }
+        // Observability flags (DESIGN.md §18).
+        if let Some(v) = self.get("trace-out") {
+            cfg.obs.trace_out = Some(v.to_string());
+        }
+        if self.has("trace-summary") {
+            cfg.obs.trace_summary = true;
+        }
+        if let Some(v) = self.get_usize("trace-ring-capacity")? {
+            anyhow::ensure!(v > 0, "--trace-ring-capacity: expected a positive count");
+            cfg.obs.ring_capacity = v;
         }
         // Unparsable fault specs fail at flag-parse time, not mid-run.
         cfg.comm.fault_plan().context("--faults")?;
@@ -453,6 +477,28 @@ mod tests {
         // Bad specs and non-positive caps error at parse time.
         assert!(Cli::parse(args("sort --faults melt:0")).unwrap().run_config().is_err());
         assert!(Cli::parse(args("sort --comm-cap-mb 0")).unwrap().run_config().is_err());
+    }
+
+    #[test]
+    fn obs_flags_flow_into_config() {
+        // --trace-summary is boolean: the next token stays positional.
+        let c = Cli::parse(args(
+            "sort --trace-out target/trace.json --trace-ring-capacity 4096 --trace-summary extra",
+        ))
+        .unwrap();
+        assert_eq!(c.positional, vec!["extra"]);
+        let cfg = c.run_config().unwrap();
+        assert_eq!(cfg.obs.trace_out.as_deref(), Some("target/trace.json"));
+        assert!(cfg.obs.trace_summary);
+        assert_eq!(cfg.obs.ring_capacity, 4096);
+        assert!(cfg.obs.armed());
+        // Defaults hold with no flags: tracer disarmed.
+        let cfg = Cli::parse(args("sort")).unwrap().run_config().unwrap();
+        assert_eq!(cfg.obs, crate::cfg::ObsCfg::default());
+        assert!(!cfg.obs.armed());
+        // Zero ring capacity errors at parse time.
+        let c = Cli::parse(args("sort --trace-ring-capacity 0")).unwrap();
+        assert!(c.run_config().is_err());
     }
 
     #[test]

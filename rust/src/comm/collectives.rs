@@ -17,6 +17,7 @@
 //! stall a sender (until the receiver consumes) but never deadlock it.
 
 use crate::dtype::SortKey;
+use crate::obs;
 use crate::session::{AkError, AkResult};
 
 use super::fabric::Endpoint;
@@ -26,6 +27,7 @@ impl Endpoint {
     /// Broadcast bytes from `root` (binomial tree); returns the payload on
     /// every rank.
     pub fn bcast_bytes(&mut self, root: usize, bytes: Vec<u8>) -> AkResult<Vec<u8>> {
+        let _span = obs::span1(obs::SpanKind::Collective, "bcast", bytes.len() as u64);
         let tag = self.next_coll_tag();
         let me = self.rank();
         let p = self.nranks();
@@ -64,6 +66,7 @@ impl Endpoint {
     /// once — O(log P) rounds, same total bytes through the root as the
     /// linear algorithm.
     pub fn gather_bytes(&mut self, root: usize, bytes: Vec<u8>) -> AkResult<Option<Vec<Vec<u8>>>> {
+        let _span = obs::span1(obs::SpanKind::Collective, "gather", bytes.len() as u64);
         let tag = self.next_coll_tag();
         let me = self.rank();
         let p = self.nranks();
@@ -109,6 +112,7 @@ impl Endpoint {
     /// Allgather: every rank ends with every rank's payload (gather at
     /// rank 0 + broadcast of the concatenation with a length header).
     pub fn allgather_bytes(&mut self, bytes: Vec<u8>) -> AkResult<Vec<Vec<u8>>> {
+        let _span = obs::span(obs::SpanKind::Collective, "allgather");
         let gathered = self.gather_bytes(0, bytes)?;
         // Pack: [n_ranks × u64 length] + concatenated payloads.
         let packed = if self.rank() == 0 {
@@ -153,6 +157,8 @@ impl Endpoint {
     /// This is SIHSort's single data-exchange step.
     pub fn alltoallv_bytes(&mut self, parts: Vec<Vec<u8>>) -> AkResult<Vec<Vec<u8>>> {
         assert_eq!(parts.len(), self.nranks());
+        let total: usize = parts.iter().map(Vec::len).sum();
+        let _span = obs::span1(obs::SpanKind::Collective, "alltoallv", total as u64);
         let tag = self.next_coll_tag();
         let me = self.rank();
         let n = self.nranks();

@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use crate::cfg::TransferMode;
 use crate::cluster::{ClusterSpec, LinkKind, SimClocks};
 use crate::dtype::SortKey;
+use crate::obs;
 use crate::session::{AkError, AkResult};
 use crate::util::failpoint;
 
@@ -53,6 +54,10 @@ struct Msg {
     arrive: f64,
     /// Bytes charged against the link's credit (0 for self-sends).
     charged: usize,
+    /// The link kinds this message's credit is charged on (empty for
+    /// self-sends); consumption returns the per-kind in-flight bytes
+    /// the observability counter tracks sample.
+    hops: Vec<LinkKind>,
     /// Happens-before stamp (vector clock, channel sequence number);
     /// `None` unless [`CommTuning::hb_check`] is on.
     stamp: Option<(VClock, u64)>,
@@ -145,6 +150,19 @@ impl FaultCounters {
     pub fn any_faults(&self) -> bool {
         self.retries > 0 || self.timeouts > 0 || self.dropped > 0
     }
+
+    /// The registry form of these counters
+    /// ([`crate::obs::FABRIC_COUNTERS`]); `recoveries` is driver-owned
+    /// (restart attempts) and enters as given.
+    pub fn snapshot_with_recoveries(&self, recoveries: u64) -> obs::CounterSnapshot {
+        let mut s = obs::CounterSnapshot::new();
+        s.push("credit_stalls", self.credit_stalls);
+        s.push("retries", self.retries);
+        s.push("timeouts", self.timeouts);
+        s.push("dropped", self.dropped);
+        s.push("recoveries", recoveries);
+        s
+    }
 }
 
 /// Cumulative fabric statistics (shared across ranks).
@@ -234,6 +252,46 @@ struct State {
     phases: Vec<&'static str>,
     /// Happens-before / deadlock detector ([`CommTuning::hb_check`]).
     hb: Option<HbState>,
+    /// In-flight bytes summed per [`LinkKind`] (indexed by
+    /// [`kind_slot`]); sampled into the observability counter tracks so
+    /// NVLink-vs-PCIe saturation is visible on the trace timeline.
+    kind_in_flight: [usize; 4],
+}
+
+/// Index of a link kind in [`State::kind_in_flight`].
+fn kind_slot(k: LinkKind) -> usize {
+    match k {
+        LinkKind::NvLink => 0,
+        LinkKind::Infiniband => 1,
+        LinkKind::PcieD2H => 2,
+        LinkKind::HostMem => 3,
+    }
+}
+
+/// Counter-track name of a link kind's in-flight bytes.
+fn inflight_track(k: LinkKind) -> &'static str {
+    match k {
+        LinkKind::NvLink => "inflight.nvlink",
+        LinkKind::Infiniband => "inflight.ib",
+        LinkKind::PcieD2H => "inflight.pcie",
+        LinkKind::HostMem => "inflight.hostmem",
+    }
+}
+
+/// Maintain the per-kind in-flight totals for a charge (`add`) or a
+/// release, sampling each touched kind's counter track. The totals are
+/// kept unconditionally (plain adds under the already-held state lock);
+/// the samples are inert unless tracing is armed.
+fn track_kind_inflight(st: &mut State, hops: &[LinkKind], add: bool, len: usize) {
+    for &k in hops {
+        let s = kind_slot(k);
+        if add {
+            st.kind_in_flight[s] += len;
+        } else {
+            st.kind_in_flight[s] = st.kind_in_flight[s].saturating_sub(len);
+        }
+        obs::counter(inflight_track(k), st.kind_in_flight[s] as u64);
+    }
 }
 
 struct Shared {
@@ -301,6 +359,7 @@ impl Fabric {
                 bar_arrived: 0,
                 phases: vec!["start"; ranks],
                 hb,
+                kind_in_flight: [0; 4],
             }),
             cv: Condvar::new(),
             compute: Mutex::new(()),
@@ -529,6 +588,17 @@ impl Endpoint {
     /// and feeds the watchdog's per-rank diagnostics.
     pub fn note_phase(&mut self, phase: &'static str) {
         self.phase = phase;
+        // Drive the per-rank phase track of the trace timeline from the
+        // same notes the watchdog reads — every pipeline that reports
+        // phases gets spans for free (DESIGN.md §18).
+        if obs::enabled() {
+            obs::set_thread_label(&format!("rank {}", self.rank));
+            if phase == "done" {
+                obs::phase_end();
+            } else {
+                obs::phase(phase);
+            }
+        }
         let mut st = self.shared.lock();
         st.phases[self.rank] = phase;
     }
@@ -601,10 +671,12 @@ impl Endpoint {
         match faults.on_op(self.rank, self.phase) {
             OpFault::None => Ok(()),
             OpFault::Kill => {
+                obs::instant2(obs::SpanKind::Fault, "fault.kill", self.rank as u64);
                 let epoch = self.shared.tuning.epoch;
                 self.fatal(AkError::RankDead { rank: self.rank, epoch })
             }
             OpFault::Stall => {
+                obs::instant2(obs::SpanKind::Fault, "fault.stall", self.rank as u64);
                 // Park on the fabric (not a raw sleep): the watchdog's
                 // `abort_all` must be able to release a stalled rank.
                 let deadline = Instant::now() + self.recv_timeout();
@@ -667,13 +739,20 @@ impl Endpoint {
     /// A registration closed a wait-for cycle: trip the coordinated
     /// abort (the peers in the cycle are parked and cannot make
     /// progress) and surface the typed deadlock diagnosis.
-    fn hb_deadlock<T>(&mut self, mut st: MutexGuard<'_, State>, cycle: String) -> AkResult<T> {
+    fn hb_deadlock<T>(&mut self, mut st: MutexGuard<'_, State>, mut cycle: String) -> AkResult<T> {
         self.hb_clear(&mut st);
         if st.abort.is_none() {
             st.abort = Some(Abort { rank: self.rank, epoch: self.shared.tuning.epoch });
         }
         self.shared.cv.notify_all();
         drop(st);
+        // Attach the live span stacks: what each traced thread was
+        // inside when the cycle closed (empty when tracing is off).
+        let stacks = obs::live_stacks_table();
+        if !stacks.is_empty() {
+            cycle.push('\n');
+            cycle.push_str(&stacks);
+        }
         self.fatal(AkError::Deadlock { rank: self.rank, cycle })
     }
 
@@ -683,8 +762,17 @@ impl Endpoint {
         self.shared.lock().hb.as_ref().map(|hb| hb.clock(self.rank).0.clone())
     }
 
-    /// Enqueue under the lock after admission (credit already charged).
-    fn enqueue(&self, st: &mut State, dst: usize, tag: u64, bytes: &[u8], arrive: f64, len: usize) {
+    /// Enqueue under the lock after admission (credit already charged
+    /// on every kind in `hops`; the message returns it on consumption).
+    fn enqueue(
+        &self,
+        st: &mut State,
+        dst: usize,
+        tag: u64,
+        bytes: &[u8],
+        arrive: f64,
+        hops: Vec<LinkKind>,
+    ) {
         let stamp = match st.hb.as_mut() {
             Some(hb) => {
                 // The receiver (if parked on exactly this channel) is
@@ -700,8 +788,9 @@ impl Endpoint {
             tag,
             bytes: bytes.to_vec(),
             arrive,
-            charged: len,
+            charged: bytes.len(),
             stamp,
+            hops,
         });
         self.shared.cv.notify_all();
     }
@@ -718,6 +807,7 @@ impl Endpoint {
             arrive: t,
             charged: 0,
             stamp,
+            hops: Vec::new(),
         });
         self.shared.cv.notify_all();
     }
@@ -733,10 +823,12 @@ impl Endpoint {
             SendFault::Deliver => Ok(0.0),
             SendFault::Delayed(secs) => {
                 self.shared.stats.delayed.fetch_add(1, Ordering::Relaxed);
+                obs::instant2(obs::SpanKind::Fault, "fault.delay", dst as u64);
                 Ok(secs)
             }
             SendFault::Dropped => {
                 self.shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                obs::instant2(obs::SpanKind::Fault, "fault.drop", dst as u64);
                 // The wire time was still spent before the loss.
                 self.shared.clocks.advance(self.rank, dt);
                 Err(self.timeout_err(
@@ -819,6 +911,7 @@ impl Endpoint {
         }
         st.in_flight[link] += len;
         self.shared.stats.note_peak(st.in_flight[link]);
+        track_kind_inflight(&mut st, &hops, true, len);
         if stalled {
             // Resume no earlier than the consumption that freed credit.
             self.shared.clocks.merge_at_least(self.rank, st.release_clock[link]);
@@ -826,7 +919,7 @@ impl Endpoint {
         let t_send = self.now();
         self.shared.stats.record(&hops, len);
         self.shared.clocks.advance(self.rank, dt);
-        self.enqueue(&mut st, dst, tag, bytes, t_send + dt, len);
+        self.enqueue(&mut st, dst, tag, bytes, t_send + dt, hops);
         Ok(())
     }
 
@@ -867,10 +960,11 @@ impl Endpoint {
         }
         st.in_flight[link] += len;
         self.shared.stats.note_peak(st.in_flight[link]);
+        track_kind_inflight(&mut st, &hops, true, len);
         let t_send = self.now();
         self.shared.stats.record(&hops, len);
         self.shared.clocks.advance(self.rank, dt);
-        self.enqueue(&mut st, dst, tag, bytes, t_send + dt, len);
+        self.enqueue(&mut st, dst, tag, bytes, t_send + dt, hops);
         Ok(TrySend::Sent)
     }
 
@@ -895,6 +989,7 @@ impl Endpoint {
             let mut st = self.shared.lock();
             if m.charged > 0 {
                 st.in_flight[link] = st.in_flight[link].saturating_sub(m.charged);
+                track_kind_inflight(&mut st, &m.hops, false, m.charged);
                 let t = self.shared.clocks.get(self.rank).max(m.arrive);
                 if t > st.release_clock[link] {
                     st.release_clock[link] = t;
@@ -1074,6 +1169,7 @@ impl Endpoint {
                     let wait = policy.backoff_secs(self.rank, dst, tag, attempt);
                     self.shared.clocks.advance(self.rank, wait);
                     self.shared.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    obs::instant2(obs::SpanKind::Retry, "send.retry", u64::from(attempt));
                     attempt += 1;
                 }
                 Err(e) => return Err(e),
@@ -1099,6 +1195,7 @@ impl Endpoint {
         if self.nranks == 1 {
             return Ok(());
         }
+        let _span = obs::span(obs::SpanKind::Collective, "barrier");
         let timeout = self.recv_timeout();
         let deadline = Instant::now() + timeout;
         let mut st = self.shared.lock();
@@ -1202,16 +1299,17 @@ impl Drop for Endpoint {
         self.hb_clear(&mut st);
         // Release credit held by this rank's unconsumed stash and inbox
         // so surviving senders aren't starved by a dead receiver.
-        let drain: Vec<(usize, usize)> = self
+        let drain: Vec<(usize, usize, Vec<LinkKind>)> = self
             .pending
             .values()
             .flatten()
-            .map(|m| (m.src, m.charged))
-            .chain(st.inboxes[self.rank].iter().map(|m| (m.src, m.charged)))
+            .map(|m| (m.src, m.charged, m.hops.clone()))
+            .chain(st.inboxes[self.rank].iter().map(|m| (m.src, m.charged, m.hops.clone())))
             .collect();
-        for (src, charged) in drain {
+        for (src, charged, hops) in drain {
             let link = src * self.nranks + self.rank;
             st.in_flight[link] = st.in_flight[link].saturating_sub(charged);
+            track_kind_inflight(&mut st, &hops, false, charged);
         }
         st.inboxes[self.rank].clear();
         if died && st.abort.is_none() {
@@ -1684,5 +1782,37 @@ mod tests {
             other => panic!("expected abort-propagated RankDead, got {other:?}"),
         }
         e0.finish();
+    }
+
+    #[test]
+    fn fault_counter_snapshot_matches_the_registry() {
+        // The snapshot is the schema contract: exactly the registered
+        // fabric counter names, in registration order, values intact.
+        let c = FaultCounters { credit_stalls: 1, retries: 2, timeouts: 3, dropped: 4 };
+        let s = c.snapshot_with_recoveries(5);
+        assert_eq!(s.names(), obs::FABRIC_COUNTERS.to_vec());
+        assert_eq!(s.get("credit_stalls"), 1);
+        assert_eq!(s.get("retries"), 2);
+        assert_eq!(s.get("timeouts"), 3);
+        assert_eq!(s.get("dropped"), 4);
+        assert_eq!(s.get("recoveries"), 5);
+    }
+
+    #[test]
+    fn kind_inflight_totals_return_to_zero() {
+        let mut eps = mk(2);
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        e0.send_bytes(1, 7, &[9u8; 1024]).unwrap();
+        {
+            let st = e1.shared.lock();
+            assert!(st.kind_in_flight.iter().sum::<usize>() >= 1024);
+        }
+        assert_eq!(e1.recv_bytes(0, 7).unwrap().len(), 1024);
+        let st = e0.shared.lock();
+        assert_eq!(st.kind_in_flight, [0; 4], "consumption must return per-kind credit");
+        drop(st);
+        e0.finish();
+        e1.finish();
     }
 }

@@ -259,11 +259,7 @@ where
         match res {
             Ok((mut out, outcomes)) => {
                 out.record.wall_secs = wall0.elapsed().as_secs_f64();
-                out.record.credit_stalls = fault_totals.credit_stalls;
-                out.record.retries = fault_totals.retries;
-                out.record.timeouts = fault_totals.timeouts;
-                out.record.dropped = fault_totals.dropped;
-                out.record.recoveries = recoveries;
+                out.record.fabric = fault_totals.snapshot_with_recoveries(recoveries);
                 return Ok((out, outcomes));
             }
             Err(e) => {
@@ -272,6 +268,11 @@ where
                 }
                 attempt += 1;
                 recoveries += 1;
+                crate::obs::instant2(
+                    crate::obs::SpanKind::Recovery,
+                    "driver.restart",
+                    attempt,
+                );
             }
         }
     }
@@ -362,7 +363,15 @@ fn run_attempt<K: DeviceKey, F: Fn() -> Vec<Vec<K>>>(
             let t0 = Instant::now();
             while ended_ref.load(Ordering::SeqCst) < ranks {
                 if t0.elapsed() >= deadline {
-                    *detail.lock().unwrap() = ctl_w.diag_table();
+                    // Attach the live span stacks: what each traced
+                    // thread was inside when the watchdog fired.
+                    let mut d = ctl_w.diag_table();
+                    let stacks = crate::obs::live_stacks_table();
+                    if !stacks.is_empty() {
+                        d.push('\n');
+                        d.push_str(&stacks);
+                    }
+                    *detail.lock().unwrap() = d;
                     let blame = ctl_w.unfinished_ranks().first().copied().unwrap_or(0);
                     blamed.store(blame, Ordering::SeqCst);
                     fired.store(true, Ordering::SeqCst);
@@ -454,11 +463,7 @@ fn run_attempt<K: DeviceKey, F: Fn() -> Vec<Vec<K>>>(
             sim_final: phase_max(|o| o.sim_final),
             messages: msgs,
             wire_bytes: wire,
-            credit_stalls: 0,
-            retries: 0,
-            timeouts: 0,
-            dropped: 0,
-            recoveries: 0,
+            fabric: crate::obs::CounterSnapshot::zeroed(&crate::obs::FABRIC_COUNTERS),
             wall_secs,
         };
         Ok((

@@ -40,6 +40,7 @@ pub mod dtype;
 pub mod hybrid;
 pub mod metrics;
 pub mod mpisort;
+pub mod obs;
 pub mod prop;
 pub mod runtime;
 pub mod session;

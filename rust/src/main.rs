@@ -27,7 +27,21 @@ fn main() {
         print!("{USAGE}");
         return;
     }
-    if let Err(e) = run(&cli) {
+    // Arm tracing (DESIGN.md §18) for the whole command when requested.
+    // The guard flushes the trace on drop — including a panic unwind,
+    // so a crashed run still leaves a loadable partial trace.
+    let trace_guard = match cli.run_config() {
+        Ok(cfg) if cfg.obs.armed() => Some(accelkern::obs::TraceSession::start(
+            cfg.obs.trace_out.as_deref().map(std::path::Path::new),
+            cfg.obs.trace_summary,
+            cfg.obs.ring_capacity,
+        )),
+        _ => None, // config errors surface from run() with full context
+    };
+    let result = run(&cli);
+    // Flush before a possible process::exit — exit skips Drop.
+    drop(trace_guard);
+    if let Err(e) = result {
         eprintln!("akbench {}: error: {e:#}", cli.command);
         std::process::exit(1);
     }

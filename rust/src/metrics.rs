@@ -10,6 +10,7 @@ use std::fmt::Write as _;
 use std::io::Write as _;
 
 use crate::cfg::{RunConfig, Sorter, TransferMode};
+use crate::obs::{CounterSnapshot, FABRIC_COUNTERS};
 use crate::util::{fmt_bytes, fmt_duration, fmt_throughput};
 
 /// Outcome of one distributed sort run (simulated times — see
@@ -33,20 +34,42 @@ pub struct SortRunRecord {
     pub messages: u64,
     pub wire_bytes: u64,
     /// Fault/flow counters, summed over driver restart attempts
-    /// (DESIGN.md §16): sends that blocked on exhausted link credit,
-    /// sender-side retries, deadline/fault timeouts, messages eaten by
-    /// injected link faults, and in-process recoveries (restart
-    /// attempts that went on to finish the job).
-    pub credit_stalls: u64,
-    pub retries: u64,
-    pub timeouts: u64,
-    pub dropped: u64,
-    pub recoveries: u64,
+    /// (DESIGN.md §16, §18): the registered [`FABRIC_COUNTERS`] —
+    /// sends that blocked on exhausted link credit, sender-side
+    /// retries, deadline/fault timeouts, messages eaten by injected
+    /// link faults, and in-process recoveries (restart attempts that
+    /// went on to finish the job). Carried as a registry snapshot so
+    /// consumers iterate the names instead of enumerating fields.
+    pub fabric: CounterSnapshot,
     /// Wall-clock the host actually spent (for the §Perf log).
     pub wall_secs: f64,
 }
 
 impl SortRunRecord {
+    /// Sends that blocked on exhausted link credit.
+    pub fn credit_stalls(&self) -> u64 {
+        self.fabric.get("credit_stalls")
+    }
+
+    /// Sender-side retries after transient link faults.
+    pub fn retries(&self) -> u64 {
+        self.fabric.get("retries")
+    }
+
+    /// Deadline/fault timeouts.
+    pub fn timeouts(&self) -> u64 {
+        self.fabric.get("timeouts")
+    }
+
+    /// Messages eaten by injected link faults.
+    pub fn dropped(&self) -> u64 {
+        self.fabric.get("dropped")
+    }
+
+    /// In-process driver restarts that went on to finish the job.
+    pub fn recoveries(&self) -> u64 {
+        self.fabric.get("recoveries")
+    }
     /// Sorting throughput in the paper's unit (GB sorted / simulated s).
     pub fn throughput_bps(&self) -> f64 {
         if self.sim_total <= 0.0 {
@@ -70,17 +93,8 @@ impl SortRunRecord {
             self.messages,
             fmt_bytes(self.wire_bytes as f64),
         );
-        if self.credit_stalls > 0
-            || self.retries > 0
-            || self.timeouts > 0
-            || self.dropped > 0
-            || self.recoveries > 0
-        {
-            let _ = write!(
-                row,
-                " faults[stalls={} retries={} timeouts={} dropped={} recoveries={}]",
-                self.credit_stalls, self.retries, self.timeouts, self.dropped, self.recoveries,
-            );
+        if self.fabric.any_nonzero() {
+            let _ = write!(row, " faults[{}]", self.fabric.render_nonzero());
         }
         row
     }
@@ -196,11 +210,7 @@ mod tests {
             sim_final: 0.2,
             messages: 10,
             wire_bytes: 100,
-            credit_stalls: 0,
-            retries: 0,
-            timeouts: 0,
-            dropped: 0,
-            recoveries: 0,
+            fabric: CounterSnapshot::zeroed(&FABRIC_COUNTERS),
             wall_secs: 30.0,
         };
         assert_eq!(rec.throughput_bps(), 4e9);
@@ -208,8 +218,10 @@ mod tests {
         // Fault counters stay out of the row unless something fired.
         assert!(!rec.row().contains("faults["));
         let mut faulted = rec.clone();
-        faulted.retries = 3;
-        faulted.recoveries = 1;
+        faulted.fabric.set("retries", 3);
+        faulted.fabric.set("recoveries", 1);
+        assert_eq!(faulted.retries(), 3);
+        assert_eq!(faulted.recoveries(), 1);
         assert!(faulted.row().contains("retries=3"));
         assert!(faulted.row().contains("recoveries=1"));
     }

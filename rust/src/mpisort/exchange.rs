@@ -31,6 +31,7 @@ use std::time::{Duration, Instant};
 
 use crate::comm::{Endpoint, TrySend};
 use crate::dtype::SortKey;
+use crate::obs;
 use crate::session::AkError;
 use crate::stream::codec;
 use crate::stream::spill::DetachedRunWriter;
@@ -132,6 +133,8 @@ pub fn streamed_exchange<K: SortKey>(
                 }
                 markers_queued = true;
             } else {
+                let _span =
+                    obs::span1(obs::SpanKind::ExchangeChunk, "exchange.chunk", buf.len() as u64);
                 let cuts = partition_points(&buf, splitters_bits);
                 for (dst, b) in buckets(&buf, &cuts).into_iter().enumerate() {
                     if !b.is_empty() {

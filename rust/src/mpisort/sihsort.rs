@@ -27,6 +27,7 @@ use crate::cfg::FinalPhase;
 use crate::cluster::DeviceModel;
 use crate::comm::Endpoint;
 use crate::dtype::SortKey;
+use crate::obs;
 use crate::session::Session;
 use crate::comm::collectives::ReduceOp;
 use crate::stream::external_sort::merge_group_to_store;
@@ -145,6 +146,19 @@ pub struct RankStreamStats {
     pub exchange_spilled_bytes: u64,
     /// The engine-state budget the rank ran under.
     pub budget_bytes: usize,
+}
+
+impl RankStreamStats {
+    /// Registry form: the rank-local external sort's
+    /// [`crate::obs::STREAM_COUNTERS`] followed by the rank's own
+    /// spill/budget accounting.
+    pub fn snapshot(&self) -> obs::CounterSnapshot {
+        let mut s = self.local.snapshot();
+        s.push("local_run_bytes", self.local_run_bytes);
+        s.push("exchange_spilled_bytes", self.exchange_spilled_bytes);
+        s.push("budget_bytes", self.budget_bytes as u64);
+        s
+    }
 }
 
 /// Per-rank result: the globally-sorted shard + phase breakdown
@@ -363,6 +377,7 @@ fn sihsort_rank_streamed<K: DeviceKey>(
     let (data_res, secs) = {
         let xstore_ref = &mut xstore;
         ep.measured(move || -> anyhow::Result<Vec<K>> {
+            let _span = obs::span(obs::SpanKind::Pass, "sih.final-merge");
             // The rank count can exceed the budget's merge fan-in, and
             // every open cursor owns an io-granule refill buffer — so
             // pre-merge received runs in fan-in-sized groups (the same
@@ -678,6 +693,7 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
         let (res, secs) = {
             let store_ref = &mut store;
             ep.measured(move || -> anyhow::Result<(Vec<K>, SpillRun<K>)> {
+                let _span = obs::span(obs::SpanKind::Pass, "sih.final-merge");
                 // Fan-in-capped pre-merge, as in the non-ckpt rank. The
                 // intermediate merged runs stay unmanifested (keep =
                 // false): a crash sweeps them and phase 6 redoes from

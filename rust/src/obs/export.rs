@@ -1,0 +1,278 @@
+//! Trace exporters (DESIGN.md §18): Chrome/Perfetto trace-event JSON
+//! and the human `--trace-summary` phase table.
+//!
+//! The JSON follows the Chrome trace-event format that Perfetto loads
+//! directly: one `{"traceEvents": [...]}` object, `"B"`/`"E"` duration
+//! events per span (one track per traced thread, named via `"M"`
+//! thread-name metadata), `"i"` instant events for faults/retries/
+//! recoveries, and `"C"` counter events — one counter track per
+//! distinct counter name, which is how per-`LinkKind` in-flight bytes
+//! become link-utilisation timelines.
+//!
+//! The exporter is defensive about balance: a flush can catch spans
+//! still open (a stalled rank mid-phase), so unmatched `"B"` events
+//! get a synthesized `"E"` at the ring's last timestamp and unmatched
+//! `"E"` events are dropped — the emitted JSON is always well nested
+//! per track, which the schema test relies on.
+
+use super::tracer::{Event, EventKind, RingSnapshot};
+
+/// Serialise ring snapshots as Chrome trace-event JSON (one process,
+/// one track per ring).
+pub fn chrome_trace_json(rings: &[RingSnapshot]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    let mut push = |line: String, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        out.push_str(&line);
+        *first = false;
+    };
+    for r in rings {
+        push(
+            format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+                 \"args\":{{\"name\":{}}}}}",
+                r.tid,
+                json_str(&r.label)
+            ),
+            &mut first,
+        );
+        let mut depth: usize = 0;
+        let mut last_ts = 0u64;
+        for ev in &r.events {
+            last_ts = last_ts.max(ev.t_us);
+            match ev.kind {
+                EventKind::Begin(kind) => {
+                    depth += 1;
+                    push(
+                        format!(
+                            "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"B\",\"pid\":1,\
+                             \"tid\":{},\"ts\":{}{}}}",
+                            json_str(ev.name),
+                            kind.cat(),
+                            r.tid,
+                            ev.t_us,
+                            args_of(ev)
+                        ),
+                        &mut first,
+                    );
+                }
+                EventKind::End => {
+                    // An unmatched close (span opened in a previous
+                    // session) would corrupt nesting — drop it.
+                    if depth == 0 {
+                        continue;
+                    }
+                    depth -= 1;
+                    push(
+                        format!(
+                            "{{\"ph\":\"E\",\"pid\":1,\"tid\":{},\"ts\":{}}}",
+                            r.tid, ev.t_us
+                        ),
+                        &mut first,
+                    );
+                }
+                EventKind::Instant(kind) => push(
+                    format!(
+                        "{{\"name\":{},\"cat\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\
+                         \"pid\":1,\"tid\":{},\"ts\":{}{}}}",
+                        json_str(ev.name),
+                        kind.cat(),
+                        r.tid,
+                        ev.t_us,
+                        args_of(ev)
+                    ),
+                    &mut first,
+                ),
+                EventKind::Counter => push(
+                    format!(
+                        "{{\"name\":{},\"ph\":\"C\",\"pid\":1,\"tid\":{},\"ts\":{},\
+                         \"args\":{{\"value\":{}}}}}",
+                        json_str(ev.name),
+                        r.tid,
+                        ev.t_us,
+                        ev.arg.unwrap_or(0)
+                    ),
+                    &mut first,
+                ),
+            }
+        }
+        // Close whatever the flush caught mid-span.
+        for _ in 0..depth {
+            push(
+                format!("{{\"ph\":\"E\",\"pid\":1,\"tid\":{},\"ts\":{}}}", r.tid, last_ts),
+                &mut first,
+            );
+        }
+        if r.dropped > 0 {
+            push(
+                format!(
+                    "{{\"name\":\"ring_dropped_events\",\"cat\":\"meta\",\"ph\":\"i\",\
+                     \"s\":\"t\",\"pid\":1,\"tid\":{},\"ts\":{},\
+                     \"args\":{{\"value\":{}}}}}",
+                    r.tid, last_ts, r.dropped
+                ),
+                &mut first,
+            );
+        }
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+fn args_of(ev: &Event) -> String {
+    match ev.arg {
+        Some(v) => format!(",\"args\":{{\"value\":{v}}}"),
+        None => String::new(),
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// The `--trace-summary` table: per-track totals of every top-level
+/// span (phases first), with counts and inclusive milliseconds.
+pub fn summary_table(rings: &[RingSnapshot]) -> String {
+    let mut out = String::from("trace summary (inclusive ms of top-level spans per track)\n");
+    for r in rings {
+        let mut rows: Vec<(&'static str, u64, u64)> = Vec::new(); // name, count, total_us
+        let mut stack: Vec<(&'static str, u64)> = Vec::new();
+        let mut last_ts = 0u64;
+        for ev in &r.events {
+            last_ts = last_ts.max(ev.t_us);
+            match ev.kind {
+                EventKind::Begin(_) => stack.push((ev.name, ev.t_us)),
+                EventKind::End => {
+                    if let Some((name, t0)) = stack.pop() {
+                        if stack.is_empty() {
+                            note(&mut rows, name, ev.t_us.saturating_sub(t0));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Spans the flush caught still open count up to the last event.
+        while let Some((name, t0)) = stack.pop() {
+            if stack.is_empty() {
+                note(&mut rows, name, last_ts.saturating_sub(t0));
+            }
+        }
+        if rows.is_empty() {
+            continue;
+        }
+        out.push_str(&format!("  {}:\n", r.label));
+        for (name, count, total_us) in rows {
+            out.push_str(&format!(
+                "    {name:<24} x{count:<5} {:>10.3} ms\n",
+                total_us as f64 / 1e3
+            ));
+        }
+        if r.dropped > 0 {
+            out.push_str(&format!("    (ring dropped {} events)\n", r.dropped));
+        }
+    }
+    out
+}
+
+fn note(rows: &mut Vec<(&'static str, u64, u64)>, name: &'static str, dur_us: u64) {
+    match rows.iter_mut().find(|(n, _, _)| *n == name) {
+        Some((_, count, total)) => {
+            *count += 1;
+            *total += dur_us;
+        }
+        None => rows.push((name, 1, dur_us)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::tracer::SpanKind;
+    use crate::util::json::Json;
+
+    fn ev(t_us: u64, kind: EventKind, name: &'static str, arg: Option<u64>) -> Event {
+        Event { t_us, kind, name, arg }
+    }
+
+    fn ring(events: Vec<Event>) -> RingSnapshot {
+        RingSnapshot { tid: 7, label: "rank 0".into(), dropped: 0, events }
+    }
+
+    #[test]
+    fn balanced_spans_round_trip_through_the_parser() {
+        let r = ring(vec![
+            ev(0, EventKind::Begin(SpanKind::Phase), "local-sort", None),
+            ev(5, EventKind::Instant(SpanKind::Fault), "fault.drop", Some(3)),
+            ev(9, EventKind::Counter, "inflight.nvlink", Some(4096)),
+            ev(10, EventKind::End, "", None),
+        ]);
+        let json = chrome_trace_json(&[r]);
+        let j = Json::parse(&json).expect("valid JSON");
+        let evs = j.get("traceEvents").as_arr().expect("traceEvents array");
+        // thread_name metadata + B + i + C + E.
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].get("ph").as_str(), Some("M"));
+        assert_eq!(evs[1].get("ph").as_str(), Some("B"));
+        assert_eq!(evs[1].get("cat").as_str(), Some("phase"));
+        assert_eq!(evs[2].get("ph").as_str(), Some("i"));
+        assert_eq!(evs[2].get("args").get("value").as_usize(), Some(3));
+        assert_eq!(evs[3].get("ph").as_str(), Some("C"));
+        assert_eq!(evs[4].get("ph").as_str(), Some("E"));
+    }
+
+    #[test]
+    fn unbalanced_rings_are_repaired() {
+        // An unmatched E is dropped; an unmatched B gets a synthesized E.
+        let r = ring(vec![
+            ev(1, EventKind::End, "", None),
+            ev(2, EventKind::Begin(SpanKind::Pass), "merge", None),
+            ev(8, EventKind::Begin(SpanKind::SpillWrite), "spill.write", None),
+        ]);
+        let json = chrome_trace_json(&[r]);
+        let j = Json::parse(&json).expect("valid JSON");
+        let evs = j.get("traceEvents").as_arr().expect("array");
+        let begins = evs.iter().filter(|e| e.get("ph").as_str() == Some("B")).count();
+        let ends = evs.iter().filter(|e| e.get("ph").as_str() == Some("E")).count();
+        assert_eq!(begins, 2);
+        assert_eq!(ends, 2, "every B must have a matching E after repair");
+    }
+
+    #[test]
+    fn summary_counts_top_level_spans_only() {
+        let r = ring(vec![
+            ev(0, EventKind::Begin(SpanKind::Phase), "exchange", None),
+            ev(1, EventKind::Begin(SpanKind::ExchangeChunk), "exchange.chunk", None),
+            ev(4, EventKind::End, "", None),
+            ev(10, EventKind::End, "", None),
+            ev(20, EventKind::Begin(SpanKind::Phase), "final", None),
+        ]);
+        let table = summary_table(&[r]);
+        assert!(table.contains("rank 0"));
+        assert!(table.contains("exchange"));
+        // The nested chunk span is inclusive in "exchange", not a row of
+        // its own; the still-open "final" span counts to the last event.
+        assert!(!table.contains("exchange.chunk"));
+        assert!(table.contains("final"));
+    }
+
+    #[test]
+    fn strings_escape() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+    }
+}

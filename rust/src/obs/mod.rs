@@ -1,0 +1,40 @@
+//! Unified tracing & metrics (DESIGN.md §18).
+//!
+//! The observability substrate every layer records into: typed spans
+//! and instant events land in lock-free per-thread ring buffers
+//! ([`tracer`]), scattered counter families unify into one named
+//! snapshot type ([`registry`]), and a finished trace exports as
+//! Chrome/Perfetto trace-event JSON or a human phase table
+//! ([`export`]).
+//!
+//! Design rules:
+//!
+//! * **Near-zero cost when off.** Tracing is armed process-wide by a
+//!   [`TraceSession`] (CLI `--trace-out` / `[obs]` config). Every
+//!   recording entry point checks one relaxed [`AtomicBool`] first and
+//!   returns an inert guard without allocating — the no-allocation
+//!   property is enforced by `tests/obs_noalloc.rs`.
+//! * **Never blocks the traced thread.** Each thread owns a
+//!   fixed-capacity single-writer ring; a full ring drops the newest
+//!   event and counts it, it never wraps or waits.
+//! * **Panic-safe.** Spans are RAII drop guards, so unwinding balances
+//!   every open with a close; the [`TraceSession`] flushes whatever the
+//!   rings hold on drop, including mid-panic.
+//! * **Diagnostics-ready.** Each ring mirrors its live span stack
+//!   behind a mutex so the driver watchdog and deadlock reporter can
+//!   read *other* threads' current position ([`live_stacks_table`]).
+//!
+//! [`AtomicBool`]: std::sync::atomic::AtomicBool
+
+pub mod export;
+pub mod registry;
+pub mod tracer;
+
+pub use export::{chrome_trace_json, summary_table};
+pub use registry::{
+    Counter, CounterSnapshot, FABRIC_COUNTERS, SESSION_COUNTERS, STREAM_COUNTERS,
+};
+pub use tracer::{
+    counter, enabled, instant, instant2, live_stacks, live_stacks_table, phase, phase_end,
+    set_thread_label, span, span1, SpanGuard, SpanKind, TraceSession,
+};

@@ -1,0 +1,221 @@
+//! The unified counter registry (DESIGN.md §18).
+//!
+//! Every layer used to carry its own counter struct with its own field
+//! names — `SessionMetrics` atomics, `ExternalSortStats`, the fabric's
+//! `FaultCounters` — and every consumer (run records, both bench JSON
+//! schemas) hand-copied the fields it knew about. Adding a counter
+//! silently left stale consumers behind. A [`CounterSnapshot`] is the
+//! one interchange type instead: an *ordered* list of named, optionally
+//! labelled values that consumers iterate rather than enumerate, so a
+//! new counter flows to every record and JSON row by construction.
+//!
+//! The registered name lists ([`FABRIC_COUNTERS`], [`SESSION_COUNTERS`],
+//! [`STREAM_COUNTERS`]) are the schema contract: the producing module's
+//! `snapshot()` asserts against its list in tests, and the bench tests
+//! assert the emitted JSON rows carry exactly the registered names —
+//! no silent additions or omissions in either direction.
+
+/// Fabric flow/fault counter names, in emission order. `recoveries`
+/// (in-process restarts) is accounted by the driver, the rest by
+/// [`crate::comm::CommStats`].
+pub const FABRIC_COUNTERS: [&str; 5] =
+    ["credit_stalls", "retries", "timeouts", "dropped", "recoveries"];
+
+/// [`crate::session::SessionMetrics`] counter names, in emission order.
+pub const SESSION_COUNTERS: [&str; 5] =
+    ["calls", "elems", "scratch_hits", "scratch_misses", "device_fallbacks"];
+
+/// [`crate::stream::ExternalSortStats`] counter names, in emission
+/// order (shape counters of one external-sort run).
+pub const STREAM_COUNTERS: [&str; 7] = [
+    "elems",
+    "runs",
+    "merge_passes",
+    "spilled_bytes",
+    "fan_in",
+    "run_chunk_elems",
+    "resumed_runs",
+];
+
+/// One named counter value; `label` distinguishes instances of the same
+/// name (a link, a rank, a phase).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Counter {
+    /// Registered counter name (one of the `*_COUNTERS` lists).
+    pub name: &'static str,
+    /// Optional instance label (`"rank 3"`, `"nvlink"`); `None` for the
+    /// job-level total.
+    pub label: Option<String>,
+    /// The sampled value.
+    pub value: u64,
+}
+
+/// An ordered set of named counters — the snapshot every record and
+/// bench row carries instead of hand-copied fields.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    entries: Vec<Counter>,
+}
+
+impl CounterSnapshot {
+    /// Empty snapshot.
+    pub fn new() -> CounterSnapshot {
+        CounterSnapshot::default()
+    }
+
+    /// A snapshot carrying every name of `names` at zero — the shape a
+    /// consumer can rely on before any producer ran.
+    pub fn zeroed(names: &[&'static str]) -> CounterSnapshot {
+        CounterSnapshot {
+            entries: names.iter().map(|n| Counter { name: n, label: None, value: 0 }).collect(),
+        }
+    }
+
+    /// Append an unlabelled counter.
+    pub fn push(&mut self, name: &'static str, value: u64) {
+        self.entries.push(Counter { name, label: None, value });
+    }
+
+    /// Append a labelled counter instance.
+    pub fn push_labelled(&mut self, name: &'static str, label: &str, value: u64) {
+        self.entries.push(Counter { name, label: Some(label.to_string()), value });
+    }
+
+    /// Sum of every entry named `name` (0 when absent).
+    pub fn get(&self, name: &str) -> u64 {
+        self.entries.iter().filter(|c| c.name == name).map(|c| c.value).sum()
+    }
+
+    /// Set the unlabelled entry `name`, appending it if absent.
+    pub fn set(&mut self, name: &'static str, value: u64) {
+        match self.entries.iter_mut().find(|c| c.name == name && c.label.is_none()) {
+            Some(c) => c.value = value,
+            None => self.push(name, value),
+        }
+    }
+
+    /// Merge `other` into `self`: matching `(name, label)` entries add,
+    /// unmatched entries append in `other`'s order.
+    pub fn merge(&mut self, other: &CounterSnapshot) {
+        for c in &other.entries {
+            match self.entries.iter_mut().find(|m| m.name == c.name && m.label == c.label) {
+                Some(m) => m.value = m.value.saturating_add(c.value),
+                None => self.entries.push(c.clone()),
+            }
+        }
+    }
+
+    /// Iterate the entries in emission order.
+    pub fn iter(&self) -> impl Iterator<Item = &Counter> {
+        self.entries.iter()
+    }
+
+    /// The distinct names present, in first-appearance order.
+    pub fn names(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::new();
+        for c in &self.entries {
+            if !out.contains(&c.name) {
+                out.push(c.name);
+            }
+        }
+        out
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no entry is present.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True when any value is non-zero.
+    pub fn any_nonzero(&self) -> bool {
+        self.entries.iter().any(|c| c.value > 0)
+    }
+
+    /// JSON object fields (`"name": value` or `"name[label]": value`,
+    /// comma-separated, no braces) — how bench rows emit the snapshot
+    /// so every registered counter reaches the schema by iteration.
+    pub fn json_fields(&self) -> String {
+        let mut out = String::new();
+        for (i, c) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            match &c.label {
+                Some(l) => out.push_str(&format!("\"{}[{}]\": {}", c.name, l, c.value)),
+                None => out.push_str(&format!("\"{}\": {}", c.name, c.value)),
+            }
+        }
+        out
+    }
+
+    /// Compact human rendering of the non-zero entries
+    /// (`a=1 b=2`; empty string when all zero).
+    pub fn render_nonzero(&self) -> String {
+        let mut out = String::new();
+        for c in &self.entries {
+            if c.value == 0 {
+                continue;
+            }
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            match &c.label {
+                Some(l) => out.push_str(&format!("{}[{}]={}", c.name, l, c.value)),
+                None => out.push_str(&format!("{}={}", c.name, c.value)),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeroed_covers_all_names_in_order() {
+        let s = CounterSnapshot::zeroed(&FABRIC_COUNTERS);
+        assert_eq!(s.names(), FABRIC_COUNTERS.to_vec());
+        assert!(!s.any_nonzero());
+        assert_eq!(s.get("retries"), 0);
+        assert_eq!(s.get("no-such"), 0);
+    }
+
+    #[test]
+    fn merge_adds_matching_and_appends_new() {
+        let mut a = CounterSnapshot::zeroed(&["x", "y"]);
+        a.set("x", 2);
+        let mut b = CounterSnapshot::new();
+        b.push("x", 3);
+        b.push_labelled("z", "nvlink", 7);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 5);
+        assert_eq!(a.get("y"), 0);
+        assert_eq!(a.get("z"), 7);
+        assert_eq!(a.names(), vec!["x", "y", "z"]);
+    }
+
+    #[test]
+    fn labelled_entries_sum_under_get() {
+        let mut s = CounterSnapshot::new();
+        s.push_labelled("bytes", "nvlink", 10);
+        s.push_labelled("bytes", "pcie", 5);
+        assert_eq!(s.get("bytes"), 15);
+        assert_eq!(s.names(), vec!["bytes"]);
+    }
+
+    #[test]
+    fn json_fields_and_render() {
+        let mut s = CounterSnapshot::zeroed(&["a", "b"]);
+        s.set("b", 4);
+        s.push_labelled("c", "ib", 1);
+        assert_eq!(s.json_fields(), "\"a\": 0, \"b\": 4, \"c[ib]\": 1");
+        assert_eq!(s.render_nonzero(), "b=4 c[ib]=1");
+        assert_eq!(CounterSnapshot::new().render_nonzero(), "");
+    }
+}

@@ -1,0 +1,604 @@
+//! Lock-free per-thread trace rings and RAII spans (DESIGN.md §18).
+//!
+//! One [`ThreadRing`] per traced thread: a fixed-capacity slot array
+//! with a single writer (the owning thread) publishing a monotone
+//! event count. The ring **never wraps** — a full ring drops the
+//! newest event and counts the loss — so a reader that snapshots the
+//! published prefix observes immutable, fully-written slots without
+//! any locking on the hot path.
+//!
+//! Arming is process-wide ([`TraceSession`]): every recording entry
+//! point is gated on one relaxed atomic load and returns an inert
+//! guard when tracing is off, allocating nothing (enforced by
+//! `tests/obs_noalloc.rs`).
+
+use std::cell::{RefCell, UnsafeCell};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default per-thread ring capacity in events.
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;
+
+/// Typed category of a span or instant event. The exporter maps it to
+/// the Chrome trace `cat` field so Perfetto can colour/filter by layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// A `Session` API call (sort, reduce, ...).
+    SessionOp,
+    /// A coarse pipeline phase (SIHSort phase, external-sort phase).
+    Phase,
+    /// One pass/stage inside a phase (merge pass, exchange stream).
+    Pass,
+    /// Reading spilled runs back from the store.
+    SpillRead,
+    /// Writing a sorted run to the spill store.
+    SpillWrite,
+    /// One streamed-exchange chunk (partition + encode + enqueue).
+    ExchangeChunk,
+    /// An MPI-style collective (bcast, gather, alltoallv, barrier).
+    Collective,
+    /// A sender retry / credit stall (bounded-backoff events).
+    Retry,
+    /// Durable checkpoint work (manifest writes).
+    Checkpoint,
+    /// An in-process recovery attempt (driver restart).
+    Recovery,
+    /// An injected fault firing (`FaultPlan` drop/delay/kill/stall).
+    Fault,
+}
+
+impl SpanKind {
+    /// Chrome trace `cat` string.
+    pub fn cat(self) -> &'static str {
+        match self {
+            SpanKind::SessionOp => "session",
+            SpanKind::Phase => "phase",
+            SpanKind::Pass => "pass",
+            SpanKind::SpillRead => "spill-read",
+            SpanKind::SpillWrite => "spill-write",
+            SpanKind::ExchangeChunk => "exchange",
+            SpanKind::Collective => "collective",
+            SpanKind::Retry => "retry",
+            SpanKind::Checkpoint => "checkpoint",
+            SpanKind::Recovery => "recovery",
+            SpanKind::Fault => "fault",
+        }
+    }
+}
+
+/// What one ring slot records.
+#[derive(Clone, Copy, Debug)]
+pub enum EventKind {
+    /// Span open (matched by a later [`EventKind::End`] on the same
+    /// thread).
+    Begin(SpanKind),
+    /// Span close.
+    End,
+    /// A point event.
+    Instant(SpanKind),
+    /// A counter sample: `name` is the counter track, `arg` the value.
+    Counter,
+}
+
+/// One recorded event (fixed-size, `Copy` — ring slots are plain
+/// memory).
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Microseconds since the session epoch.
+    pub t_us: u64,
+    /// Event discriminator.
+    pub kind: EventKind,
+    /// Span/instant/counter name (empty for `End`).
+    pub name: &'static str,
+    /// Optional numeric payload (peer rank, bytes, attempt, value).
+    pub arg: Option<u64>,
+}
+
+const DUMMY_EVENT: Event = Event { t_us: 0, kind: EventKind::End, name: "", arg: None };
+
+/// One thread's trace ring plus its mirrored live span stack.
+pub(crate) struct ThreadRing {
+    tid: u64,
+    epoch: Instant,
+    label: Mutex<String>,
+    /// Published event count; slots `0..len` are immutable.
+    len: AtomicUsize,
+    dropped: AtomicU64,
+    slots: Box<[UnsafeCell<Event>]>,
+    /// Live span stack, readable cross-thread by diagnostics
+    /// ([`live_stacks`]): watchdog/deadlock reports show where each
+    /// blamed rank currently is.
+    stack: Mutex<Vec<&'static str>>,
+}
+
+// SAFETY: the only mutation of `slots` happens in `push`, which is
+// called exclusively by the ring's owning thread (the ring lives in
+// that thread's TLS and is never handed to another writer). The owner
+// writes slot `len` and then publishes with a Release store; readers
+// load `len` with Acquire and only read slots below it, which are
+// fully written and never written again (the ring does not wrap).
+// Every other field is an atomic or behind a Mutex.
+unsafe impl Send for ThreadRing {}
+// SAFETY: see the `Send` argument above — single writer, prefix-only
+// readers, Release/Acquire publication.
+unsafe impl Sync for ThreadRing {}
+
+impl ThreadRing {
+    fn new(tid: u64, epoch: Instant, capacity: usize, label: String) -> ThreadRing {
+        ThreadRing {
+            tid,
+            epoch,
+            label: Mutex::new(label),
+            len: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            slots: (0..capacity.max(16)).map(|_| UnsafeCell::new(DUMMY_EVENT)).collect(),
+            stack: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Owner-thread-only append; drops the newest event when full.
+    fn push(&self, kind: EventKind, name: &'static str, arg: Option<u64>) {
+        let n = self.len.load(Ordering::Relaxed);
+        if n >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let ev = Event {
+            t_us: self.epoch.elapsed().as_micros() as u64,
+            kind,
+            name,
+            arg,
+        };
+        // SAFETY: single-writer — only the owning thread calls `push`,
+        // and slot `n` is above the published prefix, so no reader
+        // touches it until the Release store below.
+        unsafe {
+            *self.slots[n].get() = ev;
+        }
+        self.len.store(n + 1, Ordering::Release);
+    }
+}
+
+/// Immutable copy of one ring, taken at flush time.
+pub struct RingSnapshot {
+    /// Stable per-thread track id.
+    pub tid: u64,
+    /// Track label (`"rank 3"`, `"main"`, ...).
+    pub label: String,
+    /// Events dropped because the ring filled up.
+    pub dropped: u64,
+    /// The published events, in record order.
+    pub events: Vec<Event>,
+}
+
+// ---- global session state ---------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+struct SessionState {
+    epoch: Instant,
+    capacity: usize,
+    rings: Vec<Arc<ThreadRing>>,
+}
+
+fn state() -> &'static Mutex<SessionState> {
+    static STATE: std::sync::OnceLock<Mutex<SessionState>> = std::sync::OnceLock::new();
+    STATE.get_or_init(|| {
+        Mutex::new(SessionState {
+            epoch: Instant::now(),
+            capacity: DEFAULT_RING_CAPACITY,
+            rings: Vec::new(),
+        })
+    })
+}
+
+struct TlsState {
+    generation: u64,
+    ring: Option<Arc<ThreadRing>>,
+    phase_open: bool,
+}
+
+thread_local! {
+    static TLS: RefCell<TlsState> =
+        const { RefCell::new(TlsState { generation: 0, ring: None, phase_open: false }) };
+}
+
+/// True while a [`TraceSession`] is armed. One relaxed atomic load —
+/// this is the entire cost of every `obs::` call when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Run `f` with this thread's (ring-carrying) TLS state for the
+/// current session, creating and registering the ring on first use.
+/// `f` is skipped entirely when the TLS slot is unreachable (thread
+/// teardown). Holds the single `RefCell` borrow for the whole call —
+/// callers must not re-enter the tracer from `f`.
+fn with_tls<R>(f: impl FnOnce(&mut TlsState) -> R) -> Option<R> {
+    TLS.try_with(|tls| {
+        let generation = GENERATION.load(Ordering::Relaxed);
+        let mut t = tls.borrow_mut();
+        if t.generation != generation || t.ring.is_none() {
+            let mut st = match state().lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            let ring = Arc::new(ThreadRing::new(
+                NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                st.epoch,
+                st.capacity,
+                format!("thread-{:?}", std::thread::current().id()),
+            ));
+            st.rings.push(Arc::clone(&ring));
+            t.generation = generation;
+            t.ring = Some(ring);
+            t.phase_open = false;
+        }
+        f(&mut t)
+    })
+    .ok()
+}
+
+fn lock_stack(ring: &ThreadRing) -> std::sync::MutexGuard<'_, Vec<&'static str>> {
+    match ring.stack.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// RAII span: records the close (and pops the live stack) on drop —
+/// including during a panic unwind, which is what keeps per-thread
+/// open/close nesting balanced no matter how a phase exits.
+#[must_use = "a span measures the scope holding the guard"]
+pub struct SpanGuard {
+    active: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        with_tls(|t| {
+            if let Some(ring) = &t.ring {
+                ring.push(EventKind::End, "", None);
+                lock_stack(ring).pop();
+            }
+        });
+    }
+}
+
+/// Open a span; the returned guard closes it on drop. Inert (no
+/// allocation, no TLS access) when tracing is off.
+#[inline]
+pub fn span(kind: SpanKind, name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { active: false };
+    }
+    span_slow(kind, name, None)
+}
+
+/// [`span`] with a numeric payload (bytes, peer rank, attempt).
+#[inline]
+pub fn span1(kind: SpanKind, name: &'static str, arg: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { active: false };
+    }
+    span_slow(kind, name, Some(arg))
+}
+
+#[cold]
+fn span_slow(kind: SpanKind, name: &'static str, arg: Option<u64>) -> SpanGuard {
+    let pushed = with_tls(|t| {
+        if let Some(ring) = &t.ring {
+            ring.push(EventKind::Begin(kind), name, arg);
+            lock_stack(ring).push(name);
+            true
+        } else {
+            false
+        }
+    })
+    .unwrap_or(false);
+    SpanGuard { active: pushed }
+}
+
+/// Record a point event. Inert when tracing is off.
+#[inline]
+pub fn instant(kind: SpanKind, name: &'static str) {
+    if enabled() {
+        instant_slow(kind, name, None);
+    }
+}
+
+/// [`instant`] with a numeric payload.
+#[inline]
+pub fn instant2(kind: SpanKind, name: &'static str, arg: u64) {
+    if enabled() {
+        instant_slow(kind, name, Some(arg));
+    }
+}
+
+#[cold]
+fn instant_slow(kind: SpanKind, name: &'static str, arg: Option<u64>) {
+    with_tls(|t| {
+        if let Some(ring) = &t.ring {
+            ring.push(EventKind::Instant(kind), name, arg);
+        }
+    });
+}
+
+/// Sample a counter track (`name`) at `value`. The exporter turns each
+/// distinct name into one Chrome counter track — per-`LinkKind`
+/// in-flight bytes are the flagship use. Inert when tracing is off.
+#[inline]
+pub fn counter(name: &'static str, value: u64) {
+    if enabled() {
+        counter_slow(name, value);
+    }
+}
+
+#[cold]
+fn counter_slow(name: &'static str, value: u64) {
+    with_tls(|t| {
+        if let Some(ring) = &t.ring {
+            ring.push(EventKind::Counter, name, Some(value));
+        }
+    });
+}
+
+/// Enter the named pipeline phase on this thread: closes the previous
+/// phase span (if any) and opens a new one. Driven by the fabric's
+/// `Endpoint::note_phase`, so every rank pipeline gets a contiguous
+/// phase track without threading guards through its control flow.
+#[inline]
+pub fn phase(name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    with_tls(|t| {
+        if let Some(ring) = &t.ring {
+            if t.phase_open {
+                ring.push(EventKind::End, "", None);
+                lock_stack(ring).pop();
+            }
+            ring.push(EventKind::Begin(SpanKind::Phase), name, None);
+            lock_stack(ring).push(name);
+            t.phase_open = true;
+        }
+    });
+}
+
+/// Close the current phase span, if one is open on this thread.
+#[inline]
+pub fn phase_end() {
+    if !enabled() {
+        return;
+    }
+    with_tls(|t| {
+        if !t.phase_open {
+            return;
+        }
+        if let Some(ring) = &t.ring {
+            ring.push(EventKind::End, "", None);
+            lock_stack(ring).pop();
+        }
+        t.phase_open = false;
+    });
+}
+
+/// Name this thread's track (`"rank 3"`). Inert when tracing is off.
+pub fn set_thread_label(label: &str) {
+    if !enabled() {
+        return;
+    }
+    with_tls(|t| {
+        if let Some(ring) = &t.ring {
+            let mut l = match ring.label.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            *l = label.to_string();
+        }
+    });
+}
+
+/// Every registered thread's `(label, live span stack)`, for watchdog
+/// and deadlock diagnostics. Empty when tracing is off (stack
+/// mirroring is part of the traced path).
+pub fn live_stacks() -> Vec<(String, Vec<&'static str>)> {
+    let st = match state().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    st.rings
+        .iter()
+        .map(|r| {
+            let label = match r.label.lock() {
+                Ok(g) => g.clone(),
+                Err(p) => p.into_inner().clone(),
+            };
+            (label, lock_stack(r).clone())
+        })
+        .collect()
+}
+
+/// Human rendering of [`live_stacks`] (one `label: a > b > c` line per
+/// thread with a non-empty stack); empty string when nothing is open.
+pub fn live_stacks_table() -> String {
+    let mut out = String::new();
+    for (label, stack) in live_stacks() {
+        if stack.is_empty() {
+            continue;
+        }
+        out.push_str(&format!("  {label}: {}\n", stack.join(" > ")));
+    }
+    out
+}
+
+/// Snapshot every ring of the current session (published prefixes
+/// only — safe while traced threads are still running).
+pub(crate) fn drain_snapshots() -> Vec<RingSnapshot> {
+    let st = match state().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    st.rings
+        .iter()
+        .map(|r| {
+            let n = r.len.load(Ordering::Acquire);
+            // SAFETY: slots below the Acquire-loaded `len` were fully
+            // written before the owner's Release store and are never
+            // written again (the ring does not wrap), so reading them
+            // from this thread is race-free.
+            let events = (0..n).map(|i| unsafe { *r.slots[i].get() }).collect();
+            let label = match r.label.lock() {
+                Ok(g) => g.clone(),
+                Err(p) => p.into_inner().clone(),
+            };
+            RingSnapshot { tid: r.tid, label, dropped: r.dropped.load(Ordering::Relaxed), events }
+        })
+        .collect()
+}
+
+// ---- the session guard ------------------------------------------------
+
+/// Arms process-wide tracing for its lifetime and flushes on drop.
+///
+/// Flush-on-drop runs during panic unwinds too, so a crashed traced
+/// run still leaves a loadable (partial) trace behind. A `trace_out`
+/// path that points inside a [`crate::stream::TempDirGuard`] spill
+/// tree is remapped to the guard's parent — the guard deletes its
+/// whole tree on drop, and the trace must survive the cleanup.
+pub struct TraceSession {
+    out: Option<PathBuf>,
+    summary: bool,
+}
+
+impl TraceSession {
+    /// Arm tracing. `ring_capacity` is events per thread (clamped to a
+    /// sane floor). Any previous session's rings are discarded.
+    pub fn start(
+        trace_out: Option<&Path>,
+        summary: bool,
+        ring_capacity: usize,
+    ) -> TraceSession {
+        let out = trace_out.map(remap_outside_guard);
+        {
+            let mut st = match state().lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            st.epoch = Instant::now();
+            st.capacity = ring_capacity.max(1024);
+            st.rings.clear();
+        }
+        GENERATION.fetch_add(1, Ordering::Relaxed);
+        ENABLED.store(true, Ordering::Relaxed);
+        TraceSession { out, summary }
+    }
+
+    /// The (possibly remapped) trace output path.
+    pub fn out_path(&self) -> Option<&Path> {
+        self.out.as_deref()
+    }
+
+    /// Disarm, export, and (optionally) print the phase summary.
+    /// Idempotent; also runs from `Drop`.
+    pub fn flush(&mut self) {
+        if !ENABLED.swap(false, Ordering::Relaxed) {
+            return;
+        }
+        let rings = drain_snapshots();
+        if let Some(path) = self.out.take() {
+            if let Some(parent) = path.parent() {
+                if !parent.as_os_str().is_empty() {
+                    let _ = std::fs::create_dir_all(parent);
+                }
+            }
+            let json = super::export::chrome_trace_json(&rings);
+            match std::fs::write(&path, json) {
+                Ok(()) => eprintln!("trace: wrote {}", path.display()),
+                Err(e) => eprintln!("trace: cannot write {}: {e}", path.display()),
+            }
+        }
+        if self.summary {
+            print!("{}", super::export::summary_table(&rings));
+        }
+    }
+}
+
+impl Drop for TraceSession {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// Land a trace path outside any `TempDirGuard`-owned directory: if a
+/// path component carries the guarded spill prefix, the file moves to
+/// that component's parent under the same file name.
+fn remap_outside_guard(p: &Path) -> PathBuf {
+    let mut out = PathBuf::new();
+    for c in p.components() {
+        if let std::path::Component::Normal(os) = c {
+            if os.to_string_lossy().starts_with(crate::stream::spill::TEMP_DIR_PREFIX) {
+                out.push(p.file_name().unwrap_or(os));
+                return out;
+            }
+        }
+        out.push(c.as_os_str());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_newest_when_full_and_counts() {
+        let ring = ThreadRing::new(0, Instant::now(), 16, "t".into());
+        for i in 0..40 {
+            ring.push(EventKind::Instant(SpanKind::Fault), "x", Some(i));
+        }
+        let n = ring.len.load(Ordering::Acquire);
+        assert_eq!(n, 16);
+        assert_eq!(ring.dropped.load(Ordering::Relaxed), 24);
+        // The *oldest* events survive (drop-newest policy).
+        // SAFETY: reading below the published prefix, single-threaded.
+        let first = unsafe { *ring.slots[0].get() };
+        assert_eq!(first.arg, Some(0));
+    }
+
+    #[test]
+    fn disabled_paths_are_inert() {
+        // These must be callable with tracing off and do nothing; the
+        // no-allocation property is enforced by tests/obs_noalloc.rs.
+        if enabled() {
+            return; // another test armed a session concurrently
+        }
+        let g = span(SpanKind::Phase, "p");
+        assert!(!g.active);
+        drop(g);
+        instant(SpanKind::Fault, "f");
+        counter("c", 1);
+        phase("p");
+        phase_end();
+        set_thread_label("x");
+    }
+
+    #[test]
+    fn remap_lands_outside_guard_trees() {
+        let prefix = crate::stream::spill::TEMP_DIR_PREFIX;
+        let inside = PathBuf::from(format!("/tmp/scratch/{prefix}123-4/deep/trace.json"));
+        assert_eq!(remap_outside_guard(&inside), PathBuf::from("/tmp/scratch/trace.json"));
+        let outside = PathBuf::from("/tmp/scratch/trace.json");
+        assert_eq!(remap_outside_guard(&outside), outside);
+        let relative = PathBuf::from(format!("{prefix}9-9/trace.json"));
+        assert_eq!(remap_outside_guard(&relative), PathBuf::from("trace.json"));
+    }
+}

@@ -101,6 +101,19 @@ impl SessionMetrics {
     pub fn device_fallbacks(&self) -> u64 {
         self.device_fallbacks.load(Ordering::Relaxed)
     }
+
+    /// Registry form of these counters
+    /// ([`crate::obs::SESSION_COUNTERS`]), consumed by the bench
+    /// records and the `--trace-summary` tables.
+    pub fn snapshot(&self) -> crate::obs::CounterSnapshot {
+        let mut s = crate::obs::CounterSnapshot::new();
+        s.push("calls", self.calls());
+        s.push("elems", self.elems());
+        s.push("scratch_hits", self.scratch_hits());
+        s.push("scratch_misses", self.scratch_misses());
+        s.push("device_fallbacks", self.device_fallbacks());
+        s
+    }
 }
 
 /// The retained allocation of a cleared `Vec<T>`, type-erased down to
@@ -320,6 +333,8 @@ impl Session {
     /// assert!(f[3].is_nan());
     /// ```
     pub fn sort<K: DeviceKey>(&self, xs: &mut [K], launch: Option<&Launch>) -> AkResult<()> {
+        let _span =
+            crate::obs::span1(crate::obs::SpanKind::SessionOp, "session.sort", xs.len() as u64);
         let l = self.resolve(launch);
         self.state.metrics.record(xs.len());
         match &self.backend {
@@ -1043,6 +1058,17 @@ mod tests {
         c.sort(&mut xs, None).unwrap();
         assert_eq!(s.metrics().calls(), 1);
         assert_eq!(s.metrics().elems(), 3);
+    }
+
+    #[test]
+    fn metrics_snapshot_covers_the_session_registry() {
+        let s = Session::native();
+        let mut xs = vec![3i32, 1, 2];
+        s.sort(&mut xs, None).unwrap();
+        let snap = s.metrics().snapshot();
+        assert_eq!(snap.names(), crate::obs::SESSION_COUNTERS.to_vec());
+        assert_eq!(snap.get("calls"), 1);
+        assert_eq!(snap.get("elems"), 3);
     }
 
     #[test]

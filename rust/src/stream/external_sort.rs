@@ -20,6 +20,7 @@
 use crate::backend::DeviceKey;
 use crate::baselines::kmerge::KmergePull;
 use crate::dtype::SortKey;
+use crate::obs;
 use crate::session::{AkResult, Launch};
 use crate::stream::source::{ChunkSink, ChunkSource};
 use crate::stream::spill::{SpillRun, SpillStore};
@@ -51,6 +52,23 @@ pub struct ExternalSortStats {
     pub completed_noop: bool,
 }
 
+impl ExternalSortStats {
+    /// The registry form of these counters
+    /// ([`crate::obs::STREAM_COUNTERS`]; `completed_noop` is a flag,
+    /// not a counter, and stays a struct field).
+    pub fn snapshot(&self) -> obs::CounterSnapshot {
+        let mut s = obs::CounterSnapshot::new();
+        s.push("elems", self.elems);
+        s.push("runs", self.runs as u64);
+        s.push("merge_passes", self.merge_passes as u64);
+        s.push("spilled_bytes", self.spilled_bytes);
+        s.push("fan_in", self.fan_in as u64);
+        s.push("run_chunk_elems", self.run_chunk_elems as u64);
+        s.push("resumed_runs", self.resumed_runs as u64);
+        s
+    }
+}
+
 impl StreamCtx {
     /// Sort everything `src` yields into `sink` (ascending total order,
     /// NaN-safe — output is bitwise what `Session::sort` produces on the
@@ -70,6 +88,7 @@ impl StreamCtx {
         };
 
         // ---- phase 1: run generation ----------------------------------
+        let gen_span = obs::span(obs::SpanKind::Pass, "ext.run-gen");
         let mut buf: Vec<K> = Vec::new();
         let mut next: Vec<K> = Vec::new();
         if src.next_chunk(&mut buf, plan.run_chunk_elems)? == 0 {
@@ -98,10 +117,13 @@ impl StreamCtx {
             src.next_chunk(&mut next, plan.run_chunk_elems)?;
         }
         stats.runs = runs.len();
+        drop(gen_span);
 
         // ---- phase 2: intermediate merge passes -----------------------
         while runs.len() > plan.fan_in {
             stats.merge_passes += 1;
+            let _pass_span =
+                obs::span1(obs::SpanKind::Pass, "ext.merge-pass", runs.len() as u64);
             let mut merged: Vec<SpillRun<K>> = Vec::new();
             while !runs.is_empty() {
                 let take = plan.fan_in.min(runs.len());
@@ -121,6 +143,8 @@ impl StreamCtx {
         // `runs.len() >= 2` always holds here (single-chunk datasets took
         // the in-core path; a pass over > fan_in >= 2 runs yields >= 2).
         stats.merge_passes += 1;
+        let _final_span =
+            obs::span1(obs::SpanKind::Pass, "ext.final-merge", runs.len() as u64);
         let mut cursors = Vec::with_capacity(runs.len());
         for r in &runs {
             cursors.push(r.cursor(plan.io_chunk_elems)?);
@@ -199,6 +223,7 @@ impl StreamCtx {
 
         // ---- phase 1: (continue) run generation -----------------------
         if !m.gen_done {
+            let _gen_span = obs::span(obs::SpanKind::Pass, "ext.run-gen");
             // Merges are never recorded before `gen_done`, so every
             // manifested run is a generation run and their sum is the
             // consumed prefix to skip.
@@ -241,6 +266,8 @@ impl StreamCtx {
         while runs.len() > plan.fan_in {
             stats.merge_passes += 1;
             pass += 1;
+            let _pass_span =
+                obs::span1(obs::SpanKind::Pass, "ext.merge-pass", runs.len() as u64);
             let mut merged: Vec<SpillRun<K>> = Vec::new();
             let mut mseq = 0u64;
             while !runs.is_empty() {
@@ -268,6 +295,8 @@ impl StreamCtx {
         // fresh sink makes the replay idempotent.
         failpoint::check("ext.final")?;
         stats.merge_passes += 1;
+        let _final_span =
+            obs::span1(obs::SpanKind::Pass, "ext.final-merge", runs.len() as u64);
         {
             let mut cursors = Vec::with_capacity(runs.len());
             for r in &runs {
@@ -387,6 +416,25 @@ mod tests {
         assert_eq!(stats.merge_passes, 0);
         assert_eq!(stats.spilled_bytes, 0);
         assert_eq!(stats.elems, 800);
+    }
+
+    #[test]
+    fn stats_snapshot_covers_the_stream_registry() {
+        let stats = ExternalSortStats {
+            elems: 9,
+            runs: 3,
+            merge_passes: 2,
+            spilled_bytes: 1024,
+            fan_in: 4,
+            run_chunk_elems: 3,
+            resumed_runs: 1,
+            completed_noop: false,
+        };
+        let snap = stats.snapshot();
+        assert_eq!(snap.names(), crate::obs::STREAM_COUNTERS.to_vec());
+        assert_eq!(snap.get("elems"), 9);
+        assert_eq!(snap.get("spilled_bytes"), 1024);
+        assert_eq!(snap.get("resumed_runs"), 1);
     }
 
     #[test]

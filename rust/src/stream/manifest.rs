@@ -218,6 +218,11 @@ impl Manifest {
 /// `manifest.rename` fail point sits exactly in the crash window the
 /// protocol defends — after the temp write, before the rename.
 pub fn write_manifest(dir: &Path, m: &Manifest) -> anyhow::Result<()> {
+    let _span = crate::obs::span1(
+        crate::obs::SpanKind::Checkpoint,
+        "manifest.write",
+        m.runs.len() as u64,
+    );
     let tmp = dir.join(MANIFEST_TMP);
     let live = dir.join(MANIFEST_FILE);
     {

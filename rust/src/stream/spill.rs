@@ -57,13 +57,18 @@ pub struct TempDirGuard {
 /// Process-wide counter making sibling guard paths unique.
 static GUARD_SEQ: AtomicU64 = AtomicU64::new(0);
 
+/// Name prefix of every [`TempDirGuard::new`] directory. Shared with
+/// [`crate::obs`] so trace outputs requested under a spill dir can be
+/// remapped outside the guard's tree before `Drop` removes it.
+pub const TEMP_DIR_PREFIX: &str = "akstream-";
+
 impl TempDirGuard {
     /// Create `akstream-<pid>-<seq>` under `parent` (default: the OS
     /// temp dir).
     pub fn new(parent: Option<&Path>) -> anyhow::Result<TempDirGuard> {
         let base = parent.map(Path::to_path_buf).unwrap_or_else(std::env::temp_dir);
         let seq = GUARD_SEQ.fetch_add(1, Ordering::Relaxed);
-        let path = base.join(format!("akstream-{}-{seq}", std::process::id()));
+        let path = base.join(format!("{TEMP_DIR_PREFIX}{}-{seq}", std::process::id()));
         std::fs::create_dir_all(&path)
             .with_context(|| format!("creating spill dir {}", path.display()))?;
         Ok(TempDirGuard { path })
@@ -160,6 +165,11 @@ impl<K: SortKey> SpillRun<K> {
                 buf_elems: 0,
             }),
             SpillRun::File { path, elems, .. } => {
+                crate::obs::instant2(
+                    crate::obs::SpanKind::SpillRead,
+                    "spill.open-cursor",
+                    *elems as u64,
+                );
                 let file =
                     File::open(path).with_context(|| format!("opening run {}", path.display()))?;
                 let mut c = SpillCursor {
@@ -464,6 +474,11 @@ impl SpillStore {
 
     /// Write one fully-materialised sorted run (run-generation path).
     pub fn write_run<K: SortKey>(&mut self, sorted: &[K]) -> anyhow::Result<SpillRun<K>> {
+        let _span = crate::obs::span1(
+            crate::obs::SpanKind::SpillWrite,
+            "spill.write-run",
+            sorted.len() as u64,
+        );
         let mut w = self.run_writer::<K>()?;
         w.push_chunk(sorted)?;
         w.finish()

@@ -106,7 +106,7 @@ fn check_recovers<K: DeviceKey>(cfg: &RunConfig, shards: Vec<Vec<K>>, label: &st
     let got: Vec<K> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
     assert!(bits_eq(&got, &want), "{label}: recovered output diverges from single-node sort");
     assert!(
-        out.record.recoveries >= 1,
+        out.record.recoveries() >= 1,
         "{label}: the kill must force at least one in-process restart"
     );
 }
@@ -177,9 +177,9 @@ fn dropped_messages_are_retried_to_completion() {
     let (out, outcomes) = run_distributed_sort_data::<i64>(&cfg, None).unwrap();
     let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
     assert!(bits_eq(&got, &want));
-    assert_eq!(out.record.dropped, 3, "the drop rule eats exactly its budget");
-    assert!(out.record.retries >= 3, "every loss must surface as a sender retry");
-    assert_eq!(out.record.recoveries, 0, "transient faults must not need a restart");
+    assert_eq!(out.record.dropped(), 3, "the drop rule eats exactly its budget");
+    assert!(out.record.retries() >= 3, "every loss must surface as a sender retry");
+    assert_eq!(out.record.recoveries(), 0, "transient faults must not need a restart");
 }
 
 #[test]
@@ -195,7 +195,7 @@ fn flaky_link_survives_retries_and_restarts() {
     let (out, outcomes) = run_distributed_sort_data::<i64>(&cfg, None).unwrap();
     let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
     assert!(bits_eq(&got, &want));
-    assert!(out.record.dropped >= 2 && out.record.retries >= 2, "{:?}", out.record.row());
+    assert!(out.record.dropped() >= 2 && out.record.retries() >= 2, "{:?}", out.record.row());
 }
 
 #[test]
@@ -209,7 +209,7 @@ fn partition_heals_and_the_job_completes() {
     let (out, outcomes) = run_distributed_sort_data::<i64>(&cfg, None).unwrap();
     let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
     assert!(bits_eq(&got, &want));
-    assert!(out.record.dropped >= 1 && out.record.retries >= 1, "{:?}", out.record.row());
+    assert!(out.record.dropped() >= 1 && out.record.retries() >= 1, "{:?}", out.record.row());
 }
 
 // ---- watchdog: hung rank -> typed failure with diagnostics ---------------
@@ -256,7 +256,7 @@ fn watchdog_abort_is_recoverable_with_restart_budget() {
     let (out, outcomes) = run_distributed_sort_data::<i64>(&cfg, None).unwrap();
     let got: Vec<i64> = outcomes.iter().flat_map(|o| o.data.iter().copied()).collect();
     assert!(bits_eq(&got, &want));
-    assert_eq!(out.record.recoveries, 1);
+    assert_eq!(out.record.recoveries(), 1);
 }
 
 // ---- flow control: the credit cap is a hard bound ------------------------

@@ -1,0 +1,73 @@
+//! Disabled-tracer overhead guard (DESIGN.md §18).
+//!
+//! The obs layer's core promise is that an *unarmed* tracer costs one
+//! relaxed atomic load per call site — in particular, no heap
+//! allocation. This binary installs a counting global allocator and
+//! proves the whole disabled surface (spans, instants, counters,
+//! phases, labels) allocates nothing. It must stay its own test binary:
+//! no test here ever arms a [`accelkern::obs::TraceSession`], so the
+//! process-global enabled flag is reliably off.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use accelkern::obs::{self, SpanKind};
+
+thread_local! {
+    /// Allocations made by *this* thread — immune to harness threads.
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// The count must never itself allocate: a const-initialised Cell in
+// TLS is allocation-free, and `try_with` tolerates TLS teardown.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn my_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn disabled_tracer_surface_allocates_nothing() {
+    assert!(!obs::enabled(), "no TraceSession may be armed in this binary");
+
+    // Sanity: the counter actually observes this thread's allocations.
+    let before = my_allocs();
+    let probe = std::hint::black_box(vec![7u8; 64]);
+    assert!(my_allocs() > before, "the counting allocator is not installed");
+    drop(probe);
+
+    let before = my_allocs();
+    for i in 0..10_000u64 {
+        let g = obs::span(SpanKind::Pass, "off.pass");
+        drop(g);
+        let g = obs::span1(SpanKind::ExchangeChunk, "off.chunk", i);
+        drop(g);
+        obs::instant(SpanKind::Fault, "off.fault");
+        obs::instant2(SpanKind::Retry, "off.retry", i);
+        obs::counter("off.counter", i);
+        obs::phase("off.phase");
+        obs::phase_end();
+        obs::set_thread_label("off-thread");
+    }
+    let after = my_allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "the disabled tracer allocated {} time(s) over 10k call rounds",
+        after - before
+    );
+}

@@ -1,0 +1,284 @@
+//! End-to-end observability suite (DESIGN.md §18).
+//!
+//! The contract under test: arming a [`TraceSession`] around a faulted
+//! multi-rank sort yields a Chrome/Perfetto-loadable timeline — one
+//! named track per rank with well-nested phase spans, instant markers
+//! for every injected fault and recovery attempt, and per-link
+//! in-flight counter tracks — and that property survives panics
+//! (spans are RAII, the session flushes partial rings on drop) and
+//! spill-dir cleanup (a trace path inside a `TempDirGuard` tree is
+//! remapped outside before the guard deletes the tree).
+//!
+//! Tracing is armed process-wide, so every test here serialises on
+//! [`SESSION_LOCK`] before starting a session.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use accelkern::cfg::{RunConfig, Sorter};
+use accelkern::coordinator::driver::run_distributed_sort_data;
+use accelkern::dtype::ElemType;
+use accelkern::obs::{self, SpanKind, TraceSession};
+use accelkern::stream::TempDirGuard;
+use accelkern::util::json::Json;
+use accelkern::util::Prng;
+
+static SESSION_LOCK: Mutex<()> = Mutex::new(());
+
+fn session_lock() -> MutexGuard<'static, ()> {
+    match SESSION_LOCK.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// A unique trace path in the OS temp dir (outside any spill guard).
+fn trace_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("akobs-{tag}-{}.json", std::process::id()))
+}
+
+fn read_events(path: &std::path::Path) -> Vec<Json> {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("trace file {} unreadable: {e}", path.display()));
+    let doc = Json::parse(&text).expect("trace file is valid JSON");
+    doc.get("traceEvents").as_arr().expect("traceEvents array").to_vec()
+}
+
+/// Per-track nesting check: scanning each tid's events in file order,
+/// the B/E depth never dips negative and ends at zero.
+fn assert_balanced(events: &[Json]) {
+    let mut depth: std::collections::BTreeMap<usize, i64> = Default::default();
+    for e in events {
+        let tid = e.get("tid").as_usize().unwrap_or(0);
+        match e.get("ph").as_str() {
+            Some("B") => *depth.entry(tid).or_insert(0) += 1,
+            Some("E") => {
+                let d = depth.entry(tid).or_insert(0);
+                *d -= 1;
+                assert!(*d >= 0, "track {tid}: E without a matching B");
+            }
+            _ => {}
+        }
+    }
+    for (tid, d) in depth {
+        assert_eq!(d, 0, "track {tid}: {d} span(s) left open after export");
+    }
+}
+
+fn names_of<'a>(events: &'a [Json], ph: &str, cat: Option<&str>) -> Vec<&'a str> {
+    events
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some(ph))
+        .filter(|e| cat.is_none() || e.get("cat").as_str() == cat)
+        .filter_map(|e| e.get("name").as_str())
+        .collect()
+}
+
+// ---- the flagship run: faulted 4-rank cluster-stream sort, traced --------
+
+#[test]
+fn faulted_four_rank_run_emits_a_loadable_perfetto_timeline() {
+    let _g = session_lock();
+    let ckpt = TempDirGuard::new(None).unwrap();
+    let out = trace_path("cluster");
+
+    // 4 ranks on the external (out-of-core) rank-local sorter with a
+    // budget an eighth of the shard, checkpointed; the fault plan drops
+    // two deliveries on link 0->1 and kills rank 1 mid-exchange, so a
+    // successful run must have restarted in-process at least once.
+    let mut cfg = RunConfig::default();
+    cfg.ranks = 4;
+    cfg.elems_per_rank = 4000;
+    cfg.dtype = ElemType::I64;
+    cfg.sorter = Sorter::External;
+    cfg.host_threads = 2;
+    cfg.stream.budget_bytes = Some(4000 * cfg.dtype.size_bytes() / 8);
+    cfg.stream.checkpoint_dir = Some(ckpt.path().to_string_lossy().into_owned());
+    cfg.comm.recv_timeout_secs = 30.0;
+    cfg.comm.send_timeout_secs = 30.0;
+    cfg.comm.retry_attempts = 10;
+    cfg.comm.max_restarts = 2;
+    cfg.comm.faults = Some("drop:0:1:2, kill:1:2:exchange".into());
+
+    let mut session = TraceSession::start(Some(&out), false, 1 << 16);
+    let (run, _outcomes) =
+        run_distributed_sort_data::<i64>(&cfg, None).expect("faulted job recovers");
+    session.flush();
+    assert!(run.record.recoveries() >= 1, "the kill must force a restart");
+    assert!(run.record.dropped() >= 2, "the drop rule must have fired: {}", run.record.row());
+
+    let events = read_events(&out);
+    assert!(events.len() > 20, "suspiciously sparse trace: {} events", events.len());
+    assert_balanced(&events);
+
+    // One named track per rank (thread_name metadata).
+    let labels: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("M"))
+        .filter_map(|e| e.get("args").get("name").as_str())
+        .collect();
+    for rank in 0..4 {
+        let want = format!("rank {rank}");
+        assert!(labels.contains(&want.as_str()), "no track labelled `{want}`: {labels:?}");
+    }
+
+    // Per-rank phase spans from the fabric's note_phase stream.
+    let phases = names_of(&events, "B", Some("phase"));
+    for phase in ["local-sort", "splitters", "exchange", "final"] {
+        assert!(phases.contains(&phase), "missing phase span `{phase}`: {phases:?}");
+    }
+    // The out-of-core sorter's pass spans and checkpoint writes.
+    assert!(
+        names_of(&events, "B", Some("pass")).iter().any(|n| n.starts_with("ext.")),
+        "no external-sort pass spans"
+    );
+    assert!(
+        names_of(&events, "B", Some("checkpoint")).contains(&"manifest.write"),
+        "no manifest checkpoint spans"
+    );
+    assert!(!names_of(&events, "B", Some("collective")).is_empty(), "no collective spans");
+
+    // Fault instants: both injected rules must be on the timeline, and
+    // the driver's restart must leave a recovery marker.
+    let faults = names_of(&events, "i", Some("fault"));
+    assert!(faults.iter().filter(|n| **n == "fault.drop").count() >= 2, "{faults:?}");
+    assert!(faults.contains(&"fault.kill"), "{faults:?}");
+    assert!(
+        names_of(&events, "i", Some("recovery")).contains(&"driver.restart"),
+        "no driver.restart recovery instant"
+    );
+
+    // Per-link in-flight counter tracks, with sane names only.
+    let counters: std::collections::BTreeSet<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").as_str() == Some("C"))
+        .filter_map(|e| e.get("name").as_str())
+        .collect();
+    let inflight: Vec<&str> =
+        counters.iter().copied().filter(|n| n.starts_with("inflight.")).collect();
+    assert!(!inflight.is_empty(), "no in-flight counter tracks: {counters:?}");
+    for n in &inflight {
+        assert!(
+            ["inflight.nvlink", "inflight.ib", "inflight.pcie", "inflight.hostmem"].contains(n),
+            "unknown counter track {n}"
+        );
+    }
+
+    let _ = std::fs::remove_file(&out);
+}
+
+// ---- panic safety: partial rings still flush to a loadable file ----------
+
+#[test]
+fn panicking_traced_run_flushes_partial_rings_on_drop() {
+    let _g = session_lock();
+    let out = trace_path("panic");
+
+    let session = TraceSession::start(Some(&out), false, 4096);
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {})); // keep the injected panics quiet
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        let _outer = obs::span(SpanKind::Phase, "doomed-phase");
+        let _inner = obs::span(SpanKind::Pass, "doomed-pass");
+        obs::instant(SpanKind::Fault, "fault.injected");
+        panic!("injected mid-span");
+    }));
+    std::panic::set_hook(hook);
+    assert!(r.is_err());
+    // Flush-on-drop is the property under test: no explicit flush call.
+    drop(session);
+
+    let events = read_events(&out);
+    assert_balanced(&events);
+    let spans = names_of(&events, "B", None);
+    assert!(spans.contains(&"doomed-phase") && spans.contains(&"doomed-pass"), "{spans:?}");
+    assert!(names_of(&events, "i", Some("fault")).contains(&"fault.injected"));
+    let _ = std::fs::remove_file(&out);
+}
+
+// ---- property: open/close balance under random nesting + panics ----------
+
+/// Randomly nested spans, each frame panicking with small probability;
+/// depth and fan-out are driven by the seeded [`Prng`].
+fn random_nest(rng: &mut Prng, depth: usize) {
+    const NAMES: [&str; 4] = ["prop.a", "prop.b", "prop.c", "prop.d"];
+    let _g = obs::span(SpanKind::Pass, NAMES[(rng.uniform_f64() * 4.0) as usize % 4]);
+    if rng.uniform_f64() < 0.08 {
+        panic!("injected");
+    }
+    if depth < 6 {
+        let kids = (rng.uniform_f64() * 3.0) as usize;
+        for _ in 0..kids {
+            random_nest(rng, depth + 1);
+        }
+    }
+}
+
+#[test]
+fn span_balance_survives_random_nesting_and_panics() {
+    let _g = session_lock();
+    let out = trace_path("prop");
+
+    let session = TraceSession::start(Some(&out), false, 1 << 16);
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut root = Prng::new(0x0B5);
+    let handles: Vec<_> = (0..3u64)
+        .map(|t| {
+            let mut rng = root.fork(t);
+            std::thread::spawn(move || {
+                for _ in 0..64 {
+                    let _ = catch_unwind(AssertUnwindSafe(|| random_nest(&mut rng, 0)));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    std::panic::set_hook(hook);
+    drop(session);
+
+    let events = read_events(&out);
+    assert_balanced(&events);
+    // The rings were large enough that nothing was silently dropped.
+    assert!(
+        !names_of(&events, "i", None).contains(&"ring_dropped_events"),
+        "a full ring dropped events — the balance check would be vacuous"
+    );
+    assert!(
+        names_of(&events, "B", None).iter().any(|n| n.starts_with("prop.")),
+        "the property run recorded no spans at all"
+    );
+    let _ = std::fs::remove_file(&out);
+}
+
+// ---- spill-dir safety: traces never land inside a guarded tree -----------
+
+#[test]
+fn trace_path_inside_a_spill_guard_is_remapped_outside() {
+    let _g = session_lock();
+    let parent = std::env::temp_dir().join(format!("akobs-remap-{}", std::process::id()));
+    std::fs::create_dir_all(&parent).unwrap();
+    let guard = TempDirGuard::new(Some(&parent)).unwrap();
+    let requested = guard.path().join("deep").join("trace.json");
+
+    let mut session = TraceSession::start(Some(&requested), false, 4096);
+    let landed = session.out_path().expect("an output path survives remapping").to_path_buf();
+    assert!(
+        !landed.starts_with(guard.path()),
+        "trace {} still inside the doomed guard tree {}",
+        landed.display(),
+        guard.path().display()
+    );
+    assert_eq!(landed, parent.join("trace.json"));
+
+    obs::instant(SpanKind::Fault, "fault.survivor");
+    session.flush();
+    drop(guard); // deletes the whole spill tree
+    let events = read_events(&landed);
+    assert!(names_of(&events, "i", Some("fault")).contains(&"fault.survivor"));
+    drop(session);
+    let _ = std::fs::remove_dir_all(&parent);
+}

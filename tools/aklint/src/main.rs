@@ -7,10 +7,11 @@
 //! ```
 //!
 //! Scans every `.rs` file under `rust/src` with a comment/string-aware
-//! lexical pass ([`lex`]) and applies the five rules in [`rules`]
+//! lexical pass ([`lex`]) and applies the six rules in [`rules`]
 //! (unwrap/expect hygiene, SAFETY comments, the fail-point registry
-//! cross-check, collective-tag minting, checked arithmetic regions),
-//! plus the DESIGN.md §15 site-table drift check ([`design`]). Exits
+//! cross-check, collective-tag minting, checked arithmetic regions,
+//! span coverage of fail-point modules), plus the DESIGN.md §15
+//! site-table drift check ([`design`]). Exits
 //! non-zero when any finding survives; `--report` additionally writes
 //! the findings as JSON (the CI artifact).
 

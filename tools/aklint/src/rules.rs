@@ -1,6 +1,6 @@
 //! The aklint rule set (DESIGN.md §17).
 //!
-//! Five lexical rules over `rust/src`:
+//! Six lexical rules over `rust/src`:
 //!
 //! 1. **unwrap** — no `.unwrap()` / `.expect(` on production
 //!    `comm/` / `stream/` / `mpisort/` paths; `// aklint: allow(unwrap)`
@@ -20,6 +20,11 @@
 //! 5. **checked-arith** — inside `// aklint: begin(checked-arith)`
 //!    regions (budget/offset derivations in `stream/`), bare binary
 //!    `+ - * / %` are findings; use `checked_*` / `saturating_*`.
+//! 6. **span** — any `stream/` / `mpisort/` module that carries
+//!    fail-point call sites is on a crash/fault-injected path, so it
+//!    must also carry tracing (`obs::span` / `obs::span1` /
+//!    `obs::phase`) in non-test code: a faulted run that leaves no
+//!    trace of where it was is undebuggable (DESIGN.md §18).
 
 use accelkern::util::failpoint::{SiteSuite, SITES};
 use std::collections::BTreeMap;
@@ -91,6 +96,7 @@ pub fn run_all(files: &[SourceFile], crash_resume: Option<&FileScan>) -> Vec<Fin
         rule_safety(f, &mut out);
         rule_tag(f, &mut out);
         rule_checked_arith(f, &mut out);
+        rule_span(f, &mut out);
     }
     rule_failpoint(files, crash_resume, &mut out);
     out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
@@ -396,6 +402,48 @@ fn rule_checked_arith(f: &SourceFile, out: &mut Vec<Finding>) {
     }
 }
 
+/// Markers that count as tracing instrumentation for rule 6. Substring
+/// matches so both `obs::span1(` and `crate::obs::span1(` qualify, and
+/// `obs::phase` covers `obs::phase(` / `obs::phase_end(`.
+const SPAN_MARKERS: [&str; 3] = ["obs::span(", "obs::span1(", "obs::phase"];
+
+/// Rule 6: fail-point-bearing stream/mpisort modules carry spans.
+///
+/// A module with `failpoint::check` sites is exactly the code a faulted
+/// or crash-resumed run exercises; requiring at least one `obs::` span
+/// or phase marker there keeps the Perfetto timeline able to say where
+/// such a run died (DESIGN.md §18).
+fn rule_span(f: &SourceFile, out: &mut Vec<Finding>) {
+    let scoped =
+        f.path.starts_with("rust/src/stream/") || f.path.starts_with("rust/src/mpisort/");
+    if !scoped {
+        return;
+    }
+    let mut first_check: Option<usize> = None;
+    let mut traced = false;
+    for (idx, line) in f.scan.code.iter().enumerate() {
+        if f.mask[idx] {
+            continue;
+        }
+        if first_check.is_none() && line.contains("failpoint::check(") {
+            first_check = Some(idx);
+        }
+        if SPAN_MARKERS.iter().any(|m| line.contains(m)) {
+            traced = true;
+        }
+    }
+    if let (Some(idx), false) = (first_check, traced) {
+        out.push(Finding::new(
+            "span",
+            &f.path,
+            idx + 1,
+            "module has failpoint::check sites but no obs::span/span1/phase call — \
+             fault-injected paths must show up on the trace timeline (DESIGN.md §18)"
+                .to_string(),
+        ));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -538,6 +586,57 @@ mod tests {
         let fabric = file("rust/src/comm/fabric.rs", "let t = (1 << 63) | seq;\n");
         let mut out = Vec::new();
         rule_tag(&fabric, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn span_rule_pairs_failpoints_with_tracing() {
+        // A fail-point module with no tracing marker is a finding.
+        let bare = file(
+            "rust/src/stream/x.rs",
+            "fn f() -> anyhow::Result<()> { failpoint::check(\"x.mid\")?; Ok(()) }\n",
+        );
+        let mut out = Vec::new();
+        rule_span(&bare, &mut out);
+        assert_eq!(rules_of(&out), ["span"]);
+        assert_eq!(out[0].line, 1);
+
+        // Any of the markers satisfies the rule, qualified paths too.
+        for marker in [
+            "let _s = obs::span(obs::SpanKind::Pass, \"x.pass\");",
+            "let _s = crate::obs::span1(crate::obs::SpanKind::Pass, \"x.pass\", n);",
+            "ep.note_phase_via(obs::phase(\"x\"));",
+        ] {
+            let src = format!(
+                "fn f() -> anyhow::Result<()> {{ {marker} failpoint::check(\"x.mid\")?; Ok(()) }}\n"
+            );
+            let traced = file("rust/src/mpisort/x.rs", &src);
+            let mut out = Vec::new();
+            rule_span(&traced, &mut out);
+            assert!(out.is_empty(), "marker `{marker}` should satisfy the rule");
+        }
+
+        // Markers inside #[cfg(test)] blocks do not count.
+        let test_only = file(
+            "rust/src/stream/x.rs",
+            "fn f() -> anyhow::Result<()> { failpoint::check(\"x.mid\")?; Ok(()) }\n\
+             #[cfg(test)]\nmod tests {\n fn t() { let _s = obs::span(k, \"t\"); }\n}\n",
+        );
+        let mut out = Vec::new();
+        rule_span(&test_only, &mut out);
+        assert_eq!(rules_of(&out), ["span"]);
+
+        // Out-of-scope dirs and span-free modules are untouched.
+        let comm = file(
+            "rust/src/comm/x.rs",
+            "fn f() -> anyhow::Result<()> { failpoint::check(\"x.mid\")?; Ok(()) }\n",
+        );
+        let mut out = Vec::new();
+        rule_span(&comm, &mut out);
+        assert!(out.is_empty());
+        let plain = file("rust/src/stream/x.rs", "fn f() {}\n");
+        let mut out = Vec::new();
+        rule_span(&plain, &mut out);
         assert!(out.is_empty());
     }
 
