@@ -1,6 +1,6 @@
 # Top-level convenience targets (see README.md).
 
-.PHONY: artifacts build test test-faults lint lint-fix sanitize sanitize-thread sanitize-address doc bench-smoke bench-sort bench-stream bench-cluster-stream trace-demo clean-artifacts
+.PHONY: artifacts build test test-faults lint lint-fix sanitize sanitize-thread sanitize-address doc bench-smoke bench-sort bench-stream bench-records bench-cluster-stream trace-demo clean-artifacts
 
 # AOT-lower the L1/L2 Pallas/JAX catalog to artifacts/ (requires jax).
 artifacts:
@@ -82,6 +82,14 @@ bench-sort: build
 # --quick for the full dtype grid and the 16x ratio.
 bench-stream: build
 	cargo run --release --bin akbench -- bench-stream --quick
+
+# Record-stream (dataset engine) sweep -> BENCH_records.json (DESIGN.md
+# §19): sort-by-key across payload widths, sortperm, group-reduce,
+# distinct and merge-join at 8x dataset:budget, each verified (key image
+# + payload bits) against an in-memory reference (divergence exits
+# non-zero). Drop --quick for the 16x ratio and full sampling.
+bench-records: build
+	cargo run --release --bin akbench -- bench-records --quick
 
 # Multi-node x out-of-core sweep -> BENCH_cluster_stream.json (DESIGN.md
 # §14): SIHSort with the external rank-local sorter, each configuration

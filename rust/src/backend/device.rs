@@ -18,7 +18,12 @@ use crate::dtype::SortKey;
 use crate::runtime::{lit_from_slice, lit_scalar, lit_to_vec, Registry};
 
 /// Per-dtype device capability + literal conversions.
-pub trait DeviceKey: SortKey {
+///
+/// Every device key is also its own degenerate streaming record
+/// (`StreamRecord<Key = Self>`, `PAYLOAD_BYTES = 0`), so the whole
+/// scalar surface flows through the record-generic spill/merge layers
+/// unchanged (DESIGN.md §19).
+pub trait DeviceKey: SortKey + crate::stream::StreamRecord<Key = Self> {
     /// Does an XLA artifact family exist for this dtype?
     const XLA: bool;
     /// Pack a slice into a rank-1 XLA literal.

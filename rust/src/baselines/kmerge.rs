@@ -154,9 +154,11 @@ fn loser_tree_merge<K: SortKey, U: MergeImage>(live: &[&[K]], out: &mut [K]) {
 /// `advance` consumes it and may refill an internal buffer (file-backed
 /// cursors in `crate::stream` do exactly that), which is why it is
 /// fallible: an I/O error surfaces at the merge call site instead of
-/// silently truncating the run.
-pub trait RunCursor<K: SortKey> {
-    /// The next unconsumed key, or `None` when the run is exhausted.
+/// silently truncating the run. Generic over whole stream records —
+/// a cursor hands back `(key, payload)` units; bare scalar keys are the
+/// degenerate zero-payload record.
+pub trait RunCursor<K: crate::stream::StreamRecord> {
+    /// The next unconsumed record, or `None` when the run is exhausted.
     fn head(&self) -> Option<K>;
     /// Consume the current head (no-op once exhausted).
     fn advance(&mut self) -> anyhow::Result<()>;
@@ -175,7 +177,7 @@ impl<'a, K> SliceCursor<'a, K> {
     }
 }
 
-impl<K: SortKey> RunCursor<K> for SliceCursor<'_, K> {
+impl<K: crate::stream::StreamRecord> RunCursor<K> for SliceCursor<'_, K> {
     fn head(&self) -> Option<K> {
         self.run.get(self.pos).copied()
     }
@@ -190,11 +192,15 @@ impl<K: SortKey> RunCursor<K> for SliceCursor<'_, K> {
 /// but pull-based — output is yielded in caller-sized chunks instead of
 /// filling one output slice, so a consumer (the out-of-core merge in
 /// `crate::stream`, a network writer) can drain it incrementally under a
-/// memory budget. Matches compare `(bit image, exhausted)` pairs, so a
-/// real key whose image is all-ones (`i64::MAX`, `i128::MAX`) still
-/// merges correctly — the same no-sentinel-in-band rule as the slice
-/// engine.
-pub struct KmergePull<K: SortKey, C: RunCursor<K>> {
+/// memory budget. Matches compare `(key image, exhausted, run index)`
+/// triples: a real key whose image is all-ones (`i64::MAX`, `i128::MAX`)
+/// still merges correctly (the same no-sentinel-in-band rule as the
+/// slice engine), and key ties break toward the lower run index, which
+/// makes the merge **stable** across runs — records from earlier runs
+/// drain first. Scalar merges are bit-identical with or without the
+/// tie-break (tied keys have equal images); record merges rely on it
+/// for the bitwise stable-sort equivalence (DESIGN.md §19).
+pub struct KmergePull<K: crate::stream::StreamRecord, C: RunCursor<K>> {
     cursors: Vec<C>,
     /// Internal nodes hold match losers (run ids); `winner` is the root.
     losers: Vec<usize>,
@@ -203,7 +209,7 @@ pub struct KmergePull<K: SortKey, C: RunCursor<K>> {
     _marker: std::marker::PhantomData<K>,
 }
 
-impl<K: SortKey, C: RunCursor<K>> KmergePull<K, C> {
+impl<K: crate::stream::StreamRecord, C: RunCursor<K>> KmergePull<K, C> {
     /// Build the tournament over `cursors` (each ascending-sorted).
     pub fn new(cursors: Vec<C>) -> Self {
         let k = cursors.len();
@@ -235,12 +241,13 @@ impl<K: SortKey, C: RunCursor<K>> KmergePull<K, C> {
         merge
     }
 
-    /// `(image, exhausted)` match key of a run id (padding ids and
-    /// exhausted cursors sort after every live key).
-    fn key_of(&self, run: usize) -> (u128, bool) {
+    /// `(image, exhausted, run)` match key of a run id (padding ids and
+    /// exhausted cursors sort after every live key; the trailing run
+    /// index breaks key ties toward earlier runs — merge stability).
+    fn key_of(&self, run: usize) -> (u128, bool, usize) {
         match self.cursors.get(run).and_then(|c| c.head()) {
-            Some(k) => (k.to_bits(), false),
-            None => (u128::MAX, true),
+            Some(k) => (k.key_bits(), false, run),
+            None => (u128::MAX, true, run),
         }
     }
 

@@ -8,6 +8,7 @@
 //! bytes for GB/s reporting.
 
 pub mod cluster_stream_bench;
+pub mod record_bench;
 pub mod runner;
 pub mod sort_bench;
 pub mod stream_bench;
@@ -15,6 +16,7 @@ pub mod stream_bench;
 pub use cluster_stream_bench::{
     run_cluster_stream_bench, ClusterStreamRecord, ClusterStreamReport,
 };
+pub use record_bench::{run_record_bench, RecordBenchRecord, RecordBenchReport};
 pub use runner::{benchmark, benchmark_with_setup, BenchOpts, BenchResult, Bencher};
 pub use sort_bench::{run_sort_bench, SortBenchRecord, SortBenchReport};
 pub use stream_bench::{run_stream_bench, StreamBenchRecord, StreamBenchReport};
@@ -45,11 +47,13 @@ pub(crate) fn launch_json(l: &crate::session::Launch) -> String {
 
 /// Bitwise-compare `got` against `want` at `samples` seeded positions
 /// plus both boundaries; errors on any mismatch. Returns positions
-/// checked. One helper shared by every streaming bench's correctness
-/// gate (`bench-stream`, `bench-cluster-stream`).
-pub(crate) fn verify_subsampled<K: crate::backend::DeviceKey>(
-    got: &[K],
-    want: &[K],
+/// checked. Generic over any record layout — scalar keys compare their
+/// key image, `(key, payload)` records compare key image AND payload
+/// bits — so it is the one correctness gate shared by every streaming
+/// bench (`bench-stream`, `bench-cluster-stream`, `bench-records`).
+pub(crate) fn verify_subsampled<R: crate::stream::StreamRecord>(
+    got: &[R],
+    want: &[R],
     samples: usize,
     seed: u64,
 ) -> anyhow::Result<usize> {
@@ -66,7 +70,8 @@ pub(crate) fn verify_subsampled<K: crate::backend::DeviceKey>(
     let mut checked = 0;
     let mut check = |i: usize| -> anyhow::Result<()> {
         anyhow::ensure!(
-            got[i].to_bits() == want[i].to_bits(),
+            got[i].key_bits() == want[i].key_bits()
+                && got[i].payload_raw() == want[i].payload_raw(),
             "streamed output diverges from the in-memory reference at index {i}: \
              {:?} vs {:?}",
             got[i],

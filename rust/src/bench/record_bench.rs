@@ -1,0 +1,597 @@
+//! `akbench bench-records` — the record-stream (dataset engine)
+//! throughput tracker.
+//!
+//! Runs every record workload of DESIGN.md §19 — sort-by-key across
+//! payload widths, sortperm, group-by reduce, distinct, merge-join —
+//! per memory-budget ratio, and emits `BENCH_records.json` so the
+//! dataset-engine perf trajectory is tracked commit to commit next to
+//! `BENCH_stream.json`. Every measured configuration doubles as a
+//! correctness gate: the streamed output must match the in-memory
+//! reference (key image AND payload bits) on a subsampled verification
+//! pass — any divergence is a hard error, which CI relies on.
+//!
+//! Workload legend (all through [`crate::stream::StreamCtx`]):
+//! * `sort-by-key/pN` — external stable sort of `(i64, N-byte payload)`
+//!   records, N ∈ {4, 8, 16}.
+//! * `sortperm`       — external argsort: `i64` keys in, `(key, u64
+//!   index)` records out.
+//! * `group-reduce`   — sorted-run group-by `Add` over `(i64, i64)`
+//!   records.
+//! * `distinct`       — run-merge dedup of `(i64, u64)` records.
+//! * `merge-join`     — merge-join of two pre-sorted record streams
+//!   (the only workload not built on the external sort: pure
+//!   streaming two-pointer).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::algorithms::ReduceKind;
+use crate::bench::{verify_subsampled, BenchOpts, Bencher};
+use crate::obs::{CounterSnapshot, STREAM_COUNTERS};
+use crate::session::{Launch, Session};
+use crate::stream::{
+    Payload, Record, SliceSource, SpillMedium, StreamBudget, StreamCtx, StreamRecord, VecSink,
+};
+use crate::util::Prng;
+
+/// Dataset-bytes : budget-bytes ratios measured per workload. The first
+/// entry is the acceptance-critical ≥ 8× out-of-core configuration.
+pub const FULL_RATIOS: [usize; 2] = [8, 16];
+/// `--quick` ratio grid.
+pub const QUICK_RATIOS: [usize; 1] = [8];
+
+/// Verification sample count per configuration.
+const VERIFY_SAMPLES: usize = 2048;
+
+/// One measured row of the records bench.
+#[derive(Clone, Debug)]
+pub struct RecordBenchRecord {
+    /// Workload name (see the module docs legend).
+    pub workload: String,
+    /// Payload bytes per record (the key is always 8-byte `i64`).
+    pub payload_bytes: usize,
+    /// Full record stride in bytes.
+    pub rec_bytes: usize,
+    /// Input records per iteration (per side for `merge-join`).
+    pub n: usize,
+    /// Engine memory budget in bytes.
+    pub budget_bytes: usize,
+    /// Dataset bytes / budget bytes.
+    pub ratio: usize,
+    /// Pipeline-shape counters of the verification pass (zeroed for
+    /// `merge-join`, which never spills).
+    pub stream: CounterSnapshot,
+    /// Output positions verified (key image + payload bits).
+    pub verified: usize,
+    /// Mean seconds per iteration.
+    pub secs_mean: f64,
+    /// Standard deviation of the per-iteration seconds.
+    pub secs_std: f64,
+    /// Throughput in bytes/second (input records × stride / mean secs).
+    pub bytes_per_sec: f64,
+    /// Recorded samples.
+    pub samples: usize,
+}
+
+/// The full bench outcome.
+#[derive(Clone, Debug, Default)]
+pub struct RecordBenchReport {
+    /// Input records per iteration.
+    pub n: usize,
+    /// Host threads the per-chunk engines ran with.
+    pub threads: usize,
+    /// Spill medium of the external sorts.
+    pub spill: &'static str,
+    /// Seed of the subsampled verification passes.
+    pub verify_seed: u64,
+    /// The launch knobs the per-chunk engines ran with.
+    pub launch: Launch,
+    /// All measured rows.
+    pub records: Vec<RecordBenchRecord>,
+}
+
+impl RecordBenchReport {
+    /// Find a record by workload name and ratio.
+    pub fn get(&self, workload: &str, ratio: usize) -> Option<&RecordBenchRecord> {
+        self.records.iter().find(|r| r.workload == workload && r.ratio == ratio)
+    }
+
+    /// Serialise as JSON (`BENCH_records.json`, schema version 1; rows
+    /// carry the registered [`STREAM_COUNTERS`] by iteration, like
+    /// `BENCH_stream.json` v2).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"version\": 1,\n");
+        s.push_str(&format!(
+            "  \"n\": {},\n  \"threads\": {},\n  \"spill\": \"{}\",\n  \"verify_seed\": {},\n",
+            self.n, self.threads, self.spill, self.verify_seed
+        ));
+        s.push_str(&format!("  \"launch\": {},\n", crate::bench::launch_json(&self.launch)));
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"workload\": \"{}\", \"payload_bytes\": {}, \"rec_bytes\": {}, \
+                 \"n\": {}, \"budget_bytes\": {}, \"ratio\": {}, {}, \"verified\": {}, \
+                 \"secs_mean\": {:.9}, \"secs_std\": {:.9}, \"gbps\": {:.6}, \
+                 \"samples\": {}}}{}\n",
+                r.workload,
+                r.payload_bytes,
+                r.rec_bytes,
+                r.n,
+                r.budget_bytes,
+                r.ratio,
+                r.stream.json_fields(),
+                r.verified,
+                r.secs_mean,
+                r.secs_std,
+                r.bytes_per_sec / 1e9,
+                r.samples,
+                if i + 1 == self.records.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+/// Deterministic record dataset: keys drawn from `[0, key_span)` (so
+/// duplicate density is `n / key_span`), payloads are the record's
+/// input position — which makes stability violations and payload
+/// corruption both visible to the bitwise verifier.
+fn gen_records<P: Payload>(seed: u64, n: usize, key_span: u64) -> Vec<Record<i64, P>> {
+    let mut rng = Prng::new(seed);
+    (0..n).map(|i| Record::new(rng.below(key_span) as i64, P::from_raw(i as u128))).collect()
+}
+
+struct Grid<'a> {
+    n: usize,
+    seed: u64,
+    session: &'a Session,
+    medium: SpillMedium,
+    spill_parent: &'a Option<PathBuf>,
+    ratio: usize,
+}
+
+impl Grid<'_> {
+    /// A streaming context whose budget is `1/ratio` of `dataset_bytes`.
+    fn ctx(&self, dataset_bytes: usize) -> (StreamCtx, usize) {
+        let budget_bytes = (dataset_bytes / self.ratio).max(1);
+        let mut ctx = self.session.stream(StreamBudget::bytes(budget_bytes));
+        ctx = match self.medium {
+            SpillMedium::Memory => ctx.in_memory_spill(),
+            SpillMedium::Disk => match self.spill_parent {
+                Some(p) => ctx.spill_parent(p.clone()),
+                None => ctx,
+            },
+        };
+        (ctx, budget_bytes)
+    }
+}
+
+/// Measure one workload: `verify` runs once (gate + pipeline counters),
+/// `timed` is the measured iteration.
+#[allow(clippy::too_many_arguments)]
+fn measure(
+    grid: &Grid<'_>,
+    bencher: &mut Bencher,
+    report: &mut RecordBenchReport,
+    workload: String,
+    payload_bytes: usize,
+    rec_bytes: usize,
+    budget_bytes: usize,
+    bytes: f64,
+    stream: CounterSnapshot,
+    verified: usize,
+    timed: impl FnMut(),
+) {
+    bencher.run(&workload, Some(bytes), timed);
+    let r = bencher.get(&workload).expect("bench result recorded");
+    report.records.push(RecordBenchRecord {
+        workload,
+        payload_bytes,
+        rec_bytes,
+        n: grid.n,
+        budget_bytes,
+        ratio: grid.ratio,
+        stream,
+        verified,
+        secs_mean: r.time.mean,
+        secs_std: r.time.std,
+        bytes_per_sec: r.throughput_bps().unwrap_or(0.0),
+        samples: r.time.n,
+    });
+}
+
+/// sort-by-key at one payload width: verify bitwise against the
+/// in-memory stable pair sort, then time the streamed sort.
+fn bench_sort_by_key<P: Payload>(
+    grid: &Grid<'_>,
+    bencher: &mut Bencher,
+    report: &mut RecordBenchReport,
+) -> anyhow::Result<()> {
+    type R<P> = Record<i64, P>;
+    let n = grid.n;
+    let data: Vec<R<P>> = gen_records(grid.seed, n, (n as u64 / 8).max(1));
+    let bytes = (n * R::<P>::REC_BYTES) as f64;
+    let (ctx, budget_bytes) = grid.ctx(n * R::<P>::REC_BYTES);
+
+    let mut want = data.clone();
+    R::<P>::sort_chunk(grid.session, &mut want, None)?;
+    let mut sink = VecSink::new();
+    let stats = ctx.stream_sort_by_key(&mut SliceSource::new(&data), &mut sink, None)?;
+    let verified = verify_subsampled(&sink.out, &want, VERIFY_SAMPLES, grid.seed ^ 0x5EED)?;
+    anyhow::ensure!(stats.runs > 1, "dataset must exceed one run ({} runs)", stats.runs);
+
+    measure(
+        grid,
+        bencher,
+        report,
+        format!("sort-by-key/p{}/x{}", P::BYTES, grid.ratio),
+        P::BYTES,
+        R::<P>::REC_BYTES,
+        budget_bytes,
+        bytes,
+        stats.snapshot(),
+        verified,
+        || {
+            let mut sink = VecSink::new();
+            ctx.stream_sort_by_key(&mut SliceSource::new(&data), &mut sink, None)
+                .expect("stream sort_by_key");
+        },
+    );
+    Ok(())
+}
+
+/// Run every workload at one budget ratio.
+fn bench_ratio(
+    grid: &Grid<'_>,
+    bencher: &mut Bencher,
+    report: &mut RecordBenchReport,
+) -> anyhow::Result<()> {
+    let n = grid.n;
+    let session = grid.session;
+    eprintln!("-- bench-records n={n} x{} threads={}", grid.ratio, report.threads);
+
+    // sort-by-key across payload widths.
+    bench_sort_by_key::<u32>(grid, bencher, report)?;
+    bench_sort_by_key::<u64>(grid, bencher, report)?;
+    bench_sort_by_key::<u128>(grid, bencher, report)?;
+
+    // sortperm: bare keys in, (key, index) records out.
+    {
+        type R = Record<i64, u64>;
+        let keys: Vec<i64> =
+            gen_records::<()>(grid.seed ^ 1, n, (n as u64 / 8).max(1)).iter().map(|r| r.key).collect();
+        let bytes = (n * R::REC_BYTES) as f64;
+        let (ctx, budget_bytes) = grid.ctx(n * R::REC_BYTES);
+        let perm = session.sortperm(&keys, None)?;
+        let want: Vec<R> =
+            perm.iter().map(|&i| Record::new(keys[i as usize], i as u64)).collect();
+        let mut sink = VecSink::new();
+        let stats = ctx.stream_sortperm(&mut SliceSource::new(&keys), &mut sink, None)?;
+        let verified = verify_subsampled(&sink.out, &want, VERIFY_SAMPLES, grid.seed ^ 0x5EED)?;
+        measure(
+            grid,
+            bencher,
+            report,
+            format!("sortperm/x{}", grid.ratio),
+            8,
+            R::REC_BYTES,
+            budget_bytes,
+            bytes,
+            stats.snapshot(),
+            verified,
+            || {
+                let mut sink = VecSink::new();
+                ctx.stream_sortperm(&mut SliceSource::new(&keys), &mut sink, None)
+                    .expect("stream sortperm");
+            },
+        );
+    }
+
+    // group-reduce: Add over (i64, i64) records (wrapping add is
+    // order-independent, so a HashMap fold is an exact reference).
+    {
+        type R = Record<i64, i64>;
+        let data: Vec<R> = gen_records::<u64>(grid.seed ^ 2, n, (n as u64 / 64).max(1))
+            .iter()
+            .map(|r| Record::new(r.key, r.val as i64))
+            .collect();
+        let bytes = (n * R::REC_BYTES) as f64;
+        let (ctx, budget_bytes) = grid.ctx(n * R::REC_BYTES);
+        let mut folded: HashMap<i64, i64> = HashMap::new();
+        for r in &data {
+            let e = folded.entry(r.key).or_insert(0);
+            *e = e.wrapping_add(r.val);
+        }
+        let mut want: Vec<R> = folded.iter().map(|(&k, &v)| Record::new(k, v)).collect();
+        want.sort_by_key(|r| r.key);
+        let mut sink = VecSink::new();
+        let stats = ctx.stream_group_reduce(
+            &mut SliceSource::new(&data),
+            ReduceKind::Add,
+            &mut sink,
+            None,
+        )?;
+        anyhow::ensure!(
+            stats.groups as usize == want.len(),
+            "group-reduce found {} groups, reference has {}",
+            stats.groups,
+            want.len()
+        );
+        let verified = verify_subsampled(&sink.out, &want, VERIFY_SAMPLES, grid.seed ^ 0x5EED)?;
+        measure(
+            grid,
+            bencher,
+            report,
+            format!("group-reduce/x{}", grid.ratio),
+            8,
+            R::REC_BYTES,
+            budget_bytes,
+            bytes,
+            stats.sort.snapshot(),
+            verified,
+            || {
+                let mut sink = VecSink::new();
+                ctx.stream_group_reduce(
+                    &mut SliceSource::new(&data),
+                    ReduceKind::Add,
+                    &mut sink,
+                    None,
+                )
+                .expect("stream group_reduce");
+            },
+        );
+    }
+
+    // distinct: first record per key survives.
+    {
+        type R = Record<i64, u64>;
+        let data: Vec<R> = gen_records(grid.seed ^ 3, n, (n as u64 / 16).max(1));
+        let bytes = (n * R::REC_BYTES) as f64;
+        let (ctx, budget_bytes) = grid.ctx(n * R::REC_BYTES);
+        let mut first: HashMap<i64, u64> = HashMap::new();
+        for r in &data {
+            first.entry(r.key).or_insert(r.val);
+        }
+        let mut want: Vec<R> = first.iter().map(|(&k, &v)| Record::new(k, v)).collect();
+        want.sort_by_key(|r| r.key);
+        let mut sink = VecSink::new();
+        let stats = ctx.stream_distinct(&mut SliceSource::new(&data), &mut sink, None)?;
+        anyhow::ensure!(
+            stats.groups as usize == want.len(),
+            "distinct kept {} keys, reference has {}",
+            stats.groups,
+            want.len()
+        );
+        let verified = verify_subsampled(&sink.out, &want, VERIFY_SAMPLES, grid.seed ^ 0x5EED)?;
+        measure(
+            grid,
+            bencher,
+            report,
+            format!("distinct/x{}", grid.ratio),
+            8,
+            R::REC_BYTES,
+            budget_bytes,
+            bytes,
+            stats.sort.snapshot(),
+            verified,
+            || {
+                let mut sink = VecSink::new();
+                ctx.stream_distinct(&mut SliceSource::new(&data), &mut sink, None)
+                    .expect("stream distinct");
+            },
+        );
+    }
+
+    // merge-join: two pre-sorted n-record sides; sparse keys keep the
+    // cross-product output near n. The reference is an in-memory
+    // two-pointer join over the same sorted inputs.
+    {
+        let mut left: Vec<Record<i64, u64>> = gen_records(grid.seed ^ 4, n, n as u64);
+        let mut right: Vec<Record<i64, u32>> = gen_records(grid.seed ^ 5, n, n as u64);
+        left.sort_by_key(|r| (r.key, r.val));
+        right.sort_by_key(|r| (r.key, r.val));
+        let rec_bytes = Record::<i64, (u64, u32)>::REC_BYTES;
+        let in_bytes =
+            n * Record::<i64, u64>::REC_BYTES + n * Record::<i64, u32>::REC_BYTES;
+        let (ctx, budget_bytes) = grid.ctx(in_bytes);
+        let mut want: Vec<Record<i64, (u64, u32)>> = Vec::new();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < left.len() && j < right.len() {
+            if left[i].key < right[j].key {
+                i += 1;
+            } else if right[j].key < left[i].key {
+                j += 1;
+            } else {
+                let k = left[i].key;
+                let gi = i;
+                while i < left.len() && left[i].key == k {
+                    i += 1;
+                }
+                while j < right.len() && right[j].key == k {
+                    for l in &left[gi..i] {
+                        want.push(Record::new(k, (l.val, right[j].val)));
+                    }
+                    j += 1;
+                }
+            }
+        }
+        let mut sink = VecSink::new();
+        let stats = ctx.stream_merge_join(
+            &mut SliceSource::new(&left),
+            &mut SliceSource::new(&right),
+            &mut sink,
+        )?;
+        anyhow::ensure!(
+            stats.emitted as usize == want.len(),
+            "merge-join emitted {} records, reference has {}",
+            stats.emitted,
+            want.len()
+        );
+        let verified = verify_subsampled(&sink.out, &want, VERIFY_SAMPLES, grid.seed ^ 0x5EED)?;
+        measure(
+            grid,
+            bencher,
+            report,
+            format!("merge-join/x{}", grid.ratio),
+            12,
+            rec_bytes,
+            budget_bytes,
+            in_bytes as f64,
+            CounterSnapshot::zeroed(&STREAM_COUNTERS),
+            verified,
+            || {
+                let mut sink = VecSink::new();
+                ctx.stream_merge_join(
+                    &mut SliceSource::new(&left),
+                    &mut SliceSource::new(&right),
+                    &mut sink,
+                )
+                .expect("stream merge_join");
+            },
+        );
+    }
+    Ok(())
+}
+
+/// Run the records bench over every ratio and return the report.
+pub fn run_record_bench(
+    n: usize,
+    threads: usize,
+    ratios: &[usize],
+    opts: &BenchOpts,
+    launch: &Launch,
+    medium: SpillMedium,
+    spill_parent: Option<PathBuf>,
+) -> anyhow::Result<RecordBenchReport> {
+    let seed = 0x4EC04D_u64;
+    let mut report = RecordBenchReport {
+        n,
+        threads: threads.max(1),
+        spill: match medium {
+            SpillMedium::Memory => "memory",
+            SpillMedium::Disk => "disk",
+        },
+        verify_seed: seed ^ 0x5EED,
+        launch: launch.clone(),
+        records: Vec::new(),
+    };
+    let session = Session::threaded(report.threads).with_defaults(launch.clone());
+    let mut bencher = Bencher::new(opts.clone());
+    for &ratio in ratios {
+        let grid = Grid {
+            n,
+            seed,
+            session: &session,
+            medium,
+            spill_parent: &spill_parent,
+            ratio,
+        };
+        bench_ratio(&grid, &mut bencher, &mut report)?;
+    }
+    Ok(report)
+}
+
+/// CLI entry point: run the grid (`--quick` trims ratios and sampling),
+/// print a summary, and emit the JSON report to `out`.
+pub fn run_and_emit(
+    n: usize,
+    threads: usize,
+    quick: bool,
+    out: &Path,
+    launch: &Launch,
+    medium: SpillMedium,
+    spill_parent: Option<PathBuf>,
+) -> anyhow::Result<()> {
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::default() }.scaled_from_env();
+    let ratios: &[usize] = if quick { &QUICK_RATIOS } else { &FULL_RATIOS };
+    let report = run_record_bench(n, threads, ratios, &opts, launch, medium, spill_parent)?;
+    report.write_json(out)?;
+    println!(
+        "bench-records: {} rows (n={}, threads={}, spill={}) -> {}",
+        report.records.len(),
+        report.n,
+        report.threads,
+        report.spill,
+        out.display()
+    );
+    for r in &report.records {
+        println!(
+            "  {:<22} {:>2}B payload  {:.2} GB/s  ({} positions verified)",
+            r.workload,
+            r.payload_bytes,
+            r.bytes_per_sec / 1e9,
+            r.verified,
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> BenchOpts {
+        BenchOpts {
+            warmup: std::time::Duration::from_millis(2),
+            budget: std::time::Duration::from_millis(30),
+            min_samples: 2,
+            max_samples: 3,
+        }
+    }
+
+    #[test]
+    fn report_covers_workloads_and_json_parses() {
+        let report = run_record_bench(
+            20_000,
+            2,
+            &[8],
+            &tiny_opts(),
+            &Launch::default(),
+            SpillMedium::Memory,
+            None,
+        )
+        .unwrap();
+        // 3 sort-by-key widths + sortperm + group-reduce + distinct +
+        // merge-join per ratio.
+        assert_eq!(report.records.len(), 7);
+        for w in ["sort-by-key/p4", "sort-by-key/p8", "sort-by-key/p16"] {
+            let r = report.get(&format!("{w}/x8"), 8).unwrap();
+            assert!(r.verified > 2, "{w} must verify");
+            assert!(r.rec_bytes > 8, "{w} strides past the key");
+        }
+        let j = crate::util::json::Json::parse(&report.to_json()).unwrap();
+        assert_eq!(j.get("version").as_usize(), Some(1));
+        let rows = j.get("results").as_arr().unwrap();
+        assert_eq!(rows.len(), 7);
+        for row in rows {
+            for key in STREAM_COUNTERS {
+                assert!(row.get(key).as_usize().is_some(), "row key {key}");
+            }
+            assert!(row.get("verified").as_usize().unwrap() > 0);
+        }
+    }
+
+    #[test]
+    fn disk_spill_roundtrips_records_under_bench_harness() {
+        let report = run_record_bench(
+            12_000,
+            2,
+            &[8],
+            &tiny_opts(),
+            &Launch::default(),
+            SpillMedium::Disk,
+            None,
+        )
+        .unwrap();
+        let r = report.get("sort-by-key/p16/x8", 8).unwrap();
+        assert!(r.stream.get("spilled_bytes") > 0, "disk medium must actually spill");
+    }
+}

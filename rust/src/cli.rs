@@ -43,6 +43,11 @@ COMMANDS
                        sort of datasets 8x/16x larger than the memory
                        budget, verified bitwise against the in-memory
                        sort (DESIGN.md §13) -> BENCH_stream.json
+  bench-records        record-stream (dataset engine) sweep: sort-by-key
+                       across payload widths, sortperm, group-reduce,
+                       distinct, merge-join, each verified against an
+                       in-memory reference (DESIGN.md §19)
+                       -> BENCH_records.json
   bench-cluster-stream multi-node out-of-core sweep: SIHSort with the
                        external rank-local sorter over rank-counts x
                        budget ratios x dtypes, verified bitwise against

@@ -200,6 +200,35 @@ fn run(cli: &Cli) -> anyhow::Result<()> {
                 cfg.stream.resume,
             )
         }
+        "bench-records" => {
+            // Record-stream (dataset engine) sweep -> BENCH_records.json
+            // (DESIGN.md §19): sort-by-key across payload widths,
+            // sortperm, group-reduce, distinct and merge-join, each at
+            // 8x/16x dataset:budget ratios. Every configuration is
+            // verified (key image + payload bits) against an in-memory
+            // reference on a subsampled pass — divergence is a hard
+            // error, which is what CI relies on.
+            let cfg = cli.run_config()?;
+            let n = cli.get_usize("n")?.unwrap_or(if quick { 1 << 19 } else { 1 << 21 });
+            let threads = cli
+                .get_usize("threads")?
+                .unwrap_or_else(accelkern::backend::threaded::default_threads);
+            let out = cli.get("out").unwrap_or("BENCH_records.json").to_string();
+            let medium = if cfg.stream.spill_memory {
+                accelkern::stream::SpillMedium::Memory
+            } else {
+                accelkern::stream::SpillMedium::Disk
+            };
+            accelkern::bench::record_bench::run_and_emit(
+                n,
+                threads,
+                quick,
+                std::path::Path::new(&out),
+                &cfg.launch,
+                medium,
+                cfg.stream.spill_dir.clone().map(std::path::PathBuf::from),
+            )
+        }
         "bench-cluster-stream" => {
             // Multi-node x out-of-core sweep -> BENCH_cluster_stream.json
             // (DESIGN.md §14): SIHSort with the external rank-local

@@ -30,7 +30,7 @@ use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
 use crate::comm::{Endpoint, TrySend};
-use crate::dtype::SortKey;
+use crate::stream::StreamRecord;
 use crate::obs;
 use crate::session::AkError;
 use crate::stream::codec;
@@ -42,20 +42,20 @@ use crate::util::failpoint;
 /// is `sorted[cuts[j]..cuts[j+1]]` with implicit cuts[0]=0,
 /// cuts[P-1]=len. Elements equal to splitter j go to bucket j (<=, i.e.
 /// `searchsortedlast` semantics, matching `splitters::local_ranks`).
-pub fn partition_points<K: SortKey>(sorted: &[K], splitters_bits: &[u128]) -> Vec<usize> {
+pub fn partition_points<K: StreamRecord>(sorted: &[K], splitters_bits: &[u128]) -> Vec<usize> {
     let mut cuts = Vec::with_capacity(splitters_bits.len());
     let mut floor = 0usize;
     for &s in splitters_bits {
         // Running max guards against (already-prevented) non-monotone
         // splitters ever producing invalid slice bounds.
-        floor = floor.max(sorted.partition_point(|x| x.to_bits() <= s));
+        floor = floor.max(sorted.partition_point(|x| x.key_bits() <= s));
         cuts.push(floor);
     }
     cuts
 }
 
 /// Split a sorted shard into P bucket slices by the cut points.
-pub fn buckets<'a, K: SortKey>(sorted: &'a [K], cuts: &[usize]) -> Vec<&'a [K]> {
+pub fn buckets<'a, K>(sorted: &'a [K], cuts: &[usize]) -> Vec<&'a [K]> {
     let p = cuts.len() + 1;
     let mut out = Vec::with_capacity(p);
     let mut lo = 0usize;
@@ -77,7 +77,7 @@ pub fn buckets<'a, K: SortKey>(sorted: &'a [K], cuts: &[usize]) -> Vec<&'a [K]> 
 /// The compute is timed with a plain clock rather than the fabric's
 /// compute token: the token must not be held across sends/recvs, and
 /// the per-chunk work here is I/O-dominated either way.
-pub fn streamed_exchange<K: SortKey>(
+pub fn streamed_exchange<K: StreamRecord>(
     ep: &mut Endpoint,
     run: &SpillRun<K>,
     splitters_bits: &[u128],
@@ -227,6 +227,7 @@ pub fn streamed_exchange<K: SortKey>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dtype::SortKey;
     use crate::util::Prng;
     use crate::workload::{generate, Distribution};
 

@@ -493,7 +493,10 @@ fn sihsort_rank_streamed_ckpt<K: DeviceKey>(
         &rank_dir,
         "sihsort_rank",
         &tag,
-        K::ELEM.name(),
+        // The record layout name — identical to the bare dtype name for
+        // the scalar keys this rank sorts, so pre-record checkpoints
+        // resume unchanged (DESIGN.md §19).
+        &<K as crate::stream::StreamRecord>::layout_name(),
         plan.run_chunk_elems as u64,
         scfg.resume,
     )?;

@@ -17,7 +17,7 @@
 use crate::backend::DeviceKey;
 use crate::dtype::SortKey;
 use crate::session::Launch;
-use crate::stream::{ChunkSource, SpillRun, SpillRunSource, StreamCtx};
+use crate::stream::{ChunkSource, SpillRun, SpillRunSource, StreamCtx, StreamRecord};
 
 /// Leader-side state for one refinement round.
 #[derive(Clone, Debug)]
@@ -78,7 +78,7 @@ pub fn local_ranks<K: SortKey>(sorted: &[K], candidates: &[u128]) -> Vec<u64> {
 /// offsets the in-memory sampler indexes, never holding more than one
 /// chunk. `total` is the stream's element count (a [`SpillRun`] knows
 /// its length).
-pub fn regular_samples_streamed<K: SortKey>(
+pub fn regular_samples_streamed<K: SortKey + StreamRecord>(
     src: &mut dyn ChunkSource<K>,
     total: u64,
     p: usize,

@@ -1,50 +1,68 @@
 //! Compact fixed-width record codec for spills and binary datasets.
 //!
-//! One record is the little-endian [`SortKey::to_bits`] image truncated
-//! to `K::KEY_BYTES` — 2 bytes per `i16` key, 16 per `i128`. The image
-//! transform is a bijection, so the round trip is exact for every bit
-//! pattern (NaN payloads and `-0.0` survive spills byte-identically:
-//! the streaming-vs-in-memory equivalence tests rely on this).
+//! One record is the little-endian [`SortKey::to_bits`] image of the
+//! key truncated to `KEY_BYTES`, immediately followed by
+//! `PAYLOAD_BYTES` of raw payload bits (see
+//! [`crate::stream::record::StreamRecord`]). The key image transform is
+//! a bijection and the payload bytes are the value's own bit pattern,
+//! so the round trip is exact for every bit pattern (NaN payloads and
+//! `-0.0` survive spills byte-identically in both halves: the
+//! streaming-vs-in-memory equivalence tests rely on this).
 //!
-//! The format is deliberately headerless: a run file's element count is
-//! `len / KEY_BYTES`, checked on open ([`decode_into`] rejects ragged
-//! tails), and the dtype is part of the surrounding context (spill runs
-//! are typed, `FileSource`/`FileSink` are generic over `K`).
+//! Scalar layouts have `PAYLOAD_BYTES = 0`, which makes the record
+//! stride exactly `KEY_BYTES`: the wire format of every pre-record
+//! spill, dataset file and bench is preserved byte for byte.
+//!
+//! The format is deliberately headerless: a run file's record count is
+//! `len / REC_BYTES`, checked on open ([`decode_into`] rejects ragged
+//! tails), and the layout is part of the surrounding context (spill
+//! runs are typed, `FileSource`/`FileSink` are generic over the record,
+//! checkpoint manifests carry the layout name in their identity).
 
 use anyhow::ensure;
 
 use crate::dtype::SortKey;
+use crate::stream::record::StreamRecord;
 
-/// Encoded size in bytes of `n` records of type `K`.
-pub fn encoded_len<K: SortKey>(n: usize) -> usize {
-    n * K::KEY_BYTES
+/// Encoded size in bytes of `n` records of layout `R`.
+pub fn encoded_len<R: StreamRecord>(n: usize) -> usize {
+    n * R::REC_BYTES
 }
 
-/// Append the records of `keys` to `out` (little-endian bit images).
-pub fn encode_into<K: SortKey>(keys: &[K], out: &mut Vec<u8>) {
-    out.reserve(encoded_len::<K>(keys.len()));
-    for &k in keys {
-        let bits = k.to_bits().to_le_bytes();
-        out.extend_from_slice(&bits[..K::KEY_BYTES]);
+/// Append the records of `recs` to `out` (little-endian key image, then
+/// raw payload bytes).
+pub fn encode_into<R: StreamRecord>(recs: &[R], out: &mut Vec<u8>) {
+    out.reserve(encoded_len::<R>(recs.len()));
+    for r in recs {
+        let bits = r.key_bits().to_le_bytes();
+        out.extend_from_slice(&bits[..<R::Key as SortKey>::KEY_BYTES]);
+        if R::PAYLOAD_BYTES > 0 {
+            let payload = r.payload_raw().to_le_bytes();
+            out.extend_from_slice(&payload[..R::PAYLOAD_BYTES]);
+        }
     }
 }
 
 /// Decode every record in `bytes`, appending to `out`; errors on a
-/// ragged tail (truncated spill / foreign file).
-pub fn decode_into<K: SortKey>(bytes: &[u8], out: &mut Vec<K>) -> anyhow::Result<usize> {
+/// ragged tail (truncated spill / foreign file / wrong layout).
+pub fn decode_into<R: StreamRecord>(bytes: &[u8], out: &mut Vec<R>) -> anyhow::Result<usize> {
+    let kb = <R::Key as SortKey>::KEY_BYTES;
     ensure!(
-        bytes.len() % K::KEY_BYTES == 0,
+        bytes.len() % R::REC_BYTES == 0,
         "record codec: {} bytes is not a multiple of the {}-byte {} record",
         bytes.len(),
-        K::KEY_BYTES,
-        K::ELEM,
+        R::REC_BYTES,
+        R::layout_name(),
     );
-    let n = bytes.len() / K::KEY_BYTES;
+    let n = bytes.len() / R::REC_BYTES;
     out.reserve(n);
-    for rec in bytes.chunks_exact(K::KEY_BYTES) {
+    for rec in bytes.chunks_exact(R::REC_BYTES) {
         let mut wide = [0u8; 16];
-        wide[..K::KEY_BYTES].copy_from_slice(rec);
-        out.push(K::from_bits(u128::from_le_bytes(wide)));
+        wide[..kb].copy_from_slice(&rec[..kb]);
+        let key = R::Key::from_bits(u128::from_le_bytes(wide));
+        let mut praw = [0u8; 16];
+        praw[..R::PAYLOAD_BYTES].copy_from_slice(&rec[kb..]);
+        out.push(R::from_parts(key, u128::from_le_bytes(praw)));
     }
     Ok(n)
 }
@@ -53,10 +71,11 @@ pub fn decode_into<K: SortKey>(bytes: &[u8], out: &mut Vec<K>) -> anyhow::Result
 mod tests {
     use super::*;
     use crate::dtype::bits_eq;
+    use crate::stream::record::Record;
     use crate::util::Prng;
     use crate::workload::{generate, Distribution, KeyGen};
 
-    fn roundtrip<K: KeyGen>(seed: u64, n: usize) {
+    fn roundtrip<K: KeyGen + StreamRecord>(seed: u64, n: usize) {
         let xs: Vec<K> = generate(&mut Prng::new(seed), Distribution::Uniform, n);
         let mut bytes = Vec::new();
         encode_into(&xs, &mut bytes);
@@ -107,5 +126,42 @@ mod tests {
         let mut out = vec![0i16];
         decode_into(&bytes, &mut out).unwrap();
         assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn scalar_wire_format_is_the_pre_record_format() {
+        // payload_bytes = 0 must encode exactly the bare key images —
+        // the compatibility guarantee that keeps old spills readable.
+        let xs = vec![-3i32, 0, 7];
+        let mut bytes = Vec::new();
+        encode_into(&xs, &mut bytes);
+        let mut want = Vec::new();
+        for &k in &xs {
+            want.extend_from_slice(&k.to_bits().to_le_bytes()[..4]);
+        }
+        assert_eq!(bytes, want);
+    }
+
+    #[test]
+    fn record_layouts_roundtrip_with_payloads() {
+        let xs: Vec<Record<f64, u64>> = vec![
+            Record::new(f64::NAN, 1),
+            Record::new(-0.0, u64::MAX),
+            Record::new(0.0, 0),
+            Record::new(-1.5, 0xDEAD_BEEF),
+        ];
+        let mut bytes = Vec::new();
+        encode_into(&xs, &mut bytes);
+        assert_eq!(bytes.len(), xs.len() * 16);
+        let mut back: Vec<Record<f64, u64>> = Vec::new();
+        assert_eq!(decode_into(&bytes, &mut back).unwrap(), xs.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.key.to_bits(), b.key.to_bits());
+            assert_eq!(a.val, b.val);
+        }
+        // Payload truncation is a ragged tail, not silent corruption.
+        bytes.pop();
+        let mut bad: Vec<Record<f64, u64>> = Vec::new();
+        assert!(decode_into(&bytes, &mut bad).is_err());
     }
 }

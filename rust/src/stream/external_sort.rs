@@ -17,11 +17,10 @@
 //! 3. **Final merge** — the surviving ≤ `fan_in` runs merge once more,
 //!    streaming output chunks into the sink.
 
-use crate::backend::DeviceKey;
 use crate::baselines::kmerge::KmergePull;
-use crate::dtype::SortKey;
 use crate::obs;
 use crate::session::{AkResult, Launch};
+use crate::stream::record::StreamRecord;
 use crate::stream::source::{ChunkSink, ChunkSource};
 use crate::stream::spill::{SpillRun, SpillStore};
 use crate::stream::{Checkpoint, StreamCtx, StreamPlan};
@@ -71,10 +70,16 @@ impl ExternalSortStats {
 
 impl StreamCtx {
     /// Sort everything `src` yields into `sink` (ascending total order,
-    /// NaN-safe — output is bitwise what `Session::sort` produces on the
-    /// concatenated input) while holding at most the budget in engine
-    /// state. `launch` tunes the per-chunk in-memory sorts.
-    pub fn external_sort<K: DeviceKey>(
+    /// NaN-safe — scalar output is bitwise what `Session::sort` produces
+    /// on the concatenated input) while holding at most the budget in
+    /// engine state. `launch` tunes the per-chunk in-memory sorts.
+    ///
+    /// Generic over any record layout (DESIGN.md §19): bare scalar keys
+    /// run the unchanged fast path, `(key, payload)` records sort
+    /// **stably** — chunks via the stable pair sort, the merge with a
+    /// run-index tie-break — so record output is bitwise the stable
+    /// in-memory sort of the whole stream.
+    pub fn external_sort<K: StreamRecord>(
         &self,
         src: &mut dyn ChunkSource<K>,
         sink: &mut dyn ChunkSink<K>,
@@ -97,7 +102,7 @@ impl StreamCtx {
         }
         stats.elems += buf.len() as u64;
         src.next_chunk(&mut next, plan.run_chunk_elems)?;
-        self.session.sort(&mut buf, launch)?;
+        K::sort_chunk(&self.session, &mut buf, launch)?;
         if next.is_empty() {
             // In-core fast path: one chunk, no spill.
             stats.runs = 1;
@@ -112,7 +117,7 @@ impl StreamCtx {
         while !next.is_empty() {
             std::mem::swap(&mut buf, &mut next);
             stats.elems += buf.len() as u64;
-            self.session.sort(&mut buf, launch)?;
+            K::sort_chunk(&self.session, &mut buf, launch)?;
             runs.push(store.write_run(&buf)?);
             src.next_chunk(&mut next, plan.run_chunk_elems)?;
         }
@@ -181,7 +186,7 @@ impl StreamCtx {
     /// survive the crash the checkpoint exists for) and skips the
     /// in-core fast path: even a single-run dataset parks its run so
     /// the manifest always describes the full job state.
-    pub fn external_sort_ckpt<K: DeviceKey>(
+    pub fn external_sort_ckpt<K: StreamRecord>(
         &self,
         src: &mut dyn ChunkSource<K>,
         sink: &mut dyn ChunkSink<K>,
@@ -198,7 +203,7 @@ impl StreamCtx {
             &ckpt.dir,
             "external_sort",
             &ckpt.tag,
-            K::ELEM.name(),
+            &K::layout_name(),
             plan.run_chunk_elems as u64,
             ckpt.resume,
         )?;
@@ -236,7 +241,7 @@ impl StreamCtx {
                     break;
                 }
                 stats.elems += buf.len() as u64;
-                self.session.sort(&mut buf, launch)?;
+                K::sort_chunk(&self.session, &mut buf, launch)?;
                 let mut run = store.write_run(&buf)?;
                 // The satellite-2 crash window: run data is on disk and
                 // fsynced, but the manifest does not reference it yet —
@@ -334,7 +339,7 @@ impl StreamCtx {
 /// Pull and discard exactly `n` elements from `src` (the consumed
 /// prefix a resumed generation phase skips). Errors if the source runs
 /// dry early — the resume contract requires the identical input.
-fn skip_elems<K: SortKey>(
+fn skip_elems<K: StreamRecord>(
     src: &mut dyn ChunkSource<K>,
     mut n: u64,
     chunk: usize,
@@ -357,7 +362,7 @@ fn skip_elems<K: SortKey>(
 /// I/O-granule chunks. Also the fan-in-capping engine of the streamed
 /// SIHSort rank's final phase (`mpisort::sihsort`), which pre-merges
 /// received runs when the rank count exceeds the plan's fan-in.
-pub(crate) fn merge_group_to_store<K: DeviceKey>(
+pub(crate) fn merge_group_to_store<K: StreamRecord>(
     group: &[SpillRun<K>],
     store: &mut SpillStore,
     plan: &StreamPlan,
@@ -385,6 +390,7 @@ pub(crate) fn merge_group_to_store<K: DeviceKey>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::DeviceKey;
     use crate::dtype::bits_eq;
     use crate::session::Session;
     use crate::stream::{SliceSource, StreamBudget, VecSink};

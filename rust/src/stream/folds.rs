@@ -22,9 +22,12 @@
 use crate::algorithms::reduce::{Reducible, ReduceKind};
 use crate::algorithms::scan::ScanAdd;
 use crate::backend::DeviceKey;
+use crate::baselines::kmerge::KmergePull;
+use crate::obs;
 use crate::session::{AkError, AkResult, Launch};
 use crate::stream::source::{ChunkSink, ChunkSource};
-use crate::stream::StreamCtx;
+use crate::stream::spill::SpillRun;
+use crate::stream::{StreamCtx, StreamPlan};
 
 impl StreamCtx {
     /// Fold everything `src` yields with `kind`, holding one chunk at a
@@ -132,9 +135,16 @@ impl StreamCtx {
     }
 
     /// The `k` largest keys of the stream, descending (total order, so
-    /// NaN outranks +inf — same rule as `external_sort`'s tail). Holds
-    /// at most `2k` candidates plus one input chunk; the result is
-    /// bitwise what "in-memory sort descending, take `k`" produces.
+    /// NaN outranks +inf — same rule as `external_sort`'s tail). The
+    /// result is bitwise what "in-memory sort descending, take `k`"
+    /// produces.
+    ///
+    /// Small `k` (a `2k` pool fits the chunk budget) runs entirely in
+    /// memory: at most `2k` candidates plus one input chunk. Large `k`
+    /// — up to and past the stream length — spills each chunk's top-`k`
+    /// tail as a sorted candidate run and finishes through the same
+    /// k-way merge machinery as `external_sort`, holding only `k`
+    /// survivors plus the merge I/O buffers.
     pub fn stream_topk<K: DeviceKey>(
         &self,
         src: &mut dyn ChunkSource<K>,
@@ -144,7 +154,11 @@ impl StreamCtx {
         if k == 0 {
             return Ok(Vec::new());
         }
-        let chunk = self.plan::<K>().run_chunk_elems;
+        let plan = self.plan::<K>();
+        if k.saturating_mul(2) > plan.run_chunk_elems {
+            return self.topk_spilled(src, k, &plan, launch);
+        }
+        let chunk = plan.run_chunk_elems;
         let mut pool: Vec<K> = Vec::with_capacity(2 * k);
         // Once the pool has been compacted to k survivors, only keys
         // strictly above the smallest survivor can alter the answer
@@ -173,6 +187,80 @@ impl StreamCtx {
         top.reverse();
         Ok(top)
     }
+
+    /// Large-`k` tail of [`StreamCtx::stream_topk`]: a `2k` pool would
+    /// bust the chunk budget, so each input chunk is sorted and its
+    /// top-`k` tail spilled as a candidate run; merge passes then fold
+    /// candidate runs back down to one top-`k`, never holding more than
+    /// `k` survivors at once.
+    fn topk_spilled<K: DeviceKey>(
+        &self,
+        src: &mut dyn ChunkSource<K>,
+        k: usize,
+        plan: &StreamPlan,
+        launch: Option<&Launch>,
+    ) -> AkResult<Vec<K>> {
+        let _span = obs::span1(obs::SpanKind::Pass, "topk.spill", k as u64);
+        let mut store = self.store();
+        let mut runs: Vec<SpillRun<K>> = Vec::new();
+        let mut buf: Vec<K> = Vec::new();
+        while src.next_chunk(&mut buf, plan.run_chunk_elems)? > 0 {
+            self.session.sort(&mut buf, launch)?;
+            runs.push(store.write_run(&buf[buf.len().saturating_sub(k)..])?);
+        }
+        if runs.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Merge passes mirror `external_sort`: while the candidate set
+        // exceeds the fan-in, fold fan-in-sized groups down to their own
+        // top-`k` (each re-spilled run is at most `k` elements).
+        while runs.len() > plan.fan_in {
+            let mut merged: Vec<SpillRun<K>> = Vec::new();
+            while !runs.is_empty() {
+                let take = plan.fan_in.min(runs.len());
+                let group: Vec<SpillRun<K>> = runs.drain(..take).collect();
+                if group.len() == 1 {
+                    merged.extend(group);
+                    continue;
+                }
+                let top = merge_top_tail(&group, k, plan)?;
+                merged.push(store.write_run(&top)?);
+                // `group` drops here: retired runs delete their files.
+            }
+            runs = merged;
+        }
+        let mut top = merge_top_tail(&runs, k, plan)?;
+        top.reverse();
+        Ok(top)
+    }
+}
+
+/// Merge ascending candidate runs, keeping only the last (largest) `k`
+/// keys — a rolling window over the k-way merge output, so peak memory
+/// is `k` plus the merge I/O buffers.
+fn merge_top_tail<K: DeviceKey>(
+    runs: &[SpillRun<K>],
+    k: usize,
+    plan: &StreamPlan,
+) -> AkResult<Vec<K>> {
+    let mut cursors = Vec::with_capacity(runs.len());
+    for r in runs {
+        cursors.push(r.cursor(plan.io_chunk_elems)?);
+    }
+    let mut merge = KmergePull::new(cursors);
+    let mut keep: Vec<K> = Vec::new();
+    let mut out: Vec<K> = Vec::with_capacity(plan.io_chunk_elems);
+    loop {
+        out.clear();
+        if merge.next_chunk(&mut out, plan.io_chunk_elems)? == 0 {
+            break;
+        }
+        keep.extend_from_slice(&out);
+        if keep.len() > k {
+            keep.drain(..keep.len() - k);
+        }
+    }
+    Ok(keep)
 }
 
 /// Sort the pool and keep its top `k` (ascending afterwards).
@@ -313,6 +401,40 @@ mod tests {
         assert_eq!(got, vec![9, 3, 1]);
         // k = 0.
         assert!(small_ctx().stream_topk(&mut SliceSource::new(&tiny), 0, None).unwrap().is_empty());
+    }
+
+    #[test]
+    fn topk_spills_when_k_approaches_n() {
+        // 2k far exceeds the 257-element chunk budget, so these take the
+        // spilled-candidate-run path; k ≈ n (and k > n) must still be
+        // bitwise "sort descending, take k".
+        let xs: Vec<i32> = generate(&mut Prng::new(5), Distribution::DupHeavy, 20_000);
+        let mut want = xs.clone();
+        Session::native().sort(&mut want, None).unwrap();
+        want.reverse();
+        for k in [129usize, 3000, 19_000, 20_000, 25_000] {
+            let got = small_ctx().stream_topk(&mut SliceSource::new(&xs), k, None).unwrap();
+            assert_eq!(got.len(), k.min(xs.len()), "k={k}");
+            assert!(bits_eq(&got, &want[..k.min(want.len())]), "k={k}");
+        }
+        // `small_ctx` spills to disk (the default medium); cover the
+        // memory medium too — same pipeline, different run store.
+        let ctx = Session::threaded(2)
+            .stream(StreamBudget::bytes(64))
+            .in_memory_spill()
+            .run_chunk_elems(257);
+        let got = ctx.stream_topk(&mut SliceSource::new(&xs), 19_000, None).unwrap();
+        assert!(bits_eq(&got, &want[..19_000]));
+        // Floats with NaN/-0.0 through the spill path: total order holds.
+        let mut f: Vec<f64> = generate(&mut Prng::new(6), Distribution::Gaussian, 700);
+        f[13] = f64::NAN;
+        f[99] = -0.0;
+        f[100] = 0.0;
+        let got = small_ctx().stream_topk(&mut SliceSource::new(&f), 650, None).unwrap();
+        let mut wantf = f.clone();
+        Session::native().sort(&mut wantf, None).unwrap();
+        wantf.reverse();
+        assert!(bits_eq(&got, &wantf[..650]));
     }
 
     #[test]

@@ -45,17 +45,19 @@ pub mod codec;
 pub mod external_sort;
 pub mod folds;
 pub mod manifest;
+pub mod record;
+pub mod records;
 pub mod source;
 pub mod spill;
 
 pub use external_sort::ExternalSortStats;
 pub use manifest::{Manifest, RunMeta, MANIFEST_FILE, MANIFEST_VERSION};
+pub use record::{Payload, Record, StreamRecord};
 pub use source::{ChunkSink, ChunkSource, FileSink, FileSource, GenSource, SliceSource, VecSink};
 pub use spill::{RunSink, SpillMedium, SpillRun, SpillRunSource, SpillStore, TempDirGuard};
 
 use std::path::{Path, PathBuf};
 
-use crate::dtype::SortKey;
 use crate::session::Session;
 
 /// Floor on the derived run-generation chunk (elements).
@@ -243,18 +245,23 @@ impl StreamCtx {
         SpillStore::new(self.medium, self.spill_parent.clone())
     }
 
-    /// Budget → pipeline shape for keys of type `K` (see
-    /// [`StreamBudget`] for the accounting).
+    /// Budget → pipeline shape for records of layout `R` (see
+    /// [`StreamBudget`] for the accounting). The budget divides by the
+    /// full record stride (`REC_BYTES` = key image + payload), so wider
+    /// payloads shrink every chunk the same way wider keys always have;
+    /// scalar layouts (`PAYLOAD_BYTES = 0`) derive exactly the
+    /// pre-record shapes.
     ///
     /// Every derivation uses `checked_*`/`saturating_*` arithmetic: a
-    /// pathological budget or key width clamps to the documented floors
-    /// instead of wrapping. `aklint` enforces this in the marked region.
-    pub(crate) fn plan<K: SortKey>(&self) -> StreamPlan {
+    /// pathological budget or record width clamps to the documented
+    /// floors instead of wrapping. `aklint` enforces this in the marked
+    /// region.
+    pub(crate) fn plan<R: StreamRecord>(&self) -> StreamPlan {
         // aklint: begin(checked-arith)
         let budget_elems = self
             .budget
             .bytes
-            .checked_div(K::KEY_BYTES)
+            .checked_div(R::REC_BYTES)
             .unwrap_or(0)
             .max(MIN_IO_ELEMS.saturating_mul(2));
         let run_chunk_elems = self
@@ -297,6 +304,19 @@ mod tests {
         assert_eq!(tiny.run_chunk_elems, MIN_RUN_CHUNK);
         assert_eq!(tiny.fan_in, 2);
         assert_eq!(tiny.io_chunk_elems, MIN_IO_ELEMS);
+    }
+
+    #[test]
+    fn plan_strides_by_record_width() {
+        // A (i32, u32) record is 8 bytes — the plan must match the
+        // 8-byte scalar plan, not the 4-byte key plan.
+        let s = Session::native();
+        let rec = s.stream(StreamBudget::mib(1)).plan::<Record<i32, u32>>();
+        let i64p = s.stream(StreamBudget::mib(1)).plan::<i64>();
+        assert_eq!(rec.run_chunk_elems, i64p.run_chunk_elems);
+        assert_eq!(rec.io_chunk_elems, i64p.io_chunk_elems);
+        // Scalar layouts are byte-identical to the pre-record plans.
+        assert_eq!(s.stream(StreamBudget::mib(1)).plan::<i32>().run_chunk_elems, 87_381);
     }
 
     #[test]

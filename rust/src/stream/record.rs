@@ -1,0 +1,295 @@
+//! Fixed-width `(key, payload)` records for the streaming engine
+//! (DESIGN.md §19).
+//!
+//! Every out-of-core pipeline in this crate — spills, the k-way merge,
+//! the external sort, the cluster exchange — is generic over one trait,
+//! [`StreamRecord`]: a `Copy` value that exposes a [`SortKey`] image to
+//! order by and a raw little-endian payload to carry along. Two families
+//! implement it:
+//!
+//! * every scalar key dtype (`PAYLOAD_BYTES = 0`) — the degenerate
+//!   layout whose wire format, spill stride and manifest identity are
+//!   byte-for-byte today's scalar format, so existing spills, resumes
+//!   and benches are untouched;
+//! * [`Record<K, P>`] — a key plus a fixed-width [`Payload`], the
+//!   layout behind `stream_sort_by_key`, `stream_sortperm`, group-by
+//!   reduce, merge-join and `stream_distinct`.
+//!
+//! Payload bytes are *raw bits*, not a sort image: they survive spills
+//! bit-exactly (the key goes through the order-preserving
+//! [`SortKey::to_bits`] bijection exactly as before). Chunk sorting of
+//! records is **stable** (`Session::sort_by_key`), and the merge layer
+//! breaks key ties by run index, so an external record sort is bitwise
+//! the stable in-memory sort of the whole stream.
+
+use crate::backend::DeviceKey;
+use crate::dtype::SortKey;
+use crate::session::{AkResult, Launch, Session};
+
+/// A fixed-width payload carried alongside a sort key. `BYTES` ≤ 16;
+/// the raw image is the value's own little-endian bit pattern (bit-exact
+/// across spills, unlike the key's order-preserving image).
+pub trait Payload: Copy + Send + Sync + std::fmt::Debug + 'static {
+    /// Encoded width in bytes (0 ..= 16).
+    const BYTES: usize;
+    /// The value's raw bits, zero-extended into the low `BYTES` bytes.
+    fn to_raw(self) -> u128;
+    /// Inverse of [`Payload::to_raw`] (bits above `BYTES` are zero).
+    fn from_raw(bits: u128) -> Self;
+}
+
+impl Payload for () {
+    const BYTES: usize = 0;
+    fn to_raw(self) -> u128 {
+        0
+    }
+    fn from_raw(_bits: u128) -> Self {}
+}
+
+macro_rules! uint_payload {
+    ($($t:ty),*) => {$(
+        impl Payload for $t {
+            const BYTES: usize = std::mem::size_of::<$t>();
+            fn to_raw(self) -> u128 {
+                self as u128
+            }
+            fn from_raw(bits: u128) -> Self {
+                bits as $t
+            }
+        }
+    )*};
+}
+uint_payload!(u32, u64, u128);
+
+macro_rules! scalar_payload {
+    ($($t:ty => $u:ty),*) => {$(
+        impl Payload for $t {
+            const BYTES: usize = std::mem::size_of::<$t>();
+            fn to_raw(self) -> u128 {
+                // Raw bit pattern (NOT the sort image): floats keep NaN
+                // payloads and zero signs bit-exactly.
+                <$u>::from_le_bytes(self.to_le_bytes()) as u128
+            }
+            fn from_raw(bits: u128) -> Self {
+                <$t>::from_le_bytes((bits as $u).to_le_bytes())
+            }
+        }
+    )*};
+}
+scalar_payload!(i16 => u16, i32 => u32, i64 => u64, i128 => u128, f32 => u32, f64 => u64);
+
+/// Two payloads packed side by side (`A` in the low bytes) — the output
+/// shape of a merge-join. The combined width must still fit the 16-byte
+/// raw image; wider pairs fail to compile at the first use.
+impl<A: Payload, B: Payload> Payload for (A, B) {
+    const BYTES: usize = {
+        assert!(A::BYTES + B::BYTES <= 16, "paired payload exceeds the 16-byte raw image");
+        A::BYTES + B::BYTES
+    };
+    fn to_raw(self) -> u128 {
+        let lo = self.0.to_raw();
+        if A::BYTES >= 16 {
+            // B is zero-width (the const assert above); a literal shift
+            // by 128 would overflow even though the high half is empty.
+            lo
+        } else {
+            lo | (self.1.to_raw() << (8 * A::BYTES as u32))
+        }
+    }
+    fn from_raw(bits: u128) -> Self {
+        if A::BYTES >= 16 {
+            (A::from_raw(bits), B::from_raw(0))
+        } else {
+            let mask = (1u128 << (8 * A::BYTES as u32)) - 1;
+            (A::from_raw(bits & mask), B::from_raw(bits >> (8 * A::BYTES as u32)))
+        }
+    }
+}
+
+/// One `(key, payload)` record. Ordered by the key's total order; the
+/// payload rides along untouched.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Record<K: SortKey, P: Payload> {
+    /// The sort key.
+    pub key: K,
+    /// The carried payload.
+    pub val: P,
+}
+
+impl<K: SortKey, P: Payload> Record<K, P> {
+    /// A record from its parts.
+    pub fn new(key: K, val: P) -> Record<K, P> {
+        Record { key, val }
+    }
+}
+
+/// The unit every streaming layer moves: a fixed-width record with a
+/// [`SortKey`] to order by. See the module docs for the two families
+/// (bare scalars at `PAYLOAD_BYTES = 0`, [`Record<K, P>`] otherwise)
+/// and the wire-format guarantee.
+pub trait StreamRecord: Copy + Send + Sync + std::fmt::Debug + 'static {
+    /// The key dtype (orders the record; images feed the loser tree).
+    type Key: SortKey;
+    /// Payload width in bytes (0 for bare scalar keys).
+    const PAYLOAD_BYTES: usize;
+    /// Total encoded stride: key image then raw payload bytes.
+    const REC_BYTES: usize = <Self::Key as SortKey>::KEY_BYTES + Self::PAYLOAD_BYTES;
+
+    /// The record's key.
+    fn key(&self) -> Self::Key;
+
+    /// The key's order-preserving `u128` image (merge comparisons).
+    fn key_bits(&self) -> u128 {
+        self.key().to_bits()
+    }
+
+    /// The payload's raw bits, zero above `PAYLOAD_BYTES`.
+    fn payload_raw(&self) -> u128;
+
+    /// Rebuild a record from a decoded key and raw payload bits.
+    fn from_parts(key: Self::Key, payload: u128) -> Self;
+
+    /// The layout's manifest identity. Scalar layouts keep the bare
+    /// dtype name (`"i64"`) so pre-record checkpoints resume cleanly;
+    /// record layouts append the payload width (`"i64+p8"`), making a
+    /// resume against a different layout a typed identity error instead
+    /// of silent corruption.
+    fn layout_name() -> String;
+
+    /// Sort one in-memory chunk with the session's engines. Scalar
+    /// chunks use `Session::sort` (unchanged fast path; ties are
+    /// bit-identical so stability is moot); record chunks use the
+    /// stable `Session::sort_by_key` so equal-key payloads keep input
+    /// order.
+    fn sort_chunk(session: &Session, buf: &mut [Self], launch: Option<&Launch>) -> AkResult<()>;
+}
+
+macro_rules! scalar_record {
+    ($($t:ty),*) => {$(
+        impl StreamRecord for $t {
+            type Key = $t;
+            const PAYLOAD_BYTES: usize = 0;
+            fn key(&self) -> $t {
+                *self
+            }
+            fn payload_raw(&self) -> u128 {
+                0
+            }
+            fn from_parts(key: $t, _payload: u128) -> Self {
+                key
+            }
+            fn layout_name() -> String {
+                <$t as SortKey>::ELEM.name().to_string()
+            }
+            fn sort_chunk(
+                session: &Session,
+                buf: &mut [Self],
+                launch: Option<&Launch>,
+            ) -> AkResult<()> {
+                session.sort(buf, launch)
+            }
+        }
+    )*};
+}
+scalar_record!(i16, i32, i64, i128, f32, f64);
+
+impl<K: DeviceKey, P: Payload> StreamRecord for Record<K, P> {
+    type Key = K;
+    const PAYLOAD_BYTES: usize = P::BYTES;
+
+    fn key(&self) -> K {
+        self.key
+    }
+
+    fn payload_raw(&self) -> u128 {
+        self.val.to_raw()
+    }
+
+    fn from_parts(key: K, payload: u128) -> Self {
+        Record { key, val: P::from_raw(payload) }
+    }
+
+    fn layout_name() -> String {
+        format!("{}+p{}", K::ELEM.name(), P::BYTES)
+    }
+
+    fn sort_chunk(session: &Session, buf: &mut [Self], launch: Option<&Launch>) -> AkResult<()> {
+        // Split into parallel key/value arrays for the stable pair sort,
+        // then zip back. O(n) extra space, same as the permutation the
+        // pair sort builds internally.
+        let mut keys: Vec<K> = buf.iter().map(|r| r.key).collect();
+        let mut vals: Vec<P> = buf.iter().map(|r| r.val).collect();
+        session.sort_by_key(&mut keys, &mut vals, launch)?;
+        for ((r, k), v) in buf.iter_mut().zip(keys).zip(vals) {
+            r.key = k;
+            r.val = v;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::Session;
+
+    #[test]
+    fn scalar_layouts_are_the_bare_dtype() {
+        assert_eq!(<i64 as StreamRecord>::REC_BYTES, 8);
+        assert_eq!(<i64 as StreamRecord>::layout_name(), "i64");
+        assert_eq!(<f32 as StreamRecord>::REC_BYTES, 4);
+        let x = 42i64;
+        assert_eq!(x.key_bits(), 42i64.to_bits());
+        assert_eq!(x.payload_raw(), 0);
+        assert_eq!(<i64 as StreamRecord>::from_parts(42, 0), 42);
+    }
+
+    #[test]
+    fn record_layout_names_and_strides() {
+        assert_eq!(<Record<i64, u64> as StreamRecord>::REC_BYTES, 16);
+        assert_eq!(<Record<i64, u64> as StreamRecord>::layout_name(), "i64+p8");
+        assert_eq!(<Record<f32, u32> as StreamRecord>::layout_name(), "f32+p4");
+        assert_eq!(<Record<i32, ()> as StreamRecord>::REC_BYTES, 4);
+    }
+
+    #[test]
+    fn payload_raw_bits_are_exact() {
+        // Floats keep NaN payloads and the zero sign through the raw
+        // image — it is the bit pattern, not the sort image.
+        let nan = f64::from_bits(0x7ff8_0000_dead_beef);
+        let r = Record::new(1i32, nan);
+        let back = <Record<i32, f64> as StreamRecord>::from_parts(r.key, r.payload_raw());
+        assert_eq!(back.val.to_bits(), nan.to_bits());
+        let z = Record::new(1i32, -0.0f32);
+        let back = <Record<i32, f32> as StreamRecord>::from_parts(z.key, z.payload_raw());
+        assert_eq!(back.val.to_bits(), (-0.0f32).to_bits());
+        // Signed payloads round-trip sign bits.
+        let neg = Record::new(1i32, -7i64);
+        let back = <Record<i32, i64> as StreamRecord>::from_parts(neg.key, neg.payload_raw());
+        assert_eq!(back.val, -7);
+    }
+
+    #[test]
+    fn paired_payloads_pack_low_then_high() {
+        let p: (u32, u64) = (0xAABB_CCDD, 0x1122_3344_5566_7788);
+        assert_eq!(<(u32, u64) as Payload>::BYTES, 12);
+        let raw = p.to_raw();
+        assert_eq!(raw & 0xFFFF_FFFF, 0xAABB_CCDD);
+        let back = <(u32, u64) as Payload>::from_raw(raw);
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn record_chunk_sort_is_stable() {
+        let s = Session::threaded(2);
+        let mut buf: Vec<Record<i32, u64>> =
+            (0..1000u64).map(|i| Record::new((i % 7) as i32, i)).collect();
+        <Record<i32, u64> as StreamRecord>::sort_chunk(&s, &mut buf, None).unwrap();
+        for w in buf.windows(2) {
+            assert!(w[0].key <= w[1].key);
+            if w[0].key == w[1].key {
+                assert!(w[0].val < w[1].val, "equal keys must keep input order");
+            }
+        }
+    }
+}

@@ -1,0 +1,507 @@
+//! Record-stream workloads: the dataset-engine surface over the
+//! external sort (DESIGN.md §19).
+//!
+//! One layout generalization ([`crate::stream::record`]) turns the
+//! out-of-core sorter into a larger-than-RAM dataset engine; this
+//! module is the workload layer on top of it, all `StreamCtx` methods:
+//!
+//! * [`StreamCtx::stream_sort_by_key`] — external stable sort of
+//!   `(key, payload)` records.
+//! * [`StreamCtx::stream_sortperm`] — external argsort: keys in, sorted
+//!   `(key, original-index)` records out (`u64` indices, so the stream
+//!   may exceed the in-memory engine's `u32` index space).
+//! * [`StreamCtx::stream_group_reduce`] — sorted-run group-by: equal-key
+//!   runs of the merge output fold through the `Reducible` operators —
+//!   out-of-core aggregation for the price of one sort.
+//! * [`StreamCtx::stream_merge_join`] — merge-join of two sorted record
+//!   streams (inner join, cross product on duplicate keys).
+//! * [`StreamCtx::stream_distinct`] — run-merge dedup; the first record
+//!   of each key survives (deterministic: the merge is stable).
+//!
+//! Group identity throughout is the key's **total-order bit image**:
+//! `-0.0` and `0.0` are distinct keys, and distinct NaN payloads are
+//! distinct keys — exactly the equivalence the sort itself uses, so a
+//! group is always one contiguous run of the sorted stream.
+
+use crate::algorithms::reduce::{Reducible, ReduceKind};
+use crate::backend::DeviceKey;
+use crate::obs;
+use crate::session::{AkError, AkResult, Launch};
+use crate::stream::external_sort::ExternalSortStats;
+use crate::stream::record::{Payload, Record, StreamRecord};
+use crate::stream::source::{ChunkSink, ChunkSource};
+use crate::stream::StreamCtx;
+
+/// What a group-by / distinct pass did, alongside the underlying sort.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GroupStats {
+    /// Groups emitted (group-by) or records kept (distinct).
+    pub groups: u64,
+    /// The stats of the external sort that fed the pass.
+    pub sort: ExternalSortStats,
+}
+
+/// What a merge-join produced.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JoinStats {
+    /// Joined records emitted (cross products included).
+    pub emitted: u64,
+    /// Records consumed from the left stream.
+    pub left_elems: u64,
+    /// Records consumed from the right stream.
+    pub right_elems: u64,
+}
+
+impl StreamCtx {
+    /// External **stable** sort of `(key, payload)` records: output is
+    /// bitwise what the in-memory stable pair sort
+    /// (`Session::sort_by_key`) produces on the concatenated stream —
+    /// equal keys keep their input order, payloads ride bit-exactly.
+    /// A thin alias over the record-generic [`StreamCtx::external_sort`]
+    /// that pins the layout to [`Record<K, P>`].
+    pub fn stream_sort_by_key<K: DeviceKey, P: Payload>(
+        &self,
+        src: &mut dyn ChunkSource<Record<K, P>>,
+        sink: &mut dyn ChunkSink<Record<K, P>>,
+        launch: Option<&Launch>,
+    ) -> AkResult<ExternalSortStats> {
+        self.external_sort(src, sink, launch)
+    }
+
+    /// External argsort: sorts the bare keys of `src` and emits
+    /// `(key, original-index)` records in ascending key order. The
+    /// index payload is `u64` (the in-memory `sortperm` tops out at
+    /// `u32`), and equal keys keep ascending indices — bitwise the
+    /// stable in-memory permutation applied to the stream.
+    pub fn stream_sortperm<K: DeviceKey>(
+        &self,
+        src: &mut dyn ChunkSource<K>,
+        sink: &mut dyn ChunkSink<Record<K, u64>>,
+        launch: Option<&Launch>,
+    ) -> AkResult<ExternalSortStats> {
+        let mut indexed = IndexSource { inner: src, next: 0, buf: Vec::new() };
+        self.external_sort(&mut indexed, sink, launch)
+    }
+
+    /// Sorted-run group-by reduce: externally sorts the records, then
+    /// folds each equal-key run through `kind` in the same output pass
+    /// (no second pass over the data), emitting one `(key, folded)`
+    /// record per group in ascending key order. The fold applies the
+    /// same `Reducible` operator table as `stream_reduce`; float `Add`
+    /// groups in stream order, so sums regroup exactly like the chunked
+    /// scalar reduce.
+    pub fn stream_group_reduce<K: DeviceKey, V: Reducible + Payload>(
+        &self,
+        src: &mut dyn ChunkSource<Record<K, V>>,
+        kind: ReduceKind,
+        sink: &mut dyn ChunkSink<Record<K, V>>,
+        launch: Option<&Launch>,
+    ) -> AkResult<GroupStats> {
+        let _span = obs::span(obs::SpanKind::Pass, "rec.group-reduce");
+        let flush_at = self.plan::<Record<K, V>>().io_chunk_elems;
+        let mut fold = GroupFoldSink { inner: sink, kind, cur: None, out: Vec::new(), flush_at, groups: 0 };
+        let sort = self.external_sort(src, &mut fold, launch)?;
+        Ok(GroupStats { groups: fold.groups, sort })
+    }
+
+    /// Run-merge dedup: externally sorts the stream and keeps the
+    /// **first** record of each distinct key (the merge is stable, so
+    /// "first" is first in input order — deterministic payloads).
+    /// Output is ascending and duplicate-free in the key image.
+    pub fn stream_distinct<R: StreamRecord>(
+        &self,
+        src: &mut dyn ChunkSource<R>,
+        sink: &mut dyn ChunkSink<R>,
+        launch: Option<&Launch>,
+    ) -> AkResult<GroupStats> {
+        let _span = obs::span(obs::SpanKind::Pass, "rec.distinct");
+        let flush_at = self.plan::<R>().io_chunk_elems;
+        let mut dedup =
+            DistinctSink { inner: sink, last_bits: None, out: Vec::new(), flush_at, kept: 0 };
+        let sort = self.external_sort(src, &mut dedup, launch)?;
+        Ok(GroupStats { groups: dedup.kept, sort })
+    }
+
+    /// Merge-join of two **already sorted** record streams (inner join):
+    /// for every key present on both sides, the cross product of the
+    /// left and right groups is emitted as `(key, (left, right))`
+    /// records, in ascending key order (right-major within a key: the
+    /// left group replays per right record). Sortedness is validated as
+    /// the streams drain — a decreasing key is a typed shape error, not
+    /// silent garbage. The left group of the current key is buffered in
+    /// memory (`O(max left group)`); the right side streams through.
+    ///
+    /// To join unsorted streams, run each through
+    /// [`StreamCtx::stream_sort_by_key`] first — the classic sort-merge
+    /// join, every phase out-of-core.
+    pub fn stream_merge_join<K: DeviceKey, A: Payload, B: Payload>(
+        &self,
+        left: &mut dyn ChunkSource<Record<K, A>>,
+        right: &mut dyn ChunkSource<Record<K, B>>,
+        sink: &mut dyn ChunkSink<Record<K, (A, B)>>,
+    ) -> AkResult<JoinStats> {
+        let _span = obs::span(obs::SpanKind::Pass, "rec.merge-join");
+        let chunk = self.plan::<Record<K, (A, B)>>().io_chunk_elems;
+        let mut l = JoinReader { src: left, buf: Vec::new(), pos: 0, chunk, prev: None, consumed: 0, side: "left" };
+        let mut r = JoinReader { src: right, buf: Vec::new(), pos: 0, chunk, prev: None, consumed: 0, side: "right" };
+        let mut out: Vec<Record<K, (A, B)>> = Vec::with_capacity(chunk);
+        let mut lgroup: Vec<Record<K, A>> = Vec::new();
+        let mut stats = JoinStats::default();
+        loop {
+            let (Some(lh), Some(rh)) = (l.peek()?, r.peek()?) else {
+                break;
+            };
+            let (lb, rb) = (lh.key_bits(), rh.key_bits());
+            if lb < rb {
+                l.advance()?;
+                continue;
+            }
+            if rb < lb {
+                r.advance()?;
+                continue;
+            }
+            // Equal key: buffer the whole left group, stream the right.
+            lgroup.clear();
+            while let Some(rec) = l.peek()? {
+                if rec.key_bits() != lb {
+                    break;
+                }
+                lgroup.push(rec);
+                l.advance()?;
+            }
+            while let Some(rec) = r.peek()? {
+                if rec.key_bits() != lb {
+                    break;
+                }
+                for lrec in &lgroup {
+                    out.push(Record::new(lrec.key, (lrec.val, rec.val)));
+                    stats.emitted += 1;
+                    if out.len() >= chunk {
+                        sink.push_chunk(&out)?;
+                        out.clear();
+                    }
+                }
+                r.advance()?;
+            }
+        }
+        // Drain both tails so the sortedness validation (and the
+        // consumed counts) cover the full streams.
+        while l.peek()?.is_some() {
+            l.advance()?;
+        }
+        while r.peek()?.is_some() {
+            r.advance()?;
+        }
+        if !out.is_empty() {
+            sink.push_chunk(&out)?;
+        }
+        sink.finish()?;
+        stats.left_elems = l.consumed;
+        stats.right_elems = r.consumed;
+        Ok(stats)
+    }
+}
+
+/// Source adapter attaching a running `u64` index to each key — the
+/// input layout of `stream_sortperm`.
+struct IndexSource<'a, K: DeviceKey> {
+    inner: &'a mut dyn ChunkSource<K>,
+    next: u64,
+    buf: Vec<K>,
+}
+
+impl<K: DeviceKey> ChunkSource<Record<K, u64>> for IndexSource<'_, K> {
+    fn len_hint(&self) -> Option<u64> {
+        self.inner.len_hint()
+    }
+
+    fn next_chunk(&mut self, buf: &mut Vec<Record<K, u64>>, max: usize) -> anyhow::Result<usize> {
+        buf.clear();
+        let n = self.inner.next_chunk(&mut self.buf, max)?;
+        buf.reserve(n);
+        for &k in &self.buf {
+            buf.push(Record::new(k, self.next));
+            self.next += 1;
+        }
+        Ok(n)
+    }
+}
+
+/// Sink adapter folding equal-key runs of sorted output through a
+/// `Reducible` operator, emitting one record per group. Correct because
+/// the upstream external sort emits each key's records contiguously.
+struct GroupFoldSink<'a, K: DeviceKey, V: Reducible + Payload> {
+    inner: &'a mut dyn ChunkSink<Record<K, V>>,
+    kind: ReduceKind,
+    /// The open group: its key and the fold so far.
+    cur: Option<Record<K, V>>,
+    out: Vec<Record<K, V>>,
+    flush_at: usize,
+    groups: u64,
+}
+
+impl<K: DeviceKey, V: Reducible + Payload> GroupFoldSink<'_, K, V> {
+    fn emit(&mut self, done: Record<K, V>) -> anyhow::Result<()> {
+        self.groups += 1;
+        self.out.push(done);
+        if self.out.len() >= self.flush_at {
+            self.inner.push_chunk(&self.out)?;
+            self.out.clear();
+        }
+        Ok(())
+    }
+}
+
+impl<K: DeviceKey, V: Reducible + Payload> ChunkSink<Record<K, V>> for GroupFoldSink<'_, K, V> {
+    fn push_chunk(&mut self, chunk: &[Record<K, V>]) -> anyhow::Result<()> {
+        for &rec in chunk {
+            let same = self.cur.is_some_and(|c| c.key_bits() == rec.key_bits());
+            if same {
+                if let Some(c) = self.cur.as_mut() {
+                    c.val = V::fold(self.kind, c.val, rec.val);
+                }
+            } else if let Some(done) = self.cur.replace(rec) {
+                self.emit(done)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        if let Some(done) = self.cur.take() {
+            self.emit(done)?;
+        }
+        if !self.out.is_empty() {
+            self.inner.push_chunk(&self.out)?;
+            self.out.clear();
+        }
+        self.inner.finish()
+    }
+}
+
+/// Sink adapter keeping the first record of each distinct key image of
+/// sorted output.
+struct DistinctSink<'a, R: StreamRecord> {
+    inner: &'a mut dyn ChunkSink<R>,
+    last_bits: Option<u128>,
+    out: Vec<R>,
+    flush_at: usize,
+    kept: u64,
+}
+
+impl<R: StreamRecord> ChunkSink<R> for DistinctSink<'_, R> {
+    fn push_chunk(&mut self, chunk: &[R]) -> anyhow::Result<()> {
+        for &rec in chunk {
+            let bits = rec.key_bits();
+            if self.last_bits != Some(bits) {
+                self.last_bits = Some(bits);
+                self.kept += 1;
+                self.out.push(rec);
+                if self.out.len() >= self.flush_at {
+                    self.inner.push_chunk(&self.out)?;
+                    self.out.clear();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        if !self.out.is_empty() {
+            self.inner.push_chunk(&self.out)?;
+            self.out.clear();
+        }
+        self.inner.finish()
+    }
+}
+
+/// Buffered, sortedness-validating reader over one join input.
+struct JoinReader<'a, R: StreamRecord> {
+    src: &'a mut dyn ChunkSource<R>,
+    buf: Vec<R>,
+    pos: usize,
+    chunk: usize,
+    /// Key image of the last record handed out (monotonicity check).
+    prev: Option<u128>,
+    consumed: u64,
+    side: &'static str,
+}
+
+impl<R: StreamRecord> JoinReader<'_, R> {
+    /// The next record without consuming it (`None` = exhausted).
+    fn peek(&mut self) -> AkResult<Option<R>> {
+        if self.pos >= self.buf.len() {
+            self.pos = 0;
+            // `next_chunk` clears the buffer; 0 leaves it empty.
+            self.src.next_chunk(&mut self.buf, self.chunk)?;
+        }
+        Ok(self.buf.get(self.pos).copied())
+    }
+
+    /// Consume the current head, enforcing ascending key order.
+    fn advance(&mut self) -> AkResult<()> {
+        let Some(rec) = self.peek()? else {
+            return Ok(());
+        };
+        let bits = rec.key_bits();
+        if let Some(p) = self.prev {
+            if bits < p {
+                return Err(AkError::shape(
+                    "stream_merge_join",
+                    format!(
+                        "{} input is not sorted: key image {bits:#x} after {p:#x} \
+                         at record {}",
+                        self.side, self.consumed
+                    ),
+                ));
+            }
+        }
+        self.prev = Some(bits);
+        self.consumed += 1;
+        self.pos += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::Session;
+    use crate::stream::{SliceSource, StreamBudget, VecSink};
+    use crate::util::Prng;
+
+    fn ctx() -> StreamCtx {
+        // Small chunks + fan-in 2 force multi-pass merges on tiny data.
+        Session::threaded(2)
+            .stream(StreamBudget::bytes(64))
+            .in_memory_spill()
+            .run_chunk_elems(1024)
+            .fan_in(2)
+    }
+
+    fn recs(seed: u64, n: usize, key_span: u64) -> Vec<Record<i64, u64>> {
+        let mut rng = Prng::new(seed);
+        (0..n as u64).map(|i| Record::new((rng.below(key_span)) as i64, i)).collect()
+    }
+
+    #[test]
+    fn sort_by_key_is_stable_and_bitwise() {
+        let data = recs(1, 10_000, 50);
+        let mut keys: Vec<i64> = data.iter().map(|r| r.key).collect();
+        let mut vals: Vec<u64> = data.iter().map(|r| r.val).collect();
+        Session::native().sort_by_key(&mut keys, &mut vals, None).unwrap();
+        let mut sink = VecSink::new();
+        let stats =
+            ctx().stream_sort_by_key(&mut SliceSource::new(&data), &mut sink, None).unwrap();
+        assert!(stats.merge_passes >= 2, "must exercise multi-pass merge");
+        assert_eq!(sink.out.len(), data.len());
+        for (i, r) in sink.out.iter().enumerate() {
+            assert_eq!((r.key, r.val), (keys[i], vals[i]), "at {i}");
+        }
+    }
+
+    #[test]
+    fn sortperm_matches_in_memory_perm() {
+        let keys: Vec<i64> = recs(2, 6000, 40).into_iter().map(|r| r.key).collect();
+        let perm = Session::native().sortperm(&keys, None).unwrap();
+        let mut sink = VecSink::new();
+        ctx().stream_sortperm(&mut SliceSource::new(&keys), &mut sink, None).unwrap();
+        assert_eq!(sink.out.len(), keys.len());
+        for (i, r) in sink.out.iter().enumerate() {
+            assert_eq!(r.val, perm[i] as u64, "perm at {i}");
+            assert_eq!(r.key, keys[perm[i] as usize]);
+        }
+    }
+
+    #[test]
+    fn group_reduce_matches_hashmap() {
+        use std::collections::HashMap;
+        let data = recs(3, 8000, 97);
+        let mut want: HashMap<i64, u64> = HashMap::new();
+        for r in &data {
+            *want.entry(r.key).or_insert(0) += r.val;
+        }
+        let mut sink = VecSink::new();
+        let data_v: Vec<Record<i64, i64>> =
+            data.iter().map(|r| Record::new(r.key, r.val as i64)).collect();
+        let stats = ctx()
+            .stream_group_reduce(&mut SliceSource::new(&data_v), ReduceKind::Add, &mut sink, None)
+            .unwrap();
+        assert_eq!(stats.groups as usize, want.len());
+        assert_eq!(sink.out.len(), want.len());
+        for w in sink.out.windows(2) {
+            assert!(w[0].key < w[1].key, "groups ascending and unique");
+        }
+        for r in &sink.out {
+            assert_eq!(r.val as u64, want[&r.key], "group {}", r.key);
+        }
+    }
+
+    #[test]
+    fn distinct_keeps_first_payload() {
+        let data = recs(4, 5000, 23);
+        let mut sink = VecSink::new();
+        let stats = ctx().stream_distinct(&mut SliceSource::new(&data), &mut sink, None).unwrap();
+        // Reference: first payload per key, keys ascending.
+        use std::collections::BTreeMap;
+        let mut want: BTreeMap<i64, u64> = BTreeMap::new();
+        for r in &data {
+            want.entry(r.key).or_insert(r.val);
+        }
+        assert_eq!(stats.groups as usize, want.len());
+        let got: Vec<(i64, u64)> = sink.out.iter().map(|r| (r.key, r.val)).collect();
+        let wantv: Vec<(i64, u64)> = want.into_iter().collect();
+        assert_eq!(got, wantv);
+    }
+
+    #[test]
+    fn merge_join_matches_nested_loop() {
+        let mut left = recs(5, 700, 60);
+        let mut right: Vec<Record<i64, u32>> = recs(6, 900, 60)
+            .into_iter()
+            .map(|r| Record::new(r.key, r.val as u32))
+            .collect();
+        left.sort_by_key(|r| (r.key, r.val));
+        right.sort_by_key(|r| (r.key, r.val));
+        // Reference nested loop in the emitted order (left-key groups,
+        // right-major within a key).
+        let mut want: Vec<(i64, u64, u32)> = Vec::new();
+        for r in &right {
+            for l in &left {
+                if l.key == r.key {
+                    want.push((l.key, l.val, r.val));
+                }
+            }
+        }
+        want.sort_by_key(|&(k, _, rv)| (k, rv));
+        let mut sink = VecSink::new();
+        let stats = ctx()
+            .stream_merge_join(
+                &mut SliceSource::new(&left),
+                &mut SliceSource::new(&right),
+                &mut sink,
+            )
+            .unwrap();
+        assert_eq!(stats.emitted as usize, want.len());
+        assert_eq!(stats.left_elems as usize, left.len());
+        assert_eq!(stats.right_elems as usize, right.len());
+        let got: Vec<(i64, u64, u32)> =
+            sink.out.iter().map(|r| (r.key, r.val.0, r.val.1)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn merge_join_rejects_unsorted_input() {
+        let left = vec![Record::new(5i64, 1u64), Record::new(3, 2)];
+        let right = vec![Record::new(3i64, 9u64)];
+        let mut sink = VecSink::new();
+        let err = ctx()
+            .stream_merge_join(
+                &mut SliceSource::new(&left),
+                &mut SliceSource::new(&right),
+                &mut sink,
+            )
+            .unwrap_err();
+        assert!(matches!(err, AkError::ShapeMismatch { .. }), "{err}");
+    }
+}

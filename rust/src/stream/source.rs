@@ -17,13 +17,13 @@ use std::path::Path;
 
 use anyhow::Context;
 
-use crate::dtype::SortKey;
+use crate::stream::record::StreamRecord;
 use crate::stream::codec;
 use crate::util::Prng;
 use crate::workload::{generate, Distribution, KeyGen};
 
 /// A producer of one dataset, pulled in bounded chunks.
-pub trait ChunkSource<K: SortKey> {
+pub trait ChunkSource<K: StreamRecord> {
     /// Total elements this source will yield, when known up front.
     fn len_hint(&self) -> Option<u64>;
 
@@ -33,7 +33,7 @@ pub trait ChunkSource<K: SortKey> {
 }
 
 /// A consumer of ordered output chunks.
-pub trait ChunkSink<K: SortKey> {
+pub trait ChunkSink<K: StreamRecord> {
     /// Absorb the next chunk (chunks arrive in output order).
     fn push_chunk(&mut self, chunk: &[K]) -> anyhow::Result<()>;
 
@@ -57,7 +57,7 @@ impl<'a, K> SliceSource<'a, K> {
     }
 }
 
-impl<K: SortKey> ChunkSource<K> for SliceSource<'_, K> {
+impl<K: StreamRecord> ChunkSource<K> for SliceSource<'_, K> {
     fn len_hint(&self) -> Option<u64> {
         Some(self.data.len() as u64)
     }
@@ -93,7 +93,7 @@ pub struct GenSource<K: KeyGen> {
     block_pos: usize,
 }
 
-impl<K: KeyGen> GenSource<K> {
+impl<K: KeyGen + StreamRecord> GenSource<K> {
     /// A deterministic stream of `total` keys from `dist` under `seed`.
     pub fn new(seed: u64, dist: Distribution, total: u64) -> Self {
         GenSource {
@@ -120,7 +120,7 @@ impl<K: KeyGen> GenSource<K> {
     }
 }
 
-impl<K: KeyGen> ChunkSource<K> for GenSource<K> {
+impl<K: KeyGen + StreamRecord> ChunkSource<K> for GenSource<K> {
     fn len_hint(&self) -> Option<u64> {
         Some(self.total)
     }
@@ -144,14 +144,14 @@ impl<K: KeyGen> ChunkSource<K> for GenSource<K> {
 }
 
 /// Source over a codec-encoded binary file (the [`FileSink`] format).
-pub struct FileSource<K: SortKey> {
+pub struct FileSource<K: StreamRecord> {
     file: File,
     remaining: usize,
     raw: Vec<u8>,
     _marker: std::marker::PhantomData<K>,
 }
 
-impl<K: SortKey> FileSource<K> {
+impl<K: StreamRecord> FileSource<K> {
     /// Open `path`; the element count comes from the file size (the
     /// codec is headerless fixed-width), ragged sizes error.
     pub fn open(path: &Path) -> anyhow::Result<Self> {
@@ -161,23 +161,23 @@ impl<K: SortKey> FileSource<K> {
             .with_context(|| format!("stat {}", path.display()))?
             .len() as usize;
         anyhow::ensure!(
-            bytes % K::KEY_BYTES == 0,
+            bytes % K::REC_BYTES == 0,
             "{}: {} bytes is not a whole number of {}-byte {} records",
             path.display(),
             bytes,
-            K::KEY_BYTES,
-            K::ELEM,
+            K::REC_BYTES,
+            K::layout_name(),
         );
         Ok(FileSource {
             file,
-            remaining: bytes / K::KEY_BYTES,
+            remaining: bytes / K::REC_BYTES,
             raw: Vec::new(),
             _marker: std::marker::PhantomData,
         })
     }
 }
 
-impl<K: SortKey> ChunkSource<K> for FileSource<K> {
+impl<K: StreamRecord> ChunkSource<K> for FileSource<K> {
     fn len_hint(&self) -> Option<u64> {
         // Remaining, which equals the total before the first read.
         Some(self.remaining as u64)
@@ -213,7 +213,7 @@ impl<K> VecSink<K> {
     }
 }
 
-impl<K: SortKey> ChunkSink<K> for VecSink<K> {
+impl<K: StreamRecord> ChunkSink<K> for VecSink<K> {
     fn push_chunk(&mut self, chunk: &[K]) -> anyhow::Result<()> {
         self.out.extend_from_slice(chunk);
         Ok(())
@@ -225,14 +225,14 @@ impl<K: SortKey> ChunkSink<K> for VecSink<K> {
 }
 
 /// Sink writing codec-encoded records to a file ([`FileSource`] format).
-pub struct FileSink<K: SortKey> {
+pub struct FileSink<K: StreamRecord> {
     w: BufWriter<File>,
     raw: Vec<u8>,
     elems: u64,
     _marker: std::marker::PhantomData<K>,
 }
 
-impl<K: SortKey> FileSink<K> {
+impl<K: StreamRecord> FileSink<K> {
     /// Create/truncate `path`.
     pub fn create(path: &Path) -> anyhow::Result<Self> {
         let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
@@ -250,7 +250,7 @@ impl<K: SortKey> FileSink<K> {
     }
 }
 
-impl<K: SortKey> ChunkSink<K> for FileSink<K> {
+impl<K: StreamRecord> ChunkSink<K> for FileSink<K> {
     fn push_chunk(&mut self, chunk: &[K]) -> anyhow::Result<()> {
         self.raw.clear();
         codec::encode_into(chunk, &mut self.raw);
@@ -269,7 +269,7 @@ mod tests {
     use super::*;
     use crate::dtype::bits_eq;
 
-    fn drain<K: SortKey, S: ChunkSource<K>>(mut src: S, chunk: usize) -> Vec<K> {
+    fn drain<K: StreamRecord, S: ChunkSource<K>>(mut src: S, chunk: usize) -> Vec<K> {
         let mut out = Vec::new();
         let mut buf = Vec::new();
         while src.next_chunk(&mut buf, chunk).unwrap() > 0 {

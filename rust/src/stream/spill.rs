@@ -32,7 +32,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use anyhow::Context;
 
 use crate::baselines::kmerge::RunCursor;
-use crate::dtype::SortKey;
+use crate::stream::record::StreamRecord;
 use crate::stream::codec;
 use crate::stream::manifest::{self, Manifest, RunMeta};
 use crate::stream::source::{ChunkSink, ChunkSource};
@@ -111,7 +111,7 @@ impl Drop for TempDirGuard {
 /// file on `Drop`, so intermediate runs consumed by a merge pass free
 /// their disk as soon as the pass retires them.
 #[derive(Debug)]
-pub enum SpillRun<K: SortKey> {
+pub enum SpillRun<K: StreamRecord> {
     /// In-memory run.
     Mem(Vec<K>),
     /// Codec-encoded file of `elems` records.
@@ -126,7 +126,7 @@ pub enum SpillRun<K: SortKey> {
     },
 }
 
-impl<K: SortKey> SpillRun<K> {
+impl<K: StreamRecord> SpillRun<K> {
     /// Elements in the run.
     pub fn elems(&self) -> usize {
         match self {
@@ -188,7 +188,7 @@ impl<K: SortKey> SpillRun<K> {
     }
 }
 
-impl<K: SortKey> Drop for SpillRun<K> {
+impl<K: StreamRecord> Drop for SpillRun<K> {
     fn drop(&mut self) {
         if let SpillRun::File { path, keep, .. } = self {
             if !*keep {
@@ -241,6 +241,13 @@ impl SpillStore {
     /// swept, and recording resumes where the manifest left off (no
     /// manifest at all — e.g. a crash before the first write — starts
     /// fresh).
+    ///
+    /// `dtype` is the record *layout* name
+    /// ([`StreamRecord::layout_name`]): bare dtype names for scalar
+    /// layouts (unchanged manifest identity for every pre-record
+    /// checkpoint) and `"<key>+p<bytes>"` for record layouts, so a
+    /// resume against a different layout is a typed identity error
+    /// here, never a mis-strided decode.
     pub fn checkpointed(
         dir: &Path,
         kind: &str,
@@ -262,7 +269,7 @@ impl SpillStore {
                 );
                 anyhow::ensure!(
                     m.dtype == dtype,
-                    "checkpoint {} was written for dtype {} (resume runs {dtype})",
+                    "checkpoint {} was written for record layout {} (resume runs {dtype})",
                     dir.display(),
                     m.dtype,
                 );
@@ -326,7 +333,7 @@ impl SpillStore {
     /// Record a finished (fsynced) run in the manifest under
     /// `(pass, seq)` and mark it durable — after this returns, the run
     /// survives a crash and `Drop`.
-    pub fn record_run<K: SortKey>(
+    pub fn record_run<K: StreamRecord>(
         &mut self,
         run: &mut SpillRun<K>,
         pass: u32,
@@ -345,7 +352,7 @@ impl SpillStore {
     /// Atomically replace `inputs` with the merged `out` run in the
     /// manifest (one rename covers retire + record), then mark `out`
     /// durable and drop the inputs, deleting their files.
-    pub fn commit_merge<K: SortKey>(
+    pub fn commit_merge<K: StreamRecord>(
         &mut self,
         out: &mut SpillRun<K>,
         inputs: Vec<SpillRun<K>>,
@@ -397,7 +404,7 @@ impl SpillStore {
 
     /// Reopen a manifested run from a previous process incarnation,
     /// validating the file is present and exactly the recorded size.
-    pub fn open_manifested_run<K: SortKey>(
+    pub fn open_manifested_run<K: StreamRecord>(
         &self,
         meta: &RunMeta,
     ) -> anyhow::Result<SpillRun<K>> {
@@ -414,7 +421,7 @@ impl SpillStore {
         Ok(SpillRun::File { path, elems: meta.elems as usize, keep: true })
     }
 
-    fn meta_of<K: SortKey>(
+    fn meta_of<K: StreamRecord>(
         &self,
         run: &SpillRun<K>,
         pass: u32,
@@ -457,7 +464,7 @@ impl SpillStore {
     }
 
     /// Start a new run; feed it sorted chunks, then [`RunWriter::finish`].
-    pub fn run_writer<K: SortKey>(&mut self) -> anyhow::Result<RunWriter<'_, K>> {
+    pub fn run_writer<K: StreamRecord>(&mut self) -> anyhow::Result<RunWriter<'_, K>> {
         let sink = match self.medium {
             SpillMedium::Memory => RunWriterSink::Mem(Vec::new()),
             SpillMedium::Disk => {
@@ -473,7 +480,7 @@ impl SpillStore {
     }
 
     /// Write one fully-materialised sorted run (run-generation path).
-    pub fn write_run<K: SortKey>(&mut self, sorted: &[K]) -> anyhow::Result<SpillRun<K>> {
+    pub fn write_run<K: StreamRecord>(&mut self, sorted: &[K]) -> anyhow::Result<SpillRun<K>> {
         let _span = crate::obs::span1(
             crate::obs::SpanKind::SpillWrite,
             "spill.write-run",
@@ -489,7 +496,7 @@ impl SpillStore {
     /// per source rank while messages arrive in credit-paced order
     /// (DESIGN.md §16). The run id/file is reserved here; byte and run
     /// accounting land at [`DetachedRunWriter::finish`].
-    pub fn detached_run_writer<K: SortKey>(&mut self) -> anyhow::Result<DetachedRunWriter<K>> {
+    pub fn detached_run_writer<K: StreamRecord>(&mut self) -> anyhow::Result<DetachedRunWriter<K>> {
         let sink = match self.medium {
             SpillMedium::Memory => RunWriterSink::Mem(Vec::new()),
             SpillMedium::Disk => {
@@ -505,19 +512,19 @@ impl SpillStore {
     }
 }
 
-enum RunWriterSink<K: SortKey> {
+enum RunWriterSink<K: StreamRecord> {
     Mem(Vec<K>),
     File { w: BufWriter<File>, path: PathBuf, elems: usize, raw: Vec<u8> },
 }
 
 /// Incremental writer for one spilled run (merge output streams through
 /// here chunk by chunk, never materialising the full run in memory).
-pub struct RunWriter<'s, K: SortKey> {
+pub struct RunWriter<'s, K: StreamRecord> {
     store: &'s mut SpillStore,
     sink: RunWriterSink<K>,
 }
 
-impl<K: SortKey> RunWriter<'_, K> {
+impl<K: StreamRecord> RunWriter<'_, K> {
     /// Append one sorted chunk.
     pub fn push_chunk(&mut self, chunk: &[K]) -> anyhow::Result<()> {
         match &mut self.sink {
@@ -558,14 +565,14 @@ impl<K: SortKey> RunWriter<'_, K> {
 /// [`SpillStore::detached_run_writer`]): the streamed exchange keeps
 /// one open per source rank simultaneously. Must be finished against
 /// the store that created it so spill accounting stays consistent.
-pub struct DetachedRunWriter<K: SortKey> {
+pub struct DetachedRunWriter<K: StreamRecord> {
     sink: RunWriterSink<K>,
     /// Bytes written through this writer (folded into the store's
     /// `bytes_spilled` at finish).
     spilled: u64,
 }
 
-impl<K: SortKey> DetachedRunWriter<K> {
+impl<K: StreamRecord> DetachedRunWriter<K> {
     /// Append one sorted chunk.
     pub fn push_chunk(&mut self, chunk: &[K]) -> anyhow::Result<()> {
         match &mut self.sink {
@@ -615,12 +622,12 @@ impl<K: SortKey> DetachedRunWriter<K> {
 /// cursors obey. The streamed SIHSort rank reads its sorted shard back
 /// this way — splitter sampling and histogram rank measurement consume
 /// the run chunk by chunk instead of materialising it (DESIGN.md §14).
-pub struct SpillRunSource<'r, K: SortKey> {
+pub struct SpillRunSource<'r, K: StreamRecord> {
     cur: SpillCursor<'r, K>,
     remaining: u64,
 }
 
-impl<'r, K: SortKey> SpillRunSource<'r, K> {
+impl<'r, K: StreamRecord> SpillRunSource<'r, K> {
     /// Open a chunked reader over `run`; `buf_elems` bounds the refill
     /// buffer for file-backed runs.
     pub fn new(run: &'r SpillRun<K>, buf_elems: usize) -> anyhow::Result<Self> {
@@ -628,7 +635,7 @@ impl<'r, K: SortKey> SpillRunSource<'r, K> {
     }
 }
 
-impl<K: SortKey> ChunkSource<K> for SpillRunSource<'_, K> {
+impl<K: StreamRecord> ChunkSource<K> for SpillRunSource<'_, K> {
     fn len_hint(&self) -> Option<u64> {
         // Remaining, which equals the total before the first read.
         Some(self.remaining)
@@ -655,12 +662,12 @@ impl<K: SortKey> ChunkSource<K> for SpillRunSource<'_, K> {
 /// its output as a run later pipeline stages (the streamed exchange,
 /// the splitter sampler) re-read under the budget. The pipeline's
 /// `finish` call seals the run; take it with [`RunSink::into_run`].
-pub struct RunSink<'s, K: SortKey> {
+pub struct RunSink<'s, K: StreamRecord> {
     writer: Option<RunWriter<'s, K>>,
     run: Option<SpillRun<K>>,
 }
 
-impl<'s, K: SortKey> RunSink<'s, K> {
+impl<'s, K: StreamRecord> RunSink<'s, K> {
     /// Start a new run in `store`.
     pub fn new(store: &'s mut SpillStore) -> anyhow::Result<Self> {
         Ok(RunSink { writer: Some(store.run_writer()?), run: None })
@@ -672,7 +679,7 @@ impl<'s, K: SortKey> RunSink<'s, K> {
     }
 }
 
-impl<K: SortKey> ChunkSink<K> for RunSink<'_, K> {
+impl<K: StreamRecord> ChunkSink<K> for RunSink<'_, K> {
     fn push_chunk(&mut self, chunk: &[K]) -> anyhow::Result<()> {
         self.writer.as_mut().context("RunSink already finished")?.push_chunk(chunk)
     }
@@ -687,7 +694,7 @@ impl<K: SortKey> ChunkSink<K> for RunSink<'_, K> {
 /// Bounded-memory [`RunCursor`] over a [`SpillRun`]: in-memory runs
 /// borrow their vector; file runs hold one decoded buffer of at most
 /// `buf_elems` keys and refill from disk as the merge drains them.
-pub struct SpillCursor<'r, K: SortKey> {
+pub struct SpillCursor<'r, K: StreamRecord> {
     mem: Option<&'r [K]>,
     /// Position in `mem` (memory runs) or in `buf` (file runs).
     pos: usize,
@@ -699,7 +706,7 @@ pub struct SpillCursor<'r, K: SortKey> {
     buf_elems: usize,
 }
 
-impl<K: SortKey> SpillCursor<'_, K> {
+impl<K: StreamRecord> SpillCursor<'_, K> {
     fn refill(&mut self) -> anyhow::Result<()> {
         let Some(file) = self.file.as_mut() else {
             return Ok(());
@@ -719,7 +726,7 @@ impl<K: SortKey> SpillCursor<'_, K> {
     }
 }
 
-impl<K: SortKey> RunCursor<K> for SpillCursor<'_, K> {
+impl<K: StreamRecord> RunCursor<K> for SpillCursor<'_, K> {
     fn head(&self) -> Option<K> {
         match self.mem {
             Some(m) => m.get(self.pos).copied(),
@@ -739,7 +746,7 @@ impl<K: SortKey> RunCursor<K> for SpillCursor<'_, K> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dtype::bits_eq;
+    use crate::dtype::{bits_eq, SortKey};
     use crate::util::Prng;
     use crate::workload::{generate, Distribution};
 
@@ -749,7 +756,7 @@ mod tests {
         xs
     }
 
-    fn drain<K: SortKey>(run: &SpillRun<K>, buf_elems: usize) -> Vec<K> {
+    fn drain<K: StreamRecord>(run: &SpillRun<K>, buf_elems: usize) -> Vec<K> {
         let mut c = run.cursor(buf_elems).unwrap();
         let mut out = Vec::new();
         while let Some(k) = c.head() {

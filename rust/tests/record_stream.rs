@@ -1,0 +1,393 @@
+//! Record-stream equivalence suite (DESIGN.md §19).
+//!
+//! The contract under test: every record workload — external
+//! sort-by-key, sortperm, group-by reduce, merge-join, distinct —
+//! produces exactly what the in-memory reference computes, across
+//! dtypes × payload widths × spill media × multi-pass merge budgets,
+//! including NaN / -0.0 / duplicate keys; and the record layout is part
+//! of checkpoint identity, so a resume against a different layout is a
+//! typed error while a genuine mid-job interruption resumes bitwise.
+//!
+//! "Exactly" means key image AND payload bits: the external record sort
+//! is stable, so equal keys keep input order and the payloads pin the
+//! full permutation — any instability or payload corruption fails here.
+
+use std::collections::HashMap;
+
+use accelkern::algorithms::ReduceKind;
+use accelkern::backend::DeviceKey;
+use accelkern::session::Session;
+use accelkern::stream::{
+    Checkpoint, ChunkSink, Payload, Record, SliceSource, StreamBudget, StreamCtx, StreamRecord,
+    TempDirGuard, VecSink,
+};
+use accelkern::util::Prng;
+use accelkern::workload::{generate, Distribution, KeyGen};
+
+/// Elements per suite dataset: ~10 runs of 1024 at fan-in 2 forces at
+/// least two intermediate merge passes plus the final merge.
+const N: usize = 10_240;
+
+fn ctx(disk: bool) -> StreamCtx {
+    let c = Session::threaded(2)
+        .stream(StreamBudget::bytes(64))
+        .run_chunk_elems(1024)
+        .fan_in(2);
+    if disk {
+        c // Disk is the default medium.
+    } else {
+        c.in_memory_spill()
+    }
+}
+
+/// Records with `generate`d keys and position payloads — the payload
+/// pins each record's input slot, so the verifier sees any reordering.
+fn indexed<K: KeyGen + DeviceKey, P: Payload>(seed: u64, n: usize) -> Vec<Record<K, P>> {
+    let keys: Vec<K> = generate(&mut Prng::new(seed), Distribution::DupHeavy, n);
+    keys.into_iter()
+        .enumerate()
+        .map(|(i, k)| Record::new(k, P::from_raw(i as u128)))
+        .collect()
+}
+
+fn assert_records_eq<R: StreamRecord>(got: &[R], want: &[R], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.key_bits() == w.key_bits() && g.payload_raw() == w.payload_raw(),
+            "{what}: diverges at {i}: {g:?} vs {w:?}"
+        );
+    }
+}
+
+/// The in-memory stable reference for one record dataset.
+fn sorted_ref<K: DeviceKey, P: Payload>(data: &[Record<K, P>]) -> Vec<Record<K, P>> {
+    let mut want = data.to_vec();
+    Record::<K, P>::sort_chunk(&Session::threaded(2), &mut want, None).unwrap();
+    want
+}
+
+fn check_sort_by_key<K: KeyGen + DeviceKey, P: Payload>(seed: u64, disk: bool) {
+    let data: Vec<Record<K, P>> = indexed(seed, N);
+    let want = sorted_ref(&data);
+    let mut sink = VecSink::new();
+    let stats =
+        ctx(disk).stream_sort_by_key(&mut SliceSource::new(&data), &mut sink, None).unwrap();
+    assert_eq!(stats.elems, N as u64);
+    assert!(
+        stats.merge_passes >= 2,
+        "suite must exercise multi-pass merges ({} passes)",
+        stats.merge_passes
+    );
+    let what = format!("sort-by-key<{}> disk={disk}", Record::<K, P>::layout_name());
+    assert_records_eq(&sink.out, &want, &what);
+}
+
+#[test]
+fn sort_by_key_bitwise_across_dtypes_payloads_and_media() {
+    for disk in [false, true] {
+        check_sort_by_key::<i32, u32>(11, disk);
+        check_sort_by_key::<i32, u128>(12, disk);
+        check_sort_by_key::<i64, u64>(13, disk);
+        check_sort_by_key::<i128, u64>(14, disk);
+        check_sort_by_key::<f32, u64>(15, disk);
+        check_sort_by_key::<f64, u32>(16, disk);
+    }
+}
+
+#[test]
+fn sort_by_key_preserves_nan_and_negative_zero_payloads() {
+    // Hand-placed specials with distinct payloads: the stable sort must
+    // keep each special's payload attached and its input order among
+    // bit-identical duplicates.
+    let mut data: Vec<Record<f64, u64>> = indexed(21, N);
+    for (i, bits) in [f64::NAN, -0.0, 0.0, f64::NAN, -0.0, f64::INFINITY, f64::NEG_INFINITY]
+        .iter()
+        .enumerate()
+    {
+        data[i * 997] = Record::new(*bits, 0xDEAD_0000 + i as u64);
+    }
+    let want = sorted_ref(&data);
+    for disk in [false, true] {
+        let mut sink = VecSink::new();
+        ctx(disk).stream_sort_by_key(&mut SliceSource::new(&data), &mut sink, None).unwrap();
+        assert_records_eq(&sink.out, &want, &format!("f64 specials disk={disk}"));
+    }
+    // The two NaNs keep input order (payload 0xDEAD_0000 before
+    // 0xDEAD_0003) at the very top of the total order.
+    let top2: Vec<u64> = want[want.len() - 2..].iter().map(|r| r.val).collect();
+    assert_eq!(top2, vec![0xDEAD_0000, 0xDEAD_0003]);
+}
+
+#[test]
+fn sortperm_matches_the_in_memory_permutation() {
+    let mut keys: Vec<f64> = generate(&mut Prng::new(31), Distribution::DupHeavy, N);
+    keys[17] = f64::NAN;
+    keys[18] = -0.0;
+    keys[19] = 0.0;
+    let perm = Session::threaded(2).sortperm(&keys, None).unwrap();
+    let want: Vec<Record<f64, u64>> =
+        perm.iter().map(|&i| Record::new(keys[i as usize], i as u64)).collect();
+    for disk in [false, true] {
+        let mut sink = VecSink::new();
+        let stats =
+            ctx(disk).stream_sortperm(&mut SliceSource::new(&keys), &mut sink, None).unwrap();
+        assert!(stats.merge_passes >= 2);
+        assert_records_eq(&sink.out, &want, &format!("sortperm disk={disk}"));
+    }
+}
+
+#[test]
+fn group_reduce_matches_a_hashmap_fold() {
+    // i32 keys, i64 payloads; Add is wrapping, so fold order can't
+    // change the answer and the HashMap reference is exact.
+    let data: Vec<Record<i32, i64>> = indexed::<i32, u64>(41, N)
+        .into_iter()
+        .map(|r| Record::new(r.key, (r.val as i64).wrapping_mul(31)))
+        .collect();
+    let mut want_map: HashMap<i32, i64> = HashMap::new();
+    for r in &data {
+        let e = want_map.entry(r.key).or_insert(0);
+        *e = e.wrapping_add(r.val);
+    }
+    for (disk, kind) in [(false, ReduceKind::Add), (true, ReduceKind::Add), (true, ReduceKind::Max)]
+    {
+        let mut sink = VecSink::new();
+        let stats = ctx(disk)
+            .stream_group_reduce(&mut SliceSource::new(&data), kind, &mut sink, None)
+            .unwrap();
+        assert_eq!(stats.groups as usize, want_map.len(), "disk={disk}");
+        assert_eq!(sink.out.len(), want_map.len());
+        for w in sink.out.windows(2) {
+            assert!(w[0].key < w[1].key, "groups must be ascending and unique");
+        }
+        match kind {
+            ReduceKind::Add => {
+                for r in &sink.out {
+                    assert_eq!(r.val, want_map[&r.key], "group {}", r.key);
+                }
+            }
+            _ => {
+                for r in &sink.out {
+                    let m = data
+                        .iter()
+                        .filter(|d| d.key == r.key)
+                        .map(|d| d.val)
+                        .max()
+                        .unwrap();
+                    assert_eq!(r.val, m, "max of group {}", r.key);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn group_identity_is_the_total_order_bit_image() {
+    // -0.0 and 0.0 are distinct groups; each NaN payload pattern too.
+    let data = vec![
+        Record::new(-0.0f64, 1i64),
+        Record::new(0.0, 2),
+        Record::new(-0.0, 4),
+        Record::new(f64::NAN, 8),
+        Record::new(f64::NAN, 16),
+        Record::new(1.5, 32),
+    ];
+    let mut sink = VecSink::new();
+    let stats = ctx(false)
+        .stream_group_reduce(&mut SliceSource::new(&data), ReduceKind::Add, &mut sink, None)
+        .unwrap();
+    // Groups: -0.0 {1,4}, 0.0 {2}, 1.5 {32}, NaN {8,16} (one NaN bit
+    // pattern) — ascending in the total order.
+    assert_eq!(stats.groups, 4);
+    let vals: Vec<i64> = sink.out.iter().map(|r| r.val).collect();
+    assert_eq!(vals, vec![5, 2, 32, 24]);
+    assert!(sink.out[0].key.is_sign_negative() && sink.out[0].key == 0.0);
+}
+
+#[test]
+fn merge_join_matches_a_nested_loop() {
+    let n = 600;
+    let mut left: Vec<Record<i32, u64>> = indexed(51, n);
+    let mut right: Vec<Record<i32, u32>> = indexed::<i32, u64>(52, n)
+        .into_iter()
+        .map(|r| Record::new(r.key, r.val as u32))
+        .collect();
+    left.sort_by_key(|r| (r.key, r.val));
+    right.sort_by_key(|r| (r.key, r.val));
+    // Emitted order: keys ascending, right-major within a key, left
+    // group replayed in order per right record.
+    let mut want: Vec<Record<i32, (u64, u32)>> = Vec::new();
+    for r in &right {
+        for l in &left {
+            if l.key == r.key {
+                want.push(Record::new(l.key, (l.val, r.val)));
+            }
+        }
+    }
+    want.sort_by(|a, b| (a.key, a.val.1).cmp(&(b.key, b.val.1)));
+    for disk in [false, true] {
+        let mut sink = VecSink::new();
+        let stats = ctx(disk)
+            .stream_merge_join(
+                &mut SliceSource::new(&left),
+                &mut SliceSource::new(&right),
+                &mut sink,
+            )
+            .unwrap();
+        assert_eq!(stats.emitted as usize, want.len());
+        assert_eq!(stats.left_elems as usize, left.len());
+        assert_eq!(stats.right_elems as usize, right.len());
+        assert_records_eq(&sink.out, &want, &format!("merge-join disk={disk}"));
+    }
+}
+
+#[test]
+fn distinct_keeps_the_first_record_per_key() {
+    let mut data: Vec<Record<f64, u64>> = indexed(61, N);
+    data[100] = Record::new(f64::NAN, 7);
+    data[200] = Record::new(f64::NAN, 9); // same bit pattern, later slot
+    data[300] = Record::new(-0.0, 11);
+    data[400] = Record::new(0.0, 13);
+    // Reference: first payload per key image, ascending by image.
+    let mut first: Vec<(u128, Record<f64, u64>)> = Vec::new();
+    let mut seen: HashMap<u128, ()> = HashMap::new();
+    for r in &data {
+        if seen.insert(r.key_bits(), ()).is_none() {
+            first.push((r.key_bits(), *r));
+        }
+    }
+    first.sort_by_key(|&(bits, _)| bits);
+    let want: Vec<Record<f64, u64>> = first.into_iter().map(|(_, r)| r).collect();
+    for disk in [false, true] {
+        let mut sink = VecSink::new();
+        let stats =
+            ctx(disk).stream_distinct(&mut SliceSource::new(&data), &mut sink, None).unwrap();
+        assert_eq!(stats.groups as usize, want.len());
+        assert_records_eq(&sink.out, &want, &format!("distinct disk={disk}"));
+    }
+    // The surviving NaN carries the FIRST payload (7, not 9), and -0.0
+    // and 0.0 both survive as distinct keys.
+    let nan = ctx(false);
+    let mut sink = VecSink::new();
+    nan.stream_distinct(&mut SliceSource::new(&data), &mut sink, None).unwrap();
+    let nan_rec = sink.out.iter().find(|r| r.key.is_nan()).unwrap();
+    assert_eq!(nan_rec.val, 7);
+    assert!(sink.out.iter().any(|r| r.key == 0.0 && r.key.is_sign_negative()));
+    assert!(sink.out.iter().any(|r| r.key == 0.0 && !r.key.is_sign_negative()));
+}
+
+// ---- checkpoint identity and crash/resume --------------------------------
+
+#[test]
+fn resume_rejects_a_mismatched_record_layout() {
+    let parent = TempDirGuard::new(None).unwrap();
+    let dir = parent.path().join("ckpt");
+    let keys: Vec<i64> = generate(&mut Prng::new(71), Distribution::Uniform, N);
+    let mut sink = VecSink::new();
+    ctx(true)
+        .external_sort_ckpt(
+            &mut SliceSource::new(&keys),
+            &mut sink,
+            None,
+            &Checkpoint::new(&dir, "layout-check"),
+        )
+        .unwrap();
+    // The manifest records the scalar layout "i64"; resuming the same
+    // job with an (i64, u64) record layout must be a typed identity
+    // error, not silent garbage.
+    let recs: Vec<Record<i64, u64>> = indexed(71, N);
+    let mut rsink = VecSink::new();
+    let err = ctx(true)
+        .external_sort_ckpt(
+            &mut SliceSource::new(&recs),
+            &mut rsink,
+            None,
+            &Checkpoint::new(&dir, "layout-check").resume(),
+        )
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("record layout"), "unexpected error: {msg}");
+    assert!(msg.contains("i64+p8"), "the resume layout must be named: {msg}");
+
+    // And the mirror image: a record manifest rejects a scalar resume.
+    let dir2 = parent.path().join("ckpt2");
+    let mut sink = VecSink::new();
+    ctx(true)
+        .external_sort_ckpt(
+            &mut SliceSource::new(&recs),
+            &mut sink,
+            None,
+            &Checkpoint::new(&dir2, "layout-check"),
+        )
+        .unwrap();
+    let mut ssink = VecSink::new();
+    let err = ctx(true)
+        .external_sort_ckpt(
+            &mut SliceSource::new(&keys),
+            &mut ssink,
+            None,
+            &Checkpoint::new(&dir2, "layout-check").resume(),
+        )
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("i64+p8"), "the manifest layout must be named: {msg}");
+}
+
+/// Sink that fails after absorbing `fail_after` chunks — simulates a
+/// consumer dying mid-final-merge without arming any fail point.
+struct FailingSink<R> {
+    out: Vec<R>,
+    fail_after: usize,
+    pushes: usize,
+}
+
+impl<R: StreamRecord> ChunkSink<R> for FailingSink<R> {
+    fn push_chunk(&mut self, chunk: &[R]) -> anyhow::Result<()> {
+        if self.pushes >= self.fail_after {
+            anyhow::bail!("injected sink failure after {} chunks", self.pushes);
+        }
+        self.pushes += 1;
+        self.out.extend_from_slice(chunk);
+        Ok(())
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn interrupted_record_sort_resumes_bitwise_through_the_manifest() {
+    let parent = TempDirGuard::new(None).unwrap();
+    let dir = parent.path().join("ckpt");
+    let data: Vec<Record<i32, u64>> = indexed(81, N);
+    let want = sorted_ref(&data);
+    // First incarnation dies while the final merge is draining into the
+    // sink (well after run generation, so the manifest holds runs).
+    let mut dying = FailingSink { out: Vec::new(), fail_after: 2, pushes: 0 };
+    let err = ctx(true)
+        .external_sort_ckpt(
+            &mut SliceSource::new(&data),
+            &mut dying,
+            None,
+            &Checkpoint::new(&dir, "record-resume"),
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("injected sink failure"), "{err:#}");
+    // Resume with a fresh sink: the merge redoes from manifested record
+    // runs — no source re-read of already-spilled elements — and the
+    // output is bitwise the stable in-memory sort.
+    let mut sink = VecSink::new();
+    let stats = ctx(true)
+        .external_sort_ckpt(
+            &mut SliceSource::new(&data),
+            &mut sink,
+            None,
+            &Checkpoint::new(&dir, "record-resume").resume(),
+        )
+        .unwrap();
+    assert!(stats.resumed_runs > 0, "resume must reopen manifested runs");
+    assert_eq!(stats.elems, N as u64);
+    assert_records_eq(&sink.out, &want, "resumed record sort");
+}
